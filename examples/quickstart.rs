@@ -1,0 +1,69 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Generates a small Gaussian mixture, acquires it as a 1-bit quantized
+//! sketch (QCKM), decodes the centroids with CL-OMPR, and compares against
+//! k-means — the whole paper in ~40 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use qckm::prelude::*;
+
+fn main() {
+    let mut rng = Rng::new(0);
+
+    // 1. A dataset: N = 10000 samples, K = 3 separated Gaussians in 2-D.
+    let k = 3;
+    let truth = Mat::from_vec(k, 2, vec![-2.0, 0.0, 2.0, 0.0, 0.0, 2.5]);
+    let mut x = Mat::zeros(0, 2);
+    for i in 0..10_000 {
+        let c = i % k;
+        x.push_row(&[
+            truth.get(c, 0) + 0.35 * rng.gaussian(),
+            truth.get(c, 1) + 0.35 * rng.gaussian(),
+        ]);
+    }
+
+    // 2. Draw the sketch randomness: M frequencies + dither, bandwidth from
+    //    the data heuristic.
+    let m = 150;
+    let sigma = SigmaHeuristic::default().resolve(&x, &mut rng);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, 2, m, sigma, &mut rng);
+
+    // 3. QCKM acquisition: every example becomes 2M = 300 *bits*.
+    let op = SketchOperator::quantized(freqs);
+    let z = op.sketch_dataset(&x);
+    println!(
+        "sketched 10000 examples into {} real slots ({} bits/example on the wire)",
+        z.len(),
+        op.sketch_len()
+    );
+
+    // 4. Decode K centroids from the sketch alone (no data access).
+    let (lo, hi) = qckm::linalg::bounding_box(&x);
+    let sol = ClOmpr::new(&op, k).with_bounds(lo, hi).run(&z, &mut rng);
+    println!("decoded centroids (weight):");
+    for i in 0..k {
+        println!(
+            "  ({:+.2}, {:+.2})  ({:.2})",
+            sol.centroids.get(i, 0),
+            sol.centroids.get(i, 1),
+            sol.weights[i]
+        );
+    }
+
+    // 5. Compare with k-means on the full data.
+    let km = kmeans(&x, k, &KMeansParams::default(), &mut rng);
+    let qckm_sse = sse(&x, &sol.centroids);
+    println!(
+        "SSE: qckm = {:.1}, k-means = {:.1}  (success ≤ 1.2×: {})",
+        qckm_sse,
+        km.sse,
+        qckm::metrics::is_success(qckm_sse, km.sse)
+    );
+    assert!(
+        qckm::metrics::is_success(qckm_sse, km.sse),
+        "quickstart should succeed on this easy mixture"
+    );
+}

@@ -1,0 +1,80 @@
+//! The generalized-signature playground (Sec. 3 of the paper).
+//!
+//! Shows Prop. 1 in action: *any* admissible periodic signature — cosine,
+//! 1-bit universal quantizer, triangle wave, multi-bit staircases — can
+//! encode the sketch, as long as the argument is dithered and decoding uses
+//! the first harmonic. For each signature we print its Fourier structure,
+//! its Prop.-1 constants, and the centroid error decoding the *same*
+//! 2-Dirac mixture from its sketch.
+//!
+//! ```bash
+//! cargo run --release --example signature_zoo
+//! ```
+
+use qckm::frequency::{DrawnFrequencies, FrequencyLaw};
+use qckm::prelude::*;
+use qckm::signature::MultiBitQuantizer;
+use std::sync::Arc;
+
+fn main() {
+    let signatures: Vec<Arc<dyn Signature>> = vec![
+        Arc::new(Cosine),
+        Arc::new(UniversalQuantizer),
+        Arc::new(Triangle),
+        Arc::new(MultiBitQuantizer::new(2)),
+        Arc::new(MultiBitQuantizer::new(4)),
+    ];
+
+    // A fixed 2-Dirac mixture to recover in 3-D.
+    let truth = Mat::from_vec(2, 3, vec![1.0, -0.5, 0.8, -0.9, 0.7, -0.4]);
+    let weights = [0.55, 0.45];
+
+    println!(
+        "{:<18} {:>8} {:>8} {:>10} {:>12}",
+        "signature", "2|F1|", "C_f", "tail/c_P", "centroid err"
+    );
+    for sig in signatures {
+        let mut rng = Rng::new(99);
+        let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, 3, 200, 1.0, &mut rng);
+        let op = SketchOperator::new(freqs, sig.clone());
+
+        // Encode P with the full signature (exact for a Dirac mixture)…
+        let mut z = vec![0.0; op.sketch_len()];
+        for (k, &a) in weights.iter().enumerate() {
+            let e = op.encode_point(truth.row(k));
+            qckm::linalg::axpy(a, &e, &mut z);
+        }
+        // …decode with first-harmonic atoms.
+        let sol = ClOmpr::new(&op, 2)
+            .with_bounds(vec![-2.0; 3], vec![2.0; 3])
+            .run(&z, &mut rng);
+
+        // Greedy match.
+        let mut err: f64 = 0.0;
+        let mut used = [false; 2];
+        for t in 0..2 {
+            let (mut best, mut bj) = (f64::INFINITY, 0);
+            for j in 0..2 {
+                if !used[j] {
+                    let d = qckm::linalg::sq_dist(sol.centroids.row(j), truth.row(t));
+                    if d < best {
+                        best = d;
+                        bj = j;
+                    }
+                }
+            }
+            used[bj] = true;
+            err = err.max(best.sqrt());
+        }
+
+        println!(
+            "{:<18} {:>8.4} {:>8.4} {:>10.4} {:>12.4}",
+            sig.name(),
+            sig.first_harmonic_amplitude(),
+            sig.prop1_constant(),
+            sig.tail_energy_ratio(),
+            err
+        );
+    }
+    println!("\n(the dithering + first-harmonic decode makes every row work — Prop. 1)");
+}

@@ -1,0 +1,68 @@
+//! The Fig. 3 workload as a runnable example: cluster the 10-class,
+//! 10-dimensional spectral-embedding-like dataset (the MNIST-SC stand-in,
+//! DESIGN.md §Substitutions) with k-means, CKM and QCKM, and print the
+//! SSE/N + ARI comparison — one trial of the full `experiment fig3` grid.
+//!
+//! ```bash
+//! cargo run --release --example spectral_mnist            # N = 70000
+//! cargo run --release --example spectral_mnist -- --quick # N = 8000
+//! ```
+
+use qckm::config::Method;
+use qckm::experiments::{run_method_once, MethodRun};
+use qckm::frequency::{FrequencyLaw, SigmaHeuristic};
+use qckm::metrics::{adjusted_rand_index, assign_labels};
+use qckm::prelude::*;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n_samples = if quick { 8_000 } else { 70_000 };
+    let (dim, k, m) = (10, 10, 1000);
+    let mut rng = Rng::new(1);
+
+    eprintln!("generating spectral-embedding-like data: N={n_samples}, n={dim}, K={k}");
+    let data = qckm::data::spectral_embedding_like(n_samples, dim, k, &mut rng);
+    let sigma = SigmaHeuristic::default().resolve(&data.points, &mut rng);
+
+    // k-means (5 replicates, selected by SSE).
+    let km = kmeans(
+        &data.points,
+        k,
+        &KMeansParams {
+            replicates: 5,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let km_ari = adjusted_rand_index(&km.labels, &data.labels);
+
+    println!(
+        "{:<10} {:>10} {:>8}   (m = {m} frequencies, sigma = {sigma:.3})",
+        "method", "SSE/N", "ARI"
+    );
+    println!(
+        "{:<10} {:>10.4} {:>8.3}",
+        "k-means",
+        km.sse / n_samples as f64,
+        km_ari
+    );
+
+    for method in [Method::Ckm, Method::Qckm] {
+        let run = MethodRun {
+            method,
+            m,
+            replicates: if quick { 1 } else { 5 },
+            sigma,
+            law: FrequencyLaw::AdaptedRadius,
+            params: Default::default(),
+        };
+        let out = run_method_once(&run, &data.points, Some(&data.labels), k, &mut rng);
+        println!(
+            "{:<10} {:>10.4} {:>8.3}",
+            method.name(),
+            out.sse / n_samples as f64,
+            out.ari
+        );
+    }
+    let _ = assign_labels(&data.points, &km.centroids); // doc: labels API
+}

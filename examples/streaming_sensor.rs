@@ -1,0 +1,106 @@
+//! The paper's Fig. 1 deployment, end to end: a cloud of simulated 1-bit
+//! sensors streams bit-packed sketch contributions through the Layer-3
+//! coordinator; the leader pools them and decodes the cluster centroids —
+//! the full dataset never exists in one place, and only `2M` bits per
+//! example ever cross the wire.
+//!
+//! Also runs the same acquisition with the full-precision (CKM) wire format
+//! to show the 64× acquisition-bandwidth gap.
+//!
+//! ```bash
+//! cargo run --release --example streaming_sensor
+//! ```
+
+use qckm::config::Method;
+use qckm::coordinator::{run_pipeline, PipelineConfig, SampleSource, WireFormat};
+use qckm::frequency::{DrawnFrequencies, FrequencyLaw, SigmaHeuristic};
+use qckm::prelude::*;
+use std::sync::Arc;
+
+fn main() {
+    let dim = 6;
+    let k = 3;
+    let total = 200_000;
+    let m = 300;
+    let mut rng = Rng::new(42);
+
+    // The "physical field" each sensor observes: K Gaussian sources.
+    let proto = qckm::data::gaussian_mixture_pm1(512, dim, k, &mut rng);
+    let means = Arc::new(proto.means.clone());
+    let std = (dim as f64 / 20.0).sqrt();
+    let source = SampleSource::Synthetic {
+        total,
+        dim,
+        make: Arc::new(move |r: &mut Rng, out: &mut [f64]| {
+            let c = r.next_below(3) as usize;
+            for (j, v) in out.iter_mut().enumerate() {
+                *v = means.get(c, j) + std * r.gaussian();
+            }
+        }),
+    };
+
+    let sigma = SigmaHeuristic::default().resolve(&proto.points, &mut rng);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, dim, m, sigma, &mut rng);
+
+    // ---- QCKM wire: 1 bit per measurement.
+    let op_q = SketchOperator::quantized(freqs.clone());
+    let cfg = PipelineConfig {
+        workers: 8,
+        batch_size: 128,
+        queue_capacity: 16,
+        wire: WireFormat::PackedBits,
+    };
+    let rep_q = run_pipeline(&op_q, &source, &cfg, 7);
+    println!(
+        "[bits ] {} samples via {} sensors in {:.2}s → {:.0} samples/s, {:.1} MB on the wire ({} stalls)",
+        rep_q.samples,
+        cfg.workers,
+        rep_q.elapsed_secs,
+        rep_q.throughput(),
+        rep_q.payload_bytes as f64 / 1e6,
+        rep_q.blocked_sends,
+    );
+
+    // ---- CKM wire: 64-bit floats per measurement (same frequencies).
+    let op_c = SketchOperator::new(freqs, Method::Ckm.signature());
+    let rep_c = run_pipeline(
+        &op_c,
+        &source,
+        &PipelineConfig {
+            wire: WireFormat::DenseF64,
+            ..cfg
+        },
+        7,
+    );
+    println!(
+        "[dense] {} samples in {:.2}s → {:.0} samples/s, {:.1} MB on the wire",
+        rep_c.samples,
+        rep_c.elapsed_secs,
+        rep_c.throughput(),
+        rep_c.payload_bytes as f64 / 1e6,
+    );
+    println!(
+        "acquisition bandwidth ratio (dense/bits): {:.0}×",
+        rep_c.payload_bytes as f64 / rep_q.payload_bytes as f64
+    );
+
+    // ---- Decode from the 1-bit pooled sketch.
+    let lo = vec![-3.0; dim];
+    let hi = vec![3.0; dim];
+    let sol = ClOmpr::new(&op_q, k)
+        .with_bounds(lo, hi)
+        .run(&rep_q.sketch, &mut rng);
+    println!("decoded centroids from the 1-bit stream:");
+    for i in 0..k {
+        let c: Vec<String> = sol.centroids.row(i).iter().map(|v| format!("{v:+.2}")).collect();
+        println!("  α={:.2} [{}]", sol.weights[i], c.join(", "));
+    }
+    assert_eq!(rep_q.samples, total as u64);
+    // 64× up to the packed payload's word padding (2M bits round up to
+    // whole u64 words: here 600 bits ship as 640).
+    let ratio = rep_c.payload_bytes as f64 / rep_q.payload_bytes as f64;
+    assert!(
+        (55.0..=64.0).contains(&ratio),
+        "dense/bits wire ratio {ratio} out of range"
+    );
+}

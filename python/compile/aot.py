@@ -1,0 +1,73 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Run once per build (``make artifacts``); Python never executes on the Rust
+request path. Emits, for the flagship shapes (B=256, n=10, M=1000 — the
+Fig. 3 configuration):
+
+  artifacts/sketch_qckm.hlo.txt   pooled 1-bit-quantized sketch (batch sum)
+  artifacts/sketch_ckm.hlo.txt    pooled cosine sketch (batch sum)
+  artifacts/decode_atoms.hlo.txt  decode-side cosine atoms (K=10)
+  artifacts/manifest.txt          index consumed by qckm::runtime
+
+HLO *text*, not serialized protos: jax >= 0.5 emits 64-bit instruction ids
+that the image's xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .model import lower_to_hlo_text, make_decode_atoms, make_sketch_sum
+
+FLAGSHIP_BATCH = 256
+FLAGSHIP_DIM = 10
+FLAGSHIP_M = 1000
+FLAGSHIP_K = 10
+
+
+def build_artifacts(out_dir: str, batch: int, dim: int, m: int, k: int) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = ["# name kind batch dim m file"]
+
+    x_spec = jax.ShapeDtypeStruct((batch, dim), jnp.float32)
+    omega_spec = jax.ShapeDtypeStruct((dim, m), jnp.float32)
+    xi_spec = jax.ShapeDtypeStruct((m,), jnp.float32)
+
+    for signature in ("qckm", "ckm"):
+        fn = make_sketch_sum(signature)
+        text = lower_to_hlo_text(fn, (x_spec, omega_spec, xi_spec))
+        fname = f"sketch_{signature}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(f"sketch_{signature} sketch {batch} {dim} {m} {fname}")
+        print(f"lowered sketch_{signature}: {len(text)} chars")
+
+    c_spec = jax.ShapeDtypeStruct((k, dim), jnp.float32)
+    atoms_text = lower_to_hlo_text(make_decode_atoms(), (c_spec, omega_spec, xi_spec))
+    with open(os.path.join(out_dir, "decode_atoms.hlo.txt"), "w") as f:
+        f.write(atoms_text)
+    manifest_lines.append(f"decode_atoms atoms {k} {dim} {m} decode_atoms.hlo.txt")
+    print(f"lowered decode_atoms: {len(atoms_text)} chars")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return manifest_lines
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--batch", type=int, default=FLAGSHIP_BATCH)
+    parser.add_argument("--dim", type=int, default=FLAGSHIP_DIM)
+    parser.add_argument("--m", type=int, default=FLAGSHIP_M)
+    parser.add_argument("--k", type=int, default=FLAGSHIP_K)
+    args = parser.parse_args()
+    lines = build_artifacts(args.out_dir, args.batch, args.dim, args.m, args.k)
+    print(f"wrote {len(lines) - 1} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Pallas sketch kernel.
+
+No tiling, no pallas: the straightforward expression of the same math, used
+by pytest (and hypothesis sweeps) to validate ``usketch.sketch_sum``.
+"""
+
+import jax.numpy as jnp
+
+from .usketch import SIGNATURES, _apply_signature
+
+
+def sketch_sum_ref(x, omega, xi, *, signature: str = "qckm"):
+    """Reference batch-summed sketch: ``f32[2*M]``.
+
+    Identical contract to :func:`..usketch.sketch_sum`.
+    """
+    if signature not in SIGNATURES:
+        raise ValueError(f"unknown signature '{signature}'")
+    x = jnp.asarray(x, jnp.float32)
+    omega = jnp.asarray(omega, jnp.float32)
+    xi = jnp.asarray(xi, jnp.float32)
+    proj = x @ omega  # [B, M]
+    arg = proj + xi[None, :]
+    v0 = _apply_signature(signature, arg)
+    v1 = _apply_signature(signature, arg + 0.5 * jnp.pi)
+    z0 = jnp.sum(v0, axis=0)
+    z1 = jnp.sum(v1, axis=0)
+    return jnp.stack([z0, z1], axis=-1).reshape(-1)
+
+
+def sketch_mean_ref(x, omega, xi, *, signature: str = "qckm"):
+    """Mean (rather than sum) pooled sketch — matches the Rust
+    ``SketchOperator::sketch_dataset`` convention."""
+    return sketch_sum_ref(x, omega, xi, signature=signature) / x.shape[0]

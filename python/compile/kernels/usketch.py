@@ -1,0 +1,140 @@
+"""Layer-1 Pallas kernel: pooled periodic-signature sketch.
+
+Computes the batch-summed sketch contributions
+
+    out[2j + p] = sum_i f(omega_j . x_i + xi_j + p*pi/2),   p in {0, 1}
+
+for a 2-pi-periodic signature ``f`` (QCKM's 1-bit universal quantizer
+``q(t) = sign(cos t)``, CKM's cosine, or the triangle ablation), fused as a
+single kernel: the ``X @ Omega`` projection feeds the MXU, the signature and
+the batch reduction are VPU element-wise work on the same VMEM-resident tile,
+and the output block is revisited across the batch grid dimension so the
+pooled sum never round-trips to HBM.
+
+TPU mapping (DESIGN.md section "Hardware adaptation"): the paper's "sensor"
+is an analog front end, so the kernel models the *datacenter* encode path.
+Block shauping targets VMEM: X tile ``(Bt, n)``, Omega tile ``(n, Mt)``,
+accumulator ``(2*Mt,)``; with the flagship ``Bt=128, n<=64, Mt=256`` the
+working set is ~420 KiB of f32, far under the ~16 MiB VMEM budget, and the
+matmul tile keeps the MXU at its native 128x128 granularity.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU numbers are estimated in EXPERIMENTS.md section Perf.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Signatures the kernel knows how to fuse.
+SIGNATURES = ("qckm", "ckm", "triangle")
+
+#: Default block sizes (see module docstring for the VMEM budget).
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_M = 256
+
+
+def _apply_signature(signature: str, arg):
+    """Evaluate the signature f(arg) element-wise (f32-safe)."""
+    if signature == "qckm":
+        # q(t) = sign(cos t), with the measure-zero boundary sent to +1 to
+        # match the Rust reference (`UniversalQuantizer::bit`).
+        return jnp.where(jnp.cos(arg) >= 0.0, 1.0, -1.0).astype(arg.dtype)
+    if signature == "ckm":
+        return jnp.cos(arg)
+    if signature == "triangle":
+        # Even triangle wave: 1 - 2*d/pi with d = distance of (arg mod 2pi)
+        # to the nearest multiple of 2pi.
+        two_pi = 2.0 * jnp.pi
+        r = jnp.mod(arg, two_pi)
+        d = jnp.minimum(r, two_pi - r)
+        return (1.0 - 2.0 * d / jnp.pi).astype(arg.dtype)
+    raise ValueError(f"unknown signature '{signature}' (expected {SIGNATURES})")
+
+
+def _sketch_kernel(x_ref, omega_ref, xi_ref, o_ref, *, signature: str, batch: int, block_b: int):
+    """One (batch-tile, frequency-tile) grid step.
+
+    Grid is (num_batch_tiles, num_freq_tiles); the output block depends only
+    on the frequency tile, so it is revisited along the batch dimension and
+    accumulates the per-tile partial sums.
+    """
+    i = pl.program_id(0)
+
+    # MXU: (Bt, n) @ (n, Mt) projection.
+    proj = jnp.dot(x_ref[...], omega_ref[...], preferred_element_type=jnp.float32)
+    arg = proj + xi_ref[...][None, :]
+
+    # VPU: signature at both dither offsets.
+    v0 = _apply_signature(signature, arg)
+    v1 = _apply_signature(signature, arg + 0.5 * jnp.pi)
+
+    # Mask padded batch rows (X is zero-padded to a multiple of Bt, but
+    # f(0 + xi) != 0, so padded rows must not contribute).
+    row_ids = i * block_b + jax.lax.broadcasted_iota(jnp.int32, v0.shape, 0)
+    valid = row_ids < batch
+    v0 = jnp.where(valid, v0, 0.0)
+    v1 = jnp.where(valid, v1, 0.0)
+
+    # Batch reduction, then interleave (2j, 2j+1) slots.
+    z0 = jnp.sum(v0, axis=0)
+    z1 = jnp.sum(v1, axis=0)
+    contrib = jnp.stack([z0, z1], axis=-1).reshape(-1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(i > 0)
+    def _accum():
+        o_ref[...] += contrib
+
+
+def sketch_sum(x, omega, xi, *, signature: str = "qckm",
+               block_b: int = DEFAULT_BLOCK_B, block_m: int = DEFAULT_BLOCK_M):
+    """Pooled (summed) sketch of a batch: returns ``f32[2*M]``.
+
+    Args:
+      x: ``f32[B, n]`` batch of examples.
+      omega: ``f32[n, M]`` frequency matrix (column j = omega_j).
+      xi: ``f32[M]`` dither.
+      signature: one of :data:`SIGNATURES`.
+      block_b / block_m: Pallas tile sizes (clamped to the actual shapes).
+    """
+    if signature not in SIGNATURES:
+        raise ValueError(f"unknown signature '{signature}'")
+    b, n = x.shape
+    n2, m = omega.shape
+    if n2 != n:
+        raise ValueError(f"omega rows {n2} != x cols {n}")
+    if xi.shape != (m,):
+        raise ValueError(f"xi shape {xi.shape} != ({m},)")
+
+    bt = max(1, min(block_b, b))
+    mt = max(1, min(block_m, m))
+    # Zero-pad to tile multiples; padded rows are masked inside the kernel,
+    # padded frequency columns are sliced off the output.
+    b_pad = -(-b // bt) * bt
+    m_pad = -(-m // mt) * mt
+    if b_pad != b:
+        x = jnp.pad(x, ((0, b_pad - b), (0, 0)))
+    if m_pad != m:
+        omega = jnp.pad(omega, ((0, 0), (0, m_pad - m)))
+        xi = jnp.pad(xi, (0, m_pad - m))
+
+    grid = (b_pad // bt, m_pad // mt)
+    out = pl.pallas_call(
+        partial(_sketch_kernel, signature=signature, batch=b, block_b=bt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, mt), lambda i, j: (0, j)),
+            pl.BlockSpec((mt,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((2 * mt,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((2 * m_pad,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x.astype(jnp.float32), omega.astype(jnp.float32), xi.astype(jnp.float32))
+    return out[: 2 * m]

@@ -1,0 +1,63 @@
+"""Layer-2 JAX model: the acquisition-side compute graph.
+
+The paper's "model" is the sketch operator itself — the only dense compute
+on the request path. This module assembles the jittable functions that
+``aot.py`` lowers to HLO text for the Rust runtime:
+
+* :func:`make_sketch_sum` — the pooled (summed) sketch of a fixed-shape
+  batch, calling the Layer-1 Pallas kernel. This is the artifact the Rust
+  ``PjrtEngine`` executes per batch.
+* :func:`make_decode_atoms` — the decode-side cosine atom matrix
+  ``a(c_k)`` for a batch of candidate centroids (first-harmonic operator of
+  Prop. 1; the ``2|F_1|`` amplitude is applied on the Rust side). Lowered
+  as a second artifact to document that the whole numeric stack can be
+  served from PJRT; the shipped decoder evaluates atoms natively because
+  its shapes vary per CL-OMPR iteration.
+
+Python here is build-time only: these functions run under ``jax.jit``
+lowering exactly once, in ``make artifacts``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.usketch import sketch_sum
+
+
+def make_sketch_sum(signature: str):
+    """Return ``fn(x[B,n], omega[n,M], xi[M]) -> f32[2M]`` (batch sum)."""
+
+    def fn(x, omega, xi):
+        return sketch_sum(x, omega, xi, signature=signature)
+
+    fn.__name__ = f"sketch_sum_{signature}"
+    return fn
+
+
+def make_decode_atoms():
+    """Return ``fn(c[K,n], omega[n,M], xi[M]) -> f32[K, 2M]``: unit-amplitude
+    cosine atoms ``cos(omega_j.c + xi_j + p*pi/2)`` in the paired-slot layout."""
+
+    def fn(c, omega, xi):
+        proj = c @ omega  # [K, M]
+        arg = proj + xi[None, :]
+        a0 = jnp.cos(arg)
+        a1 = -jnp.sin(arg)  # cos(arg + pi/2)
+        return jnp.stack([a0, a1], axis=-1).reshape(c.shape[0], -1)
+
+    fn.__name__ = "decode_atoms"
+    return fn
+
+
+def lower_to_hlo_text(fn, example_args):
+    """Lower a jittable function to HLO **text** (the interchange format the
+    ``xla`` crate's XLA 0.5.1 accepts — serialized jax>=0.5 protos are not;
+    see /opt/xla-example/README.md)."""
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,138 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including tile-boundary and padding cases) and
+signatures; exact invariants (values in {-1,+1} for the quantizer, cos^2 +
+sin^2 pairing for CKM) are asserted directly.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.ref import sketch_mean_ref, sketch_sum_ref
+from compile.kernels.usketch import SIGNATURES, sketch_sum
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_problem(rng, b, n, m, scale=2.0):
+    x = rng.normal(size=(b, n)).astype(np.float32) * scale
+    omega = rng.normal(size=(n, m)).astype(np.float32)
+    xi = rng.uniform(0.0, 2.0 * np.pi, size=(m,)).astype(np.float32)
+    return x, omega, xi
+
+
+@pytest.mark.parametrize("signature", SIGNATURES)
+@pytest.mark.parametrize("shape", [(1, 1, 1), (4, 3, 8), (130, 5, 260), (256, 10, 100)])
+def test_kernel_matches_ref(signature, shape):
+    b, n, m = shape
+    rng = np.random.default_rng(hash(shape) % 2**32)
+    x, omega, xi = rand_problem(rng, b, n, m)
+    got = np.asarray(sketch_sum(x, omega, xi, signature=signature))
+    want = np.asarray(sketch_sum_ref(x, omega, xi, signature=signature))
+    assert got.shape == (2 * m,)
+    # The quantizer is discontinuous: a projection landing within float
+    # round-off of a quantization boundary can legitimately flip sign
+    # between the two evaluation orders. Tolerate <=0.1% flipped slots
+    # (each flip shifts a slot sum by 2).
+    if signature == "qckm":
+        flips = np.sum(np.abs(got - want) > 1e-4) / got.size
+        assert flips <= 1e-3, f"{flips:.2%} slots differ"
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4 * b)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    b=st.integers(1, 300),
+    n=st.integers(1, 12),
+    m=st.integers(1, 300),
+    signature=st.sampled_from(SIGNATURES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(b, n, m, signature, seed):
+    rng = np.random.default_rng(seed)
+    x, omega, xi = rand_problem(rng, b, n, m, scale=1.5)
+    got = np.asarray(sketch_sum(x, omega, xi, signature=signature))
+    want = np.asarray(sketch_sum_ref(x, omega, xi, signature=signature))
+    if signature == "qckm":
+        # Allow rare boundary flips (discontinuity + f32 reassociation).
+        flips = np.sum(np.abs(got - want) > 1e-4)
+        assert flips <= max(1, int(2e-3 * got.size)), f"{flips} flipped slots"
+    else:
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4 * b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(2, 64),
+    n=st.integers(1, 8),
+    m=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sketch_linearity(b, n, m, seed):
+    """The sketch sum is linear: halves add up to the whole (exact for the
+    quantizer whose contributions are +-1)."""
+    rng = np.random.default_rng(seed)
+    x, omega, xi = rand_problem(rng, b, n, m)
+    whole = np.asarray(sketch_sum(x, omega, xi, signature="qckm"))
+    h1 = np.asarray(sketch_sum(x[: b // 2], omega, xi, signature="qckm"))
+    h2 = np.asarray(sketch_sum(x[b // 2 :], omega, xi, signature="qckm"))
+    np.testing.assert_allclose(whole, h1 + h2, atol=1e-4)
+
+
+def test_quantizer_values_are_plus_minus_one():
+    rng = np.random.default_rng(0)
+    x, omega, xi = rand_problem(rng, 1, 4, 50)
+    z = np.asarray(sketch_sum(x, omega, xi, signature="qckm"))
+    assert np.all(np.isin(z, [-1.0, 1.0]))
+
+
+def test_ckm_pair_identity():
+    """cos^2 + sin^2 = 1: for a single example, slot pairs of the cosine
+    sketch are (cos t, -sin t)."""
+    rng = np.random.default_rng(1)
+    x, omega, xi = rand_problem(rng, 1, 3, 40)
+    z = np.asarray(sketch_sum(x, omega, xi, signature="ckm"))
+    pairs = z.reshape(-1, 2)
+    np.testing.assert_allclose(pairs[:, 0] ** 2 + pairs[:, 1] ** 2, 1.0, atol=1e-5)
+
+
+def test_triangle_range_and_period():
+    rng = np.random.default_rng(2)
+    x, omega, xi = rand_problem(rng, 1, 3, 64)
+    z = np.asarray(sketch_sum(x, omega, xi, signature="triangle"))
+    assert np.all(z >= -1.0 - 1e-6) and np.all(z <= 1.0 + 1e-6)
+
+
+def test_mean_ref_is_sum_over_n():
+    rng = np.random.default_rng(3)
+    x, omega, xi = rand_problem(rng, 10, 2, 7)
+    s = np.asarray(sketch_sum_ref(x, omega, xi))
+    m = np.asarray(sketch_mean_ref(x, omega, xi))
+    np.testing.assert_allclose(m, s / 10.0, rtol=1e-6)
+
+
+def test_rejects_bad_shapes_and_signature():
+    x = np.zeros((2, 3), np.float32)
+    omega = np.zeros((4, 5), np.float32)  # wrong rows
+    xi = np.zeros((5,), np.float32)
+    with pytest.raises(ValueError):
+        sketch_sum(x, omega, xi)
+    with pytest.raises(ValueError):
+        sketch_sum(np.zeros((2, 4), np.float32), omega, np.zeros((6,), np.float32))
+    with pytest.raises(ValueError):
+        sketch_sum(np.zeros((2, 4), np.float32), omega, xi, signature="dct")
+    with pytest.raises(ValueError):
+        sketch_sum_ref(np.zeros((2, 4), np.float32), omega, xi, signature="dct")
+
+
+def test_block_sizes_do_not_change_result():
+    rng = np.random.default_rng(4)
+    x, omega, xi = rand_problem(rng, 70, 6, 90)
+    a = np.asarray(sketch_sum(x, omega, xi, signature="ckm", block_b=16, block_m=32))
+    b = np.asarray(sketch_sum(x, omega, xi, signature="ckm", block_b=128, block_m=256))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-3)

@@ -1,0 +1,103 @@
+//! Decode-side benchmarks: CL-OMPR end-to-end at the paper's shapes, plus
+//! its component solvers (NNLS, projected L-BFGS, Step-1 screening).
+//!
+//! The paper's pitch is that decode cost is independent of N — verified
+//! here by decoding sketches pooled from different dataset sizes.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, black_box};
+use qckm::clompr::{ClOmpr, ClOmprParams};
+use qckm::frequency::{DrawnFrequencies, FrequencyLaw};
+use qckm::linalg::Mat;
+use qckm::optim::nnls;
+use qckm::rng::Rng;
+use qckm::sketch::SketchOperator;
+
+fn decode_case(n: usize, k: usize, m: usize, seed: u64) -> (SketchOperator, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, n, m, 1.4, &mut rng);
+    let op = SketchOperator::quantized(freqs);
+    let truth = Mat::from_fn(k, n, |_, _| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 });
+    let w = vec![1.0 / k as f64; k];
+    // Sketch of the Dirac mixture through the full signature.
+    let mut z = vec![0.0; op.sketch_len()];
+    for (c, &alpha) in w.iter().enumerate() {
+        let e = op.encode_point(truth.row(c));
+        qckm::linalg::axpy(alpha, &e, &mut z);
+    }
+    (op, z)
+}
+
+fn main() {
+    println!("== decoder benchmarks ==");
+
+    // Fig. 2a-scale decode (n=8, K=2, m/nK = 2).
+    let (op_small, z_small) = decode_case(8, 2, 32, 1);
+    bench("clompr decode n=8 K=2 m=32", 1, 1500, || {
+        let mut rng = Rng::new(7);
+        black_box(
+            ClOmpr::new(&op_small, 2)
+                .with_bounds(vec![-2.0; 8], vec![2.0; 8])
+                .run(&z_small, &mut rng),
+        );
+    })
+    .print();
+
+    // Fig. 3-scale decode (n=10, K=10, m=1000) — the flagship.
+    let (op_big, z_big) = decode_case(10, 10, 1000, 2);
+    bench("clompr decode n=10 K=10 m=1000 (fig3)", 0, 4000, || {
+        let mut rng = Rng::new(8);
+        black_box(
+            ClOmpr::new(&op_big, 10)
+                .with_bounds(vec![-2.0; 10], vec![2.0; 10])
+                .run(&z_big, &mut rng),
+        );
+    })
+    .print();
+
+    // Component: NNLS at decoder shapes (2000 × 20).
+    let mut rng = Rng::new(3);
+    let a = Mat::from_fn(2000, 20, |_, _| rng.gaussian());
+    let b: Vec<f64> = (0..2000).map(|_| rng.gaussian()).collect();
+    bench("nnls 2000x20", 3, 300, || {
+        black_box(nnls(&a, &b));
+    })
+    .print();
+
+    // Component: Step-1 screening (64 candidates × atom eval).
+    let v: Vec<f64> = (0..op_big.sketch_len()).map(|_| rng.gaussian()).collect();
+    bench("step1 screen (64 atoms m=1000)", 3, 300, || {
+        let mut r = Rng::new(4);
+        let mut best = f64::NEG_INFINITY;
+        for _ in 0..64 {
+            let c: Vec<f64> = (0..10).map(|_| r.uniform(-2.0, 2.0)).collect();
+            let s = qckm::linalg::dot(&op_big.atom(&c), &v);
+            if s > best {
+                best = s;
+            }
+        }
+        black_box(best);
+    })
+    .print();
+
+    // Decode cost is N-independent: same shapes, sketches from different N.
+    println!("\n-- decode cost vs dataset size (must be flat) --");
+    for &n_data in &[1_000usize, 10_000, 100_000] {
+        let mut rng = Rng::new(5);
+        let x = Mat::from_fn(n_data, 8, |_, _| rng.gaussian());
+        let z = op_small.sketch_dataset(&x); // encode cost excluded
+        bench(&format!("decode (sketch from N={n_data})"), 1, 800, || {
+            let mut r = Rng::new(9);
+            black_box(
+                ClOmpr::new(&op_small, 2)
+                    .with_bounds(vec![-3.0; 8], vec![3.0; 8])
+                    .run(&z, &mut r),
+            );
+        })
+        .print();
+    }
+
+    let _ = ClOmprParams::default();
+}

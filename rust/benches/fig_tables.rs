@@ -1,0 +1,74 @@
+//! "Bench" target that regenerates miniature versions of every paper
+//! figure in one run — the per-figure timing makes grid-cost planning
+//! concrete, and CI gets an end-to-end smoke of the experiment harnesses.
+//!
+//! The real (recorded) grids run via `qckm experiment <fig> [--full]`; this
+//! target keeps each under a few seconds.
+
+#[path = "harness.rs"]
+mod harness;
+
+use qckm::config::Method;
+use qckm::experiments::*;
+use std::time::Instant;
+
+fn main() {
+    println!("== paper-table regeneration (miniature grids) ==");
+
+    // Fig. 2a (reduced).
+    let t = Instant::now();
+    let mut cfg = Fig2Config::quick(Fig2Variant::VaryDimension);
+    cfg.values = vec![4, 8];
+    cfg.ratios = vec![1.0, 2.0, 4.0];
+    cfg.trials = 4;
+    cfg.n_samples = 2048;
+    let res = run_fig2(&cfg);
+    println!("{}", res.render());
+    println!("[fig2a mini: {:.1}s]\n", t.elapsed().as_secs_f64());
+
+    // Fig. 2b (reduced).
+    let t = Instant::now();
+    let mut cfg = Fig2Config::quick(Fig2Variant::VaryClusters);
+    cfg.values = vec![2, 4];
+    cfg.ratios = vec![2.0, 4.0, 8.0];
+    cfg.trials = 4;
+    cfg.n_samples = 2048;
+    let res = run_fig2(&cfg);
+    println!("{}", res.render());
+    println!("[fig2b mini: {:.1}s]\n", t.elapsed().as_secs_f64());
+
+    // Fig. 3 (reduced).
+    let t = Instant::now();
+    let mut cfg = Fig3Config::quick();
+    cfg.n_samples = 4000;
+    cfg.m = 300;
+    cfg.trials = 3;
+    let res = run_fig3(&cfg);
+    println!("{}", res.render());
+    println!("[fig3 mini: {:.1}s]\n", t.elapsed().as_secs_f64());
+
+    // Prop. 1 (reduced).
+    let t = Instant::now();
+    let cfg = Prop1Config {
+        ms: vec![64, 256, 1024],
+        repeats: 16,
+        reference_draws: 40_000,
+        seed: 1,
+    };
+    let res = run_prop1(std::sync::Arc::new(qckm::signature::UniversalQuantizer), &cfg);
+    println!("{}", res.render());
+    println!("[prop1 mini: {:.1}s]\n", t.elapsed().as_secs_f64());
+
+    // Ablation (reduced).
+    let t = Instant::now();
+    let cfg = AblationConfig {
+        trials: 3,
+        ratios: vec![2.0, 4.0],
+        ..Default::default()
+    };
+    let res = run_ablation(&cfg);
+    println!("{}", res.render());
+    println!("[ablation mini: {:.1}s]", t.elapsed().as_secs_f64());
+
+    let _ = Method::Qckm;
+}

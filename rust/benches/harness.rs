@@ -1,0 +1,91 @@
+//! A minimal benchmark harness (no `criterion` offline): warmup + timed
+//! iterations, reporting median / mean / MAD and derived throughput.
+//!
+//! Used by every `[[bench]]` target (they set `harness = false`).
+
+use std::time::Instant;
+
+/// One benchmark's timing summary (nanoseconds per iteration).
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub mad_ns: f64,
+}
+
+impl Summary {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} ±{:>10}   ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.mad_ns),
+            self.iters
+        );
+    }
+
+    /// Print with a derived rate (e.g. samples/s given samples/iter).
+    pub fn print_rate(&self, unit: &str, per_iter: f64) {
+        let rate = per_iter / (self.median_ns * 1e-9);
+        println!(
+            "{:<44} {:>12} median   {:>14.0} {unit}/s",
+            self.name,
+            fmt_ns(self.median_ns),
+            rate
+        );
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}µs", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Run `f` repeatedly: `warmup` throwaway iterations, then enough timed
+/// iterations to cover ~`budget_ms` (at least 5).
+pub fn bench(name: &str, warmup: usize, budget_ms: u64, mut f: impl FnMut()) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    // Estimate the per-iter cost from one timed call.
+    let t0 = Instant::now();
+    f();
+    let est = t0.elapsed().as_nanos().max(1) as u64;
+    let iters = ((budget_ms * 1_000_000) / est).clamp(5, 10_000) as usize;
+
+    let mut times: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_nanos() as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    Summary {
+        name: name.to_string(),
+        iters,
+        median_ns: median,
+        mean_ns: mean,
+        mad_ns: mad,
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

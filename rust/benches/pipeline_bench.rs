@@ -1,0 +1,74 @@
+//! Layer-3 coordinator benchmarks: streaming acquisition throughput vs
+//! worker count, wire format, and queue capacity (backpressure behaviour).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use qckm::coordinator::{run_pipeline, PipelineConfig, SampleSource, WireFormat};
+use qckm::frequency::{DrawnFrequencies, FrequencyLaw};
+use qckm::rng::Rng;
+use qckm::sketch::SketchOperator;
+use std::sync::Arc;
+
+fn main() {
+    println!("== coordinator pipeline benchmarks ==");
+    let dim = 10;
+    let m = 500;
+    let total = 20_000;
+    let mut rng = Rng::new(0);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, dim, m, 1.0, &mut rng);
+    let op = SketchOperator::quantized(freqs.clone());
+    let op_dense = SketchOperator::new(freqs, qckm::config::Method::Ckm.signature());
+    let source = SampleSource::Synthetic {
+        total,
+        dim,
+        make: Arc::new(|r: &mut Rng, out: &mut [f64]| {
+            for v in out.iter_mut() {
+                *v = r.gaussian();
+            }
+        }),
+    };
+
+    // Scaling with worker count (1-bit wire).
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = PipelineConfig {
+            workers,
+            batch_size: 128,
+            queue_capacity: 16,
+            wire: WireFormat::PackedBits,
+        };
+        let s = bench(&format!("bits wire, {workers} workers ({total} samples)"), 1, 2500, || {
+            harness::black_box(run_pipeline(&op, &source, &cfg, 1));
+        });
+        s.print_rate("samples", total as f64);
+    }
+
+    // Dense (CKM) wire at the same shapes.
+    let cfg = PipelineConfig {
+        workers: 4,
+        batch_size: 128,
+        queue_capacity: 16,
+        wire: WireFormat::DenseF64,
+    };
+    bench(&format!("dense wire, 4 workers ({total} samples)"), 1, 2500, || {
+        harness::black_box(run_pipeline(&op_dense, &source, &cfg, 1));
+    })
+    .print_rate("samples", total as f64);
+
+    // Backpressure: a tiny queue must still complete (and report stalls).
+    let tight = PipelineConfig {
+        workers: 8,
+        batch_size: 32,
+        queue_capacity: 1,
+        wire: WireFormat::PackedBits,
+    };
+    let rep = run_pipeline(&op, &source, &tight, 2);
+    println!(
+        "\nbackpressure probe: queue=1, 8 workers → {} stalls, high-water {}, {:.0} samples/s",
+        rep.blocked_sends,
+        rep.queue_high_water,
+        rep.throughput()
+    );
+    assert_eq!(rep.samples, total as u64);
+}

@@ -1,0 +1,83 @@
+//! Encode-side hot-path benchmarks: the pooled sketch at the paper's
+//! flagship shapes, native vs PJRT (AOT JAX/Pallas) engines, dense vs
+//! bit-packed contribution encoding, and the decoder's atom kernels.
+//!
+//! Run: `cargo bench --offline` (this is the §Perf L1/L3-encode evidence).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, black_box};
+use qckm::frequency::{DrawnFrequencies, FrequencyLaw};
+use qckm::linalg::Mat;
+use qckm::rng::Rng;
+use qckm::runtime::{ArtifactManifest, NativeEngine, PjrtEngine, SketchEngine};
+use qckm::sketch::SketchOperator;
+use std::path::PathBuf;
+
+fn main() {
+    println!("== sketch encode benchmarks ==");
+    let mut rng = Rng::new(0);
+
+    // Flagship Fig. 3 shapes: n = 10, M = 1000, batches of 256.
+    let (n, m, batch) = (10usize, 1000usize, 256usize);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, n, m, 1.0, &mut rng);
+    let op = SketchOperator::quantized(freqs.clone());
+    let x = Mat::from_fn(batch, n, |_, _| rng.gaussian());
+
+    // Native engine, quantized signature.
+    let native = NativeEngine::new(op.clone());
+    let s = bench("native qckm sketch (256x10 -> 2000)", 3, 400, || {
+        black_box(native.sketch_dataset(&x).unwrap());
+    });
+    s.print_rate("samples", batch as f64);
+    let flops = 2.0 * batch as f64 * n as f64 * m as f64;
+    println!(
+        "    projection core: {:.2} GFLOP/s effective",
+        flops / (s.median_ns * 1e-9) / 1e9
+    );
+
+    // Cosine signature (CKM) for the sincos-cost comparison.
+    let op_c = SketchOperator::new(freqs.clone(), qckm::config::Method::Ckm.signature());
+    let native_c = NativeEngine::new(op_c);
+    bench("native ckm sketch (256x10 -> 2000)", 3, 400, || {
+        black_box(native_c.sketch_dataset(&x).unwrap());
+    })
+    .print_rate("samples", batch as f64);
+
+    // Per-point encode paths (sensor-side cost).
+    let point: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    bench("encode_point dense (1x10 -> 2000 f64)", 10, 200, || {
+        black_box(op.encode_point(&point));
+    })
+    .print_rate("points", 1.0);
+    bench("encode_point_bits (1x10 -> 2000 bits)", 10, 200, || {
+        black_box(op.encode_point_bits(&point));
+    })
+    .print_rate("points", 1.0);
+
+    // Decode-side atom kernels (the CL-OMPR inner loop).
+    let v: Vec<f64> = (0..op.sketch_len()).map(|_| rng.gaussian()).collect();
+    let mut grad = vec![0.0; n];
+    bench("atom (1 centroid, M=1000)", 10, 200, || {
+        black_box(op.atom(&point));
+    })
+    .print();
+    bench("atom_and_jtv (fused objective+grad)", 10, 200, || {
+        black_box(op.atom_and_jtv(&point, &v, &mut grad));
+    })
+    .print();
+
+    // PJRT engine (if artifacts are built).
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactManifest::load(&dir) {
+        Ok(manifest) => {
+            let engine = PjrtEngine::load(&manifest, "sketch_qckm", op.clone()).expect("load");
+            let s = bench("pjrt qckm sketch (256x10 -> 2000)", 3, 400, || {
+                black_box(engine.sketch_dataset(&x).unwrap());
+            });
+            s.print_rate("samples", batch as f64);
+        }
+        Err(_) => println!("(pjrt bench skipped: run `make artifacts` first)"),
+    }
+}

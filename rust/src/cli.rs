@@ -1,0 +1,254 @@
+//! A tiny declarative CLI argument parser (no `clap` in this environment).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`s, positional
+//! arguments, and generates usage text. Each binary declares its options
+//! up front; unknown options are hard errors (typos should not silently
+//! change an experiment).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Declaration of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` for boolean flags (no value token).
+    pub is_flag: bool,
+    /// Shown in usage for value options.
+    pub value_hint: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// A declared CLI: options + positional description.
+#[derive(Clone, Debug, Default)]
+pub struct CliSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub positionals: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl CliSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            positionals: "",
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn positionals(mut self, desc: &'static str) -> Self {
+        self.positionals = desc;
+        self
+    }
+
+    /// Declare a value option.
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        value_hint: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: false,
+            value_hint,
+            default,
+        });
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: true,
+            value_hint: "",
+            default: None,
+        });
+        self
+    }
+
+    /// Render usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} ", self.name, self.about, self.name);
+        if !self.positionals.is_empty() {
+            s.push_str(self.positionals);
+            s.push(' ');
+        }
+        s.push_str("[OPTIONS]\n\nOPTIONS:\n");
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <{}>", o.name, o.value_hint)
+            };
+            let default = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{left:<34}{}{default}\n", o.help));
+        }
+        s.push_str("  --help                          print this message\n");
+        s
+    }
+
+    /// Parse a token stream (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, args: I) -> Result<ParsedArgs> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_value) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let Some(spec) = self.opts.iter().find(|o| o.name == name) else {
+                    bail!("unknown option '--{name}'\n\n{}", self.usage());
+                };
+                if spec.is_flag {
+                    if inline_value.is_some() {
+                        bail!("flag '--{name}' takes no value");
+                    }
+                    flags.push(name);
+                } else {
+                    let value = match inline_value {
+                        Some(v) => v,
+                        None => match it.next() {
+                            Some(v) => v,
+                            None => bail!("option '--{name}' requires a value"),
+                        },
+                    };
+                    values.insert(name, value);
+                }
+            } else {
+                positionals.push(tok);
+            }
+        }
+        // Fill declared defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.entry(o.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(ParsedArgs {
+            values,
+            flags,
+            positionals,
+        })
+    }
+}
+
+/// Parse outcome with typed getters.
+#[derive(Clone, Debug, Default)]
+pub struct ParsedArgs {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl ParsedArgs {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.parse_as(name)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.parse_as(name)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.parse_as(name)
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(raw) => match raw.parse::<T>() {
+                Ok(v) => Ok(Some(v)),
+                Err(_) => bail!("option '--{name}': cannot parse '{raw}'"),
+            },
+        }
+    }
+
+    pub fn positional(&self, index: usize) -> Option<&str> {
+        self.positionals.get(index).map(|s| s.as_str())
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CliSpec {
+        CliSpec::new("qckm", "test")
+            .positionals("<cmd>")
+            .opt("m", "NUM", Some("1000"), "frequencies")
+            .opt("sigma", "FLOAT", None, "bandwidth")
+            .flag("full", "run the full grid")
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let args = spec()
+            .parse(["fig2a", "--m", "500", "--full", "--sigma=2.5"].map(String::from))
+            .unwrap();
+        assert_eq!(args.positional(0), Some("fig2a"));
+        assert_eq!(args.get_usize("m").unwrap(), Some(500));
+        assert_eq!(args.get_f64("sigma").unwrap(), Some(2.5));
+        assert!(args.flag("full"));
+        assert!(!args.flag("other"));
+        assert_eq!(args.positionals().len(), 1);
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let args = spec().parse(Vec::<String>::new()).unwrap();
+        assert_eq!(args.get_usize("m").unwrap(), Some(1000));
+        assert_eq!(args.get("sigma"), None);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(spec().parse(["--nope".into()] as [String; 1]).is_err());
+        assert!(spec().parse(["--m".into()] as [String; 1]).is_err()); // missing value
+        assert!(spec()
+            .parse(["--full=yes".into()] as [String; 1])
+            .is_err()); // flag with value
+        let e = spec()
+            .parse(["--m".into(), "abc".into()] as [String; 2])
+            .unwrap()
+            .get_usize("m");
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn help_bails_with_usage() {
+        let err = spec().parse(["--help".into()] as [String; 1]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("USAGE"));
+        assert!(msg.contains("--m <NUM>"));
+        assert!(msg.contains("[default: 1000]"));
+    }
+}

@@ -1,0 +1,347 @@
+//! CL-OMPR — the sketch-matching decoder used by CKM and QCKM.
+//!
+//! Implements the paper's pseudocode (Sec. 2) over the generalized sketch of
+//! Sec. 3: given the pooled dataset sketch `z` (computed with *any*
+//! admissible signature `f`), find centroids `C` and weights `α ≥ 0`
+//! approximately minimizing `‖z − Σ_k α_k A_{f1} δ_{c_k}‖²`, where the
+//! decode-side atoms `A_{f1} δ_c` are the *first harmonic* cosine atoms of
+//! [`crate::sketch::SketchOperator::atom`]. Running it on a cosine sketch is
+//! exactly CKM; on a 1-bit universal-quantizer sketch it is QCKM (Eq. 10).
+//!
+//! The five steps per outer iteration (2K iterations total):
+//!
+//! 1. **Atom pick** — box-constrained maximization of the normalized
+//!    residual correlation `⟨a(c)/‖a‖, r⟩` by projected L-BFGS from random
+//!    restarts inside the data bounding box `[l, u]`.
+//! 2. **Support extension** — append the winner to `C`.
+//! 3. **Hard thresholding** (when |C| > K) — NNLS on normalized atoms,
+//!    keep the K largest coefficients.
+//! 4. **Weight projection** — NNLS of `z` on the selected atoms.
+//! 5. **Global refinement** — joint projected L-BFGS over `(C, α)` with
+//!    `l ≤ c_k ≤ u` and `α ≥ 0`, warm-started at the current solution.
+//!
+//! The weights are renormalized to sum 1 only on output (the objective is
+//! scale-aware through Step 4/5, as in SketchMLbox).
+
+use crate::linalg::{axpy, dot, norm2, sub, Mat};
+use crate::optim::{lbfgsb, nnls, Bounds, LbfgsParams};
+use crate::rng::Rng;
+use crate::sketch::SketchOperator;
+
+/// Tuning knobs for [`ClOmpr`]. Defaults follow SketchMLbox's practical
+/// choices scaled to this implementation (see EXPERIMENTS.md §Calibration).
+#[derive(Clone, Debug)]
+pub struct ClOmprParams {
+    /// Outer iterations; the paper prescribes `2K`.
+    pub outer_iters_factor: usize,
+    /// Random candidates screened (gradient-free) before Step 1's descent.
+    pub step1_candidates: usize,
+    /// How many screened winners get a full L-BFGS refinement.
+    pub step1_restarts: usize,
+    /// L-BFGS iteration cap for Step 1.
+    pub step1_iters: usize,
+    /// L-BFGS iteration cap for intermediate Step 5 runs.
+    pub step5_iters: usize,
+    /// L-BFGS iteration cap for the final Step 5 polish.
+    pub step5_final_iters: usize,
+}
+
+impl Default for ClOmprParams {
+    fn default() -> Self {
+        Self {
+            outer_iters_factor: 2,
+            step1_candidates: 64,
+            step1_restarts: 3,
+            step1_iters: 60,
+            step5_iters: 80,
+            step5_final_iters: 300,
+        }
+    }
+}
+
+/// A decoded mixture: centroids, weights, and the residual objective.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    /// `K × n` centroid matrix.
+    pub centroids: Mat,
+    /// Mixture weights, non-negative, normalized to sum 1.
+    pub weights: Vec<f64>,
+    /// Final sketch-matching objective `‖z − Σ α_k a(c_k)‖` (with the
+    /// *unnormalized* weights actually fitted) — the model-selection score
+    /// used to pick among replicates without touching the data.
+    pub objective: f64,
+}
+
+/// The decoder, bound to a sketch operator and a target cluster count.
+pub struct ClOmpr<'a> {
+    op: &'a SketchOperator,
+    k: usize,
+    /// Centroid search box (`l`, `u`). Defaults to `[-1, 1]^n` until
+    /// overridden; always set it from data bounds or prior knowledge.
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+    params: ClOmprParams,
+}
+
+impl<'a> ClOmpr<'a> {
+    pub fn new(op: &'a SketchOperator, k: usize) -> Self {
+        assert!(k >= 1, "need at least one cluster");
+        Self {
+            op,
+            k,
+            lo: vec![-1.0; op.dim()],
+            hi: vec![1.0; op.dim()],
+            params: ClOmprParams::default(),
+        }
+    }
+
+    /// Set the centroid search box (the `l ≤ c ≤ u` of the pseudocode).
+    pub fn with_bounds(mut self, lo: Vec<f64>, hi: Vec<f64>) -> Self {
+        assert_eq!(lo.len(), self.op.dim());
+        assert_eq!(hi.len(), self.op.dim());
+        assert!(lo.iter().zip(&hi).all(|(a, b)| a <= b), "need lo <= hi");
+        self.lo = lo;
+        self.hi = hi;
+        self
+    }
+
+    pub fn with_params(mut self, params: ClOmprParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Decode centroids from the pooled sketch `z` (length `2M`).
+    pub fn run(&self, z: &[f64], rng: &mut Rng) -> Solution {
+        assert_eq!(z.len(), self.op.sketch_len(), "sketch length mismatch");
+        let n = self.op.dim();
+        let atom_norm = self.op.atom_norm();
+
+        let mut centroids = Mat::zeros(0, n);
+        let mut alphas: Vec<f64> = Vec::new();
+        let mut residual = z.to_vec();
+
+        let outer = self.params.outer_iters_factor * self.k;
+        for _t in 0..outer {
+            // ---- Step 1: pick the atom best correlated with the residual.
+            let c_new = self.step1_pick(&residual, rng);
+
+            // ---- Step 2: extend the support.
+            centroids.push_row(&c_new);
+            alphas.push(0.0);
+
+            // ---- Step 3: hard-threshold the support back to K.
+            if centroids.rows() > self.k {
+                let beta = self.project_weights(z, &centroids, 1.0 / atom_norm);
+                let mut order: Vec<usize> = (0..beta.len()).collect();
+                order.sort_by(|&a, &b| beta[b].partial_cmp(&beta[a]).unwrap());
+                order.truncate(self.k);
+                centroids = centroids.select_rows(&order);
+                alphas.truncate(self.k); // values refreshed by Step 4 below
+            }
+
+            // ---- Step 4: non-negative weight projection.
+            alphas = self.project_weights(z, &centroids, 1.0);
+
+            // ---- Step 5: joint gradient refinement of (C, α).
+            let iters = if _t + 1 == outer {
+                self.params.step5_final_iters
+            } else {
+                self.params.step5_iters
+            };
+            self.step5_refine(z, &mut centroids, &mut alphas, iters);
+
+            // ---- Residual update.
+            let model = self.op.mixture_sketch(&centroids, &alphas);
+            residual = sub(z, &model);
+        }
+
+        // Output normalization: weights sum to 1 (drop exact zeros is not
+        // needed — NNLS already zeroed useless atoms; keep K slots).
+        let objective = norm2(&residual);
+        let total: f64 = alphas.iter().sum();
+        let weights = if total > 0.0 {
+            alphas.iter().map(|a| a / total).collect()
+        } else {
+            vec![1.0 / alphas.len() as f64; alphas.len()]
+        };
+        Solution {
+            centroids,
+            weights,
+            objective,
+        }
+    }
+
+    /// Step 1: `argmax_c ⟨a(c)/‖a‖, r⟩` over the box.
+    ///
+    /// The objective is highly multimodal (a sum of `2M` cosines), so a
+    /// plain multi-start descent wastes restarts in shallow basins. We
+    /// first *screen* `step1_candidates` random box points with the cheap
+    /// gradient-free correlation, then run projected L-BFGS from the
+    /// `step1_restarts` best screens (see EXPERIMENTS.md §Calibration for
+    /// the measured effect).
+    fn step1_pick(&self, residual: &[f64], rng: &mut Rng) -> Vec<f64> {
+        let n = self.op.dim();
+        let bounds = Bounds::boxed(&self.lo, &self.hi);
+        let mut lb = LbfgsParams::default();
+        lb.max_iters = self.params.step1_iters;
+        lb.pg_tol = 1e-8;
+
+        // Screening pass.
+        let n_cand = self.params.step1_candidates.max(self.params.step1_restarts).max(1);
+        let mut cands: Vec<(f64, Vec<f64>)> = (0..n_cand)
+            .map(|_| {
+                let c: Vec<f64> = (0..n)
+                    .map(|i| rng.uniform(self.lo[i], self.hi[i]))
+                    .collect();
+                let score = -dot(&self.op.atom(&c), residual);
+                (score, c)
+            })
+            .collect();
+        cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        cands.truncate(self.params.step1_restarts.max(1));
+
+        let mut best_x: Option<Vec<f64>> = None;
+        let mut best_f = f64::INFINITY;
+        for (_, x0) in cands {
+            let res = lbfgsb(
+                |c, g| {
+                    // f(c) = −⟨a(c), r⟩; gradient via the fused JᵀV kernel.
+                    let a = self.op.atom_and_jtv(c, residual, g);
+                    for gi in g.iter_mut() {
+                        *gi = -*gi;
+                    }
+                    -dot(&a, residual)
+                },
+                &x0,
+                &bounds,
+                &lb,
+            );
+            if res.f < best_f {
+                best_f = res.f;
+                best_x = Some(res.x);
+            }
+        }
+        best_x.expect("at least one restart")
+    }
+
+    /// Steps 3/4: NNLS of `z` on the atoms of `centroids`, columns scaled
+    /// by `col_scale` (use `1/atom_norm` for normalized atoms).
+    fn project_weights(&self, z: &[f64], centroids: &Mat, col_scale: f64) -> Vec<f64> {
+        let kc = centroids.rows();
+        let rows = self.op.sketch_len();
+        let mut a = Mat::zeros(rows, kc);
+        for k in 0..kc {
+            let atom = self.op.atom(centroids.row(k));
+            for (r, &v) in atom.iter().enumerate() {
+                a.set(r, k, v * col_scale);
+            }
+        }
+        nnls(&a, z)
+    }
+
+    /// Step 5: joint minimization of `‖z − Σ α_k a(c_k)‖²` over the packed
+    /// variable `[c_1 … c_Kc, α]` with box bounds on centroids, `α ≥ 0`.
+    fn step5_refine(&self, z: &[f64], centroids: &mut Mat, alphas: &mut Vec<f64>, iters: usize) {
+        let kc = centroids.rows();
+        let n = self.op.dim();
+        let dim = kc * n + kc;
+
+        // Pack.
+        let mut x0 = Vec::with_capacity(dim);
+        for k in 0..kc {
+            x0.extend_from_slice(centroids.row(k));
+        }
+        x0.extend_from_slice(alphas);
+
+        // Bounds: per-centroid box, then α ≥ 0.
+        let mut lo = Vec::with_capacity(dim);
+        let mut hi = Vec::with_capacity(dim);
+        for _ in 0..kc {
+            lo.extend_from_slice(&self.lo);
+            hi.extend_from_slice(&self.hi);
+        }
+        let bounds = Bounds {
+            lo: lo
+                .into_iter()
+                .map(Some)
+                .chain(std::iter::repeat(Some(0.0)).take(kc))
+                .collect(),
+            hi: hi
+                .into_iter()
+                .map(Some)
+                .chain(std::iter::repeat(None).take(kc))
+                .collect(),
+        };
+
+        let mut lb = LbfgsParams::default();
+        lb.max_iters = iters;
+        lb.pg_tol = 1e-9;
+
+        let sketch_len = self.op.sketch_len();
+        let mut atoms = vec![vec![0.0; sketch_len]; kc];
+        let mut res = lbfgsb(
+            |x, g| {
+                let (cs, al) = x.split_at(kc * n);
+                // Model u = Σ α_k a(c_k); residual e = z − u.
+                let mut u = vec![0.0; sketch_len];
+                for k in 0..kc {
+                    atoms[k] = self.op.atom(&cs[k * n..(k + 1) * n]);
+                    axpy(al[k], &atoms[k], &mut u);
+                }
+                let e = sub(z, &u);
+                // ∂F/∂c_k = −2 α_k J_kᵀ e ; ∂F/∂α_k = −2 ⟨a_k, e⟩.
+                // JᵀV comes trig-free from the atoms computed above.
+                let mut jte = vec![0.0; n];
+                for k in 0..kc {
+                    self.op.jtv_from_atom(&atoms[k], &e, &mut jte);
+                    for (gi, &ji) in g[k * n..(k + 1) * n].iter_mut().zip(&jte) {
+                        *gi = -2.0 * al[k] * ji;
+                    }
+                    g[kc * n + k] = -2.0 * dot(&atoms[k], &e);
+                }
+                dot(&e, &e)
+            },
+            &x0,
+            &bounds,
+            &lb,
+        );
+
+        // Unpack (keep only if it improved — L-BFGS is monotone, so it did).
+        let (cs, al) = res.x.split_at_mut(kc * n);
+        for k in 0..kc {
+            centroids.row_mut(k).copy_from_slice(&cs[k * n..(k + 1) * n]);
+        }
+        alphas.copy_from_slice(al);
+    }
+}
+
+/// Run the decoder `replicates` times and keep the solution with the best
+/// sketch-matching objective — the paper's data-free model selection for
+/// compressive algorithms (Sec. 5: "we select the solution of CKM (resp.
+/// QCKM) minimizing (6) (resp. (10))").
+pub fn decode_best_of(
+    op: &SketchOperator,
+    k: usize,
+    z: &[f64],
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+    params: &ClOmprParams,
+    replicates: usize,
+    rng: &mut Rng,
+) -> Solution {
+    assert!(replicates >= 1);
+    let mut best: Option<Solution> = None;
+    for _ in 0..replicates {
+        let sol = ClOmpr::new(op, k)
+            .with_bounds(lo.clone(), hi.clone())
+            .with_params(params.clone())
+            .run(z, rng);
+        if best.as_ref().map_or(true, |b| sol.objective < b.objective) {
+            best = Some(sol);
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests;

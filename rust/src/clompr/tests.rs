@@ -1,0 +1,185 @@
+//! Decoder tests: exact recovery of Dirac mixtures from their own sketch,
+//! end-to-end CKM and QCKM on separable Gaussian mixtures.
+
+use super::*;
+use crate::frequency::{DrawnFrequencies, FrequencyLaw};
+use crate::metrics::sse;
+use crate::signature::{Cosine, UniversalQuantizer};
+use std::sync::Arc;
+
+/// Match decoded centroids to true ones greedily; returns max distance.
+fn match_centroids(found: &Mat, truth: &Mat) -> f64 {
+    let k = truth.rows();
+    assert_eq!(found.rows(), k);
+    let mut used = vec![false; k];
+    let mut worst: f64 = 0.0;
+    for t in 0..k {
+        let mut best = f64::INFINITY;
+        let mut best_j = 0;
+        for j in 0..k {
+            if !used[j] {
+                let d = crate::linalg::sq_dist(found.row(j), truth.row(t));
+                if d < best {
+                    best = d;
+                    best_j = j;
+                }
+            }
+        }
+        used[best_j] = true;
+        worst = worst.max(best.sqrt());
+    }
+    worst
+}
+
+fn dirac_mixture_op(signature: Arc<dyn crate::signature::Signature>, seed: u64) -> SketchOperator {
+    let mut rng = Rng::new(seed);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, 2, 150, 1.0, &mut rng);
+    SketchOperator::new(freqs, signature)
+}
+
+#[test]
+fn recovers_dirac_mixture_from_cosine_sketch() {
+    // The exactly-representable case: P is itself a 2-Dirac mixture and the
+    // sketch is its first-harmonic image (cosine signature, A_f = A_{f1}).
+    let op = dirac_mixture_op(Arc::new(Cosine), 42);
+    let truth = Mat::from_vec(2, 2, vec![1.5, -0.5, -1.0, 1.0]);
+    let weights = [0.4, 0.6];
+    let z = op.mixture_sketch(&truth, &weights);
+
+    let mut rng = Rng::new(7);
+    let sol = ClOmpr::new(&op, 2)
+        .with_bounds(vec![-3.0, -3.0], vec![3.0, 3.0])
+        .run(&z, &mut rng);
+
+    assert_eq!(sol.centroids.rows(), 2);
+    let err = match_centroids(&sol.centroids, &truth);
+    assert!(err < 0.05, "centroid error {err}");
+    assert!(sol.objective < 0.5, "objective {}", sol.objective);
+    // Weights ≈ (0.4, 0.6) up to the centroid matching order.
+    let mut w = sol.weights.clone();
+    w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!((w[0] - 0.4).abs() < 0.05 && (w[1] - 0.6).abs() < 0.05, "{w:?}");
+    assert!((sol.weights.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+}
+
+fn gaussian_mixture_2d(rng: &mut Rng, n: usize) -> (Mat, Mat) {
+    // 3 clusters at (±2, 0), (0, 2.5), std 0.35.
+    let truth = Mat::from_vec(3, 2, vec![-2.0, 0.0, 2.0, 0.0, 0.0, 2.5]);
+    let mut x = Mat::zeros(0, 2);
+    for i in 0..n {
+        let k = i % 3;
+        x.push_row(&[
+            truth.get(k, 0) + 0.35 * rng.gaussian(),
+            truth.get(k, 1) + 0.35 * rng.gaussian(),
+        ]);
+    }
+    (x, truth)
+}
+
+#[test]
+fn ckm_end_to_end_on_gaussian_mixture() {
+    let mut rng = Rng::new(100);
+    let (x, truth) = gaussian_mixture_2d(&mut rng, 3000);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, 2, 120, 0.8, &mut rng);
+    let op = SketchOperator::new(freqs, Arc::new(Cosine));
+    let z = op.sketch_dataset(&x);
+    let (lo, hi) = crate::linalg::bounding_box(&x);
+    let sol = ClOmpr::new(&op, 3).with_bounds(lo, hi).run(&z, &mut rng);
+    let err = match_centroids(&sol.centroids, &truth);
+    assert!(err < 0.25, "CKM centroid error {err}");
+}
+
+#[test]
+fn qckm_end_to_end_on_gaussian_mixture() {
+    let mut rng = Rng::new(200);
+    let (x, truth) = gaussian_mixture_2d(&mut rng, 3000);
+    // QCKM needs the dithering; use ~25% more frequencies than CKM (paper).
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, 2, 150, 0.8, &mut rng);
+    let op = SketchOperator::new(freqs, Arc::new(UniversalQuantizer));
+    let z = op.sketch_dataset(&x);
+    let (lo, hi) = crate::linalg::bounding_box(&x);
+    let sol = ClOmpr::new(&op, 3).with_bounds(lo, hi).run(&z, &mut rng);
+    let err = match_centroids(&sol.centroids, &truth);
+    assert!(err < 0.3, "QCKM centroid error {err}");
+
+    // And the SSE competitive with k-means (the paper's success criterion).
+    let km = crate::kmeans::kmeans(
+        &x,
+        3,
+        &crate::kmeans::KMeansParams {
+            replicates: 5,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let s = sse(&x, &sol.centroids);
+    assert!(
+        crate::metrics::is_success(s, km.sse),
+        "QCKM SSE {s} vs kmeans {}",
+        km.sse
+    );
+}
+
+#[test]
+fn decode_best_of_improves_objective() {
+    let op = dirac_mixture_op(Arc::new(UniversalQuantizer), 5);
+    let truth = Mat::from_vec(2, 2, vec![1.0, 1.0, -1.0, -1.0]);
+    let z = op.mixture_sketch(&truth, &[0.5, 0.5]);
+    let params = ClOmprParams::default();
+    let mut r1 = Rng::new(9);
+    let s1 = ClOmpr::new(&op, 2)
+        .with_bounds(vec![-2.0; 2], vec![2.0; 2])
+        .run(&z, &mut r1);
+    let mut r5 = Rng::new(9);
+    let s5 = decode_best_of(
+        &op,
+        2,
+        &z,
+        vec![-2.0; 2],
+        vec![2.0; 2],
+        &params,
+        5,
+        &mut r5,
+    );
+    assert!(s5.objective <= s1.objective + 1e-9);
+}
+
+#[test]
+fn k_equals_one_mean_recovery() {
+    // K = 1: the decoder must find the single Dirac location.
+    let op = dirac_mixture_op(Arc::new(Cosine), 11);
+    let truth = Mat::from_vec(1, 2, vec![0.7, -1.2]);
+    let z = op.mixture_sketch(&truth, &[1.0]);
+    let mut rng = Rng::new(3);
+    let sol = ClOmpr::new(&op, 1)
+        .with_bounds(vec![-3.0; 2], vec![3.0; 2])
+        .run(&z, &mut rng);
+    let err = match_centroids(&sol.centroids, &truth);
+    assert!(err < 0.05, "K=1 error {err}");
+    assert_eq!(sol.weights, vec![1.0]);
+}
+
+#[test]
+fn centroids_stay_in_box() {
+    let op = dirac_mixture_op(Arc::new(UniversalQuantizer), 17);
+    // Truth outside the search box: solution must clip to the box.
+    let truth = Mat::from_vec(1, 2, vec![5.0, 5.0]);
+    let z = op.mixture_sketch(&truth, &[1.0]);
+    let mut rng = Rng::new(1);
+    let sol = ClOmpr::new(&op, 1)
+        .with_bounds(vec![-1.0; 2], vec![1.0; 2])
+        .run(&z, &mut rng);
+    for k in 0..sol.centroids.rows() {
+        for &v in sol.centroids.row(k) {
+            assert!((-1.0..=1.0).contains(&v), "escaped the box: {v}");
+        }
+    }
+}
+
+#[test]
+#[should_panic]
+fn rejects_wrong_sketch_length() {
+    let op = dirac_mixture_op(Arc::new(Cosine), 0);
+    let mut rng = Rng::new(0);
+    let _ = ClOmpr::new(&op, 2).run(&[0.0; 10], &mut rng);
+}

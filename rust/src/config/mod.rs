@@ -1,0 +1,18 @@
+//! Configuration: a TOML-subset parser plus the typed job configs.
+//!
+//! The environment vendors no `serde`/`toml`, so this module implements the
+//! small slice of TOML the launcher needs: `[section]` headers, `key =
+//! value` pairs with bool / integer / float / quoted-string values, `#`
+//! comments, and nothing else (no arrays-of-tables, no dates, no nesting).
+//!
+//! Typed views ([`JobConfig`] and friends) resolve defaults and validate
+//! ranges so the CLI and the experiment harnesses share one source of truth.
+
+mod parser;
+mod types;
+
+pub use parser::{parse_toml, TomlDoc, TomlError, TomlValue};
+pub use types::{DecodeConfig, JobConfig, Method, SketchConfig};
+
+#[cfg(test)]
+mod tests;

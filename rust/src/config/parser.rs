@@ -1,0 +1,189 @@
+//! The TOML-subset parser.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+impl TomlValue {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`m = 1000`).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with a 1-based line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// A parsed document: `section → key → value`. Top-level keys live in the
+/// unnamed section `""`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Look up `key` in `section` (`""` for top level).
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|s| s.keys().map(|k| k.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    // Typed getters with defaults — the common call pattern.
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn get_int(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn get_float(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+}
+
+fn err(line: usize, message: impl Into<String>) -> TomlError {
+    TomlError {
+        line,
+        message: message.into(),
+    }
+}
+
+fn parse_value(raw: &str, line: usize) -> Result<TomlValue, TomlError> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(err(line, "missing value"));
+    }
+    if raw == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            return Err(err(line, "unterminated string"));
+        };
+        if inner.contains('"') {
+            return Err(err(line, "embedded quotes are not supported"));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    // Numbers: int first, then float.
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(line, format!("cannot parse value '{raw}'")))
+}
+
+fn valid_key(k: &str) -> bool {
+    !k.is_empty()
+        && k.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+}
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut current = String::new();
+    doc.sections.entry(current.clone()).or_default();
+    for (i, raw_line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        // Strip comments (naive: '#' inside strings is not supported).
+        let line = match raw_line.find('#') {
+            Some(pos) if !raw_line[..pos].contains('"') => &raw_line[..pos],
+            _ => raw_line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let Some(name) = inner.strip_suffix(']') else {
+                return Err(err(lineno, "unterminated section header"));
+            };
+            let name = name.trim();
+            if !valid_key(name) {
+                return Err(err(lineno, format!("invalid section name '{name}'")));
+            }
+            current = name.to_string();
+            doc.sections.entry(current.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(err(lineno, format!("expected 'key = value', got '{line}'")));
+        };
+        let key = line[..eq].trim();
+        if !valid_key(key) {
+            return Err(err(lineno, format!("invalid key '{key}'")));
+        }
+        let value = parse_value(&line[eq + 1..], lineno)?;
+        let section = doc.sections.get_mut(&current).unwrap();
+        if section.insert(key.to_string(), value).is_some() {
+            return Err(err(lineno, format!("duplicate key '{key}'")));
+        }
+    }
+    Ok(doc)
+}

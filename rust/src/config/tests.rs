@@ -1,0 +1,127 @@
+//! Config parser + typed-config tests.
+
+use super::*;
+
+#[test]
+fn parses_sections_scalars_and_comments() {
+    let doc = parse_toml(
+        r#"
+# a job
+seed = 42
+[sketch]
+num_frequencies = 500   # half the default
+method = "qckm"
+sigma = 1.5
+dither = true
+[decode]
+k = 10
+"#,
+    )
+    .unwrap();
+    assert_eq!(doc.get("", "seed"), Some(&TomlValue::Int(42)));
+    assert_eq!(doc.get("sketch", "num_frequencies"), Some(&TomlValue::Int(500)));
+    assert_eq!(doc.get("sketch", "method"), Some(&TomlValue::Str("qckm".into())));
+    assert_eq!(doc.get("sketch", "sigma"), Some(&TomlValue::Float(1.5)));
+    assert_eq!(doc.get("sketch", "dither"), Some(&TomlValue::Bool(true)));
+    assert_eq!(doc.get("decode", "k"), Some(&TomlValue::Int(10)));
+    assert_eq!(doc.get("decode", "missing"), None);
+    assert!(doc.sections().any(|s| s == "sketch"));
+    assert_eq!(doc.keys("decode"), vec!["k"]);
+}
+
+#[test]
+fn typed_getters_and_defaults() {
+    let doc = parse_toml("x = 3\ny = 2.5\nz = \"s\"\nw = false\n").unwrap();
+    assert_eq!(doc.get_int("", "x", 0), 3);
+    assert_eq!(doc.get_float("", "x", 0.0), 3.0); // int coerces to float
+    assert_eq!(doc.get_float("", "y", 0.0), 2.5);
+    assert_eq!(doc.get_str("", "z", "d"), "s");
+    assert!(!doc.get_bool("", "w", true));
+    assert_eq!(doc.get_int("", "nope", 7), 7);
+    // Wrong-type access falls back to default.
+    assert_eq!(doc.get_int("", "z", 9), 9);
+}
+
+#[test]
+fn parse_errors_carry_line_numbers() {
+    for (text, line) in [
+        ("a = \n", 1),
+        ("[sec\nb = 1\n", 1),
+        ("a = 1\na = 2\n", 2),
+        ("novalue\n", 1),
+        ("a = \"unterminated\n", 1),
+        ("!bad = 1\n", 1),
+        ("a = what?\n", 1),
+    ] {
+        let e = parse_toml(text).unwrap_err();
+        assert_eq!(e.line, line, "for {text:?}: {e}");
+    }
+}
+
+#[test]
+fn job_config_from_toml_full() {
+    let cfg = JobConfig::from_toml_str(
+        r#"
+seed = 7
+[sketch]
+num_frequencies = 250
+method = "ckm"
+law = "gaussian"
+sigma = 2.0
+[decode]
+k = 4
+replicates = 3
+[pipeline]
+workers = 2
+batch_size = 16
+queue_capacity = 8
+wire = "dense"
+"#,
+    )
+    .unwrap();
+    assert_eq!(cfg.seed, 7);
+    assert_eq!(cfg.sketch.num_frequencies, 250);
+    assert_eq!(cfg.sketch.method, Method::Ckm);
+    assert_eq!(cfg.sketch.law, crate::frequency::FrequencyLaw::Gaussian);
+    assert!(matches!(
+        cfg.sketch.sigma,
+        crate::frequency::SigmaHeuristic::Fixed(s) if s == 2.0
+    ));
+    assert_eq!(cfg.decode.k, 4);
+    assert_eq!(cfg.decode.replicates, 3);
+    assert_eq!(cfg.pipeline.workers, 2);
+    assert_eq!(cfg.pipeline.wire, crate::coordinator::WireFormat::DenseF64);
+}
+
+#[test]
+fn job_config_defaults_when_empty() {
+    let cfg = JobConfig::from_toml_str("").unwrap();
+    assert_eq!(cfg.sketch.num_frequencies, 1000);
+    assert_eq!(cfg.sketch.method, Method::Qckm);
+    assert_eq!(cfg.decode.k, 10);
+    assert_eq!(cfg.pipeline.wire, crate::coordinator::WireFormat::PackedBits);
+}
+
+#[test]
+fn job_config_validation_errors() {
+    assert!(JobConfig::from_toml_str("[sketch]\nnum_frequencies = 0\n").is_err());
+    assert!(JobConfig::from_toml_str("[sketch]\nmethod = \"nope\"\n").is_err());
+    assert!(JobConfig::from_toml_str("[sketch]\nlaw = \"cauchy\"\n").is_err());
+    assert!(JobConfig::from_toml_str("[sketch]\nsigma = -1.0\n").is_err());
+    assert!(JobConfig::from_toml_str("[decode]\nk = 0\n").is_err());
+    assert!(JobConfig::from_toml_str("[decode]\nreplicates = 0\n").is_err());
+    assert!(JobConfig::from_toml_str("[pipeline]\nwire = \"morse\"\n").is_err());
+    assert!(JobConfig::from_toml_str("[pipeline]\nworkers = 0\n").is_err());
+}
+
+#[test]
+fn method_signatures_and_dithering() {
+    assert_eq!(Method::parse("QCKM").unwrap(), Method::Qckm);
+    assert_eq!(Method::parse("tri").unwrap(), Method::Triangle);
+    assert!(Method::parse("other").is_err());
+    assert_eq!(Method::Qckm.signature().name(), "universal-1bit");
+    assert_eq!(Method::Ckm.signature().name(), "cosine");
+    assert!(!Method::Ckm.dithered());
+    assert!(Method::Qckm.dithered());
+    assert_eq!(Method::Triangle.name(), "triangle");
+}

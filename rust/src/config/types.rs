@@ -1,0 +1,195 @@
+//! Typed job configuration resolved from a [`TomlDoc`] + CLI overrides.
+
+use super::parser::TomlDoc;
+use crate::frequency::{FrequencyLaw, SigmaHeuristic};
+use anyhow::{bail, Result};
+
+/// Which compressive method to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Classical CKM: cosine (complex-exponential) full-precision sketch.
+    Ckm,
+    /// The paper's QCKM: dithered 1-bit universal-quantized sketch.
+    Qckm,
+    /// Ablation: dithered triangle-wave sketch.
+    Triangle,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "ckm" => Method::Ckm,
+            "qckm" => Method::Qckm,
+            "triangle" | "tri" => Method::Triangle,
+            other => bail!("unknown method '{other}' (expected ckm|qckm|triangle)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Ckm => "ckm",
+            Method::Qckm => "qckm",
+            Method::Triangle => "triangle",
+        }
+    }
+
+    /// The signature function this method encodes with.
+    pub fn signature(self) -> std::sync::Arc<dyn crate::signature::Signature> {
+        use crate::signature::{Cosine, Triangle, UniversalQuantizer};
+        match self {
+            Method::Ckm => std::sync::Arc::new(Cosine),
+            Method::Qckm => std::sync::Arc::new(UniversalQuantizer),
+            Method::Triangle => std::sync::Arc::new(Triangle),
+        }
+    }
+
+    /// CKM historically runs undithered (the complex exponential needs no
+    /// dither); every other signature requires the dithering of Prop. 1.
+    pub fn dithered(self) -> bool {
+        !matches!(self, Method::Ckm)
+    }
+}
+
+/// Sketch-side configuration (`[sketch]` section).
+#[derive(Clone, Debug)]
+pub struct SketchConfig {
+    /// Number of frequencies M (the sketch has 2M real slots).
+    pub num_frequencies: usize,
+    pub law: FrequencyLaw,
+    pub sigma: SigmaHeuristic,
+    pub method: Method,
+}
+
+impl Default for SketchConfig {
+    fn default() -> Self {
+        Self {
+            num_frequencies: 1000,
+            law: FrequencyLaw::AdaptedRadius,
+            sigma: SigmaHeuristic::default(),
+            method: Method::Qckm,
+        }
+    }
+}
+
+/// Decode-side configuration (`[decode]` section).
+#[derive(Clone, Debug)]
+pub struct DecodeConfig {
+    pub k: usize,
+    pub replicates: usize,
+    pub params: crate::clompr::ClOmprParams,
+}
+
+impl Default for DecodeConfig {
+    fn default() -> Self {
+        Self {
+            k: 10,
+            replicates: 1,
+            params: crate::clompr::ClOmprParams::default(),
+        }
+    }
+}
+
+/// A full clustering job: sketch + decode + pipeline settings + seed.
+#[derive(Clone, Debug)]
+pub struct JobConfig {
+    pub sketch: SketchConfig,
+    pub decode: DecodeConfig,
+    pub pipeline: crate::coordinator::PipelineConfig,
+    pub seed: u64,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        Self {
+            sketch: SketchConfig::default(),
+            decode: DecodeConfig::default(),
+            pipeline: crate::coordinator::PipelineConfig::default(),
+            seed: 0,
+        }
+    }
+}
+
+impl JobConfig {
+    /// Resolve a job config from a parsed TOML doc, validating ranges.
+    pub fn from_toml(doc: &TomlDoc) -> Result<JobConfig> {
+        let mut cfg = JobConfig::default();
+
+        // [sketch]
+        let m = doc.get_int("sketch", "num_frequencies", cfg.sketch.num_frequencies as i64);
+        if m < 1 {
+            bail!("sketch.num_frequencies must be >= 1, got {m}");
+        }
+        cfg.sketch.num_frequencies = m as usize;
+        cfg.sketch.method = Method::parse(doc.get_str("sketch", "method", cfg.sketch.method.name()))?;
+        cfg.sketch.law = match doc.get_str("sketch", "law", "adapted-radius") {
+            "adapted-radius" => FrequencyLaw::AdaptedRadius,
+            "gaussian" => FrequencyLaw::Gaussian,
+            other => bail!("unknown frequency law '{other}'"),
+        };
+        if let Some(v) = doc.get("sketch", "sigma") {
+            let s = v
+                .as_float()
+                .ok_or_else(|| anyhow::anyhow!("sketch.sigma must be a number"))?;
+            if s <= 0.0 {
+                bail!("sketch.sigma must be positive, got {s}");
+            }
+            cfg.sketch.sigma = SigmaHeuristic::Fixed(s);
+        } else {
+            let sub = doc.get_int("sketch", "sigma_subsample", 512);
+            let q = doc.get_float("sketch", "sigma_quantile", 0.12);
+            if !(0.0..=1.0).contains(&q) {
+                bail!("sketch.sigma_quantile must be in [0,1], got {q}");
+            }
+            cfg.sketch.sigma = SigmaHeuristic::PairwiseQuantile {
+                subsample: sub.max(2) as usize,
+                quantile: q,
+            };
+        }
+
+        // [decode]
+        let k = doc.get_int("decode", "k", cfg.decode.k as i64);
+        if k < 1 {
+            bail!("decode.k must be >= 1, got {k}");
+        }
+        cfg.decode.k = k as usize;
+        let reps = doc.get_int("decode", "replicates", 1);
+        if reps < 1 {
+            bail!("decode.replicates must be >= 1, got {reps}");
+        }
+        cfg.decode.replicates = reps as usize;
+        cfg.decode.params.step1_restarts =
+            doc.get_int("decode", "step1_restarts", cfg.decode.params.step1_restarts as i64) as usize;
+        cfg.decode.params.step5_iters =
+            doc.get_int("decode", "step5_iters", cfg.decode.params.step5_iters as i64) as usize;
+        cfg.decode.params.step5_final_iters = doc.get_int(
+            "decode",
+            "step5_final_iters",
+            cfg.decode.params.step5_final_iters as i64,
+        ) as usize;
+
+        // [pipeline]
+        let workers = doc.get_int("pipeline", "workers", cfg.pipeline.workers as i64);
+        if workers < 1 {
+            bail!("pipeline.workers must be >= 1");
+        }
+        cfg.pipeline.workers = workers as usize;
+        cfg.pipeline.batch_size =
+            doc.get_int("pipeline", "batch_size", cfg.pipeline.batch_size as i64).max(1) as usize;
+        cfg.pipeline.queue_capacity =
+            doc.get_int("pipeline", "queue_capacity", cfg.pipeline.queue_capacity as i64).max(1) as usize;
+        cfg.pipeline.wire = match doc.get_str("pipeline", "wire", "bits") {
+            "bits" => crate::coordinator::WireFormat::PackedBits,
+            "dense" => crate::coordinator::WireFormat::DenseF64,
+            other => bail!("unknown wire format '{other}' (bits|dense)"),
+        };
+
+        cfg.seed = doc.get_int("", "seed", 0) as u64;
+        Ok(cfg)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml_str(text: &str) -> Result<JobConfig> {
+        let doc = super::parse_toml(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+        Self::from_toml(&doc)
+    }
+}

@@ -1,0 +1,168 @@
+//! A bounded MPMC channel with blocking backpressure, built on
+//! `Mutex` + `Condvar` (the environment has no tokio/crossbeam).
+//!
+//! Semantics match what the streaming pipeline needs:
+//! * `send` blocks while the queue is full — natural backpressure from the
+//!   aggregator to the sensor workers;
+//! * `recv` blocks while empty, and returns `None` once every sender is
+//!   dropped *and* the queue is drained;
+//! * instrumented: high-water mark and blocked-send count feed the
+//!   pipeline's backpressure report.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+    senders: AtomicU64,
+    blocked_sends: AtomicU64,
+    high_water: AtomicU64,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Sending half. Cloneable; the channel closes when all senders drop.
+pub struct Sender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Receiving half. Cloneable (MPMC).
+pub struct Receiver<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Create a bounded channel of the given capacity (≥ 1).
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(capacity >= 1, "channel capacity must be >= 1");
+    let inner = Arc::new(Inner {
+        queue: Mutex::new(State {
+            items: VecDeque::with_capacity(capacity),
+            closed: false,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        capacity,
+        senders: AtomicU64::new(1),
+        blocked_sends: AtomicU64::new(0),
+        high_water: AtomicU64::new(0),
+    });
+    (
+        Sender {
+            inner: inner.clone(),
+        },
+        Receiver { inner },
+    )
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.inner.senders.fetch_add(1, Ordering::SeqCst);
+        Sender {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        if self.inner.senders.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Last sender: close and wake all receivers.
+            let mut st = self.inner.queue.lock().unwrap();
+            st.closed = true;
+            drop(st);
+            self.inner.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Receiver {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+/// Error returned when sending on a channel whose receivers are gone.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError;
+
+impl<T> Sender<T> {
+    /// Blocking send with backpressure. Returns `Err` if the channel was
+    /// explicitly closed (receiver side shut down).
+    pub fn send(&self, item: T) -> Result<(), SendError> {
+        let mut st = self.inner.queue.lock().unwrap();
+        if st.items.len() >= self.inner.capacity {
+            self.inner.blocked_sends.fetch_add(1, Ordering::Relaxed);
+        }
+        while st.items.len() >= self.inner.capacity {
+            if st.closed {
+                return Err(SendError);
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(SendError);
+        }
+        st.items.push_back(item);
+        let depth = st.items.len() as u64;
+        self.inner.high_water.fetch_max(depth, Ordering::Relaxed);
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Times a sender blocked on a full queue (backpressure events).
+    pub fn blocked_sends(&self) -> u64 {
+        self.inner.blocked_sends.load(Ordering::Relaxed)
+    }
+
+    /// Deepest the queue ever got.
+    pub fn high_water(&self) -> u64 {
+        self.inner.high_water.load(Ordering::Relaxed)
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Times any sender blocked on a full queue (backpressure events).
+    pub fn blocked_sends(&self) -> u64 {
+        self.inner.blocked_sends.load(Ordering::Relaxed)
+    }
+
+    /// Deepest the queue ever got.
+    pub fn high_water(&self) -> u64 {
+        self.inner.high_water.load(Ordering::Relaxed)
+    }
+
+    /// Blocking receive; `None` when the channel is closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close from the receiving side: subsequent/blocked sends fail fast.
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.inner.not_full.notify_all();
+        self.inner.not_empty.notify_all();
+    }
+}

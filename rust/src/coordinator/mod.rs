@@ -1,0 +1,32 @@
+//! Layer-3 streaming acquisition coordinator.
+//!
+//! Simulates the paper's Fig. 1 deployment: a *cloud of low-power 1-bit
+//! sensors* acquires the dataset — each example leaves its sensor only as an
+//! `m`-bit universal-quantized sketch contribution — and a leader pools the
+//! contributions into the linear dataset sketch, then decodes centroids with
+//! CL-OMPR. Nothing but sketch bits crosses the sensor→leader link.
+//!
+//! Topology (threads + bounded channels, backpressure by blocking):
+//!
+//! ```text
+//!  sensor worker 0 ─┐ BitBatch
+//!  sensor worker 1 ─┼──▶ bounded channel ──▶ aggregator ──▶ z_X ─▶ CL-OMPR
+//!       …           │     (capacity Q,         (BitAggregator
+//!  sensor worker W ─┘      blocking send)        or PooledSketch)
+//! ```
+//!
+//! Two wire formats are supported per [`WireFormat`]: the QCKM 1-bit packed
+//! payload (`2M` bits/example) and the full-precision CKM payload
+//! (`2M` f64/example) — the bench `pipeline_bench` measures the 64×
+//! acquisition-bandwidth gap between them.
+
+mod channel;
+mod pipeline;
+
+pub use channel::{bounded, Receiver, SendError, Sender};
+pub use pipeline::{
+    run_pipeline, PipelineConfig, PipelineReport, SampleSource, WireFormat,
+};
+
+#[cfg(test)]
+mod tests;

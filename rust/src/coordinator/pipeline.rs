@@ -1,0 +1,262 @@
+//! The sensor → aggregator streaming pipeline.
+
+use super::channel::{bounded, Sender};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::sketch::{BitAggregator, BitSketch, PooledSketch, SketchOperator};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What each sensor puts on the wire for a batch of examples.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFormat {
+    /// QCKM acquisition: `2M` *bits* per example, packed (Fig. 1d).
+    PackedBits,
+    /// CKM acquisition: `2M` f64 per example (full-precision signatures).
+    DenseF64,
+}
+
+/// Where sensor workers get their samples.
+#[derive(Clone)]
+pub enum SampleSource {
+    /// A shared in-memory dataset, sharded row-wise across workers.
+    Shared(Arc<Mat>),
+    /// Pure sensor simulation: each worker synthesizes its own stream with
+    /// a deterministic per-worker RNG substream. `make` fills one sample.
+    Synthetic {
+        total: usize,
+        dim: usize,
+        make: Arc<dyn Fn(&mut Rng, &mut [f64]) + Send + Sync>,
+    },
+}
+
+/// Pipeline knobs.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Number of sensor worker threads.
+    pub workers: usize,
+    /// Examples per wire message.
+    pub batch_size: usize,
+    /// Bounded-queue capacity (messages) between sensors and aggregator.
+    pub queue_capacity: usize,
+    /// Wire format (1-bit QCKM vs full-precision CKM).
+    pub wire: WireFormat,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            batch_size: 64,
+            queue_capacity: 16,
+            wire: WireFormat::PackedBits,
+        }
+    }
+}
+
+/// What the pipeline produced, plus its runtime behaviour.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    /// The pooled dataset sketch `z_X` (length `2M`).
+    pub sketch: Vec<f64>,
+    /// Examples acquired.
+    pub samples: u64,
+    /// Bytes that crossed the sensor→aggregator boundary (payload only).
+    pub payload_bytes: u64,
+    /// Wall-clock duration of the acquisition.
+    pub elapsed_secs: f64,
+    /// Number of sends that hit a full queue (backpressure events).
+    pub blocked_sends: u64,
+    /// Deepest queue occupancy observed.
+    pub queue_high_water: u64,
+    /// Samples produced by each worker.
+    pub per_worker: Vec<u64>,
+}
+
+impl PipelineReport {
+    pub fn throughput(&self) -> f64 {
+        self.samples as f64 / self.elapsed_secs.max(1e-12)
+    }
+}
+
+enum Payload {
+    Bits(Vec<BitSketch>),
+    /// Flattened `count × 2M` full-precision contributions.
+    Dense { data: Vec<f64>, count: u64 },
+}
+
+impl Payload {
+    fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::Bits(v) => v.iter().map(|b| b.payload_bytes() as u64).sum(),
+            Payload::Dense { data, .. } => (data.len() * 8) as u64,
+        }
+    }
+}
+
+/// Run the full acquisition pipeline and return the pooled sketch + stats.
+///
+/// Deterministic given `seed` (worker substreams are derived from it), up to
+/// the order-insensitivity of pooling (sums commute).
+pub fn run_pipeline(
+    op: &SketchOperator,
+    source: &SampleSource,
+    config: &PipelineConfig,
+    seed: u64,
+) -> PipelineReport {
+    assert!(config.workers >= 1 && config.batch_size >= 1);
+    let sketch_len = op.sketch_len();
+    let start = Instant::now();
+    let (tx, rx) = bounded::<Payload>(config.queue_capacity);
+
+    let mut per_worker = vec![0u64; config.workers];
+    let mut payload_bytes = 0u64;
+    let mut bits_agg = BitAggregator::new(sketch_len);
+    let mut dense_pool = PooledSketch::new(sketch_len);
+
+    std::thread::scope(|scope| {
+        // ---- Sensor workers.
+        for w in 0..config.workers {
+            let tx = tx.clone();
+            let op = op.clone();
+            let source = source.clone();
+            let wire = config.wire;
+            let batch = config.batch_size;
+            scope.spawn(move || {
+                sensor_worker(&op, &source, wire, batch, w, config.workers, seed, tx);
+            });
+        }
+        drop(tx); // aggregator sees close once all workers finish
+
+        // ---- Aggregator (this thread).
+        while let Some(msg) = rx.recv() {
+            payload_bytes += msg.wire_bytes();
+            match msg {
+                Payload::Bits(contribs) => {
+                    for b in &contribs {
+                        bits_agg.add(b);
+                    }
+                }
+                Payload::Dense { data, count } => {
+                    for i in 0..count as usize {
+                        dense_pool.add(&data[i * sketch_len..(i + 1) * sketch_len]);
+                    }
+                }
+            }
+        }
+    });
+
+    // Merge whichever aggregators got data.
+    let mut total = PooledSketch::new(sketch_len);
+    if !bits_agg.is_empty() {
+        let (sum, count) = bits_agg.to_sum();
+        total.add_sum(&sum, count);
+    }
+    if !dense_pool.is_empty() {
+        total.merge(&dense_pool);
+    }
+    let samples = total.count();
+    // Per-worker sample counts are deterministic from the sharding rule.
+    for (w, c) in per_worker.iter_mut().enumerate() {
+        *c = planned_samples(source, w, config.workers) as u64;
+    }
+
+    PipelineReport {
+        sketch: total.mean(),
+        samples,
+        payload_bytes,
+        elapsed_secs: start.elapsed().as_secs_f64(),
+        blocked_sends: rx.blocked_sends(),
+        queue_high_water: rx.high_water(),
+        per_worker,
+    }
+}
+
+/// How many samples worker `w` of `workers` is responsible for.
+fn planned_samples(source: &SampleSource, w: usize, workers: usize) -> usize {
+    let total = match source {
+        SampleSource::Shared(m) => m.rows(),
+        SampleSource::Synthetic { total, .. } => *total,
+    };
+    let base = total / workers;
+    let extra = usize::from(w < total % workers);
+    base + extra
+}
+
+fn sensor_worker(
+    op: &SketchOperator,
+    source: &SampleSource,
+    wire: WireFormat,
+    batch: usize,
+    w: usize,
+    workers: usize,
+    seed: u64,
+    tx: Sender<Payload>,
+) {
+    let quota = planned_samples(source, w, workers);
+    if quota == 0 {
+        return;
+    }
+    let dim = op.dim();
+    let sketch_len = op.sketch_len();
+    // Worker-local RNG substream (only used by synthetic sources).
+    let mut rng = Rng::new(seed).substream(w as u64 + 1);
+
+    // Row-range shard for shared sources: contiguous blocks.
+    let (shard_start, shared): (usize, Option<&Arc<Mat>>) = match source {
+        SampleSource::Shared(m) => {
+            let total = m.rows();
+            let base = total / workers;
+            let extra = total % workers;
+            // Workers 0..extra get (base+1) rows.
+            let start = w * base + w.min(extra);
+            (start, Some(m))
+        }
+        SampleSource::Synthetic { .. } => (0, None),
+    };
+
+    let mut produced = 0usize;
+    let mut sample = vec![0.0; dim];
+    while produced < quota {
+        let b = batch.min(quota - produced);
+        let payload = match wire {
+            WireFormat::PackedBits => {
+                let mut contribs = Vec::with_capacity(b);
+                for i in 0..b {
+                    let x: &[f64] = match (&shared, source) {
+                        (Some(m), _) => m.row(shard_start + produced + i),
+                        (None, SampleSource::Synthetic { make, .. }) => {
+                            make(&mut rng, &mut sample);
+                            &sample
+                        }
+                        _ => unreachable!(),
+                    };
+                    contribs.push(op.encode_point_bits(x));
+                }
+                Payload::Bits(contribs)
+            }
+            WireFormat::DenseF64 => {
+                let mut data = Vec::with_capacity(b * sketch_len);
+                for i in 0..b {
+                    let x: &[f64] = match (&shared, source) {
+                        (Some(m), _) => m.row(shard_start + produced + i),
+                        (None, SampleSource::Synthetic { make, .. }) => {
+                            make(&mut rng, &mut sample);
+                            &sample
+                        }
+                        _ => unreachable!(),
+                    };
+                    data.extend_from_slice(&op.encode_point(x));
+                }
+                Payload::Dense {
+                    data,
+                    count: b as u64,
+                }
+            }
+        };
+        if tx.send(payload).is_err() {
+            return; // aggregator shut down
+        }
+        produced += b;
+    }
+}

@@ -1,0 +1,92 @@
+//! Dataset file I/O: headerless CSV and a raw little-endian f64 format.
+
+use crate::linalg::Mat;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Load a headerless numeric CSV (one sample per row).
+pub fn load_csv(path: &Path) -> Result<Mat> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = BufReader::new(file);
+    let mut data: Vec<f64> = Vec::new();
+    let mut cols = 0usize;
+    let mut rows = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let vals: Vec<f64> = trimmed
+            .split(',')
+            .map(|tok| {
+                tok.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("{}:{}: bad number '{tok}'", path.display(), lineno + 1))
+            })
+            .collect::<Result<_>>()?;
+        if cols == 0 {
+            cols = vals.len();
+        } else if vals.len() != cols {
+            bail!(
+                "{}:{}: expected {cols} columns, got {}",
+                path.display(),
+                lineno + 1,
+                vals.len()
+            );
+        }
+        data.extend(vals);
+        rows += 1;
+    }
+    if rows == 0 {
+        bail!("{}: empty dataset", path.display());
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Save as headerless CSV.
+pub fn save_csv(path: &Path, m: &Mat) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for r in 0..m.rows() {
+        let row: Vec<String> = m.row(r).iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Raw binary format: `u64 rows, u64 cols, rows*cols f64` all little-endian.
+pub fn save_f64_bin(path: &Path, m: &Mat) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(&(m.rows() as u64).to_le_bytes())?;
+    w.write_all(&(m.cols() as u64).to_le_bytes())?;
+    for &v in m.as_slice() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load the raw binary format written by [`save_f64_bin`].
+pub fn load_f64_bin(path: &Path) -> Result<Mat> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let rows = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let cols = u64::from_le_bytes(u64buf) as usize;
+    let count = rows
+        .checked_mul(cols)
+        .context("dataset dimensions overflow")?;
+    if count > (1 << 31) {
+        bail!("dataset too large: {rows}x{cols}");
+    }
+    let mut data = vec![0.0f64; count];
+    for v in data.iter_mut() {
+        r.read_exact(&mut u64buf)?;
+        *v = f64::from_le_bytes(u64buf);
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}

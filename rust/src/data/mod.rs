@@ -1,0 +1,20 @@
+//! Dataset generation and I/O.
+//!
+//! Provides the synthetic workloads of the paper's evaluation:
+//!
+//! * [`gaussian_mixture_pm1`] — the Fig. 2a setup: K isotropic Gaussians
+//!   with means `±(1,…,1)` (K = 2) or random in `{±1}^n` (general K) and
+//!   covariance `(n/20)·Id`, N samples drawn with uniform cluster weights.
+//! * [`spectral_embedding_like`] — the Fig. 3 substitute for the private
+//!   MNIST spectral-clustering features: K = 10 non-Gaussian, anisotropic,
+//!   partially overlapping clusters in ℝ¹⁰ (see DESIGN.md §Substitutions).
+//! * CSV/binary dataset I/O so the CLI can cluster user data.
+
+mod io;
+mod synth;
+
+pub use io::{load_csv, load_f64_bin, save_csv, save_f64_bin};
+pub use synth::{gaussian_mixture_pm1, spectral_embedding_like, LabeledData};
+
+#[cfg(test)]
+mod tests;

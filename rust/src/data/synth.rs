@@ -1,0 +1,141 @@
+//! Synthetic dataset generators matching the paper's experimental setups.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// A dataset with ground-truth cluster labels and the true means.
+#[derive(Clone, Debug)]
+pub struct LabeledData {
+    /// `N × n` sample matrix.
+    pub points: Mat,
+    /// Ground-truth cluster index per row.
+    pub labels: Vec<usize>,
+    /// `K × n` true cluster means.
+    pub means: Mat,
+}
+
+/// The paper's Fig. 2 generator.
+///
+/// Draws `N` samples from `K` isotropic Gaussians with covariance
+/// `(n/20)·Id` and uniform weights. Means: for `K = 2`, `±(1,…,1)` exactly
+/// as Fig. 2a; for general `K`, drawn uniformly in `{±1}^n` (Fig. 2b),
+/// rejecting duplicate corners so the K components are distinct (requires
+/// `K ≤ 2^n`).
+pub fn gaussian_mixture_pm1(n_samples: usize, dim: usize, k: usize, rng: &mut Rng) -> LabeledData {
+    assert!(dim >= 1 && k >= 1 && n_samples >= k);
+    let mut means = Mat::zeros(0, dim);
+    if k == 2 {
+        means.push_row(&vec![1.0; dim]);
+        means.push_row(&vec![-1.0; dim]);
+    } else {
+        assert!(
+            (k as f64) <= 2f64.powi(dim.min(60) as i32),
+            "cannot place {k} distinct means in {{±1}}^{dim}"
+        );
+        let mut seen = std::collections::HashSet::new();
+        while means.rows() < k {
+            let corner: Vec<f64> = (0..dim)
+                .map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 })
+                .collect();
+            let key: Vec<i8> = corner.iter().map(|&v| v as i8).collect();
+            if seen.insert(key) {
+                means.push_row(&corner);
+            }
+        }
+    }
+    let std = (dim as f64 / 20.0).sqrt();
+    let mut points = Mat::zeros(0, dim);
+    let mut labels = Vec::with_capacity(n_samples);
+    let mut row = vec![0.0; dim];
+    for _ in 0..n_samples {
+        let c = rng.next_below(k as u64) as usize;
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = means.get(c, j) + std * rng.gaussian();
+        }
+        points.push_row(&row);
+        labels.push(c);
+    }
+    LabeledData {
+        points,
+        labels,
+        means,
+    }
+}
+
+/// Fig. 3 substitute: a spectral-embedding-like 10-class dataset in ℝ¹⁰
+/// (see DESIGN.md §Substitutions for the rationale).
+///
+/// Each cluster k is built to be *non-Gaussian and anisotropic*, mimicking
+/// the banana/filament shapes of spectral-clustering feature spaces:
+/// a Gaussian with per-axis scales drawn in `[0.02, 0.14]` is curved by a
+/// quadratic warp along a random pair of axes, heavy-tailed by scaling with
+/// `1/sqrt(u)` on 10% of samples, and placed at a mean on the unit sphere
+/// (spectral embeddings are near-normalized). Cluster weights are unequal
+/// (Zipf-ish), like real digit frequencies.
+pub fn spectral_embedding_like(n_samples: usize, dim: usize, k: usize, rng: &mut Rng) -> LabeledData {
+    assert!(dim >= 2 && k >= 1 && n_samples >= k);
+    // Cluster means: random directions on the sphere, mildly repelled so
+    // clusters overlap partially but not totally.
+    let mut means = Mat::zeros(0, dim);
+    while means.rows() < k {
+        let cand = rng.sphere_direction(dim);
+        let ok = (0..means.rows()).all(|j| crate::linalg::sq_dist(&cand, means.row(j)) > 0.35);
+        if ok {
+            means.push_row(&cand);
+        }
+    }
+    // Per-cluster anisotropic scales, warp axes and strengths.
+    let mut scales = Mat::zeros(k, dim);
+    let mut warp_from = vec![0usize; k];
+    let mut warp_to = vec![0usize; k];
+    let mut warp_strength = vec![0.0f64; k];
+    for c in 0..k {
+        for j in 0..dim {
+            scales.set(c, j, rng.uniform(0.02, 0.14));
+        }
+        warp_from[c] = rng.next_below(dim as u64) as usize;
+        warp_to[c] = {
+            let mut t = rng.next_below(dim as u64) as usize;
+            while t == warp_from[c] {
+                t = rng.next_below(dim as u64) as usize;
+            }
+            t
+        };
+        warp_strength[c] = rng.uniform(1.0, 3.0);
+    }
+    // Unequal cluster weights ∝ 1/(1+c/2) (normalized by sampling).
+    let weights: Vec<f64> = (0..k).map(|c| 1.0 / (1.0 + c as f64 / 2.0)).collect();
+
+    let mut points = Mat::zeros(0, dim);
+    let mut labels = Vec::with_capacity(n_samples);
+    let mut row = vec![0.0; dim];
+    for _ in 0..n_samples {
+        let c = rng.weighted_index(&weights).unwrap();
+        // Base anisotropic Gaussian.
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = scales.get(c, j) * rng.gaussian();
+        }
+        // Quadratic warp: bend axis `to` by the square of axis `from`
+        // (relative to its scale) — produces curved, non-Gaussian clusters.
+        let t = row[warp_from[c]] / scales.get(c, warp_from[c]).max(1e-9);
+        row[warp_to[c]] += warp_strength[c] * scales.get(c, warp_to[c]) * (t * t - 1.0);
+        // Heavy tail on 10% of draws.
+        if rng.next_f64() < 0.1 {
+            let boost = 1.0 / rng.uniform(0.25, 1.0);
+            for v in row.iter_mut() {
+                *v *= boost;
+            }
+        }
+        // Translate to the cluster mean.
+        for (j, v) in row.iter_mut().enumerate() {
+            *v += means.get(c, j);
+        }
+        points.push_row(&row);
+        labels.push(c);
+    }
+    LabeledData {
+        points,
+        labels,
+        means,
+    }
+}

@@ -1,0 +1,150 @@
+//! Tests for synthetic generators and dataset I/O.
+
+use super::*;
+use crate::linalg::{row_mean, sq_dist, Mat};
+use crate::rng::Rng;
+
+#[test]
+fn fig2a_generator_statistics() {
+    let mut rng = Rng::new(1);
+    let n = 20;
+    let d = gaussian_mixture_pm1(20_000, n, 2, &mut rng);
+    assert_eq!(d.points.shape(), (20_000, n));
+    assert_eq!(d.means.shape(), (2, n));
+    // Means exactly ±1⃗.
+    assert!(d.means.row(0).iter().all(|&v| v == 1.0));
+    assert!(d.means.row(1).iter().all(|&v| v == -1.0));
+    // Empirical per-cluster variance ≈ n/20 = 1.0.
+    let cluster0: Vec<usize> = (0..d.labels.len()).filter(|&i| d.labels[i] == 0).collect();
+    let x0 = d.points.select_rows(&cluster0);
+    let mu = row_mean(&x0);
+    assert!(mu.iter().all(|&m| (m - 1.0).abs() < 0.05), "cluster-0 mean {mu:?}");
+    let mut var = 0.0;
+    for i in 0..x0.rows() {
+        var += sq_dist(x0.row(i), &mu);
+    }
+    var /= (x0.rows() * n) as f64;
+    assert!((var - 1.0).abs() < 0.05, "per-dim variance {var}");
+    // Roughly balanced clusters.
+    let frac = cluster0.len() as f64 / 20_000.0;
+    assert!((frac - 0.5).abs() < 0.02, "cluster balance {frac}");
+}
+
+#[test]
+fn fig2b_means_are_distinct_corners() {
+    let mut rng = Rng::new(2);
+    let d = gaussian_mixture_pm1(1000, 5, 6, &mut rng);
+    assert_eq!(d.means.shape(), (6, 5));
+    for k in 0..6 {
+        assert!(d.means.row(k).iter().all(|&v| v == 1.0 || v == -1.0));
+        for j in 0..k {
+            assert!(
+                sq_dist(d.means.row(k), d.means.row(j)) > 0.0,
+                "duplicate corners {k}/{j}"
+            );
+        }
+    }
+}
+
+#[test]
+#[should_panic]
+fn fig2b_rejects_impossible_corner_count() {
+    let mut rng = Rng::new(3);
+    let _ = gaussian_mixture_pm1(100, 2, 5, &mut rng); // 2^2 = 4 < 5
+}
+
+#[test]
+fn spectral_like_generator_shape_and_nongaussianity() {
+    let mut rng = Rng::new(4);
+    let d = spectral_embedding_like(30_000, 10, 10, &mut rng);
+    assert_eq!(d.points.shape(), (30_000, 10));
+    assert_eq!(d.means.shape(), (10, 10));
+    // Unequal weights: largest cluster clearly bigger than smallest.
+    let mut counts = vec![0usize; 10];
+    for &l in &d.labels {
+        counts[l] += 1;
+    }
+    let (mn, mx) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+    assert!(*mx as f64 > 1.5 * *mn as f64, "weights too equal: {counts:?}");
+    // Non-Gaussianity: excess kurtosis of some coordinate within a cluster
+    // should be clearly nonzero (heavy tails + warp).
+    let c0: Vec<usize> = (0..d.labels.len()).filter(|&i| d.labels[i] == 0).collect();
+    let x0 = d.points.select_rows(&c0);
+    let mu = row_mean(&x0);
+    let mut worst_kurt: f64 = 0.0;
+    for j in 0..10 {
+        let (mut m2, mut m4) = (0.0, 0.0);
+        for i in 0..x0.rows() {
+            let v = x0.get(i, j) - mu[j];
+            m2 += v * v;
+            m4 += v * v * v * v;
+        }
+        m2 /= x0.rows() as f64;
+        m4 /= x0.rows() as f64;
+        let kurt = m4 / (m2 * m2) - 3.0;
+        worst_kurt = worst_kurt.max(kurt.abs());
+    }
+    assert!(worst_kurt > 1.0, "clusters look Gaussian (kurtosis {worst_kurt})");
+}
+
+#[test]
+fn csv_round_trip() {
+    let dir = std::env::temp_dir().join("qckm_test_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("data.csv");
+    let m = Mat::from_vec(3, 2, vec![1.5, -2.0, 0.0, 3.25, 1e-7, 42.0]);
+    save_csv(&path, &m).unwrap();
+    let back = load_csv(&path).unwrap();
+    assert_eq!(back.shape(), (3, 2));
+    for (a, b) in back.as_slice().iter().zip(m.as_slice()) {
+        assert!((a - b).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn csv_rejects_ragged_rows_and_junk() {
+    let dir = std::env::temp_dir().join("qckm_test_csv2");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ragged = dir.join("ragged.csv");
+    std::fs::write(&ragged, "1,2\n3\n").unwrap();
+    assert!(load_csv(&ragged).is_err());
+    let junk = dir.join("junk.csv");
+    std::fs::write(&junk, "1,abc\n").unwrap();
+    assert!(load_csv(&junk).is_err());
+    let empty = dir.join("empty.csv");
+    std::fs::write(&empty, "# only a comment\n\n").unwrap();
+    assert!(load_csv(&empty).is_err());
+}
+
+#[test]
+fn csv_skips_comments_and_blanks() {
+    let dir = std::env::temp_dir().join("qckm_test_csv3");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("commented.csv");
+    std::fs::write(&path, "# header\n1,2\n\n3,4\n").unwrap();
+    let m = load_csv(&path).unwrap();
+    assert_eq!(m.shape(), (2, 2));
+    assert_eq!(m.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+}
+
+#[test]
+fn bin_round_trip() {
+    let dir = std::env::temp_dir().join("qckm_test_bin");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("data.bin");
+    let mut rng = Rng::new(5);
+    let m = Mat::from_fn(17, 5, |_, _| rng.gaussian());
+    save_f64_bin(&path, &m).unwrap();
+    let back = load_f64_bin(&path).unwrap();
+    assert_eq!(back.shape(), m.shape());
+    assert_eq!(back.as_slice(), m.as_slice());
+}
+
+#[test]
+fn bin_load_rejects_truncated() {
+    let dir = std::env::temp_dir().join("qckm_test_bin2");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trunc.bin");
+    std::fs::write(&path, 100u64.to_le_bytes()).unwrap();
+    assert!(load_f64_bin(&path).is_err());
+}

@@ -1,0 +1,180 @@
+//! Signature / bit-depth ablation (beyond the paper's figures; DESIGN.md
+//! lists it as the design-choice ablation for the generalized sketch of
+//! Sec. 3).
+//!
+//! On a fixed Fig.-2a-style mixture, sweep the signature function
+//! {cosine (CKM), universal 1-bit (QCKM), triangle, 2/4-bit staircases} at
+//! several measurement budgets and report success rates and *acquired bits
+//! per example* — making the paper's resource trade-off (`m` bits for QCKM
+//! vs `64·2m` for full-precision CKM) explicit.
+
+use crate::clompr::ClOmprParams;
+use crate::config::Method;
+use crate::data::gaussian_mixture_pm1;
+use crate::frequency::{FrequencyLaw, SigmaHeuristic};
+use crate::kmeans::{kmeans, KMeansParams};
+use crate::metrics::is_success;
+use crate::rng::Rng;
+use crate::signature::{MultiBitQuantizer, Signature};
+use crate::sketch::SketchOperator;
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct AblationConfig {
+    pub n: usize,
+    pub k: usize,
+    pub n_samples: usize,
+    pub ratios: Vec<f64>,
+    pub trials: usize,
+    pub seed: u64,
+}
+
+impl Default for AblationConfig {
+    fn default() -> Self {
+        Self {
+            n: 8,
+            k: 2,
+            n_samples: 4096,
+            ratios: vec![1.0, 2.0, 4.0],
+            trials: 10,
+            seed: 0xAB1A,
+        }
+    }
+}
+
+struct Arm {
+    label: &'static str,
+    signature: Arc<dyn Signature>,
+    bits_per_slot: f64,
+    dithered: bool,
+}
+
+/// Success rate per (arm, ratio) and the per-example acquisition cost.
+pub struct AblationResult {
+    pub labels: Vec<&'static str>,
+    pub ratios: Vec<f64>,
+    pub success: Vec<Vec<f64>>,
+    /// bits per example at each (arm, ratio).
+    pub bits_per_example: Vec<Vec<f64>>,
+}
+
+pub fn run_ablation(cfg: &AblationConfig) -> AblationResult {
+    let arms: Vec<Arm> = vec![
+        Arm {
+            label: "ckm (64-bit cos)",
+            signature: Method::Ckm.signature(),
+            bits_per_slot: 64.0,
+            dithered: false,
+        },
+        Arm {
+            label: "qckm (1-bit)",
+            signature: Method::Qckm.signature(),
+            bits_per_slot: 1.0,
+            dithered: true,
+        },
+        Arm {
+            label: "triangle (64b)",
+            signature: Method::Triangle.signature(),
+            bits_per_slot: 64.0,
+            dithered: true,
+        },
+        Arm {
+            label: "2-bit staircase",
+            signature: Arc::new(MultiBitQuantizer::new(2)),
+            bits_per_slot: 2.0,
+            dithered: true,
+        },
+        Arm {
+            label: "4-bit staircase",
+            signature: Arc::new(MultiBitQuantizer::new(4)),
+            bits_per_slot: 4.0,
+            dithered: true,
+        },
+    ];
+
+    let mut success = vec![vec![0.0; cfg.ratios.len()]; arms.len()];
+    let mut bits = vec![vec![0.0; cfg.ratios.len()]; arms.len()];
+    for trial in 0..cfg.trials {
+        let mut rng = Rng::new(cfg.seed).substream(trial as u64);
+        let data = gaussian_mixture_pm1(cfg.n_samples, cfg.n, cfg.k, &mut rng);
+        let sigma = SigmaHeuristic::default().resolve(&data.points, &mut rng);
+        let km = kmeans(
+            &data.points,
+            cfg.k,
+            &KMeansParams {
+                replicates: 5,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        for (ai, arm) in arms.iter().enumerate() {
+            for (ri, &ratio) in cfg.ratios.iter().enumerate() {
+                let m = ((ratio * (cfg.n * cfg.k) as f64).round() as usize).max(2);
+                bits[ai][ri] = 2.0 * m as f64 * arm.bits_per_slot;
+                // Build the operator directly (arms are not all `Method`s).
+                let freqs = if arm.dithered {
+                    crate::frequency::DrawnFrequencies::draw(
+                        FrequencyLaw::AdaptedRadius,
+                        cfg.n,
+                        m,
+                        sigma,
+                        &mut rng,
+                    )
+                } else {
+                    crate::frequency::DrawnFrequencies::draw_undithered(
+                        FrequencyLaw::AdaptedRadius,
+                        cfg.n,
+                        m,
+                        sigma,
+                        &mut rng,
+                    )
+                };
+                let op = SketchOperator::new(freqs, arm.signature.clone());
+                let z = op.sketch_dataset(&data.points);
+                let (lo, hi) = crate::linalg::bounding_box(&data.points);
+                let sol = crate::clompr::ClOmpr::new(&op, cfg.k)
+                    .with_bounds(lo, hi)
+                    .with_params(ClOmprParams::default())
+                    .run(&z, &mut rng);
+                let s = crate::metrics::sse(&data.points, &sol.centroids);
+                if is_success(s, km.sse) {
+                    success[ai][ri] += 1.0;
+                }
+            }
+        }
+    }
+    for row in success.iter_mut() {
+        for v in row.iter_mut() {
+            *v /= cfg.trials as f64;
+        }
+    }
+    AblationResult {
+        labels: arms.iter().map(|a| a.label).collect(),
+        ratios: cfg.ratios.clone(),
+        success,
+        bits_per_example: bits,
+    }
+}
+
+impl AblationResult {
+    pub fn render(&self) -> String {
+        let mut out = String::from("== Signature / bit-depth ablation ==\n");
+        out.push_str(&format!("{:<18}", "arm"));
+        for r in &self.ratios {
+            out.push_str(&format!("  m/nK={r:<4} (bits/ex)"));
+        }
+        out.push('\n');
+        for (ai, label) in self.labels.iter().enumerate() {
+            out.push_str(&format!("{label:<18}"));
+            for ri in 0..self.ratios.len() {
+                out.push_str(&format!(
+                    "  {:>5.0}%   ({:>6.0})",
+                    100.0 * self.success[ai][ri],
+                    self.bits_per_example[ai][ri]
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}

@@ -1,0 +1,93 @@
+//! Shared plumbing for the experiment harnesses.
+
+use crate::clompr::{decode_best_of, ClOmprParams};
+use crate::config::Method;
+use crate::frequency::{DrawnFrequencies, FrequencyLaw};
+use crate::linalg::{bounding_box, Mat};
+use crate::metrics::{adjusted_rand_index, assign_labels, sse};
+use crate::rng::Rng;
+use crate::sketch::SketchOperator;
+
+/// One compressive-method run on one dataset.
+#[derive(Clone, Debug)]
+pub struct MethodRun {
+    pub method: Method,
+    /// Frequencies M (sketch length 2M).
+    pub m: usize,
+    pub replicates: usize,
+    pub sigma: f64,
+    pub law: FrequencyLaw,
+    pub params: ClOmprParams,
+}
+
+/// Metrics of one trial.
+#[derive(Clone, Debug)]
+pub struct TrialOutcome {
+    pub sse: f64,
+    pub ari: f64,
+    pub objective: f64,
+}
+
+/// Sketch `x` with the run's operator and decode K centroids from it.
+///
+/// `rng` drives the frequency draw, the decoder restarts, and nothing else;
+/// data generation happens at the caller so methods can share datasets.
+pub fn run_method_once(
+    run: &MethodRun,
+    x: &Mat,
+    truth_labels: Option<&[usize]>,
+    k: usize,
+    rng: &mut Rng,
+) -> TrialOutcome {
+    let n = x.cols();
+    let freqs = if run.method.dithered() {
+        DrawnFrequencies::draw(run.law, n, run.m, run.sigma, rng)
+    } else {
+        DrawnFrequencies::draw_undithered(run.law, n, run.m, run.sigma, rng)
+    };
+    let op = SketchOperator::new(freqs, run.method.signature());
+    let z = op.sketch_dataset(x);
+    let (lo, hi) = bounding_box(x);
+    let sol = decode_best_of(&op, k, &z, lo, hi, &run.params, run.replicates, rng);
+    let s = sse(x, &sol.centroids);
+    let ari = truth_labels
+        .map(|t| adjusted_rand_index(&assign_labels(x, &sol.centroids), t))
+        .unwrap_or(f64::NAN);
+    TrialOutcome {
+        sse: s,
+        ari,
+        objective: sol.objective,
+    }
+}
+
+/// Render a success-rate grid (rows = parameter values, cols = ratios) as
+/// an ASCII heatmap, 0%…100% mapped to ' .:-=+*#%@'.
+pub fn ascii_heatmap(rows: &[String], cols: &[f64], grid: &[Vec<f64>]) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let mut out = String::new();
+    out.push_str("            m/(nK): ");
+    for c in cols {
+        out.push_str(&format!("{c:>6.2}"));
+    }
+    out.push('\n');
+    for (label, row) in rows.iter().zip(grid) {
+        out.push_str(&format!("{label:>18}  "));
+        for &v in row {
+            let idx = ((v.clamp(0.0, 1.0)) * (RAMP.len() - 1) as f64).round() as usize;
+            let ch = RAMP[idx] as char;
+            out.push_str(&format!("     {ch}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// For one row of success rates, the smallest ratio with ≥ 50% success
+/// (`None` if never reached) — the paper's red/yellow transition lines.
+pub fn transition_ratio(ratios: &[f64], successes: &[f64]) -> Option<f64> {
+    ratios
+        .iter()
+        .zip(successes)
+        .find(|(_, &s)| s >= 0.5)
+        .map(|(&r, _)| r)
+}

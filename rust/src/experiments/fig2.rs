@@ -1,0 +1,243 @@
+//! Fig. 2 — phase-transition diagrams.
+//!
+//! Empirical success rate (`SSE_method ≤ 1.2·SSE_kmeans`, k-means best of 5)
+//! as a function of the measurement budget `m/(nK)` and either the sample
+//! dimension `n` (Fig. 2a: K = 2, means ±1⃗, cov `(n/20)·Id`) or the number
+//! of clusters `K` (Fig. 2b: n = 5, means random in `{±1}ⁿ`). The paper's
+//! headline: both CKM and QCKM transition at a constant `m/(nK)`, QCKM
+//! needing ~1.13× (vs n) to ~1.23× (vs K) more measurements.
+
+use super::common::{ascii_heatmap, run_method_once, transition_ratio, MethodRun};
+use crate::clompr::ClOmprParams;
+use crate::config::Method;
+use crate::data::gaussian_mixture_pm1;
+use crate::frequency::{FrequencyLaw, SigmaHeuristic};
+use crate::kmeans::{kmeans, KMeansParams};
+use crate::metrics::is_success;
+use crate::rng::Rng;
+
+/// Which panel of Fig. 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fig2Variant {
+    /// Fig. 2a: sweep dimension n at K = 2.
+    VaryDimension,
+    /// Fig. 2b: sweep cluster count K at n = 5.
+    VaryClusters,
+}
+
+/// Grid configuration.
+#[derive(Clone, Debug)]
+pub struct Fig2Config {
+    pub variant: Fig2Variant,
+    /// Swept values of n (2a) or K (2b).
+    pub values: Vec<usize>,
+    /// Swept measurement ratios m/(nK) (frequencies per parameter).
+    pub ratios: Vec<f64>,
+    /// Trials per cell.
+    pub trials: usize,
+    /// Samples per trial dataset.
+    pub n_samples: usize,
+    pub methods: Vec<Method>,
+    pub sigma: SigmaHeuristic,
+    pub law: FrequencyLaw,
+    pub seed: u64,
+    pub decoder: ClOmprParams,
+}
+
+impl Fig2Config {
+    /// The reduced default grid (minutes, not hours). `--full` in the CLI
+    /// switches to the paper-scale grid.
+    pub fn quick(variant: Fig2Variant) -> Self {
+        let values = match variant {
+            Fig2Variant::VaryDimension => vec![2, 4, 8, 16, 24],
+            Fig2Variant::VaryClusters => vec![2, 3, 4, 5, 6],
+        };
+        let ratios = match variant {
+            Fig2Variant::VaryDimension => vec![0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0],
+            // Larger K transitions later in this implementation (see
+            // EXPERIMENTS.md §Calibration) — extend the ratio axis.
+            Fig2Variant::VaryClusters => vec![1.0, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0, 10.0],
+        };
+        Self {
+            variant,
+            values,
+            ratios,
+            trials: 12,
+            n_samples: 4096,
+            methods: vec![Method::Ckm, Method::Qckm],
+            sigma: SigmaHeuristic::default(),
+            law: FrequencyLaw::AdaptedRadius,
+            seed: 0x20180619, // the paper's date
+            decoder: ClOmprParams::default(),
+        }
+    }
+
+    /// Paper-scale grid (N = 10⁴, 100 trials).
+    pub fn full(variant: Fig2Variant) -> Self {
+        let mut cfg = Self::quick(variant);
+        cfg.values = match variant {
+            Fig2Variant::VaryDimension => vec![2, 3, 4, 6, 8, 12, 16, 24, 32, 48],
+            Fig2Variant::VaryClusters => vec![2, 3, 4, 5, 6, 7, 8, 9, 10],
+        };
+        cfg.ratios = vec![
+            0.3, 0.5, 0.75, 1.0, 1.5, 2.0, 2.5, 3.0, 4.0, 5.0, 6.5, 8.0, 10.0, 13.0,
+        ];
+        cfg.trials = 100;
+        cfg.n_samples = 10_000;
+        cfg
+    }
+
+    fn nk(&self, value: usize) -> (usize, usize) {
+        match self.variant {
+            Fig2Variant::VaryDimension => (value, 2),
+            Fig2Variant::VaryClusters => (5, value),
+        }
+    }
+}
+
+/// Success-rate grids per method plus the derived transition lines.
+#[derive(Clone, Debug)]
+pub struct Fig2Result {
+    pub config_desc: String,
+    /// `success[method_idx][value_idx][ratio_idx]` ∈ [0, 1].
+    pub success: Vec<Vec<Vec<f64>>>,
+    pub methods: Vec<Method>,
+    pub values: Vec<usize>,
+    pub ratios: Vec<f64>,
+    /// ≥50% transition ratio per method per value (None = never).
+    pub transitions: Vec<Vec<Option<f64>>>,
+    /// Mean QCKM/CKM transition-ratio factor (the paper's 1.13 / 1.23).
+    pub qckm_over_ckm: Option<f64>,
+}
+
+/// Run the grid. Prints nothing; see [`Fig2Result::render`].
+pub fn run_fig2(cfg: &Fig2Config) -> Fig2Result {
+    let n_methods = cfg.methods.len();
+    let mut success = vec![vec![vec![0.0; cfg.ratios.len()]; cfg.values.len()]; n_methods];
+
+    for (vi, &value) in cfg.values.iter().enumerate() {
+        let (n, k) = cfg.nk(value);
+        for trial in 0..cfg.trials {
+            // Per-trial RNG substream → trials are independent and the whole
+            // grid is reproducible from the seed.
+            let mut rng = Rng::new(cfg.seed)
+                .substream(vi as u64)
+                .substream(trial as u64);
+            let data = gaussian_mixture_pm1(cfg.n_samples, n, k, &mut rng);
+            let sigma = cfg.sigma.resolve(&data.points, &mut rng);
+            // Shared baseline: best of 5 k-means runs (paper's criterion).
+            let km = kmeans(
+                &data.points,
+                k,
+                &KMeansParams {
+                    replicates: 5,
+                    ..Default::default()
+                },
+                &mut rng,
+            );
+            for (mi, &method) in cfg.methods.iter().enumerate() {
+                for (ri, &ratio) in cfg.ratios.iter().enumerate() {
+                    let m = ((ratio * (n * k) as f64).round() as usize).max(2);
+                    let run = MethodRun {
+                        method,
+                        m,
+                        replicates: 1,
+                        sigma,
+                        law: cfg.law,
+                        params: cfg.decoder.clone(),
+                    };
+                    let out = run_method_once(&run, &data.points, None, k, &mut rng);
+                    if is_success(out.sse, km.sse) {
+                        success[mi][vi][ri] += 1.0;
+                    }
+                }
+            }
+        }
+        for mi in 0..n_methods {
+            for ri in 0..cfg.ratios.len() {
+                success[mi][vi][ri] /= cfg.trials as f64;
+            }
+        }
+    }
+
+    // Transition lines + QCKM/CKM factor.
+    let mut transitions = Vec::with_capacity(n_methods);
+    for mi in 0..n_methods {
+        transitions.push(
+            (0..cfg.values.len())
+                .map(|vi| transition_ratio(&cfg.ratios, &success[mi][vi]))
+                .collect::<Vec<_>>(),
+        );
+    }
+    let qckm_over_ckm = factor_between(&cfg.methods, &transitions, Method::Qckm, Method::Ckm);
+
+    Fig2Result {
+        config_desc: format!(
+            "{:?}: values {:?}, ratios {:?}, {} trials, N = {}",
+            cfg.variant, cfg.values, cfg.ratios, cfg.trials, cfg.n_samples
+        ),
+        success,
+        methods: cfg.methods.clone(),
+        values: cfg.values.clone(),
+        ratios: cfg.ratios.clone(),
+        transitions,
+        qckm_over_ckm,
+    }
+}
+
+fn factor_between(
+    methods: &[Method],
+    transitions: &[Vec<Option<f64>>],
+    num: Method,
+    den: Method,
+) -> Option<f64> {
+    let ni = methods.iter().position(|&m| m == num)?;
+    let di = methods.iter().position(|&m| m == den)?;
+    let mut ratios = Vec::new();
+    for (a, b) in transitions[ni].iter().zip(&transitions[di]) {
+        if let (Some(a), Some(b)) = (a, b) {
+            if *b > 0.0 {
+                ratios.push(a / b);
+            }
+        }
+    }
+    if ratios.is_empty() {
+        None
+    } else {
+        Some(ratios.iter().sum::<f64>() / ratios.len() as f64)
+    }
+}
+
+impl Fig2Result {
+    /// Render the heatmaps + transition lines as the terminal "figure".
+    pub fn render(&self) -> String {
+        let mut out = format!("== Fig. 2 phase transition ==\n{}\n\n", self.config_desc);
+        let value_label = "n or K";
+        for (mi, method) in self.methods.iter().enumerate() {
+            out.push_str(&format!("--- {} success rate ---\n", method.name()));
+            let rows: Vec<String> = self
+                .values
+                .iter()
+                .map(|v| format!("{value_label}={v}"))
+                .collect();
+            out.push_str(&ascii_heatmap(&rows, &self.ratios, &self.success[mi]));
+            out.push_str("  >=50% transition at m/(nK): ");
+            for t in &self.transitions[mi] {
+                match t {
+                    Some(r) => out.push_str(&format!("{r:>6.2}")),
+                    None => out.push_str("     -"),
+                }
+            }
+            out.push_str("\n\n");
+        }
+        if let Some(f) = self.qckm_over_ckm {
+            out.push_str(&format!(
+                "QCKM needs {f:.2}x the measurements of CKM at the >=50% transition \
+                 (paper: ~1.13x vs n, ~1.23x vs K)\n"
+            ));
+        } else {
+            out.push_str("QCKM/CKM factor: not measurable on this grid\n");
+        }
+        out
+    }
+}

@@ -1,0 +1,156 @@
+//! Fig. 3 — clustering a spectral-embedding-like real-data stand-in.
+//!
+//! The paper clusters a 10-dim spectral-clustering embedding of MNIST
+//! (N = 70000, K = 10, m = 1000) and reports SSE/N and ARI (mean ± std over
+//! 100 runs) for k-means, CKM and QCKM at 1 and 5 algorithm replicates.
+//! The private embedding is substituted by
+//! [`crate::data::spectral_embedding_like`] (DESIGN.md §Substitutions);
+//! compressive replicates are selected by the *sketch-matching objective*,
+//! never the SSE (the compressive algorithms don't get the data).
+
+use super::common::{run_method_once, MethodRun};
+use crate::clompr::ClOmprParams;
+use crate::config::Method;
+use crate::data::spectral_embedding_like;
+use crate::frequency::{FrequencyLaw, SigmaHeuristic};
+use crate::kmeans::{kmeans, KMeansParams};
+use crate::metrics::{adjusted_rand_index, RunningStats};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Fig3Config {
+    pub n_samples: usize,
+    pub dim: usize,
+    pub k: usize,
+    /// Frequencies M (paper: 1000).
+    pub m: usize,
+    pub trials: usize,
+    /// Replicate counts reported side by side (paper: 1 and 5).
+    pub replicate_levels: Vec<usize>,
+    pub sigma: SigmaHeuristic,
+    pub law: FrequencyLaw,
+    pub seed: u64,
+    pub decoder: ClOmprParams,
+}
+
+impl Fig3Config {
+    pub fn quick() -> Self {
+        Self {
+            n_samples: 10_000,
+            dim: 10,
+            k: 10,
+            m: 600,
+            trials: 8,
+            replicate_levels: vec![1, 5],
+            sigma: SigmaHeuristic::default(),
+            law: FrequencyLaw::AdaptedRadius,
+            seed: 0x0F13,
+            decoder: ClOmprParams::default(),
+        }
+    }
+
+    /// Paper-scale: N = 70000, m = 1000, 100 trials.
+    pub fn full() -> Self {
+        let mut cfg = Self::quick();
+        cfg.n_samples = 70_000;
+        cfg.m = 1000;
+        cfg.trials = 100;
+        cfg
+    }
+}
+
+/// Per-(method, replicate-level) mean ± std of SSE/N and ARI.
+#[derive(Clone, Debug)]
+pub struct Fig3Result {
+    pub config_desc: String,
+    /// Row labels like "k-means x5".
+    pub rows: Vec<String>,
+    pub sse_per_n: Vec<(f64, f64)>,
+    pub ari: Vec<(f64, f64)>,
+}
+
+pub fn run_fig3(cfg: &Fig3Config) -> Fig3Result {
+    let methods = [Method::Ckm, Method::Qckm];
+    let levels = &cfg.replicate_levels;
+    // Accumulators: k-means rows first, then (method × level).
+    let n_rows = levels.len() * (1 + methods.len());
+    let mut sse_stats = vec![RunningStats::default(); n_rows];
+    let mut ari_stats = vec![RunningStats::default(); n_rows];
+    let mut rows = Vec::with_capacity(n_rows);
+    for &lvl in levels {
+        rows.push(format!("k-means x{lvl}"));
+    }
+    for method in &methods {
+        for &lvl in levels {
+            rows.push(format!("{} x{lvl}", method.name()));
+        }
+    }
+
+    for trial in 0..cfg.trials {
+        let mut rng = Rng::new(cfg.seed).substream(trial as u64);
+        let data = spectral_embedding_like(cfg.n_samples, cfg.dim, cfg.k, &mut rng);
+        let sigma = cfg.sigma.resolve(&data.points, &mut rng);
+
+        // k-means at each replicate level (selected by SSE, as in practice).
+        for (li, &lvl) in levels.iter().enumerate() {
+            let km = kmeans(
+                &data.points,
+                cfg.k,
+                &KMeansParams {
+                    replicates: lvl,
+                    ..Default::default()
+                },
+                &mut rng,
+            );
+            sse_stats[li].push(km.sse / cfg.n_samples as f64);
+            ari_stats[li].push(adjusted_rand_index(&km.labels, &data.labels));
+        }
+
+        // Compressive methods (replicates selected by sketch objective).
+        for (mi, &method) in methods.iter().enumerate() {
+            for (li, &lvl) in levels.iter().enumerate() {
+                let run = MethodRun {
+                    method,
+                    m: cfg.m,
+                    replicates: lvl,
+                    sigma,
+                    law: cfg.law,
+                    params: cfg.decoder.clone(),
+                };
+                let out = run_method_once(&run, &data.points, Some(&data.labels), cfg.k, &mut rng);
+                let row = levels.len() * (1 + mi) + li;
+                sse_stats[row].push(out.sse / cfg.n_samples as f64);
+                ari_stats[row].push(out.ari);
+            }
+        }
+        eprintln!("  fig3 trial {}/{} done", trial + 1, cfg.trials);
+    }
+
+    Fig3Result {
+        config_desc: format!(
+            "N = {}, n = {}, K = {}, m = {}, {} trials",
+            cfg.n_samples, cfg.dim, cfg.k, cfg.m, cfg.trials
+        ),
+        rows,
+        sse_per_n: sse_stats.iter().map(|s| (s.mean(), s.std())).collect(),
+        ari: ari_stats.iter().map(|s| (s.mean(), s.std())).collect(),
+    }
+}
+
+impl Fig3Result {
+    pub fn render(&self) -> String {
+        let mut out = format!("== Fig. 3 spectral-features clustering ==\n{}\n\n", self.config_desc);
+        out.push_str(&format!(
+            "{:<16} {:>10} {:>8}    {:>7} {:>7}\n",
+            "algorithm", "SSE/N", "±std", "ARI", "±std"
+        ));
+        for (i, row) in self.rows.iter().enumerate() {
+            let (s, ss) = self.sse_per_n[i];
+            let (a, as_) = self.ari[i];
+            out.push_str(&format!(
+                "{row:<16} {s:>10.4} {ss:>8.4}    {a:>7.3} {as_:>7.3}\n"
+            ));
+        }
+        out
+    }
+}

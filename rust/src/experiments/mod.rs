@@ -1,0 +1,19 @@
+//! Experiment harnesses regenerating every figure of the paper's evaluation
+//! (Sec. 5), plus a numeric validation of Prop. 1 and the signature/bit-depth
+//! ablations. See DESIGN.md §Experiment-index for the figure ↔ module map
+//! and EXPERIMENTS.md for recorded runs.
+
+mod ablation;
+mod common;
+mod fig2;
+mod fig3;
+mod prop1;
+
+pub use ablation::{run_ablation, AblationConfig};
+pub use common::{run_method_once, MethodRun, TrialOutcome};
+pub use fig2::{run_fig2, Fig2Config, Fig2Result, Fig2Variant};
+pub use fig3::{run_fig3, Fig3Config, Fig3Result};
+pub use prop1::{run_prop1, Prop1Config, Prop1Result};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,191 @@
+//! Numeric validation of Proposition 1.
+//!
+//! Prop. 1: for fixed distributions P, Q and a dithered signature f,
+//!
+//!   (2m|F₁|²)⁻¹ ‖A_f(P) − A_{f1}(Q)‖²  ≈  γ²_Λ(P, Q) + c_P,
+//!
+//! with error ≤ ε w.p. ≥ 1 − 2exp(−C_f m ε²) over (Ω, ξ). With Dirac
+//! mixtures for P and Q everything is computable in closed form:
+//! φ_P(ω) = Σ_k α_k e^{iω^T c_k}, γ² estimated to any precision with a huge
+//! independent frequency sample, and c_P = Σ_{|k|≥2} |F_k|²/(2|F₁|²)
+//! E|φ_P(kω)|². The harness sweeps m and reports the deviation's mean and
+//! 95th percentile, which must decay like O(1/√m).
+
+use crate::frequency::{DrawnFrequencies, FrequencyLaw};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::signature::Signature;
+use crate::sketch::SketchOperator;
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct Prop1Config {
+    /// Sketch sizes m to sweep.
+    pub ms: Vec<usize>,
+    /// Draws of (Ω, ξ) per m.
+    pub repeats: usize,
+    /// Monte-Carlo frequencies for the γ² / c_P reference values.
+    pub reference_draws: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop1Config {
+    fn default() -> Self {
+        Self {
+            ms: vec![32, 64, 128, 256, 512, 1024, 2048],
+            repeats: 48,
+            reference_draws: 200_000,
+            seed: 0x9101,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Prop1Result {
+    pub signature: &'static str,
+    pub ms: Vec<usize>,
+    /// Mean |deviation| per m.
+    pub mean_dev: Vec<f64>,
+    /// 95th percentile |deviation| per m.
+    pub p95_dev: Vec<f64>,
+    /// Reference γ²_Λ(P,Q) and c_P.
+    pub gamma2: f64,
+    pub c_p: f64,
+    /// Fitted decay exponent of mean_dev vs m (should be ≈ −0.5).
+    pub decay_exponent: f64,
+}
+
+/// |φ_P(ω)|, φ real/imag parts for a Dirac mixture.
+fn char_fn(centroids: &Mat, weights: &[f64], omega: &[f64]) -> (f64, f64) {
+    let mut re = 0.0;
+    let mut im = 0.0;
+    for (k, &a) in weights.iter().enumerate() {
+        let t = crate::linalg::dot(centroids.row(k), omega);
+        re += a * t.cos();
+        im += a * t.sin();
+    }
+    (re, im)
+}
+
+pub fn run_prop1(signature: Arc<dyn Signature>, cfg: &Prop1Config) -> Prop1Result {
+    let sig_name = signature.name();
+    // Fixed P (3 Diracs) and Q (2 Diracs) in 4 dimensions.
+    let n = 4;
+    let p_cents = Mat::from_vec(
+        3,
+        n,
+        vec![
+            0.8, -0.3, 0.5, 0.0, //
+            -0.6, 0.7, -0.2, 0.4, //
+            0.1, -0.9, 0.3, -0.5,
+        ],
+    );
+    let p_w = [0.5, 0.3, 0.2];
+    let q_cents = Mat::from_vec(2, n, vec![0.7, -0.2, 0.4, 0.1, -0.5, 0.6, -0.3, 0.3]);
+    let q_w = [0.6, 0.4];
+    let law = FrequencyLaw::AdaptedRadius;
+    let sigma = 1.0;
+
+    // ---- Reference values by Monte Carlo over ω ~ Λ.
+    let mut rng = Rng::new(cfg.seed);
+    let big = DrawnFrequencies::draw(law, n, cfg.reference_draws, sigma, &mut rng);
+    let f1 = signature.fourier_coeff(1).abs();
+    let mut gamma2 = 0.0;
+    let mut c_p = 0.0;
+    for j in 0..cfg.reference_draws {
+        let w = big.omega.col(j);
+        let (pr, pi) = char_fn(&p_cents, &p_w, &w);
+        let (qr, qi) = char_fn(&q_cents, &q_w, &w);
+        gamma2 += (pr - qr).powi(2) + (pi - qi).powi(2);
+        // c_P term: Σ_{k≥2} (|F_k|²/|F₁|²) |φ_P(kω)|² (±k symmetric).
+        // The square wave's |F_k| ~ 1/k decays slowly; truncating at 201
+        // leaves a c_P tail < 1e-3, below the m = 2048 deviation floor.
+        for k in 2..=201 {
+            let fk = signature.fourier_coeff(k);
+            if fk == 0.0 {
+                continue;
+            }
+            let kw: Vec<f64> = w.iter().map(|v| v * k as f64).collect();
+            let (r, i) = char_fn(&p_cents, &p_w, &kw);
+            c_p += (fk * fk) / (f1 * f1) * (r * r + i * i);
+        }
+    }
+    gamma2 /= cfg.reference_draws as f64;
+    c_p /= cfg.reference_draws as f64;
+
+    // ---- Sweep m.
+    let mut mean_dev = Vec::with_capacity(cfg.ms.len());
+    let mut p95_dev = Vec::with_capacity(cfg.ms.len());
+    for (mi, &m) in cfg.ms.iter().enumerate() {
+        let mut devs = Vec::with_capacity(cfg.repeats);
+        for rep in 0..cfg.repeats {
+            let mut r = Rng::new(cfg.seed)
+                .substream(1 + mi as u64)
+                .substream(rep as u64);
+            let freqs = DrawnFrequencies::draw(law, n, m, sigma, &mut r);
+            let op = SketchOperator::new(freqs, signature.clone());
+            // A_f(P): exact expectation for a Dirac mixture = Σ α_k f-encode(c_k).
+            let mut a_f_p = vec![0.0; op.sketch_len()];
+            for (k, &a) in p_w.iter().enumerate() {
+                let e = op.encode_point(p_cents.row(k));
+                crate::linalg::axpy(a, &e, &mut a_f_p);
+            }
+            // A_{f1}(Q): first-harmonic atoms.
+            let a_f1_q = op.mixture_sketch(&q_cents, &q_w);
+            let d2: f64 = a_f_p
+                .iter()
+                .zip(&a_f1_q)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            // Paper normalization: (2m'|F₁|²)⁻¹ ‖·‖² over m' slots. Our
+            // layout has S = 2m real slots (two dithers per frequency), so
+            // the normalizer is 2·S·|F₁|² = 4m|F₁|².
+            let normalized = d2 / (2.0 * op.sketch_len() as f64 * f1 * f1);
+            devs.push((normalized - gamma2 - c_p).abs());
+        }
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        mean_dev.push(devs.iter().sum::<f64>() / devs.len() as f64);
+        p95_dev.push(devs[(devs.len() as f64 * 0.95) as usize - 1]);
+    }
+
+    // Fit log(mean_dev) = a + b log(m): slope b ≈ −1/2.
+    let xs: Vec<f64> = cfg.ms.iter().map(|&m| (m as f64).ln()).collect();
+    let ys: Vec<f64> = mean_dev.iter().map(|d| d.max(1e-300).ln()).collect();
+    let xm = xs.iter().sum::<f64>() / xs.len() as f64;
+    let ym = ys.iter().sum::<f64>() / ys.len() as f64;
+    let num: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - xm) * (y - ym)).sum();
+    let den: f64 = xs.iter().map(|x| (x - xm) * (x - xm)).sum();
+    let decay_exponent = num / den;
+
+    Prop1Result {
+        signature: sig_name,
+        ms: cfg.ms.clone(),
+        mean_dev,
+        p95_dev,
+        gamma2,
+        c_p,
+        decay_exponent,
+    }
+}
+
+impl Prop1Result {
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "== Prop. 1 concentration (signature: {}) ==\n\
+             reference: gamma^2 = {:.5}, c_P = {:.5}\n\n\
+             {:>6} {:>12} {:>12}\n",
+            self.signature, self.gamma2, self.c_p, "m", "mean |dev|", "p95 |dev|"
+        );
+        for (i, &m) in self.ms.iter().enumerate() {
+            out.push_str(&format!(
+                "{m:>6} {:>12.5} {:>12.5}\n",
+                self.mean_dev[i], self.p95_dev[i]
+            ));
+        }
+        out.push_str(&format!(
+            "\nfitted decay m^b: b = {:.3} (theory: -0.5)\n",
+            self.decay_exponent
+        ));
+        out
+    }
+}

@@ -1,0 +1,138 @@
+//! Fast smoke tests of the experiment harnesses (tiny grids — the real
+//! grids run via the CLI and are recorded in EXPERIMENTS.md).
+
+use super::*;
+use crate::config::Method;
+use crate::frequency::SigmaHeuristic;
+
+#[test]
+fn fig2_tiny_grid_runs_and_orders_sensibly() {
+    let mut cfg = Fig2Config::quick(Fig2Variant::VaryDimension);
+    cfg.values = vec![4];
+    cfg.ratios = vec![0.25, 6.0];
+    cfg.trials = 3;
+    cfg.n_samples = 800;
+    let res = run_fig2(&cfg);
+    assert_eq!(res.success.len(), 2); // two methods
+    assert_eq!(res.success[0].len(), 1);
+    assert_eq!(res.success[0][0].len(), 2);
+    for mi in 0..2 {
+        for v in &res.success[mi][0] {
+            assert!((0.0..=1.0).contains(v));
+        }
+        // More measurements must not be (grossly) worse.
+        assert!(
+            res.success[mi][0][1] >= res.success[mi][0][0] - 0.34,
+            "success not roughly monotone for method {mi}: {:?}",
+            res.success[mi][0]
+        );
+    }
+    let txt = res.render();
+    assert!(txt.contains("Fig. 2"));
+    assert!(txt.contains("ckm"));
+}
+
+#[test]
+fn fig2b_variant_grid_shapes() {
+    let mut cfg = Fig2Config::quick(Fig2Variant::VaryClusters);
+    cfg.values = vec![2, 3];
+    cfg.ratios = vec![4.0];
+    cfg.trials = 2;
+    cfg.n_samples = 600;
+    cfg.methods = vec![Method::Qckm];
+    let res = run_fig2(&cfg);
+    assert_eq!(res.success.len(), 1);
+    assert_eq!(res.success[0].len(), 2);
+    assert!(res.qckm_over_ckm.is_none()); // no CKM arm
+}
+
+#[test]
+fn fig3_tiny_runs_and_renders() {
+    let mut cfg = Fig3Config::quick();
+    cfg.n_samples = 1500;
+    cfg.m = 150;
+    cfg.k = 4;
+    cfg.trials = 2;
+    cfg.replicate_levels = vec![1];
+    let res = run_fig3(&cfg);
+    assert_eq!(res.rows.len(), 3); // kmeans, ckm, qckm at one level
+    assert_eq!(res.sse_per_n.len(), 3);
+    for &(mean, std) in &res.sse_per_n {
+        assert!(mean > 0.0 && std >= 0.0);
+    }
+    for &(ari, _) in &res.ari {
+        assert!((-0.5..=1.0).contains(&ari));
+    }
+    let txt = res.render();
+    assert!(txt.contains("k-means x1"));
+    assert!(txt.contains("qckm x1"));
+}
+
+#[test]
+fn prop1_small_sweep_decays() {
+    let cfg = Prop1Config {
+        ms: vec![16, 64, 256],
+        repeats: 12,
+        reference_draws: 20_000,
+        seed: 3,
+    };
+    let res = run_prop1(std::sync::Arc::new(crate::signature::UniversalQuantizer), &cfg);
+    assert_eq!(res.mean_dev.len(), 3);
+    assert!(res.gamma2 > 0.0);
+    assert!(res.c_p > 0.0, "quantizer has harmonic tail, c_P > 0");
+    // Deviation must shrink with m (allow noise: compare endpoints).
+    assert!(
+        res.mean_dev[2] < res.mean_dev[0],
+        "no concentration: {:?}",
+        res.mean_dev
+    );
+    // Decay exponent in a generous band around −0.5.
+    assert!(
+        (-1.0..=-0.15).contains(&res.decay_exponent),
+        "decay exponent {}",
+        res.decay_exponent
+    );
+    assert!(res.render().contains("gamma^2"));
+}
+
+#[test]
+fn prop1_cosine_has_zero_cp() {
+    let cfg = Prop1Config {
+        ms: vec![32, 128],
+        repeats: 8,
+        reference_draws: 10_000,
+        seed: 4,
+    };
+    let res = run_prop1(std::sync::Arc::new(crate::signature::Cosine), &cfg);
+    assert!(res.c_p.abs() < 1e-12, "cosine c_P = {}", res.c_p);
+}
+
+#[test]
+fn ablation_tiny_runs() {
+    let cfg = AblationConfig {
+        n: 4,
+        k: 2,
+        n_samples: 600,
+        ratios: vec![4.0],
+        trials: 2,
+        seed: 9,
+    };
+    let res = run_ablation(&cfg);
+    assert_eq!(res.labels.len(), 5);
+    assert!(res.success.iter().flatten().all(|v| (0.0..=1.0).contains(v)));
+    // Bit accounting: qckm slot = 1 bit, ckm slot = 64 bits, same m.
+    let q = res.labels.iter().position(|l| l.starts_with("qckm")).unwrap();
+    let c = res.labels.iter().position(|l| l.starts_with("ckm")).unwrap();
+    assert!((res.bits_per_example[c][0] / res.bits_per_example[q][0] - 64.0).abs() < 1e-9);
+    assert!(res.render().contains("bits/ex"));
+    let _ = SigmaHeuristic::default();
+}
+
+#[test]
+fn transition_ratio_helper() {
+    use super::common::transition_ratio;
+    let ratios = [1.0, 2.0, 4.0];
+    assert_eq!(transition_ratio(&ratios, &[0.0, 0.6, 1.0]), Some(2.0));
+    assert_eq!(transition_ratio(&ratios, &[0.9, 1.0, 1.0]), Some(1.0));
+    assert_eq!(transition_ratio(&ratios, &[0.0, 0.0, 0.4]), None);
+}

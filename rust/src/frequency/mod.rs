@@ -1,0 +1,186 @@
+//! Frequency sampling Ω ~ Λ^m and dithering ξ ~ U([0,2π])^m.
+//!
+//! The frequency distribution Λ determines, via Bochner's theorem, the
+//! shift-invariant kernel `κ(x,x') = F(Λ)(x−x')` whose MMD the sketch
+//! matching minimizes: Λ acts as a low-pass filter on the data pdf, so its
+//! scale controls the clustering resolution.
+//!
+//! Two families are provided (both isotropic, as in CKM/SketchMLbox):
+//!
+//! * [`FrequencyLaw::Gaussian`] — `ω ~ N(0, σ_k⁻² I)`, the RFF choice for a
+//!   Gaussian kernel of bandwidth `σ_k`.
+//! * [`FrequencyLaw::AdaptedRadius`] — direction uniform on the sphere,
+//!   radius `R/σ_k` with density `p(R) ∝ sqrt(R² + R⁴/4)·e^{−R²/2}`
+//!   (Keriven et al. 2017). It up-weights mid radii, which empirically
+//!   improves centroid recovery over the Gaussian law; this is the
+//!   default for all experiments.
+//!
+//! The kernel scale `σ_k` comes from [`SigmaHeuristic`]: fixed by config, or
+//! estimated from a subsample (intra-cluster-scale quantile of pairwise
+//! distances), mirroring how SketchMLbox adjusts Λ from a subset of X.
+
+use crate::linalg::{sq_dist, Mat};
+use crate::rng::{InverseCdfTable, Rng};
+use std::f64::consts::PI;
+
+/// Which isotropic frequency law to draw from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrequencyLaw {
+    /// `ω = g/σ_k`, `g ~ N(0, I)`.
+    Gaussian,
+    /// `ω = (R/σ_k)·u`, `u` uniform direction, `R ~ p(R) ∝ √(R²+R⁴/4)·e^{−R²/2}`.
+    AdaptedRadius,
+}
+
+impl FrequencyLaw {
+    pub fn name(self) -> &'static str {
+        match self {
+            FrequencyLaw::Gaussian => "gaussian",
+            FrequencyLaw::AdaptedRadius => "adapted-radius",
+        }
+    }
+}
+
+/// How to choose the kernel bandwidth `σ_k`.
+#[derive(Clone, Copy, Debug)]
+pub enum SigmaHeuristic {
+    /// Use exactly this bandwidth.
+    Fixed(f64),
+    /// Estimate from data: `σ_k² = q-quantile of pairwise squared distances
+    /// (on a subsample) / (2n)`. A low quantile targets intra-cluster
+    /// pairs; a high quantile the inter-cluster scale (the default, which
+    /// is what CL-OMPR wants — see EXPERIMENTS.md §Calibration).
+    PairwiseQuantile { subsample: usize, quantile: f64 },
+}
+
+impl Default for SigmaHeuristic {
+    fn default() -> Self {
+        // Calibrated on the Fig.-2a setup (EXPERIMENTS.md §Calibration):
+        // the decoder wants the kernel at the *inter*-cluster scale, i.e. a
+        // quantile high enough to be dominated by between-cluster pairs.
+        SigmaHeuristic::PairwiseQuantile {
+            subsample: 512,
+            quantile: 0.65,
+        }
+    }
+}
+
+impl SigmaHeuristic {
+    /// Resolve to a concrete bandwidth for dataset `x` (`N × n`).
+    pub fn resolve(&self, x: &Mat, rng: &mut Rng) -> f64 {
+        match *self {
+            SigmaHeuristic::Fixed(s) => {
+                assert!(s > 0.0, "sigma must be positive");
+                s
+            }
+            SigmaHeuristic::PairwiseQuantile {
+                subsample,
+                quantile,
+            } => estimate_sigma(x, subsample, quantile, rng),
+        }
+    }
+}
+
+/// The pairwise-quantile bandwidth estimate (see [`SigmaHeuristic`]).
+pub fn estimate_sigma(x: &Mat, subsample: usize, quantile: f64, rng: &mut Rng) -> f64 {
+    assert!(x.rows() >= 2, "need at least two points to estimate sigma");
+    assert!((0.0..=1.0).contains(&quantile));
+    let s = subsample.clamp(2, x.rows());
+    let idx = rng.sample_indices(x.rows(), s);
+    // All pairs on the subsample is O(s²) with s ≲ 512 — cheap.
+    let mut d2: Vec<f64> = Vec::with_capacity(s * (s - 1) / 2);
+    for i in 0..s {
+        for j in (i + 1)..s {
+            d2.push(sq_dist(x.row(idx[i]), x.row(idx[j])));
+        }
+    }
+    d2.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = ((d2.len() - 1) as f64 * quantile).round() as usize;
+    let q = d2[pos].max(1e-12);
+    (q / (2.0 * x.cols() as f64)).sqrt()
+}
+
+/// A concrete draw of the sketch's randomness: frequencies and dithers.
+///
+/// `omega` is `n × M` (one frequency per column) so the encode is the
+/// row-major product `X · Ω`. `xi[j] ∈ [0, 2π)` is frequency j's dither.
+/// The *same* draw must be used for encoding and decoding; experiments
+/// persist the seed instead of the matrices.
+#[derive(Clone, Debug)]
+pub struct DrawnFrequencies {
+    /// `n × M` frequency matrix (column j = ω_j).
+    pub omega: Mat,
+    /// Per-frequency dither, length M.
+    pub xi: Vec<f64>,
+    /// The bandwidth the draw was scaled with (for logging).
+    pub sigma: f64,
+    /// Which law generated it.
+    pub law: FrequencyLaw,
+}
+
+impl DrawnFrequencies {
+    /// Draw `m` frequencies in dimension `n` at bandwidth `sigma`.
+    pub fn draw(law: FrequencyLaw, n: usize, m: usize, sigma: f64, rng: &mut Rng) -> Self {
+        assert!(n > 0 && m > 0 && sigma > 0.0);
+        let mut omega = Mat::zeros(n, m);
+        match law {
+            FrequencyLaw::Gaussian => {
+                for r in 0..n {
+                    for c in 0..m {
+                        omega.set(r, c, rng.gaussian() / sigma);
+                    }
+                }
+            }
+            FrequencyLaw::AdaptedRadius => {
+                let table = adapted_radius_table();
+                for c in 0..m {
+                    let dir = rng.sphere_direction(n);
+                    let radius = table.sample(rng) / sigma;
+                    for r in 0..n {
+                        omega.set(r, c, radius * dir[r]);
+                    }
+                }
+            }
+        }
+        let xi: Vec<f64> = (0..m).map(|_| rng.uniform(0.0, 2.0 * PI)).collect();
+        Self {
+            omega,
+            xi,
+            sigma,
+            law,
+        }
+    }
+
+    /// Draw with a *zero* dither — the classical undithered CKM sketch.
+    /// (Prop. 1 requires dithering for non-sinusoidal signatures; the cosine
+    /// signature tolerates ξ = 0, which reproduces original CKM exactly.)
+    pub fn draw_undithered(law: FrequencyLaw, n: usize, m: usize, sigma: f64, rng: &mut Rng) -> Self {
+        let mut out = Self::draw(law, n, m, sigma, rng);
+        out.xi.iter_mut().for_each(|v| *v = 0.0);
+        out
+    }
+
+    /// Data dimension n.
+    pub fn dim(&self) -> usize {
+        self.omega.rows()
+    }
+
+    /// Number of frequencies M.
+    pub fn num_frequencies(&self) -> usize {
+        self.omega.cols()
+    }
+}
+
+/// The adapted-radius inverse-CDF table (support [0, 6] covers all but
+/// ~1e-7 of the mass).
+pub fn adapted_radius_table() -> InverseCdfTable {
+    InverseCdfTable::from_density(
+        |r| (r * r + r.powi(4) / 4.0).sqrt() * (-0.5 * r * r).exp(),
+        0.0,
+        6.0,
+        4096,
+    )
+}
+
+#[cfg(test)]
+mod tests;

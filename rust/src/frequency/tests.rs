@@ -1,0 +1,98 @@
+//! Tests for frequency sampling and the bandwidth heuristic.
+
+use super::*;
+use crate::linalg::norm2;
+
+#[test]
+fn gaussian_law_has_right_scale() {
+    let mut rng = Rng::new(42);
+    let n = 6;
+    let m = 4000;
+    let sigma = 2.0;
+    let d = DrawnFrequencies::draw(FrequencyLaw::Gaussian, n, m, sigma, &mut rng);
+    assert_eq!(d.omega.shape(), (n, m));
+    assert_eq!(d.xi.len(), m);
+    // Per-coordinate variance must be 1/σ² = 0.25.
+    let mut s2 = 0.0;
+    for r in 0..n {
+        for c in 0..m {
+            s2 += d.omega.get(r, c).powi(2);
+        }
+    }
+    let var = s2 / (n * m) as f64;
+    assert!((var - 0.25).abs() < 0.01, "gaussian freq var {var}");
+}
+
+#[test]
+fn adapted_radius_law_norms_match_density() {
+    let mut rng = Rng::new(7);
+    let n = 5;
+    let m = 8000;
+    let d = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, n, m, 1.0, &mut rng);
+    // E[R] for p(R) ∝ sqrt(R²+R⁴/4) e^{−R²/2}: compute numerically.
+    let table = adapted_radius_table();
+    let mut rr = Rng::new(8);
+    let want: f64 = (0..20000).map(|_| table.sample(&mut rr)).sum::<f64>() / 20000.0;
+    let got: f64 = (0..m).map(|c| norm2(&d.omega.col(c))).sum::<f64>() / m as f64;
+    assert!(
+        (got - want).abs() < 0.03,
+        "adapted radius mean norm {got} vs {want}"
+    );
+    // Directions isotropic: mean vector near zero.
+    for r in 0..n {
+        let mean: f64 = (0..m).map(|c| d.omega.get(r, c)).sum::<f64>() / m as f64;
+        assert!(mean.abs() < 0.05, "direction bias {mean} on coord {r}");
+    }
+}
+
+#[test]
+fn dither_is_uniform_and_undithered_is_zero() {
+    let mut rng = Rng::new(3);
+    let d = DrawnFrequencies::draw(FrequencyLaw::Gaussian, 3, 5000, 1.0, &mut rng);
+    let mean: f64 = d.xi.iter().sum::<f64>() / d.xi.len() as f64;
+    assert!((mean - std::f64::consts::PI).abs() < 0.1, "dither mean {mean}");
+    assert!(d.xi.iter().all(|&x| (0.0..2.0 * std::f64::consts::PI).contains(&x)));
+
+    let d0 = DrawnFrequencies::draw_undithered(FrequencyLaw::Gaussian, 3, 100, 1.0, &mut rng);
+    assert!(d0.xi.iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn draw_is_seed_deterministic() {
+    let d1 = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, 4, 64, 1.5, &mut Rng::new(99));
+    let d2 = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, 4, 64, 1.5, &mut Rng::new(99));
+    assert_eq!(d1.omega.as_slice(), d2.omega.as_slice());
+    assert_eq!(d1.xi, d2.xi);
+    assert_eq!(d1.dim(), 4);
+    assert_eq!(d1.num_frequencies(), 64);
+}
+
+#[test]
+fn sigma_estimate_recovers_cluster_scale() {
+    // Single isotropic Gaussian, per-dim std 3: pairwise E‖x−x'‖² = 2n·9,
+    // so any mid quantile / (2n) ≈ 9 → σ̂ ≈ 3 (low quantile → slightly less).
+    let mut rng = Rng::new(5);
+    let n = 8;
+    let x = Mat::from_fn(2000, n, |_, _| rng.gaussian_with(0.0, 3.0));
+    let s = estimate_sigma(&x, 400, 0.5, &mut rng);
+    assert!((s - 3.0).abs() < 0.4, "sigma estimate {s}");
+    let s_low = estimate_sigma(&x, 400, 0.1, &mut rng);
+    assert!(s_low < s, "low quantile should give smaller sigma");
+}
+
+#[test]
+fn sigma_heuristic_resolve() {
+    let mut rng = Rng::new(6);
+    let x = Mat::from_fn(50, 2, |_, _| rng.gaussian());
+    assert_eq!(SigmaHeuristic::Fixed(1.25).resolve(&x, &mut rng), 1.25);
+    let s = SigmaHeuristic::default().resolve(&x, &mut rng);
+    assert!(s > 0.0 && s.is_finite());
+}
+
+#[test]
+#[should_panic]
+fn fixed_sigma_must_be_positive() {
+    let mut rng = Rng::new(0);
+    let x = Mat::zeros(2, 2);
+    let _ = SigmaHeuristic::Fixed(0.0).resolve(&x, &mut rng);
+}

@@ -1,0 +1,140 @@
+//! Lloyd's k-means with k-means++ seeding — the paper's baseline.
+//!
+//! This replaces the "built-in MATLAB function" the paper compares against.
+//! The experiments run it with several replicates and keep the best-SSE
+//! solution, exactly as in Sec. 5.
+
+use crate::linalg::{sq_dist, Mat};
+use crate::metrics::{assign_labels, sse};
+use crate::rng::Rng;
+
+/// Tuning knobs for [`kmeans`].
+#[derive(Clone, Debug)]
+pub struct KMeansParams {
+    /// Maximum Lloyd iterations per run.
+    pub max_iters: usize,
+    /// Stop when relative SSE improvement falls below this.
+    pub tol: f64,
+    /// Number of independent runs; the best-SSE run is returned.
+    pub replicates: usize,
+}
+
+impl Default for KMeansParams {
+    fn default() -> Self {
+        Self {
+            max_iters: 100,
+            tol: 1e-6,
+            replicates: 1,
+        }
+    }
+}
+
+/// Result of a k-means run.
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    /// `K × n` centroid matrix.
+    pub centroids: Mat,
+    /// Final assignment of each input row.
+    pub labels: Vec<usize>,
+    /// Final SSE.
+    pub sse: f64,
+    /// Lloyd iterations used by the winning replicate.
+    pub iters: usize,
+}
+
+/// k-means++ seeding (Arthur & Vassilvitskii): D²-weighted centroid draws.
+pub fn kmeans_pp_init(x: &Mat, k: usize, rng: &mut Rng) -> Mat {
+    let n = x.rows();
+    assert!(k >= 1 && k <= n, "need 1 <= K <= N (K={k}, N={n})");
+    let mut centroids = Mat::zeros(0, x.cols());
+    let first = rng.next_below(n as u64) as usize;
+    centroids.push_row(x.row(first));
+    let mut d2: Vec<f64> = (0..n).map(|i| sq_dist(x.row(i), x.row(first))).collect();
+    while centroids.rows() < k {
+        let next = rng
+            .weighted_index(&d2)
+            // All points coincide with a centroid: duplicate any point.
+            .unwrap_or_else(|| rng.next_below(n as u64) as usize);
+        centroids.push_row(x.row(next));
+        let c = centroids.row(centroids.rows() - 1);
+        for i in 0..n {
+            let d = sq_dist(x.row(i), c);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    centroids
+}
+
+/// Lloyd iteration from the given initial centroids.
+pub fn lloyd(x: &Mat, init: &Mat, params: &KMeansParams) -> KMeansResult {
+    let (n, dim) = x.shape();
+    let k = init.rows();
+    assert_eq!(init.cols(), dim);
+    let mut centroids = init.clone();
+    let mut labels = vec![0usize; n];
+    let mut prev_sse = f64::INFINITY;
+    let mut iters = 0;
+    for it in 0..params.max_iters {
+        iters = it + 1;
+        // Assignment step.
+        labels = assign_labels(x, &centroids);
+        // Update step.
+        let mut sums = Mat::zeros(k, dim);
+        let mut counts = vec![0u64; k];
+        for (i, &l) in labels.iter().enumerate() {
+            crate::linalg::axpy(1.0, x.row(i), sums.row_mut(l));
+            counts[l] += 1;
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Empty cluster: re-seed at the point farthest from its
+                // centroid (standard repair).
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = sq_dist(x.row(a), centroids.row(labels[a]));
+                        let db = sq_dist(x.row(b), centroids.row(labels[b]));
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids.row_mut(c).copy_from_slice(x.row(far));
+            } else {
+                let inv = 1.0 / counts[c] as f64;
+                for (dst, &s) in centroids.row_mut(c).iter_mut().zip(sums.row(c)) {
+                    *dst = s * inv;
+                }
+            }
+        }
+        let cur = sse(x, &centroids);
+        if prev_sse.is_finite() && (prev_sse - cur) <= params.tol * prev_sse.max(1e-300) {
+            break;
+        }
+        prev_sse = cur;
+    }
+    labels = assign_labels(x, &centroids);
+    let final_sse = sse(x, &centroids);
+    KMeansResult {
+        centroids,
+        labels,
+        sse: final_sse,
+        iters,
+    }
+}
+
+/// Full k-means: k-means++ seeding + Lloyd, best of `params.replicates`.
+pub fn kmeans(x: &Mat, k: usize, params: &KMeansParams, rng: &mut Rng) -> KMeansResult {
+    assert!(params.replicates >= 1);
+    let mut best: Option<KMeansResult> = None;
+    for _ in 0..params.replicates {
+        let init = kmeans_pp_init(x, k, rng);
+        let run = lloyd(x, &init, params);
+        if best.as_ref().map_or(true, |b| run.sse < b.sse) {
+            best = Some(run);
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,98 @@
+//! k-means tests on separable synthetic data.
+
+use super::*;
+use crate::metrics::adjusted_rand_index;
+
+fn two_blobs(rng: &mut Rng, n_per: usize, sep: f64) -> (Mat, Vec<usize>) {
+    let mut x = Mat::zeros(0, 2);
+    let mut labels = Vec::new();
+    for i in 0..2 * n_per {
+        let c = if i < n_per { -sep / 2.0 } else { sep / 2.0 };
+        x.push_row(&[c + 0.3 * rng.gaussian(), 0.3 * rng.gaussian()]);
+        labels.push(usize::from(i >= n_per));
+    }
+    (x, labels)
+}
+
+#[test]
+fn kmeans_pp_init_picks_distinct_points() {
+    let mut rng = Rng::new(1);
+    let (x, _) = two_blobs(&mut rng, 50, 10.0);
+    let init = kmeans_pp_init(&x, 4, &mut rng);
+    assert_eq!(init.shape(), (4, 2));
+    // With separated blobs, ++ seeding should hit both blobs.
+    let mut saw_left = false;
+    let mut saw_right = false;
+    for k in 0..4 {
+        if init.get(k, 0) < 0.0 {
+            saw_left = true;
+        } else {
+            saw_right = true;
+        }
+    }
+    assert!(saw_left && saw_right, "++ seeding missed a blob");
+}
+
+#[test]
+fn kmeans_recovers_separated_clusters() {
+    let mut rng = Rng::new(2);
+    let (x, truth) = two_blobs(&mut rng, 200, 8.0);
+    let res = kmeans(&x, 2, &KMeansParams::default(), &mut rng);
+    assert_eq!(res.centroids.rows(), 2);
+    let ari = adjusted_rand_index(&res.labels, &truth);
+    assert!(ari > 0.99, "ARI = {ari}");
+    // Centroid locations near ±4.
+    let mut xs: Vec<f64> = (0..2).map(|k| res.centroids.get(k, 0)).collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!((xs[0] + 4.0).abs() < 0.2 && (xs[1] - 4.0).abs() < 0.2, "{xs:?}");
+}
+
+#[test]
+fn replicates_never_hurt_sse() {
+    let mut rng = Rng::new(3);
+    let (x, _) = two_blobs(&mut rng, 100, 3.0);
+    let mut p1 = KMeansParams::default();
+    p1.replicates = 1;
+    let mut p5 = KMeansParams::default();
+    p5.replicates = 5;
+    // Same generator seed for a fair "best of" comparison.
+    let r1 = kmeans(&x, 3, &p1, &mut Rng::new(10));
+    let r5 = kmeans(&x, 3, &p5, &mut Rng::new(10));
+    assert!(r5.sse <= r1.sse + 1e-9, "5 reps {} vs 1 rep {}", r5.sse, r1.sse);
+}
+
+#[test]
+fn kmeans_k_equals_n_zero_sse() {
+    let x = Mat::from_vec(3, 1, vec![0.0, 5.0, 9.0]);
+    let mut rng = Rng::new(4);
+    let res = kmeans(&x, 3, &KMeansParams::default(), &mut rng);
+    assert!(res.sse < 1e-12);
+}
+
+#[test]
+fn lloyd_monotone_nonincreasing_sse() {
+    let mut rng = Rng::new(5);
+    let (x, _) = two_blobs(&mut rng, 150, 2.0);
+    let init = kmeans_pp_init(&x, 4, &mut rng);
+    let sse0 = crate::metrics::sse(&x, &init);
+    let res = lloyd(&x, &init, &KMeansParams::default());
+    assert!(res.sse <= sse0 + 1e-9, "Lloyd increased SSE");
+    assert!(res.iters >= 1);
+}
+
+#[test]
+fn handles_duplicate_points() {
+    // All points identical: SSE 0, no panic from empty-cluster repair.
+    let x = Mat::from_fn(20, 2, |_, _| 1.5);
+    let mut rng = Rng::new(6);
+    let res = kmeans(&x, 3, &KMeansParams::default(), &mut rng);
+    assert!(res.sse < 1e-20);
+}
+
+#[test]
+#[should_panic]
+fn rejects_k_larger_than_n() {
+    let x = Mat::zeros(3, 2);
+    let mut rng = Rng::new(0);
+    let _ = kmeans_pp_init(&x, 4, &mut rng);
+}

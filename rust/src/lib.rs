@@ -1,0 +1,63 @@
+//! # qckm — Quantized Compressive K-Means
+//!
+//! A production-grade reproduction of
+//! *"Quantized Compressive K-Means"* (V. Schellekens & L. Jacques, IEEE
+//! Signal Processing Letters 2018): compressive clustering where the whole
+//! dataset is acquired as pooled, dithered, **1-bit universally quantized**
+//! random signatures, and the K cluster centroids are decoded from that
+//! single `2M`-dimensional sketch by a CL-OMPR greedy matching pursuit.
+//!
+//! The crate is the Layer-3 (coordination + decoding) half of a three-layer
+//! Rust + JAX + Pallas stack; see `DESIGN.md` at the repository root for the
+//! architecture and `EXPERIMENTS.md` for the paper-vs-measured record.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use qckm::prelude::*;
+//!
+//! // Synthetic 2-cluster data (Fig. 2a setup).
+//! let mut rng = Rng::new(0);
+//! let data = qckm::data::gaussian_mixture_pm1(10_000, 8, 2, &mut rng);
+//!
+//! // Draw frequencies + dither, build the 1-bit (QCKM) operator.
+//! let sigma = SigmaHeuristic::default().resolve(&data.points, &mut rng);
+//! let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, 8, 400, sigma, &mut rng);
+//! let op = SketchOperator::quantized(freqs);
+//!
+//! // Acquire (1 bit per measurement per example) and pool.
+//! let z = op.sketch_dataset(&data.points);
+//!
+//! // Decode K = 2 centroids from the sketch alone.
+//! let sol = ClOmpr::new(&op, 2).run(&z, &mut rng);
+//! println!("centroids: {:?}", sol.centroids);
+//! ```
+
+pub mod cli;
+pub mod clompr;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod frequency;
+pub mod kmeans;
+pub mod linalg;
+pub mod metrics;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod signature;
+pub mod sketch;
+pub mod testkit;
+
+/// The most common imports in one place.
+pub mod prelude {
+    pub use crate::clompr::{ClOmpr, ClOmprParams, Solution};
+    pub use crate::frequency::{DrawnFrequencies, FrequencyLaw, SigmaHeuristic};
+    pub use crate::kmeans::{kmeans, KMeansParams};
+    pub use crate::linalg::Mat;
+    pub use crate::metrics::{adjusted_rand_index, sse};
+    pub use crate::rng::Rng;
+    pub use crate::signature::{Cosine, Signature, Triangle, UniversalQuantizer};
+    pub use crate::sketch::{BitAggregator, BitSketch, PooledSketch, SketchOperator};
+}

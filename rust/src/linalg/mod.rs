@@ -1,0 +1,21 @@
+//! Minimal dense linear algebra, built from scratch (no external crates).
+//!
+//! The compressive-clustering pipeline needs: a row-major matrix type,
+//! matrix-matrix and matrix-vector products (the sketch encode is one big
+//! `X · Ω`), vector kernels (dot/axpy/norms) for the optimizers, and a
+//! Householder-QR least-squares solver that backs the Lawson–Hanson NNLS in
+//! [`crate::optim::nnls`].
+//!
+//! Everything is `f64`: the decoder's line searches are sensitive to
+//! round-off and the sketch sizes involved (m ≲ 10⁴) make memory a non-issue.
+
+mod mat;
+mod ops;
+mod qr;
+
+pub use mat::Mat;
+pub use ops::*;
+pub use qr::{lstsq, QrFactorization};
+
+#[cfg(test)]
+mod tests;

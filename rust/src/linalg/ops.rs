@@ -1,0 +1,180 @@
+//! Vector kernels and matrix products.
+//!
+//! The gemm here is a simple register-blocked ikj loop — enough to keep the
+//! sketch encode memory-bound rather than instruction-bound (see
+//! EXPERIMENTS.md §Perf for measurements against the roofline).
+
+use super::Mat;
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulators: lets the compiler vectorize without
+    // violating float associativity semantics in a surprising way.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Squared Euclidean distance between two vectors.
+#[inline]
+pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// `out = a - b` (allocating).
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Dense matrix-vector product `A·x`.
+pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len(), "matvec: {:?} · {}", a.shape(), x.len());
+    (0..a.rows()).map(|r| dot(a.row(r), x)).collect()
+}
+
+/// Dense transposed matrix-vector product `Aᵀ·x`.
+pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len(), "matvec_t: {:?}ᵀ · {}", a.shape(), x.len());
+    let mut out = vec![0.0; a.cols()];
+    for (r, &xr) in x.iter().enumerate() {
+        axpy(xr, a.row(r), &mut out);
+    }
+    out
+}
+
+/// Dense matrix product `A·B`, cache-blocked ikj ordering.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "matmul: {:?} · {:?}",
+        a.shape(),
+        b.shape()
+    );
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    matmul_into(a, b, &mut c);
+    let _ = (m, k, n);
+    c
+}
+
+/// `C = A·B` into a preallocated output (C is overwritten).
+///
+/// ikj loop order: the inner loop streams a row of B and a row of C with unit
+/// stride, so the compiler autovectorizes it; blocking over k keeps the B
+/// panel in L1/L2.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols(), b.rows());
+    assert_eq!(c.shape(), (a.rows(), b.cols()));
+    let (m, kk, n) = (a.rows(), a.cols(), b.cols());
+    c.as_mut_slice().fill(0.0);
+    const KB: usize = 256; // k-panel
+    for k0 in (0..kk).step_by(KB) {
+        let k1 = (k0 + KB).min(kk);
+        for i in 0..m {
+            let arow = a.row(i);
+            let crow = c.row_mut(i);
+            for k in k0..k1 {
+                let aik = arow[k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                axpy(aik, brow, crow);
+            }
+        }
+    }
+    let _ = n;
+}
+
+/// `C = Aᵀ·B` without materializing the transpose.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for i in 0..m {
+            let aip = arow[i];
+            if aip == 0.0 {
+                continue;
+            }
+            axpy(aip, brow, c.row_mut(i));
+        }
+    }
+    c
+}
+
+/// Mean of the rows of `a`.
+pub fn row_mean(a: &Mat) -> Vec<f64> {
+    let mut mean = vec![0.0; a.cols()];
+    for r in 0..a.rows() {
+        axpy(1.0, a.row(r), &mut mean);
+    }
+    scale(1.0 / a.rows().max(1) as f64, &mut mean);
+    mean
+}
+
+/// Per-coordinate min and max over the rows of `a` — the data bounding box
+/// `l ≤ x ≤ u` the CL-OMPR centroid searches are constrained to.
+pub fn bounding_box(a: &Mat) -> (Vec<f64>, Vec<f64>) {
+    assert!(a.rows() > 0, "bounding box of empty matrix");
+    let mut lo = a.row(0).to_vec();
+    let mut hi = a.row(0).to_vec();
+    for r in 1..a.rows() {
+        for (c, &v) in a.row(r).iter().enumerate() {
+            if v < lo[c] {
+                lo[c] = v;
+            }
+            if v > hi[c] {
+                hi[c] = v;
+            }
+        }
+    }
+    (lo, hi)
+}

@@ -1,0 +1,114 @@
+//! Householder QR and dense least squares.
+//!
+//! Backs the passive-set solves inside Lawson–Hanson NNLS
+//! ([`crate::optim::nnls`]). Sizes there are tiny (2m × |C| with |C| ≤ 2K),
+//! so a straightforward column-by-column Householder factorization is both
+//! robust and fast enough.
+
+use super::Mat;
+
+/// A thin Householder QR factorization of an `m × n` matrix with `m ≥ n`.
+pub struct QrFactorization {
+    /// Packed factors: R in the upper triangle, Householder vectors below.
+    qr: Mat,
+    /// Householder scalar coefficients (tau).
+    tau: Vec<f64>,
+}
+
+impl QrFactorization {
+    /// Factor `a` (consumed by copy). Requires `rows ≥ cols`.
+    pub fn new(a: &Mat) -> Self {
+        let (m, n) = a.shape();
+        assert!(m >= n, "QR requires rows >= cols, got {m}x{n}");
+        let mut qr = a.clone();
+        let mut tau = vec![0.0; n];
+        for k in 0..n {
+            // Build the Householder reflector for column k below the diagonal.
+            let mut norm = 0.0;
+            for i in k..m {
+                let v = qr.get(i, k);
+                norm += v * v;
+            }
+            let norm = norm.sqrt();
+            if norm == 0.0 {
+                tau[k] = 0.0;
+                continue;
+            }
+            let akk = qr.get(k, k);
+            let alpha = if akk >= 0.0 { -norm } else { norm };
+            // v = x - alpha e1, normalized so v[k] = 1.
+            let vkk = akk - alpha;
+            for i in (k + 1)..m {
+                let v = qr.get(i, k) / vkk;
+                qr.set(i, k, v);
+            }
+            tau[k] = -vkk / alpha;
+            qr.set(k, k, alpha);
+            // Apply the reflector to the remaining columns.
+            for j in (k + 1)..n {
+                let mut s = qr.get(k, j);
+                for i in (k + 1)..m {
+                    s += qr.get(i, k) * qr.get(i, j);
+                }
+                s *= tau[k];
+                let cur = qr.get(k, j);
+                qr.set(k, j, cur - s);
+                for i in (k + 1)..m {
+                    let cur = qr.get(i, j);
+                    let vik = qr.get(i, k);
+                    qr.set(i, j, cur - s * vik);
+                }
+            }
+        }
+        Self { qr, tau }
+    }
+
+    /// Apply `Qᵀ` to a vector in place.
+    fn apply_qt(&self, b: &mut [f64]) {
+        let (m, n) = self.qr.shape();
+        assert_eq!(b.len(), m);
+        for k in 0..n {
+            if self.tau[k] == 0.0 {
+                continue;
+            }
+            let mut s = b[k];
+            for i in (k + 1)..m {
+                s += self.qr.get(i, k) * b[i];
+            }
+            s *= self.tau[k];
+            b[k] -= s;
+            for i in (k + 1)..m {
+                b[i] -= s * self.qr.get(i, k);
+            }
+        }
+    }
+
+    /// Solve the least-squares problem `min ‖A x − b‖₂`.
+    ///
+    /// Returns `None` if R is numerically singular (rank-deficient A).
+    pub fn solve(&self, b: &[f64]) -> Option<Vec<f64>> {
+        let (m, n) = self.qr.shape();
+        assert_eq!(b.len(), m);
+        let mut y = b.to_vec();
+        self.apply_qt(&mut y);
+        // Back-substitute R x = y[..n].
+        let mut x = vec![0.0; n];
+        for k in (0..n).rev() {
+            let rkk = self.qr.get(k, k);
+            if rkk.abs() < 1e-12 * self.qr.max_abs().max(1.0) {
+                return None;
+            }
+            let mut s = y[k];
+            for j in (k + 1)..n {
+                s -= self.qr.get(k, j) * x[j];
+            }
+            x[k] = s / rkk;
+        }
+        Some(x)
+    }
+}
+
+/// One-shot dense least squares `argmin_x ‖A x − b‖₂` (A must be tall).
+pub fn lstsq(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    QrFactorization::new(a).solve(b)
+}

@@ -1,0 +1,158 @@
+//! Unit tests for the linalg substrate.
+
+use super::*;
+use crate::rng::Rng;
+
+fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.gaussian())
+}
+
+#[test]
+fn mat_basics() {
+    let mut m = Mat::zeros(2, 3);
+    assert_eq!(m.shape(), (2, 3));
+    m.set(1, 2, 5.0);
+    assert_eq!(m.get(1, 2), 5.0);
+    assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+    assert_eq!(m.col(2), vec![0.0, 5.0]);
+    m.row_mut(0)[0] = -1.0;
+    assert_eq!(m.as_slice(), &[-1.0, 0.0, 0.0, 0.0, 0.0, 5.0]);
+}
+
+#[test]
+#[should_panic]
+fn from_vec_rejects_bad_len() {
+    let _ = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+}
+
+#[test]
+fn eye_and_matmul_identity() {
+    let mut rng = Rng::new(1);
+    let a = random_mat(&mut rng, 7, 7);
+    let i = Mat::eye(7);
+    let ai = matmul(&a, &i);
+    let ia = matmul(&i, &a);
+    assert!((0..49).all(|k| (ai.as_slice()[k] - a.as_slice()[k]).abs() < 1e-12));
+    assert!((0..49).all(|k| (ia.as_slice()[k] - a.as_slice()[k]).abs() < 1e-12));
+}
+
+#[test]
+fn transpose_round_trip_and_blocked_path() {
+    let mut rng = Rng::new(2);
+    // > 32 in both dims to exercise the blocking.
+    let a = random_mat(&mut rng, 45, 70);
+    let att = a.transpose().transpose();
+    assert_eq!(a, att);
+    assert_eq!(a.transpose().shape(), (70, 45));
+    assert_eq!(a.get(3, 60), a.transpose().get(60, 3));
+}
+
+#[test]
+fn matmul_against_naive() {
+    let mut rng = Rng::new(3);
+    let a = random_mat(&mut rng, 13, 300); // k > KB exercises panel loop
+    let b = random_mat(&mut rng, 300, 9);
+    let c = matmul(&a, &b);
+    for i in 0..13 {
+        for j in 0..9 {
+            let want: f64 = (0..300).map(|k| a.get(i, k) * b.get(k, j)).sum();
+            assert!(
+                (c.get(i, j) - want).abs() < 1e-9 * want.abs().max(1.0),
+                "c[{i},{j}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn matmul_tn_matches_explicit_transpose() {
+    let mut rng = Rng::new(4);
+    let a = random_mat(&mut rng, 20, 6);
+    let b = random_mat(&mut rng, 20, 5);
+    let c1 = matmul_tn(&a, &b);
+    let c2 = matmul(&a.transpose(), &b);
+    assert_eq!(c1.shape(), (6, 5));
+    for k in 0..30 {
+        assert!((c1.as_slice()[k] - c2.as_slice()[k]).abs() < 1e-10);
+    }
+}
+
+#[test]
+fn matvec_and_transposed() {
+    let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+    assert_eq!(matvec(&a, &[1., 0., -1.]), vec![-2., -2.]);
+    assert_eq!(matvec_t(&a, &[1., 1.]), vec![5., 7., 9.]);
+}
+
+#[test]
+fn vector_kernels() {
+    let a = [1.0, 2.0, 3.0, 4.0, 5.0]; // odd len exercises remainder loop
+    let b = [5.0, 4.0, 3.0, 2.0, 1.0];
+    assert_eq!(dot(&a, &b), 35.0);
+    assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    assert_eq!(sq_dist(&a, &b), 16.0 + 4.0 + 0.0 + 4.0 + 16.0);
+    let mut y = vec![1.0, 1.0];
+    axpy(2.0, &[3.0, -1.0], &mut y);
+    assert_eq!(y, vec![7.0, -1.0]);
+    scale(0.5, &mut y);
+    assert_eq!(y, vec![3.5, -0.5]);
+    assert_eq!(sub(&[3.0, 1.0], &[1.0, 1.0]), vec![2.0, 0.0]);
+}
+
+#[test]
+fn row_mean_and_bounding_box() {
+    let a = Mat::from_vec(3, 2, vec![0., 10., 2., 20., 4., 60.]);
+    assert_eq!(row_mean(&a), vec![2.0, 30.0]);
+    let (lo, hi) = bounding_box(&a);
+    assert_eq!(lo, vec![0.0, 10.0]);
+    assert_eq!(hi, vec![4.0, 60.0]);
+}
+
+#[test]
+fn select_rows_and_push_row() {
+    let a = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+    let s = a.select_rows(&[2, 0]);
+    assert_eq!(s.as_slice(), &[5., 6., 1., 2.]);
+    let mut b = Mat::zeros(0, 2);
+    b.push_row(&[7.0, 8.0]);
+    assert_eq!(b.shape(), (1, 2));
+    assert_eq!(b.row(0), &[7.0, 8.0]);
+}
+
+#[test]
+fn qr_solves_exact_square_system() {
+    let a = Mat::from_vec(3, 3, vec![4., 1., 0., 1., 3., 1., 0., 1., 2.]);
+    let x_true = [1.0, -2.0, 0.5];
+    let b = matvec(&a, &x_true);
+    let x = lstsq(&a, &b).expect("solvable");
+    for (xi, ti) in x.iter().zip(&x_true) {
+        assert!((xi - ti).abs() < 1e-10);
+    }
+}
+
+#[test]
+fn qr_least_squares_matches_normal_equations() {
+    let mut rng = Rng::new(5);
+    let a = random_mat(&mut rng, 40, 4);
+    let b: Vec<f64> = (0..40).map(|_| rng.gaussian()).collect();
+    let x = lstsq(&a, &b).expect("full rank w.p. 1");
+    // Residual must be orthogonal to the column space: Aᵀ(Ax − b) = 0.
+    let ax = matvec(&a, &x);
+    let r = sub(&ax, &b);
+    let g = matvec_t(&a, &r);
+    assert!(norm2(&g) < 1e-9, "normal-equation residual {}", norm2(&g));
+}
+
+#[test]
+fn qr_detects_rank_deficiency() {
+    // Two identical columns.
+    let a = Mat::from_vec(4, 2, vec![1., 1., 2., 2., 3., 3., 4., 4.]);
+    assert!(lstsq(&a, &[1., 2., 3., 4.]).is_none());
+}
+
+#[test]
+fn fro_norm_and_max_abs() {
+    let a = Mat::from_vec(2, 2, vec![3., 0., 0., -4.]);
+    assert!((a.fro_norm() - 5.0).abs() < 1e-15);
+    assert_eq!(a.max_abs(), 4.0);
+}

@@ -1,0 +1,381 @@
+//! `qckm` — the command-line launcher.
+//!
+//! ```text
+//! qckm cluster     --data x.csv --k 10 [--method qckm] [--config job.toml]
+//! qckm sketch      --data x.csv [--method qckm] --out sketch.csv
+//! qckm experiment  fig2a|fig2b|fig3|prop1|ablation [--full]
+//! qckm pipeline    [--workers 8] [--samples 100000] … (streaming demo)
+//! ```
+//!
+//! Every run prints its seed and full parameterization so results are
+//! reproducible; experiment outputs are the rows/series recorded in
+//! EXPERIMENTS.md.
+
+use anyhow::{bail, Context, Result};
+use qckm::cli::CliSpec;
+use qckm::clompr::decode_best_of;
+use qckm::config::{JobConfig, Method};
+use qckm::coordinator::{run_pipeline, PipelineConfig, SampleSource, WireFormat};
+use qckm::data::{load_csv, save_csv};
+use qckm::experiments as exp;
+use qckm::frequency::{DrawnFrequencies, SigmaHeuristic};
+use qckm::linalg::{bounding_box, Mat};
+use qckm::rng::Rng;
+use qckm::sketch::SketchOperator;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(args) {
+        eprintln!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: Vec<String>) -> Result<()> {
+    let Some(cmd) = args.first().cloned() else {
+        bail!(
+            "usage: qckm <cluster|sketch|experiment|pipeline> …  (use --help per command)\n\
+             see README.md for a tour"
+        );
+    };
+    let rest = args[1..].to_vec();
+    match cmd.as_str() {
+        "cluster" => cmd_cluster(rest),
+        "sketch" => cmd_sketch(rest),
+        "experiment" => cmd_experiment(rest),
+        "pipeline" => cmd_pipeline(rest),
+        other => bail!("unknown command '{other}' (cluster|sketch|experiment|pipeline)"),
+    }
+}
+
+/// Load the job config (file + CLI overrides).
+fn job_from(args: &qckm::cli::ParsedArgs) -> Result<JobConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+            JobConfig::from_toml_str(&text)?
+        }
+        None => JobConfig::default(),
+    };
+    if let Some(m) = args.get_usize("m")? {
+        cfg.sketch.num_frequencies = m;
+    }
+    if let Some(k) = args.get_usize("k")? {
+        cfg.decode.k = k;
+    }
+    if let Some(method) = args.get("method") {
+        cfg.sketch.method = Method::parse(method)?;
+    }
+    if let Some(s) = args.get_f64("sigma")? {
+        cfg.sketch.sigma = SigmaHeuristic::Fixed(s);
+    }
+    if let Some(seed) = args.get_u64("seed")? {
+        cfg.seed = seed;
+    }
+    if let Some(r) = args.get_usize("replicates")? {
+        cfg.decode.replicates = r;
+    }
+    Ok(cfg)
+}
+
+fn build_operator(cfg: &JobConfig, x: &Mat, rng: &mut Rng) -> SketchOperator {
+    let sigma = cfg.sketch.sigma.resolve(x, rng);
+    let freqs = if cfg.sketch.method.dithered() {
+        DrawnFrequencies::draw(cfg.sketch.law, x.cols(), cfg.sketch.num_frequencies, sigma, rng)
+    } else {
+        DrawnFrequencies::draw_undithered(
+            cfg.sketch.law,
+            x.cols(),
+            cfg.sketch.num_frequencies,
+            sigma,
+            rng,
+        )
+    };
+    eprintln!(
+        "operator: method={} law={} M={} sigma={sigma:.4}",
+        cfg.sketch.method.name(),
+        cfg.sketch.law.name(),
+        cfg.sketch.num_frequencies
+    );
+    SketchOperator::new(freqs, cfg.sketch.method.signature())
+}
+
+fn cmd_cluster(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new("qckm cluster", "compressively cluster a CSV dataset")
+        .opt("data", "FILE", None, "input CSV (one sample per row)")
+        .opt("k", "NUM", None, "number of clusters")
+        .opt("m", "NUM", None, "number of frequencies")
+        .opt("method", "NAME", None, "ckm|qckm|triangle")
+        .opt("sigma", "FLOAT", None, "kernel bandwidth (default: heuristic)")
+        .opt("seed", "NUM", None, "RNG seed")
+        .opt("replicates", "NUM", None, "decoder replicates")
+        .opt("config", "FILE", None, "TOML job config")
+        .opt("out", "FILE", None, "write centroids CSV here");
+    let parsed = spec.parse(args)?;
+    let cfg = job_from(&parsed)?;
+    let data_path = parsed.get("data").context("--data is required")?;
+    let x = load_csv(Path::new(data_path))?;
+    eprintln!("loaded {} x {} from {data_path}", x.rows(), x.cols());
+
+    let mut rng = Rng::new(cfg.seed);
+    let op = build_operator(&cfg, &x, &mut rng);
+
+    // Acquire through the streaming coordinator (the Fig. 1 dataflow).
+    let wire = match cfg.sketch.method {
+        Method::Qckm => WireFormat::PackedBits,
+        _ => WireFormat::DenseF64,
+    };
+    let report = run_pipeline(
+        &op,
+        &SampleSource::Shared(Arc::new(x.clone())),
+        &PipelineConfig {
+            wire,
+            ..cfg.pipeline.clone()
+        },
+        cfg.seed,
+    );
+    eprintln!(
+        "acquired {} samples in {:.3}s ({:.0}/s), {} wire bytes, {} backpressure stalls",
+        report.samples,
+        report.elapsed_secs,
+        report.throughput(),
+        report.payload_bytes,
+        report.blocked_sends
+    );
+
+    let (lo, hi) = bounding_box(&x);
+    let sol = decode_best_of(
+        &op,
+        cfg.decode.k,
+        &report.sketch,
+        lo,
+        hi,
+        &cfg.decode.params,
+        cfg.decode.replicates,
+        &mut rng,
+    );
+    let s = qckm::metrics::sse(&x, &sol.centroids);
+    println!("objective = {:.6}, SSE/N = {:.6}", sol.objective, s / x.rows() as f64);
+    for k in 0..sol.centroids.rows() {
+        let row: Vec<String> = sol.centroids.row(k).iter().map(|v| format!("{v:.5}")).collect();
+        println!("c[{k}] (alpha={:.3}): {}", sol.weights[k], row.join(", "));
+    }
+    if let Some(out) = parsed.get("out") {
+        save_csv(Path::new(out), &sol.centroids)?;
+        eprintln!("centroids written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_sketch(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new("qckm sketch", "compute the pooled sketch of a CSV dataset")
+        .opt("data", "FILE", None, "input CSV")
+        .opt("m", "NUM", None, "number of frequencies")
+        .opt("method", "NAME", None, "ckm|qckm|triangle")
+        .opt("sigma", "FLOAT", None, "kernel bandwidth")
+        .opt("seed", "NUM", None, "RNG seed")
+        .opt("config", "FILE", None, "TOML job config")
+        .opt("out", "FILE", None, "write the sketch as one CSV row");
+    let parsed = spec.parse(args)?;
+    let cfg = job_from(&parsed)?;
+    let data_path = parsed.get("data").context("--data is required")?;
+    let x = load_csv(Path::new(data_path))?;
+    let mut rng = Rng::new(cfg.seed);
+    let op = build_operator(&cfg, &x, &mut rng);
+    let z = op.sketch_dataset(&x);
+    println!(
+        "sketch: {} slots, first 8: {:?}",
+        z.len(),
+        &z[..z.len().min(8)]
+    );
+    if let Some(out) = parsed.get("out") {
+        save_csv(Path::new(out), &Mat::from_vec(1, z.len(), z))?;
+        eprintln!("sketch written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new("qckm experiment", "regenerate a paper figure")
+        .positionals("<fig2a|fig2b|fig3|prop1|ablation>")
+        .flag("full", "paper-scale grid (slow) instead of the quick grid")
+        .opt("trials", "NUM", None, "override trials per cell")
+        .opt("samples", "NUM", None, "override dataset size")
+        .opt("seed", "NUM", None, "override seed");
+    let parsed = spec.parse(args)?;
+    let which = parsed
+        .positional(0)
+        .context("which experiment? (fig2a|fig2b|fig3|prop1|ablation)")?;
+    let full = parsed.flag("full");
+
+    match which {
+        "fig2a" | "fig2b" => {
+            let variant = if which == "fig2a" {
+                exp::Fig2Variant::VaryDimension
+            } else {
+                exp::Fig2Variant::VaryClusters
+            };
+            let mut cfg = if full {
+                exp::Fig2Config::full(variant)
+            } else {
+                exp::Fig2Config::quick(variant)
+            };
+            if let Some(t) = parsed.get_usize("trials")? {
+                cfg.trials = t;
+            }
+            if let Some(s) = parsed.get_usize("samples")? {
+                cfg.n_samples = s;
+            }
+            if let Some(seed) = parsed.get_u64("seed")? {
+                cfg.seed = seed;
+            }
+            let res = exp::run_fig2(&cfg);
+            println!("{}", res.render());
+        }
+        "fig3" => {
+            let mut cfg = if full {
+                exp::Fig3Config::full()
+            } else {
+                exp::Fig3Config::quick()
+            };
+            if let Some(t) = parsed.get_usize("trials")? {
+                cfg.trials = t;
+            }
+            if let Some(s) = parsed.get_usize("samples")? {
+                cfg.n_samples = s;
+            }
+            if let Some(seed) = parsed.get_u64("seed")? {
+                cfg.seed = seed;
+            }
+            let res = exp::run_fig3(&cfg);
+            println!("{}", res.render());
+        }
+        "prop1" => {
+            let mut cfg = exp::Prop1Config::default();
+            if let Some(t) = parsed.get_usize("trials")? {
+                cfg.repeats = t;
+            }
+            if let Some(seed) = parsed.get_u64("seed")? {
+                cfg.seed = seed;
+            }
+            for sig in [
+                Arc::new(qckm::signature::UniversalQuantizer) as Arc<dyn qckm::signature::Signature>,
+                Arc::new(qckm::signature::Triangle),
+            ] {
+                let res = exp::run_prop1(sig, &cfg);
+                println!("{}", res.render());
+            }
+        }
+        "ablation" => {
+            let mut cfg = exp::AblationConfig::default();
+            if let Some(t) = parsed.get_usize("trials")? {
+                cfg.trials = t;
+            }
+            if full {
+                cfg.trials = 30;
+                cfg.ratios = vec![0.5, 1.0, 2.0, 4.0, 8.0];
+            }
+            let res = exp::run_ablation(&cfg);
+            println!("{}", res.render());
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new("qckm pipeline", "streaming 1-bit sensor-cloud demo")
+        .opt("workers", "NUM", Some("4"), "sensor workers")
+        .opt("samples", "NUM", Some("100000"), "total samples to acquire")
+        .opt("dim", "NUM", Some("10"), "sample dimension")
+        .opt("k", "NUM", Some("4"), "clusters to synthesize + decode")
+        .opt("m", "NUM", Some("400"), "frequencies")
+        .opt("batch", "NUM", Some("64"), "examples per wire message")
+        .opt("queue", "NUM", Some("16"), "channel capacity")
+        .opt("wire", "FMT", Some("bits"), "bits|dense")
+        .opt("seed", "NUM", Some("0"), "seed");
+    let parsed = spec.parse(args)?;
+    let workers = parsed.get_usize("workers")?.unwrap();
+    let samples = parsed.get_usize("samples")?.unwrap();
+    let dim = parsed.get_usize("dim")?.unwrap();
+    let k = parsed.get_usize("k")?.unwrap();
+    let m = parsed.get_usize("m")?.unwrap();
+    let seed = parsed.get_u64("seed")?.unwrap();
+    let wire = match parsed.get("wire").unwrap() {
+        "bits" => WireFormat::PackedBits,
+        "dense" => WireFormat::DenseF64,
+        other => bail!("unknown wire '{other}'"),
+    };
+
+    // Synthetic sensor field: K Gaussians at random ±1 corners.
+    let mut rng = Rng::new(seed);
+    let proto = qckm::data::gaussian_mixture_pm1(k.max(2) * 64, dim, k, &mut rng);
+    let means = Arc::new(proto.means.clone());
+    let std = (dim as f64 / 20.0).sqrt();
+    let source = SampleSource::Synthetic {
+        total: samples,
+        dim,
+        make: Arc::new(move |r: &mut Rng, out: &mut [f64]| {
+            let c = r.next_below(means.rows() as u64) as usize;
+            for (j, v) in out.iter_mut().enumerate() {
+                *v = means.get(c, j) + std * r.gaussian();
+            }
+        }),
+    };
+
+    let sigma = SigmaHeuristic::default().resolve(&proto.points, &mut rng);
+    let freqs = DrawnFrequencies::draw(
+        qckm::frequency::FrequencyLaw::AdaptedRadius,
+        dim,
+        m,
+        sigma,
+        &mut rng,
+    );
+    let op = match wire {
+        WireFormat::PackedBits => SketchOperator::quantized(freqs),
+        WireFormat::DenseF64 => SketchOperator::new(freqs, Method::Ckm.signature()),
+    };
+
+    let report = run_pipeline(
+        &op,
+        &source,
+        &PipelineConfig {
+            workers,
+            batch_size: parsed.get_usize("batch")?.unwrap(),
+            queue_capacity: parsed.get_usize("queue")?.unwrap(),
+            wire,
+        },
+        seed,
+    );
+    println!(
+        "pipeline: {} samples in {:.3}s → {:.0} samples/s",
+        report.samples,
+        report.elapsed_secs,
+        report.throughput()
+    );
+    println!(
+        "wire: {} bytes total ({:.2} bytes/sample), queue high-water {}, {} stalls",
+        report.payload_bytes,
+        report.payload_bytes as f64 / report.samples as f64,
+        report.queue_high_water,
+        report.blocked_sends
+    );
+
+    let lo = vec![-2.0; dim];
+    let hi = vec![2.0; dim];
+    let sol = qckm::clompr::ClOmpr::new(&op, k)
+        .with_bounds(lo, hi)
+        .run(&report.sketch, &mut rng);
+    println!(
+        "decoded {} centroids, objective {:.4}",
+        sol.centroids.rows(),
+        sol.objective
+    );
+    for i in 0..sol.centroids.rows() {
+        let c: Vec<String> = sol.centroids.row(i).iter().take(6).map(|v| format!("{v:+.2}")).collect();
+        println!("  c[{i}] alpha={:.3} [{} …]", sol.weights[i], c.join(", "));
+    }
+    Ok(())
+}

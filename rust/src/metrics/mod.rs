@@ -1,0 +1,124 @@
+//! Clustering quality metrics: SSE, cluster assignment, Adjusted Rand Index.
+
+use crate::linalg::{sq_dist, Mat};
+
+/// Assign each row of `x` to its nearest centroid; returns labels.
+pub fn assign_labels(x: &Mat, centroids: &Mat) -> Vec<usize> {
+    assert_eq!(x.cols(), centroids.cols(), "dimension mismatch");
+    assert!(centroids.rows() > 0, "no centroids");
+    (0..x.rows())
+        .map(|i| {
+            let xi = x.row(i);
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for k in 0..centroids.rows() {
+                let d = sq_dist(xi, centroids.row(k));
+                if d < best_d {
+                    best_d = d;
+                    best = k;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Sum of Squared Errors (Eq. 1): `Σ_i min_k ‖x_i − c_k‖²`.
+pub fn sse(x: &Mat, centroids: &Mat) -> f64 {
+    assert_eq!(x.cols(), centroids.cols(), "dimension mismatch");
+    assert!(centroids.rows() > 0, "no centroids");
+    let mut total = 0.0;
+    for i in 0..x.rows() {
+        let xi = x.row(i);
+        let mut best = f64::INFINITY;
+        for k in 0..centroids.rows() {
+            let d = sq_dist(xi, centroids.row(k));
+            if d < best {
+                best = d;
+            }
+        }
+        total += best;
+    }
+    total
+}
+
+/// The paper's success criterion for the phase-transition diagrams:
+/// `SSE_method ≤ 1.2 · SSE_kmeans`.
+pub fn is_success(sse_method: f64, sse_kmeans: f64) -> bool {
+    sse_method <= 1.2 * sse_kmeans
+}
+
+/// Adjusted Rand Index between two labelings (Hubert & Arabie / Vinh et al.).
+///
+/// 1 for identical partitions, 0 in expectation for random ones; may be
+/// negative for adversarial partitions.
+pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len(), "labelings must have equal length");
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let ka = a.iter().max().map_or(0, |&m| m + 1);
+    let kb = b.iter().max().map_or(0, |&m| m + 1);
+    // Contingency table.
+    let mut table = vec![0u64; ka * kb];
+    let mut row = vec![0u64; ka];
+    let mut col = vec![0u64; kb];
+    for (&ai, &bi) in a.iter().zip(b) {
+        table[ai * kb + bi] += 1;
+        row[ai] += 1;
+        col[bi] += 1;
+    }
+    let comb2 = |x: u64| -> f64 { (x as f64) * (x as f64 - 1.0) / 2.0 };
+    let sum_table: f64 = table.iter().map(|&v| comb2(v)).sum();
+    let sum_row: f64 = row.iter().map(|&v| comb2(v)).sum();
+    let sum_col: f64 = col.iter().map(|&v| comb2(v)).sum();
+    let total = comb2(n as u64);
+    let expected = sum_row * sum_col / total;
+    let max_index = 0.5 * (sum_row + sum_col);
+    if (max_index - expected).abs() < 1e-12 {
+        return if (sum_table - expected).abs() < 1e-12 {
+            1.0
+        } else {
+            0.0
+        };
+    }
+    (sum_table - expected) / (max_index - expected)
+}
+
+/// Running mean / (unbiased) standard deviation accumulator, used by the
+/// experiment harnesses to report `mean ± std` like the paper's Fig. 3.
+#[derive(Clone, Debug, Default)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl RunningStats {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

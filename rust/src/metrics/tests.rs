@@ -1,0 +1,83 @@
+//! Metric tests: SSE by hand, ARI reference values and invariances.
+
+use super::*;
+use crate::rng::Rng;
+
+#[test]
+fn sse_and_labels_by_hand() {
+    let x = Mat::from_vec(4, 1, vec![0.0, 1.0, 10.0, 11.0]);
+    let c = Mat::from_vec(2, 1, vec![0.5, 10.5]);
+    assert_eq!(assign_labels(&x, &c), vec![0, 0, 1, 1]);
+    assert!((sse(&x, &c) - 4.0 * 0.25).abs() < 1e-12);
+}
+
+#[test]
+fn sse_zero_when_centroids_cover_points() {
+    let x = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+    assert_eq!(sse(&x, &x), 0.0);
+}
+
+#[test]
+fn success_criterion_threshold() {
+    assert!(is_success(1.0, 1.0));
+    assert!(is_success(1.19, 1.0));
+    assert!(!is_success(1.21, 1.0));
+}
+
+#[test]
+fn ari_identical_partitions_is_one() {
+    let a = vec![0, 0, 1, 1, 2, 2];
+    assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+    // Invariance to label permutation.
+    let b = vec![2, 2, 0, 0, 1, 1];
+    assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn ari_known_value() {
+    // Classic example: a = [0,0,1,1], b = [0,1,1,1].
+    // Contingency: [[1,1],[0,2]]; Σcomb(n_ij)=1, Σcomb(a)=2, Σcomb(b)=3+0=3,
+    // total comb = 6; expected = 1; max = 2.5 → ARI = 0/1.5 = 0.
+    let a = vec![0, 0, 1, 1];
+    let b = vec![0, 1, 1, 1];
+    let got = adjusted_rand_index(&a, &b);
+    assert!(got.abs() < 1e-12, "ARI = {got}");
+}
+
+#[test]
+fn ari_random_labels_near_zero() {
+    let mut rng = Rng::new(4);
+    let n = 20_000;
+    let a: Vec<usize> = (0..n).map(|_| rng.next_below(5) as usize).collect();
+    let b: Vec<usize> = (0..n).map(|_| rng.next_below(5) as usize).collect();
+    let ari = adjusted_rand_index(&a, &b);
+    assert!(ari.abs() < 0.01, "random ARI = {ari}");
+}
+
+#[test]
+fn ari_degenerate_all_singletons_vs_all_same() {
+    let a: Vec<usize> = (0..6).collect(); // singletons
+    let b = vec![0; 6]; // one block
+    // max_index == expected → defined as 0 here (not identical partitions).
+    assert_eq!(adjusted_rand_index(&a, &b), 0.0);
+    // Tiny inputs.
+    assert_eq!(adjusted_rand_index(&[0], &[0]), 1.0);
+}
+
+#[test]
+fn running_stats_mean_std() {
+    let mut s = RunningStats::default();
+    for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+        s.push(x);
+    }
+    assert_eq!(s.count(), 8);
+    assert!((s.mean() - 5.0).abs() < 1e-12);
+    // Unbiased std of that classic dataset = sqrt(32/7).
+    assert!((s.std() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+    let single = {
+        let mut t = RunningStats::default();
+        t.push(3.0);
+        t
+    };
+    assert_eq!(single.std(), 0.0);
+}

@@ -1,0 +1,20 @@
+//! Numerical optimizers backing the CL-OMPR decoder.
+//!
+//! CL-OMPR needs two solvers, both implemented here from scratch:
+//!
+//! * [`lbfgsb`] — box-constrained limited-memory quasi-Newton minimization
+//!   (projected L-BFGS with Armijo backtracking). Used for Step 1 (find a
+//!   centroid correlated with the residual, `l ≤ c ≤ u`) and Step 5 (joint
+//!   refinement of all centroids and weights, with `α ≥ 0`).
+//! * [`nnls`] — non-negative least squares `min ‖A x − b‖, x ≥ 0` via
+//!   Lawson–Hanson active sets. Used for Steps 3 and 4 (support reduction
+//!   and weight projection).
+
+mod lbfgs;
+mod nnls;
+
+pub use lbfgs::{lbfgsb, Bounds, LbfgsParams, LbfgsResult};
+pub use nnls::nnls;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,89 @@
+//! Lawson–Hanson non-negative least squares.
+//!
+//! Solves `min_x ‖A x − b‖₂  s.t.  x ≥ 0` by active-set iteration: grow a
+//! passive set P greedily by the most positive gradient coordinate, solve
+//! the unconstrained LS on P (Householder QR from `crate::linalg`), and
+//! back-track along the segment to feasibility whenever the LS solution
+//! leaves the positive orthant. Finite termination is guaranteed; sizes in
+//! this crate are tiny (columns = |C| ≤ 2K), so no fancy updating is needed.
+
+use crate::linalg::{lstsq, matvec, matvec_t, sub, Mat};
+
+/// Solve `min ‖A x − b‖, x ≥ 0`. Returns the solution (length `A.cols()`).
+pub fn nnls(a: &Mat, b: &[f64]) -> Vec<f64> {
+    let (m, n) = a.shape();
+    assert_eq!(b.len(), m, "nnls: rhs length mismatch");
+    let mut x = vec![0.0; n];
+    let mut passive = vec![false; n];
+
+    // w = Aᵀ(b − A x): the negative gradient.
+    let mut w = matvec_t(a, b);
+    let tol = 1e-10 * a.max_abs().max(1.0) * b.iter().fold(0.0f64, |acc, v| acc.max(v.abs())).max(1.0);
+
+    for _outer in 0..(3 * n.max(10)) {
+        // Pick the most promising zero coordinate.
+        let mut best = None;
+        let mut best_w = tol;
+        for j in 0..n {
+            if !passive[j] && w[j] > best_w {
+                best_w = w[j];
+                best = Some(j);
+            }
+        }
+        let Some(j_star) = best else { break };
+        passive[j_star] = true;
+
+        // Inner loop: LS on the passive set, clip to feasibility.
+        loop {
+            let p_idx: Vec<usize> = (0..n).filter(|&j| passive[j]).collect();
+            if p_idx.is_empty() {
+                break;
+            }
+            // Sub-matrix with passive columns.
+            let ap = Mat::from_fn(m, p_idx.len(), |r, c| a.get(r, p_idx[c]));
+            let z = match lstsq(&ap, b) {
+                Some(z) => z,
+                None => {
+                    // Rank-deficient passive set: drop the newest column.
+                    passive[*p_idx.last().unwrap()] = false;
+                    break;
+                }
+            };
+            if z.iter().all(|&v| v > tol) {
+                // Fully feasible LS solution on P.
+                x.fill(0.0);
+                for (c, &j) in p_idx.iter().enumerate() {
+                    x[j] = z[c];
+                }
+                break;
+            }
+            // Back-track: find the largest step keeping x ≥ 0, zero the
+            // blocking coordinates, and retry.
+            let mut alpha = 1.0f64;
+            for (c, &j) in p_idx.iter().enumerate() {
+                if z[c] <= tol {
+                    let xj = x[j];
+                    let denom = xj - z[c];
+                    if denom > 0.0 {
+                        alpha = alpha.min(xj / denom);
+                    }
+                }
+            }
+            for (c, &j) in p_idx.iter().enumerate() {
+                x[j] += alpha * (z[c] - x[j]);
+                if x[j] <= tol {
+                    x[j] = 0.0;
+                    passive[j] = false;
+                }
+            }
+        }
+
+        // Refresh the gradient.
+        let r = sub(b, &matvec(a, &x));
+        w = matvec_t(a, &r);
+        if (0..n).all(|j| passive[j] || w[j] <= tol) {
+            break;
+        }
+    }
+    x
+}

@@ -1,0 +1,199 @@
+//! Optimizer tests: quadratics with known solutions, Rosenbrock, boxes,
+//! NNLS against KKT conditions.
+
+use super::*;
+use crate::linalg::{matvec, matvec_t, sub, Mat};
+use crate::rng::Rng;
+
+fn quadratic<'a>(a: &'a Mat, b: &'a [f64]) -> impl FnMut(&[f64], &mut [f64]) -> f64 + 'a {
+    // f(x) = ½ xᵀAx − bᵀx, ∇f = Ax − b.
+    move |x, g| {
+        let ax = matvec(a, x);
+        for i in 0..x.len() {
+            g[i] = ax[i] - b[i];
+        }
+        0.5 * crate::linalg::dot(x, &ax) - crate::linalg::dot(b, x)
+    }
+}
+
+#[test]
+fn lbfgs_solves_unconstrained_quadratic() {
+    let a = Mat::from_vec(3, 3, vec![4., 1., 0., 1., 3., 0.5, 0., 0.5, 2.]);
+    let b = vec![1.0, -2.0, 0.5];
+    let res = lbfgsb(
+        quadratic(&a, &b),
+        &[0.0; 3],
+        &Bounds::unbounded(3),
+        &LbfgsParams::default(),
+    );
+    assert!(res.converged, "did not converge: {res:?}");
+    // Solution solves A x = b.
+    let ax = matvec(&a, &res.x);
+    for (l, r) in ax.iter().zip(&b) {
+        assert!((l - r).abs() < 1e-5, "Ax−b residual");
+    }
+}
+
+#[test]
+fn lbfgs_respects_box_constraints() {
+    // min (x−3)² + (y+2)² on [0,1]×[0,1] → (1, 0).
+    let f = |x: &[f64], g: &mut [f64]| {
+        g[0] = 2.0 * (x[0] - 3.0);
+        g[1] = 2.0 * (x[1] + 2.0);
+        (x[0] - 3.0).powi(2) + (x[1] + 2.0).powi(2)
+    };
+    let bounds = Bounds::boxed(&[0.0, 0.0], &[1.0, 1.0]);
+    let res = lbfgsb(f, &[0.5, 0.5], &bounds, &LbfgsParams::default());
+    assert!((res.x[0] - 1.0).abs() < 1e-7, "x = {:?}", res.x);
+    assert!(res.x[1].abs() < 1e-7, "x = {:?}", res.x);
+    assert!(res.converged);
+}
+
+#[test]
+fn lbfgs_rosenbrock() {
+    let f = |x: &[f64], g: &mut [f64]| {
+        let (a, b) = (x[0], x[1]);
+        g[0] = -2.0 * (1.0 - a) - 400.0 * a * (b - a * a);
+        g[1] = 200.0 * (b - a * a);
+        (1.0 - a).powi(2) + 100.0 * (b - a * a).powi(2)
+    };
+    let mut p = LbfgsParams::default();
+    p.max_iters = 2000;
+    let res = lbfgsb(f, &[-1.2, 1.0], &Bounds::unbounded(2), &p);
+    assert!(
+        (res.x[0] - 1.0).abs() < 1e-4 && (res.x[1] - 1.0).abs() < 1e-4,
+        "rosenbrock solution {:?} after {} iters",
+        res.x,
+        res.iters
+    );
+}
+
+#[test]
+fn lbfgs_sinusoidal_objective_finds_local_min() {
+    // The decoder's objective class: sum of cosines. From a start near a
+    // basin, it must find that basin's minimum.
+    let f = |x: &[f64], g: &mut [f64]| {
+        g[0] = -3.0 * (3.0 * x[0]).sin(); // d/dx cos(3x) = −3 sin(3x)
+        (3.0 * x[0]).cos()
+    };
+    let res = lbfgsb(
+        f,
+        &[0.9],
+        &Bounds::boxed(&[0.0], &[2.0]),
+        &LbfgsParams::default(),
+    );
+    // Nearest minimum of cos(3x): 3x = π → x = π/3 ≈ 1.0472.
+    assert!(
+        (res.x[0] - std::f64::consts::PI / 3.0).abs() < 1e-6,
+        "x = {:?}",
+        res.x
+    );
+}
+
+#[test]
+fn lbfgs_starts_projected_if_infeasible() {
+    let f = |x: &[f64], g: &mut [f64]| {
+        g[0] = 2.0 * x[0];
+        x[0] * x[0]
+    };
+    let res = lbfgsb(
+        f,
+        &[10.0],
+        &Bounds::boxed(&[1.0], &[5.0]),
+        &LbfgsParams::default(),
+    );
+    assert!((res.x[0] - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn bounds_helpers() {
+    let b = Bounds::boxed(&[0.0], &[1.0]).concat(Bounds::lower(&[0.0, 0.0]));
+    assert_eq!(b.len(), 3);
+    assert!(!b.is_empty());
+    let mut x = vec![2.0, -1.0, 5.0];
+    b.project(&mut x);
+    assert_eq!(x, vec![1.0, 0.0, 5.0]);
+    // Stationarity: zero gradient → zero measure.
+    assert_eq!(b.stationarity(&x, &[0.0, 0.0, 0.0]), 0.0);
+    // Gradient pushing out of the box → measure 0 at the boundary.
+    assert_eq!(b.stationarity(&[1.0, 0.0, 1.0], &[-1.0, 1.0, 0.0]), 0.0);
+}
+
+#[test]
+#[should_panic]
+fn bounds_reject_inverted_box() {
+    let _ = Bounds::boxed(&[1.0], &[0.0]);
+}
+
+#[test]
+fn nnls_matches_unconstrained_when_interior() {
+    // If the LS solution is positive, NNLS must return it.
+    let a = Mat::from_vec(4, 2, vec![1., 0., 0., 1., 1., 1., 1., -1.]);
+    let x_true = [2.0, 1.0];
+    let b = matvec(&a, &x_true);
+    let x = nnls(&a, &b);
+    for (xi, ti) in x.iter().zip(&x_true) {
+        assert!((xi - ti).abs() < 1e-8, "nnls {x:?}");
+    }
+}
+
+#[test]
+fn nnls_clamps_negative_coordinates() {
+    // LS solution has a negative coordinate → NNLS must zero it.
+    let a = Mat::from_vec(3, 2, vec![1., 1., 1., 1.000001, 1., 1.]);
+    let b = [1.0, -0.5, 0.7];
+    let x = nnls(&a, &b);
+    assert!(x.iter().all(|&v| v >= 0.0), "negative output {x:?}");
+    // KKT: for active coordinates (x_j = 0), gradient w_j = (Aᵀr)_j ≤ tol.
+    let r = sub(&b, &matvec(&a, &x));
+    let w = matvec_t(&a, &r);
+    for (j, (&xj, &wj)) in x.iter().zip(&w).enumerate() {
+        if xj == 0.0 {
+            assert!(wj < 1e-6, "KKT violated at {j}: w = {wj}");
+        } else {
+            assert!(wj.abs() < 1e-6, "stationarity violated at {j}: w = {wj}");
+        }
+    }
+}
+
+#[test]
+fn nnls_random_problems_satisfy_kkt() {
+    let mut rng = Rng::new(123);
+    for trial in 0..25 {
+        let m = 20 + (trial % 5) * 7;
+        let n = 2 + trial % 6;
+        let a = Mat::from_fn(m, n, |_, _| rng.gaussian());
+        let b: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let x = nnls(&a, &b);
+        assert!(x.iter().all(|&v| v >= 0.0));
+        let r = sub(&b, &matvec(&a, &x));
+        let w = matvec_t(&a, &r);
+        for j in 0..n {
+            if x[j] > 1e-9 {
+                assert!(w[j].abs() < 1e-6, "trial {trial}: w[{j}] = {}", w[j]);
+            } else {
+                assert!(w[j] < 1e-6, "trial {trial}: w[{j}] = {}", w[j]);
+            }
+        }
+    }
+}
+
+#[test]
+fn nnls_zero_rhs_gives_zero() {
+    let a = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+    let x = nnls(&a, &[0.0, 0.0, 0.0]);
+    assert!(x.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn nnls_handles_duplicate_columns() {
+    // Rank-deficient A: two identical columns. Any split is optimal; the
+    // solver must terminate and satisfy x ≥ 0 with small residual gradient.
+    let a = Mat::from_vec(3, 2, vec![1., 1., 2., 2., 3., 3.]);
+    let b = [2.0, 4.0, 6.0];
+    let x = nnls(&a, &b);
+    let fitted = matvec(&a, &x);
+    for (f, t) in fitted.iter().zip(&b) {
+        assert!((f - t).abs() < 1e-6, "fit {fitted:?}");
+    }
+}

@@ -1,0 +1,112 @@
+//! Distribution helpers layered on [`Xoshiro256pp`].
+
+use super::Xoshiro256pp;
+
+impl Xoshiro256pp {
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard Gaussian via Box–Muller (polar-free, two uniforms).
+    ///
+    /// We deliberately use the trigonometric form and drop the second
+    /// variate: it keeps the generator stateless w.r.t. cached spares, which
+    /// matters for reproducible parallel substreams.
+    #[inline]
+    pub fn gaussian(&mut self) -> f64 {
+        // Guard against log(0).
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Gaussian with the given mean and standard deviation.
+    #[inline]
+    pub fn gaussian_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gaussian()
+    }
+
+    /// Fill `out` with iid standard Gaussians.
+    pub fn fill_gaussian(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.gaussian();
+        }
+    }
+
+    /// A uniformly random direction on the unit sphere of dimension `n`.
+    pub fn sphere_direction(&mut self, n: usize) -> Vec<f64> {
+        loop {
+            let mut v: Vec<f64> = (0..n).map(|_| self.gaussian()).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-12 {
+                for x in v.iter_mut() {
+                    *x /= norm;
+                }
+                return v;
+            }
+        }
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        let n = xs.len();
+        if n < 2 {
+            return;
+        }
+        for i in (1..n).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (k ≤ n), in random order.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct indices from 0..{n}");
+        if k * 4 >= n {
+            // Dense case: partial Fisher–Yates.
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + self.next_below((n - i) as u64) as usize;
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        } else {
+            // Sparse case: rejection with a sorted probe set.
+            let mut chosen = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let v = self.next_below(n as u64) as usize;
+                if chosen.insert(v) {
+                    out.push(v);
+                }
+            }
+            out
+        }
+    }
+
+    /// Sample an index according to (unnormalized, non-negative) weights.
+    ///
+    /// Used by k-means++ seeding. Returns `None` if all weights are zero.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> Option<usize> {
+        let total: f64 = weights.iter().sum();
+        if !(total > 0.0) {
+            return None;
+        }
+        let mut target = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            target -= w;
+            if target <= 0.0 {
+                return Some(i);
+            }
+        }
+        Some(weights.len() - 1) // float round-off fallthrough
+    }
+}

@@ -1,0 +1,70 @@
+//! Inverse-CDF table sampling for arbitrary 1-D densities.
+//!
+//! The adapted-radius frequency distribution of Keriven et al. has the
+//! unnormalized density `p(R) ∝ sqrt(R² + R⁴/4) · exp(−R²/2)` which has no
+//! closed-form inverse CDF. We tabulate the CDF on a fine grid once and
+//! sample by linear interpolation — exact enough (the density is smooth) and
+//! O(log grid) per draw.
+
+use super::Xoshiro256pp;
+
+/// A tabulated inverse CDF over a bounded support `[lo, hi]`.
+#[derive(Clone, Debug)]
+pub struct InverseCdfTable {
+    /// Grid points (len = resolution + 1), uniformly spaced on `[lo, hi]`.
+    xs: Vec<f64>,
+    /// Normalized CDF values at `xs` (cdf[0] = 0, cdf[last] = 1).
+    cdf: Vec<f64>,
+}
+
+impl InverseCdfTable {
+    /// Build the table from an (unnormalized, non-negative) density.
+    ///
+    /// `resolution` trapezoid cells are used; 4096 is plenty for the smooth
+    /// densities in this crate.
+    pub fn from_density(density: impl Fn(f64) -> f64, lo: f64, hi: f64, resolution: usize) -> Self {
+        assert!(hi > lo && resolution >= 8);
+        let n = resolution;
+        let h = (hi - lo) / n as f64;
+        let xs: Vec<f64> = (0..=n).map(|i| lo + i as f64 * h).collect();
+        let pdf: Vec<f64> = xs.iter().map(|&x| density(x).max(0.0)).collect();
+        let mut cdf = vec![0.0; n + 1];
+        for i in 1..=n {
+            cdf[i] = cdf[i - 1] + 0.5 * (pdf[i - 1] + pdf[i]) * h;
+        }
+        let total = cdf[n];
+        assert!(
+            total > 0.0 && total.is_finite(),
+            "density integrates to {total}; cannot build inverse CDF"
+        );
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        cdf[n] = 1.0;
+        Self { xs, cdf }
+    }
+
+    /// Map a uniform `u ∈ [0,1)` through the inverse CDF.
+    pub fn quantile(&self, u: f64) -> f64 {
+        let u = u.clamp(0.0, 1.0);
+        // Binary search for the cell containing u.
+        let mut lo = 0usize;
+        let mut hi = self.cdf.len() - 1;
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if self.cdf[mid] <= u {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let (c0, c1) = (self.cdf[lo], self.cdf[hi]);
+        let t = if c1 > c0 { (u - c0) / (c1 - c0) } else { 0.0 };
+        self.xs[lo] + t * (self.xs[hi] - self.xs[lo])
+    }
+
+    /// Draw one sample.
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        self.quantile(rng.next_f64())
+    }
+}

@@ -1,0 +1,28 @@
+//! Self-contained pseudo-random number generation.
+//!
+//! The build environment has no access to the `rand` crate family, so this
+//! module implements the small slice of it the library needs, from scratch:
+//!
+//! * [`Xoshiro256pp`] — the xoshiro256++ generator (Blackman & Vigna), a fast
+//!   non-cryptographic PRNG with 256-bit state and good statistical quality.
+//! * [`SplitMix64`] — used to expand a user seed into xoshiro state and to
+//!   derive independent sub-streams for parallel workers.
+//! * Distribution helpers: uniform reals/ints, Box–Muller Gaussians, uniform
+//!   directions on the sphere, Fisher–Yates shuffling and an inverse-CDF table
+//!   sampler used by the adapted-radius frequency distribution.
+//!
+//! All algorithms are deterministic given a seed; experiments record their
+//! seeds so every table in EXPERIMENTS.md is exactly reproducible.
+
+mod xoshiro;
+mod distributions;
+mod inverse_cdf;
+
+pub use inverse_cdf::InverseCdfTable;
+pub use xoshiro::{SplitMix64, Xoshiro256pp};
+
+/// The library-wide default RNG. An alias so call-sites stay generic-free.
+pub type Rng = Xoshiro256pp;
+
+#[cfg(test)]
+mod tests;

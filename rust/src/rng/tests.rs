@@ -1,0 +1,148 @@
+//! Statistical sanity tests for the RNG substrate.
+
+use super::*;
+
+#[test]
+fn uniform_mean_and_range() {
+    let mut r = Rng::new(11);
+    let n = 50_000;
+    let mut sum = 0.0;
+    for _ in 0..n {
+        let x = r.uniform(-2.0, 6.0);
+        assert!((-2.0..6.0).contains(&x));
+        sum += x;
+    }
+    let mean = sum / n as f64;
+    assert!((mean - 2.0).abs() < 0.05, "uniform mean {mean} far from 2.0");
+}
+
+#[test]
+fn gaussian_moments() {
+    let mut r = Rng::new(5);
+    let n = 200_000;
+    let (mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0);
+    for _ in 0..n {
+        let x = r.gaussian();
+        s1 += x;
+        s2 += x * x;
+        s3 += x * x * x;
+    }
+    let mean = s1 / n as f64;
+    let var = s2 / n as f64 - mean * mean;
+    let skew = s3 / n as f64;
+    assert!(mean.abs() < 0.01, "gaussian mean {mean}");
+    assert!((var - 1.0).abs() < 0.02, "gaussian var {var}");
+    assert!(skew.abs() < 0.03, "gaussian third moment {skew}");
+}
+
+#[test]
+fn gaussian_with_scales_and_shifts() {
+    let mut r = Rng::new(8);
+    let n = 100_000;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    for _ in 0..n {
+        let x = r.gaussian_with(3.0, 0.5);
+        s1 += x;
+        s2 += (x - 3.0) * (x - 3.0);
+    }
+    assert!((s1 / n as f64 - 3.0).abs() < 0.01);
+    assert!((s2 / n as f64 - 0.25).abs() < 0.01);
+}
+
+#[test]
+fn sphere_direction_is_unit_norm_and_isotropic() {
+    let mut r = Rng::new(13);
+    let n_dim = 8;
+    let trials = 20_000;
+    let mut mean = vec![0.0; n_dim];
+    for _ in 0..trials {
+        let v = r.sphere_direction(n_dim);
+        let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-9);
+        for (m, x) in mean.iter_mut().zip(&v) {
+            *m += x;
+        }
+    }
+    for m in &mean {
+        assert!((m / trials as f64).abs() < 0.02, "directional bias {m}");
+    }
+}
+
+#[test]
+fn shuffle_is_a_permutation() {
+    let mut r = Rng::new(21);
+    let mut xs: Vec<usize> = (0..100).collect();
+    r.shuffle(&mut xs);
+    let mut sorted = xs.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+}
+
+#[test]
+fn shuffle_trivial_cases() {
+    let mut r = Rng::new(1);
+    let mut empty: Vec<u8> = vec![];
+    r.shuffle(&mut empty);
+    let mut one = vec![42];
+    r.shuffle(&mut one);
+    assert_eq!(one, vec![42]);
+}
+
+#[test]
+fn sample_indices_distinct_both_paths() {
+    let mut r = Rng::new(77);
+    // Dense path (k close to n).
+    let dense = r.sample_indices(10, 9);
+    let set: std::collections::HashSet<_> = dense.iter().collect();
+    assert_eq!(set.len(), 9);
+    // Sparse path.
+    let sparse = r.sample_indices(100_000, 10);
+    let set: std::collections::HashSet<_> = sparse.iter().collect();
+    assert_eq!(set.len(), 10);
+    assert!(sparse.iter().all(|&i| i < 100_000));
+}
+
+#[test]
+#[should_panic]
+fn sample_indices_rejects_oversample() {
+    let mut r = Rng::new(0);
+    let _ = r.sample_indices(3, 4);
+}
+
+#[test]
+fn weighted_index_matches_weights() {
+    let mut r = Rng::new(31);
+    let weights = [0.0, 1.0, 3.0];
+    let mut counts = [0usize; 3];
+    for _ in 0..40_000 {
+        counts[r.weighted_index(&weights).unwrap()] += 1;
+    }
+    assert_eq!(counts[0], 0);
+    let ratio = counts[2] as f64 / counts[1] as f64;
+    assert!((ratio - 3.0).abs() < 0.2, "weighted ratio {ratio}");
+    assert_eq!(r.weighted_index(&[0.0, 0.0]), None);
+}
+
+#[test]
+fn inverse_cdf_recovers_uniform() {
+    // density = const on [2, 5] → quantile(u) = 2 + 3u.
+    let t = InverseCdfTable::from_density(|_| 1.0, 2.0, 5.0, 64);
+    for &(u, want) in &[(0.0, 2.0), (0.5, 3.5), (1.0, 5.0), (0.25, 2.75)] {
+        assert!((t.quantile(u) - want).abs() < 1e-9, "quantile({u})");
+    }
+}
+
+#[test]
+fn inverse_cdf_matches_triangular_density() {
+    // density p(x) = x on [0,1] → CDF x² → quantile sqrt(u).
+    let t = InverseCdfTable::from_density(|x| x, 0.0, 1.0, 4096);
+    for &u in &[0.1, 0.3, 0.5, 0.9] {
+        assert!((t.quantile(u) - u.sqrt()).abs() < 1e-3);
+    }
+    // Sampled moments: E[X] = 2/3.
+    let mut r = Rng::new(9);
+    let n = 50_000;
+    let mean: f64 = (0..n).map(|_| t.sample(&mut r)).sum::<f64>() / n as f64;
+    assert!((mean - 2.0 / 3.0).abs() < 0.01, "triangular mean {mean}");
+}

@@ -1,0 +1,57 @@
+//! The `SketchEngine` trait and the native implementation.
+
+use crate::linalg::Mat;
+use crate::sketch::{PooledSketch, SketchOperator};
+
+/// Anything that can pool sketch contributions of a row-batch of examples.
+///
+/// Not `Send`: the PJRT client wraps thread-affine FFI handles (`Rc` + raw
+/// pointers inside the `xla` crate). The coordinator's worker threads use
+/// [`crate::sketch::SketchOperator`] directly; engines run on the leader.
+pub trait SketchEngine {
+    /// Accumulate the contributions of every row of `x` into `pool`.
+    fn sketch_into(&self, x: &Mat, pool: &mut PooledSketch) -> anyhow::Result<()>;
+
+    /// Sketch length (`2M`).
+    fn sketch_len(&self) -> usize;
+
+    /// Human-readable engine name for logs.
+    fn name(&self) -> &'static str;
+
+    /// Convenience: pooled mean sketch of a dataset.
+    fn sketch_dataset(&self, x: &Mat) -> anyhow::Result<Vec<f64>> {
+        let mut pool = PooledSketch::new(self.sketch_len());
+        self.sketch_into(x, &mut pool)?;
+        Ok(pool.mean())
+    }
+}
+
+/// Pure-Rust engine: delegates to the blocked encode in `crate::sketch`.
+pub struct NativeEngine {
+    op: SketchOperator,
+}
+
+impl NativeEngine {
+    pub fn new(op: SketchOperator) -> Self {
+        Self { op }
+    }
+
+    pub fn operator(&self) -> &SketchOperator {
+        &self.op
+    }
+}
+
+impl SketchEngine for NativeEngine {
+    fn sketch_into(&self, x: &Mat, pool: &mut PooledSketch) -> anyhow::Result<()> {
+        self.op.sketch_into(x, pool);
+        Ok(())
+    }
+
+    fn sketch_len(&self) -> usize {
+        self.op.sketch_len()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}

@@ -1,0 +1,83 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+//!
+//! Plain text, one artifact per line:
+//!
+//! ```text
+//! # name kind batch dim m file
+//! sketch_qckm sketch 256 10 1000 sketch_qckm.hlo.txt
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact: a compiled sketch kernel at fixed shapes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    /// Artifact name (e.g. `sketch_qckm`).
+    pub name: String,
+    /// Kind tag (currently always `sketch`).
+    pub kind: String,
+    /// Fixed row-batch the computation was lowered for.
+    pub batch: usize,
+    /// Data dimension n.
+    pub dim: usize,
+    /// Number of frequencies M.
+    pub m: usize,
+    /// HLO text file, relative to the manifest.
+    pub file: PathBuf,
+}
+
+/// The parsed manifest of an `artifacts/` directory.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub entries: Vec<ArtifactEntry>,
+    /// Directory the manifest lives in (file paths resolve against it).
+    pub root: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, root: &Path) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 6 {
+                bail!("manifest line {}: expected 6 fields, got {}", i + 1, parts.len());
+            }
+            entries.push(ArtifactEntry {
+                name: parts[0].to_string(),
+                kind: parts[1].to_string(),
+                batch: parts[2].parse().with_context(|| format!("line {}: batch", i + 1))?,
+                dim: parts[3].parse().with_context(|| format!("line {}: dim", i + 1))?,
+                m: parts[4].parse().with_context(|| format!("line {}: m", i + 1))?,
+                file: PathBuf::from(parts[5]),
+            });
+        }
+        Ok(Self {
+            entries,
+            root: root.to_path_buf(),
+        })
+    }
+
+    /// Find an artifact by name.
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.root.join(&entry.file)
+    }
+}

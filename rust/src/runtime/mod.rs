@@ -1,0 +1,29 @@
+//! Execution engines for the sketch hot path.
+//!
+//! The encode `z_X = (1/N) Σ f(Ω^T x_i + ξ)` is the only dense-compute step
+//! in the system, and it has two interchangeable implementations behind the
+//! [`SketchEngine`] trait:
+//!
+//! * [`NativeEngine`] — the pure-Rust blocked implementation
+//!   ([`crate::sketch::SketchOperator::sketch_into`]); works for any shape,
+//!   used by the parameter sweeps.
+//! * [`PjrtEngine`] — loads the AOT artifact lowered by
+//!   `python/compile/aot.py` (JAX model calling the Pallas kernel,
+//!   interchanged as **HLO text**) and executes it on the PJRT CPU client
+//!   via the `xla` crate. Fixed flagship shapes; Python never runs at
+//!   request time. Remainder rows (N mod batch) fall back to the native
+//!   path so results stay exact.
+//!
+//! Artifact discovery goes through [`ArtifactManifest`], the tiny index
+//! `aot.py` writes next to the `.hlo.txt` files.
+
+mod engine;
+mod manifest;
+mod pjrt;
+
+pub use engine::{NativeEngine, SketchEngine};
+pub use manifest::{ArtifactEntry, ArtifactManifest};
+pub use pjrt::PjrtEngine;
+
+#[cfg(test)]
+mod tests;

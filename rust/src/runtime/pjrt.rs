@@ -1,0 +1,151 @@
+//! The PJRT-backed engine: executes the AOT-lowered JAX/Pallas sketch.
+//!
+//! Mirrors `/opt/xla-example/load_hlo`: HLO **text** is the interchange
+//! format (jax ≥ 0.5 serialized protos carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! The lowered computation is
+//! `sketch_sum(X[B,n] f32, Ω[n,M] f32, ξ[M] f32) → f32[2M]`
+//! — the batch-summed signature contributions, so pooling stays linear and
+//! the Rust side only divides by N at the end. Full batches go through
+//! PJRT; the `N mod B` remainder uses the native path (bit-exact layout,
+//! f32-rounded values).
+
+use super::engine::SketchEngine;
+use super::manifest::{ArtifactEntry, ArtifactManifest};
+use crate::linalg::Mat;
+use crate::sketch::{PooledSketch, SketchOperator};
+use anyhow::{bail, Context, Result};
+
+/// A PJRT CPU executable for the sketch at fixed `(batch, n, M)` shapes.
+pub struct PjrtEngine {
+    exe: xla::PjRtLoadedExecutable,
+    op: SketchOperator,
+    batch: usize,
+    /// Ω as f32 (row-major `n × M`), fed to every execution.
+    omega_f32: Vec<f32>,
+    /// ξ as f32, length M.
+    xi_f32: Vec<f32>,
+    platform: String,
+}
+
+impl PjrtEngine {
+    /// Load artifact `name` from `manifest`, validating its shapes against
+    /// the operator's (the same Ω/ξ draw must be fed at run time).
+    pub fn load(manifest: &ArtifactManifest, name: &str, op: SketchOperator) -> Result<Self> {
+        let entry: &ArtifactEntry = manifest
+            .find(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        if entry.dim != op.dim() || entry.m != op.num_frequencies() {
+            bail!(
+                "artifact '{name}' lowered for (n={}, M={}) but operator has (n={}, M={})",
+                entry.dim,
+                entry.m,
+                op.dim(),
+                op.num_frequencies()
+            );
+        }
+        let path = manifest.path_of(entry);
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let platform = client.platform_name();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+
+        let freqs = op.frequencies();
+        let omega_f32: Vec<f32> = freqs.omega.as_slice().iter().map(|&v| v as f32).collect();
+        let xi_f32: Vec<f32> = freqs.xi.iter().map(|&v| v as f32).collect();
+        Ok(Self {
+            exe,
+            op,
+            batch: entry.batch,
+            omega_f32,
+            xi_f32,
+            platform,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    pub fn operator(&self) -> &SketchOperator {
+        &self.op
+    }
+
+    /// Run one full batch (rows.len() == batch × n) through the executable;
+    /// returns the per-slot contribution *sum* over the batch (length 2M).
+    fn run_batch(&self, rows_f32: &[f32]) -> Result<Vec<f64>> {
+        let n = self.op.dim() as i64;
+        let m = self.op.num_frequencies() as i64;
+        let x = xla::Literal::vec1(rows_f32)
+            .reshape(&[self.batch as i64, n])
+            .context("reshape X literal")?;
+        let omega = xla::Literal::vec1(&self.omega_f32)
+            .reshape(&[n, m])
+            .context("reshape Ω literal")?;
+        let xi = xla::Literal::vec1(&self.xi_f32)
+            .reshape(&[m])
+            .context("reshape ξ literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[x, omega, xi])
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrap result tuple")?;
+        let values = out.to_vec::<f32>().context("read result values")?;
+        if values.len() != self.op.sketch_len() {
+            bail!(
+                "artifact returned {} slots, expected {}",
+                values.len(),
+                self.op.sketch_len()
+            );
+        }
+        Ok(values.iter().map(|&v| v as f64).collect())
+    }
+}
+
+impl SketchEngine for PjrtEngine {
+    fn sketch_into(&self, x: &Mat, pool: &mut PooledSketch) -> Result<()> {
+        if x.cols() != self.op.dim() {
+            bail!("dataset dim {} != engine dim {}", x.cols(), self.op.dim());
+        }
+        let full_batches = x.rows() / self.batch;
+        let mut rows_f32 = vec![0.0f32; self.batch * x.cols()];
+        for b in 0..full_batches {
+            let start = b * self.batch;
+            for i in 0..self.batch {
+                for (j, &v) in x.row(start + i).iter().enumerate() {
+                    rows_f32[i * x.cols() + j] = v as f32;
+                }
+            }
+            let sum = self.run_batch(&rows_f32)?;
+            pool.add_sum(&sum, self.batch as u64);
+        }
+        // Remainder through the native path (same operator, f64).
+        let rem_start = full_batches * self.batch;
+        if rem_start < x.rows() {
+            let idx: Vec<usize> = (rem_start..x.rows()).collect();
+            let rest = x.select_rows(&idx);
+            self.op.sketch_into(&rest, pool);
+        }
+        Ok(())
+    }
+
+    fn sketch_len(&self) -> usize {
+        self.op.sketch_len()
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,92 @@
+//! Runtime tests. The PJRT round-trip tests live in `rust/tests/pjrt_e2e.rs`
+//! (they need `make artifacts` to have run); here we cover the native
+//! engine, the manifest parser, and shape validation.
+
+use super::*;
+use crate::frequency::{DrawnFrequencies, FrequencyLaw};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::sketch::{PooledSketch, SketchOperator};
+use std::path::Path;
+
+fn quant_op(n: usize, m: usize, seed: u64) -> SketchOperator {
+    let mut rng = Rng::new(seed);
+    SketchOperator::quantized(DrawnFrequencies::draw(
+        FrequencyLaw::Gaussian,
+        n,
+        m,
+        1.0,
+        &mut rng,
+    ))
+}
+
+#[test]
+fn native_engine_matches_operator() {
+    let op = quant_op(4, 25, 1);
+    let engine = NativeEngine::new(op.clone());
+    assert_eq!(engine.sketch_len(), 50);
+    assert_eq!(engine.name(), "native");
+    let mut rng = Rng::new(2);
+    let x = Mat::from_fn(97, 4, |_, _| rng.gaussian());
+    let via_engine = engine.sketch_dataset(&x).unwrap();
+    assert_eq!(via_engine, op.sketch_dataset(&x));
+    assert_eq!(engine.operator().dim(), 4);
+    // sketch_into accumulates.
+    let mut pool = PooledSketch::new(50);
+    engine.sketch_into(&x, &mut pool).unwrap();
+    engine.sketch_into(&x, &mut pool).unwrap();
+    assert_eq!(pool.count(), 194);
+}
+
+#[test]
+fn manifest_parses_and_finds() {
+    let text = "# name kind batch dim m file\n\
+                sketch_qckm sketch 256 10 1000 sketch_qckm.hlo.txt\n\
+                sketch_ckm sketch 256 10 1000 sketch_ckm.hlo.txt\n\n";
+    let m = ArtifactManifest::parse(text, Path::new("/tmp/artifacts")).unwrap();
+    assert_eq!(m.entries.len(), 2);
+    let e = m.find("sketch_qckm").unwrap();
+    assert_eq!((e.batch, e.dim, e.m), (256, 10, 1000));
+    assert_eq!(e.kind, "sketch");
+    assert_eq!(
+        m.path_of(e),
+        Path::new("/tmp/artifacts/sketch_qckm.hlo.txt")
+    );
+    assert!(m.find("nope").is_none());
+}
+
+#[test]
+fn manifest_rejects_malformed_lines() {
+    assert!(ArtifactManifest::parse("a b c\n", Path::new(".")).is_err());
+    assert!(ArtifactManifest::parse("a sketch x 10 1000 f.txt\n", Path::new(".")).is_err());
+    // Comments/blank lines fine.
+    let ok = ArtifactManifest::parse("# hi\n\n", Path::new(".")).unwrap();
+    assert!(ok.entries.is_empty());
+}
+
+#[test]
+fn manifest_load_missing_dir_errors() {
+    assert!(ArtifactManifest::load(Path::new("/nonexistent/dir")).is_err());
+}
+
+#[test]
+fn pjrt_load_validates_shapes() {
+    // A manifest entry whose (n, M) mismatch the operator must be rejected
+    // before any XLA work happens.
+    let text = "sketch_qckm sketch 64 3 10 missing.hlo.txt\n";
+    let manifest = ArtifactManifest::parse(text, Path::new("/tmp")).unwrap();
+    let op = quant_op(4, 25, 3); // n=4, M=25 ≠ (3, 10)
+    let err = match PjrtEngine::load(&manifest, "sketch_qckm", op) {
+        Err(e) => e,
+        Ok(_) => panic!("expected shape mismatch"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("lowered for"), "unexpected error: {msg}");
+    // Unknown artifact name.
+    let op = quant_op(3, 10, 3);
+    let err = match PjrtEngine::load(&manifest, "nope", op) {
+        Err(e) => e,
+        Ok(_) => panic!("expected missing-artifact error"),
+    };
+    assert!(format!("{err:#}").contains("not in manifest"));
+}

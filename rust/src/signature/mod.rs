@@ -1,0 +1,159 @@
+//! Periodic signature functions — Sec. 3 of the paper.
+//!
+//! The generalized sketch operator is `A_f(P) = E_{x~P} f(Ω^T x + ξ)` where
+//! `f` is any 2π-periodic function, centered (`F_0 = 0`), taking values in
+//! `[-1, 1]`, with a non-vanishing first Fourier harmonic `F_1 ≠ 0`.
+//! Prop. 1 shows that after uniform dithering the sketch distance
+//! `‖A_f(P) − A_{f1}(Q)‖²` concentrates around the MMD `γ²_Λ(P,Q)` plus a
+//! Q-independent constant, where `f1(t) = 2|F_1| cos(t + φ₁)` is `f`'s first
+//! harmonic. Decoding therefore always uses *cosine* atoms with amplitude
+//! `2|F_1|`, regardless of which `f` encoded the data.
+//!
+//! This module provides the [`Signature`] trait plus the instances used in
+//! the paper and the experiments:
+//!
+//! * [`Cosine`] — classical CKM (real/imaginary parts of `exp(-i·)` are the
+//!   cosine at two dither offsets, see `crate::sketch`),
+//! * [`UniversalQuantizer`] — the paper's headline 1-bit signature
+//!   `q(t) = sign(cos t)`, the least-significant bit of a uniform quantizer
+//!   with stepsize π,
+//! * [`Triangle`] — a piecewise-linear periodic signature (an ADC ramp
+//!   model), exercised in the ablation experiments,
+//! * [`MultiBitQuantizer`] — a B-bit staircase approximation of the cosine,
+//!   interpolating between `UniversalQuantizer` (B=1, after re-scaling) and
+//!   `Cosine` (B→∞); used by the bit-depth ablation.
+//!
+//! All of these are *even* functions (their Fourier coefficients are real),
+//! which is what the sketch layout in `crate::sketch` assumes; the dithering
+//! supplies all needed phase diversity.
+
+mod quantizers;
+
+pub use quantizers::{MultiBitQuantizer, Triangle, UniversalQuantizer};
+
+use std::f64::consts::PI;
+
+/// A 2π-periodic, centered, even signature function `f: ℝ → [-1, 1]`.
+pub trait Signature: Send + Sync {
+    /// Evaluate `f(t)` (t need not be reduced mod 2π).
+    fn eval(&self, t: f64) -> f64;
+
+    /// The (real) Fourier coefficient `F_k` of `e^{ikt}` in
+    /// `f(t) = Σ_k F_k e^{ikt}`. Even `f` ⇒ `F_k = F_{-k} ∈ ℝ`.
+    ///
+    /// The default implementation integrates numerically; concrete
+    /// signatures override with their analytic series (tests cross-check
+    /// the two).
+    fn fourier_coeff(&self, k: i32) -> f64 {
+        numeric_fourier_coeff(&|t| self.eval(t), k)
+    }
+
+    /// Amplitude of the first harmonic `f1(t) = 2|F_1| cos t`. Must be > 0.
+    fn first_harmonic_amplitude(&self) -> f64 {
+        2.0 * self.fourier_coeff(1).abs()
+    }
+
+    /// Short identifier used in configs / logs.
+    fn name(&self) -> &'static str;
+
+    /// Batched evaluation of the paired slots `f(t)` and `f(t + π/2)` for
+    /// every `t` in `args` — the encode hot loop.
+    ///
+    /// The default delegates to [`Signature::eval`]; concrete signatures
+    /// override it to amortize the dynamic dispatch to one call per tile
+    /// and to share work between the pair (e.g. one `sin_cos` for the
+    /// cosine). Measured impact in EXPERIMENTS.md §Perf.
+    fn eval_pair_batch(&self, args: &[f64], out0: &mut [f64], out1: &mut [f64]) {
+        debug_assert_eq!(args.len(), out0.len());
+        debug_assert_eq!(args.len(), out1.len());
+        for ((t, o0), o1) in args.iter().zip(out0.iter_mut()).zip(out1.iter_mut()) {
+            *o0 = self.eval(*t);
+            *o1 = self.eval(*t + std::f64::consts::FRAC_PI_2);
+        }
+    }
+
+    /// The concentration constant `C_f = 8|F_1|⁴ (1 + 2|F_1|)⁻⁴` of Prop. 1:
+    /// the failure probability is `≤ 2 exp(−C_f m ε²)`.
+    fn prop1_constant(&self) -> f64 {
+        let f1 = self.fourier_coeff(1).abs();
+        8.0 * f1.powi(4) / (1.0 + 2.0 * f1).powi(4)
+    }
+
+    /// Energy in harmonics |k| ≥ 2, relative to the first harmonic:
+    /// `Σ_{|k|≥2} |F_k|² / (2|F_1|²)`. This bounds the Prop.-1 offset
+    /// `c_P` (it equals `c_P` when `P` is a Dirac, since then |φ_P| = 1).
+    fn tail_energy_ratio(&self) -> f64 {
+        let f1sq = self.fourier_coeff(1).powi(2);
+        let mut tail = 0.0;
+        for k in 2..=1025 {
+            tail += 2.0 * self.fourier_coeff(k).powi(2); // ±k
+        }
+        tail / (2.0 * f1sq)
+    }
+}
+
+/// Reduce `t` to the canonical period `[0, 2π)`.
+#[inline]
+pub fn wrap_2pi(t: f64) -> f64 {
+    let two_pi = 2.0 * PI;
+    let r = t % two_pi;
+    if r < 0.0 {
+        r + two_pi
+    } else {
+        r
+    }
+}
+
+/// Numeric Fourier cosine coefficient `(1/2π)∫ f(t) cos(kt) dt` (even f).
+pub fn numeric_fourier_coeff(f: &dyn Fn(f64) -> f64, k: i32) -> f64 {
+    // Composite Simpson on a fine grid; the discontinuous signatures are
+    // bounded so this converges fast enough for the ~1e-6 accuracy we need.
+    let n = 1 << 16; // even
+    let h = 2.0 * PI / n as f64;
+    let g = |t: f64| f(t) * (k as f64 * t).cos();
+    let mut s = g(0.0) + g(2.0 * PI);
+    for i in 1..n {
+        let t = i as f64 * h;
+        s += if i % 2 == 1 { 4.0 } else { 2.0 } * g(t);
+    }
+    (s * h / 3.0) / (2.0 * PI)
+}
+
+/// The classical CKM signature: `f(t) = cos t`.
+///
+/// The complex-exponential sketch of CKM is recovered by evaluating the
+/// cosine at dither offsets `ξ` and `ξ + π/2` per frequency (real and
+/// negated-imaginary parts of `e^{-i(ω^T x + ξ)}`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cosine;
+
+impl Signature for Cosine {
+    #[inline]
+    fn eval(&self, t: f64) -> f64 {
+        t.cos()
+    }
+
+    fn eval_pair_batch(&self, args: &[f64], out0: &mut [f64], out1: &mut [f64]) {
+        // cos(t + π/2) = −sin t: one sin_cos serves both slots.
+        for ((t, o0), o1) in args.iter().zip(out0.iter_mut()).zip(out1.iter_mut()) {
+            let (s, c) = t.sin_cos();
+            *o0 = c;
+            *o1 = -s;
+        }
+    }
+
+    fn fourier_coeff(&self, k: i32) -> f64 {
+        if k.abs() == 1 {
+            0.5
+        } else {
+            0.0
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "cosine"
+    }
+}
+
+#[cfg(test)]
+mod tests;

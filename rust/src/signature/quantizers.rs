@@ -1,0 +1,148 @@
+//! Quantizing / hardware-model signatures.
+
+use super::{wrap_2pi, Signature};
+use std::f64::consts::PI;
+
+/// 1-bit universal quantization `q(t) = sign(cos t) ∈ {-1, +1}` — the
+/// paper's headline signature (Sec. 4).
+///
+/// `q` is the least-significant bit of a uniform quantizer with stepsize π
+/// (+1 on `[-π/2, π/2)` mod 2π, -1 elsewhere; the measure-zero boundary is
+/// assigned +1). Each example's sketch contribution is exactly one bit per
+/// measurement — see [`crate::sketch::BitSketch`] for the packed encoding
+/// where -1 is stored as 0.
+///
+/// Fourier series: `q(t) = (4/π) Σ_{j≥0} (-1)^j cos((2j+1) t) / (2j+1)`,
+/// so `F_1 = 2/π` and the first harmonic is `q₁(t) = (4/π) cos t`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UniversalQuantizer;
+
+impl UniversalQuantizer {
+    /// The raw acquired bit: `true` ⇔ `q(t) = +1`.
+    ///
+    /// `cos t ≥ 0 ⇔ (t + π/2)/π ∈ [2k, 2k+1) ⇔ ⌊(t + π/2)/π⌋ even` — the
+    /// LSB view, branch-free (the encode hot loop relies on this).
+    #[inline]
+    pub fn bit(&self, t: f64) -> bool {
+        ((t + 0.5 * PI).div_euclid(PI) as i64) & 1 == 0
+    }
+}
+
+impl Signature for UniversalQuantizer {
+    #[inline]
+    fn eval(&self, t: f64) -> f64 {
+        if self.bit(t) {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    fn eval_pair_batch(&self, args: &[f64], out0: &mut [f64], out1: &mut [f64]) {
+        // Branch-free and division-free: multiply by 1/π, floor, take the
+        // LSB (no trig at all — this is what makes the 1-bit encode ~4×
+        // cheaper than the cosine's sin_cos, see EXPERIMENTS.md §Perf).
+        const INV_PI: f64 = 1.0 / PI;
+        for ((t, o0), o1) in args.iter().zip(out0.iter_mut()).zip(out1.iter_mut()) {
+            let u = t * INV_PI; // cells of the stepsize-π quantizer
+            let cell0 = (u + 0.5).floor() as i64;
+            let cell1 = (u + 1.0).floor() as i64;
+            *o0 = 1.0 - 2.0 * ((cell0 & 1) as f64);
+            *o1 = 1.0 - 2.0 * ((cell1 & 1) as f64);
+        }
+    }
+
+    fn fourier_coeff(&self, k: i32) -> f64 {
+        let k = k.abs();
+        if k % 2 == 0 {
+            0.0
+        } else {
+            // (2/π) (-1)^((k-1)/2) / k  for odd k.
+            let j = (k - 1) / 2;
+            let sign = if j % 2 == 0 { 1.0 } else { -1.0 };
+            sign * 2.0 / (PI * k as f64)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "universal-1bit"
+    }
+}
+
+/// Even triangle wave: `tri(0) = 1`, `tri(±π) = -1`, linear in between.
+///
+/// Models a ramp-compare ADC front end; used in the signature ablation to
+/// show Prop. 1 holds beyond the quantizer (its harmonics decay like 1/k²,
+/// so its Prop.-1 offset `c_P` is much smaller than the quantizer's).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Triangle;
+
+impl Signature for Triangle {
+    #[inline]
+    fn eval(&self, t: f64) -> f64 {
+        let r = wrap_2pi(t); // [0, 2π)
+        let d = if r <= PI { r } else { 2.0 * PI - r }; // distance to 0 mod 2π
+        1.0 - 2.0 * d / PI
+    }
+
+    fn fourier_coeff(&self, k: i32) -> f64 {
+        let k = k.abs();
+        if k % 2 == 0 {
+            0.0
+        } else {
+            // tri(t) = (8/π²) Σ_{odd k} cos(kt)/k²  ⇒ F_k = 4/(π² k²).
+            4.0 / (PI * PI * (k * k) as f64)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "triangle"
+    }
+}
+
+/// A `2^B`-level midrise staircase quantization of the cosine:
+/// `f(t) = Q_B(cos t)` with `Q_B` the uniform midrise quantizer on `[-1,1]`.
+///
+/// `B = 1` gives `sign(cos t)/...` scaled to half amplitude (levels ±1/2,
+/// rescaled below to fill `[-1,1]`), and `B → ∞` converges to [`Cosine`].
+/// Used by the bit-depth ablation bench (how many bits per measurement do
+/// you need before you match CKM's constant?).
+#[derive(Clone, Copy, Debug)]
+pub struct MultiBitQuantizer {
+    bits: u32,
+}
+
+impl MultiBitQuantizer {
+    pub fn new(bits: u32) -> Self {
+        assert!((1..=16).contains(&bits), "bits must be in 1..=16");
+        Self { bits }
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Midrise-quantize `v ∈ [-1, 1]` to `2^bits` levels, rescaled so the
+    /// outermost levels sit at ±1 (keeps the signature onto `[-1,1]`).
+    #[inline]
+    fn quantize(&self, v: f64) -> f64 {
+        let levels = 1u64 << self.bits; // even
+        let half = (levels / 2) as f64;
+        // cell index in 0..levels
+        let cell = ((v + 1.0) * half).floor().clamp(0.0, (levels - 1) as f64);
+        let mid = (cell - half + 0.5) / half; // midrise reconstruction in (-1,1)
+        // Rescale so max |value| = 1 (keeps F1 comparisons fair).
+        mid / ((half - 0.5) / half)
+    }
+}
+
+impl Signature for MultiBitQuantizer {
+    #[inline]
+    fn eval(&self, t: f64) -> f64 {
+        self.quantize(t.cos())
+    }
+
+    fn name(&self) -> &'static str {
+        "multibit-quantizer"
+    }
+}

@@ -1,0 +1,158 @@
+//! Tests for signature functions: analytic vs numeric Fourier coefficients,
+//! periodicity, parity, amplitude conventions.
+
+use super::*;
+use std::f64::consts::PI;
+
+fn check_periodic_even_bounded(f: &dyn Signature) {
+    for i in 0..200 {
+        let t = -10.0 + i as f64 * 0.1;
+        let v = f.eval(t);
+        assert!((-1.0..=1.0).contains(&v), "{} out of range at {t}", f.name());
+        assert!(
+            (f.eval(t + 2.0 * PI) - v).abs() < 1e-12,
+            "{} not 2π-periodic at {t}",
+            f.name()
+        );
+        // Even symmetry (skip exact discontinuity points of the quantizer).
+        let r = wrap_2pi(t);
+        let near_disc = (r - 0.5 * PI).abs() < 1e-6 || (r - 1.5 * PI).abs() < 1e-6;
+        if !near_disc {
+            assert!(
+                (f.eval(-t) - v).abs() < 1e-9,
+                "{} not even at {t}",
+                f.name()
+            );
+        }
+    }
+}
+
+fn check_analytic_matches_numeric(f: &dyn Signature, tol: f64) {
+    for k in 0..=7 {
+        let analytic = f.fourier_coeff(k);
+        let numeric = numeric_fourier_coeff(&|t| f.eval(t), k);
+        assert!(
+            (analytic - numeric).abs() < tol,
+            "{}: F_{k} analytic {analytic} vs numeric {numeric}",
+            f.name()
+        );
+    }
+}
+
+#[test]
+fn cosine_shape_and_coeffs() {
+    let f = Cosine;
+    check_periodic_even_bounded(&f);
+    check_analytic_matches_numeric(&f, 1e-9);
+    assert!((f.first_harmonic_amplitude() - 1.0).abs() < 1e-12);
+    assert_eq!(f.fourier_coeff(0), 0.0);
+    assert_eq!(f.fourier_coeff(-1), 0.5);
+}
+
+#[test]
+fn universal_quantizer_is_sign_of_cos() {
+    let q = UniversalQuantizer;
+    check_periodic_even_bounded(&q);
+    for i in 0..1000 {
+        let t = -15.0 + i as f64 * 0.03;
+        if t.cos().abs() > 1e-9 {
+            assert_eq!(q.eval(t), t.cos().signum(), "q({t})");
+        }
+        assert_eq!(q.bit(t), q.eval(t) > 0.0);
+    }
+}
+
+#[test]
+fn universal_quantizer_fourier_series() {
+    let q = UniversalQuantizer;
+    check_analytic_matches_numeric(&q, 1e-4);
+    // F_1 = 2/π, first harmonic amplitude 4/π.
+    assert!((q.fourier_coeff(1) - 2.0 / PI).abs() < 1e-12);
+    assert!((q.first_harmonic_amplitude() - 4.0 / PI).abs() < 1e-12);
+    // Square wave: F_3 = -2/(3π), F_5 = +2/(5π), even harmonics vanish.
+    assert!((q.fourier_coeff(3) + 2.0 / (3.0 * PI)).abs() < 1e-12);
+    assert!((q.fourier_coeff(5) - 2.0 / (5.0 * PI)).abs() < 1e-12);
+    assert_eq!(q.fourier_coeff(2), 0.0);
+}
+
+#[test]
+fn universal_quantizer_lsb_identity() {
+    // q is the LSB of a stepsize-π uniform quantizer: q(t) = +1 iff
+    // floor((t + π/2)/π) is even.
+    let q = UniversalQuantizer;
+    for i in 0..2000 {
+        let t = -20.0 + i as f64 * 0.02;
+        let lsb_even = ((t + 0.5 * PI).div_euclid(PI)) as i64 % 2 == 0;
+        if (t.cos()).abs() > 1e-9 {
+            assert_eq!(q.bit(t), lsb_even, "LSB identity fails at t={t}");
+        }
+    }
+}
+
+#[test]
+fn triangle_shape_and_coeffs() {
+    let f = Triangle;
+    check_periodic_even_bounded(&f);
+    check_analytic_matches_numeric(&f, 1e-6);
+    assert!((f.eval(0.0) - 1.0).abs() < 1e-12);
+    assert!((f.eval(PI) + 1.0).abs() < 1e-12);
+    assert!(f.eval(0.5 * PI).abs() < 1e-12);
+    assert!((f.first_harmonic_amplitude() - 8.0 / (PI * PI)).abs() < 1e-12);
+}
+
+#[test]
+fn multibit_quantizer_interpolates_cosine() {
+    // B=8: the staircase is within one step of the cosine.
+    let f = MultiBitQuantizer::new(8);
+    check_periodic_even_bounded(&f);
+    for i in 0..100 {
+        let t = i as f64 * 0.07;
+        assert!((f.eval(t) - t.cos()).abs() < 0.02, "8-bit staircase at {t}");
+    }
+    // F1 approaches cosine's 0.5 as B grows.
+    let f1_2 = MultiBitQuantizer::new(2).fourier_coeff(1);
+    let f1_8 = MultiBitQuantizer::new(8).fourier_coeff(1);
+    assert!((f1_8 - 0.5).abs() < 0.01, "F1(8 bits) = {f1_8}");
+    assert!((f1_2 - 0.5).abs() > (f1_8 - 0.5).abs());
+    assert_eq!(f.bits(), 8);
+}
+
+#[test]
+#[should_panic]
+fn multibit_rejects_zero_bits() {
+    let _ = MultiBitQuantizer::new(0);
+}
+
+#[test]
+fn prop1_constants() {
+    // C_f = 8 F1⁴/(1+2F1)⁴. For cosine F1 = 1/2 → 8·(1/16)/16 = 1/32.
+    assert!((Cosine.prop1_constant() - 1.0 / 32.0).abs() < 1e-12);
+    let q = UniversalQuantizer;
+    let f1: f64 = 2.0 / PI;
+    let want = 8.0 * f1.powi(4) / (1.0 + 2.0 * f1).powi(4);
+    assert!((q.prop1_constant() - want).abs() < 1e-12);
+}
+
+#[test]
+fn tail_energy_ratios_ordering() {
+    // Cosine has no tail; quantizer has the largest tail; triangle in between.
+    let c = Cosine.tail_energy_ratio();
+    let t = Triangle.tail_energy_ratio();
+    let q = UniversalQuantizer.tail_energy_ratio();
+    assert!(c < 1e-12);
+    assert!(t > 0.0 && q > t, "tails: cos={c}, tri={t}, quant={q}");
+    // Square wave tail: Σ_{odd k≥3} (2/πk)² / (2/π)² · ... = Σ 1/k² over odd k ≥ 3
+    // = π²/8 − 1 ≈ 0.2337.
+    // Truncated at k ≤ 1025: remainder Σ_{odd k>1025} 1/k² ≈ 1/2050.
+    assert!((q - (PI * PI / 8.0 - 1.0)).abs() < 2e-3, "quantizer tail {q}");
+}
+
+#[test]
+fn wrap_2pi_range() {
+    for &t in &[-100.0, -1.0, 0.0, 1.0, 6.28, 100.0] {
+        let r = wrap_2pi(t);
+        assert!((0.0..2.0 * PI).contains(&r), "wrap({t}) = {r}");
+        let q = (t - r) / (2.0 * PI);
+        assert!((q - q.round()).abs() < 1e-9, "wrap({t}) not a 2π shift");
+    }
+}

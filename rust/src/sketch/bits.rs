@@ -1,0 +1,174 @@
+//! Bit-packed 1-bit sketch contributions — the QCKM acquisition format.
+//!
+//! A [`BitSketch`] is one example's m-bit contribution (Fig. 1d: the sign
+//! `+1` is stored as bit 1, `−1` as bit 0). A [`BitAggregator`] pools many
+//! contributions into per-slot one-counts, from which the real-valued
+//! dataset sketch `z_{X,q} ∈ [−1,1]^{2M}` is recovered exactly:
+//! `z_j = 2·ones_j/N − 1`.
+//!
+//! This is the wire format the L3 coordinator streams from sensor workers to
+//! the aggregator: `⌈2M/64⌉` words per example instead of `2M` doubles —
+//! a 64× acquisition-bandwidth reduction, which is the paper's point.
+
+/// A packed vector of `len` bits.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitSketch {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl BitSketch {
+    /// All-zero (all −1) contribution of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        Self {
+            len,
+            words: vec![0u64; len.div_ceil(64)],
+        }
+    }
+
+    /// Number of bits.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Packed words (little-endian bit order within each word).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Size of the packed payload in bytes (what goes over the wire).
+    pub fn payload_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = i / 64;
+        let b = i % 64;
+        if v {
+            self.words[w] |= 1u64 << b;
+        } else {
+            self.words[w] &= !(1u64 << b);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Expand to the dense ±1 representation.
+    pub fn to_dense(&self) -> Vec<f64> {
+        (0..self.len)
+            .map(|i| if self.get(i) { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// Hamming distance to another contribution (same length).
+    ///
+    /// Universal quantized embeddings preserve local Euclidean distances in
+    /// Hamming space (Boufounos & Rane) — exercised by the tests.
+    pub fn hamming(&self, other: &BitSketch) -> u32 {
+        assert_eq!(self.len, other.len, "hamming: length mismatch");
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum()
+    }
+}
+
+/// Pools bit contributions into exact per-slot one-counts.
+#[derive(Clone, Debug)]
+pub struct BitAggregator {
+    ones: Vec<u64>,
+    count: u64,
+    len: usize,
+}
+
+impl BitAggregator {
+    pub fn new(len: usize) -> Self {
+        Self {
+            ones: vec![0u64; len],
+            count: 0,
+            len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Number of pooled contributions.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Pool one contribution.
+    pub fn add(&mut self, s: &BitSketch) {
+        assert_eq!(s.len(), self.len, "aggregator length mismatch");
+        // Unpack word-by-word; the trailing partial word is masked by `len`.
+        for (w, &word) in s.words().iter().enumerate() {
+            if word == 0 {
+                continue;
+            }
+            let base = w * 64;
+            let top = (self.len - base).min(64);
+            let mut bits = word;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                if b >= top {
+                    break;
+                }
+                self.ones[base + b] += 1;
+                bits &= bits - 1;
+            }
+        }
+        self.count += 1;
+    }
+
+    /// Merge another aggregator (the sketch's linearity: distributed pooling).
+    pub fn merge(&mut self, other: &BitAggregator) {
+        assert_eq!(self.len, other.len, "aggregator length mismatch");
+        for (a, b) in self.ones.iter_mut().zip(&other.ones) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+
+    /// The exact pooled real sketch: `z_j = 2·ones_j/count − 1`.
+    pub fn mean(&self) -> Vec<f64> {
+        assert!(self.count > 0, "mean of empty aggregator");
+        let n = self.count as f64;
+        self.ones.iter().map(|&o| 2.0 * o as f64 / n - 1.0).collect()
+    }
+
+    /// (sum of ±1 contributions, count) — for merging into a
+    /// [`super::PooledSketch`] alongside full-precision shards.
+    pub fn to_sum(&self) -> (Vec<f64>, u64) {
+        let n = self.count as f64;
+        let _ = n;
+        (
+            self.ones
+                .iter()
+                .map(|&o| 2.0 * o as f64 - self.count as f64)
+                .collect(),
+            self.count,
+        )
+    }
+}

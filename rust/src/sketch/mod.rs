@@ -1,0 +1,295 @@
+//! The sketch operator `A_f` — encode side and decode side.
+//!
+//! **Layout convention** (used everywhere in this crate): a sketch over `M`
+//! frequencies is a real vector of length `2M`. For frequency `j` with
+//! dither `ξ_j`, slot `2j` evaluates the signature at `ω_j^T x + ξ_j` and
+//! slot `2j+1` at `ω_j^T x + ξ_j + π/2`. With the cosine signature and
+//! `ξ = 0` this is exactly `(Re, −Im)` of the CKM complex measurement
+//! `e^{−i ω_j^T x}`, and it is the paper's fair-comparison convention for
+//! QCKM (Sec. 5: "two measurements with the same frequency ω_j but two
+//! dithering values ξ_j and ξ_j + π/2").
+//!
+//! * **Encode** ([`SketchOperator::sketch_dataset`], [`encode_point`],
+//!   [`BitSketch`]) uses the full signature `f` — this is what the sensor
+//!   hardware of Fig. 1 computes, one bit per slot for QCKM.
+//! * **Decode** ([`SketchOperator::atom`], [`atom_grad_accumulate`]) always
+//!   uses the *first harmonic*: cosine atoms of amplitude `2|F_1|`
+//!   (Prop. 1). A convenient consequence of the paired-slot layout is that
+//!   `‖a(c)‖² = A²·M` for every `c` (cos² + sin² pairing), so normalized
+//!   atoms need no per-candidate norm computation.
+//!
+//! [`encode_point`]: SketchOperator::encode_point
+
+mod bits;
+mod pooled;
+
+pub use bits::{BitAggregator, BitSketch};
+pub use pooled::PooledSketch;
+
+use crate::frequency::DrawnFrequencies;
+use crate::linalg::{dot, Mat};
+use crate::signature::{Signature, UniversalQuantizer};
+use std::sync::Arc;
+
+/// A fully specified sketch operator: frequencies + dithers + signature.
+#[derive(Clone)]
+pub struct SketchOperator {
+    freqs: Arc<DrawnFrequencies>,
+    signature: Arc<dyn Signature>,
+    /// Decode-atom amplitude `2|F_1|` (cached).
+    amplitude: f64,
+}
+
+impl SketchOperator {
+    pub fn new(freqs: DrawnFrequencies, signature: Arc<dyn Signature>) -> Self {
+        let amplitude = signature.first_harmonic_amplitude();
+        assert!(
+            amplitude > 0.0,
+            "signature '{}' has vanishing first harmonic",
+            signature.name()
+        );
+        Self {
+            freqs: Arc::new(freqs),
+            signature,
+            amplitude,
+        }
+    }
+
+    /// Convenience: the paper's QCKM operator (1-bit universal quantizer).
+    pub fn quantized(freqs: DrawnFrequencies) -> Self {
+        Self::new(freqs, Arc::new(UniversalQuantizer))
+    }
+
+    /// Data dimension `n`.
+    pub fn dim(&self) -> usize {
+        self.freqs.dim()
+    }
+
+    /// Number of frequencies `M` (the sketch has `2M` real slots).
+    pub fn num_frequencies(&self) -> usize {
+        self.freqs.num_frequencies()
+    }
+
+    /// Length of the sketch vector (`2M`).
+    pub fn sketch_len(&self) -> usize {
+        2 * self.num_frequencies()
+    }
+
+    pub fn frequencies(&self) -> &DrawnFrequencies {
+        &self.freqs
+    }
+
+    pub fn signature(&self) -> &dyn Signature {
+        self.signature.as_ref()
+    }
+
+    /// Decode-atom amplitude `A = 2|F_1|`.
+    pub fn amplitude(&self) -> f64 {
+        self.amplitude
+    }
+
+    /// `‖a(c)‖ = A√M`, constant in `c` thanks to the slot pairing.
+    pub fn atom_norm(&self) -> f64 {
+        self.amplitude * (self.num_frequencies() as f64).sqrt()
+    }
+
+    /// Projections `ω_j^T x` for all j (helper; hot paths use batched gemm).
+    fn project(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.dim(), "point dimension mismatch");
+        let om = &self.freqs.omega;
+        let m = om.cols();
+        let mut t = vec![0.0; m];
+        for (r, &xr) in x.iter().enumerate() {
+            if xr != 0.0 {
+                crate::linalg::axpy(xr, om.row(r), &mut t);
+            }
+        }
+        t
+    }
+
+    /// Encode one example with the full signature: the sensor-side map
+    /// `z(x)_{2j+p} = f(ω_j^T x + ξ_j + pπ/2)`.
+    pub fn encode_point(&self, x: &[f64]) -> Vec<f64> {
+        let mut args = self.project(x);
+        let m = args.len();
+        for (a, &xi) in args.iter_mut().zip(&self.freqs.xi) {
+            *a += xi;
+        }
+        let mut v0 = vec![0.0; m];
+        let mut v1 = vec![0.0; m];
+        self.signature.eval_pair_batch(&args, &mut v0, &mut v1);
+        let mut z = vec![0.0; 2 * m];
+        for j in 0..m {
+            z[2 * j] = v0[j];
+            z[2 * j + 1] = v1[j];
+        }
+        z
+    }
+
+    /// Encode one example to a packed 1-bit contribution (QCKM hardware
+    /// path, Fig. 1 b–d). Panics if the signature is not ±1-valued.
+    pub fn encode_point_bits(&self, x: &[f64]) -> BitSketch {
+        let mut args = self.project(x);
+        let m = args.len();
+        for (a, &xi) in args.iter_mut().zip(&self.freqs.xi) {
+            *a += xi;
+        }
+        let mut v0 = vec![0.0; m];
+        let mut v1 = vec![0.0; m];
+        self.signature.eval_pair_batch(&args, &mut v0, &mut v1);
+        let mut bits = BitSketch::zeros(2 * m);
+        for j in 0..m {
+            debug_assert!(
+                v0[j].abs() == 1.0 && v1[j].abs() == 1.0,
+                "bit encoding requires a ±1-valued signature, got '{}'",
+                self.signature.name()
+            );
+            bits.set(2 * j, v0[j] > 0.0);
+            bits.set(2 * j + 1, v1[j] > 0.0);
+        }
+        bits
+    }
+
+    /// Pooled sketch of a whole dataset (`N × n` row-major), i.e.
+    /// `z_X = (1/N) Σ_i z(x_i)`, computed in row batches through a blocked
+    /// gemm so the Ω panel stays cache-resident.
+    pub fn sketch_dataset(&self, x: &Mat) -> Vec<f64> {
+        let mut pool = PooledSketch::new(self.sketch_len());
+        self.sketch_into(x, &mut pool);
+        pool.mean()
+    }
+
+    /// Accumulate the (sum, count) of contributions of `x` into `pool`
+    /// without finalizing — the streaming/distributed entry point.
+    pub fn sketch_into(&self, x: &Mat, pool: &mut PooledSketch) {
+        assert_eq!(x.cols(), self.dim(), "dataset dimension mismatch");
+        assert_eq!(pool.len(), self.sketch_len());
+        const BATCH: usize = 64;
+        let m = self.num_frequencies();
+        let om = &self.freqs.omega;
+        let mut proj = vec![0.0; BATCH * m];
+        let mut v0 = vec![0.0; m];
+        let mut v1 = vec![0.0; m];
+        let mut acc0 = vec![0.0; m];
+        let mut acc1 = vec![0.0; m];
+        let mut row = 0;
+        while row < x.rows() {
+            let b = BATCH.min(x.rows() - row);
+            // proj[b × M] = X[row..row+b] · Ω  (ikj, Ω rows streamed),
+            // with the dither ξ pre-added to each row's projections.
+            for i in 0..b {
+                proj[i * m..(i + 1) * m].copy_from_slice(&self.freqs.xi);
+            }
+            for i in 0..b {
+                let xrow = x.row(row + i);
+                let dst = &mut proj[i * m..(i + 1) * m];
+                for (r, &xr) in xrow.iter().enumerate() {
+                    if xr != 0.0 {
+                        crate::linalg::axpy(xr, om.row(r), dst);
+                    }
+                }
+            }
+            // Apply the signature at both dither offsets (batched — one
+            // dynamic dispatch per row, not per slot) and accumulate into
+            // contiguous per-offset accumulators; the strided interleave
+            // into the pool happens once per batch, not once per row.
+            acc0.fill(0.0);
+            acc1.fill(0.0);
+            for i in 0..b {
+                let args = &proj[i * m..(i + 1) * m];
+                self.signature.eval_pair_batch(args, &mut v0, &mut v1);
+                crate::linalg::axpy(1.0, &v0, &mut acc0);
+                crate::linalg::axpy(1.0, &v1, &mut acc1);
+            }
+            let sum = pool.sum_mut();
+            for j in 0..m {
+                sum[2 * j] += acc0[j];
+                sum[2 * j + 1] += acc1[j];
+            }
+            pool.bump_count(b as u64);
+            row += b;
+        }
+    }
+
+    /// Decode-side atom `a(c)_{2j+p} = A·cos(ω_j^T c + ξ_j + pπ/2)`.
+    pub fn atom(&self, c: &[f64]) -> Vec<f64> {
+        let t = self.project(c);
+        let mut a = vec![0.0; 2 * t.len()];
+        for (j, &tj) in t.iter().enumerate() {
+            let arg = tj + self.freqs.xi[j];
+            let (s, co) = arg.sin_cos();
+            a[2 * j] = self.amplitude * co;
+            a[2 * j + 1] = -self.amplitude * s; // cos(arg + π/2) = −sin(arg)
+        }
+        a
+    }
+
+    /// Fused atom + v-weighted Jacobian transpose:
+    /// returns `a(c)` and accumulates `J(c)ᵀ v` into `grad` (overwritten),
+    /// where `J(c)_{2j+p, ·} = ∂a_{2j+p}/∂c = −A·sin(θ_{j,p})·ω_jᵀ`.
+    ///
+    /// This is the decoder's hottest call (Step 1 / Step 5 objective +
+    /// gradient evaluations): one `ω^T c` projection and one sin_cos pass
+    /// serve both outputs.
+    pub fn atom_and_jtv(&self, c: &[f64], v: &[f64], grad: &mut [f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.sketch_len());
+        assert_eq!(grad.len(), self.dim());
+        let t = self.project(c);
+        let m = t.len();
+        let mut a = vec![0.0; 2 * m];
+        // w_j = −A (v_{2j} sinθ_j − v_{2j+1} cosθ_j); grad = Ω w = Σ_j w_j ω_j.
+        let mut w = vec![0.0; m];
+        for (j, &tj) in t.iter().enumerate() {
+            let arg = tj + self.freqs.xi[j];
+            let (s, co) = arg.sin_cos();
+            a[2 * j] = self.amplitude * co;
+            a[2 * j + 1] = -self.amplitude * s;
+            // θ_{j,0} = arg (sin), θ_{j,1} = arg + π/2 (sin = cos(arg)).
+            w[j] = -self.amplitude * (v[2 * j] * s + v[2 * j + 1] * co);
+        }
+        // grad = Ω · w  (Ω is n × M row-major → row r dot w).
+        let om = &self.freqs.omega;
+        for r in 0..self.dim() {
+            grad[r] = dot(om.row(r), &w);
+        }
+        a
+    }
+
+    /// `J(c)ᵀ v` computed *from an already-evaluated atom* — trig-free.
+    ///
+    /// The paired-slot atom stores `a_{2j} = A cos θ_j`, `a_{2j+1} =
+    /// −A sin θ_j`, so the Jacobian weights `w_j = −A (v_{2j} sin θ_j +
+    /// v_{2j+1} cos θ_j)` reduce to `v_{2j}·a_{2j+1} − v_{2j+1}·a_{2j}`
+    /// and `JᵀV = Ω w` costs one gemv. Step 5 of CL-OMPR uses this to
+    /// evaluate objective + full gradient with a single sincos pass per
+    /// atom (EXPERIMENTS.md §Perf).
+    pub fn jtv_from_atom(&self, atom: &[f64], v: &[f64], grad: &mut [f64]) {
+        assert_eq!(atom.len(), self.sketch_len());
+        assert_eq!(v.len(), self.sketch_len());
+        assert_eq!(grad.len(), self.dim());
+        let m = self.num_frequencies();
+        let mut w = vec![0.0; m];
+        for j in 0..m {
+            w[j] = v[2 * j] * atom[2 * j + 1] - v[2 * j + 1] * atom[2 * j];
+        }
+        let om = &self.freqs.omega;
+        for r in 0..self.dim() {
+            grad[r] = dot(om.row(r), &w);
+        }
+    }
+
+    /// The exact expected sketch of a Dirac mixture under the *first
+    /// harmonic* operator: `A_{f1}(Σ_k α_k δ_{c_k}) = Σ_k α_k a(c_k)`.
+    pub fn mixture_sketch(&self, centroids: &Mat, weights: &[f64]) -> Vec<f64> {
+        assert_eq!(centroids.rows(), weights.len());
+        let mut z = vec![0.0; self.sketch_len()];
+        for (k, &alpha) in weights.iter().enumerate() {
+            let a = self.atom(centroids.row(k));
+            crate::linalg::axpy(alpha, &a, &mut z);
+        }
+        z
+    }
+}
+
+#[cfg(test)]
+mod tests;

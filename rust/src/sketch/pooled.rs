@@ -1,0 +1,67 @@
+//! Linear pooling of full-precision sketch contributions.
+
+/// A running (sum, count) of sketch contributions.
+///
+/// The sketch is linear up to rescaling (`Φ_{S∪S'} = Φ_S + Φ_{S'}` on sums),
+/// so shards can be pooled in any order, merged across machines, and updated
+/// online for streams — exactly what the coordinator does.
+#[derive(Clone, Debug)]
+pub struct PooledSketch {
+    sum: Vec<f64>,
+    count: u64,
+}
+
+impl PooledSketch {
+    pub fn new(len: usize) -> Self {
+        Self {
+            sum: vec![0.0; len],
+            count: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sum.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub(crate) fn sum_mut(&mut self) -> &mut [f64] {
+        &mut self.sum
+    }
+
+    pub(crate) fn bump_count(&mut self, by: u64) {
+        self.count += by;
+    }
+
+    /// Add one dense contribution.
+    pub fn add(&mut self, z: &[f64]) {
+        assert_eq!(z.len(), self.sum.len(), "contribution length mismatch");
+        crate::linalg::axpy(1.0, z, &mut self.sum);
+        self.count += 1;
+    }
+
+    /// Add a pre-summed shard (sum over `count` examples).
+    pub fn add_sum(&mut self, sum: &[f64], count: u64) {
+        assert_eq!(sum.len(), self.sum.len(), "shard length mismatch");
+        crate::linalg::axpy(1.0, sum, &mut self.sum);
+        self.count += count;
+    }
+
+    /// Merge another pool (distributed reduction).
+    pub fn merge(&mut self, other: &PooledSketch) {
+        self.add_sum(&other.sum, other.count);
+    }
+
+    /// Finalize: the mean sketch `z_X`.
+    pub fn mean(&self) -> Vec<f64> {
+        assert!(self.count > 0, "mean of empty sketch pool");
+        let inv = 1.0 / self.count as f64;
+        self.sum.iter().map(|s| s * inv).collect()
+    }
+}

@@ -1,0 +1,285 @@
+//! Tests for sketch encode/decode, bit packing and pooling.
+
+use super::*;
+use crate::frequency::{DrawnFrequencies, FrequencyLaw};
+use crate::linalg::{norm2, sq_dist, Mat};
+use crate::rng::Rng;
+use crate::signature::{Cosine, Triangle, UniversalQuantizer};
+use std::f64::consts::PI;
+use std::sync::Arc;
+
+fn op(signature: Arc<dyn crate::signature::Signature>, n: usize, m: usize, seed: u64) -> SketchOperator {
+    let mut rng = Rng::new(seed);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::Gaussian, n, m, 1.0, &mut rng);
+    SketchOperator::new(freqs, signature)
+}
+
+#[test]
+fn dims_and_amplitudes() {
+    let o = op(Arc::new(UniversalQuantizer), 3, 17, 1);
+    assert_eq!(o.dim(), 3);
+    assert_eq!(o.num_frequencies(), 17);
+    assert_eq!(o.sketch_len(), 34);
+    assert!((o.amplitude() - 4.0 / PI).abs() < 1e-12);
+    let c = op(Arc::new(Cosine), 3, 17, 1);
+    assert!((c.amplitude() - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn cosine_encode_matches_complex_exponential() {
+    // With ξ = 0 and the cosine signature, slots (2j, 2j+1) must equal
+    // (Re, −Im) of e^{−i ω_j^T x} = (cos ω^Tx, −sin ω^Tx)... slot 2j+1 is
+    // cos(ω^Tx + π/2) = −sin(ω^Tx). Exactly CKM's measurement.
+    let mut rng = Rng::new(2);
+    let freqs = DrawnFrequencies::draw_undithered(FrequencyLaw::Gaussian, 4, 25, 1.0, &mut rng);
+    let o = SketchOperator::new(freqs.clone(), Arc::new(Cosine));
+    let x: Vec<f64> = (0..4).map(|_| rng.gaussian()).collect();
+    let z = o.encode_point(&x);
+    for j in 0..25 {
+        let t: f64 = (0..4).map(|r| freqs.omega.get(r, j) * x[r]).sum();
+        assert!((z[2 * j] - t.cos()).abs() < 1e-12);
+        assert!((z[2 * j + 1] + t.sin()).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn quantized_encode_is_sign_of_cosine_encode() {
+    let o_q = op(Arc::new(UniversalQuantizer), 5, 40, 3);
+    let o_c = op(Arc::new(Cosine), 5, 40, 3); // same seed → same freqs/dither
+    let mut rng = Rng::new(10);
+    let x: Vec<f64> = (0..5).map(|_| rng.gaussian()).collect();
+    let zq = o_q.encode_point(&x);
+    let zc = o_c.encode_point(&x);
+    for (q, c) in zq.iter().zip(&zc) {
+        if c.abs() > 1e-9 {
+            assert_eq!(*q, c.signum());
+        }
+        assert!(q.abs() == 1.0);
+    }
+}
+
+#[test]
+fn bit_encoding_round_trips_to_dense() {
+    let o = op(Arc::new(UniversalQuantizer), 6, 33, 4); // odd → partial word
+    let mut rng = Rng::new(11);
+    let x: Vec<f64> = (0..6).map(|_| rng.gaussian()).collect();
+    let bits = o.encode_point_bits(&x);
+    assert_eq!(bits.len(), 66);
+    assert_eq!(bits.payload_bytes(), 16); // ⌈66/64⌉ = 2 words
+    assert_eq!(bits.to_dense(), o.encode_point(&x));
+}
+
+#[test]
+fn dataset_sketch_equals_mean_of_contributions() {
+    let o = op(Arc::new(Triangle), 3, 20, 5);
+    let mut rng = Rng::new(12);
+    let x = Mat::from_fn(130, 3, |_, _| rng.gaussian()); // non-multiple of batch
+    let z = o.sketch_dataset(&x);
+    let mut want = vec![0.0; o.sketch_len()];
+    for i in 0..x.rows() {
+        let zi = o.encode_point(x.row(i));
+        crate::linalg::axpy(1.0 / 130.0, &zi, &mut want);
+    }
+    for (a, b) in z.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-10);
+    }
+}
+
+#[test]
+fn sketch_linearity_pooling_and_merge() {
+    let o = op(Arc::new(UniversalQuantizer), 4, 15, 6);
+    let mut rng = Rng::new(13);
+    let x = Mat::from_fn(100, 4, |_, _| rng.gaussian());
+    let full = o.sketch_dataset(&x);
+
+    // Split into two shards, pool separately, merge.
+    let x1 = x.select_rows(&(0..37).collect::<Vec<_>>());
+    let x2 = x.select_rows(&(37..100).collect::<Vec<_>>());
+    let mut p1 = PooledSketch::new(o.sketch_len());
+    let mut p2 = PooledSketch::new(o.sketch_len());
+    o.sketch_into(&x1, &mut p1);
+    o.sketch_into(&x2, &mut p2);
+    p1.merge(&p2);
+    assert_eq!(p1.count(), 100);
+    let merged = p1.mean();
+    for (a, b) in merged.iter().zip(&full) {
+        assert!((a - b).abs() < 1e-10, "merge deviates");
+    }
+}
+
+#[test]
+fn bit_aggregator_matches_dense_pooling() {
+    let o = op(Arc::new(UniversalQuantizer), 4, 21, 7);
+    let mut rng = Rng::new(14);
+    let x = Mat::from_fn(64, 4, |_, _| rng.gaussian());
+    let dense = o.sketch_dataset(&x);
+    let mut agg = BitAggregator::new(o.sketch_len());
+    for i in 0..x.rows() {
+        agg.add(&o.encode_point_bits(x.row(i)));
+    }
+    assert_eq!(agg.count(), 64);
+    for (a, b) in agg.mean().iter().zip(&dense) {
+        assert!((a - b).abs() < 1e-12, "bit pooling exactness");
+    }
+    // to_sum feeds a PooledSketch identically.
+    let (sum, count) = agg.to_sum();
+    let mut pool = PooledSketch::new(o.sketch_len());
+    pool.add_sum(&sum, count);
+    for (a, b) in pool.mean().iter().zip(&dense) {
+        assert!((a - b).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn bit_aggregator_merge() {
+    let o = op(Arc::new(UniversalQuantizer), 3, 10, 8);
+    let mut rng = Rng::new(15);
+    let mut a1 = BitAggregator::new(o.sketch_len());
+    let mut a2 = BitAggregator::new(o.sketch_len());
+    let mut all = BitAggregator::new(o.sketch_len());
+    for i in 0..50 {
+        let x: Vec<f64> = (0..3).map(|_| rng.gaussian()).collect();
+        let b = o.encode_point_bits(&x);
+        if i % 2 == 0 {
+            a1.add(&b)
+        } else {
+            a2.add(&b)
+        }
+        all.add(&b);
+    }
+    a1.merge(&a2);
+    assert_eq!(a1.count(), all.count());
+    assert_eq!(a1.mean(), all.mean());
+}
+
+#[test]
+fn atom_norm_is_constant() {
+    let o = op(Arc::new(UniversalQuantizer), 5, 64, 9);
+    let mut rng = Rng::new(16);
+    for _ in 0..10 {
+        let c: Vec<f64> = (0..5).map(|_| rng.gaussian_with(0.0, 3.0)).collect();
+        let a = o.atom(&c);
+        assert!(
+            (norm2(&a) - o.atom_norm()).abs() < 1e-9,
+            "atom norm varies with c"
+        );
+    }
+    assert!((o.atom_norm() - (4.0 / PI) * 8.0).abs() < 1e-12); // A·√64
+}
+
+#[test]
+fn atom_of_dirac_equals_cosine_sketch_of_point() {
+    // For the cosine signature, A_{f1} = A_f, so the atom at c must equal
+    // the encode of the single point c.
+    let o = op(Arc::new(Cosine), 4, 30, 10);
+    let mut rng = Rng::new(17);
+    let c: Vec<f64> = (0..4).map(|_| rng.gaussian()).collect();
+    let atom = o.atom(&c);
+    let enc = o.encode_point(&c);
+    for (a, e) in atom.iter().zip(&enc) {
+        assert!((a - e).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn atom_jacobian_matches_finite_differences() {
+    let o = op(Arc::new(UniversalQuantizer), 4, 25, 11);
+    let mut rng = Rng::new(18);
+    let c: Vec<f64> = (0..4).map(|_| rng.gaussian()).collect();
+    let v: Vec<f64> = (0..o.sketch_len()).map(|_| rng.gaussian()).collect();
+    let mut grad = vec![0.0; 4];
+    let a0 = o.atom_and_jtv(&c, &v, &mut grad);
+    assert_eq!(a0, o.atom(&c));
+    // f(c) = ⟨a(c), v⟩; grad must match finite differences.
+    let h = 1e-6;
+    for r in 0..4 {
+        let mut cp = c.clone();
+        cp[r] += h;
+        let mut cm = c.clone();
+        cm[r] -= h;
+        let fp = crate::linalg::dot(&o.atom(&cp), &v);
+        let fm = crate::linalg::dot(&o.atom(&cm), &v);
+        let fd = (fp - fm) / (2.0 * h);
+        assert!(
+            (grad[r] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+            "grad[{r}] = {} vs fd {fd}",
+            grad[r]
+        );
+    }
+}
+
+#[test]
+fn jtv_from_atom_matches_fused_kernel() {
+    let o = op(Arc::new(UniversalQuantizer), 5, 40, 23);
+    let mut rng = Rng::new(24);
+    let c: Vec<f64> = (0..5).map(|_| rng.gaussian()).collect();
+    let v: Vec<f64> = (0..o.sketch_len()).map(|_| rng.gaussian()).collect();
+    let mut g_fused = vec![0.0; 5];
+    let atom = o.atom_and_jtv(&c, &v, &mut g_fused);
+    let mut g_from_atom = vec![0.0; 5];
+    o.jtv_from_atom(&atom, &v, &mut g_from_atom);
+    for (a, b) in g_fused.iter().zip(&g_from_atom) {
+        assert!((a - b).abs() < 1e-9 * (1.0 + a.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn mixture_sketch_is_weighted_atom_sum() {
+    let o = op(Arc::new(UniversalQuantizer), 3, 12, 12);
+    let cents = Mat::from_vec(2, 3, vec![1., 0., 0., 0., 2., -1.]);
+    let w = [0.3, 0.7];
+    let z = o.mixture_sketch(&cents, &w);
+    let mut want = vec![0.0; o.sketch_len()];
+    crate::linalg::axpy(0.3, &o.atom(cents.row(0)), &mut want);
+    crate::linalg::axpy(0.7, &o.atom(cents.row(1)), &mut want);
+    for (a, b) in z.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn quantized_embedding_preserves_local_distances() {
+    // Boufounos–Rane: normalized Hamming distance between bit sketches is
+    // monotone in the Euclidean distance for nearby points.
+    let n = 8;
+    let o = op(Arc::new(UniversalQuantizer), n, 512, 13);
+    let mut rng = Rng::new(19);
+    let x0: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let b0 = o.encode_point_bits(&x0);
+    let mut prev = 0.0;
+    for &step in &[0.05, 0.2, 0.5, 1.0] {
+        let x1: Vec<f64> = x0.iter().map(|v| v + step / (n as f64).sqrt()).collect();
+        let d_h = b0.hamming(&o.encode_point_bits(&x1)) as f64 / b0.len() as f64;
+        assert!(
+            d_h >= prev - 0.02,
+            "hamming distance not monotone: {d_h} after {prev} (step {step})"
+        );
+        prev = d_h;
+        let _ = sq_dist(&x0, &x1);
+    }
+    assert!(prev > 0.05, "largest step should flip a decent bit fraction");
+}
+
+#[test]
+fn pooled_sketch_empty_and_errors() {
+    let p = PooledSketch::new(8);
+    assert!(p.is_empty());
+    assert_eq!(p.len(), 8);
+    let agg = BitAggregator::new(8);
+    assert!(agg.is_empty());
+    assert_eq!(agg.len(), 8);
+}
+
+#[test]
+#[should_panic]
+fn pooled_mean_of_empty_panics() {
+    PooledSketch::new(4).mean();
+}
+
+#[test]
+#[should_panic]
+fn bit_hamming_length_mismatch_panics() {
+    let a = BitSketch::zeros(10);
+    let b = BitSketch::zeros(12);
+    let _ = a.hamming(&b);
+}

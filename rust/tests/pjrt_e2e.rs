@@ -1,0 +1,164 @@
+//! End-to-end integration: AOT artifacts (JAX/Pallas → HLO text) loaded and
+//! executed through the PJRT CPU client from Rust, validated against the
+//! native engine.
+//!
+//! Requires `make artifacts` to have produced `artifacts/` at the repo root
+//! (the Makefile runs it before `cargo test`). Tests self-skip with a
+//! message when the artifacts are absent so `cargo test` alone stays green.
+
+use qckm::frequency::{DrawnFrequencies, FrequencyLaw};
+use qckm::linalg::Mat;
+use qckm::rng::Rng;
+use qckm::runtime::{ArtifactManifest, NativeEngine, PjrtEngine, SketchEngine};
+use qckm::signature::{Cosine, UniversalQuantizer};
+use qckm::sketch::SketchOperator;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Build the operator matching an artifact's lowered shapes.
+fn operator_for(manifest: &ArtifactManifest, name: &str, quantized: bool) -> SketchOperator {
+    let entry = manifest.find(name).expect("artifact in manifest");
+    let mut rng = Rng::new(0xA07);
+    let freqs = DrawnFrequencies::draw(
+        FrequencyLaw::AdaptedRadius,
+        entry.dim,
+        entry.m,
+        1.0,
+        &mut rng,
+    );
+    if quantized {
+        SketchOperator::new(freqs, Arc::new(UniversalQuantizer))
+    } else {
+        SketchOperator::new(freqs, Arc::new(Cosine))
+    }
+}
+
+#[test]
+fn qckm_artifact_matches_native_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = ArtifactManifest::load(&dir).expect("manifest loads");
+    let op = operator_for(&manifest, "sketch_qckm", true);
+    let engine = PjrtEngine::load(&manifest, "sketch_qckm", op.clone()).expect("PJRT load");
+    assert_eq!(engine.name(), "pjrt");
+    assert_eq!(engine.batch(), 256);
+    assert!(!engine.platform().is_empty());
+
+    // 2.5 batches: exercises both the PJRT path and the native remainder.
+    let mut rng = Rng::new(1);
+    let x = Mat::from_fn(640, op.dim(), |_, _| rng.gaussian_with(0.0, 1.5));
+    let via_pjrt = engine.sketch_dataset(&x).expect("pjrt sketch");
+    let via_native = NativeEngine::new(op).sketch_dataset(&x).unwrap();
+
+    // The quantizer is ±1-valued: disagreement requires a projection within
+    // f32 round-off of a quantization boundary. Count per-slot deviation.
+    let n = 640.0;
+    let mut worst = 0.0f64;
+    for (a, b) in via_pjrt.iter().zip(&via_native) {
+        worst = worst.max((a - b).abs() * n); // in units of single flips (×2)
+    }
+    assert!(
+        worst <= 4.0,
+        "more than 2 boundary flips on one slot: {worst}"
+    );
+}
+
+#[test]
+fn ckm_artifact_matches_native_engine_closely() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = ArtifactManifest::load(&dir).expect("manifest loads");
+    let op = operator_for(&manifest, "sketch_ckm", false);
+    let engine = PjrtEngine::load(&manifest, "sketch_ckm", op.clone()).expect("PJRT load");
+
+    let mut rng = Rng::new(2);
+    let x = Mat::from_fn(512, op.dim(), |_, _| rng.gaussian());
+    let via_pjrt = engine.sketch_dataset(&x).expect("pjrt sketch");
+    let via_native = NativeEngine::new(op).sketch_dataset(&x).unwrap();
+    // Smooth signature: f32 vs f64 differences only.
+    for (i, (a, b)) in via_pjrt.iter().zip(&via_native).enumerate() {
+        assert!(
+            (a - b).abs() < 5e-5,
+            "slot {i}: pjrt {a} vs native {b}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_pool_accumulates_across_calls() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = ArtifactManifest::load(&dir).expect("manifest loads");
+    let op = operator_for(&manifest, "sketch_qckm", true);
+    let engine = PjrtEngine::load(&manifest, "sketch_qckm", op.clone()).expect("PJRT load");
+    let mut rng = Rng::new(3);
+    let x1 = Mat::from_fn(256, op.dim(), |_, _| rng.gaussian());
+    let x2 = Mat::from_fn(256, op.dim(), |_, _| rng.gaussian());
+    let mut pool = qckm::sketch::PooledSketch::new(op.sketch_len());
+    engine.sketch_into(&x1, &mut pool).unwrap();
+    engine.sketch_into(&x2, &mut pool).unwrap();
+    assert_eq!(pool.count(), 512);
+    // Mean of the merged pool = mean of the concatenation.
+    let mut all = x1.clone();
+    for r in 0..x2.rows() {
+        all.push_row(x2.row(r));
+    }
+    let whole = engine.sketch_dataset(&all).unwrap();
+    for (a, b) in pool.mean().iter().zip(&whole) {
+        assert!((a - b).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn decoder_works_on_pjrt_produced_sketch() {
+    // The full three-layer loop: JAX/Pallas-lowered artifact produces the
+    // sketch, the Rust decoder extracts centroids from it.
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = ArtifactManifest::load(&dir).expect("manifest loads");
+    let op = operator_for(&manifest, "sketch_qckm", true);
+    let n = op.dim();
+
+    // 2 well-separated Gaussians in the flagship 10-dim space.
+    let mut rng = Rng::new(4);
+    let mut x = Mat::zeros(0, n);
+    for i in 0..1024 {
+        let sign = if i % 2 == 0 { 1.0 } else { -1.0 };
+        let row: Vec<f64> = (0..n).map(|_| sign * 1.0 + 0.4 * rng.gaussian()).collect();
+        x.push_row(&row);
+    }
+    // Rescale the operator's frequencies to the data scale.
+    let sigma = qckm::frequency::SigmaHeuristic::default().resolve(&x, &mut rng);
+    let freqs = DrawnFrequencies::draw(
+        FrequencyLaw::AdaptedRadius,
+        n,
+        manifest.find("sketch_qckm").unwrap().m,
+        sigma,
+        &mut rng,
+    );
+    let op = SketchOperator::new(freqs, Arc::new(UniversalQuantizer));
+    let engine = PjrtEngine::load(&manifest, "sketch_qckm", op.clone()).expect("PJRT load");
+
+    let z = engine.sketch_dataset(&x).unwrap();
+    let (lo, hi) = qckm::linalg::bounding_box(&x);
+    let sol = qckm::clompr::ClOmpr::new(&op, 2)
+        .with_bounds(lo, hi)
+        .run(&z, &mut rng);
+    // Centroids near ±1⃗ (order-free check via their first coordinates).
+    let mut c0: Vec<f64> = (0..2).map(|k| sol.centroids.row(k)[0]).collect();
+    c0.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!(c0[0] < -0.5 && c0[1] > 0.5, "centroids {c0:?}");
+    let s = qckm::metrics::sse(&x, &sol.centroids);
+    let km = qckm::kmeans::kmeans(&x, 2, &Default::default(), &mut rng);
+    assert!(
+        qckm::metrics::is_success(s, km.sse),
+        "PJRT-sketch decode SSE {s} vs kmeans {}",
+        km.sse
+    );
+}

@@ -1,0 +1,196 @@
+//! Property-based tests (via `qckm::testkit`) over the system's core
+//! invariants: sketch linearity/merging, bit-packing exactness, coordinator
+//! routing/batching, decoder feasibility, NNLS KKT, metrics ranges.
+
+use qckm::config::Method;
+use qckm::coordinator::{run_pipeline, PipelineConfig, SampleSource, WireFormat};
+use qckm::frequency::{DrawnFrequencies, FrequencyLaw};
+use qckm::linalg::Mat;
+use qckm::metrics::adjusted_rand_index;
+use qckm::optim::nnls;
+use qckm::rng::Rng;
+use qckm::sketch::{BitAggregator, PooledSketch, SketchOperator};
+use qckm::testkit::{property, Gen};
+use std::sync::Arc;
+
+fn random_operator(g: &mut Gen, quantized: bool) -> SketchOperator {
+    let n = g.usize_in(1, 8);
+    let m = g.usize_in(1, 60);
+    let law = if g.bool() {
+        FrequencyLaw::Gaussian
+    } else {
+        FrequencyLaw::AdaptedRadius
+    };
+    let sigma = g.f64_in(0.3, 3.0);
+    let freqs = DrawnFrequencies::draw(law, n, m, sigma, g.rng());
+    if quantized {
+        SketchOperator::quantized(freqs)
+    } else {
+        SketchOperator::new(freqs, Method::Ckm.signature())
+    }
+}
+
+#[test]
+fn prop_sketch_is_linear_under_any_split() {
+    property("sketch linearity", 40, |g| {
+        let quantized = g.bool();
+        let op = random_operator(g, quantized);
+        let rows = g.usize_in(2, 120);
+        let x = Mat::from_fn(rows, op.dim(), |_, _| g.gaussian());
+        let split = g.usize_in(1, rows - 1);
+        let a = x.select_rows(&(0..split).collect::<Vec<_>>());
+        let b = x.select_rows(&(split..rows).collect::<Vec<_>>());
+        let mut pa = PooledSketch::new(op.sketch_len());
+        let mut pb = PooledSketch::new(op.sketch_len());
+        op.sketch_into(&a, &mut pa);
+        op.sketch_into(&b, &mut pb);
+        pa.merge(&pb);
+        let whole = op.sketch_dataset(&x);
+        for (u, v) in pa.mean().iter().zip(&whole) {
+            assert!((u - v).abs() < 1e-9, "split at {split} of {rows}");
+        }
+    });
+}
+
+#[test]
+fn prop_bit_packing_round_trips_and_pools_exactly() {
+    property("bit packing exactness", 40, |g| {
+        let op = random_operator(g, true);
+        let rows = g.usize_in(1, 80);
+        let x = Mat::from_fn(rows, op.dim(), |_, _| 2.0 * g.gaussian());
+        let mut agg = BitAggregator::new(op.sketch_len());
+        for i in 0..rows {
+            let bits = op.encode_point_bits(x.row(i));
+            assert_eq!(bits.to_dense(), op.encode_point(x.row(i)));
+            agg.add(&bits);
+        }
+        let dense = op.sketch_dataset(&x);
+        for (u, v) in agg.mean().iter().zip(&dense) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_pipeline_invariant_to_workers_batch_queue() {
+    property("pipeline routing/batching invariance", 15, |g| {
+        let op = random_operator(g, true);
+        let rows = g.usize_in(1, 300);
+        let x = Arc::new(Mat::from_fn(rows, op.dim(), |_, _| g.gaussian()));
+        let reference = op.sketch_dataset(&x);
+        let cfg = PipelineConfig {
+            workers: g.usize_in(1, 9),
+            batch_size: g.usize_in(1, 50),
+            queue_capacity: g.usize_in(1, 8),
+            wire: WireFormat::PackedBits,
+        };
+        let rep = run_pipeline(&op, &SampleSource::Shared(x.clone()), &cfg, g.seed);
+        assert_eq!(rep.samples, rows as u64, "cfg {cfg:?}");
+        assert_eq!(
+            rep.per_worker.iter().sum::<u64>(),
+            rows as u64,
+            "sharding must cover exactly"
+        );
+        for (u, v) in rep.sketch.iter().zip(&reference) {
+            assert!((u - v).abs() < 1e-12, "cfg {cfg:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_atom_norm_constant_and_jacobian_consistent() {
+    property("atom norm + jacobian", 30, |g| {
+        let op = random_operator(g, true);
+        let c = g.vec_gaussian(op.dim());
+        let a = op.atom(&c);
+        let want = op.atom_norm();
+        let got = qckm::linalg::norm2(&a);
+        assert!((got - want).abs() < 1e-9 * want.max(1.0));
+        // Directional derivative check of the fused JᵀV kernel.
+        let v = g.vec_gaussian(op.sketch_len());
+        let mut grad = vec![0.0; op.dim()];
+        let _ = op.atom_and_jtv(&c, &v, &mut grad);
+        let dir = g.vec_gaussian(op.dim());
+        let h = 1e-6;
+        let cp: Vec<f64> = c.iter().zip(&dir).map(|(a, d)| a + h * d).collect();
+        let cm: Vec<f64> = c.iter().zip(&dir).map(|(a, d)| a - h * d).collect();
+        let fd = (qckm::linalg::dot(&op.atom(&cp), &v) - qckm::linalg::dot(&op.atom(&cm), &v))
+            / (2.0 * h);
+        let an = qckm::linalg::dot(&grad, &dir);
+        assert!(
+            (fd - an).abs() < 1e-4 * (1.0 + fd.abs()),
+            "directional derivative {an} vs fd {fd}"
+        );
+    });
+}
+
+#[test]
+fn prop_nnls_kkt_on_random_problems() {
+    property("nnls kkt", 40, |g| {
+        let m = g.usize_in(4, 60);
+        let n = g.usize_in(1, 8.min(m));
+        let a = Mat::from_fn(m, n, |_, _| g.gaussian());
+        let b = g.vec_gaussian(m);
+        let x = nnls(&a, &b);
+        assert!(x.iter().all(|&v| v >= 0.0));
+        let r = qckm::linalg::sub(&b, &qckm::linalg::matvec(&a, &x));
+        let w = qckm::linalg::matvec_t(&a, &r);
+        for j in 0..n {
+            if x[j] > 1e-9 {
+                assert!(w[j].abs() < 1e-5, "stationarity w[{j}]={}", w[j]);
+            } else {
+                assert!(w[j] < 1e-5, "dual feasibility w[{j}]={}", w[j]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ari_bounds_and_permutation_invariance() {
+    property("ari invariances", 40, |g| {
+        let n = g.usize_in(2, 400);
+        let k = g.usize_in(1, 6);
+        let a: Vec<usize> = (0..n).map(|_| g.usize_in(0, k - 1)).collect();
+        let b: Vec<usize> = (0..n).map(|_| g.usize_in(0, k - 1)).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!((-1.0..=1.0).contains(&ari));
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+        // Permute b's labels: ARI unchanged.
+        let perm: Vec<usize> = {
+            let mut p: Vec<usize> = (0..k).collect();
+            g.rng().shuffle(&mut p);
+            p
+        };
+        let b2: Vec<usize> = b.iter().map(|&l| perm[l]).collect();
+        assert!((adjusted_rand_index(&a, &b2) - ari).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_decoder_output_always_feasible() {
+    property("decoder feasibility", 8, |g| {
+        let op = random_operator(g, true);
+        let k = g.usize_in(1, 3);
+        let rows = g.usize_in(50, 400);
+        let x = Mat::from_fn(rows, op.dim(), |_, _| g.gaussian());
+        let z = op.sketch_dataset(&x);
+        let (lo, hi) = qckm::linalg::bounding_box(&x);
+        let mut rng = Rng::new(g.seed);
+        let sol = qckm::clompr::ClOmpr::new(&op, k)
+            .with_bounds(lo.clone(), hi.clone())
+            .run(&z, &mut rng);
+        assert_eq!(sol.centroids.rows(), k);
+        assert_eq!(sol.weights.len(), k);
+        assert!((sol.weights.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(sol.weights.iter().all(|&w| w >= 0.0));
+        for c in 0..k {
+            for (j, &v) in sol.centroids.row(c).iter().enumerate() {
+                assert!(
+                    v >= lo[j] - 1e-9 && v <= hi[j] + 1e-9,
+                    "centroid escapes the box"
+                );
+            }
+        }
+        assert!(sol.objective.is_finite());
+    });
+}

@@ -1,0 +1,203 @@
+//! Whole-system integration tests (no PJRT required): coordinator →
+//! pooled sketch → decoder → metrics, on realistic workloads; CLI-level
+//! config plumbing; failure injection.
+
+use qckm::clompr::{decode_best_of, ClOmpr, ClOmprParams};
+use qckm::config::{JobConfig, Method};
+use qckm::coordinator::{run_pipeline, PipelineConfig, SampleSource, WireFormat};
+use qckm::data::gaussian_mixture_pm1;
+use qckm::frequency::{DrawnFrequencies, FrequencyLaw, SigmaHeuristic};
+use qckm::kmeans::{kmeans, KMeansParams};
+use qckm::linalg::bounding_box;
+use qckm::metrics::{adjusted_rand_index, assign_labels, is_success, sse};
+use qckm::rng::Rng;
+use qckm::sketch::SketchOperator;
+use std::sync::Arc;
+
+/// The full Fig.-1 loop: distributed 1-bit acquisition through the
+/// coordinator, decode on the leader, quality vs k-means.
+#[test]
+fn sensor_cloud_to_centroids() {
+    let (n, k, n_samples) = (6, 3, 20_000);
+    let mut rng = Rng::new(11);
+    let data = gaussian_mixture_pm1(n_samples, n, k, &mut rng);
+    let sigma = SigmaHeuristic::default().resolve(&data.points, &mut rng);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, n, 150, sigma, &mut rng);
+    let op = SketchOperator::quantized(freqs);
+
+    let report = run_pipeline(
+        &op,
+        &SampleSource::Shared(Arc::new(data.points.clone())),
+        &PipelineConfig {
+            workers: 6,
+            batch_size: 256,
+            queue_capacity: 8,
+            wire: WireFormat::PackedBits,
+        },
+        3,
+    );
+    assert_eq!(report.samples, n_samples as u64);
+    // Wire: ⌈300/64⌉ = 5 words = 40 bytes per example.
+    assert_eq!(report.payload_bytes, n_samples as u64 * 40);
+
+    let (lo, hi) = bounding_box(&data.points);
+    let sol = ClOmpr::new(&op, k)
+        .with_bounds(lo, hi)
+        .run(&report.sketch, &mut rng);
+    let km = kmeans(
+        &data.points,
+        k,
+        &KMeansParams {
+            replicates: 5,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let s = sse(&data.points, &sol.centroids);
+    assert!(
+        is_success(s, km.sse),
+        "QCKM SSE {s} vs kmeans {} on an easy mixture",
+        km.sse
+    );
+    let ari = adjusted_rand_index(&assign_labels(&data.points, &sol.centroids), &data.labels);
+    assert!(ari > 0.8, "ARI {ari}");
+}
+
+/// The sketch is linear: two disjoint sensor fleets can be pooled and must
+/// decode identically to one fleet seeing everything.
+#[test]
+fn federated_sketch_merge_decodes_identically() {
+    let (n, k) = (4, 2);
+    let mut rng = Rng::new(21);
+    let data = gaussian_mixture_pm1(8_000, n, k, &mut rng);
+    let sigma = SigmaHeuristic::default().resolve(&data.points, &mut rng);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, n, 80, sigma, &mut rng);
+    let op = SketchOperator::quantized(freqs);
+
+    // Fleet A gets rows [0, 3000), fleet B the rest.
+    let xa = data.points.select_rows(&(0..3000).collect::<Vec<_>>());
+    let xb = data.points.select_rows(&(3000..8000).collect::<Vec<_>>());
+    let mut agg_a = qckm::sketch::BitAggregator::new(op.sketch_len());
+    let mut agg_b = qckm::sketch::BitAggregator::new(op.sketch_len());
+    for i in 0..xa.rows() {
+        agg_a.add(&op.encode_point_bits(xa.row(i)));
+    }
+    for i in 0..xb.rows() {
+        agg_b.add(&op.encode_point_bits(xb.row(i)));
+    }
+    agg_a.merge(&agg_b);
+    let merged = agg_a.mean();
+    let direct = op.sketch_dataset(&data.points);
+    for (a, b) in merged.iter().zip(&direct) {
+        assert!((a - b).abs() < 1e-12, "merge must be exact (integer counts)");
+    }
+}
+
+/// Replicate selection by the sketch objective (the paper's data-free
+/// model selection) must never pick a worse-objective solution.
+#[test]
+fn objective_based_replicate_selection() {
+    let (n, k) = (5, 3);
+    let mut rng = Rng::new(31);
+    let data = gaussian_mixture_pm1(6_000, n, k, &mut rng);
+    let sigma = SigmaHeuristic::default().resolve(&data.points, &mut rng);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, n, 120, sigma, &mut rng);
+    let op = SketchOperator::quantized(freqs);
+    let z = op.sketch_dataset(&data.points);
+    let (lo, hi) = bounding_box(&data.points);
+
+    let mut singles = Vec::new();
+    let mut rng_a = Rng::new(5);
+    for _ in 0..4 {
+        singles.push(
+            ClOmpr::new(&op, k)
+                .with_bounds(lo.clone(), hi.clone())
+                .run(&z, &mut rng_a),
+        );
+    }
+    let mut rng_b = Rng::new(5);
+    let best = decode_best_of(
+        &op,
+        k,
+        &z,
+        lo,
+        hi,
+        &ClOmprParams::default(),
+        4,
+        &mut rng_b,
+    );
+    let min_single = singles
+        .iter()
+        .map(|s| s.objective)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        (best.objective - min_single).abs() < 1e-9,
+        "best-of must equal the min over the same replicate stream"
+    );
+}
+
+/// Config file → JobConfig → operator plumbing.
+#[test]
+fn job_config_round_trip_drives_pipeline() {
+    let cfg = JobConfig::from_toml_str(
+        "seed = 9\n[sketch]\nnum_frequencies = 64\nmethod = \"qckm\"\nsigma = 1.5\n\
+         [decode]\nk = 2\n[pipeline]\nworkers = 3\nwire = \"bits\"\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.sketch.method, Method::Qckm);
+    let mut rng = Rng::new(cfg.seed);
+    let data = gaussian_mixture_pm1(2_000, 3, cfg.decode.k, &mut rng);
+    let sigma = cfg.sketch.sigma.resolve(&data.points, &mut rng);
+    assert_eq!(sigma, 1.5);
+    let freqs = DrawnFrequencies::draw(cfg.sketch.law, 3, cfg.sketch.num_frequencies, sigma, &mut rng);
+    let op = SketchOperator::new(freqs, cfg.sketch.method.signature());
+    let report = run_pipeline(
+        &op,
+        &SampleSource::Shared(Arc::new(data.points.clone())),
+        &cfg.pipeline,
+        cfg.seed,
+    );
+    assert_eq!(report.samples, 2000);
+    assert_eq!(report.sketch.len(), 128);
+}
+
+/// Failure injection: a worker that panics must not hang the pipeline
+/// (scoped threads propagate the panic instead of deadlocking).
+#[test]
+fn panicking_sensor_fails_loudly_not_silently() {
+    let mut rng = Rng::new(41);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::Gaussian, 2, 8, 1.0, &mut rng);
+    let op = SketchOperator::quantized(freqs);
+    let source = SampleSource::Synthetic {
+        total: 1000,
+        dim: 2,
+        make: Arc::new(|r: &mut Rng, out: &mut [f64]| {
+            if r.next_f64() < 0.01 {
+                panic!("sensor hardware fault injection");
+            }
+            out.fill(0.5);
+        }),
+    };
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_pipeline(&op, &source, &PipelineConfig::default(), 1)
+    }));
+    assert!(result.is_err(), "injected fault must propagate");
+}
+
+/// Degenerate inputs: constant dataset, K = 1.
+#[test]
+fn degenerate_single_cluster() {
+    let mut rng = Rng::new(51);
+    let x = qckm::linalg::Mat::from_fn(500, 3, |_, c| c as f64); // all rows equal
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::Gaussian, 3, 40, 1.0, &mut rng);
+    let op = SketchOperator::quantized(freqs);
+    let z = op.sketch_dataset(&x);
+    let sol = ClOmpr::new(&op, 1)
+        .with_bounds(vec![-1.0, 0.0, 1.0], vec![1.0, 2.0, 3.0])
+        .run(&z, &mut rng);
+    // The single centroid should land on (0, 1, 2).
+    for (j, &v) in sol.centroids.row(0).iter().enumerate() {
+        assert!((v - j as f64).abs() < 0.15, "coord {j}: {v}");
+    }
+    assert!(sse(&x, &sol.centroids) < 500.0 * 0.1);
+}
