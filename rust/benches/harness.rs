@@ -3,6 +3,9 @@
 //!
 //! Used by every `[[bench]]` target (they set `harness = false`).
 
+// Included via `#[path]` from each bench; not every bench uses every item.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// One benchmark's timing summary (nanoseconds per iteration).

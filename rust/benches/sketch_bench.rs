@@ -10,6 +10,7 @@ mod harness;
 use harness::{bench, black_box};
 use qckm::frequency::{DrawnFrequencies, FrequencyLaw};
 use qckm::linalg::Mat;
+use qckm::parallel::Parallelism;
 use qckm::rng::Rng;
 use qckm::runtime::{ArtifactManifest, NativeEngine, PjrtEngine, SketchEngine};
 use qckm::sketch::SketchOperator;
@@ -36,6 +37,37 @@ fn main() {
         "    projection core: {:.2} GFLOP/s effective",
         flops / (s.median_ns * 1e-9) / 1e9
     );
+
+    // Multi-thread scaling on the pooled-sketch hot path. The determinism
+    // contract (qckm::parallel) guarantees identical output at every thread
+    // count, so this is pure wall-clock: the acceptance bar is >= 2x
+    // throughput at 4 threads over 1.
+    let big_rows = 32_768usize; // 8 fixed chunks of PAR_CHUNK_ROWS
+    let big = Mat::from_fn(big_rows, n, |_, _| rng.gaussian());
+    let serial = bench(
+        &format!("sketch_dataset_par {big_rows}x{n}, 1 thread"),
+        1,
+        1200,
+        || {
+            black_box(op.sketch_dataset_par(&big, &Parallelism::serial()));
+        },
+    );
+    serial.print_rate("samples", big_rows as f64);
+    for threads in [2usize, 4, 8] {
+        let s = bench(
+            &format!("sketch_dataset_par {big_rows}x{n}, {threads} threads"),
+            1,
+            1200,
+            || {
+                black_box(op.sketch_dataset_par(&big, &Parallelism::fixed(threads)));
+            },
+        );
+        s.print_rate("samples", big_rows as f64);
+        println!(
+            "    scaling: {:.2}x vs 1 thread",
+            serial.median_ns / s.median_ns
+        );
+    }
 
     // Cosine signature (CKM) for the sincos-cost comparison.
     let op_c = SketchOperator::new(freqs.clone(), qckm::config::Method::Ckm.signature());

@@ -231,13 +231,11 @@ mod tests {
 
     #[test]
     fn rejects_unknown_and_malformed() {
-        assert!(spec().parse(["--nope".into()] as [String; 1]).is_err());
-        assert!(spec().parse(["--m".into()] as [String; 1]).is_err()); // missing value
-        assert!(spec()
-            .parse(["--full=yes".into()] as [String; 1])
-            .is_err()); // flag with value
+        assert!(spec().parse(["--nope".to_string()]).is_err());
+        assert!(spec().parse(["--m".to_string()]).is_err()); // missing value
+        assert!(spec().parse(["--full=yes".to_string()]).is_err()); // flag with value
         let e = spec()
-            .parse(["--m".into(), "abc".into()] as [String; 2])
+            .parse(["--m".to_string(), "abc".to_string()])
             .unwrap()
             .get_usize("m");
         assert!(e.is_err());
@@ -245,7 +243,7 @@ mod tests {
 
     #[test]
     fn help_bails_with_usage() {
-        let err = spec().parse(["--help".into()] as [String; 1]).unwrap_err();
+        let err = spec().parse(["--help".to_string()]).unwrap_err();
         let msg = format!("{err}");
         assert!(msg.contains("USAGE"));
         assert!(msg.contains("--m <NUM>"));

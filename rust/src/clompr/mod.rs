@@ -22,9 +22,15 @@
 //!
 //! The weights are renormalized to sum 1 only on output (the objective is
 //! scale-aware through Step 4/5, as in SketchMLbox).
+//!
+//! Step 1 — the decode's hot path — can fan its candidate screening and
+//! L-BFGS restarts across threads via [`ClOmprParams::threads`]; by the
+//! determinism contract of [`crate::parallel`] the decoded solution is
+//! bit-for-bit identical at every thread count.
 
 use crate::linalg::{axpy, dot, norm2, sub, Mat};
-use crate::optim::{lbfgsb, nnls, Bounds, LbfgsParams};
+use crate::optim::{lbfgsb, nnls, Bounds, LbfgsParams, LbfgsResult};
+use crate::parallel::{self, Parallelism};
 use crate::rng::Rng;
 use crate::sketch::SketchOperator;
 
@@ -44,6 +50,12 @@ pub struct ClOmprParams {
     pub step5_iters: usize,
     /// L-BFGS iteration cap for the final Step 5 polish.
     pub step5_final_iters: usize,
+    /// Threads for Step 1's candidate screening and L-BFGS restarts
+    /// (1 = serial, 0 = all cores, n = exactly n). The decode is bit-for-bit
+    /// identical at every setting — candidate starts are drawn from the RNG
+    /// up front in the serial order, the concurrent scores/refinements are
+    /// pure, and ties are resolved in candidate order (see [`crate::parallel`]).
+    pub threads: usize,
 }
 
 impl Default for ClOmprParams {
@@ -55,6 +67,7 @@ impl Default for ClOmprParams {
             step1_iters: 60,
             step5_iters: 80,
             step5_final_iters: 300,
+            threads: 1,
         }
     }
 }
@@ -182,28 +195,43 @@ impl<'a> ClOmpr<'a> {
     fn step1_pick(&self, residual: &[f64], rng: &mut Rng) -> Vec<f64> {
         let n = self.op.dim();
         let bounds = Bounds::boxed(&self.lo, &self.hi);
-        let mut lb = LbfgsParams::default();
-        lb.max_iters = self.params.step1_iters;
-        lb.pg_tol = 1e-8;
+        let lb = LbfgsParams {
+            max_iters: self.params.step1_iters,
+            pg_tol: 1e-8,
+            ..LbfgsParams::default()
+        };
 
-        // Screening pass.
+        // Screening pass. The starts are drawn serially (one RNG stream, the
+        // same draw order at every thread count); only the atom evaluations
+        // — the expensive part — fan out, and scores come back in candidate
+        // order so the (stable) sort and all tie-breaks are deterministic.
+        let par = Parallelism::fixed(self.params.threads);
         let n_cand = self.params.step1_candidates.max(self.params.step1_restarts).max(1);
-        let mut cands: Vec<(f64, Vec<f64>)> = (0..n_cand)
+        let starts: Vec<Vec<f64>> = (0..n_cand)
             .map(|_| {
-                let c: Vec<f64> = (0..n)
+                (0..n)
                     .map(|i| rng.uniform(self.lo[i], self.hi[i]))
-                    .collect();
-                let score = -dot(&self.op.atom(&c), residual);
-                (score, c)
+                    .collect()
             })
             .collect();
+        const SCORE_CHUNK: usize = 8;
+        let scores: Vec<f64> = parallel::run_chunked(n_cand, SCORE_CHUNK, &par, |_, range| {
+            range
+                .map(|i| -dot(&self.op.atom(&starts[i]), residual))
+                .collect::<Vec<f64>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+        let mut cands: Vec<(f64, Vec<f64>)> = scores.into_iter().zip(starts).collect();
         cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         cands.truncate(self.params.step1_restarts.max(1));
 
-        let mut best_x: Option<Vec<f64>> = None;
-        let mut best_f = f64::INFINITY;
-        for (_, x0) in cands {
-            let res = lbfgsb(
+        // Concurrent L-BFGS refinement of the screened starts; the winner is
+        // folded in restart order (first strictly-better wins), exactly as
+        // the serial loop did.
+        let results: Vec<LbfgsResult> = parallel::par_map(cands.len(), &par, |i| {
+            lbfgsb(
                 |c, g| {
                     // f(c) = −⟨a(c), r⟩; gradient via the fused JᵀV kernel.
                     let a = self.op.atom_and_jtv(c, residual, g);
@@ -212,10 +240,14 @@ impl<'a> ClOmpr<'a> {
                     }
                     -dot(&a, residual)
                 },
-                &x0,
+                &cands[i].1,
                 &bounds,
                 &lb,
-            );
+            )
+        });
+        let mut best_x: Option<Vec<f64>> = None;
+        let mut best_f = f64::INFINITY;
+        for res in results {
             if res.f < best_f {
                 best_f = res.f;
                 best_x = Some(res.x);
@@ -273,9 +305,11 @@ impl<'a> ClOmpr<'a> {
                 .collect(),
         };
 
-        let mut lb = LbfgsParams::default();
-        lb.max_iters = iters;
-        lb.pg_tol = 1e-9;
+        let lb = LbfgsParams {
+            max_iters: iters,
+            pg_tol: 1e-9,
+            ..LbfgsParams::default()
+        };
 
         let sketch_len = self.op.sketch_len();
         let mut atoms = vec![vec![0.0; sketch_len]; kc];
@@ -319,6 +353,13 @@ impl<'a> ClOmpr<'a> {
 /// sketch-matching objective — the paper's data-free model selection for
 /// compressive algorithms (Sec. 5: "we select the solution of CKM (resp.
 /// QCKM) minimizing (6) (resp. (10))").
+///
+/// Replicates deliberately run serially on the shared `rng` stream so that
+/// "best of R" is exactly the minimum over the same replicate stream a
+/// caller would produce by looping `run` — the invariant the system tests
+/// pin. Intra-run parallelism comes from `params.threads` (Step 1), and
+/// the experiment harnesses parallelize across trials instead.
+#[allow(clippy::too_many_arguments)]
 pub fn decode_best_of(
     op: &SketchOperator,
     k: usize,

@@ -96,6 +96,13 @@ pub struct JobConfig {
     pub decode: DecodeConfig,
     pub pipeline: crate::coordinator::PipelineConfig,
     pub seed: u64,
+    /// Thread budget for the compute hot paths (the `qckm sketch` encode,
+    /// CL-OMPR Step 1, experiment grids): 1 = serial (default), 0 = all
+    /// cores, n = exactly n. Top-level `threads` key / `--threads` CLI
+    /// flag. The `qckm cluster` *acquisition* concurrency is a separate
+    /// knob — `[pipeline] workers` (sensor simulation). Results never
+    /// depend on either (see [`crate::parallel`]).
+    pub threads: usize,
 }
 
 impl Default for JobConfig {
@@ -105,6 +112,7 @@ impl Default for JobConfig {
             decode: DecodeConfig::default(),
             pipeline: crate::coordinator::PipelineConfig::default(),
             seed: 0,
+            threads: 1,
         }
     }
 }
@@ -120,7 +128,8 @@ impl JobConfig {
             bail!("sketch.num_frequencies must be >= 1, got {m}");
         }
         cfg.sketch.num_frequencies = m as usize;
-        cfg.sketch.method = Method::parse(doc.get_str("sketch", "method", cfg.sketch.method.name()))?;
+        let method_name = doc.get_str("sketch", "method", cfg.sketch.method.name());
+        cfg.sketch.method = Method::parse(method_name)?;
         cfg.sketch.law = match doc.get_str("sketch", "law", "adapted-radius") {
             "adapted-radius" => FrequencyLaw::AdaptedRadius,
             "gaussian" => FrequencyLaw::Gaussian,
@@ -157,8 +166,9 @@ impl JobConfig {
             bail!("decode.replicates must be >= 1, got {reps}");
         }
         cfg.decode.replicates = reps as usize;
-        cfg.decode.params.step1_restarts =
-            doc.get_int("decode", "step1_restarts", cfg.decode.params.step1_restarts as i64) as usize;
+        cfg.decode.params.step1_restarts = doc
+            .get_int("decode", "step1_restarts", cfg.decode.params.step1_restarts as i64)
+            as usize;
         cfg.decode.params.step5_iters =
             doc.get_int("decode", "step5_iters", cfg.decode.params.step5_iters as i64) as usize;
         cfg.decode.params.step5_final_iters = doc.get_int(
@@ -175,8 +185,9 @@ impl JobConfig {
         cfg.pipeline.workers = workers as usize;
         cfg.pipeline.batch_size =
             doc.get_int("pipeline", "batch_size", cfg.pipeline.batch_size as i64).max(1) as usize;
-        cfg.pipeline.queue_capacity =
-            doc.get_int("pipeline", "queue_capacity", cfg.pipeline.queue_capacity as i64).max(1) as usize;
+        cfg.pipeline.queue_capacity = doc
+            .get_int("pipeline", "queue_capacity", cfg.pipeline.queue_capacity as i64)
+            .max(1) as usize;
         cfg.pipeline.wire = match doc.get_str("pipeline", "wire", "bits") {
             "bits" => crate::coordinator::WireFormat::PackedBits,
             "dense" => crate::coordinator::WireFormat::DenseF64,
@@ -184,6 +195,12 @@ impl JobConfig {
         };
 
         cfg.seed = doc.get_int("", "seed", 0) as u64;
+        let threads = doc.get_int("", "threads", cfg.threads as i64);
+        if threads < 0 {
+            bail!("threads must be >= 0 (0 = all cores), got {threads}");
+        }
+        cfg.threads = threads as usize;
+        cfg.decode.params.threads = cfg.threads;
         Ok(cfg)
     }
 

@@ -25,7 +25,7 @@ mod pipeline;
 
 pub use channel::{bounded, Receiver, SendError, Sender};
 pub use pipeline::{
-    run_pipeline, PipelineConfig, PipelineReport, SampleSource, WireFormat,
+    run_pipeline, PipelineConfig, PipelineReport, SampleSource, WireFormat, SHARD_BLOCK,
 };
 
 #[cfg(test)]

@@ -1,11 +1,37 @@
 //! The sensor → aggregator streaming pipeline.
+//!
+//! ## Determinism contract
+//!
+//! The pooled sketch produced by [`run_pipeline`] depends only on the
+//! operator, the sample source and the seed — **never** on `workers`,
+//! `batch_size` or `queue_capacity`. Three mechanisms guarantee it (locked
+//! in by `rust/tests/determinism.rs`):
+//!
+//! * **Fixed sharding.** Samples are cut into fixed [`SHARD_BLOCK`]-sized
+//!   blocks by [`crate::parallel::fixed_chunks`] (the shared sharding rule)
+//!   and blocks are assigned round-robin by block index, so the partition
+//!   never depends on scheduling.
+//! * **Per-block RNG substreams.** Synthetic sources derive their stream
+//!   from the block id, not the worker id, so the synthesized samples are a
+//!   pure function of (seed, sample index).
+//! * **Ordered reduction.** 1-bit payloads pool into exact integer counts
+//!   (addition commutes exactly, arrival order is irrelevant); dense f64
+//!   payloads carry their global start row, fold on arrival into their
+//!   block's partial pool (in row order — one producer per block), and the
+//!   completed block partials merge in block order, fixing the
+//!   floating-point reduction order with O(blocks in flight) memory.
 
 use super::channel::{bounded, Sender};
 use crate::linalg::Mat;
 use crate::rng::Rng;
 use crate::sketch::{BitAggregator, BitSketch, PooledSketch, SketchOperator};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Fixed sensor-sharding block size (samples per work unit). Part of the
+/// determinism contract above; independent of the worker count by design.
+pub const SHARD_BLOCK: usize = 1024;
 
 /// What each sensor puts on the wire for a batch of examples.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,8 +47,9 @@ pub enum WireFormat {
 pub enum SampleSource {
     /// A shared in-memory dataset, sharded row-wise across workers.
     Shared(Arc<Mat>),
-    /// Pure sensor simulation: each worker synthesizes its own stream with
-    /// a deterministic per-worker RNG substream. `make` fills one sample.
+    /// Pure sensor simulation: samples are synthesized in fixed
+    /// [`SHARD_BLOCK`]-sized blocks, each from a deterministic per-block
+    /// RNG substream (worker-count invariant). `make` fills one sample.
     Synthetic {
         total: usize,
         dim: usize,
@@ -80,9 +107,16 @@ impl PipelineReport {
 }
 
 enum Payload {
+    /// Packed 1-bit contributions; pooling is exact integer counting, so no
+    /// ordering information is needed.
     Bits(Vec<BitSketch>),
-    /// Flattened `count × 2M` full-precision contributions.
-    Dense { data: Vec<f64>, count: u64 },
+    /// Flattened `count × 2M` full-precision contributions of the samples
+    /// `start..start + count` (global indices, for the ordered reduction).
+    Dense {
+        start: usize,
+        data: Vec<f64>,
+        count: usize,
+    },
 }
 
 impl Payload {
@@ -96,8 +130,9 @@ impl Payload {
 
 /// Run the full acquisition pipeline and return the pooled sketch + stats.
 ///
-/// Deterministic given `seed` (worker substreams are derived from it), up to
-/// the order-insensitivity of pooling (sums commute).
+/// Deterministic given `seed`: the pooled sketch is bit-for-bit identical
+/// across any `workers` / `batch_size` / `queue_capacity` (see the module
+/// docs for the contract).
 pub fn run_pipeline(
     op: &SketchOperator,
     source: &SampleSource,
@@ -113,6 +148,15 @@ pub fn run_pipeline(
     let mut payload_bytes = 0u64;
     let mut bits_agg = BitAggregator::new(sketch_len);
     let mut dense_pool = PooledSketch::new(sketch_len);
+    // Dense ordered reduction: each payload folds on arrival into its
+    // block's partial pool (a block has a single producer and the channel
+    // is FIFO per sender, so within-block payloads arrive in row order),
+    // and completed blocks are folded into `dense_pool` in block order.
+    // Aggregator memory is O(in-flight blocks × 2M), never O(N × 2M).
+    let total_samples = source_total(source);
+    let block_len = |b: usize| SHARD_BLOCK.min(total_samples.saturating_sub(b * SHARD_BLOCK));
+    let mut dense_blocks: BTreeMap<usize, PooledSketch> = BTreeMap::new();
+    let mut next_block = 0usize;
 
     std::thread::scope(|scope| {
         // ---- Sensor workers.
@@ -137,14 +181,32 @@ pub fn run_pipeline(
                         bits_agg.add(b);
                     }
                 }
-                Payload::Dense { data, count } => {
-                    for i in 0..count as usize {
-                        dense_pool.add(&data[i * sketch_len..(i + 1) * sketch_len]);
+                Payload::Dense { start, data, count } => {
+                    let block = start / SHARD_BLOCK;
+                    let partial = dense_blocks
+                        .entry(block)
+                        .or_insert_with(|| PooledSketch::new(sketch_len));
+                    for i in 0..count {
+                        partial.add(&data[i * sketch_len..(i + 1) * sketch_len]);
+                    }
+                    // Evict the contiguous prefix of completed blocks, in
+                    // block order (the fixed reduction order).
+                    while dense_blocks
+                        .get(&next_block)
+                        .is_some_and(|p| p.count() as usize >= block_len(next_block))
+                    {
+                        let done = dense_blocks.remove(&next_block).unwrap();
+                        dense_pool.merge(&done);
+                        next_block += 1;
                     }
                 }
             }
         }
     });
+    // Any remaining (necessarily trailing) block partials, in block order.
+    for partial in dense_blocks.values() {
+        dense_pool.merge(partial);
+    }
 
     // Merge whichever aggregators got data.
     let mut total = PooledSketch::new(sketch_len);
@@ -172,17 +234,46 @@ pub fn run_pipeline(
     }
 }
 
-/// How many samples worker `w` of `workers` is responsible for.
-fn planned_samples(source: &SampleSource, w: usize, workers: usize) -> usize {
-    let total = match source {
+/// Total samples a source yields.
+fn source_total(source: &SampleSource) -> usize {
+    match source {
         SampleSource::Shared(m) => m.rows(),
         SampleSource::Synthetic { total, .. } => *total,
-    };
-    let base = total / workers;
-    let extra = usize::from(w < total % workers);
-    base + extra
+    }
 }
 
+/// How many samples worker `w` of `workers` is responsible for: the sum of
+/// the fixed [`SHARD_BLOCK`]-sized blocks assigned round-robin to `w`.
+fn planned_samples(source: &SampleSource, w: usize, workers: usize) -> usize {
+    crate::parallel::fixed_chunks(source_total(source), SHARD_BLOCK)
+        .iter()
+        .enumerate()
+        .filter(|(b, _)| b % workers == w)
+        .map(|(_, block)| block.len())
+        .sum()
+}
+
+/// Fetch sample `row` — a borrowed dataset row, or one synthesized into
+/// `scratch` from the caller's per-block RNG substream. Shared by both wire
+/// formats so the sharding/RNG rule cannot diverge between them.
+fn fetch_sample<'a>(
+    shared: Option<&'a Arc<Mat>>,
+    source: &SampleSource,
+    row: usize,
+    rng: &mut Rng,
+    scratch: &'a mut [f64],
+) -> &'a [f64] {
+    match (shared, source) {
+        (Some(m), _) => m.row(row),
+        (None, SampleSource::Synthetic { make, .. }) => {
+            make(rng, scratch);
+            scratch
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn sensor_worker(
     op: &SketchOperator,
     source: &SampleSource,
@@ -193,70 +284,51 @@ fn sensor_worker(
     seed: u64,
     tx: Sender<Payload>,
 ) {
-    let quota = planned_samples(source, w, workers);
-    if quota == 0 {
-        return;
-    }
     let dim = op.dim();
     let sketch_len = op.sketch_len();
-    // Worker-local RNG substream (only used by synthetic sources).
-    let mut rng = Rng::new(seed).substream(w as u64 + 1);
-
-    // Row-range shard for shared sources: contiguous blocks.
-    let (shard_start, shared): (usize, Option<&Arc<Mat>>) = match source {
-        SampleSource::Shared(m) => {
-            let total = m.rows();
-            let base = total / workers;
-            let extra = total % workers;
-            // Workers 0..extra get (base+1) rows.
-            let start = w * base + w.min(extra);
-            (start, Some(m))
-        }
-        SampleSource::Synthetic { .. } => (0, None),
+    let blocks = crate::parallel::fixed_chunks(source_total(source), SHARD_BLOCK);
+    let shared: Option<&Arc<Mat>> = match source {
+        SampleSource::Shared(m) => Some(m),
+        SampleSource::Synthetic { .. } => None,
     };
 
-    let mut produced = 0usize;
     let mut sample = vec![0.0; dim];
-    while produced < quota {
-        let b = batch.min(quota - produced);
-        let payload = match wire {
-            WireFormat::PackedBits => {
-                let mut contribs = Vec::with_capacity(b);
-                for i in 0..b {
-                    let x: &[f64] = match (&shared, source) {
-                        (Some(m), _) => m.row(shard_start + produced + i),
-                        (None, SampleSource::Synthetic { make, .. }) => {
-                            make(&mut rng, &mut sample);
-                            &sample
-                        }
-                        _ => unreachable!(),
-                    };
-                    contribs.push(op.encode_point_bits(x));
-                }
-                Payload::Bits(contribs)
-            }
-            WireFormat::DenseF64 => {
-                let mut data = Vec::with_capacity(b * sketch_len);
-                for i in 0..b {
-                    let x: &[f64] = match (&shared, source) {
-                        (Some(m), _) => m.row(shard_start + produced + i),
-                        (None, SampleSource::Synthetic { make, .. }) => {
-                            make(&mut rng, &mut sample);
-                            &sample
-                        }
-                        _ => unreachable!(),
-                    };
-                    data.extend_from_slice(&op.encode_point(x));
-                }
-                Payload::Dense {
-                    data,
-                    count: b as u64,
-                }
-            }
-        };
-        if tx.send(payload).is_err() {
-            return; // aggregator shut down
+    for (b, block) in blocks.iter().enumerate() {
+        if b % workers != w {
+            continue;
         }
-        produced += b;
+        // Per-block RNG substream (synthetic sources): the sample stream is
+        // a function of (seed, block id), never of the worker count.
+        let mut rng = Rng::new(seed).substream(b as u64 + 1);
+        let mut row = block.start;
+        while row < block.end {
+            let bsz = batch.min(block.end - row);
+            let payload = match wire {
+                WireFormat::PackedBits => {
+                    let mut contribs = Vec::with_capacity(bsz);
+                    for i in 0..bsz {
+                        let x = fetch_sample(shared, source, row + i, &mut rng, &mut sample);
+                        contribs.push(op.encode_point_bits(x));
+                    }
+                    Payload::Bits(contribs)
+                }
+                WireFormat::DenseF64 => {
+                    let mut data = Vec::with_capacity(bsz * sketch_len);
+                    for i in 0..bsz {
+                        let x = fetch_sample(shared, source, row + i, &mut rng, &mut sample);
+                        data.extend_from_slice(&op.encode_point(x));
+                    }
+                    Payload::Dense {
+                        start: row,
+                        data,
+                        count: bsz,
+                    }
+                }
+            };
+            if tx.send(payload).is_err() {
+                return; // aggregator shut down
+            }
+            row += bsz;
+        }
     }
 }

@@ -14,6 +14,7 @@ use crate::data::gaussian_mixture_pm1;
 use crate::frequency::{FrequencyLaw, SigmaHeuristic};
 use crate::kmeans::{kmeans, KMeansParams};
 use crate::metrics::is_success;
+use crate::parallel::{self, Parallelism};
 use crate::rng::Rng;
 use crate::signature::{MultiBitQuantizer, Signature};
 use crate::sketch::SketchOperator;
@@ -27,6 +28,9 @@ pub struct AblationConfig {
     pub ratios: Vec<f64>,
     pub trials: usize,
     pub seed: u64,
+    /// Threads for the trial fan-out (0 = all cores); results are
+    /// bit-for-bit identical at any setting (per-trial RNG substreams).
+    pub threads: usize,
 }
 
 impl Default for AblationConfig {
@@ -38,6 +42,7 @@ impl Default for AblationConfig {
             ratios: vec![1.0, 2.0, 4.0],
             trials: 10,
             seed: 0xAB1A,
+            threads: 0,
         }
     }
 }
@@ -92,9 +97,20 @@ pub fn run_ablation(cfg: &AblationConfig) -> AblationResult {
         },
     ];
 
-    let mut success = vec![vec![0.0; cfg.ratios.len()]; arms.len()];
+    // The per-example acquisition cost depends only on the grid, not the
+    // trials: fill it up front.
     let mut bits = vec![vec![0.0; cfg.ratios.len()]; arms.len()];
-    for trial in 0..cfg.trials {
+    for (ai, arm) in arms.iter().enumerate() {
+        for (ri, &ratio) in cfg.ratios.iter().enumerate() {
+            let m = ((ratio * (cfg.n * cfg.k) as f64).round() as usize).max(2);
+            bits[ai][ri] = 2.0 * m as f64 * arm.bits_per_slot;
+        }
+    }
+
+    // Trials fan out across threads (per-trial substreams, ordered merge —
+    // bit-for-bit identical at any thread count, see `crate::parallel`).
+    let par = Parallelism::fixed(cfg.threads);
+    let flags: Vec<Vec<Vec<bool>>> = parallel::par_map(cfg.trials, &par, |trial| {
         let mut rng = Rng::new(cfg.seed).substream(trial as u64);
         let data = gaussian_mixture_pm1(cfg.n_samples, cfg.n, cfg.k, &mut rng);
         let sigma = SigmaHeuristic::default().resolve(&data.points, &mut rng);
@@ -107,10 +123,10 @@ pub fn run_ablation(cfg: &AblationConfig) -> AblationResult {
             },
             &mut rng,
         );
+        let mut trial_flags = vec![vec![false; cfg.ratios.len()]; arms.len()];
         for (ai, arm) in arms.iter().enumerate() {
             for (ri, &ratio) in cfg.ratios.iter().enumerate() {
                 let m = ((ratio * (cfg.n * cfg.k) as f64).round() as usize).max(2);
-                bits[ai][ri] = 2.0 * m as f64 * arm.bits_per_slot;
                 // Build the operator directly (arms are not all `Method`s).
                 let freqs = if arm.dithered {
                     crate::frequency::DrawnFrequencies::draw(
@@ -137,7 +153,17 @@ pub fn run_ablation(cfg: &AblationConfig) -> AblationResult {
                     .with_params(ClOmprParams::default())
                     .run(&z, &mut rng);
                 let s = crate::metrics::sse(&data.points, &sol.centroids);
-                if is_success(s, km.sse) {
+                trial_flags[ai][ri] = is_success(s, km.sse);
+            }
+        }
+        trial_flags
+    });
+
+    let mut success = vec![vec![0.0; cfg.ratios.len()]; arms.len()];
+    for trial_flags in &flags {
+        for (ai, row) in trial_flags.iter().enumerate() {
+            for (ri, &hit) in row.iter().enumerate() {
+                if hit {
                     success[ai][ri] += 1.0;
                 }
             }

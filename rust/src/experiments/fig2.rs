@@ -14,6 +14,7 @@ use crate::data::gaussian_mixture_pm1;
 use crate::frequency::{FrequencyLaw, SigmaHeuristic};
 use crate::kmeans::{kmeans, KMeansParams};
 use crate::metrics::is_success;
+use crate::parallel::{self, Parallelism};
 use crate::rng::Rng;
 
 /// Which panel of Fig. 2.
@@ -42,6 +43,9 @@ pub struct Fig2Config {
     pub law: FrequencyLaw,
     pub seed: u64,
     pub decoder: ClOmprParams,
+    /// Threads for the (value × trial) fan-out (0 = all cores). Per-trial
+    /// RNG substreams make the grid bit-for-bit identical at any setting.
+    pub threads: usize,
 }
 
 impl Fig2Config {
@@ -69,6 +73,7 @@ impl Fig2Config {
             law: FrequencyLaw::AdaptedRadius,
             seed: 0x20180619, // the paper's date
             decoder: ClOmprParams::default(),
+            threads: 0,
         }
     }
 
@@ -111,51 +116,77 @@ pub struct Fig2Result {
 }
 
 /// Run the grid. Prints nothing; see [`Fig2Result::render`].
+///
+/// The (value × trial) cells fan out across `cfg.threads` workers; each
+/// trial derives its own RNG substream from the seed, so the grid is
+/// reproducible and bit-for-bit identical at any thread count (results are
+/// merged in trial order — see [`crate::parallel`]).
 pub fn run_fig2(cfg: &Fig2Config) -> Fig2Result {
     let n_methods = cfg.methods.len();
     let mut success = vec![vec![vec![0.0; cfg.ratios.len()]; cfg.values.len()]; n_methods];
 
-    for (vi, &value) in cfg.values.iter().enumerate() {
-        let (n, k) = cfg.nk(value);
-        for trial in 0..cfg.trials {
-            // Per-trial RNG substream → trials are independent and the whole
-            // grid is reproducible from the seed.
-            let mut rng = Rng::new(cfg.seed)
-                .substream(vi as u64)
-                .substream(trial as u64);
-            let data = gaussian_mixture_pm1(cfg.n_samples, n, k, &mut rng);
-            let sigma = cfg.sigma.resolve(&data.points, &mut rng);
-            // Shared baseline: best of 5 k-means runs (paper's criterion).
-            let km = kmeans(
-                &data.points,
-                k,
-                &KMeansParams {
-                    replicates: 5,
-                    ..Default::default()
-                },
-                &mut rng,
-            );
-            for (mi, &method) in cfg.methods.iter().enumerate() {
-                for (ri, &ratio) in cfg.ratios.iter().enumerate() {
-                    let m = ((ratio * (n * k) as f64).round() as usize).max(2);
-                    let run = MethodRun {
-                        method,
-                        m,
-                        replicates: 1,
-                        sigma,
-                        law: cfg.law,
-                        params: cfg.decoder.clone(),
-                    };
-                    let out = run_method_once(&run, &data.points, None, k, &mut rng);
-                    if is_success(out.sse, km.sse) {
-                        success[mi][vi][ri] += 1.0;
-                    }
+    // One job per (value, trial); each returns success flags [method][ratio].
+    let jobs = cfg.values.len() * cfg.trials;
+    let par = Parallelism::fixed(cfg.threads);
+    let flags: Vec<Vec<Vec<bool>>> = parallel::par_map(jobs, &par, |job| {
+        let vi = job / cfg.trials;
+        let trial = job % cfg.trials;
+        let (n, k) = cfg.nk(cfg.values[vi]);
+        // Per-trial RNG substream → trials are independent and the whole
+        // grid is reproducible from the seed.
+        let mut rng = Rng::new(cfg.seed)
+            .substream(vi as u64)
+            .substream(trial as u64);
+        let data = gaussian_mixture_pm1(cfg.n_samples, n, k, &mut rng);
+        let sigma = cfg.sigma.resolve(&data.points, &mut rng);
+        // Shared baseline: best of 5 k-means runs (paper's criterion).
+        let km = kmeans(
+            &data.points,
+            k,
+            &KMeansParams {
+                replicates: 5,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        cfg.methods
+            .iter()
+            .map(|&method| {
+                cfg.ratios
+                    .iter()
+                    .map(|&ratio| {
+                        let m = ((ratio * (n * k) as f64).round() as usize).max(2);
+                        let run = MethodRun {
+                            method,
+                            m,
+                            replicates: 1,
+                            sigma,
+                            law: cfg.law,
+                            params: cfg.decoder.clone(),
+                        };
+                        let out = run_method_once(&run, &data.points, None, k, &mut rng);
+                        is_success(out.sse, km.sse)
+                    })
+                    .collect()
+            })
+            .collect()
+    });
+
+    // Ordered merge of the per-trial flags into success rates.
+    for (job, trial_flags) in flags.iter().enumerate() {
+        let vi = job / cfg.trials;
+        for (mi, row) in trial_flags.iter().enumerate() {
+            for (ri, &hit) in row.iter().enumerate() {
+                if hit {
+                    success[mi][vi][ri] += 1.0;
                 }
             }
         }
-        for mi in 0..n_methods {
-            for ri in 0..cfg.ratios.len() {
-                success[mi][vi][ri] /= cfg.trials as f64;
+    }
+    for grid in success.iter_mut() {
+        for row in grid.iter_mut() {
+            for v in row.iter_mut() {
+                *v /= cfg.trials as f64;
             }
         }
     }

@@ -15,6 +15,7 @@ use crate::data::spectral_embedding_like;
 use crate::frequency::{FrequencyLaw, SigmaHeuristic};
 use crate::kmeans::{kmeans, KMeansParams};
 use crate::metrics::{adjusted_rand_index, RunningStats};
+use crate::parallel::{self, Parallelism};
 use crate::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -31,6 +32,9 @@ pub struct Fig3Config {
     pub law: FrequencyLaw,
     pub seed: u64,
     pub decoder: ClOmprParams,
+    /// Threads for the trial fan-out (0 = all cores). Per-trial RNG
+    /// substreams make results bit-for-bit identical at any setting.
+    pub threads: usize,
 }
 
 impl Fig3Config {
@@ -46,6 +50,7 @@ impl Fig3Config {
             law: FrequencyLaw::AdaptedRadius,
             seed: 0x0F13,
             decoder: ClOmprParams::default(),
+            threads: 0,
         }
     }
 
@@ -86,13 +91,18 @@ pub fn run_fig3(cfg: &Fig3Config) -> Fig3Result {
         }
     }
 
-    for trial in 0..cfg.trials {
+    // Trials fan out across threads; each returns its (SSE/N, ARI) pairs in
+    // row order, and the ordered merge below reproduces the serial stream
+    // of RunningStats pushes exactly, at any thread count.
+    let par = Parallelism::fixed(cfg.threads);
+    let per_trial: Vec<Vec<(f64, f64)>> = parallel::par_map(cfg.trials, &par, |trial| {
         let mut rng = Rng::new(cfg.seed).substream(trial as u64);
         let data = spectral_embedding_like(cfg.n_samples, cfg.dim, cfg.k, &mut rng);
         let sigma = cfg.sigma.resolve(&data.points, &mut rng);
+        let mut rows_out: Vec<(f64, f64)> = Vec::with_capacity(n_rows);
 
         // k-means at each replicate level (selected by SSE, as in practice).
-        for (li, &lvl) in levels.iter().enumerate() {
+        for &lvl in levels {
             let km = kmeans(
                 &data.points,
                 cfg.k,
@@ -102,13 +112,15 @@ pub fn run_fig3(cfg: &Fig3Config) -> Fig3Result {
                 },
                 &mut rng,
             );
-            sse_stats[li].push(km.sse / cfg.n_samples as f64);
-            ari_stats[li].push(adjusted_rand_index(&km.labels, &data.labels));
+            rows_out.push((
+                km.sse / cfg.n_samples as f64,
+                adjusted_rand_index(&km.labels, &data.labels),
+            ));
         }
 
         // Compressive methods (replicates selected by sketch objective).
-        for (mi, &method) in methods.iter().enumerate() {
-            for (li, &lvl) in levels.iter().enumerate() {
+        for &method in &methods {
+            for &lvl in levels {
                 let run = MethodRun {
                     method,
                     m: cfg.m,
@@ -118,12 +130,17 @@ pub fn run_fig3(cfg: &Fig3Config) -> Fig3Result {
                     params: cfg.decoder.clone(),
                 };
                 let out = run_method_once(&run, &data.points, Some(&data.labels), cfg.k, &mut rng);
-                let row = levels.len() * (1 + mi) + li;
-                sse_stats[row].push(out.sse / cfg.n_samples as f64);
-                ari_stats[row].push(out.ari);
+                rows_out.push((out.sse / cfg.n_samples as f64, out.ari));
             }
         }
         eprintln!("  fig3 trial {}/{} done", trial + 1, cfg.trials);
+        rows_out
+    });
+    for rows_out in &per_trial {
+        for (row, &(s, a)) in rows_out.iter().enumerate() {
+            sse_stats[row].push(s);
+            ari_stats[row].push(a);
+        }
     }
 
     Fig3Result {
@@ -139,7 +156,10 @@ pub fn run_fig3(cfg: &Fig3Config) -> Fig3Result {
 
 impl Fig3Result {
     pub fn render(&self) -> String {
-        let mut out = format!("== Fig. 3 spectral-features clustering ==\n{}\n\n", self.config_desc);
+        let mut out = format!(
+            "== Fig. 3 spectral-features clustering ==\n{}\n\n",
+            self.config_desc
+        );
         out.push_str(&format!(
             "{:<16} {:>10} {:>8}    {:>7} {:>7}\n",
             "algorithm", "SSE/N", "±std", "ARI", "±std"

@@ -116,6 +116,7 @@ fn ablation_tiny_runs() {
         ratios: vec![4.0],
         trials: 2,
         seed: 9,
+        threads: 0,
     };
     let res = run_ablation(&cfg);
     assert_eq!(res.labels.len(), 5);

@@ -51,10 +51,14 @@ fn kmeans_recovers_separated_clusters() {
 fn replicates_never_hurt_sse() {
     let mut rng = Rng::new(3);
     let (x, _) = two_blobs(&mut rng, 100, 3.0);
-    let mut p1 = KMeansParams::default();
-    p1.replicates = 1;
-    let mut p5 = KMeansParams::default();
-    p5.replicates = 5;
+    let p1 = KMeansParams {
+        replicates: 1,
+        ..KMeansParams::default()
+    };
+    let p5 = KMeansParams {
+        replicates: 5,
+        ..KMeansParams::default()
+    };
     // Same generator seed for a fair "best of" comparison.
     let r1 = kmeans(&x, 3, &p1, &mut Rng::new(10));
     let r5 = kmeans(&x, 3, &p5, &mut Rng::new(10));

@@ -25,13 +25,26 @@
 //! let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, 8, 400, sigma, &mut rng);
 //! let op = SketchOperator::quantized(freqs);
 //!
-//! // Acquire (1 bit per measurement per example) and pool.
-//! let z = op.sketch_dataset(&data.points);
+//! // Acquire (1 bit per measurement per example) and pool — here across
+//! // all cores. The parallel encode is bit-for-bit identical at every
+//! // thread count (see `qckm::parallel` for the contract).
+//! let z = op.sketch_dataset_par(&data.points, &Parallelism::auto());
 //!
 //! // Decode K = 2 centroids from the sketch alone.
 //! let sol = ClOmpr::new(&op, 2).run(&z, &mut rng);
 //! println!("centroids: {:?}", sol.centroids);
 //! ```
+//!
+//! ## Parallelism
+//!
+//! The hot paths — [`sketch::SketchOperator::sketch_dataset_par`], CL-OMPR's
+//! Step 1 ([`clompr::ClOmprParams::threads`]), the streaming coordinator's
+//! sensor workers, and the experiment grids — all fan out through the
+//! deterministic chunked runner in [`parallel`]. Thread counts come from the
+//! `--threads` CLI knob / `threads` config key ([`parallel::Parallelism`],
+//! 0 = all cores) and change wall-clock time only: fixed chunk boundaries
+//! plus ordered merges make every result bit-for-bit independent of the
+//! thread count.
 
 pub mod cli;
 pub mod clompr;
@@ -44,6 +57,7 @@ pub mod kmeans;
 pub mod linalg;
 pub mod metrics;
 pub mod optim;
+pub mod parallel;
 pub mod rng;
 pub mod runtime;
 pub mod signature;
@@ -57,6 +71,7 @@ pub mod prelude {
     pub use crate::kmeans::{kmeans, KMeansParams};
     pub use crate::linalg::Mat;
     pub use crate::metrics::{adjusted_rand_index, sse};
+    pub use crate::parallel::Parallelism;
     pub use crate::rng::Rng;
     pub use crate::signature::{Cosine, Signature, Triangle, UniversalQuantizer};
     pub use crate::sketch::{BitAggregator, BitSketch, PooledSketch, SketchOperator};

@@ -77,6 +77,10 @@ fn job_from(args: &qckm::cli::ParsedArgs) -> Result<JobConfig> {
     if let Some(r) = args.get_usize("replicates")? {
         cfg.decode.replicates = r;
     }
+    if let Some(t) = args.get_usize("threads")? {
+        cfg.threads = t;
+        cfg.decode.params.threads = t;
+    }
     Ok(cfg)
 }
 
@@ -111,6 +115,12 @@ fn cmd_cluster(args: Vec<String>) -> Result<()> {
         .opt("sigma", "FLOAT", None, "kernel bandwidth (default: heuristic)")
         .opt("seed", "NUM", None, "RNG seed")
         .opt("replicates", "NUM", None, "decoder replicates")
+        .opt(
+            "threads",
+            "NUM",
+            None,
+            "decoder threads, 0 = all cores (acquisition uses [pipeline] workers)",
+        )
         .opt("config", "FILE", None, "TOML job config")
         .opt("out", "FILE", None, "write centroids CSV here");
     let parsed = spec.parse(args)?;
@@ -176,6 +186,7 @@ fn cmd_sketch(args: Vec<String>) -> Result<()> {
         .opt("method", "NAME", None, "ckm|qckm|triangle")
         .opt("sigma", "FLOAT", None, "kernel bandwidth")
         .opt("seed", "NUM", None, "RNG seed")
+        .opt("threads", "NUM", None, "compute threads (0 = all cores)")
         .opt("config", "FILE", None, "TOML job config")
         .opt("out", "FILE", None, "write the sketch as one CSV row");
     let parsed = spec.parse(args)?;
@@ -184,7 +195,7 @@ fn cmd_sketch(args: Vec<String>) -> Result<()> {
     let x = load_csv(Path::new(data_path))?;
     let mut rng = Rng::new(cfg.seed);
     let op = build_operator(&cfg, &x, &mut rng);
-    let z = op.sketch_dataset(&x);
+    let z = op.sketch_dataset_par(&x, &qckm::parallel::Parallelism::fixed(cfg.threads));
     println!(
         "sketch: {} slots, first 8: {:?}",
         z.len(),
@@ -203,7 +214,8 @@ fn cmd_experiment(args: Vec<String>) -> Result<()> {
         .flag("full", "paper-scale grid (slow) instead of the quick grid")
         .opt("trials", "NUM", None, "override trials per cell")
         .opt("samples", "NUM", None, "override dataset size")
-        .opt("seed", "NUM", None, "override seed");
+        .opt("seed", "NUM", None, "override seed")
+        .opt("threads", "NUM", None, "trial fan-out threads (0 = all cores)");
     let parsed = spec.parse(args)?;
     let which = parsed
         .positional(0)
@@ -231,6 +243,9 @@ fn cmd_experiment(args: Vec<String>) -> Result<()> {
             if let Some(seed) = parsed.get_u64("seed")? {
                 cfg.seed = seed;
             }
+            if let Some(t) = parsed.get_usize("threads")? {
+                cfg.threads = t;
+            }
             let res = exp::run_fig2(&cfg);
             println!("{}", res.render());
         }
@@ -249,6 +264,9 @@ fn cmd_experiment(args: Vec<String>) -> Result<()> {
             if let Some(seed) = parsed.get_u64("seed")? {
                 cfg.seed = seed;
             }
+            if let Some(t) = parsed.get_usize("threads")? {
+                cfg.threads = t;
+            }
             let res = exp::run_fig3(&cfg);
             println!("{}", res.render());
         }
@@ -260,10 +278,11 @@ fn cmd_experiment(args: Vec<String>) -> Result<()> {
             if let Some(seed) = parsed.get_u64("seed")? {
                 cfg.seed = seed;
             }
-            for sig in [
-                Arc::new(qckm::signature::UniversalQuantizer) as Arc<dyn qckm::signature::Signature>,
+            let sigs: [Arc<dyn qckm::signature::Signature>; 2] = [
+                Arc::new(qckm::signature::UniversalQuantizer),
                 Arc::new(qckm::signature::Triangle),
-            ] {
+            ];
+            for sig in sigs {
                 let res = exp::run_prop1(sig, &cfg);
                 println!("{}", res.render());
             }
@@ -272,6 +291,9 @@ fn cmd_experiment(args: Vec<String>) -> Result<()> {
             let mut cfg = exp::AblationConfig::default();
             if let Some(t) = parsed.get_usize("trials")? {
                 cfg.trials = t;
+            }
+            if let Some(t) = parsed.get_usize("threads")? {
+                cfg.threads = t;
             }
             if full {
                 cfg.trials = 30;
@@ -374,7 +396,13 @@ fn cmd_pipeline(args: Vec<String>) -> Result<()> {
         sol.objective
     );
     for i in 0..sol.centroids.rows() {
-        let c: Vec<String> = sol.centroids.row(i).iter().take(6).map(|v| format!("{v:+.2}")).collect();
+        let c: Vec<String> = sol
+            .centroids
+            .row(i)
+            .iter()
+            .take(6)
+            .map(|v| format!("{v:+.2}"))
+            .collect();
         println!("  c[{i}] alpha={:.3} [{} …]", sol.weights[i], c.join(", "));
     }
     Ok(())

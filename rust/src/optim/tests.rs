@@ -57,8 +57,10 @@ fn lbfgs_rosenbrock() {
         g[1] = 200.0 * (b - a * a);
         (1.0 - a).powi(2) + 100.0 * (b - a * a).powi(2)
     };
-    let mut p = LbfgsParams::default();
-    p.max_iters = 2000;
+    let p = LbfgsParams {
+        max_iters: 2000,
+        ..LbfgsParams::default()
+    };
     let res = lbfgsb(f, &[-1.2, 1.0], &Bounds::unbounded(2), &p);
     assert!(
         (res.x[0] - 1.0).abs() < 1e-4 && (res.x[1] - 1.0).abs() < 1e-4,

@@ -1,0 +1,167 @@
+//! Deterministic scoped-thread execution layer for the crate's hot paths.
+//!
+//! Everything CPU-bound in this system — the pooled-sketch encode, CL-OMPR's
+//! Step-1 candidate screening / L-BFGS restarts, and the experiment
+//! replicate grids — fans out through this module. It is a small chunked
+//! runner over `std::thread::scope` (the environment vendors no `rayon`):
+//! work is split into **fixed-size chunks**, worker threads *steal* chunk
+//! indices from a shared atomic counter, and the per-chunk results are
+//! handed back **merged in chunk order**.
+//!
+//! ## Determinism contract
+//!
+//! Results are a function of the input and the chunk size alone — **never**
+//! of the thread count or the OS schedule. Concretely:
+//!
+//! 1. **Fixed chunk boundaries.** [`fixed_chunks`] partitions `0..total`
+//!    into `⌈total/chunk⌉` contiguous ranges whose boundaries depend only on
+//!    `total` and `chunk`. Callers must not derive chunk sizes from the
+//!    thread count.
+//! 2. **Pure chunk work.** The work closure sees `(chunk_index, range)` and
+//!    must not communicate between chunks; every chunk is computed by
+//!    identical code on identical inputs, whichever thread runs it.
+//! 3. **Ordered merge.** [`run_chunked`] returns results indexed by chunk,
+//!    and callers reduce them in that order. Floating-point reduction order
+//!    is therefore fixed, so parallel output is *bit-for-bit identical* to
+//!    the 1-thread run at any thread count.
+//!
+//! The coordinator's sensor sharding ([`crate::coordinator`]) reuses
+//! [`fixed_chunks`] as its sharding rule (blocks of samples assigned
+//! round-robin by block index), and the sketch encode uses it with
+//! [`crate::sketch::PAR_CHUNK_ROWS`]-row chunks; the determinism test suite
+//! (`rust/tests/determinism.rs`) locks the contract in for thread counts
+//! {1, 2, 7}.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// How many threads a parallel region may use.
+///
+/// `threads == 0` means "auto": one thread per available core. The knob is
+/// plumbed from `--threads` on the CLI and the `threads` config key; thanks
+/// to the determinism contract it changes wall-clock time only, never
+/// results.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Thread budget; 0 = all available cores.
+    pub threads: usize,
+}
+
+impl Parallelism {
+    /// Exactly one thread (runs inline, no spawning).
+    pub const fn serial() -> Self {
+        Self { threads: 1 }
+    }
+
+    /// One thread per available core.
+    pub const fn auto() -> Self {
+        Self { threads: 0 }
+    }
+
+    /// Exactly `threads` threads (0 = auto).
+    pub const fn fixed(threads: usize) -> Self {
+        Self { threads }
+    }
+
+    /// The concrete thread count this knob resolves to.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            self.threads
+        }
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+/// Partition `0..total` into contiguous chunks of `chunk` items (the last
+/// chunk may be short). The boundaries depend only on `total` and `chunk` —
+/// this is the fixed sharding rule of the determinism contract, shared with
+/// the coordinator's sensor sharding.
+pub fn fixed_chunks(total: usize, chunk: usize) -> Vec<Range<usize>> {
+    assert!(chunk >= 1, "chunk size must be >= 1");
+    let mut out = Vec::with_capacity(total.div_ceil(chunk));
+    let mut start = 0;
+    while start < total {
+        let end = (start + chunk).min(total);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// Run `work(chunk_index, range)` over every fixed chunk of `0..total`,
+/// using up to `par` threads, and return the results **in chunk order**.
+///
+/// Scheduling is dynamic (threads pull the next chunk index from an atomic
+/// counter — cheap work stealing), but per the determinism contract the
+/// output is independent of both the schedule and the thread count. A panic
+/// in any chunk propagates to the caller with its original payload.
+pub fn run_chunked<R, F>(total: usize, chunk: usize, par: &Parallelism, work: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, Range<usize>) -> R + Sync,
+{
+    let chunks = fixed_chunks(total, chunk);
+    let n_chunks = chunks.len();
+    let threads = par.resolved_threads().clamp(1, n_chunks.max(1));
+    if threads <= 1 {
+        return chunks
+            .into_iter()
+            .enumerate()
+            .map(|(i, range)| work(i, range))
+            .collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let next_ref = &next;
+    let chunks_ref = &chunks;
+    let work_ref = &work;
+    let per_thread: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_chunks {
+                            break;
+                        }
+                        local.push((i, work_ref(i, chunks_ref[i].clone())));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+            .collect()
+    });
+
+    let mut indexed: Vec<(usize, R)> = per_thread.into_iter().flatten().collect();
+    indexed.sort_by_key(|&(i, _)| i);
+    debug_assert_eq!(indexed.len(), n_chunks);
+    indexed.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Map `f` over `0..total` with up to `par` threads; results in index
+/// order. Sugar for [`run_chunked`] with single-item chunks — use it for
+/// coarse tasks (experiment trials, L-BFGS restarts), not tight loops.
+pub fn par_map<R, F>(total: usize, par: &Parallelism, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    run_chunked(total, 1, par, |i, _range| f(i))
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,111 @@
+//! Unit tests for the deterministic chunked runner.
+
+use super::*;
+
+#[test]
+fn fixed_chunks_partition_exactly() {
+    assert_eq!(fixed_chunks(0, 4), Vec::<Range<usize>>::new());
+    assert_eq!(fixed_chunks(1, 4), vec![0..1]);
+    assert_eq!(fixed_chunks(8, 4), vec![0..4, 4..8]);
+    assert_eq!(fixed_chunks(9, 4), vec![0..4, 4..8, 8..9]);
+    // Boundaries cover 0..total exactly once, in order.
+    let chunks = fixed_chunks(1000, 64);
+    let mut expect = 0;
+    for c in &chunks {
+        assert_eq!(c.start, expect);
+        assert!(c.len() <= 64 && !c.is_empty());
+        expect = c.end;
+    }
+    assert_eq!(expect, 1000);
+}
+
+#[test]
+#[should_panic]
+fn fixed_chunks_reject_zero_chunk() {
+    let _ = fixed_chunks(10, 0);
+}
+
+#[test]
+fn run_chunked_results_in_chunk_order_at_any_thread_count() {
+    // Work returns (index, range) so any mis-ordering is visible.
+    let reference: Vec<(usize, Range<usize>)> =
+        run_chunked(103, 10, &Parallelism::serial(), |i, r| (i, r));
+    for threads in [2, 3, 7, 16] {
+        let got = run_chunked(103, 10, &Parallelism::fixed(threads), |i, r| (i, r));
+        assert_eq!(got, reference, "threads = {threads}");
+    }
+    assert_eq!(reference.len(), 11);
+    assert_eq!(reference[10], (10, 100..103));
+}
+
+#[test]
+fn run_chunked_float_reduction_is_thread_invariant() {
+    // An order-sensitive floating-point reduction: per-chunk partial sums
+    // merged in chunk order must be bit-identical at every thread count.
+    let xs: Vec<f64> = (0..10_000).map(|i| ((i * 2654435761_usize) as f64).sqrt()).collect();
+    let reduce = |par: &Parallelism| -> f64 {
+        run_chunked(xs.len(), 128, par, |_, r| xs[r].iter().sum::<f64>())
+            .into_iter()
+            .fold(0.0, |acc, s| acc + s)
+    };
+    let serial = reduce(&Parallelism::serial());
+    for threads in [2, 5, 7] {
+        let par = reduce(&Parallelism::fixed(threads));
+        assert_eq!(par.to_bits(), serial.to_bits(), "threads = {threads}");
+    }
+}
+
+#[test]
+fn par_map_matches_serial_map() {
+    let want: Vec<usize> = (0..57).map(|i| i * i).collect();
+    for threads in [1, 2, 7] {
+        let got = par_map(57, &Parallelism::fixed(threads), |i| i * i);
+        assert_eq!(got, want, "threads = {threads}");
+    }
+}
+
+#[test]
+fn skewed_work_still_merges_in_order() {
+    // Make early chunks much slower than late ones so stealing reorders
+    // completion; the output order must not care.
+    let got = run_chunked(16, 1, &Parallelism::fixed(4), |i, _| {
+        if i < 4 {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        i
+    });
+    assert_eq!(got, (0..16).collect::<Vec<_>>());
+}
+
+#[test]
+fn worker_panic_propagates() {
+    let result = std::panic::catch_unwind(|| {
+        run_chunked(8, 1, &Parallelism::fixed(4), |i, _| {
+            if i == 5 {
+                panic!("chunk 5 exploded");
+            }
+            i
+        })
+    });
+    let payload = result.unwrap_err();
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .unwrap_or("<non-str>");
+    assert!(msg.contains("exploded"), "payload: {msg}");
+}
+
+#[test]
+fn parallelism_resolution() {
+    assert_eq!(Parallelism::serial().resolved_threads(), 1);
+    assert_eq!(Parallelism::fixed(3).resolved_threads(), 3);
+    assert!(Parallelism::auto().resolved_threads() >= 1);
+    assert_eq!(Parallelism::default(), Parallelism::auto());
+    assert_eq!(Parallelism::fixed(0), Parallelism::auto());
+}
+
+#[test]
+fn empty_input_yields_empty_output() {
+    let got: Vec<u8> = run_chunked(0, 8, &Parallelism::auto(), |_, _| unreachable!());
+    assert!(got.is_empty());
+}

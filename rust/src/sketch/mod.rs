@@ -28,8 +28,20 @@ pub use pooled::PooledSketch;
 
 use crate::frequency::DrawnFrequencies;
 use crate::linalg::{dot, Mat};
+use crate::parallel::Parallelism;
 use crate::signature::{Signature, UniversalQuantizer};
+use std::ops::Range;
 use std::sync::Arc;
+
+/// Fixed row-block size of the parallel encode ([`SketchOperator::sketch_into_par`]).
+///
+/// Part of the determinism contract (see [`crate::parallel`]): the dataset
+/// is always cut at multiples of this constant — never at thread-count-
+/// derived boundaries — and per-chunk partial pools are merged in chunk
+/// order, so the pooled sketch is bit-for-bit identical at every thread
+/// count. A multiple of the inner encode batch (64 rows) so each chunk's
+/// fold matches the serial fold exactly.
+pub const PAR_CHUNK_ROWS: usize = 4096;
 
 /// A fully specified sketch operator: frequencies + dithers + signature.
 #[derive(Clone)]
@@ -162,8 +174,19 @@ impl SketchOperator {
     /// Accumulate the (sum, count) of contributions of `x` into `pool`
     /// without finalizing — the streaming/distributed entry point.
     pub fn sketch_into(&self, x: &Mat, pool: &mut PooledSketch) {
+        self.sketch_range_into(x, 0..x.rows(), pool);
+    }
+
+    /// Like [`sketch_into`](Self::sketch_into), restricted to the row range
+    /// `rows` of `x` — the per-chunk work unit of the parallel encode.
+    pub fn sketch_range_into(&self, x: &Mat, rows: Range<usize>, pool: &mut PooledSketch) {
         assert_eq!(x.cols(), self.dim(), "dataset dimension mismatch");
         assert_eq!(pool.len(), self.sketch_len());
+        assert!(
+            rows.start <= rows.end && rows.end <= x.rows(),
+            "row range {rows:?} out of bounds for {} rows",
+            x.rows()
+        );
         const BATCH: usize = 64;
         let m = self.num_frequencies();
         let om = &self.freqs.omega;
@@ -172,9 +195,9 @@ impl SketchOperator {
         let mut v1 = vec![0.0; m];
         let mut acc0 = vec![0.0; m];
         let mut acc1 = vec![0.0; m];
-        let mut row = 0;
-        while row < x.rows() {
-            let b = BATCH.min(x.rows() - row);
+        let mut row = rows.start;
+        while row < rows.end {
+            let b = BATCH.min(rows.end - row);
             // proj[b × M] = X[row..row+b] · Ω  (ikj, Ω rows streamed),
             // with the dither ξ pre-added to each row's projections.
             for i in 0..b {
@@ -208,6 +231,36 @@ impl SketchOperator {
             }
             pool.bump_count(b as u64);
             row += b;
+        }
+    }
+
+    /// Pooled sketch of a whole dataset, sharded across up to `par` threads
+    /// in fixed [`PAR_CHUNK_ROWS`]-row blocks.
+    ///
+    /// Bit-for-bit identical to [`sketch_dataset`](Self::sketch_dataset) for
+    /// datasets of at most one chunk, and — by the determinism contract of
+    /// [`crate::parallel`] — identical across **all** thread counts for any
+    /// dataset: chunk boundaries are fixed by the row count alone and the
+    /// per-chunk partial pools are merged in chunk order.
+    pub fn sketch_dataset_par(&self, x: &Mat, par: &Parallelism) -> Vec<f64> {
+        let mut pool = PooledSketch::new(self.sketch_len());
+        self.sketch_into_par(x, &mut pool, par);
+        pool.mean()
+    }
+
+    /// Accumulate the contributions of every row of `x` into `pool` using
+    /// up to `par` threads (see [`sketch_dataset_par`](Self::sketch_dataset_par)).
+    pub fn sketch_into_par(&self, x: &Mat, pool: &mut PooledSketch, par: &Parallelism) {
+        assert_eq!(x.cols(), self.dim(), "dataset dimension mismatch");
+        assert_eq!(pool.len(), self.sketch_len());
+        let partials = crate::parallel::run_chunked(x.rows(), PAR_CHUNK_ROWS, par, |_, rows| {
+            let mut partial = PooledSketch::new(self.sketch_len());
+            self.sketch_range_into(x, rows, &mut partial);
+            partial
+        });
+        // Ordered merge: the floating-point reduction order is fixed.
+        for partial in &partials {
+            pool.merge(partial);
         }
     }
 

@@ -8,6 +8,7 @@ use qckm::frequency::{DrawnFrequencies, FrequencyLaw};
 use qckm::linalg::Mat;
 use qckm::metrics::adjusted_rand_index;
 use qckm::optim::nnls;
+use qckm::parallel::Parallelism;
 use qckm::rng::Rng;
 use qckm::sketch::{BitAggregator, PooledSketch, SketchOperator};
 use qckm::testkit::{property, Gen};
@@ -94,6 +95,58 @@ fn prop_pipeline_invariant_to_workers_batch_queue() {
         for (u, v) in rep.sketch.iter().zip(&reference) {
             assert!((u - v).abs() < 1e-12, "cfg {cfg:?}");
         }
+    });
+}
+
+#[test]
+fn prop_parallel_sketch_equals_serial_bit_for_bit() {
+    property("parallel sketch == serial", 25, |g| {
+        let quantized = g.bool();
+        let op = random_operator(g, quantized);
+        let rows = g.usize_in(1, 500);
+        let x = Mat::from_fn(rows, op.dim(), |_, _| g.gaussian());
+        let serial = op.sketch_dataset(&x);
+        let threads = g.usize_in(1, 8);
+        let par = Parallelism::fixed(threads);
+        // Whole-dataset mean and the accumulating entry point, both exact.
+        assert_eq!(op.sketch_dataset_par(&x, &par), serial, "threads {threads}");
+        let mut pool = PooledSketch::new(op.sketch_len());
+        op.sketch_into_par(&x, &mut pool, &par);
+        assert_eq!(pool.count(), rows as u64);
+        assert_eq!(pool.mean(), serial, "sketch_into_par (threads {threads})");
+    });
+}
+
+#[test]
+fn prop_jtv_from_atom_matches_fused_kernel_and_finite_differences() {
+    property("jtv_from_atom gradients", 40, |g| {
+        let quantized = g.bool();
+        let op = random_operator(g, quantized);
+        let c = g.vec_gaussian(op.dim());
+        let v = g.vec_gaussian(op.sketch_len());
+        // Trig-free JᵀV from a precomputed atom vs the fused sincos kernel.
+        let mut g_fused = vec![0.0; op.dim()];
+        let atom = op.atom_and_jtv(&c, &v, &mut g_fused);
+        let mut g_from_atom = vec![0.0; op.dim()];
+        op.jtv_from_atom(&atom, &v, &mut g_from_atom);
+        for (a, b) in g_fused.iter().zip(&g_from_atom) {
+            assert!(
+                (a - b).abs() <= 1e-9 * (1.0 + a.abs()),
+                "fused {a} vs from-atom {b}"
+            );
+        }
+        // Both must be the true gradient of c ↦ ⟨a(c), v⟩ (central FD).
+        let dir = g.vec_gaussian(op.dim());
+        let h = 1e-6;
+        let cp: Vec<f64> = c.iter().zip(&dir).map(|(a, d)| a + h * d).collect();
+        let cm: Vec<f64> = c.iter().zip(&dir).map(|(a, d)| a - h * d).collect();
+        let fd = (qckm::linalg::dot(&op.atom(&cp), &v) - qckm::linalg::dot(&op.atom(&cm), &v))
+            / (2.0 * h);
+        let an = qckm::linalg::dot(&g_from_atom, &dir);
+        assert!(
+            (fd - an).abs() < 1e-4 * (1.0 + fd.abs()),
+            "directional derivative {an} vs fd {fd}"
+        );
     });
 }
 

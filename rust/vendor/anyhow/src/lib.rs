@@ -1,0 +1,205 @@
+//! A minimal, offline drop-in for the slice of `anyhow` this workspace uses.
+//!
+//! The build environment has no crates.io access, so the real `anyhow`
+//! cannot be fetched. This vendored crate implements the exact API surface
+//! the `qckm` crate relies on:
+//!
+//! * [`Error`] — an opaque error value holding a context chain.
+//! * [`Result`] — `Result<T, Error>` with a default error type parameter.
+//! * [`anyhow!`] / [`bail!`] — format-style error construction / early return.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Formatting follows the real crate's convention: `{}` prints the outermost
+//! message, `{:#}` prints the whole `outer: inner: …` chain.
+
+use std::fmt;
+
+/// An error with an optional chain of wrapped causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    fn wrap(msg: String, source: Error) -> Self {
+        Self {
+            msg,
+            source: Some(Box::new(source)),
+        }
+    }
+
+    fn fmt_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            write!(f, ": {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            self.fmt_chain(f)
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.fmt_chain(f)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes this blanket conversion coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut it = msgs.into_iter().rev();
+        let mut err = Error::msg(it.next().expect("at least one message"));
+        for m in it {
+            err = Error::wrap(m, err);
+        }
+        err
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and turn `None` into an error).
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C>(self, ctx: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error (or `None`) with a lazily built context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C>(self, ctx: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::wrap(ctx.to_string(), e.into()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::wrap(f().to_string(), e.into()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, ctx: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_plain_vs_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing file");
+        assert_eq!(format!("{e:?}"), "reading config: missing file");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(format!("{e}"), "bad value 7");
+        fn fails() -> Result<()> {
+            bail!("broke with code {}", 3);
+        }
+        assert_eq!(format!("{}", fails().unwrap_err()), "broke with code 3");
+    }
+
+    #[test]
+    fn with_context_is_lazy_and_chains() {
+        let ok: Result<u32, std::io::Error> = Ok(5);
+        let v = ok.with_context(|| panic!("must not run")).unwrap();
+        assert_eq!(v, 5);
+        let e = Err::<(), _>(io_err())
+            .with_context(|| format!("step {}", 2))
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 2: missing file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("x").is_err());
+    }
+}
