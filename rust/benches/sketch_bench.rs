@@ -7,7 +7,9 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{bench, black_box};
+use harness::{bench, black_box, Summary};
+use qckm::coordinator::WireFormat;
+use qckm::data::save_f64_bin;
 use qckm::frequency::{DrawnFrequencies, FrequencyLaw};
 use qckm::linalg::Mat;
 use qckm::parallel::Parallelism;
@@ -69,6 +71,66 @@ fn main() {
         );
     }
 
+    // Streamed (out-of-core) vs in-memory sketching: the streaming fold is
+    // bit-for-bit the in-memory one, so this section measures pure I/O +
+    // windowing overhead. Results also land in BENCH_stream.json to start
+    // the streamed-path perf trajectory.
+    println!("\n== streamed vs in-memory sketch ==");
+    let mut stream_records: Vec<(String, Summary, f64)> = Vec::new();
+    let data_path = std::env::temp_dir().join("qckm_sketch_bench_stream.bin");
+    save_f64_bin(&data_path, &big).expect("write bench dataset");
+    for threads in [1usize, 4] {
+        let par = Parallelism::fixed(threads);
+        let s_mem = bench(
+            &format!("in-memory sketch {big_rows}x{n}, {threads} threads"),
+            1,
+            800,
+            || {
+                black_box(op.sketch_dataset_par(&big, &par));
+            },
+        );
+        s_mem.print_rate("samples", big_rows as f64);
+        let mem_median_ns = s_mem.median_ns;
+        stream_records.push((format!("in_memory_t{threads}"), s_mem, big_rows as f64));
+        let s_stream = bench(
+            &format!("streamed sketch {big_rows}x{n}, {threads} threads"),
+            1,
+            800,
+            || {
+                let pool = qckm::stream::sketch_file(&op, &data_path, WireFormat::DenseF64, &par)
+                    .expect("streamed sketch");
+                black_box(pool.mean());
+            },
+        );
+        s_stream.print_rate("samples", big_rows as f64);
+        println!(
+            "    streaming overhead: {:.2}x the in-memory wall clock",
+            s_stream.median_ns / mem_median_ns
+        );
+        stream_records.push((format!("streamed_t{threads}"), s_stream, big_rows as f64));
+    }
+    // Packed-bit pooling (the sensor acquisition encoding) through the same
+    // streamed path.
+    let s_bits = bench(
+        &format!("streamed sketch bits {big_rows}x{n}, 4 threads"),
+        1,
+        800,
+        || {
+            let pool = qckm::stream::sketch_file(
+                &op,
+                &data_path,
+                WireFormat::PackedBits,
+                &Parallelism::fixed(4),
+            )
+            .expect("streamed bit sketch");
+            black_box(pool.mean());
+        },
+    );
+    s_bits.print_rate("samples", big_rows as f64);
+    stream_records.push(("streamed_bits_t4".to_string(), s_bits, big_rows as f64));
+    let _ = std::fs::remove_file(&data_path);
+    write_stream_json(&stream_records);
+
     // Cosine signature (CKM) for the sincos-cost comparison.
     let op_c = SketchOperator::new(freqs.clone(), qckm::config::Method::Ckm.signature());
     let native_c = NativeEngine::new(op_c);
@@ -111,5 +173,30 @@ fn main() {
             s.print_rate("samples", batch as f64);
         }
         Err(_) => println!("(pjrt bench skipped: run `make artifacts` first)"),
+    }
+}
+
+/// Emit the streamed-vs-in-memory records as `BENCH_stream.json` at the
+/// repo root — machine-readable so successive PRs can track the streamed
+/// path's perf trajectory.
+fn write_stream_json(records: &[(String, Summary, f64)]) {
+    let mut json = String::from(
+        "{\n  \"bench\": \"stream_sketch\",\n  \"unit\": \"ns/iter\",\n  \"results\": [\n",
+    );
+    for (i, (name, s, per_iter)) in records.iter().enumerate() {
+        let rate = per_iter / (s.median_ns * 1e-9);
+        json.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"median_ns\": {:.0}, \"mean_ns\": {:.0}, \
+             \"samples_per_s\": {rate:.0}}}{}\n",
+            s.median_ns,
+            s.mean_ns,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_stream.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("(stream bench results written to {})", path.display()),
+        Err(e) => eprintln!("(could not write {}: {e})", path.display()),
     }
 }

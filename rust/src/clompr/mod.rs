@@ -23,10 +23,12 @@
 //! The weights are renormalized to sum 1 only on output (the objective is
 //! scale-aware through Step 4/5, as in SketchMLbox).
 //!
-//! Step 1 — the decode's hot path — can fan its candidate screening and
-//! L-BFGS restarts across threads via [`ClOmprParams::threads`]; by the
-//! determinism contract of [`crate::parallel`] the decoded solution is
-//! bit-for-bit identical at every thread count.
+//! Step 1 — the decode's hot path — fans its candidate screening and
+//! L-BFGS restarts across threads via [`ClOmprParams::threads`], and
+//! Step 5 fans its per-atom objective/gradient terms (independent before
+//! the ordered reduce) over the same knob; by the determinism contract of
+//! [`crate::parallel`] the decoded solution is bit-for-bit identical at
+//! every thread count.
 
 use crate::linalg::{axpy, dot, norm2, sub, Mat};
 use crate::optim::{lbfgsb, nnls, Bounds, LbfgsParams, LbfgsResult};
@@ -50,11 +52,13 @@ pub struct ClOmprParams {
     pub step5_iters: usize,
     /// L-BFGS iteration cap for the final Step 5 polish.
     pub step5_final_iters: usize,
-    /// Threads for Step 1's candidate screening and L-BFGS restarts
-    /// (1 = serial, 0 = all cores, n = exactly n). The decode is bit-for-bit
-    /// identical at every setting — candidate starts are drawn from the RNG
-    /// up front in the serial order, the concurrent scores/refinements are
-    /// pure, and ties are resolved in candidate order (see [`crate::parallel`]).
+    /// Threads for Step 1's candidate screening / L-BFGS restarts and
+    /// Step 5's per-atom objective+gradient terms (1 = serial, 0 = all
+    /// cores, n = exactly n). The decode is bit-for-bit identical at every
+    /// setting — candidate starts are drawn from the RNG up front in the
+    /// serial order, the concurrent scores/refinements/atom terms are pure,
+    /// and reductions happen in candidate/atom order (see
+    /// [`crate::parallel`]).
     pub threads: usize,
 }
 
@@ -312,26 +316,47 @@ impl<'a> ClOmpr<'a> {
         };
 
         let sketch_len = self.op.sketch_len();
-        let mut atoms = vec![vec![0.0; sketch_len]; kc];
+        // Per-atom evaluation and per-atom gradient terms are independent;
+        // they fan out across `params.threads` and reduce in atom order
+        // (ordered `u` fold, per-atom gradient slots), so — as everywhere
+        // else under the `crate::parallel` contract — the refined solution
+        // is bit-for-bit identical at every thread count. Tiny supports
+        // run inline: the objective is evaluated every L-BFGS iteration
+        // and two thread-scope spawns per call only pay off once there are
+        // enough atoms to amortize them (per-atom arithmetic is identical
+        // either way, so this cutoff cannot change results).
+        let par = if kc < 4 {
+            Parallelism::serial()
+        } else {
+            Parallelism::fixed(self.params.threads)
+        };
         let mut res = lbfgsb(
             |x, g| {
                 let (cs, al) = x.split_at(kc * n);
-                // Model u = Σ α_k a(c_k); residual e = z − u.
+                // Atom evaluations (the sincos-heavy part), one per centroid.
+                let atoms: Vec<Vec<f64>> =
+                    parallel::par_map(kc, &par, |k| self.op.atom(&cs[k * n..(k + 1) * n]));
+                // Model u = Σ α_k a(c_k) folded in atom order; residual e.
                 let mut u = vec![0.0; sketch_len];
                 for k in 0..kc {
-                    atoms[k] = self.op.atom(&cs[k * n..(k + 1) * n]);
                     axpy(al[k], &atoms[k], &mut u);
                 }
                 let e = sub(z, &u);
                 // ∂F/∂c_k = −2 α_k J_kᵀ e ; ∂F/∂α_k = −2 ⟨a_k, e⟩.
-                // JᵀV comes trig-free from the atoms computed above.
-                let mut jte = vec![0.0; n];
-                for k in 0..kc {
+                // JᵀV comes trig-free from the atoms computed above; each
+                // atom's term touches only its own gradient slots.
+                let grads: Vec<(Vec<f64>, f64)> = parallel::par_map(kc, &par, |k| {
+                    let mut jte = vec![0.0; n];
                     self.op.jtv_from_atom(&atoms[k], &e, &mut jte);
-                    for (gi, &ji) in g[k * n..(k + 1) * n].iter_mut().zip(&jte) {
-                        *gi = -2.0 * al[k] * ji;
+                    let scale = -2.0 * al[k];
+                    for ji in jte.iter_mut() {
+                        *ji *= scale;
                     }
-                    g[kc * n + k] = -2.0 * dot(&atoms[k], &e);
+                    (jte, -2.0 * dot(&atoms[k], &e))
+                });
+                for (k, (gc, ga)) in grads.iter().enumerate() {
+                    g[k * n..(k + 1) * n].copy_from_slice(gc);
+                    g[kc * n + k] = *ga;
                 }
                 dot(&e, &e)
             },

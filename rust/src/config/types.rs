@@ -130,11 +130,7 @@ impl JobConfig {
         cfg.sketch.num_frequencies = m as usize;
         let method_name = doc.get_str("sketch", "method", cfg.sketch.method.name());
         cfg.sketch.method = Method::parse(method_name)?;
-        cfg.sketch.law = match doc.get_str("sketch", "law", "adapted-radius") {
-            "adapted-radius" => FrequencyLaw::AdaptedRadius,
-            "gaussian" => FrequencyLaw::Gaussian,
-            other => bail!("unknown frequency law '{other}'"),
-        };
+        cfg.sketch.law = FrequencyLaw::parse(doc.get_str("sketch", "law", "adapted-radius"))?;
         if let Some(v) = doc.get("sketch", "sigma") {
             let s = v
                 .as_float()

@@ -5,37 +5,52 @@ use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
+/// Parse one CSV line into values, or `None` for skipped (blank/`#`)
+/// lines. `expect_cols == 0` accepts any width; otherwise the width must
+/// match. Shared by the eager loader below and the streaming
+/// [`crate::stream::CsvChunkedReader`] so their parsing semantics — and
+/// therefore the in-memory and streamed sketches — cannot diverge.
+pub(crate) fn parse_csv_line(
+    line: &str,
+    expect_cols: usize,
+    path: &str,
+    lineno: usize,
+) -> Result<Option<Vec<f64>>> {
+    let trimmed = line.trim();
+    if trimmed.is_empty() || trimmed.starts_with('#') {
+        return Ok(None);
+    }
+    let vals: Vec<f64> = trimmed
+        .split(',')
+        .map(|tok| {
+            tok.trim()
+                .parse::<f64>()
+                .with_context(|| format!("{path}:{lineno}: bad number '{tok}'"))
+        })
+        .collect::<Result<_>>()?;
+    if expect_cols != 0 && vals.len() != expect_cols {
+        bail!(
+            "{path}:{lineno}: expected {expect_cols} columns, got {}",
+            vals.len()
+        );
+    }
+    Ok(Some(vals))
+}
+
 /// Load a headerless numeric CSV (one sample per row).
 pub fn load_csv(path: &Path) -> Result<Mat> {
     let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let reader = BufReader::new(file);
+    let pathstr = path.display().to_string();
     let mut data: Vec<f64> = Vec::new();
     let mut cols = 0usize;
     let mut rows = 0usize;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
-        let trimmed = line.trim();
-        if trimmed.is_empty() || trimmed.starts_with('#') {
+        let Some(vals) = parse_csv_line(&line, cols, &pathstr, lineno + 1)? else {
             continue;
-        }
-        let vals: Vec<f64> = trimmed
-            .split(',')
-            .map(|tok| {
-                tok.trim()
-                    .parse::<f64>()
-                    .with_context(|| format!("{}:{}: bad number '{tok}'", path.display(), lineno + 1))
-            })
-            .collect::<Result<_>>()?;
-        if cols == 0 {
-            cols = vals.len();
-        } else if vals.len() != cols {
-            bail!(
-                "{}:{}: expected {cols} columns, got {}",
-                path.display(),
-                lineno + 1,
-                vals.len()
-            );
-        }
+        };
+        cols = vals.len();
         data.extend(vals);
         rows += 1;
     }

@@ -14,6 +14,7 @@ mod io;
 mod synth;
 
 pub use io::{load_csv, load_f64_bin, save_csv, save_f64_bin};
+pub(crate) use io::parse_csv_line;
 pub use synth::{gaussian_mixture_pm1, spectral_embedding_like, LabeledData};
 
 #[cfg(test)]

@@ -141,6 +141,47 @@ fn bin_round_trip() {
 }
 
 #[test]
+fn csv_round_trip_is_bit_exact() {
+    // `save_csv` prints f64 with Rust's shortest round-trip formatting, so
+    // load(save(x)) must reproduce every value to the last bit — the
+    // property the stage-split CLI tests lean on when comparing centroid
+    // files.
+    let dir = std::env::temp_dir().join("qckm_test_csv4");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exact.csv");
+    let mut rng = Rng::new(7);
+    let mut m = Mat::from_fn(11, 3, |_, _| rng.gaussian() * 1e-7);
+    // Throw in awkward values: subnormal-ish, huge, negative zero, integers.
+    m.set(0, 0, 1.0e-300);
+    m.set(0, 1, -9.87654321e18);
+    m.set(0, 2, -0.0);
+    m.set(1, 0, 42.0);
+    save_csv(&path, &m).unwrap();
+    let back = load_csv(&path).unwrap();
+    assert_eq!(back.shape(), m.shape());
+    for (a, b) in back.as_slice().iter().zip(m.as_slice()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b} bitwise");
+    }
+}
+
+#[test]
+fn bin_rejects_empty_and_bare_header_files() {
+    let dir = std::env::temp_dir().join("qckm_test_bin3");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Zero-byte file: no header at all.
+    let empty = dir.join("empty.bin");
+    std::fs::write(&empty, b"").unwrap();
+    assert!(load_f64_bin(&empty).is_err());
+    // Header promising data that never comes.
+    let bare = dir.join("bare.bin");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&2u64.to_le_bytes());
+    bytes.extend_from_slice(&3u64.to_le_bytes());
+    std::fs::write(&bare, &bytes).unwrap();
+    assert!(load_f64_bin(&bare).is_err());
+}
+
+#[test]
 fn bin_load_rejects_truncated() {
     let dir = std::env::temp_dir().join("qckm_test_bin2");
     std::fs::create_dir_all(&dir).unwrap();

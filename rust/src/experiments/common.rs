@@ -2,11 +2,14 @@
 
 use crate::clompr::{decode_best_of, ClOmprParams};
 use crate::config::Method;
+use crate::coordinator::WireFormat;
 use crate::frequency::{DrawnFrequencies, FrequencyLaw};
 use crate::linalg::{bounding_box, Mat};
 use crate::metrics::{adjusted_rand_index, assign_labels, sse};
+use crate::parallel::Parallelism;
 use crate::rng::Rng;
-use crate::sketch::SketchOperator;
+use crate::sketch::{PooledSketch, SketchOperator};
+use crate::stream::{sketch_reader, MatChunkedReader};
 
 /// One compressive-method run on one dataset.
 #[derive(Clone, Debug)]
@@ -18,6 +21,13 @@ pub struct MethodRun {
     pub sigma: f64,
     pub law: FrequencyLaw,
     pub params: ClOmprParams,
+    /// Pool the sketch through the out-of-core streaming fold
+    /// ([`crate::stream`]) instead of the in-memory encode. Identical to
+    /// the in-memory sketch for ±1 signatures (exact integer sums) and for
+    /// datasets of at most one 4096-row chunk; beyond that the chunked
+    /// reduction order may differ from `sketch_dataset`'s continuous fold
+    /// in the last ulp (it always equals `sketch_dataset_par`).
+    pub streamed: bool,
 }
 
 /// Metrics of one trial.
@@ -46,7 +56,20 @@ pub fn run_method_once(
         DrawnFrequencies::draw_undithered(run.law, n, run.m, run.sigma, rng)
     };
     let op = SketchOperator::new(freqs, run.method.signature());
-    let z = op.sketch_dataset(x);
+    let z = if run.streamed {
+        let mut pool = PooledSketch::new(op.sketch_len());
+        sketch_reader(
+            &op,
+            &mut MatChunkedReader::new(x),
+            WireFormat::DenseF64,
+            &mut pool,
+            &Parallelism::serial(),
+        )
+        .expect("in-memory streaming cannot fail");
+        pool.mean()
+    } else {
+        op.sketch_dataset(x)
+    };
     let (lo, hi) = bounding_box(x);
     let sol = decode_best_of(&op, k, &z, lo, hi, &run.params, run.replicates, rng);
     let s = sse(x, &sol.centroids);

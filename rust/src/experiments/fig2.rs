@@ -46,6 +46,10 @@ pub struct Fig2Config {
     /// Threads for the (value × trial) fan-out (0 = all cores). Per-trial
     /// RNG substreams make the grid bit-for-bit identical at any setting.
     pub threads: usize,
+    /// Sketch each trial through the out-of-core streaming fold
+    /// ([`crate::stream`]) instead of the in-memory encode — the streamed
+    /// variant of the figure (`qckm experiment fig2a --streamed`).
+    pub streamed: bool,
 }
 
 impl Fig2Config {
@@ -74,6 +78,7 @@ impl Fig2Config {
             seed: 0x20180619, // the paper's date
             decoder: ClOmprParams::default(),
             threads: 0,
+            streamed: false,
         }
     }
 
@@ -163,6 +168,7 @@ pub fn run_fig2(cfg: &Fig2Config) -> Fig2Result {
                             sigma,
                             law: cfg.law,
                             params: cfg.decoder.clone(),
+                            streamed: cfg.streamed,
                         };
                         let out = run_method_once(&run, &data.points, None, k, &mut rng);
                         is_success(out.sse, km.sse)
@@ -204,8 +210,13 @@ pub fn run_fig2(cfg: &Fig2Config) -> Fig2Result {
 
     Fig2Result {
         config_desc: format!(
-            "{:?}: values {:?}, ratios {:?}, {} trials, N = {}",
-            cfg.variant, cfg.values, cfg.ratios, cfg.trials, cfg.n_samples
+            "{:?}: values {:?}, ratios {:?}, {} trials, N = {}{}",
+            cfg.variant,
+            cfg.values,
+            cfg.ratios,
+            cfg.trials,
+            cfg.n_samples,
+            if cfg.streamed { ", streamed sketch" } else { "" }
         ),
         success,
         methods: cfg.methods.clone(),

@@ -128,6 +128,7 @@ pub fn run_fig3(cfg: &Fig3Config) -> Fig3Result {
                     sigma,
                     law: cfg.law,
                     params: cfg.decoder.clone(),
+                    streamed: false,
                 };
                 let out = run_method_once(&run, &data.points, Some(&data.labels), cfg.k, &mut rng);
                 rows_out.push((out.sse / cfg.n_samples as f64, out.ari));

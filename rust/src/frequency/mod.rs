@@ -39,6 +39,15 @@ impl FrequencyLaw {
             FrequencyLaw::AdaptedRadius => "adapted-radius",
         }
     }
+
+    /// Inverse of [`name`](Self::name) (config files, `.qsk` headers).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "gaussian" => FrequencyLaw::Gaussian,
+            "adapted-radius" => FrequencyLaw::AdaptedRadius,
+            other => anyhow::bail!("unknown frequency law '{other}' (gaussian|adapted-radius)"),
+        })
+    }
 }
 
 /// How to choose the kernel bandwidth `σ_k`.

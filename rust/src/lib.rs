@@ -62,6 +62,7 @@ pub mod rng;
 pub mod runtime;
 pub mod signature;
 pub mod sketch;
+pub mod stream;
 pub mod testkit;
 
 /// The most common imports in one place.

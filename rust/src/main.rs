@@ -2,10 +2,18 @@
 //!
 //! ```text
 //! qckm cluster     --data x.csv --k 10 [--method qckm] [--config job.toml]
-//! qckm sketch      --data x.csv [--method qckm] --out sketch.csv
+//! qckm sketch      --data shard.csv --sigma 1.2 --seed 7 --out shard.qsk
+//! qckm merge       --out merged.qsk shard0.qsk shard1.qsk …
+//! qckm decode      --sketch merged.qsk --k 10 [--lo -2 --hi 2] --out c.csv
 //! qckm experiment  fig2a|fig2b|fig3|prop1|ablation [--full]
 //! qckm pipeline    [--workers 8] [--samples 100000] … (streaming demo)
 //! ```
+//!
+//! `sketch` → `merge` → `decode` is the paper's distributed acquisition
+//! pipeline split into stages: each shard is stream-sketched (bounded
+//! memory, bit-for-bit the in-memory sketch) where its data lives, the
+//! tiny `.qsk` files are merged associatively, and centroids are decoded
+//! once from the pooled sketch — no stage ever needs the whole dataset.
 //!
 //! Every run prints its seed and full parameterization so results are
 //! reproducible; experiment outputs are the rows/series recorded in
@@ -13,15 +21,17 @@
 
 use anyhow::{bail, Context, Result};
 use qckm::cli::CliSpec;
-use qckm::clompr::decode_best_of;
+use qckm::clompr::{decode_best_of, ClOmprParams};
 use qckm::config::{JobConfig, Method};
 use qckm::coordinator::{run_pipeline, PipelineConfig, SampleSource, WireFormat};
 use qckm::data::{load_csv, save_csv};
 use qckm::experiments as exp;
 use qckm::frequency::{DrawnFrequencies, SigmaHeuristic};
 use qckm::linalg::{bounding_box, Mat};
+use qckm::parallel::Parallelism;
 use qckm::rng::Rng;
-use qckm::sketch::SketchOperator;
+use qckm::sketch::{PooledSketch, SketchOperator};
+use qckm::stream;
 use std::path::Path;
 use std::sync::Arc;
 
@@ -36,7 +46,8 @@ fn main() {
 fn dispatch(args: Vec<String>) -> Result<()> {
     let Some(cmd) = args.first().cloned() else {
         bail!(
-            "usage: qckm <cluster|sketch|experiment|pipeline> …  (use --help per command)\n\
+            "usage: qckm <cluster|sketch|merge|decode|experiment|pipeline> …  \
+             (use --help per command)\n\
              see README.md for a tour"
         );
     };
@@ -44,9 +55,13 @@ fn dispatch(args: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "cluster" => cmd_cluster(rest),
         "sketch" => cmd_sketch(rest),
+        "merge" => cmd_merge(rest),
+        "decode" => cmd_decode(rest),
         "experiment" => cmd_experiment(rest),
         "pipeline" => cmd_pipeline(rest),
-        other => bail!("unknown command '{other}' (cluster|sketch|experiment|pipeline)"),
+        other => {
+            bail!("unknown command '{other}' (cluster|sketch|merge|decode|experiment|pipeline)")
+        }
     }
 }
 
@@ -179,31 +194,236 @@ fn cmd_cluster(args: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// Per-chunk pooling encoding for the streamed sketch.
+fn wire_from(parsed: &qckm::cli::ParsedArgs, method: Method) -> Result<WireFormat> {
+    Ok(match parsed.get("encoding").unwrap_or("auto") {
+        "auto" => match method {
+            Method::Qckm => WireFormat::PackedBits,
+            _ => WireFormat::DenseF64,
+        },
+        "bits" => WireFormat::PackedBits,
+        "dense" => WireFormat::DenseF64,
+        other => bail!("unknown encoding '{other}' (auto|bits|dense)"),
+    })
+}
+
 fn cmd_sketch(args: Vec<String>) -> Result<()> {
-    let spec = CliSpec::new("qckm sketch", "compute the pooled sketch of a CSV dataset")
-        .opt("data", "FILE", None, "input CSV")
-        .opt("m", "NUM", None, "number of frequencies")
-        .opt("method", "NAME", None, "ckm|qckm|triangle")
-        .opt("sigma", "FLOAT", None, "kernel bandwidth")
-        .opt("seed", "NUM", None, "RNG seed")
-        .opt("threads", "NUM", None, "compute threads (0 = all cores)")
-        .opt("config", "FILE", None, "TOML job config")
-        .opt("out", "FILE", None, "write the sketch as one CSV row");
+    let spec = CliSpec::new(
+        "qckm sketch",
+        "stream the pooled sketch of a dataset shard into a .qsk file",
+    )
+    .opt("data", "FILE", None, "input dataset (.csv, else raw f64 bin)")
+    .opt("m", "NUM", None, "number of frequencies")
+    .opt("method", "NAME", None, "ckm|qckm|triangle")
+    .opt(
+        "sigma",
+        "FLOAT",
+        None,
+        "kernel bandwidth; required for out-of-core streaming and for shards to merge",
+    )
+    .opt("seed", "NUM", None, "frequency-draw seed (must match across shards)")
+    .opt("threads", "NUM", None, "compute threads (0 = all cores)")
+    .opt("encoding", "FMT", Some("auto"), "per-chunk pooling: auto|bits|dense")
+    .opt("config", "FILE", None, "TOML job config")
+    .opt("out", "FILE", None, "write the pooled sketch (.qsk) here")
+    .opt("out-csv", "FILE", None, "also write the mean sketch as one CSV row");
     let parsed = spec.parse(args)?;
     let cfg = job_from(&parsed)?;
     let data_path = parsed.get("data").context("--data is required")?;
-    let x = load_csv(Path::new(data_path))?;
-    let mut rng = Rng::new(cfg.seed);
-    let op = build_operator(&cfg, &x, &mut rng);
-    let z = op.sketch_dataset_par(&x, &qckm::parallel::Parallelism::fixed(cfg.threads));
+    let par = Parallelism::fixed(cfg.threads);
+    let method = cfg.sketch.method;
+    let wire = wire_from(&parsed, method)?;
+
+    // The frequency draw is a pure function of (method, law, m, d, sigma,
+    // seed) — the `.qsk` contract that lets every shard and the decoder
+    // reproduce the same operator. A fixed sigma streams out-of-core; the
+    // data-dependent heuristic needs the dataset once, in memory.
+    let (op, pool) = match cfg.sketch.sigma {
+        SigmaHeuristic::Fixed(sigma) => {
+            let mut reader = stream::open_dataset(Path::new(data_path))?;
+            let op = stream::draw_operator(
+                method,
+                cfg.sketch.law,
+                cfg.sketch.num_frequencies,
+                reader.dim(),
+                sigma,
+                cfg.seed,
+            );
+            let mut pool = PooledSketch::new(op.sketch_len());
+            let rows = stream::sketch_reader(&op, reader.as_mut(), wire, &mut pool, &par)?;
+            if rows == 0 {
+                bail!("{data_path}: empty dataset");
+            }
+            eprintln!("streamed {rows} rows from {data_path} ({wire:?} pooling)");
+            (op, pool)
+        }
+        heuristic => {
+            let mut reader = stream::open_dataset(Path::new(data_path))?;
+            let x = stream::read_all(reader.as_mut())?;
+            let sigma = heuristic.resolve(&x, &mut Rng::new(cfg.seed).substream(1));
+            eprintln!(
+                "note: sigma {sigma:.4} was estimated from the data in memory; pass --sigma \
+                 to stream out-of-core and to keep independent shards mergeable"
+            );
+            let op = stream::draw_operator(
+                method,
+                cfg.sketch.law,
+                cfg.sketch.num_frequencies,
+                x.cols(),
+                sigma,
+                cfg.seed,
+            );
+            // Same chunked fold as the streamed path (bitwise identical to
+            // `sketch_into_par`), so --encoding is honored here too.
+            let mut pool = PooledSketch::new(op.sketch_len());
+            stream::sketch_reader(
+                &op,
+                &mut stream::MatChunkedReader::new(&x),
+                wire,
+                &mut pool,
+                &par,
+            )?;
+            (op, pool)
+        }
+    };
+    eprintln!(
+        "operator: method={} law={} M={} sigma={:.4}",
+        method.name(),
+        cfg.sketch.law.name(),
+        op.num_frequencies(),
+        op.frequencies().sigma
+    );
+
+    let meta = stream::SketchMeta::for_operator(&op, method, cfg.seed);
+    if let Some(out) = parsed.get("out") {
+        stream::save_sketch(Path::new(out), &meta, &pool)?;
+        eprintln!("sketch written to {out} [{}]", meta.describe());
+    }
+    let z = pool.mean();
     println!(
-        "sketch: {} slots, first 8: {:?}",
+        "sketch: {} slots over {} samples, first 8: {:?}",
         z.len(),
+        pool.count(),
         &z[..z.len().min(8)]
     );
-    if let Some(out) = parsed.get("out") {
+    if let Some(out) = parsed.get("out-csv") {
         save_csv(Path::new(out), &Mat::from_vec(1, z.len(), z))?;
-        eprintln!("sketch written to {out}");
+        eprintln!("mean sketch written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_merge(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new(
+        "qckm merge",
+        "pool shard sketches (.qsk) into one — associative, any order",
+    )
+    .positionals("<shard.qsk>…")
+    .opt("out", "FILE", None, "write the merged .qsk here");
+    let parsed = spec.parse(args)?;
+    let inputs = parsed.positionals();
+    if inputs.is_empty() {
+        bail!("need at least one input .qsk (see --help)");
+    }
+    let out = parsed.get("out").context("--out is required")?;
+
+    let (meta, mut pool) = stream::load_sketch(Path::new(&inputs[0]))?;
+    eprintln!("{}: {} samples [{}]", inputs[0], pool.count(), meta.describe());
+    for input in &inputs[1..] {
+        let (shard_meta, shard_pool) = stream::load_sketch(Path::new(input))?;
+        meta.ensure_mergeable(&shard_meta)
+            .with_context(|| format!("merging {input}"))?;
+        eprintln!("{}: {} samples", input, shard_pool.count());
+        pool.merge(&shard_pool);
+    }
+    stream::save_sketch(Path::new(out), &meta, &pool)?;
+    println!(
+        "merged {} shard(s), {} samples -> {out}",
+        inputs.len(),
+        pool.count()
+    );
+    Ok(())
+}
+
+fn cmd_decode(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new(
+        "qckm decode",
+        "decode K centroids from a pooled sketch (.qsk) — no dataset needed",
+    )
+    .opt("sketch", "FILE", None, "input .qsk sketch")
+    .opt("k", "NUM", None, "number of clusters")
+    .opt("replicates", "NUM", Some("1"), "decoder replicates (best objective wins)")
+    .opt("threads", "NUM", Some("1"), "decoder threads (0 = all cores)")
+    .opt("seed", "NUM", None, "decoder RNG seed (default: the sketch's seed)")
+    .opt("lo", "FLOAT", Some("-1"), "centroid search box lower bound (every coordinate)")
+    .opt("hi", "FLOAT", Some("1"), "centroid search box upper bound (every coordinate)")
+    .opt("data", "FILE", None, "optional dataset: use its bounding box and report SSE")
+    .opt("out", "FILE", None, "write centroids CSV here");
+    let parsed = spec.parse(args)?;
+    let sketch_path = parsed.get("sketch").context("--sketch is required")?;
+    let k = parsed.get_usize("k")?.context("--k is required")?;
+
+    let (meta, pool) = stream::load_sketch(Path::new(sketch_path))?;
+    if pool.count() == 0 {
+        bail!("{sketch_path}: sketch pools zero samples");
+    }
+    let op = meta.rebuild_operator()?;
+    eprintln!(
+        "sketch: {} samples, {} slots [{}]",
+        pool.count(),
+        pool.len(),
+        meta.describe()
+    );
+
+    let x = match parsed.get("data") {
+        Some(p) => {
+            let mut reader = stream::open_dataset(Path::new(p))?;
+            let x = stream::read_all(reader.as_mut())?;
+            if x.cols() != op.dim() {
+                bail!(
+                    "{p}: dataset dimension {} does not match the sketch's dimension {}",
+                    x.cols(),
+                    op.dim()
+                );
+            }
+            Some(x)
+        }
+        None => None,
+    };
+    let (lo, hi) = match &x {
+        Some(x) => bounding_box(x),
+        None => {
+            let lo = parsed.get_f64("lo")?.unwrap();
+            let hi = parsed.get_f64("hi")?.unwrap();
+            if lo > hi {
+                bail!("--lo {lo} must not exceed --hi {hi}");
+            }
+            (vec![lo; op.dim()], vec![hi; op.dim()])
+        }
+    };
+
+    let params = ClOmprParams {
+        threads: parsed.get_usize("threads")?.unwrap(),
+        ..ClOmprParams::default()
+    };
+    let replicates = parsed.get_usize("replicates")?.unwrap().max(1);
+    let seed = parsed.get_u64("seed")?.unwrap_or(meta.seed);
+    let z = pool.mean();
+    let mut rng = Rng::new(seed);
+    let sol = decode_best_of(&op, k, &z, lo, hi, &params, replicates, &mut rng);
+
+    println!("objective = {:.6}", sol.objective);
+    if let Some(x) = &x {
+        let s = qckm::metrics::sse(x, &sol.centroids);
+        println!("SSE/N = {:.6}", s / x.rows() as f64);
+    }
+    for c in 0..sol.centroids.rows() {
+        let row: Vec<String> = sol.centroids.row(c).iter().map(|v| format!("{v:.5}")).collect();
+        println!("c[{c}] (alpha={:.3}): {}", sol.weights[c], row.join(", "));
+    }
+    if let Some(out) = parsed.get("out") {
+        save_csv(Path::new(out), &sol.centroids)?;
+        eprintln!("centroids written to {out}");
     }
     Ok(())
 }
@@ -212,6 +432,7 @@ fn cmd_experiment(args: Vec<String>) -> Result<()> {
     let spec = CliSpec::new("qckm experiment", "regenerate a paper figure")
         .positionals("<fig2a|fig2b|fig3|prop1|ablation>")
         .flag("full", "paper-scale grid (slow) instead of the quick grid")
+        .flag("streamed", "fig2 only: sketch trials through the streaming fold")
         .opt("trials", "NUM", None, "override trials per cell")
         .opt("samples", "NUM", None, "override dataset size")
         .opt("seed", "NUM", None, "override seed")
@@ -246,6 +467,7 @@ fn cmd_experiment(args: Vec<String>) -> Result<()> {
             if let Some(t) = parsed.get_usize("threads")? {
                 cfg.threads = t;
             }
+            cfg.streamed = parsed.flag("streamed");
             let res = exp::run_fig2(&cfg);
             println!("{}", res.render());
         }

@@ -19,6 +19,18 @@ impl PooledSketch {
         }
     }
 
+    /// Rebuild a pool from a previously exported (sum, count) pair — the
+    /// deserialization side of the `.qsk` persistence format.
+    pub fn from_raw(sum: Vec<f64>, count: u64) -> Self {
+        Self { sum, count }
+    }
+
+    /// The raw running sum (serialize this, not the mean, so merges of
+    /// persisted shards stay exact).
+    pub fn sum(&self) -> &[f64] {
+        &self.sum
+    }
+
     pub fn len(&self) -> usize {
         self.sum.len()
     }

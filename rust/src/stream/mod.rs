@@ -1,0 +1,159 @@
+//! Out-of-core streaming sketch subsystem.
+//!
+//! The paper's premise is that the pooled sketch — not the dataset — is the
+//! unit of storage, transport, and learning: it is linear, mergeable in any
+//! order, and updatable online. This module makes the repo live up to that:
+//!
+//! * **Bounded-memory ingestion** ([`ChunkedReader`]): datasets stream in
+//!   fixed row blocks from CSV ([`CsvChunkedReader`]), the raw-f64 format
+//!   ([`RawF64ChunkedReader`]) or memory ([`MatChunkedReader`]) — the full
+//!   `N × n` matrix is never materialized.
+//! * **Streaming encode** ([`sketch_reader`], [`sketch_file`]): feeds those
+//!   blocks through the existing parallel encode in
+//!   [`PAR_CHUNK_ROWS`]-row chunks, *bit-for-bit identical* to
+//!   [`SketchOperator::sketch_dataset_par`] on the in-memory copy at every
+//!   thread count (see the determinism argument below).
+//! * **Sketch persistence** ([`save_sketch`], [`load_sketch`]): the
+//!   versioned `.qsk` format with a config fingerprint, so shard sketches
+//!   from different machines merge only when their operators match, and the
+//!   decoder can rebuild the exact operator from the header alone.
+//!
+//! Together with the `qckm sketch` / `qckm merge` / `qckm decode`
+//! subcommands this turns the binary into the distributed acquisition
+//! pipeline of the paper's Fig. 1: sketch each shard where the data lives,
+//! ship the (tiny) `.qsk` files, merge associatively, decode once.
+//!
+//! ## Determinism of the streamed fold
+//!
+//! [`sketch_reader`] reads a *window* of `threads × PAR_CHUNK_ROWS` rows,
+//! fans the window out in [`PAR_CHUNK_ROWS`]-row chunks through
+//! [`crate::parallel::run_chunked`], merges the per-chunk partial pools in
+//! chunk order, and repeats. Because every window except the last is an
+//! exact multiple of [`PAR_CHUNK_ROWS`], the global chunk boundaries are
+//! the same fixed multiples of `PAR_CHUNK_ROWS` that
+//! [`SketchOperator::sketch_into_par`] uses, each chunk's fold is the
+//! identical serial code, and the merge order is the global chunk order —
+//! so the streamed pool is bit-for-bit the in-memory pool, at every thread
+//! count and whatever the window size. (The window does scale with the
+//! thread budget, but per the contract in [`crate::parallel`] only chunk
+//! *boundaries* may influence results, and those stay fixed.)
+
+mod qsk;
+mod reader;
+
+pub use qsk::{
+    draw_operator, load_sketch, operator_fingerprint, save_sketch, SketchMeta, QSK_MAGIC,
+    QSK_VERSION,
+};
+pub use reader::{
+    open_dataset, read_all, ChunkedReader, CsvChunkedReader, MatChunkedReader, RawF64ChunkedReader,
+};
+
+use crate::coordinator::WireFormat;
+use crate::linalg::Mat;
+use crate::parallel::{self, Parallelism};
+use crate::sketch::{BitAggregator, PooledSketch, SketchOperator, PAR_CHUNK_ROWS};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Accumulate the pooled (sum, count) of every row a reader yields into
+/// `pool`, using up to `par` threads and O(`threads × PAR_CHUNK_ROWS × n`)
+/// memory. Returns the number of rows pooled.
+///
+/// With `WireFormat::DenseF64` the per-chunk fold is exactly
+/// [`SketchOperator::sketch_range_into`], so the result is bit-for-bit
+/// [`SketchOperator::sketch_into_par`] on the in-memory dataset. With
+/// `WireFormat::PackedBits` (±1 signatures only) each chunk pools through a
+/// [`BitAggregator`] — integer one-counts, the sensor acquisition path —
+/// whose (sum, count) is exactly the dense fold's because ±1 sums are
+/// integers, so the two encodings agree to the last bit too.
+pub fn sketch_reader(
+    op: &SketchOperator,
+    reader: &mut dyn ChunkedReader,
+    wire: WireFormat,
+    pool: &mut PooledSketch,
+    par: &Parallelism,
+) -> Result<u64> {
+    if reader.dim() != op.dim() {
+        bail!(
+            "dataset dimension {} does not match operator dimension {}",
+            reader.dim(),
+            op.dim()
+        );
+    }
+    assert_eq!(pool.len(), op.sketch_len());
+    if wire == WireFormat::PackedBits && op.signature().name() != "universal-1bit" {
+        bail!(
+            "packed-bit streaming requires the ±1 universal quantizer signature, got '{}'",
+            op.signature().name()
+        );
+    }
+
+    let dim = op.dim();
+    let window_rows = PAR_CHUNK_ROWS * par.resolved_threads().max(1);
+    let mut buf: Vec<f64> = Vec::new();
+    let mut total = 0u64;
+    loop {
+        // Fill a whole window (streams deliver short blocks only at EOF, so
+        // every window but the last is a multiple of PAR_CHUNK_ROWS — the
+        // global chunk grid stays aligned).
+        buf.clear();
+        let mut rows = 0usize;
+        while rows < window_rows {
+            let got = reader.next_block(window_rows - rows, &mut buf)?;
+            if got == 0 {
+                break;
+            }
+            rows += got;
+        }
+        if rows == 0 {
+            break;
+        }
+        let window = Mat::from_vec(rows, dim, buf);
+        let partials = parallel::run_chunked(rows, PAR_CHUNK_ROWS, par, |_, range| match wire {
+            WireFormat::DenseF64 => {
+                let mut partial = PooledSketch::new(op.sketch_len());
+                op.sketch_range_into(&window, range, &mut partial);
+                partial
+            }
+            WireFormat::PackedBits => {
+                let mut agg = BitAggregator::new(op.sketch_len());
+                for r in range {
+                    agg.add(&op.encode_point_bits(window.row(r)));
+                }
+                let (sum, count) = agg.to_sum();
+                PooledSketch::from_raw(sum, count)
+            }
+        });
+        // Ordered merge — the global fixed reduction order.
+        for partial in &partials {
+            pool.merge(partial);
+        }
+        total += rows as u64;
+        buf = window.into_vec();
+        if rows < window_rows {
+            break; // EOF
+        }
+    }
+    Ok(total)
+}
+
+/// Stream-sketch a dataset file (CSV or raw f64, dispatched by extension)
+/// into a fresh pool. Errors on an empty dataset.
+pub fn sketch_file(
+    op: &SketchOperator,
+    path: &Path,
+    wire: WireFormat,
+    par: &Parallelism,
+) -> Result<PooledSketch> {
+    let mut reader = open_dataset(path)?;
+    let mut pool = PooledSketch::new(op.sketch_len());
+    let rows = sketch_reader(op, reader.as_mut(), wire, &mut pool, par)?;
+    if rows == 0 {
+        bail!("{}: empty dataset", path.display());
+    }
+    Ok(pool)
+}
+
+#[cfg(test)]
+mod tests;

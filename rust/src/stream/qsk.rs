@@ -1,0 +1,318 @@
+//! `.qsk` — the persistent pooled-sketch format.
+//!
+//! The sketch, not the dataset, is this system's unit of storage and
+//! transport: it is linear, mergeable in any order, and tiny (`2M` f64
+//! plus a header) regardless of `N`. A `.qsk` file captures one pooled
+//! *(sum, count)* pair together with everything needed to (a) refuse
+//! merging with a sketch of a different operator and (b) rebuild the exact
+//! operator for decoding — so acquisition, merging and decoding can run as
+//! separate processes on separate machines (`qckm sketch` / `qckm merge` /
+//! `qckm decode`).
+//!
+//! ## Layout (all little-endian)
+//!
+//! ```text
+//! magic       4  b"QSKF"
+//! version     u32   (currently 1)
+//! method      u32 length + UTF-8   (ckm|qckm|triangle, see config::Method)
+//! law         u32 length + UTF-8   (frequency law name)
+//! sigma       f64   (kernel bandwidth the frequencies were scaled with)
+//! seed        u64   (frequency-draw seed)
+//! m           u64   (number of frequencies; the sketch has 2M slots)
+//! d           u64   (data dimension)
+//! count       u64   (examples pooled into the sum)
+//! config_hash u64   (fingerprint of the drawn Ω/ξ + signature, see
+//!                    [`operator_fingerprint`])
+//! payload     2M × f64   (the *sum* of contributions — not the mean, so
+//!                         merges stay exact)
+//! ```
+//!
+//! The `config_hash` covers the actual frequency matrix bits, so two
+//! sketches merge only if they were drawn from the *same* randomness —
+//! matching `(seed, m, d, sigma, law, method)` alone would miss a changed
+//! RNG or draw algorithm between builds.
+
+use crate::config::Method;
+use crate::frequency::{DrawnFrequencies, FrequencyLaw};
+use crate::rng::Rng;
+use crate::sketch::{PooledSketch, SketchOperator};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// File magic: "QSK file".
+pub const QSK_MAGIC: [u8; 4] = *b"QSKF";
+/// Current format version.
+pub const QSK_VERSION: u32 = 1;
+
+/// Everything a `.qsk` header records about how its sketch was produced.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SketchMeta {
+    /// Compressive method name ([`Method::name`]).
+    pub method: String,
+    /// Frequency-law name ([`FrequencyLaw::name`]).
+    pub law: String,
+    /// Kernel bandwidth the frequencies were scaled with.
+    pub sigma: f64,
+    /// Seed of the frequency/dither draw.
+    pub seed: u64,
+    /// Number of frequencies `M`.
+    pub m: u64,
+    /// Data dimension `n`.
+    pub d: u64,
+    /// Fingerprint of the drawn operator (see [`operator_fingerprint`]).
+    pub config_hash: u64,
+}
+
+impl SketchMeta {
+    /// Describe an operator produced by [`draw_operator`].
+    pub fn for_operator(op: &SketchOperator, method: Method, seed: u64) -> Self {
+        let freqs = op.frequencies();
+        Self {
+            method: method.name().to_string(),
+            law: freqs.law.name().to_string(),
+            sigma: freqs.sigma,
+            seed,
+            m: op.num_frequencies() as u64,
+            d: op.dim() as u64,
+            config_hash: operator_fingerprint(op),
+        }
+    }
+
+    /// Check that a sketch described by `other` pools the same quantity as
+    /// one described by `self` (merging them is meaningful).
+    pub fn ensure_mergeable(&self, other: &SketchMeta) -> Result<()> {
+        if self.config_hash != other.config_hash
+            || self.method != other.method
+            || self.law != other.law
+            || self.sigma.to_bits() != other.sigma.to_bits()
+            || self.seed != other.seed
+            || self.m != other.m
+            || self.d != other.d
+        {
+            bail!(
+                "sketch operators differ: ({}) vs ({}) — refusing to merge sketches \
+                 taken with mismatched frequency draws",
+                self.describe(),
+                other.describe()
+            );
+        }
+        Ok(())
+    }
+
+    /// One-line human description (for logs and error messages).
+    pub fn describe(&self) -> String {
+        format!(
+            "method={} law={} m={} d={} sigma={:.6} seed={} hash={:016x}",
+            self.method, self.law, self.m, self.d, self.sigma, self.seed, self.config_hash
+        )
+    }
+
+    /// Re-draw the exact operator this sketch was taken with, verifying the
+    /// fingerprint so a changed RNG/draw implementation fails loudly
+    /// instead of decoding garbage.
+    pub fn rebuild_operator(&self) -> Result<SketchOperator> {
+        let method = Method::parse(&self.method)?;
+        let law = FrequencyLaw::parse(&self.law)?;
+        if self.m == 0 || self.d == 0 {
+            bail!("corrupt sketch meta: m={} d={}", self.m, self.d);
+        }
+        let op = draw_operator(
+            method,
+            law,
+            self.m as usize,
+            self.d as usize,
+            self.sigma,
+            self.seed,
+        );
+        let fp = operator_fingerprint(&op);
+        if fp != self.config_hash {
+            bail!(
+                "operator fingerprint mismatch (file {:016x}, redrawn {:016x}): the sketch \
+                 was taken with an incompatible frequency draw",
+                self.config_hash,
+                fp
+            );
+        }
+        Ok(op)
+    }
+}
+
+/// Draw the sketch operator as a pure function of
+/// `(method, law, m, d, sigma, seed)` — the `.qsk` reproducibility
+/// contract. Every stage (shard sketchers, the decoder) calls this with
+/// the same arguments and gets the bit-identical Ω and ξ.
+pub fn draw_operator(
+    method: Method,
+    law: FrequencyLaw,
+    m: usize,
+    d: usize,
+    sigma: f64,
+    seed: u64,
+) -> SketchOperator {
+    let mut rng = Rng::new(seed);
+    let freqs = if method.dithered() {
+        DrawnFrequencies::draw(law, d, m, sigma, &mut rng)
+    } else {
+        DrawnFrequencies::draw_undithered(law, d, m, sigma, &mut rng)
+    };
+    SketchOperator::new(freqs, method.signature())
+}
+
+/// FNV-1a fingerprint of a drawn operator: dimensions, signature name, and
+/// the exact f64 bits of Ω and ξ. Two operators fingerprint equal iff they
+/// sketch every dataset identically.
+pub fn operator_fingerprint(op: &SketchOperator) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_u64(op.dim() as u64);
+    h.write_u64(op.num_frequencies() as u64);
+    h.write_bytes(op.signature().name().as_bytes());
+    let freqs = op.frequencies();
+    for &v in freqs.omega.as_slice() {
+        h.write_u64(v.to_bits());
+    }
+    for &v in &freqs.xi {
+        h.write_u64(v.to_bits());
+    }
+    h.finish()
+}
+
+/// Minimal FNV-1a (64-bit) — stable, dependency-free, endian-independent.
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+// ------------------------------------------------------------------ save
+
+/// Write a pooled sketch (its *sum*, not its mean) plus metadata to `path`.
+pub fn save_sketch(path: &Path, meta: &SketchMeta, pool: &PooledSketch) -> Result<()> {
+    assert_eq!(
+        pool.len() as u64,
+        2 * meta.m,
+        "pool length {} does not match meta m={}",
+        pool.len(),
+        meta.m
+    );
+    let file =
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(&QSK_MAGIC)?;
+    w.write_all(&QSK_VERSION.to_le_bytes())?;
+    write_str(&mut w, &meta.method)?;
+    write_str(&mut w, &meta.law)?;
+    w.write_all(&meta.sigma.to_le_bytes())?;
+    w.write_all(&meta.seed.to_le_bytes())?;
+    w.write_all(&meta.m.to_le_bytes())?;
+    w.write_all(&meta.d.to_le_bytes())?;
+    w.write_all(&pool.count().to_le_bytes())?;
+    w.write_all(&meta.config_hash.to_le_bytes())?;
+    for &v in pool.sum() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a `.qsk` file, validating magic, version, and internal consistency.
+pub fn load_sketch(path: &Path) -> Result<(SketchMeta, PooledSketch)> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)
+        .with_context(|| format!("{}: truncated header", path.display()))?;
+    if magic != QSK_MAGIC {
+        bail!("{}: not a .qsk sketch file (bad magic)", path.display());
+    }
+    let version = read_u32(&mut r, path)?;
+    if version != QSK_VERSION {
+        bail!(
+            "{}: unsupported .qsk format version {version} (this build reads {QSK_VERSION})",
+            path.display()
+        );
+    }
+    let method = read_str(&mut r, path)?;
+    let law = read_str(&mut r, path)?;
+    let sigma = f64::from_le_bytes(read_8(&mut r, path)?);
+    let seed = u64::from_le_bytes(read_8(&mut r, path)?);
+    let m = u64::from_le_bytes(read_8(&mut r, path)?);
+    let d = u64::from_le_bytes(read_8(&mut r, path)?);
+    let count = u64::from_le_bytes(read_8(&mut r, path)?);
+    let config_hash = u64::from_le_bytes(read_8(&mut r, path)?);
+    // Plausibility bounds before the payload allocation: a corrupt header
+    // must fail cleanly, not OOM. 2^24 frequencies = a 256 MiB payload,
+    // far beyond any real sketch (M ≲ 10⁴ in the paper's regime).
+    if m == 0 || m > (1 << 24) {
+        bail!("{}: implausible frequency count m={m}", path.display());
+    }
+    if d == 0 || d > (1 << 24) {
+        bail!("{}: implausible data dimension d={d}", path.display());
+    }
+    let mut sum = vec![0.0f64; 2 * m as usize];
+    for v in sum.iter_mut() {
+        *v = f64::from_le_bytes(read_8(&mut r, path)?);
+    }
+    let mut trailing = [0u8; 1];
+    if r.read(&mut trailing)? != 0 {
+        bail!("{}: trailing bytes after sketch payload", path.display());
+    }
+    let meta = SketchMeta {
+        method,
+        law,
+        sigma,
+        seed,
+        m,
+        d,
+        config_hash,
+    };
+    Ok((meta, PooledSketch::from_raw(sum, count)))
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_8(r: &mut impl Read, path: &Path) -> Result<[u8; 8]> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)
+        .with_context(|| format!("{}: truncated sketch file", path.display()))?;
+    Ok(buf)
+}
+
+fn read_u32(r: &mut impl Read, path: &Path) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)
+        .with_context(|| format!("{}: truncated sketch file", path.display()))?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+fn read_str(r: &mut impl Read, path: &Path) -> Result<String> {
+    let len = read_u32(r, path)? as usize;
+    if len > 64 {
+        bail!("{}: implausible string field ({len} bytes)", path.display());
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)
+        .with_context(|| format!("{}: truncated sketch file", path.display()))?;
+    String::from_utf8(buf).with_context(|| format!("{}: non-UTF-8 string field", path.display()))
+}

@@ -1,0 +1,273 @@
+//! Bounded-memory dataset readers — the ingestion side of the streaming
+//! sketch subsystem.
+//!
+//! A [`ChunkedReader`] yields a dataset as fixed-size row blocks instead of
+//! one materialized `Mat`, so the sketch of an out-of-core dataset can be
+//! pooled with memory proportional to the block window, never to `N`. The
+//! parsing/validation semantics of each implementation are *identical* to
+//! the corresponding eager loader in [`crate::data`] (same skipped lines,
+//! same error messages modulo buffering, same `f64` values), which is what
+//! makes the streamed sketch bit-for-bit equal to the in-memory one (see
+//! [`super::sketch_reader`]).
+
+use crate::linalg::Mat;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+/// A row source that yields a dataset in bounded-size blocks.
+///
+/// The row stream is *positional*: every call appends the next rows in
+/// dataset order, so concatenating all blocks reproduces the dataset
+/// exactly. Implementations validate as they go and fail fast with the
+/// offending location, like the eager loaders in [`crate::data`].
+pub trait ChunkedReader {
+    /// Number of columns (the sample dimension `n`), known up front.
+    fn dim(&self) -> usize;
+
+    /// Append up to `max_rows` further rows (row-major, `rows * dim`
+    /// values) to `out` and return how many rows were appended. `Ok(0)`
+    /// means end of stream; callers may keep calling and will keep
+    /// getting `Ok(0)`.
+    fn next_block(&mut self, max_rows: usize, out: &mut Vec<f64>) -> Result<usize>;
+}
+
+/// Drain a reader into an in-memory `Mat` (the eager fallback, e.g. when a
+/// data-dependent bandwidth heuristic genuinely needs the whole dataset).
+pub fn read_all(reader: &mut dyn ChunkedReader) -> Result<Mat> {
+    let dim = reader.dim();
+    let mut data = Vec::new();
+    loop {
+        let got = reader.next_block(usize::MAX, &mut data)?;
+        if got == 0 {
+            break;
+        }
+    }
+    if data.is_empty() {
+        bail!("empty dataset");
+    }
+    Ok(Mat::from_vec(data.len() / dim, dim, data))
+}
+
+/// Open `path` as a chunked reader, dispatching on the extension:
+/// `.csv` → [`CsvChunkedReader`], anything else → [`RawF64ChunkedReader`]
+/// (the `u64 rows, u64 cols, f64…` format of [`crate::data::save_f64_bin`]).
+pub fn open_dataset(path: &Path) -> Result<Box<dyn ChunkedReader>> {
+    let is_csv = path
+        .extension()
+        .and_then(|e| e.to_str())
+        .is_some_and(|e| e.eq_ignore_ascii_case("csv"));
+    if is_csv {
+        Ok(Box::new(CsvChunkedReader::open(path)?))
+    } else {
+        Ok(Box::new(RawF64ChunkedReader::open(path)?))
+    }
+}
+
+// ------------------------------------------------------------------- CSV
+
+/// Streaming headerless-CSV reader with [`crate::data::load_csv`] semantics:
+/// blank lines and `#` comments are skipped, every row must have the same
+/// column count as the first, and bad numbers fail with file:line context.
+pub struct CsvChunkedReader {
+    path: String,
+    reader: BufReader<std::fs::File>,
+    cols: usize,
+    /// First data row, parsed during `open` to learn `cols`; emitted by the
+    /// first `next_block` call.
+    pending: Option<Vec<f64>>,
+    /// 1-based line number of the last line read.
+    lineno: usize,
+    line: String,
+}
+
+impl CsvChunkedReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let file =
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut new = Self {
+            path: path.display().to_string(),
+            reader: BufReader::new(file),
+            cols: 0,
+            pending: None,
+            lineno: 0,
+            line: String::new(),
+        };
+        // Scan to the first data row to learn the column count.
+        match new.read_row()? {
+            Some(row) => {
+                new.cols = row.len();
+                new.pending = Some(row);
+            }
+            None => bail!("{}: empty dataset", new.path),
+        }
+        Ok(new)
+    }
+
+    /// Parse the next data row, or `None` at end of file. Row semantics
+    /// come from the shared [`crate::data`] line parser, so the streamed
+    /// and eager loaders cannot diverge.
+    fn read_row(&mut self) -> Result<Option<Vec<f64>>> {
+        loop {
+            self.line.clear();
+            let n = self
+                .reader
+                .read_line(&mut self.line)
+                .with_context(|| format!("read {}", self.path))?;
+            if n == 0 {
+                return Ok(None);
+            }
+            self.lineno += 1;
+            match crate::data::parse_csv_line(&self.line, self.cols, &self.path, self.lineno)? {
+                Some(vals) => return Ok(Some(vals)),
+                None => continue,
+            }
+        }
+    }
+}
+
+impl ChunkedReader for CsvChunkedReader {
+    fn dim(&self) -> usize {
+        self.cols
+    }
+
+    fn next_block(&mut self, max_rows: usize, out: &mut Vec<f64>) -> Result<usize> {
+        if max_rows == 0 {
+            return Ok(0);
+        }
+        let mut rows = 0;
+        if let Some(row) = self.pending.take() {
+            out.extend_from_slice(&row);
+            rows += 1;
+        }
+        while rows < max_rows {
+            match self.read_row()? {
+                Some(row) => {
+                    out.extend_from_slice(&row);
+                    rows += 1;
+                }
+                None => break,
+            }
+        }
+        Ok(rows)
+    }
+}
+
+// --------------------------------------------------------------- raw f64
+
+/// Streaming reader for the raw little-endian format of
+/// [`crate::data::save_f64_bin`] (`u64 rows, u64 cols, rows*cols f64`).
+/// Unlike the eager loader there is no total-size ceiling — streaming
+/// datasets larger than memory is the point — but a truncated payload
+/// still fails with the row position.
+pub struct RawF64ChunkedReader {
+    path: String,
+    reader: BufReader<std::fs::File>,
+    cols: usize,
+    rows_total: u64,
+    rows_read: u64,
+}
+
+impl RawF64ChunkedReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let file =
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut reader = BufReader::new(file);
+        let mut u64buf = [0u8; 8];
+        reader
+            .read_exact(&mut u64buf)
+            .with_context(|| format!("{}: truncated header", path.display()))?;
+        let rows_total = u64::from_le_bytes(u64buf);
+        reader
+            .read_exact(&mut u64buf)
+            .with_context(|| format!("{}: truncated header", path.display()))?;
+        let cols = u64::from_le_bytes(u64buf);
+        // Same plausibility ceiling as the .qsk loader's `d`: a corrupt
+        // header must fail cleanly before any column-sized allocation.
+        if cols == 0 || cols > (1 << 24) {
+            bail!("{}: implausible column count {cols}", path.display());
+        }
+        Ok(Self {
+            path: path.display().to_string(),
+            reader,
+            cols: cols as usize,
+            rows_total,
+            rows_read: 0,
+        })
+    }
+
+    /// Total rows the header promises (a streaming-only convenience).
+    pub fn rows_total(&self) -> u64 {
+        self.rows_total
+    }
+}
+
+impl ChunkedReader for RawF64ChunkedReader {
+    fn dim(&self) -> usize {
+        self.cols
+    }
+
+    fn next_block(&mut self, max_rows: usize, out: &mut Vec<f64>) -> Result<usize> {
+        // Cap one bulk read at ~8 MiB so a corrupt header promising 2^60
+        // rows cannot trigger a giant allocation; callers loop, and a short
+        // (non-zero) return just means "call again".
+        let cap = ((8 << 20) / (self.cols * 8)).max(1);
+        let left = (self.rows_total - self.rows_read)
+            .min(max_rows as u64)
+            .min(cap as u64) as usize;
+        if left == 0 {
+            return Ok(0);
+        }
+        // One bulk read per block (this is the out-of-core hot path), then
+        // decode in place.
+        let mut bytes = vec![0u8; left * self.cols * 8];
+        self.reader.read_exact(&mut bytes).with_context(|| {
+            format!(
+                "{}: truncated in rows {}..{} of {}",
+                self.path,
+                self.rows_read,
+                self.rows_read + left as u64,
+                self.rows_total
+            )
+        })?;
+        out.extend(
+            bytes
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap())),
+        );
+        self.rows_read += left as u64;
+        Ok(left)
+    }
+}
+
+// -------------------------------------------------------------- in-memory
+
+/// A `ChunkedReader` over an in-memory matrix — the test/bench adapter that
+/// lets the streamed path be compared against its in-memory baseline, and
+/// the experiment harnesses exercise the streaming fold without touching
+/// disk.
+pub struct MatChunkedReader<'a> {
+    x: &'a Mat,
+    next_row: usize,
+}
+
+impl<'a> MatChunkedReader<'a> {
+    pub fn new(x: &'a Mat) -> Self {
+        Self { x, next_row: 0 }
+    }
+}
+
+impl ChunkedReader for MatChunkedReader<'_> {
+    fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn next_block(&mut self, max_rows: usize, out: &mut Vec<f64>) -> Result<usize> {
+        let rows = max_rows.min(self.x.rows() - self.next_row);
+        let cols = self.x.cols();
+        let start = self.next_row * cols;
+        out.extend_from_slice(&self.x.as_slice()[start..start + rows * cols]);
+        self.next_row += rows;
+        Ok(rows)
+    }
+}

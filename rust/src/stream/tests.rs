@@ -1,0 +1,314 @@
+//! Unit tests for the streaming sketch subsystem: reader parity with the
+//! eager loaders, bit-for-bit streamed == in-memory sketches across thread
+//! counts and encodings, `.qsk` round-trips, and corruption/mismatch
+//! rejection.
+
+use super::*;
+use crate::config::Method;
+use crate::coordinator::WireFormat;
+use crate::data::{save_csv, save_f64_bin};
+use crate::frequency::FrequencyLaw;
+use crate::linalg::Mat;
+use crate::parallel::Parallelism;
+use crate::rng::Rng;
+use crate::sketch::{PooledSketch, PAR_CHUNK_ROWS};
+use std::path::PathBuf;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qckm_stream_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.gaussian())
+}
+
+// ------------------------------------------------------------------ readers
+
+#[test]
+fn csv_reader_streams_same_values_as_eager_loader() {
+    let dir = temp_dir("csv_parity");
+    let path = dir.join("data.csv");
+    let x = random_mat(257, 3, 1);
+    save_csv(&path, &x).unwrap();
+
+    let mut reader = CsvChunkedReader::open(&path).unwrap();
+    assert_eq!(reader.dim(), 3);
+    // Odd block size so block boundaries never align with row batches.
+    let mut streamed = Vec::new();
+    loop {
+        if reader.next_block(13, &mut streamed).unwrap() == 0 {
+            break;
+        }
+    }
+    let eager = crate::data::load_csv(&path).unwrap();
+    assert_eq!(streamed, eager.as_slice());
+    assert_eq!(eager.as_slice(), x.as_slice(), "CSV round-trip is exact");
+}
+
+#[test]
+fn csv_reader_skips_comments_and_rejects_ragged_rows() {
+    let dir = temp_dir("csv_errors");
+    let ok = dir.join("commented.csv");
+    std::fs::write(&ok, "# header\n1,2\n\n3,4\n").unwrap();
+    let mut reader = CsvChunkedReader::open(&ok).unwrap();
+    let mut out = Vec::new();
+    assert_eq!(reader.next_block(100, &mut out).unwrap(), 2);
+    assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+
+    let ragged = dir.join("ragged.csv");
+    std::fs::write(&ragged, "1,2\n3\n").unwrap();
+    let mut reader = CsvChunkedReader::open(&ragged).unwrap();
+    let mut out = Vec::new();
+    assert!(reader.next_block(100, &mut out).is_err());
+
+    let empty = dir.join("empty.csv");
+    std::fs::write(&empty, "# nothing\n\n").unwrap();
+    assert!(CsvChunkedReader::open(&empty).is_err());
+}
+
+#[test]
+fn raw_reader_streams_same_values_and_rejects_truncation() {
+    let dir = temp_dir("raw_parity");
+    let path = dir.join("data.bin");
+    let x = random_mat(101, 4, 2);
+    save_f64_bin(&path, &x).unwrap();
+
+    let mut reader = RawF64ChunkedReader::open(&path).unwrap();
+    assert_eq!(reader.dim(), 4);
+    assert_eq!(reader.rows_total(), 101);
+    let mut streamed = Vec::new();
+    loop {
+        if reader.next_block(7, &mut streamed).unwrap() == 0 {
+            break;
+        }
+    }
+    assert_eq!(streamed, x.as_slice());
+
+    // Truncate mid-payload: reading must fail with an error, not garbage.
+    let bytes = std::fs::read(&path).unwrap();
+    let trunc = dir.join("trunc.bin");
+    std::fs::write(&trunc, &bytes[..bytes.len() - 5]).unwrap();
+    let mut reader = RawF64ChunkedReader::open(&trunc).unwrap();
+    let mut out = Vec::new();
+    assert!(reader.next_block(usize::MAX, &mut out).is_err());
+}
+
+#[test]
+fn mat_reader_and_read_all_round_trip() {
+    let x = random_mat(97, 5, 3);
+    let mut reader = MatChunkedReader::new(&x);
+    let back = read_all(&mut reader).unwrap();
+    assert_eq!(back.shape(), x.shape());
+    assert_eq!(back.as_slice(), x.as_slice());
+}
+
+// ---------------------------------------------------- streamed == in-memory
+
+fn quantized_op(n: usize, m: usize, seed: u64) -> crate::sketch::SketchOperator {
+    draw_operator(Method::Qckm, FrequencyLaw::AdaptedRadius, m, n, 1.0, seed)
+}
+
+fn cosine_op(n: usize, m: usize, seed: u64) -> crate::sketch::SketchOperator {
+    draw_operator(Method::Ckm, FrequencyLaw::AdaptedRadius, m, n, 1.0, seed)
+}
+
+/// The acceptance bar: streamed sketching of a multi-chunk dataset is
+/// bit-for-bit `sketch_dataset_par` on the in-memory copy, across thread
+/// counts {1, 2, 7}, for both the dense-f64 and packed-bit encodings.
+#[test]
+fn streamed_sketch_is_bitwise_equal_to_in_memory() {
+    let n = 5;
+    let rows = 2 * PAR_CHUNK_ROWS + 333; // several chunks + a ragged tail
+    let x = random_mat(rows, n, 4);
+    let cases: [(crate::sketch::SketchOperator, WireFormat); 3] = [
+        (quantized_op(n, 33, 5), WireFormat::DenseF64),
+        (quantized_op(n, 33, 5), WireFormat::PackedBits),
+        (cosine_op(n, 33, 5), WireFormat::DenseF64),
+    ];
+    for (op, wire) in &cases {
+        for threads in [1usize, 2, 7] {
+            let par = Parallelism::fixed(threads);
+            let want = op.sketch_dataset_par(&x, &par);
+            let mut pool = PooledSketch::new(op.sketch_len());
+            let pooled =
+                sketch_reader(op, &mut MatChunkedReader::new(&x), *wire, &mut pool, &par).unwrap();
+            assert_eq!(pooled, rows as u64);
+            assert_eq!(pool.count(), rows as u64);
+            assert_eq!(
+                pool.mean(),
+                want,
+                "streamed ({wire:?}, {threads} threads) deviated from in-memory"
+            );
+        }
+    }
+}
+
+#[test]
+fn streamed_sketch_from_csv_file_matches_in_memory() {
+    let dir = temp_dir("file_sketch");
+    let path = dir.join("data.csv");
+    let x = random_mat(700, 4, 6);
+    save_csv(&path, &x).unwrap();
+    let op = quantized_op(4, 24, 7);
+    let pool = sketch_file(&op, &path, WireFormat::DenseF64, &Parallelism::serial()).unwrap();
+    assert_eq!(pool.mean(), op.sketch_dataset_par(&x, &Parallelism::serial()));
+}
+
+#[test]
+fn packed_bit_streaming_rejects_non_binary_signatures() {
+    let op = cosine_op(3, 8, 8);
+    let x = random_mat(10, 3, 9);
+    let mut pool = PooledSketch::new(op.sketch_len());
+    let err = sketch_reader(
+        &op,
+        &mut MatChunkedReader::new(&x),
+        WireFormat::PackedBits,
+        &mut pool,
+        &Parallelism::serial(),
+    );
+    assert!(err.is_err());
+}
+
+#[test]
+fn sketch_reader_rejects_dimension_mismatch() {
+    let op = quantized_op(4, 8, 10);
+    let x = random_mat(10, 3, 11);
+    let mut pool = PooledSketch::new(op.sketch_len());
+    assert!(sketch_reader(
+        &op,
+        &mut MatChunkedReader::new(&x),
+        WireFormat::DenseF64,
+        &mut pool,
+        &Parallelism::serial(),
+    )
+    .is_err());
+}
+
+// --------------------------------------------------------------------- qsk
+
+fn sample_sketch(seed: u64) -> (SketchMeta, PooledSketch, crate::sketch::SketchOperator) {
+    let op = quantized_op(4, 16, seed);
+    let x = random_mat(500, 4, seed ^ 0xABCD);
+    let mut pool = PooledSketch::new(op.sketch_len());
+    op.sketch_into(&x, &mut pool);
+    let meta = SketchMeta::for_operator(&op, Method::Qckm, seed);
+    (meta, pool, op)
+}
+
+#[test]
+fn qsk_round_trip_preserves_meta_and_pool_exactly() {
+    let dir = temp_dir("qsk_roundtrip");
+    let path = dir.join("sketch.qsk");
+    let (meta, pool, _op) = sample_sketch(12);
+    save_sketch(&path, &meta, &pool).unwrap();
+    let (meta2, pool2) = load_sketch(&path).unwrap();
+    assert_eq!(meta2, meta);
+    assert_eq!(pool2.count(), pool.count());
+    assert_eq!(pool2.sum(), pool.sum());
+}
+
+#[test]
+fn qsk_rebuild_operator_reproduces_the_draw() {
+    let (meta, _pool, op) = sample_sketch(13);
+    let rebuilt = meta.rebuild_operator().unwrap();
+    assert_eq!(rebuilt.frequencies().omega.as_slice(), op.frequencies().omega.as_slice());
+    assert_eq!(rebuilt.frequencies().xi, op.frequencies().xi);
+    assert_eq!(operator_fingerprint(&rebuilt), meta.config_hash);
+}
+
+#[test]
+fn qsk_load_rejects_bad_magic_version_and_truncation() {
+    let dir = temp_dir("qsk_corrupt");
+    let path = dir.join("sketch.qsk");
+    let (meta, pool, _op) = sample_sketch(14);
+    save_sketch(&path, &meta, &pool).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Bad magic.
+    let mut bad = good.clone();
+    bad[0] ^= 0xFF;
+    let p = dir.join("bad_magic.qsk");
+    std::fs::write(&p, &bad).unwrap();
+    let err = format!("{:#}", load_sketch(&p).unwrap_err());
+    assert!(err.contains("bad magic"), "{err}");
+
+    // Unsupported version.
+    let mut bad = good.clone();
+    bad[4] = 99;
+    let p = dir.join("bad_version.qsk");
+    std::fs::write(&p, &bad).unwrap();
+    let err = format!("{:#}", load_sketch(&p).unwrap_err());
+    assert!(err.contains("version"), "{err}");
+
+    // Truncated payload.
+    let p = dir.join("truncated.qsk");
+    std::fs::write(&p, &good[..good.len() - 3]).unwrap();
+    assert!(load_sketch(&p).is_err());
+
+    // Trailing garbage.
+    let mut bad = good.clone();
+    bad.push(0);
+    let p = dir.join("trailing.qsk");
+    std::fs::write(&p, &bad).unwrap();
+    let err = format!("{:#}", load_sketch(&p).unwrap_err());
+    assert!(err.contains("trailing"), "{err}");
+}
+
+#[test]
+fn qsk_refuses_merging_mismatched_operators() {
+    let (meta_a, _pool_a, _) = sample_sketch(15);
+    // Same shape, different seed → different Ω bits → different hash.
+    let (meta_b, _pool_b, _) = sample_sketch(16);
+    assert!(meta_a.ensure_mergeable(&meta_a).is_ok());
+    assert!(meta_a.ensure_mergeable(&meta_b).is_err());
+
+    // A tampered hash alone must also refuse.
+    let mut tampered = meta_a.clone();
+    tampered.config_hash ^= 1;
+    assert!(meta_a.ensure_mergeable(&tampered).is_err());
+}
+
+#[test]
+fn qsk_rebuild_rejects_tampered_hash() {
+    let (mut meta, _pool, _) = sample_sketch(17);
+    meta.config_hash ^= 0xDEAD_BEEF;
+    let err = format!("{:#}", meta.rebuild_operator().unwrap_err());
+    assert!(err.contains("fingerprint"), "{err}");
+}
+
+/// Shard → merge equals whole-dataset sketching for the 1-bit quantizer
+/// (±1 contributions sum to exact integers, so float addition commutes),
+/// and merging is associative in any grouping.
+#[test]
+fn sharded_qsk_merge_is_exact_and_associative_for_quantizer() {
+    let op = quantized_op(4, 16, 18);
+    let x = random_mat(1000, 4, 19);
+    let splits = [0usize, 311, 700, 1000];
+    let mut shard_pools: Vec<PooledSketch> = Vec::new();
+    for w in splits.windows(2) {
+        let rows: Vec<usize> = (w[0]..w[1]).collect();
+        let shard = x.select_rows(&rows);
+        let mut pool = PooledSketch::new(op.sketch_len());
+        op.sketch_into(&shard, &mut pool);
+        shard_pools.push(pool);
+    }
+    let mut whole = PooledSketch::new(op.sketch_len());
+    op.sketch_into(&x, &mut whole);
+
+    // Left-fold merge.
+    let mut left = PooledSketch::new(op.sketch_len());
+    for p in &shard_pools {
+        left.merge(p);
+    }
+    // Right-fold merge (different grouping).
+    let mut right = PooledSketch::new(op.sketch_len());
+    for p in shard_pools.iter().rev() {
+        right.merge(p);
+    }
+    assert_eq!(left.sum(), whole.sum());
+    assert_eq!(left.count(), whole.count());
+    assert_eq!(right.sum(), whole.sum());
+}

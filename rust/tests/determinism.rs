@@ -196,6 +196,42 @@ fn decode_fig2a(
         .run(z, &mut rng)
 }
 
+/// Step 5 parallelizes its per-atom terms only once the support is big
+/// enough (kc >= 4); a K = 5 decode exercises that path, which the K = 2
+/// golden instance cannot.
+#[test]
+fn clompr_step5_parallel_path_is_bitwise_thread_invariant() {
+    let mut rng = Rng::new(0xBEEF);
+    let data = gaussian_mixture_pm1(3000, 5, 5, &mut rng);
+    let sigma = SigmaHeuristic::default().resolve(&data.points, &mut rng);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, 5, 120, sigma, &mut rng);
+    let op = SketchOperator::quantized(freqs);
+    let z = op.sketch_dataset(&data.points);
+    let (lo, hi) = bounding_box(&data.points);
+    let decode = |threads: usize| {
+        let params = ClOmprParams {
+            threads,
+            step5_final_iters: 120,
+            ..ClOmprParams::default()
+        };
+        let mut rng = Rng::new(3);
+        ClOmpr::new(&op, 5)
+            .with_bounds(lo.clone(), hi.clone())
+            .with_params(params)
+            .run(&z, &mut rng)
+    };
+    let reference = decode(1);
+    for threads in [2usize, 7] {
+        let sol = decode(threads);
+        assert_eq!(
+            sol.centroids.as_slice(),
+            reference.centroids.as_slice(),
+            "step-5 centroids deviated at threads = {threads}"
+        );
+        assert_eq!(sol.objective.to_bits(), reference.objective.to_bits());
+    }
+}
+
 #[test]
 fn clompr_decode_is_bitwise_thread_invariant() {
     let (op, z, lo, hi, _x) = fig2a_instance();
@@ -298,6 +334,14 @@ fn golden_fig2a_two_cluster_decode() {
         }
         std::fs::write(&path, text).expect("write golden file");
         eprintln!("blessed golden record at {}", path.display());
+    } else if std::env::var("QCKM_REQUIRE_GOLDEN").is_ok() {
+        // CI sets QCKM_REQUIRE_GOLDEN so an absent pin *fails* the build
+        // instead of silently skipping the bit-exact regression check.
+        panic!(
+            "golden pin {} is absent; generate it on a machine with a rust toolchain via \
+             QCKM_BLESS_GOLDEN=1 cargo test golden_fig2a and commit the file",
+            path.display()
+        );
     } else {
         eprintln!(
             "note: no golden file at {}; run QCKM_BLESS_GOLDEN=1 cargo test golden_fig2a to pin",
@@ -307,6 +351,23 @@ fn golden_fig2a_two_cluster_decode() {
 }
 
 // --------------------------------------------------------------- experiments
+
+#[test]
+fn fig2_streamed_variant_matches_in_memory_grid() {
+    // One-chunk datasets: the streamed fold is bitwise the in-memory fold,
+    // so every trial decodes identically and the grids must agree exactly.
+    let mut cfg = Fig2Config::quick(Fig2Variant::VaryDimension);
+    cfg.values = vec![4];
+    cfg.ratios = vec![1.0, 4.0];
+    cfg.trials = 2;
+    cfg.n_samples = 512;
+    cfg.threads = 1;
+    let reference = run_fig2(&cfg);
+    cfg.streamed = true;
+    let streamed = run_fig2(&cfg);
+    assert_eq!(streamed.success, reference.success);
+    assert_eq!(streamed.transitions, reference.transitions);
+}
 
 #[test]
 fn fig2_grid_is_thread_invariant() {

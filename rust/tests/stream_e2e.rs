@@ -1,0 +1,182 @@
+//! End-to-end tests of the stage-split CLI: `qckm sketch` on shards →
+//! `qckm merge` → `qckm decode`, driven through the real binary
+//! (`CARGO_BIN_EXE_qckm`), must reproduce the single-process pipeline's
+//! centroids exactly — the `.qsk` distributed-acquisition contract.
+
+use qckm::clompr::{decode_best_of, ClOmprParams};
+use qckm::config::Method;
+use qckm::data::{gaussian_mixture_pm1, load_csv, save_csv};
+use qckm::frequency::FrequencyLaw;
+use qckm::linalg::Mat;
+use qckm::parallel::Parallelism;
+use qckm::rng::Rng;
+use qckm::stream::{draw_operator, load_sketch};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+const M: usize = 48;
+const DIM: usize = 5;
+const K: usize = 2;
+const SIGMA: f64 = 1.2;
+const SEED: u64 = 7;
+
+fn work_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qckm_stream_e2e_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run the qckm binary; panic with its stderr if it fails.
+fn qckm_ok(args: &[&str]) {
+    let out = Command::new(env!("CARGO_BIN_EXE_qckm"))
+        .args(args)
+        .output()
+        .expect("spawn qckm");
+    assert!(
+        out.status.success(),
+        "qckm {:?} failed:\n{}",
+        args,
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// Run the qckm binary expecting failure; return its stderr.
+fn qckm_err(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_qckm"))
+        .args(args)
+        .output()
+        .expect("spawn qckm");
+    assert!(
+        !out.status.success(),
+        "qckm {args:?} unexpectedly succeeded"
+    );
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn sketch_args<'a>(data: &'a str, out: &'a str, threads: &'a str) -> Vec<&'a str> {
+    vec![
+        "sketch", "--data", data, "--out", out, "--method", "qckm", "--m", "48", "--sigma",
+        "1.2", "--seed", "7", "--threads", threads,
+    ]
+}
+
+fn write_fixture(dir: &Path) -> (Mat, String, String, String) {
+    let mut rng = Rng::new(1);
+    let data = gaussian_mixture_pm1(3000, DIM, K, &mut rng);
+    let full = dir.join("full.csv");
+    save_csv(&full, &data.points).unwrap();
+    // An uneven split that is NOT a multiple of the encode batch or chunk
+    // sizes — merge exactness must not depend on alignment.
+    let rows_a: Vec<usize> = (0..1337).collect();
+    let rows_b: Vec<usize> = (1337..3000).collect();
+    let shard_a = dir.join("shard_a.csv");
+    let shard_b = dir.join("shard_b.csv");
+    save_csv(&shard_a, &data.points.select_rows(&rows_a)).unwrap();
+    save_csv(&shard_b, &data.points.select_rows(&rows_b)).unwrap();
+    (
+        data.points,
+        full.display().to_string(),
+        shard_a.display().to_string(),
+        shard_b.display().to_string(),
+    )
+}
+
+#[test]
+fn sharded_sketch_merge_decode_equals_single_process() {
+    let dir = work_dir("stages");
+    let (x, full, shard_a, shard_b) = write_fixture(&dir);
+    let full_qsk = dir.join("full.qsk").display().to_string();
+    let a_qsk = dir.join("a.qsk").display().to_string();
+    let b_qsk = dir.join("b.qsk").display().to_string();
+    let merged_qsk = dir.join("merged.qsk").display().to_string();
+
+    // Stage 1: sketch the whole dataset and the two shards as separate
+    // processes, at different thread counts (results must not care).
+    qckm_ok(&sketch_args(&full, &full_qsk, "1"));
+    qckm_ok(&sketch_args(&shard_a, &a_qsk, "2"));
+    qckm_ok(&sketch_args(&shard_b, &b_qsk, "7"));
+
+    // Stage 2: merge the shard sketches.
+    qckm_ok(&["merge", "--out", &merged_qsk, &a_qsk, &b_qsk]);
+
+    // The merged pool must be bit-for-bit the full-dataset pool (the 1-bit
+    // quantizer pools exact integer sums), and both must equal the library
+    // encode on the in-memory dataset.
+    let (meta_full, pool_full) = load_sketch(Path::new(&full_qsk)).unwrap();
+    let (meta_merged, pool_merged) = load_sketch(Path::new(&merged_qsk)).unwrap();
+    assert_eq!(meta_full, meta_merged);
+    assert_eq!(pool_full.count(), 3000);
+    assert_eq!(pool_merged.count(), 3000);
+    assert_eq!(pool_full.sum(), pool_merged.sum());
+    let op = draw_operator(Method::Qckm, FrequencyLaw::AdaptedRadius, M, DIM, SIGMA, SEED);
+    let z_lib = op.sketch_dataset_par(&x, &Parallelism::serial());
+    assert_eq!(pool_full.mean(), z_lib);
+    assert_eq!(pool_merged.mean(), z_lib);
+
+    // Stage 3: decode both sketches; centroids must match exactly.
+    let c_full = dir.join("c_full.csv").display().to_string();
+    let c_merged = dir.join("c_merged.csv").display().to_string();
+    let decode = |qsk: &str, out: &str| {
+        qckm_ok(&[
+            "decode", "--sketch", qsk, "--k", "2", "--lo", "-2", "--hi", "2", "--out", out,
+        ]);
+    };
+    decode(&full_qsk, &c_full);
+    decode(&merged_qsk, &c_merged);
+    let cf = load_csv(Path::new(&c_full)).unwrap();
+    let cm = load_csv(Path::new(&c_merged)).unwrap();
+    assert_eq!(cf.shape(), (K, DIM));
+    assert_eq!(
+        cf.as_slice(),
+        cm.as_slice(),
+        "sharded and single-process centroids must be identical"
+    );
+
+    // And both must equal the in-process library decode on the same sketch
+    // (`qckm decode` defaults its RNG to the sketch's seed).
+    let sol = decode_best_of(
+        &op,
+        K,
+        &z_lib,
+        vec![-2.0; DIM],
+        vec![2.0; DIM],
+        &ClOmprParams::default(),
+        1,
+        &mut Rng::new(SEED),
+    );
+    assert_eq!(cf.as_slice(), sol.centroids.as_slice());
+}
+
+#[test]
+fn merge_refuses_shards_from_different_draws() {
+    let dir = work_dir("mismatch");
+    let (_x, _full, shard_a, shard_b) = write_fixture(&dir);
+    let a_qsk = dir.join("a.qsk").display().to_string();
+    let b_qsk = dir.join("b.qsk").display().to_string();
+    let merged = dir.join("merged.qsk").display().to_string();
+
+    qckm_ok(&sketch_args(&shard_a, &a_qsk, "1"));
+    // Same shape but a different seed → different frequency draw.
+    qckm_ok(&[
+        "sketch", "--data", &shard_b, "--out", &b_qsk, "--method", "qckm", "--m", "48",
+        "--sigma", "1.2", "--seed", "8", "--threads", "1",
+    ]);
+    let err = qckm_err(&["merge", "--out", &merged, &a_qsk, &b_qsk]);
+    assert!(
+        err.contains("refusing to merge"),
+        "unexpected merge error: {err}"
+    );
+    assert!(!Path::new(&merged).exists(), "merge must not write on failure");
+}
+
+#[test]
+fn decode_refuses_corrupt_and_foreign_files() {
+    let dir = work_dir("corrupt");
+    let garbage = dir.join("garbage.qsk");
+    std::fs::write(&garbage, b"not a sketch at all").unwrap();
+    let err = qckm_err(&[
+        "decode", "--sketch", &garbage.display().to_string(), "--k", "2",
+    ]);
+    assert!(err.contains("bad magic"), "unexpected decode error: {err}");
+}
