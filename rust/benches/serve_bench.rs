@@ -1,0 +1,160 @@
+//! Serving-path benchmarks: in-process `SketchService` ingest throughput
+//! (the per-connection encode + accumulator merge), window-merge cost as
+//! epochs accumulate, and query latency cold (CL-OMPR decode) vs cached
+//! (fingerprint lookup) — the cache is the reason repeated dashboards
+//! against an unchanged sketch are effectively free.
+//!
+//! Run: `cargo bench --offline`. Results land in `BENCH_serve.json`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, black_box, Summary};
+use qckm::config::Method;
+use qckm::frequency::FrequencyLaw;
+use qckm::linalg::Mat;
+use qckm::parallel::Parallelism;
+use qckm::rng::Rng;
+use qckm::server::{QuerySpec, ServiceConfig, SketchService};
+use qckm::stream::{draw_operator, SketchMeta};
+use std::path::PathBuf;
+
+const DIM: usize = 10;
+const M: usize = 512;
+
+fn service(threads: usize) -> SketchService {
+    let op = draw_operator(Method::Qckm, FrequencyLaw::AdaptedRadius, M, DIM, 1.0, 0);
+    let meta = SketchMeta::for_operator(&op, Method::Qckm, 0);
+    SketchService::new(
+        op,
+        meta,
+        ServiceConfig {
+            threads: Parallelism::fixed(threads),
+            ..ServiceConfig::default()
+        },
+    )
+}
+
+fn main() {
+    println!("== sketch service benchmarks ==");
+    let mut rng = Rng::new(1);
+    let mut records: Vec<(String, Summary, f64)> = Vec::new();
+
+    // Ingest throughput: one shard, repeated batches (encode dominates;
+    // the accumulator merge under the lock is two vector adds).
+    for (batch_rows, threads) in [(256usize, 1usize), (256, 4), (4096, 1), (4096, 4)] {
+        let svc = service(threads);
+        let batch = Mat::from_fn(batch_rows, DIM, |_, _| rng.gaussian());
+        let s = bench(
+            &format!("ingest {batch_rows}x{DIM} (threads {threads})"),
+            2,
+            if batch_rows > 1000 { 40 } else { 300 },
+            || {
+                black_box(svc.ingest("bench", &batch).unwrap());
+            },
+        );
+        s.print_rate("rows", batch_rows as f64);
+        records.push((
+            format!("ingest_{batch_rows}x{DIM}_t{threads}"),
+            s,
+            batch_rows as f64,
+        ));
+    }
+
+    // Window merge: cost of pooling e epochs × s shards at query time
+    // (pure vector adds in stable order — no re-encoding).
+    println!();
+    for (epochs, shards) in [(4usize, 4usize), (16, 8)] {
+        let svc = service(1);
+        let batch = Mat::from_fn(64, DIM, |_, _| rng.gaussian());
+        for _ in 0..epochs {
+            for sh in 0..shards {
+                svc.ingest(&format!("shard-{sh}"), &batch).unwrap();
+            }
+            svc.roll_epoch();
+        }
+        let s = bench(
+            &format!("merge_window over {epochs} epochs x {shards} shards"),
+            2,
+            200,
+            || {
+                black_box(svc.merge_window(1 + epochs as u32).pool.count());
+            },
+        );
+        s.print();
+        records.push((format!("merge_window_e{epochs}_s{shards}"), s, 1.0));
+    }
+
+    // Query latency: cold decode vs cached. Small replicate count; the
+    // point is the cold/cached ratio, not decoder tuning.
+    println!();
+    let svc = service(1);
+    let mut data_rng = Rng::new(2);
+    let data = qckm::data::gaussian_mixture_pm1(4096, DIM, 4, &mut data_rng);
+    svc.ingest("bench", &data.points).unwrap();
+    let spec = QuerySpec {
+        k: 4,
+        window: 0,
+        replicates: 1,
+        seed: None,
+        lo: -2.0,
+        hi: 2.0,
+    };
+    let cold = bench("query cold (decode K=4, M=512)", 0, 3, || {
+        // Vary the seed so every decode misses the cache.
+        let mut s = spec.clone();
+        s.seed = Some(black_box(rand_seed()));
+        black_box(svc.query(&s).unwrap());
+    });
+    cold.print();
+    records.push(("query_cold".into(), cold.clone(), 1.0));
+    svc.query(&spec).unwrap(); // warm the cache for the fixed spec
+    let cached = bench("query cached (same window, same spec)", 2, 200, || {
+        let report = svc.query(&spec).unwrap();
+        assert!(report.cached);
+        black_box(report.objective);
+    });
+    cached.print();
+    println!(
+        "    cache speedup: {:.0}x (cold {:.3}ms -> cached {:.3}ms)",
+        cold.median_ns / cached.median_ns,
+        cold.median_ns / 1e6,
+        cached.median_ns / 1e6
+    );
+    records.push(("query_cached".into(), cached, 1.0));
+
+    write_serve_json(&records);
+}
+
+/// A fresh seed per cold query (wall-clock based; benches need no
+/// reproducibility, just distinct cache keys).
+fn rand_seed() -> u64 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap()
+        .subsec_nanos() as u64
+        | 1 << 32
+}
+
+/// Emit the serving-path records as `BENCH_serve.json` at the repo root
+/// (same shape as BENCH_stream.json).
+fn write_serve_json(records: &[(String, Summary, f64)]) {
+    let mut json =
+        String::from("{\n  \"bench\": \"serve\",\n  \"unit\": \"ns/iter\",\n  \"results\": [\n");
+    for (i, (name, s, per_iter)) in records.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"median_ns\": {:.0}, \"mean_ns\": {:.0}, \
+             \"items_per_iter\": {per_iter}}}{}\n",
+            s.median_ns,
+            s.mean_ns,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_serve.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("(could not write {}: {e})", path.display()),
+    }
+}

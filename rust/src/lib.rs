@@ -60,6 +60,7 @@ pub mod optim;
 pub mod parallel;
 pub mod rng;
 pub mod runtime;
+pub mod server;
 pub mod signature;
 pub mod sketch;
 pub mod stream;

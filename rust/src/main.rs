@@ -3,8 +3,14 @@
 //! ```text
 //! qckm cluster     --data x.csv --k 10 [--method qckm] [--config job.toml]
 //! qckm sketch      --data shard.csv --sigma 1.2 --seed 7 --out shard.qsk
+//! qckm sketch      --data more.csv --append shard.qsk  (online update)
 //! qckm merge       --out merged.qsk shard0.qsk shard1.qsk …
 //! qckm decode      --sketch merged.qsk --k 10 [--lo -2 --hi 2] --out c.csv
+//! qckm serve       --dim 5 --m 1000 --sigma 1.2 --seed 7 [--port 0]
+//! qckm push        --addr host:port --data shard.csv [--shard name]
+//! qckm query       --addr host:port --k 10 [--window E] [--out c.csv]
+//! qckm snapshot    --addr host:port --out live.qsk [--window E]
+//! qckm ctl         --addr host:port stats|roll|shutdown
 //! qckm experiment  fig2a|fig2b|fig3|prop1|ablation [--full]
 //! qckm pipeline    [--workers 8] [--samples 100000] … (streaming demo)
 //! ```
@@ -14,6 +20,10 @@
 //! memory, bit-for-bit the in-memory sketch) where its data lives, the
 //! tiny `.qsk` files are merged associatively, and centroids are decoded
 //! once from the pooled sketch — no stage ever needs the whole dataset.
+//! `serve` keeps the same pooled state live behind a TCP protocol:
+//! `push` streams batches in, `query` decodes centroids on demand (with a
+//! centroid cache), `snapshot` drains the live pool back into a `.qsk`
+//! the offline stages understand.
 //!
 //! Every run prints its seed and full parameterization so results are
 //! reproducible; experiment outputs are the rows/series recorded in
@@ -30,6 +40,7 @@ use qckm::frequency::{DrawnFrequencies, SigmaHeuristic};
 use qckm::linalg::{bounding_box, Mat};
 use qckm::parallel::Parallelism;
 use qckm::rng::Rng;
+use qckm::server::{self, QuerySpec, ServiceConfig, SketchService};
 use qckm::sketch::{PooledSketch, SketchOperator};
 use qckm::stream;
 use std::path::Path;
@@ -46,8 +57,8 @@ fn main() {
 fn dispatch(args: Vec<String>) -> Result<()> {
     let Some(cmd) = args.first().cloned() else {
         bail!(
-            "usage: qckm <cluster|sketch|merge|decode|experiment|pipeline> …  \
-             (use --help per command)\n\
+            "usage: qckm <cluster|sketch|merge|decode|serve|push|query|snapshot|ctl|\
+             experiment|pipeline> …  (use --help per command)\n\
              see README.md for a tour"
         );
     };
@@ -57,10 +68,18 @@ fn dispatch(args: Vec<String>) -> Result<()> {
         "sketch" => cmd_sketch(rest),
         "merge" => cmd_merge(rest),
         "decode" => cmd_decode(rest),
+        "serve" => cmd_serve(rest),
+        "push" => cmd_push(rest),
+        "query" => cmd_query(rest),
+        "snapshot" => cmd_snapshot(rest),
+        "ctl" => cmd_ctl(rest),
         "experiment" => cmd_experiment(rest),
         "pipeline" => cmd_pipeline(rest),
         other => {
-            bail!("unknown command '{other}' (cluster|sketch|merge|decode|experiment|pipeline)")
+            bail!(
+                "unknown command '{other}' (cluster|sketch|merge|decode|serve|push|query|\
+                 snapshot|ctl|experiment|pipeline)"
+            )
         }
     }
 }
@@ -224,6 +243,14 @@ fn cmd_sketch(args: Vec<String>) -> Result<()> {
     .opt("seed", "NUM", None, "frequency-draw seed (must match across shards)")
     .opt("threads", "NUM", None, "compute threads (0 = all cores)")
     .opt("encoding", "FMT", Some("auto"), "per-chunk pooling: auto|bits|dense")
+    .opt(
+        "append",
+        "FILE",
+        None,
+        "online update: stream --data into this existing .qsk (operator comes \
+         from its header, fingerprint-verified) and rewrite it",
+    )
+    .opt("shard", "NAME", None, "provenance label (default: the data file stem)")
     .opt("config", "FILE", None, "TOML job config")
     .opt("out", "FILE", None, "write the pooled sketch (.qsk) here")
     .opt("out-csv", "FILE", None, "also write the mean sketch as one CSV row");
@@ -231,6 +258,17 @@ fn cmd_sketch(args: Vec<String>) -> Result<()> {
     let cfg = job_from(&parsed)?;
     let data_path = parsed.get("data").context("--data is required")?;
     let par = Parallelism::fixed(cfg.threads);
+    let shard_label = match parsed.get("shard") {
+        Some(s) => s.to_string(),
+        None => Path::new(data_path)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| data_path.to_string()),
+    };
+
+    if let Some(append_path) = parsed.get("append") {
+        return sketch_append(&parsed, append_path, data_path, &shard_label, &par);
+    }
     let method = cfg.sketch.method;
     let wire = wire_from(&parsed, method)?;
 
@@ -296,7 +334,11 @@ fn cmd_sketch(args: Vec<String>) -> Result<()> {
 
     let meta = stream::SketchMeta::for_operator(&op, method, cfg.seed);
     if let Some(out) = parsed.get("out") {
-        stream::save_sketch(Path::new(out), &meta, &pool)?;
+        let prov = [stream::ShardRecord {
+            label: shard_label.clone(),
+            rows: pool.count(),
+        }];
+        stream::save_sketch_with(Path::new(out), &meta, &pool, &prov)?;
         eprintln!("sketch written to {out} [{}]", meta.describe());
     }
     let z = pool.mean();
@@ -310,6 +352,63 @@ fn cmd_sketch(args: Vec<String>) -> Result<()> {
         save_csv(Path::new(out), &Mat::from_vec(1, z.len(), z))?;
         eprintln!("mean sketch written to {out}");
     }
+    Ok(())
+}
+
+/// `qckm sketch --append`: the online-update mode. The operator is NOT
+/// re-drawn from CLI flags — it is rebuilt from the existing `.qsk` header
+/// (fingerprint-verified), the new rows are streamed into the loaded pool
+/// through the same bounded-memory fold, and the file is rewritten with an
+/// extra provenance record. Any operator flag that contradicts the header
+/// is an error (silently sketching new rows with a different operator
+/// would corrupt the pool).
+fn sketch_append(
+    parsed: &qckm::cli::ParsedArgs,
+    append_path: &str,
+    data_path: &str,
+    shard_label: &str,
+    par: &Parallelism,
+) -> Result<()> {
+    let (meta, mut pool, mut prov) = stream::load_sketch_full(Path::new(append_path))?;
+    if let Some(m) = parsed.get_usize("m")? {
+        if m as u64 != meta.m {
+            bail!("--m {m} conflicts with {append_path} (m={})", meta.m);
+        }
+    }
+    if let Some(method) = parsed.get("method") {
+        if method != meta.method {
+            bail!("--method {method} conflicts with {append_path} (method={})", meta.method);
+        }
+    }
+    if let Some(sigma) = parsed.get_f64("sigma")? {
+        if sigma.to_bits() != meta.sigma.to_bits() {
+            bail!("--sigma {sigma} conflicts with {append_path} (sigma={})", meta.sigma);
+        }
+    }
+    if let Some(seed) = parsed.get_u64("seed")? {
+        if seed != meta.seed {
+            bail!("--seed {seed} conflicts with {append_path} (seed={})", meta.seed);
+        }
+    }
+    let op = meta.rebuild_operator()?;
+    let method = Method::parse(&meta.method)?;
+    let wire = wire_from(parsed, method)?;
+    let before = pool.count();
+    let mut reader = stream::open_dataset(Path::new(data_path))?;
+    let rows = stream::sketch_reader(&op, reader.as_mut(), wire, &mut pool, par)?;
+    if rows == 0 {
+        bail!("{data_path}: empty dataset");
+    }
+    prov.push(stream::ShardRecord {
+        label: shard_label.to_string(),
+        rows,
+    });
+    let out = parsed.get("out").unwrap_or(append_path);
+    stream::save_sketch_with(Path::new(out), &meta, &pool, &prov)?;
+    println!(
+        "appended {rows} rows from {data_path} to {append_path} ({before} -> {} samples) -> {out}",
+        pool.count()
+    );
     Ok(())
 }
 
@@ -327,16 +426,17 @@ fn cmd_merge(args: Vec<String>) -> Result<()> {
     }
     let out = parsed.get("out").context("--out is required")?;
 
-    let (meta, mut pool) = stream::load_sketch(Path::new(&inputs[0]))?;
+    let (meta, mut pool, mut prov) = stream::load_sketch_full(Path::new(&inputs[0]))?;
     eprintln!("{}: {} samples [{}]", inputs[0], pool.count(), meta.describe());
     for input in &inputs[1..] {
-        let (shard_meta, shard_pool) = stream::load_sketch(Path::new(input))?;
+        let (shard_meta, shard_pool, shard_prov) = stream::load_sketch_full(Path::new(input))?;
         meta.ensure_mergeable(&shard_meta)
             .with_context(|| format!("merging {input}"))?;
         eprintln!("{}: {} samples", input, shard_pool.count());
         pool.merge(&shard_pool);
+        prov.extend(shard_prov);
     }
-    stream::save_sketch(Path::new(out), &meta, &pool)?;
+    stream::save_sketch_with(Path::new(out), &meta, &pool, &prov)?;
     println!(
         "merged {} shard(s), {} samples -> {out}",
         inputs.len(),
@@ -424,6 +524,287 @@ fn cmd_decode(args: Vec<String>) -> Result<()> {
     if let Some(out) = parsed.get("out") {
         save_csv(Path::new(out), &sol.centroids)?;
         eprintln!("centroids written to {out}");
+    }
+    Ok(())
+}
+
+/// `qckm serve` — the online sketch service (see `qckm::server`).
+fn cmd_serve(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new(
+        "qckm serve",
+        "run the online sketch service: concurrent ingest, windowed pooling, live decode",
+    )
+    .opt("host", "ADDR", Some("127.0.0.1"), "bind address")
+    .opt("port", "NUM", Some("0"), "bind port (0 = ephemeral; the bound port is printed)")
+    .opt("dim", "NUM", None, "data dimension (required unless --seed-sketch)")
+    .opt("m", "NUM", None, "number of frequencies")
+    .opt("method", "NAME", None, "ckm|qckm|triangle")
+    .opt("sigma", "FLOAT", None, "kernel bandwidth (required unless --seed-sketch)")
+    .opt("seed", "NUM", None, "frequency-draw seed")
+    .opt("threads", "NUM", None, "encode/decode threads (0 = all cores)")
+    .opt("epochs", "NUM", Some("16"), "closed epochs retained for windowed queries")
+    .opt("cache", "NUM", Some("32"), "cached decodes retained")
+    .opt(
+        "seed-sketch",
+        "FILE",
+        None,
+        "seed the server from this .qsk (operator comes from its header)",
+    )
+    .opt("seed-shard", "NAME", Some("__seed__"), "shard label for the seeded history")
+    .opt("config", "FILE", None, "TOML job config");
+    let parsed = spec.parse(args)?;
+    let cfg = job_from(&parsed)?;
+
+    // The operator is fixed for the server's lifetime: either rebuilt from
+    // a snapshot header (fingerprint-verified) or drawn fresh from the
+    // CLI parameters — the same pure-function draw the offline stages use.
+    let (meta, op, seed_pool) = match parsed.get("seed-sketch") {
+        Some(path) => {
+            let (meta, pool, prov) = stream::load_sketch_full(Path::new(path))?;
+            // The operator comes entirely from the snapshot header; refuse
+            // operator flags that contradict it (same convention as
+            // `qckm sketch --append`) instead of silently ignoring them.
+            if let Some(m) = parsed.get_usize("m")? {
+                if m as u64 != meta.m {
+                    bail!("--m {m} conflicts with {path} (m={})", meta.m);
+                }
+            }
+            if let Some(method) = parsed.get("method") {
+                if method != meta.method {
+                    bail!("--method {method} conflicts with {path} (method={})", meta.method);
+                }
+            }
+            if let SigmaHeuristic::Fixed(sigma) = cfg.sketch.sigma {
+                if sigma.to_bits() != meta.sigma.to_bits() {
+                    bail!("--sigma {sigma} conflicts with {path} (sigma={})", meta.sigma);
+                }
+            }
+            if let Some(seed) = parsed.get_u64("seed")? {
+                if seed != meta.seed {
+                    bail!("--seed {seed} conflicts with {path} (seed={})", meta.seed);
+                }
+            }
+            let op = meta.rebuild_operator()?;
+            eprintln!(
+                "seeded from {path}: {} samples across {} provenance record(s)",
+                pool.count(),
+                prov.len()
+            );
+            (meta, op, Some(pool))
+        }
+        None => {
+            let dim = parsed
+                .get_usize("dim")?
+                .context("--dim is required without --seed-sketch")?;
+            let SigmaHeuristic::Fixed(sigma) = cfg.sketch.sigma else {
+                bail!("--sigma is required without --seed-sketch (shards must agree on it)");
+            };
+            let op = stream::draw_operator(
+                cfg.sketch.method,
+                cfg.sketch.law,
+                cfg.sketch.num_frequencies,
+                dim,
+                sigma,
+                cfg.seed,
+            );
+            let meta = stream::SketchMeta::for_operator(&op, cfg.sketch.method, cfg.seed);
+            (meta, op, None)
+        }
+    };
+    eprintln!("operator: {}", meta.describe());
+
+    let service_cfg = ServiceConfig {
+        epoch_capacity: parsed.get_usize("epochs")?.unwrap().max(1),
+        cache_capacity: parsed.get_usize("cache")?.unwrap().max(1),
+        threads: Parallelism::fixed(cfg.threads),
+        decode: ClOmprParams {
+            threads: cfg.threads,
+            ..ClOmprParams::default()
+        },
+    };
+    let service = SketchService::new(op, meta, service_cfg);
+    if let Some(pool) = seed_pool {
+        service.seed_with(parsed.get("seed-shard").unwrap(), pool)?;
+    }
+
+    let host = parsed.get("host").unwrap();
+    let port = parsed.get_usize("port")?.unwrap();
+    if port > u16::MAX as usize {
+        bail!("--port {port} out of range");
+    }
+    let listener = std::net::TcpListener::bind((host, port as u16))
+        .with_context(|| format!("bind {host}:{port}"))?;
+    // Machine-parseable: tests and scripts read the ephemeral port here.
+    println!("LISTENING {}", listener.local_addr()?);
+    std::io::Write::flush(&mut std::io::stdout())?;
+
+    let served = server::serve(listener, Arc::new(service))?;
+    eprintln!("server stopped after {served} connection(s)");
+    Ok(())
+}
+
+fn cmd_push(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new("qckm push", "stream a dataset into a serving node's shard")
+        .opt("addr", "HOST:PORT", None, "server address")
+        .opt("data", "FILE", None, "input dataset (.csv, else raw f64 bin)")
+        .opt("shard", "NAME", None, "shard label (default: the data file stem)")
+        .opt("batch", "NUM", Some("4096"), "rows per push message");
+    let parsed = spec.parse(args)?;
+    let addr = parsed.get("addr").context("--addr is required")?;
+    let data_path = parsed.get("data").context("--data is required")?;
+    let batch = parsed.get_usize("batch")?.unwrap().max(1);
+    let shard = match parsed.get("shard") {
+        Some(s) => s.to_string(),
+        None => Path::new(data_path)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| data_path.to_string()),
+    };
+
+    let mut reader = stream::open_dataset(Path::new(data_path))?;
+    let dim = reader.dim();
+    // Clamp the batch so every push message fits one protocol frame.
+    let cap = qckm::server::proto::max_batch_rows(dim);
+    let batch = if batch > cap {
+        eprintln!("note: --batch {batch} clamped to {cap} rows (frame size cap at dim {dim})");
+        cap
+    } else {
+        batch
+    };
+    let mut client = qckm::server::Client::connect(addr)?;
+    let mut pushed = 0u64;
+    let mut buf: Vec<f64> = Vec::new();
+    let (mut shard_rows, mut total_rows) = (0, 0);
+    loop {
+        buf.clear();
+        let mut rows = 0usize;
+        while rows < batch {
+            let got = reader.next_block(batch - rows, &mut buf)?;
+            if got == 0 {
+                break;
+            }
+            rows += got;
+        }
+        if rows == 0 {
+            break;
+        }
+        let block = Mat::from_vec(rows, dim, std::mem::take(&mut buf));
+        (shard_rows, total_rows) = client.push(&shard, &block)?;
+        buf = block.into_vec();
+        pushed += rows as u64;
+    }
+    if pushed == 0 {
+        bail!("{data_path}: empty dataset");
+    }
+    println!(
+        "pushed {pushed} rows from {data_path} to shard '{shard}' \
+         (shard total {shard_rows}, server total {total_rows})"
+    );
+    Ok(())
+}
+
+fn cmd_query(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new("qckm query", "decode centroids live from a serving node")
+        .opt("addr", "HOST:PORT", None, "server address")
+        .opt("k", "NUM", None, "number of clusters")
+        .opt(
+            "window",
+            "NUM",
+            Some("0"),
+            "epochs to pool: 0 = all-time, E = open epoch + E-1 newest closed",
+        )
+        .opt("replicates", "NUM", Some("1"), "decoder replicates (best objective wins)")
+        .opt("seed", "NUM", None, "decoder RNG seed (default: the operator's seed)")
+        .opt("lo", "FLOAT", Some("-1"), "centroid search box lower bound (every coordinate)")
+        .opt("hi", "FLOAT", Some("1"), "centroid search box upper bound (every coordinate)")
+        .opt("out", "FILE", None, "write centroids CSV here");
+    let parsed = spec.parse(args)?;
+    let addr = parsed.get("addr").context("--addr is required")?;
+    let k = parsed.get_usize("k")?.context("--k is required")?;
+
+    let mut client = qckm::server::Client::connect(addr)?;
+    let report = client.query(&QuerySpec {
+        k: k as u32,
+        window: parsed.get_usize("window")?.unwrap() as u32,
+        replicates: parsed.get_usize("replicates")?.unwrap().max(1) as u32,
+        seed: parsed.get_u64("seed")?,
+        lo: parsed.get_f64("lo")?.unwrap(),
+        hi: parsed.get_f64("hi")?.unwrap(),
+    })?;
+    eprintln!(
+        "window: {} rows over {} epoch(s){}",
+        report.rows,
+        report.epochs,
+        if report.cached { " [cached]" } else { "" }
+    );
+    println!("objective = {:.6}", report.objective);
+    let centroids = Mat::from_vec(report.k as usize, report.dim as usize, report.centroids);
+    for c in 0..centroids.rows() {
+        let row: Vec<String> = centroids.row(c).iter().map(|v| format!("{v:.5}")).collect();
+        println!("c[{c}] (alpha={:.3}): {}", report.weights[c], row.join(", "));
+    }
+    if let Some(out) = parsed.get("out") {
+        save_csv(Path::new(out), &centroids)?;
+        eprintln!("centroids written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_snapshot(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new(
+        "qckm snapshot",
+        "drain a serving node's window into a .qsk file (offline-decodable)",
+    )
+    .opt("addr", "HOST:PORT", None, "server address")
+    .opt("window", "NUM", Some("0"), "epochs to pool (0 = all-time)")
+    .opt("out", "FILE", None, "write the .qsk here");
+    let parsed = spec.parse(args)?;
+    let addr = parsed.get("addr").context("--addr is required")?;
+    let out = parsed.get("out").context("--out is required")?;
+
+    let mut client = qckm::server::Client::connect(addr)?;
+    let bytes = client.snapshot(parsed.get_usize("window")?.unwrap() as u32)?;
+    std::fs::write(out, &bytes).with_context(|| format!("write {out}"))?;
+    // Re-load what we wrote: validates the checksum end-to-end and tells
+    // the operator what they got.
+    let (meta, pool, prov) = stream::load_sketch_full(Path::new(out))?;
+    println!(
+        "snapshot: {} samples across {} shard record(s) -> {out} [{}]",
+        pool.count(),
+        prov.len(),
+        meta.describe()
+    );
+    Ok(())
+}
+
+fn cmd_ctl(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new("qckm ctl", "administer a serving node")
+        .positionals("<stats|roll|shutdown>")
+        .opt("addr", "HOST:PORT", None, "server address");
+    let parsed = spec.parse(args)?;
+    let addr = parsed.get("addr").context("--addr is required")?;
+    let verb = parsed.positional(0).context("which action? (stats|roll|shutdown)")?;
+    let mut client = qckm::server::Client::connect(addr)?;
+    match verb {
+        "stats" => {
+            let s = client.stats()?;
+            println!(
+                "epoch {} | {} rows all-time | {} closed epoch(s) held | cache {} hit / {} miss",
+                s.epoch, s.rows_total, s.epochs_held, s.cache_hits, s.cache_misses
+            );
+            for (label, rows) in &s.shards {
+                println!("  shard '{label}': {rows} rows");
+            }
+        }
+        "roll" => {
+            let (epoch, rows_closed) = client.roll()?;
+            println!("rolled: epoch {epoch} open, {rows_closed} rows closed");
+        }
+        "shutdown" => {
+            client.shutdown()?;
+            println!("server acknowledged shutdown");
+        }
+        other => bail!("unknown ctl action '{other}' (stats|roll|shutdown)"),
     }
     Ok(())
 }

@@ -1,0 +1,97 @@
+//! Blocking client for the sketch service — the library behind
+//! `qckm push` / `qckm query` / `qckm snapshot` / `qckm ctl`.
+
+use super::proto::{
+    self, CentroidReport, QuerySpec, Request, Response, StatsReport,
+};
+use crate::linalg::Mat;
+use anyhow::{bail, Context, Result};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// One connection to a serving node. Requests are strictly sequential
+/// (send, then wait for the reply); open several clients for concurrency —
+/// the server runs one handler thread per connection.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect to `addr` (`host:port`). Reads time out after five minutes
+    /// so a dead server fails the client instead of hanging it (decode of
+    /// a realistic sketch is seconds, not minutes).
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream
+            .set_read_timeout(Some(Duration::from_secs(300)))
+            .context("set read timeout")?;
+        stream.set_nodelay(true).ok();
+        Ok(Self { stream })
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        proto::write_request(&mut self.stream, req)?;
+        match proto::read_response(&mut self.stream)? {
+            Response::Error(msg) => bail!("server: {msg}"),
+            resp => Ok(resp),
+        }
+    }
+
+    /// Push a row batch into `shard`. Returns (shard rows, total rows)
+    /// accumulated all-time on the server.
+    pub fn push(&mut self, shard: &str, batch: &Mat) -> Result<(u64, u64)> {
+        let req = Request::Push {
+            shard: shard.to_string(),
+            dim: batch.cols() as u32,
+            data: batch.as_slice().to_vec(),
+        };
+        match self.call(&req)? {
+            Response::PushAck {
+                shard_rows,
+                total_rows,
+            } => Ok((shard_rows, total_rows)),
+            other => bail!("unexpected reply to push: {other:?}"),
+        }
+    }
+
+    /// Decode centroids from a window.
+    pub fn query(&mut self, spec: &QuerySpec) -> Result<CentroidReport> {
+        match self.call(&Request::Query(spec.clone()))? {
+            Response::Centroids(report) => Ok(report),
+            other => bail!("unexpected reply to query: {other:?}"),
+        }
+    }
+
+    /// Fetch a window as `.qsk` bytes (write them to a file and they are a
+    /// regular sketch file for `qckm merge` / `qckm decode`).
+    pub fn snapshot(&mut self, window: u32) -> Result<Vec<u8>> {
+        match self.call(&Request::Snapshot { window })? {
+            Response::Snapshot(bytes) => Ok(bytes),
+            other => bail!("unexpected reply to snapshot: {other:?}"),
+        }
+    }
+
+    /// Close the open epoch. Returns (new epoch index, rows closed).
+    pub fn roll(&mut self) -> Result<(u64, u64)> {
+        match self.call(&Request::Roll)? {
+            Response::RollAck { epoch, rows_closed } => Ok((epoch, rows_closed)),
+            other => bail!("unexpected reply to roll: {other:?}"),
+        }
+    }
+
+    /// Fetch server counters.
+    pub fn stats(&mut self) -> Result<StatsReport> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(report) => Ok(report),
+            other => bail!("unexpected reply to stats: {other:?}"),
+        }
+    }
+
+    /// Ask the server to stop (acked before it exits).
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call(&Request::Shutdown)? {
+            Response::ShutdownAck => Ok(()),
+            other => bail!("unexpected reply to shutdown: {other:?}"),
+        }
+    }
+}

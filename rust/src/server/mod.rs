@@ -1,0 +1,56 @@
+//! The online sketch service — `qckm serve`.
+//!
+//! The pooled sketch is a tiny, linear, mergeable sufficient statistic, so
+//! the natural server-side state for a *live* clustering service is the
+//! sketch itself: ingest point batches forever, keep (sum, count) pairs,
+//! and decode centroids on demand. This module turns the batch pipeline
+//! (`qckm sketch` → `merge` → `decode`) into an always-on TCP service:
+//!
+//! * [`proto`] — a dependency-free length-prefixed binary protocol
+//!   (push / query / snapshot / roll / stats / shutdown) over TCP.
+//! * [`SketchService`] — the shared server state: one accumulator per
+//!   *shard* (the client-chosen partition label), a ring of per-epoch
+//!   windows so queries can ask for "the last E epochs" as well as
+//!   all-time, and a centroid cache keyed by the exact pooled bits so
+//!   repeated queries against an unchanged sketch never re-decode.
+//! * [`serve`] — the accept loop: one handler thread per connection,
+//!   encode via [`SketchOperator::sketch_into_par`] outside the state
+//!   lock, cooperative shutdown with bounded timeouts (CI can never hang).
+//! * [`Client`] — the blocking client used by `qckm push` / `qckm query` /
+//!   `qckm snapshot` / `qckm ctl`.
+//!
+//! ## Determinism
+//!
+//! The serving node preserves the repo-wide reproducibility contract the
+//! same way the offline stages do: shard accumulators are merged in stable
+//! shard-key order (and epochs in chronological order) at query/snapshot
+//! time, each push batch is encoded through the fixed-chunk parallel
+//! encode, and the decoder is seeded from the operator seed by default.
+//! For the 1-bit quantized method every contribution is an exact small
+//! integer, so the pooled sums — and therefore the decoded centroids —
+//! are bit-for-bit identical to the offline `sketch → merge → decode`
+//! pipeline on the same rows, no matter how pushes interleave across
+//! connections (`rust/tests/server_e2e.rs` locks this in).
+//!
+//! ## Snapshots
+//!
+//! [`SketchService::snapshot`] serializes the merged window in the exact
+//! `.qsk` format (fingerprint-checked, checksummed, with per-shard
+//! provenance records), so a serving node can be seeded from — and drained
+//! back into — the offline pipeline: `qckm snapshot` then `qckm decode`,
+//! or `qckm serve --seed-sketch old.qsk` to resume.
+//!
+//! [`SketchOperator::sketch_into_par`]: crate::sketch::SketchOperator::sketch_into_par
+
+pub mod client;
+pub mod proto;
+mod service;
+mod state;
+
+pub use client::Client;
+pub use proto::{CentroidReport, QuerySpec, Request, Response, StatsReport};
+pub use service::serve;
+pub use state::{ServiceConfig, SketchService, WindowPool};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,536 @@
+//! The wire protocol of the sketch service — length-prefixed binary frames
+//! over TCP, std-only, little-endian throughout (matching `.qsk`).
+//!
+//! ```text
+//! frame    := u32 len | payload          (len counts the payload bytes)
+//! payload  := u8 proto_version | u8 tag | body
+//! ```
+//!
+//! Requests and responses share the framing; a response's first body byte
+//! is a status (`0` ok, `1` error + UTF-8 message). Every integer and
+//! float field is fixed-width little-endian, strings are `u32 len + UTF-8`
+//! — the same primitives as the `.qsk` container, so the snapshot response
+//! body *is* a `.qsk` byte stream.
+//!
+//! Decoding is defensive: frame lengths, row/dimension counts, string
+//! lengths and vector sizes are all bounds-checked before allocation, so a
+//! corrupt or adversarial peer gets an error, never an OOM or a panic.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Protocol version carried in every frame.
+pub const PROTO_VERSION: u8 = 1;
+/// Hard ceiling on one frame's payload (256 MiB) — covers the largest
+/// plausible push batch and snapshot while bounding allocations.
+pub const MAX_FRAME_BYTES: usize = 1 << 28;
+/// Ceiling on rows in one push batch. For wide data the frame cap binds
+/// first: a batch must also fit `rows × dim × 8` bytes under
+/// [`MAX_FRAME_BYTES`] (see [`max_batch_rows`]).
+pub const MAX_PUSH_ROWS: usize = 1 << 22;
+
+/// The largest push batch (in rows) that fits one frame at dimension
+/// `dim`, with headroom for the message header.
+pub fn max_batch_rows(dim: usize) -> usize {
+    ((MAX_FRAME_BYTES / 2) / (8 * dim.max(1))).clamp(1, MAX_PUSH_ROWS)
+}
+/// Ceiling on the dimension field (matches the `.qsk` plausibility bound).
+pub const MAX_DIM: usize = 1 << 24;
+/// Ceiling on shard-label bytes (matches `.qsk` provenance labels).
+pub const MAX_SHARD_BYTES: usize = 256;
+
+const TAG_PUSH: u8 = 1;
+const TAG_QUERY: u8 = 2;
+const TAG_SNAPSHOT: u8 = 3;
+const TAG_ROLL: u8 = 4;
+const TAG_STATS: u8 = 5;
+const TAG_SHUTDOWN: u8 = 6;
+
+const STATUS_OK: u8 = 0;
+const STATUS_ERR: u8 = 1;
+
+/// A decode query: how many centroids, over which window, with which
+/// decoder configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuerySpec {
+    /// Number of centroids to decode.
+    pub k: u32,
+    /// `0` = all-time; `E ≥ 1` = the open epoch plus the `E − 1` most
+    /// recently closed epochs.
+    pub window: u32,
+    /// Decoder replicates (best objective wins); clamped to ≥ 1.
+    pub replicates: u32,
+    /// Decoder RNG seed; `None` = the operator's frequency-draw seed,
+    /// matching `qckm decode`'s default.
+    pub seed: Option<u64>,
+    /// Centroid search box lower bound (every coordinate).
+    pub lo: f64,
+    /// Centroid search box upper bound (every coordinate).
+    pub hi: f64,
+}
+
+/// A decoded window: centroids plus the window's bookkeeping.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CentroidReport {
+    /// `k × dim`, row-major.
+    pub centroids: Vec<f64>,
+    pub k: u32,
+    pub dim: u32,
+    /// Mixture weights, length `k`.
+    pub weights: Vec<f64>,
+    /// Final sketch-matching objective.
+    pub objective: f64,
+    /// Rows pooled into the decoded window.
+    pub rows: u64,
+    /// Epochs merged into the window (1 = just the open epoch).
+    pub epochs: u32,
+    /// Whether the centroid cache answered (no decode ran).
+    pub cached: bool,
+}
+
+/// Server counters returned by a stats request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatsReport {
+    /// Index of the open epoch (0-based; incremented by each roll).
+    pub epoch: u64,
+    /// All-time pooled rows.
+    pub rows_total: u64,
+    /// Closed epochs currently held in the window ring.
+    pub epochs_held: u32,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// All-time per-shard row counts, in stable shard-key order.
+    pub shards: Vec<(String, u64)>,
+}
+
+/// Client → server messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Ingest a row batch into `shard`'s accumulator (`rows × dim`,
+    /// row-major).
+    Push {
+        shard: String,
+        dim: u32,
+        data: Vec<f64>,
+    },
+    /// Decode centroids from a window.
+    Query(QuerySpec),
+    /// Serialize a window as `.qsk` bytes.
+    Snapshot { window: u32 },
+    /// Close the open epoch and start a new one.
+    Roll,
+    /// Report counters.
+    Stats,
+    /// Stop the server (responds before exiting).
+    Shutdown,
+}
+
+/// Server → client messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// The request failed; human-readable reason.
+    Error(String),
+    /// Push accepted: the shard's all-time rows and the server's total.
+    PushAck { shard_rows: u64, total_rows: u64 },
+    /// Query result.
+    Centroids(CentroidReport),
+    /// A `.qsk` byte stream (exactly what `save_sketch` would write).
+    Snapshot(Vec<u8>),
+    /// Epoch rolled: the new open epoch's index and the closed epoch's rows.
+    RollAck { epoch: u64, rows_closed: u64 },
+    Stats(StatsReport),
+    ShutdownAck,
+}
+
+// ------------------------------------------------------------------ framing
+
+/// Write one frame: `u32 len | payload`.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME_BYTES {
+        bail!(
+            "message of {} bytes exceeds the {MAX_FRAME_BYTES}-byte frame cap \
+             (split the batch)",
+            payload.len()
+        );
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's payload. `Ok(None)` means the peer closed the
+/// connection cleanly (EOF before any length byte).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut filled = 0;
+    while filled < 4 {
+        let n = r.read(&mut len_buf[filled..])?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(None);
+            }
+            bail!("connection closed mid-frame");
+        }
+        filled += n;
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 || len > MAX_FRAME_BYTES {
+        bail!("implausible frame length {len}");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("truncated frame")?;
+    Ok(Some(payload))
+}
+
+/// Write a request as one frame.
+pub fn write_request(w: &mut impl Write, req: &Request) -> Result<()> {
+    write_frame(w, &encode_request(req))
+}
+
+/// Read a request frame; `Ok(None)` on clean EOF.
+pub fn read_request(r: &mut impl Read) -> Result<Option<Request>> {
+    match read_frame(r)? {
+        None => Ok(None),
+        Some(payload) => Ok(Some(decode_request(&payload)?)),
+    }
+}
+
+/// Write a response as one frame.
+pub fn write_response(w: &mut impl Write, resp: &Response) -> Result<()> {
+    write_frame(w, &encode_response(resp))
+}
+
+/// Read a response frame (EOF is an error — a reply was expected).
+pub fn read_response(r: &mut impl Read) -> Result<Response> {
+    match read_frame(r)? {
+        None => bail!("server closed the connection before replying"),
+        Some(payload) => decode_response(&payload),
+    }
+}
+
+// ----------------------------------------------------------------- encoding
+
+/// Serialize a request payload (version byte included, frame length not).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut b = vec![PROTO_VERSION];
+    match req {
+        Request::Push { shard, dim, data } => {
+            b.push(TAG_PUSH);
+            put_str(&mut b, shard);
+            b.extend_from_slice(&dim.to_le_bytes());
+            b.extend_from_slice(&(data.len() as u64).to_le_bytes());
+            for &v in data {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Request::Query(q) => {
+            b.push(TAG_QUERY);
+            b.extend_from_slice(&q.k.to_le_bytes());
+            b.extend_from_slice(&q.window.to_le_bytes());
+            b.extend_from_slice(&q.replicates.to_le_bytes());
+            b.push(q.seed.is_some() as u8);
+            b.extend_from_slice(&q.seed.unwrap_or(0).to_le_bytes());
+            b.extend_from_slice(&q.lo.to_le_bytes());
+            b.extend_from_slice(&q.hi.to_le_bytes());
+        }
+        Request::Snapshot { window } => {
+            b.push(TAG_SNAPSHOT);
+            b.extend_from_slice(&window.to_le_bytes());
+        }
+        Request::Roll => b.push(TAG_ROLL),
+        Request::Stats => b.push(TAG_STATS),
+        Request::Shutdown => b.push(TAG_SHUTDOWN),
+    }
+    b
+}
+
+/// Parse a request payload.
+pub fn decode_request(payload: &[u8]) -> Result<Request> {
+    let mut r = ByteReader::new(payload);
+    let version = r.u8()?;
+    if version != PROTO_VERSION {
+        bail!("unsupported protocol version {version} (this build speaks {PROTO_VERSION})");
+    }
+    let req = match r.u8()? {
+        TAG_PUSH => {
+            let shard = r.str(MAX_SHARD_BYTES)?;
+            if shard.is_empty() {
+                bail!("push: empty shard label");
+            }
+            let dim = r.u32()?;
+            if dim == 0 || dim as usize > MAX_DIM {
+                bail!("push: implausible dimension {dim}");
+            }
+            let len = r.u64()? as usize;
+            if len % dim as usize != 0 {
+                bail!("push: {len} values is not a whole number of {dim}-dim rows");
+            }
+            if len / dim as usize > MAX_PUSH_ROWS {
+                bail!("push: batch exceeds {MAX_PUSH_ROWS} rows");
+            }
+            let data = r.f64_vec(len)?;
+            Request::Push { shard, dim, data }
+        }
+        TAG_QUERY => {
+            let k = r.u32()?;
+            let window = r.u32()?;
+            let replicates = r.u32()?;
+            let has_seed = r.u8()? != 0;
+            let seed_raw = r.u64()?;
+            let lo = r.f64()?;
+            let hi = r.f64()?;
+            Request::Query(QuerySpec {
+                k,
+                window,
+                replicates,
+                seed: has_seed.then_some(seed_raw),
+                lo,
+                hi,
+            })
+        }
+        TAG_SNAPSHOT => Request::Snapshot { window: r.u32()? },
+        TAG_ROLL => Request::Roll,
+        TAG_STATS => Request::Stats,
+        TAG_SHUTDOWN => Request::Shutdown,
+        tag => bail!("unknown request tag {tag}"),
+    };
+    r.finish()?;
+    Ok(req)
+}
+
+/// Serialize a response payload.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut b = vec![PROTO_VERSION];
+    match resp {
+        Response::Error(msg) => {
+            b.push(STATUS_ERR);
+            put_str(&mut b, msg);
+        }
+        Response::PushAck {
+            shard_rows,
+            total_rows,
+        } => {
+            b.push(STATUS_OK);
+            b.push(TAG_PUSH);
+            b.extend_from_slice(&shard_rows.to_le_bytes());
+            b.extend_from_slice(&total_rows.to_le_bytes());
+        }
+        Response::Centroids(c) => {
+            b.push(STATUS_OK);
+            b.push(TAG_QUERY);
+            b.extend_from_slice(&c.k.to_le_bytes());
+            b.extend_from_slice(&c.dim.to_le_bytes());
+            b.extend_from_slice(&c.objective.to_le_bytes());
+            b.extend_from_slice(&c.rows.to_le_bytes());
+            b.extend_from_slice(&c.epochs.to_le_bytes());
+            b.push(c.cached as u8);
+            for &v in &c.centroids {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+            for &v in &c.weights {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Response::Snapshot(bytes) => {
+            b.push(STATUS_OK);
+            b.push(TAG_SNAPSHOT);
+            b.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+            b.extend_from_slice(bytes);
+        }
+        Response::RollAck { epoch, rows_closed } => {
+            b.push(STATUS_OK);
+            b.push(TAG_ROLL);
+            b.extend_from_slice(&epoch.to_le_bytes());
+            b.extend_from_slice(&rows_closed.to_le_bytes());
+        }
+        Response::Stats(s) => {
+            b.push(STATUS_OK);
+            b.push(TAG_STATS);
+            b.extend_from_slice(&s.epoch.to_le_bytes());
+            b.extend_from_slice(&s.rows_total.to_le_bytes());
+            b.extend_from_slice(&s.epochs_held.to_le_bytes());
+            b.extend_from_slice(&s.cache_hits.to_le_bytes());
+            b.extend_from_slice(&s.cache_misses.to_le_bytes());
+            b.extend_from_slice(&(s.shards.len() as u32).to_le_bytes());
+            for (label, rows) in &s.shards {
+                put_str(&mut b, label);
+                b.extend_from_slice(&rows.to_le_bytes());
+            }
+        }
+        Response::ShutdownAck => {
+            b.push(STATUS_OK);
+            b.push(TAG_SHUTDOWN);
+        }
+    }
+    b
+}
+
+/// Parse a response payload.
+pub fn decode_response(payload: &[u8]) -> Result<Response> {
+    let mut r = ByteReader::new(payload);
+    let version = r.u8()?;
+    if version != PROTO_VERSION {
+        bail!("unsupported protocol version {version} (this build speaks {PROTO_VERSION})");
+    }
+    let status = r.u8()?;
+    if status == STATUS_ERR {
+        let msg = r.str(1 << 16)?;
+        r.finish()?;
+        return Ok(Response::Error(msg));
+    }
+    if status != STATUS_OK {
+        bail!("unknown response status {status}");
+    }
+    let resp = match r.u8()? {
+        TAG_PUSH => Response::PushAck {
+            shard_rows: r.u64()?,
+            total_rows: r.u64()?,
+        },
+        TAG_QUERY => {
+            let k = r.u32()?;
+            let dim = r.u32()?;
+            if k as usize > 1 << 16 || dim as usize > MAX_DIM {
+                bail!("implausible centroid report ({k} × {dim})");
+            }
+            let objective = r.f64()?;
+            let rows = r.u64()?;
+            let epochs = r.u32()?;
+            let cached = r.u8()? != 0;
+            let centroids = r.f64_vec(k as usize * dim as usize)?;
+            let weights = r.f64_vec(k as usize)?;
+            Response::Centroids(CentroidReport {
+                centroids,
+                k,
+                dim,
+                weights,
+                objective,
+                rows,
+                epochs,
+                cached,
+            })
+        }
+        TAG_SNAPSHOT => {
+            let len = r.u64()? as usize;
+            Response::Snapshot(r.bytes(len)?)
+        }
+        TAG_ROLL => Response::RollAck {
+            epoch: r.u64()?,
+            rows_closed: r.u64()?,
+        },
+        TAG_STATS => {
+            let epoch = r.u64()?;
+            let rows_total = r.u64()?;
+            let epochs_held = r.u32()?;
+            let cache_hits = r.u64()?;
+            let cache_misses = r.u64()?;
+            let n = r.u32()? as usize;
+            if n > 1 << 20 {
+                bail!("implausible shard count {n}");
+            }
+            let mut shards = Vec::with_capacity(n);
+            for _ in 0..n {
+                let label = r.str(MAX_SHARD_BYTES)?;
+                let rows = r.u64()?;
+                shards.push((label, rows));
+            }
+            Response::Stats(StatsReport {
+                epoch,
+                rows_total,
+                epochs_held,
+                cache_hits,
+                cache_misses,
+                shards,
+            })
+        }
+        TAG_SHUTDOWN => Response::ShutdownAck,
+        tag => bail!("unknown response tag {tag}"),
+    };
+    r.finish()?;
+    Ok(resp)
+}
+
+// --------------------------------------------------------------- primitives
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    b.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    b.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked sequential reader over a frame payload.
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.at < n {
+            bail!(
+                "truncated message: wanted {n} bytes at offset {}, have {}",
+                self.at,
+                self.buf.len() - self.at
+            );
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self, cap: usize) -> Result<String> {
+        let len = self.u32()? as usize;
+        if len > cap {
+            bail!("implausible string field ({len} bytes)");
+        }
+        String::from_utf8(self.take(len)?.to_vec()).context("non-UTF-8 string field")
+    }
+
+    fn bytes(&mut self, len: usize) -> Result<Vec<u8>> {
+        if len > MAX_FRAME_BYTES {
+            bail!("implausible byte field ({len} bytes)");
+        }
+        Ok(self.take(len)?.to_vec())
+    }
+
+    fn f64_vec(&mut self, len: usize) -> Result<Vec<f64>> {
+        if len > MAX_FRAME_BYTES / 8 {
+            bail!("implausible f64 vector ({len} values)");
+        }
+        let raw = self.take(len * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Require the payload to be fully consumed (catches length confusion).
+    fn finish(&self) -> Result<()> {
+        if self.at != self.buf.len() {
+            bail!(
+                "{} trailing bytes after message body",
+                self.buf.len() - self.at
+            );
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,191 @@
+//! The TCP accept loop and per-connection handlers.
+//!
+//! One OS thread per connection (connections are few and long-lived: shard
+//! pushers and query clients), with every blocking read bounded by a short
+//! timeout so handlers poll the shutdown flag instead of parking forever —
+//! a CI smoke run can always terminate the server, and a wedged client
+//! cannot pin a handler past shutdown.
+//!
+//! Shutdown is cooperative: the handler that receives a shutdown request
+//! acks it, raises the flag, and dials the listener once to wake the
+//! accept loop; the loop then stops accepting and joins every handler.
+
+use super::proto::{self, Request, Response};
+use super::state::SketchService;
+use crate::linalg::Mat;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How often a blocked handler read re-checks the shutdown flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(200);
+
+/// Run the service on an already-bound listener until a shutdown request
+/// arrives. Returns the number of connections served.
+pub fn serve(listener: TcpListener, service: Arc<SketchService>) -> Result<u64> {
+    let addr = listener.local_addr().context("listener address")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handlers = Vec::new();
+    let mut served = 0u64;
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("accept error: {e}");
+                continue;
+            }
+        };
+        served += 1;
+        // Reap finished handlers so a long-lived server taking many
+        // short-lived connections does not grow this Vec without bound.
+        handlers.retain(|h| !h.is_finished());
+        let service = Arc::clone(&service);
+        let stop = Arc::clone(&stop);
+        handlers.push(std::thread::spawn(move || {
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "?".into());
+            if let Err(e) = handle_connection(stream, &service, &stop, addr) {
+                eprintln!("connection {peer}: {e:#}");
+            }
+        }));
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+    Ok(served)
+}
+
+/// Serve one connection until the peer hangs up or shutdown is flagged.
+fn handle_connection(
+    mut stream: TcpStream,
+    service: &SketchService,
+    stop: &AtomicBool,
+    listen_addr: SocketAddr,
+) -> Result<()> {
+    stream
+        .set_read_timeout(Some(POLL_INTERVAL))
+        .context("set read timeout")?;
+    // Bounded writes too: a peer that sends a query but never reads the
+    // reply must error this handler out, not pin it past shutdown.
+    stream
+        .set_write_timeout(Some(Duration::from_secs(30)))
+        .context("set write timeout")?;
+    stream.set_nodelay(true).ok();
+    loop {
+        let payload = match read_frame_interruptible(&mut stream, stop)? {
+            Some(p) => p,
+            None => return Ok(()), // clean EOF or shutdown while idle
+        };
+        // Decode errors are protocol-level: report and keep the connection
+        // (framing is intact — the bad frame was fully consumed).
+        let response = match proto::decode_request(&payload) {
+            Err(e) => Response::Error(format!("{e:#}")),
+            Ok(Request::Shutdown) => {
+                proto::write_response(&mut stream, &Response::ShutdownAck)?;
+                stop.store(true, Ordering::SeqCst);
+                // Wake the accept loop so it observes the flag. An
+                // unspecified bind address (0.0.0.0) is not connectable on
+                // every platform — dial loopback on the same port instead.
+                let mut wake = listen_addr;
+                if wake.ip().is_unspecified() {
+                    wake.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST));
+                }
+                let _ = TcpStream::connect(wake);
+                return Ok(());
+            }
+            Ok(req) => match handle_request(service, req) {
+                Ok(resp) => resp,
+                Err(e) => Response::Error(format!("{e:#}")),
+            },
+        };
+        proto::write_response(&mut stream, &response)?;
+    }
+}
+
+/// Dispatch one request against the shared state.
+fn handle_request(service: &SketchService, req: Request) -> Result<Response> {
+    Ok(match req {
+        Request::Push { shard, dim, data } => {
+            let rows = data.len() / dim as usize;
+            let batch = Mat::from_vec(rows, dim as usize, data);
+            let (shard_rows, total_rows) = service.ingest(&shard, &batch)?;
+            Response::PushAck {
+                shard_rows,
+                total_rows,
+            }
+        }
+        Request::Query(spec) => Response::Centroids(service.query(&spec)?),
+        Request::Snapshot { window } => Response::Snapshot(service.snapshot(window)?),
+        Request::Roll => {
+            let (epoch, rows_closed) = service.roll_epoch();
+            Response::RollAck { epoch, rows_closed }
+        }
+        Request::Stats => Response::Stats(service.stats()),
+        Request::Shutdown => unreachable!("handled by the connection loop"),
+    })
+}
+
+/// Read one frame, tolerating read timeouts between bytes so the shutdown
+/// flag is observed. `Ok(None)` on clean EOF, or on shutdown while no
+/// frame is in flight (a shutdown mid-frame abandons the connection —
+/// it is ending anyway).
+fn read_frame_interruptible(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    if !read_full(stream, &mut len_buf, stop, true)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 || len > proto::MAX_FRAME_BYTES {
+        bail!("implausible frame length {len}");
+    }
+    let mut payload = vec![0u8; len];
+    if !read_full(stream, &mut payload, stop, false)? {
+        return Ok(None);
+    }
+    Ok(Some(payload))
+}
+
+/// Fill `buf`, polling `stop` on every timeout. Returns `false` on clean
+/// EOF before the first byte (only if `eof_ok`) or on shutdown; errors on
+/// EOF mid-buffer.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    eof_ok: bool,
+) -> Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 && eof_ok {
+                    return Ok(false);
+                }
+                bail!("connection closed mid-frame ({filled} of {} bytes)", buf.len());
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(false);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("read frame"),
+        }
+    }
+    Ok(true)
+}

@@ -1,0 +1,385 @@
+//! Server state: shard accumulators, epoch windows, and the centroid cache.
+//!
+//! ## State model
+//!
+//! * **Shards.** Every push names a *shard* — the client's partition label
+//!   (a sensor, a data file, a connection). Each shard owns one
+//!   [`PooledSketch`] accumulator per epoch plus one all-time accumulator,
+//!   so a query can be answered from any subset of shards and epochs
+//!   without re-encoding anything.
+//! * **Epochs.** [`SketchService::roll_epoch`] freezes the open epoch's
+//!   per-shard accumulators into a ring of closed epochs (capacity
+//!   [`ServiceConfig::epoch_capacity`], oldest evicted). A query window of
+//!   `E` merges the open epoch plus the `E − 1` newest closed epochs;
+//!   window `0` uses the all-time accumulators, which never evict.
+//! * **Cache.** Decoding is the only expensive operation, and the sketch
+//!   is a *sufficient statistic*: the decode is a pure function of (pooled
+//!   bits, decoder configuration). The cache therefore keys on the FNV
+//!   fingerprint of the merged window's exact (count, sum-bits) plus the
+//!   [`QuerySpec`] fields — repeated queries against an unchanged window
+//!   are answered without running CL-OMPR, and any push or roll that
+//!   changes the pooled bits changes the key, so stale hits are
+//!   impossible by construction.
+//!
+//! ## Determinism
+//!
+//! Merges happen in a stable order — epochs chronologically, shards in
+//! `BTreeMap` key order within each epoch — and each push batch is encoded
+//! through the fixed-chunk [`sketch_into_par`] fold. Given the same rows
+//! per shard, the merged sums are reproducible; for the ±1 quantized
+//! method the sums are exact integers, so they are bit-for-bit identical
+//! to the offline pipeline *regardless of how pushes are batched or
+//! interleaved across connections* (float addition of small integers is
+//! order-invariant). Dense methods additionally require the same per-shard
+//! batch sequence for bitwise equality, like any floating-point fold.
+//!
+//! [`sketch_into_par`]: crate::sketch::SketchOperator::sketch_into_par
+
+use crate::clompr::{decode_best_of, ClOmprParams};
+use crate::linalg::Mat;
+use crate::parallel::Parallelism;
+use crate::rng::Rng;
+use crate::sketch::{PooledSketch, SketchOperator};
+use crate::stream::{pool_fingerprint, write_sketch_to, ShardRecord, SketchMeta};
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+
+use super::proto::{CentroidReport, QuerySpec, StatsReport, MAX_SHARD_BYTES};
+
+/// Tuning knobs for [`SketchService`].
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Closed epochs retained for windowed queries (the ring size).
+    pub epoch_capacity: usize,
+    /// Cached decodes retained (insertion-order eviction).
+    pub cache_capacity: usize,
+    /// Threads for the per-push parallel encode (0 = all cores).
+    pub threads: Parallelism,
+    /// Decoder parameters for query answering (including its thread knob).
+    pub decode: ClOmprParams,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            epoch_capacity: 16,
+            cache_capacity: 32,
+            threads: Parallelism::serial(),
+            decode: ClOmprParams::default(),
+        }
+    }
+}
+
+/// A merged query/snapshot window: the pooled sketch, how many epochs went
+/// into it, and per-shard provenance.
+pub struct WindowPool {
+    pub pool: PooledSketch,
+    /// Epochs merged (1 = just the open epoch; for window 0 this counts
+    /// every epoch seen so far).
+    pub epochs: u32,
+    /// Per-shard row counts, in merge order.
+    pub provenance: Vec<ShardRecord>,
+}
+
+/// One closed epoch's per-shard accumulators.
+struct ClosedEpoch {
+    index: u64,
+    shards: BTreeMap<String, PooledSketch>,
+}
+
+/// Everything behind the state lock.
+struct Inner {
+    /// Index of the open epoch (0-based, incremented by each roll).
+    epoch_index: u64,
+    /// Open epoch: one accumulator per shard.
+    current: BTreeMap<String, PooledSketch>,
+    /// Closed epochs, oldest at the front, capped at `epoch_capacity`.
+    closed: VecDeque<ClosedEpoch>,
+    /// All-time accumulators — never evicted, the window-0 source.
+    alltime: BTreeMap<String, PooledSketch>,
+    /// Centroid cache: (key, report) in insertion order.
+    cache: VecDeque<(u64, CentroidReport)>,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+/// The shared, thread-safe server state. Cheap operations (merging a
+/// pre-encoded batch, cache lookups, stats) run under one mutex; the
+/// expensive ones (encoding a push batch, running CL-OMPR) run outside it,
+/// so concurrent connections only serialize on vector adds.
+pub struct SketchService {
+    op: SketchOperator,
+    meta: SketchMeta,
+    cfg: ServiceConfig,
+    inner: Mutex<Inner>,
+}
+
+impl SketchService {
+    /// `meta` must describe `op` (same fingerprint) — build both via
+    /// [`crate::stream::draw_operator`] + [`SketchMeta::for_operator`], or
+    /// from a `.qsk` header via [`SketchMeta::rebuild_operator`].
+    pub fn new(op: SketchOperator, meta: SketchMeta, cfg: ServiceConfig) -> Self {
+        assert_eq!(
+            meta.config_hash,
+            crate::stream::operator_fingerprint(&op),
+            "meta does not describe the operator"
+        );
+        Self {
+            op,
+            meta,
+            cfg,
+            inner: Mutex::new(Inner {
+                epoch_index: 0,
+                current: BTreeMap::new(),
+                closed: VecDeque::new(),
+                alltime: BTreeMap::new(),
+                cache: VecDeque::new(),
+                cache_hits: 0,
+                cache_misses: 0,
+            }),
+        }
+    }
+
+    /// The operator this service sketches with.
+    pub fn operator(&self) -> &SketchOperator {
+        &self.op
+    }
+
+    /// The operator's `.qsk` header description.
+    pub fn meta(&self) -> &SketchMeta {
+        &self.meta
+    }
+
+    /// Install a pre-existing pooled sketch (e.g. a snapshot from a
+    /// previous run) as shard `label`'s *all-time* history. Seed data
+    /// predates every epoch, so it participates in window-0 queries and
+    /// snapshots but not in windowed ones.
+    pub fn seed_with(&self, label: &str, pool: PooledSketch) -> Result<()> {
+        if pool.len() != self.op.sketch_len() {
+            bail!(
+                "seed sketch has {} slots, operator needs {}",
+                pool.len(),
+                self.op.sketch_len()
+            );
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .alltime
+            .entry(label.to_string())
+            .or_insert_with(|| PooledSketch::new(pool.len()))
+            .merge(&pool);
+        Ok(())
+    }
+
+    /// Ingest one row batch into `shard`. The encode runs on the calling
+    /// (connection) thread *outside* the state lock via the fixed-chunk
+    /// parallel fold; only the two accumulator merges hold the lock.
+    /// Returns the shard's all-time row count and the server's total.
+    pub fn ingest(&self, shard: &str, batch: &Mat) -> Result<(u64, u64)> {
+        if shard.is_empty() || shard.len() > MAX_SHARD_BYTES {
+            bail!("invalid shard label ({} bytes)", shard.len());
+        }
+        if batch.cols() != self.op.dim() {
+            bail!(
+                "push batch dimension {} does not match the operator dimension {}",
+                batch.cols(),
+                self.op.dim()
+            );
+        }
+        let mut partial = PooledSketch::new(self.op.sketch_len());
+        if batch.rows() > 0 {
+            self.op.sketch_into_par(batch, &mut partial, &self.cfg.threads);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let len = self.op.sketch_len();
+        inner
+            .current
+            .entry(shard.to_string())
+            .or_insert_with(|| PooledSketch::new(len))
+            .merge(&partial);
+        let shard_pool = inner
+            .alltime
+            .entry(shard.to_string())
+            .or_insert_with(|| PooledSketch::new(len));
+        shard_pool.merge(&partial);
+        let shard_rows = shard_pool.count();
+        let total_rows = inner.alltime.values().map(|p| p.count()).sum();
+        Ok((shard_rows, total_rows))
+    }
+
+    /// Close the open epoch into the ring (evicting the oldest beyond
+    /// capacity) and open the next. Returns the new open epoch's index and
+    /// the rows that were in the closed one.
+    pub fn roll_epoch(&self) -> (u64, u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let shards = std::mem::take(&mut inner.current);
+        let rows_closed = shards.values().map(|p| p.count()).sum();
+        let index = inner.epoch_index;
+        inner.closed.push_back(ClosedEpoch { index, shards });
+        while inner.closed.len() > self.cfg.epoch_capacity {
+            inner.closed.pop_front();
+        }
+        inner.epoch_index += 1;
+        (inner.epoch_index, rows_closed)
+    }
+
+    /// Merge a window into one pool, in the stable order: epochs
+    /// chronologically, shards in key order within each epoch (window 0:
+    /// the all-time shard accumulators in key order).
+    pub fn merge_window(&self, window: u32) -> WindowPool {
+        let inner = self.inner.lock().unwrap();
+        let mut pool = PooledSketch::new(self.op.sketch_len());
+        let mut provenance = Vec::new();
+        if window == 0 {
+            for (label, shard) in &inner.alltime {
+                pool.merge(shard);
+                provenance.push(ShardRecord {
+                    label: label.clone(),
+                    rows: shard.count(),
+                });
+            }
+            let epochs = inner.epoch_index + 1;
+            return WindowPool {
+                pool,
+                epochs: epochs.min(u32::MAX as u64) as u32,
+                provenance,
+            };
+        }
+        let closed_take = (window as usize - 1).min(inner.closed.len());
+        let skip = inner.closed.len() - closed_take;
+        for epoch in inner.closed.iter().skip(skip) {
+            for (label, shard) in &epoch.shards {
+                pool.merge(shard);
+                provenance.push(ShardRecord {
+                    label: format!("e{}/{label}", epoch.index),
+                    rows: shard.count(),
+                });
+            }
+        }
+        for (label, shard) in &inner.current {
+            pool.merge(shard);
+            provenance.push(ShardRecord {
+                label: format!("e{}/{label}", inner.epoch_index),
+                rows: shard.count(),
+            });
+        }
+        WindowPool {
+            pool,
+            epochs: closed_take as u32 + 1,
+            provenance,
+        }
+    }
+
+    /// Answer a decode query, consulting the centroid cache first. The
+    /// decode itself runs outside the state lock.
+    pub fn query(&self, spec: &QuerySpec) -> Result<CentroidReport> {
+        if spec.k == 0 {
+            bail!("query: need k >= 1");
+        }
+        if spec.k as usize > 4096 {
+            bail!("query: implausible k {}", spec.k);
+        }
+        if !(spec.lo <= spec.hi) {
+            bail!("query: lo {} must not exceed hi {}", spec.lo, spec.hi);
+        }
+        let window = self.merge_window(spec.window);
+        if window.pool.count() == 0 {
+            bail!(
+                "query: window {} pools zero rows (nothing pushed yet?)",
+                spec.window
+            );
+        }
+        let replicates = spec.replicates.max(1);
+        let seed = spec.seed.unwrap_or(self.meta.seed);
+        let key = cache_key(&window.pool, spec, replicates, seed);
+
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some((_, report)) = inner.cache.iter().find(|(k, _)| *k == key) {
+                let mut hit = report.clone();
+                hit.cached = true;
+                // The key covers the pooled bits, not the window spec: two
+                // windows with bit-identical pools share an entry, so the
+                // epoch bookkeeping must come from THIS merge, not the
+                // cached one.
+                hit.epochs = window.epochs;
+                inner.cache_hits += 1;
+                return Ok(hit);
+            }
+            inner.cache_misses += 1;
+        }
+
+        let dim = self.op.dim();
+        let z = window.pool.mean();
+        let sol = decode_best_of(
+            &self.op,
+            spec.k as usize,
+            &z,
+            vec![spec.lo; dim],
+            vec![spec.hi; dim],
+            &self.cfg.decode,
+            replicates as usize,
+            &mut Rng::new(seed),
+        );
+        let report = CentroidReport {
+            centroids: sol.centroids.as_slice().to_vec(),
+            k: spec.k,
+            dim: dim as u32,
+            weights: sol.weights,
+            objective: sol.objective,
+            rows: window.pool.count(),
+            epochs: window.epochs,
+            cached: false,
+        };
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.cache.iter().any(|(k, _)| *k == key) {
+            inner.cache.push_back((key, report.clone()));
+            while inner.cache.len() > self.cfg.cache_capacity {
+                inner.cache.pop_front();
+            }
+        }
+        Ok(report)
+    }
+
+    /// Serialize a window as `.qsk` bytes — the file `save_sketch` would
+    /// write, with per-shard provenance records, loadable by the offline
+    /// `qckm merge` / `qckm decode` stages.
+    pub fn snapshot(&self, window: u32) -> Result<Vec<u8>> {
+        let win = self.merge_window(window);
+        let mut bytes = Vec::new();
+        write_sketch_to(&mut bytes, &self.meta, &win.pool, &win.provenance)?;
+        Ok(bytes)
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> StatsReport {
+        let inner = self.inner.lock().unwrap();
+        StatsReport {
+            epoch: inner.epoch_index,
+            rows_total: inner.alltime.values().map(|p| p.count()).sum(),
+            epochs_held: inner.closed.len() as u32,
+            cache_hits: inner.cache_hits,
+            cache_misses: inner.cache_misses,
+            shards: inner
+                .alltime
+                .iter()
+                .map(|(label, p)| (label.clone(), p.count()))
+                .collect(),
+        }
+    }
+}
+
+/// Cache key: FNV over the merged window's exact pooled bits and every
+/// decode-relevant query field. Equal keys ⇒ identical mean sketch and
+/// decoder configuration ⇒ bit-identical decode, so hits are always sound.
+fn cache_key(pool: &PooledSketch, spec: &QuerySpec, replicates: u32, seed: u64) -> u64 {
+    let mut h = crate::stream::Fnv1a::new();
+    h.write_u64(pool_fingerprint(pool));
+    h.write_u64(spec.k as u64);
+    h.write_u64(replicates as u64);
+    h.write_u64(seed);
+    h.write_u64(spec.lo.to_bits());
+    h.write_u64(spec.hi.to_bits());
+    h.finish()
+}

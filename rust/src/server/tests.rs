@@ -1,0 +1,418 @@
+//! Unit tests for the sketch service: protocol round-trips and defensive
+//! decoding, shard/epoch/window state semantics, the centroid cache, the
+//! snapshot ⇄ `.qsk` bridge, concurrent-ingest determinism, and one
+//! in-process socket smoke (real `TcpListener`, no child processes —
+//! `rust/tests/server_e2e.rs` drives the actual binary).
+
+use super::proto::{self, CentroidReport, QuerySpec, Request, Response, StatsReport};
+use super::state::{ServiceConfig, SketchService};
+use crate::config::Method;
+use crate::frequency::FrequencyLaw;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::sketch::PooledSketch;
+use crate::stream::{draw_operator, read_sketch_from, SketchMeta};
+use std::sync::Arc;
+
+const DIM: usize = 4;
+const M: usize = 24;
+const SIGMA: f64 = 1.1;
+const SEED: u64 = 5;
+
+fn service(cfg: ServiceConfig) -> SketchService {
+    let op = draw_operator(Method::Qckm, FrequencyLaw::AdaptedRadius, M, DIM, SIGMA, SEED);
+    let meta = SketchMeta::for_operator(&op, Method::Qckm, SEED);
+    SketchService::new(op, meta, cfg)
+}
+
+fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.gaussian())
+}
+
+fn spec(k: u32, window: u32) -> QuerySpec {
+    QuerySpec {
+        k,
+        window,
+        replicates: 1,
+        seed: None,
+        lo: -2.0,
+        hi: 2.0,
+    }
+}
+
+// ------------------------------------------------------------------- proto
+
+#[test]
+fn proto_round_trips_every_request_variant() {
+    let requests = [
+        Request::Push {
+            shard: "sensor-7".into(),
+            dim: 3,
+            data: vec![1.5, -2.25, 0.0, 4.0, 5.0, -6.0],
+        },
+        Request::Query(QuerySpec {
+            k: 4,
+            window: 2,
+            replicates: 3,
+            seed: Some(99),
+            lo: -1.5,
+            hi: 1.5,
+        }),
+        Request::Query(spec(1, 0)),
+        Request::Snapshot { window: 7 },
+        Request::Roll,
+        Request::Stats,
+        Request::Shutdown,
+    ];
+    for req in &requests {
+        let bytes = proto::encode_request(req);
+        assert_eq!(&proto::decode_request(&bytes).unwrap(), req, "{req:?}");
+    }
+}
+
+#[test]
+fn proto_round_trips_every_response_variant() {
+    let responses = [
+        Response::Error("bad things".into()),
+        Response::PushAck {
+            shard_rows: 10,
+            total_rows: 30,
+        },
+        Response::Centroids(CentroidReport {
+            centroids: vec![0.5, -0.5, 1.0, -1.0],
+            k: 2,
+            dim: 2,
+            weights: vec![0.25, 0.75],
+            objective: 0.125,
+            rows: 1000,
+            epochs: 3,
+            cached: true,
+        }),
+        Response::Snapshot(vec![1, 2, 3, 4, 5]),
+        Response::RollAck {
+            epoch: 4,
+            rows_closed: 512,
+        },
+        Response::Stats(StatsReport {
+            epoch: 2,
+            rows_total: 77,
+            epochs_held: 2,
+            cache_hits: 5,
+            cache_misses: 6,
+            shards: vec![("a".into(), 40), ("b".into(), 37)],
+        }),
+        Response::ShutdownAck,
+    ];
+    for resp in &responses {
+        let bytes = proto::encode_response(resp);
+        assert_eq!(&proto::decode_response(&bytes).unwrap(), resp, "{resp:?}");
+    }
+}
+
+#[test]
+fn proto_rejects_malformed_payloads() {
+    // Wrong protocol version.
+    let mut bytes = proto::encode_request(&Request::Roll);
+    bytes[0] = 99;
+    assert!(proto::decode_request(&bytes).is_err());
+
+    // Unknown tag.
+    let mut bytes = proto::encode_request(&Request::Roll);
+    bytes[1] = 200;
+    assert!(proto::decode_request(&bytes).is_err());
+
+    // Truncated body.
+    let bytes = proto::encode_request(&Request::Query(spec(2, 0)));
+    assert!(proto::decode_request(&bytes[..bytes.len() - 1]).is_err());
+
+    // Trailing garbage.
+    let mut bytes = proto::encode_request(&Request::Stats);
+    bytes.push(0);
+    assert!(proto::decode_request(&bytes).is_err());
+
+    // Push payload not a whole number of rows.
+    let mut ok = proto::encode_request(&Request::Push {
+        shard: "s".into(),
+        dim: 3,
+        data: vec![0.0; 6],
+    });
+    // dim lives right after the 1-byte version, 1-byte tag, 4+1 byte label.
+    ok[7] = 4; // now 6 values over dim 4
+    assert!(proto::decode_request(&ok).is_err());
+
+    // Oversized frame length on the wire.
+    let mut wire = Vec::new();
+    wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+    wire.extend_from_slice(&[0u8; 16]);
+    assert!(proto::read_frame(&mut &wire[..]).is_err());
+
+    // Clean EOF is None, mid-length EOF is an error.
+    assert!(proto::read_frame(&mut &[][..]).unwrap().is_none());
+    assert!(proto::read_frame(&mut &[1u8, 0][..]).is_err());
+}
+
+// ------------------------------------------------------------------- state
+
+#[test]
+fn ingest_pools_exactly_like_the_offline_sketch() {
+    let svc = service(ServiceConfig::default());
+    let x = random_mat(500, DIM, 1);
+    let a = x.select_rows(&(0..213).collect::<Vec<_>>());
+    let b = x.select_rows(&(213..500).collect::<Vec<_>>());
+    svc.ingest("a", &a).unwrap();
+    svc.ingest("b", &b).unwrap();
+
+    let win = svc.merge_window(0);
+    assert_eq!(win.pool.count(), 500);
+    let mut want = PooledSketch::new(svc.operator().sketch_len());
+    svc.operator().sketch_into(&x, &mut want);
+    // ±1 contributions sum to exact integers: shard order cannot matter.
+    assert_eq!(win.pool.sum(), want.sum());
+    let labels: Vec<&str> = win.provenance.iter().map(|r| r.label.as_str()).collect();
+    assert_eq!(labels, ["a", "b"], "stable shard-key merge order");
+}
+
+#[test]
+fn ingest_rejects_wrong_dimension_and_bad_labels() {
+    let svc = service(ServiceConfig::default());
+    assert!(svc.ingest("s", &random_mat(5, DIM + 1, 2)).is_err());
+    assert!(svc.ingest("", &random_mat(5, DIM, 2)).is_err());
+    assert!(svc.ingest(&"x".repeat(300), &random_mat(5, DIM, 2)).is_err());
+}
+
+#[test]
+fn windows_partition_epochs_and_ring_evicts_oldest() {
+    let svc = service(ServiceConfig {
+        epoch_capacity: 2,
+        ..ServiceConfig::default()
+    });
+    let xs: Vec<Mat> = (0..3).map(|i| random_mat(100 + i, DIM, 10 + i as u64)).collect();
+
+    svc.ingest("s", &xs[0]).unwrap();
+    let (epoch, closed) = svc.roll_epoch();
+    assert_eq!((epoch, closed), (1, 100));
+    svc.ingest("s", &xs[1]).unwrap();
+    svc.roll_epoch();
+    svc.ingest("s", &xs[2]).unwrap();
+
+    // window 1 = open epoch only; window 2 = + newest closed; 0 = all-time.
+    assert_eq!(svc.merge_window(1).pool.count(), 102);
+    assert_eq!(svc.merge_window(2).pool.count(), 102 + 101);
+    assert_eq!(svc.merge_window(3).pool.count(), 102 + 101 + 100);
+    assert_eq!(svc.merge_window(0).pool.count(), 303);
+    // Asking past the ring clamps to what is held.
+    assert_eq!(svc.merge_window(99).pool.count(), 303);
+
+    // A third roll evicts epoch 0 from the ring; all-time keeps it.
+    svc.roll_epoch();
+    assert_eq!(svc.merge_window(99).pool.count(), 102 + 101);
+    assert_eq!(svc.merge_window(0).pool.count(), 303);
+    assert_eq!(svc.stats().epochs_held, 2);
+
+    // Windowed provenance is epoch-labelled, chronological.
+    svc.ingest("s", &random_mat(7, DIM, 20)).unwrap();
+    let win = svc.merge_window(3);
+    let labels: Vec<&str> = win.provenance.iter().map(|r| r.label.as_str()).collect();
+    assert_eq!(labels, ["e1/s", "e2/s", "e3/s"]);
+    assert_eq!(win.epochs, 3);
+}
+
+#[test]
+fn query_decodes_and_caches_until_the_pool_changes() {
+    let svc = service(ServiceConfig::default());
+    let mut rng = Rng::new(3);
+    let data = crate::data::gaussian_mixture_pm1(600, DIM, 2, &mut rng);
+    svc.ingest("s", &data.points).unwrap();
+
+    let first = svc.query(&spec(2, 0)).unwrap();
+    assert!(!first.cached);
+    assert_eq!(first.rows, 600);
+    assert_eq!(first.dim as usize, DIM);
+    assert_eq!(first.centroids.len(), 2 * DIM);
+
+    let second = svc.query(&spec(2, 0)).unwrap();
+    assert!(second.cached, "unchanged window must be served from cache");
+    assert_eq!(second.centroids, first.centroids);
+    assert_eq!(second.objective.to_bits(), first.objective.to_bits());
+
+    // A different decode configuration is a different cache entry.
+    let other = svc.query(&spec(1, 0)).unwrap();
+    assert!(!other.cached);
+
+    // New rows change the pooled bits — the stale entry can never hit.
+    svc.ingest("s", &random_mat(50, DIM, 4)).unwrap();
+    let third = svc.query(&spec(2, 0)).unwrap();
+    assert!(!third.cached);
+    assert_eq!(third.rows, 650);
+
+    let stats = svc.stats();
+    assert_eq!(stats.cache_hits, 1);
+    assert_eq!(stats.cache_misses, 3);
+}
+
+#[test]
+fn query_validates_inputs_and_empty_windows() {
+    let svc = service(ServiceConfig::default());
+    assert!(svc.query(&spec(0, 0)).is_err(), "k = 0");
+    assert!(svc
+        .query(&QuerySpec {
+            lo: 1.0,
+            hi: -1.0,
+            ..spec(2, 0)
+        })
+        .is_err());
+    assert!(svc.query(&spec(2, 0)).is_err(), "nothing pushed yet");
+    svc.ingest("s", &random_mat(10, DIM, 5)).unwrap();
+    svc.roll_epoch();
+    assert!(svc.query(&spec(2, 1)).is_err(), "open epoch is empty");
+    assert!(svc.query(&spec(2, 0)).is_ok());
+}
+
+#[test]
+fn snapshot_bytes_are_a_loadable_qsk_with_provenance() {
+    let svc = service(ServiceConfig::default());
+    let x = random_mat(300, DIM, 6);
+    svc.ingest("shard-a", &x).unwrap();
+
+    let bytes = svc.snapshot(0).unwrap();
+    let mut cursor = &bytes[..];
+    let (meta, pool, prov) = read_sketch_from(&mut cursor, "snapshot").unwrap();
+    assert!(cursor.is_empty());
+    assert_eq!(&meta, svc.meta());
+    assert_eq!(pool.count(), 300);
+    let mut want = PooledSketch::new(svc.operator().sketch_len());
+    svc.operator().sketch_into(&x, &mut want);
+    assert_eq!(pool.sum(), want.sum());
+    assert_eq!(prov.len(), 1);
+    assert_eq!(prov[0].label, "shard-a");
+    assert_eq!(prov[0].rows, 300);
+
+    // The rebuilt operator matches — a snapshot decodes offline.
+    assert!(meta.rebuild_operator().is_ok());
+}
+
+#[test]
+fn seeding_restores_a_snapshot_into_alltime_only() {
+    let svc = service(ServiceConfig::default());
+    let x = random_mat(200, DIM, 7);
+    svc.ingest("s", &x).unwrap();
+    let bytes = svc.snapshot(0).unwrap();
+    let (_, pool, _) = read_sketch_from(&mut &bytes[..], "snap").unwrap();
+
+    let restored = service(ServiceConfig::default());
+    restored.seed_with("seed", pool).unwrap();
+    assert_eq!(restored.merge_window(0).pool.sum(), svc.merge_window(0).pool.sum());
+    // Seed history predates every epoch: windowed queries exclude it.
+    assert_eq!(restored.merge_window(1).pool.count(), 0);
+
+    // Wrong-length seeds are refused.
+    assert!(restored.seed_with("bad", PooledSketch::new(4)).is_err());
+}
+
+// ----------------------------------------------------------- concurrency
+
+/// N client threads pushing disjoint shards in randomized batch sizes and
+/// interleavings must produce the merged sketch — and decoded centroids —
+/// of the single-threaded reference, bit for bit (±1 contributions pool
+/// as exact integers).
+#[test]
+fn concurrent_ingest_is_bitwise_deterministic() {
+    let mut rng = Rng::new(8);
+    let data = crate::data::gaussian_mixture_pm1(1200, DIM, 2, &mut rng);
+    let shards: Vec<(String, Mat)> = (0..4)
+        .map(|s| {
+            let rows: Vec<usize> = (s * 300..(s + 1) * 300).collect();
+            (format!("shard-{s}"), data.points.select_rows(&rows))
+        })
+        .collect();
+
+    // Single-threaded reference: one push per shard, in order.
+    let reference = service(ServiceConfig::default());
+    for (label, x) in &shards {
+        reference.ingest(label, x).unwrap();
+    }
+    let ref_win = reference.merge_window(0);
+    let ref_decode = reference.query(&spec(2, 0)).unwrap();
+
+    for trial in 0..3u64 {
+        let svc = Arc::new(service(ServiceConfig::default()));
+        std::thread::scope(|scope| {
+            for (t, (label, x)) in shards.iter().enumerate() {
+                let svc = Arc::clone(&svc);
+                scope.spawn(move || {
+                    // Randomized batch splits per trial/thread: pushes from
+                    // different shards interleave arbitrarily at the lock.
+                    let mut rng = Rng::new(trial * 31 + t as u64);
+                    let mut at = 0;
+                    while at < x.rows() {
+                        let take = (1 + rng.next_below(96) as usize).min(x.rows() - at);
+                        let rows: Vec<usize> = (at..at + take).collect();
+                        svc.ingest(label, &x.select_rows(&rows)).unwrap();
+                        at += take;
+                    }
+                });
+            }
+        });
+        let win = svc.merge_window(0);
+        assert_eq!(win.pool.count(), 1200, "trial {trial}");
+        assert_eq!(win.pool.sum(), ref_win.pool.sum(), "trial {trial} sums deviated");
+        let decode = svc.query(&spec(2, 0)).unwrap();
+        assert_eq!(
+            decode.centroids, ref_decode.centroids,
+            "trial {trial} centroids deviated"
+        );
+        assert_eq!(decode.objective.to_bits(), ref_decode.objective.to_bits());
+    }
+}
+
+// ------------------------------------------------------------ socket smoke
+
+/// Full loop over a real socket: serve on an ephemeral port, push from two
+/// concurrent client connections, query, snapshot, stats, shutdown — all
+/// in-process.
+#[test]
+fn socket_smoke_push_query_snapshot_shutdown() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let svc = Arc::new(service(ServiceConfig::default()));
+    let server = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || super::serve(listener, svc).unwrap())
+    };
+
+    let mut rng = Rng::new(9);
+    let data = crate::data::gaussian_mixture_pm1(800, DIM, 2, &mut rng);
+    let a = data.points.select_rows(&(0..400).collect::<Vec<_>>());
+    let b = data.points.select_rows(&(400..800).collect::<Vec<_>>());
+
+    // Two concurrent pushing connections.
+    std::thread::scope(|scope| {
+        for (label, x) in [("a", &a), ("b", &b)] {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut client = super::Client::connect(&addr).unwrap();
+                let (shard_rows, _) = client.push(label, x).unwrap();
+                assert_eq!(shard_rows, 400);
+            });
+        }
+    });
+
+    let mut client = super::Client::connect(&addr).unwrap();
+    let report = client.query(&spec(2, 0)).unwrap();
+    assert_eq!(report.rows, 800);
+    assert_eq!(report.centroids, svc.query(&spec(2, 0)).unwrap().centroids);
+
+    let bytes = client.snapshot(0).unwrap();
+    let (meta, pool, _) = read_sketch_from(&mut &bytes[..], "snap").unwrap();
+    assert_eq!(&meta, svc.meta());
+    assert_eq!(pool.count(), 800);
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.rows_total, 800);
+    assert_eq!(stats.shards.len(), 2);
+
+    client.shutdown().unwrap();
+    let served = server.join().unwrap();
+    assert!(served >= 3, "served {served} connections");
+}

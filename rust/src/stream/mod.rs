@@ -42,9 +42,11 @@ mod qsk;
 mod reader;
 
 pub use qsk::{
-    draw_operator, load_sketch, operator_fingerprint, save_sketch, SketchMeta, QSK_MAGIC,
-    QSK_VERSION,
+    draw_operator, load_sketch, load_sketch_full, operator_fingerprint, pool_fingerprint,
+    read_sketch_from, save_sketch, save_sketch_with, write_sketch_to, ShardRecord, SketchMeta,
+    MAX_LABEL_BYTES, QSK_MAGIC, QSK_VERSION, QSK_VERSION_V1,
 };
+pub(crate) use qsk::Fnv1a;
 pub use reader::{
     open_dataset, read_all, ChunkedReader, CsvChunkedReader, MatChunkedReader, RawF64ChunkedReader,
 };

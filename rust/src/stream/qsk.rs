@@ -7,13 +7,14 @@
 //! merging with a sketch of a different operator and (b) rebuild the exact
 //! operator for decoding — so acquisition, merging and decoding can run as
 //! separate processes on separate machines (`qckm sketch` / `qckm merge` /
-//! `qckm decode`).
+//! `qckm decode`), and a live `qckm serve` node can be seeded from, and
+//! drained back into, the same offline pipeline.
 //!
 //! ## Layout (all little-endian)
 //!
 //! ```text
 //! magic       4  b"QSKF"
-//! version     u32   (currently 1)
+//! version     u32   (2; version-1 files still load, see below)
 //! method      u32 length + UTF-8   (ckm|qckm|triangle, see config::Method)
 //! law         u32 length + UTF-8   (frequency law name)
 //! sigma       f64   (kernel bandwidth the frequencies were scaled with)
@@ -23,9 +24,18 @@
 //! count       u64   (examples pooled into the sum)
 //! config_hash u64   (fingerprint of the drawn Ω/ξ + signature, see
 //!                    [`operator_fingerprint`])
+//! prov_count  u32   (v2: number of provenance records, may be 0)
+//! prov[i]     u32 length + UTF-8 label, u64 rows   (v2: where the pooled
+//!                    rows came from — shard files, server shard labels)
 //! payload     2M × f64   (the *sum* of contributions — not the mean, so
 //!                         merges stay exact)
+//! checksum    u64   (v2: FNV-1a over count + the exact payload bits, so a
+//!                    flipped payload byte fails loudly instead of decoding
+//!                    garbage centroids)
 //! ```
+//!
+//! Version-1 files (no provenance, no checksum) still load; the writer
+//! always emits version 2.
 //!
 //! The `config_hash` covers the actual frequency matrix bits, so two
 //! sketches merge only if they were drawn from the *same* randomness —
@@ -42,8 +52,12 @@ use std::path::Path;
 
 /// File magic: "QSK file".
 pub const QSK_MAGIC: [u8; 4] = *b"QSKF";
-/// Current format version.
-pub const QSK_VERSION: u32 = 1;
+/// Current format version (checksummed payload + provenance records).
+pub const QSK_VERSION: u32 = 2;
+/// The original format version (still readable).
+pub const QSK_VERSION_V1: u32 = 1;
+/// Longest accepted provenance label, in bytes.
+pub const MAX_LABEL_BYTES: usize = 256;
 
 /// Everything a `.qsk` header records about how its sketch was produced.
 #[derive(Clone, Debug, PartialEq)]
@@ -62,6 +76,17 @@ pub struct SketchMeta {
     pub d: u64,
     /// Fingerprint of the drawn operator (see [`operator_fingerprint`]).
     pub config_hash: u64,
+}
+
+/// One provenance record: a labelled row count that went into the pool
+/// (a shard file, a server shard, a seeded snapshot…). Purely descriptive —
+/// merges concatenate records and never interpret them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardRecord {
+    /// Human-readable origin (shard label, file stem, `e{epoch}/{shard}`).
+    pub label: String,
+    /// Rows this origin contributed.
+    pub rows: u64,
 }
 
 impl SketchMeta {
@@ -140,8 +165,8 @@ impl SketchMeta {
 
 /// Draw the sketch operator as a pure function of
 /// `(method, law, m, d, sigma, seed)` — the `.qsk` reproducibility
-/// contract. Every stage (shard sketchers, the decoder) calls this with
-/// the same arguments and gets the bit-identical Ω and ξ.
+/// contract. Every stage (shard sketchers, the decoder, the live server)
+/// calls this with the same arguments and gets the bit-identical Ω and ξ.
 pub fn draw_operator(
     method: Method,
     law: FrequencyLaw,
@@ -177,26 +202,39 @@ pub fn operator_fingerprint(op: &SketchOperator) -> u64 {
     h.finish()
 }
 
+/// FNV-1a fingerprint of a pool's exact contents (count + sum bits). This
+/// is what the v2 payload checksum stores, and what the server's centroid
+/// cache keys on: equal fingerprints ⇒ bit-identical mean sketch ⇒
+/// bit-identical decode.
+pub fn pool_fingerprint(pool: &PooledSketch) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_u64(pool.count());
+    for &v in pool.sum() {
+        h.write_u64(v.to_bits());
+    }
+    h.finish()
+}
+
 /// Minimal FNV-1a (64-bit) — stable, dependency-free, endian-independent.
-struct Fnv1a(u64);
+pub(crate) struct Fnv1a(u64);
 
 impl Fnv1a {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self(0xcbf2_9ce4_8422_2325)
     }
 
-    fn write_bytes(&mut self, bytes: &[u8]) {
+    pub(crate) fn write_bytes(&mut self, bytes: &[u8]) {
         for &b in bytes {
             self.0 ^= b as u64;
             self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
         }
     }
 
-    fn write_u64(&mut self, v: u64) {
+    pub(crate) fn write_u64(&mut self, v: u64) {
         self.write_bytes(&v.to_le_bytes());
     }
 
-    fn finish(&self) -> u64 {
+    pub(crate) fn finish(&self) -> u64 {
         self.0
     }
 }
@@ -205,6 +243,51 @@ impl Fnv1a {
 
 /// Write a pooled sketch (its *sum*, not its mean) plus metadata to `path`.
 pub fn save_sketch(path: &Path, meta: &SketchMeta, pool: &PooledSketch) -> Result<()> {
+    save_sketch_with(path, meta, pool, &[])
+}
+
+/// Like [`save_sketch`], with provenance records describing where the
+/// pooled rows came from.
+///
+/// Writes to a sibling `.tmp` file and renames into place, so a failed
+/// write (oversized label, disk full) can never destroy an existing
+/// sketch — `qckm sketch --append` rewrites its input in place and relies
+/// on this.
+pub fn save_sketch_with(
+    path: &Path,
+    meta: &SketchMeta,
+    pool: &PooledSketch,
+    provenance: &[ShardRecord],
+) -> Result<()> {
+    let mut tmp_name = path
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_else(|| "sketch.qsk".into());
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    let file =
+        std::fs::File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?;
+    let mut w = BufWriter::new(file);
+    let wrote = write_sketch_to(&mut w, meta, pool, provenance)
+        .and_then(|()| w.flush().map_err(anyhow::Error::from));
+    drop(w);
+    if let Err(e) = wrote {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+/// Serialize a `.qsk` (version 2) into any writer — the file format and the
+/// server's snapshot wire format are the same bytes.
+pub fn write_sketch_to(
+    w: &mut impl Write,
+    meta: &SketchMeta,
+    pool: &PooledSketch,
+    provenance: &[ShardRecord],
+) -> Result<()> {
     assert_eq!(
         pool.len() as u64,
         2 * meta.m,
@@ -212,67 +295,121 @@ pub fn save_sketch(path: &Path, meta: &SketchMeta, pool: &PooledSketch) -> Resul
         pool.len(),
         meta.m
     );
-    let file =
-        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
-    let mut w = BufWriter::new(file);
     w.write_all(&QSK_MAGIC)?;
     w.write_all(&QSK_VERSION.to_le_bytes())?;
-    write_str(&mut w, &meta.method)?;
-    write_str(&mut w, &meta.law)?;
+    write_str(w, &meta.method)?;
+    write_str(w, &meta.law)?;
     w.write_all(&meta.sigma.to_le_bytes())?;
     w.write_all(&meta.seed.to_le_bytes())?;
     w.write_all(&meta.m.to_le_bytes())?;
     w.write_all(&meta.d.to_le_bytes())?;
     w.write_all(&pool.count().to_le_bytes())?;
     w.write_all(&meta.config_hash.to_le_bytes())?;
+    w.write_all(&(provenance.len() as u32).to_le_bytes())?;
+    for rec in provenance {
+        if rec.label.len() > MAX_LABEL_BYTES {
+            bail!(
+                "provenance label '{}…' exceeds {MAX_LABEL_BYTES} bytes",
+                rec.label.chars().take(32).collect::<String>()
+            );
+        }
+        write_str(w, &rec.label)?;
+        w.write_all(&rec.rows.to_le_bytes())?;
+    }
     for &v in pool.sum() {
         w.write_all(&v.to_le_bytes())?;
     }
-    w.flush()?;
+    w.write_all(&pool_fingerprint(pool).to_le_bytes())?;
     Ok(())
 }
 
-/// Load a `.qsk` file, validating magic, version, and internal consistency.
+// ------------------------------------------------------------------ load
+
+/// Load a `.qsk` file, validating magic, version, checksum (v2), and
+/// internal consistency.
 pub fn load_sketch(path: &Path) -> Result<(SketchMeta, PooledSketch)> {
+    let (meta, pool, _prov) = load_sketch_full(path)?;
+    Ok((meta, pool))
+}
+
+/// Load a `.qsk` file including its provenance records (empty for v1
+/// files and for sketches saved without provenance).
+pub fn load_sketch_full(path: &Path) -> Result<(SketchMeta, PooledSketch, Vec<ShardRecord>)> {
     let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut r = BufReader::new(file);
+    let src = path.display().to_string();
+    let loaded = read_sketch_from(&mut r, &src)?;
+    let mut trailing = [0u8; 1];
+    if r.read(&mut trailing)? != 0 {
+        bail!("{src}: trailing bytes after sketch payload");
+    }
+    Ok(loaded)
+}
+
+/// Deserialize a `.qsk` from any reader (file or wire), consuming exactly
+/// the sketch's bytes. `src` labels error messages. Callers that require
+/// end-of-input (files, single-sketch frames) check for trailing bytes
+/// themselves.
+pub fn read_sketch_from(
+    r: &mut impl Read,
+    src: &str,
+) -> Result<(SketchMeta, PooledSketch, Vec<ShardRecord>)> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)
-        .with_context(|| format!("{}: truncated header", path.display()))?;
+        .with_context(|| format!("{src}: truncated header"))?;
     if magic != QSK_MAGIC {
-        bail!("{}: not a .qsk sketch file (bad magic)", path.display());
+        bail!("{src}: not a .qsk sketch file (bad magic)");
     }
-    let version = read_u32(&mut r, path)?;
-    if version != QSK_VERSION {
+    let version = read_u32(r, src)?;
+    if version != QSK_VERSION && version != QSK_VERSION_V1 {
         bail!(
-            "{}: unsupported .qsk format version {version} (this build reads {QSK_VERSION})",
-            path.display()
+            "{src}: unsupported .qsk format version {version} \
+             (this build reads {QSK_VERSION_V1} and {QSK_VERSION})"
         );
     }
-    let method = read_str(&mut r, path)?;
-    let law = read_str(&mut r, path)?;
-    let sigma = f64::from_le_bytes(read_8(&mut r, path)?);
-    let seed = u64::from_le_bytes(read_8(&mut r, path)?);
-    let m = u64::from_le_bytes(read_8(&mut r, path)?);
-    let d = u64::from_le_bytes(read_8(&mut r, path)?);
-    let count = u64::from_le_bytes(read_8(&mut r, path)?);
-    let config_hash = u64::from_le_bytes(read_8(&mut r, path)?);
+    let method = read_str(r, src, 64)?;
+    let law = read_str(r, src, 64)?;
+    let sigma = f64::from_le_bytes(read_8(r, src)?);
+    let seed = u64::from_le_bytes(read_8(r, src)?);
+    let m = u64::from_le_bytes(read_8(r, src)?);
+    let d = u64::from_le_bytes(read_8(r, src)?);
+    let count = u64::from_le_bytes(read_8(r, src)?);
+    let config_hash = u64::from_le_bytes(read_8(r, src)?);
     // Plausibility bounds before the payload allocation: a corrupt header
     // must fail cleanly, not OOM. 2^24 frequencies = a 256 MiB payload,
     // far beyond any real sketch (M ≲ 10⁴ in the paper's regime).
     if m == 0 || m > (1 << 24) {
-        bail!("{}: implausible frequency count m={m}", path.display());
+        bail!("{src}: implausible frequency count m={m}");
     }
     if d == 0 || d > (1 << 24) {
-        bail!("{}: implausible data dimension d={d}", path.display());
+        bail!("{src}: implausible data dimension d={d}");
+    }
+    let mut provenance = Vec::new();
+    if version >= QSK_VERSION {
+        let prov_count = read_u32(r, src)?;
+        if prov_count > (1 << 20) {
+            bail!("{src}: implausible provenance record count {prov_count}");
+        }
+        for _ in 0..prov_count {
+            let label = read_str(r, src, MAX_LABEL_BYTES)?;
+            let rows = u64::from_le_bytes(read_8(r, src)?);
+            provenance.push(ShardRecord { label, rows });
+        }
     }
     let mut sum = vec![0.0f64; 2 * m as usize];
     for v in sum.iter_mut() {
-        *v = f64::from_le_bytes(read_8(&mut r, path)?);
+        *v = f64::from_le_bytes(read_8(r, src)?);
     }
-    let mut trailing = [0u8; 1];
-    if r.read(&mut trailing)? != 0 {
-        bail!("{}: trailing bytes after sketch payload", path.display());
+    let pool = PooledSketch::from_raw(sum, count);
+    if version >= QSK_VERSION {
+        let stored = u64::from_le_bytes(read_8(r, src)?);
+        let actual = pool_fingerprint(&pool);
+        if stored != actual {
+            bail!(
+                "{src}: payload checksum mismatch (stored {stored:016x}, computed \
+                 {actual:016x}) — the sketch payload is corrupt"
+            );
+        }
     }
     let meta = SketchMeta {
         method,
@@ -283,7 +420,7 @@ pub fn load_sketch(path: &Path) -> Result<(SketchMeta, PooledSketch)> {
         d,
         config_hash,
     };
-    Ok((meta, PooledSketch::from_raw(sum, count)))
+    Ok((meta, pool, provenance))
 }
 
 fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
@@ -292,27 +429,27 @@ fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
     Ok(())
 }
 
-fn read_8(r: &mut impl Read, path: &Path) -> Result<[u8; 8]> {
+fn read_8(r: &mut impl Read, src: &str) -> Result<[u8; 8]> {
     let mut buf = [0u8; 8];
     r.read_exact(&mut buf)
-        .with_context(|| format!("{}: truncated sketch file", path.display()))?;
+        .with_context(|| format!("{src}: truncated sketch file"))?;
     Ok(buf)
 }
 
-fn read_u32(r: &mut impl Read, path: &Path) -> Result<u32> {
+fn read_u32(r: &mut impl Read, src: &str) -> Result<u32> {
     let mut buf = [0u8; 4];
     r.read_exact(&mut buf)
-        .with_context(|| format!("{}: truncated sketch file", path.display()))?;
+        .with_context(|| format!("{src}: truncated sketch file"))?;
     Ok(u32::from_le_bytes(buf))
 }
 
-fn read_str(r: &mut impl Read, path: &Path) -> Result<String> {
-    let len = read_u32(r, path)? as usize;
-    if len > 64 {
-        bail!("{}: implausible string field ({len} bytes)", path.display());
+fn read_str(r: &mut impl Read, src: &str, cap: usize) -> Result<String> {
+    let len = read_u32(r, src)? as usize;
+    if len > cap {
+        bail!("{src}: implausible string field ({len} bytes)");
     }
     let mut buf = vec![0u8; len];
     r.read_exact(&mut buf)
-        .with_context(|| format!("{}: truncated sketch file", path.display()))?;
-    String::from_utf8(buf).with_context(|| format!("{}: non-UTF-8 string field", path.display()))
+        .with_context(|| format!("{src}: truncated sketch file"))?;
+    String::from_utf8(buf).with_context(|| format!("{src}: non-UTF-8 string field"))
 }

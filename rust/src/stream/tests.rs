@@ -279,6 +279,118 @@ fn qsk_rebuild_rejects_tampered_hash() {
     assert!(err.contains("fingerprint"), "{err}");
 }
 
+// ------------------------------------------------------------------ qsk v2
+
+#[test]
+fn qsk_v2_round_trips_provenance_records() {
+    let dir = temp_dir("qsk_prov");
+    let path = dir.join("sketch.qsk");
+    let (meta, pool, _op) = sample_sketch(40);
+    let prov = vec![
+        ShardRecord {
+            label: "shard_a".into(),
+            rows: 300,
+        },
+        ShardRecord {
+            label: "e7/sensor-12".into(),
+            rows: 200,
+        },
+    ];
+    save_sketch_with(&path, &meta, &pool, &prov).unwrap();
+    let (meta2, pool2, prov2) = load_sketch_full(&path).unwrap();
+    assert_eq!(meta2, meta);
+    assert_eq!(pool2.sum(), pool.sum());
+    assert_eq!(prov2, prov);
+    // The plain loader ignores provenance but reads the same sketch.
+    let (meta3, pool3) = load_sketch(&path).unwrap();
+    assert_eq!(meta3, meta);
+    assert_eq!(pool3.sum(), pool.sum());
+}
+
+#[test]
+fn qsk_v2_rejects_flipped_payload_byte_via_checksum() {
+    let dir = temp_dir("qsk_checksum");
+    let path = dir.join("sketch.qsk");
+    let (meta, pool, _op) = sample_sketch(41);
+    save_sketch(&path, &meta, &pool).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // Flip a byte in the middle of the f64 payload (well past the header,
+    // well before the trailing checksum word).
+    let at = bytes.len() - 8 - pool.len() * 4;
+    bytes[at] ^= 0x01;
+    let p = dir.join("flipped.qsk");
+    std::fs::write(&p, &bytes).unwrap();
+    let err = format!("{:#}", load_sketch(&p).unwrap_err());
+    assert!(err.contains("checksum"), "{err}");
+}
+
+/// A hand-written version-1 file (no provenance, no checksum) must still
+/// load to the identical meta and pool — the compatibility promise.
+#[test]
+fn qsk_v1_files_still_load() {
+    let dir = temp_dir("qsk_v1");
+    let path = dir.join("old.qsk");
+    let (meta, pool, _op) = sample_sketch(42);
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&QSK_MAGIC);
+    bytes.extend_from_slice(&QSK_VERSION_V1.to_le_bytes());
+    for s in [&meta.method, &meta.law] {
+        bytes.extend_from_slice(&(s.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(s.as_bytes());
+    }
+    bytes.extend_from_slice(&meta.sigma.to_le_bytes());
+    bytes.extend_from_slice(&meta.seed.to_le_bytes());
+    bytes.extend_from_slice(&meta.m.to_le_bytes());
+    bytes.extend_from_slice(&meta.d.to_le_bytes());
+    bytes.extend_from_slice(&pool.count().to_le_bytes());
+    bytes.extend_from_slice(&meta.config_hash.to_le_bytes());
+    for &v in pool.sum() {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(&path, &bytes).unwrap();
+    let (meta2, pool2, prov) = load_sketch_full(&path).unwrap();
+    assert_eq!(meta2, meta);
+    assert_eq!(pool2.count(), pool.count());
+    assert_eq!(pool2.sum(), pool.sum());
+    assert!(prov.is_empty());
+}
+
+/// The wire form (`write_sketch_to` / `read_sketch_from`) is byte-identical
+/// to the file form — the server snapshot path reuses the exact format.
+#[test]
+fn qsk_wire_round_trip_matches_file_bytes() {
+    let dir = temp_dir("qsk_wire");
+    let path = dir.join("sketch.qsk");
+    let (meta, pool, _op) = sample_sketch(43);
+    let prov = vec![ShardRecord {
+        label: "live".into(),
+        rows: pool.count(),
+    }];
+    save_sketch_with(&path, &meta, &pool, &prov).unwrap();
+    let file_bytes = std::fs::read(&path).unwrap();
+    let mut wire_bytes = Vec::new();
+    write_sketch_to(&mut wire_bytes, &meta, &pool, &prov).unwrap();
+    assert_eq!(wire_bytes, file_bytes);
+
+    let mut cursor = &wire_bytes[..];
+    let (meta2, pool2, prov2) = read_sketch_from(&mut cursor, "wire").unwrap();
+    assert!(cursor.is_empty(), "read_sketch_from must consume exactly the sketch");
+    assert_eq!(meta2, meta);
+    assert_eq!(pool2.sum(), pool.sum());
+    assert_eq!(prov2, prov);
+}
+
+#[test]
+fn qsk_save_rejects_oversized_provenance_label() {
+    let dir = temp_dir("qsk_label");
+    let (meta, pool, _op) = sample_sketch(44);
+    let prov = vec![ShardRecord {
+        label: "x".repeat(MAX_LABEL_BYTES + 1),
+        rows: 1,
+    }];
+    assert!(save_sketch_with(&dir.join("bad.qsk"), &meta, &pool, &prov).is_err());
+}
+
 /// Shard → merge equals whole-dataset sketching for the 1-bit quantizer
 /// (±1 contributions sum to exact integers, so float addition commutes),
 /// and merging is associative in any grouping.

@@ -338,8 +338,14 @@ fn golden_fig2a_two_cluster_decode() {
         // CI sets QCKM_REQUIRE_GOLDEN so an absent pin *fails* the build
         // instead of silently skipping the bit-exact regression check.
         panic!(
-            "golden pin {} is absent; generate it on a machine with a rust toolchain via \
-             QCKM_BLESS_GOLDEN=1 cargo test golden_fig2a and commit the file",
+            "golden pin {} is absent; on a machine with a rust toolchain run exactly:\n\
+             \n\
+             \tQCKM_BLESS_GOLDEN=1 cargo test --test determinism golden_fig2a_two_cluster_decode\n\
+             \tgit add rust/tests/golden/fig2a_decode.golden\n\
+             \tgit commit -m \"Bless fig2a golden decode pin\"\n\
+             \n\
+             then re-run CI. The pin is a text file of hex f64 bits (objective, centroids \
+             row-major, weights) — see this test's source for the format.",
             path.display()
         );
     } else {

@@ -247,3 +247,92 @@ fn prop_decoder_output_always_feasible() {
         assert!(sol.objective.is_finite());
     });
 }
+
+/// Merging shard pools in ANY order must be exact for integer-valued
+/// contributions (the ±1 quantizer): float addition of small integers
+/// commutes, which is what lets the live server merge shard accumulators
+/// in shard-key order — whatever order pushes arrived in — and still
+/// reproduce the offline pipeline bit-for-bit.
+#[test]
+fn prop_pooled_merge_is_order_invariant_for_integer_sums() {
+    property("pooled merge order invariance (quantized)", 30, |g| {
+        let op = random_operator(g, true);
+        let shards = g.usize_in(2, 6);
+        let pools: Vec<PooledSketch> = (0..shards)
+            .map(|_| {
+                let rows = g.usize_in(1, 60);
+                let x = Mat::from_fn(rows, op.dim(), |_, _| g.gaussian());
+                let mut pool = PooledSketch::new(op.sketch_len());
+                op.sketch_into(&x, &mut pool);
+                pool
+            })
+            .collect();
+        // Identity order vs a random permutation (Fisher–Yates).
+        let mut order: Vec<usize> = (0..shards).collect();
+        for i in (1..shards).rev() {
+            order.swap(i, g.usize_in(0, i));
+        }
+        let mut forward = PooledSketch::new(op.sketch_len());
+        for p in &pools {
+            forward.merge(p);
+        }
+        let mut permuted = PooledSketch::new(op.sketch_len());
+        for &i in &order {
+            permuted.merge(&pools[i]);
+        }
+        assert_eq!(permuted.count(), forward.count());
+        assert_eq!(
+            permuted.sum(),
+            forward.sum(),
+            "quantized pools must merge exactly in any order ({order:?})"
+        );
+    });
+}
+
+/// BitAggregator merging is order- AND grouping-invariant (integer
+/// one-counts), and its (sum, count) export always matches pooling the
+/// same contributions densely.
+#[test]
+fn prop_bit_aggregator_merge_is_order_and_grouping_invariant() {
+    property("bit aggregator merge invariance", 30, |g| {
+        let op = random_operator(g, true);
+        let parts = g.usize_in(2, 5);
+        let aggs: Vec<BitAggregator> = (0..parts)
+            .map(|_| {
+                let rows = g.usize_in(1, 40);
+                let mut agg = BitAggregator::new(op.sketch_len());
+                let mut dense = PooledSketch::new(op.sketch_len());
+                for _ in 0..rows {
+                    let x = g.vec_gaussian(op.dim());
+                    let bits = op.encode_point_bits(&x);
+                    dense.add(&bits.to_dense());
+                    agg.add(&bits);
+                }
+                // Exported (sum, count) == dense pooling, bit for bit.
+                let (sum, count) = agg.to_sum();
+                assert_eq!(sum, dense.sum());
+                assert_eq!(count, dense.count());
+                agg
+            })
+            .collect();
+        // Forward fold vs reverse fold vs a two-level (pairwise) grouping.
+        let fold = |order: &mut dyn Iterator<Item = &BitAggregator>| {
+            let mut acc = BitAggregator::new(op.sketch_len());
+            for a in order {
+                acc.merge(a);
+            }
+            acc
+        };
+        let forward = fold(&mut aggs.iter());
+        let reverse = fold(&mut aggs.iter().rev());
+        let mut grouped = BitAggregator::new(op.sketch_len());
+        for pair in aggs.chunks(2) {
+            let sub = fold(&mut pair.iter());
+            grouped.merge(&sub);
+        }
+        assert_eq!(forward.count(), reverse.count());
+        assert_eq!(forward.mean(), reverse.mean());
+        assert_eq!(forward.to_sum(), reverse.to_sum());
+        assert_eq!(forward.to_sum(), grouped.to_sum());
+    });
+}

@@ -1,0 +1,267 @@
+//! End-to-end test of the online sketch service, driven through the real
+//! binary (`CARGO_BIN_EXE_qckm`): start `qckm serve` on an ephemeral port,
+//! push two shards from two concurrent client processes, and require the
+//! queried centroids to equal the offline 2-shard `sketch → merge →
+//! decode` result bit-for-bit; a `.qsk` snapshot taken from the live
+//! server must load and decode to the same centroids, and must be able to
+//! seed a fresh server that answers identically.
+//!
+//! Every wait is bounded (watchdog kill + polling with deadlines), so a
+//! wedged server fails the test instead of hanging CI.
+
+use qckm::data::{gaussian_mixture_pm1, load_csv, save_csv};
+use qckm::rng::Rng;
+use qckm::stream::load_sketch_full;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const DIM: usize = 5;
+const K: usize = 2;
+
+fn work_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qckm_server_e2e_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run the qckm binary to completion; panic with its stderr if it fails.
+/// Returns captured stderr for output assertions.
+fn qckm_ok(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_qckm"))
+        .args(args)
+        .output()
+        .expect("spawn qckm");
+    assert!(
+        out.status.success(),
+        "qckm {:?} failed:\n{}",
+        args,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn sketch_args<'a>(data: &'a str, out: &'a str, threads: &'a str) -> Vec<&'a str> {
+    vec![
+        "sketch", "--data", data, "--out", out, "--method", "qckm", "--m", "48", "--sigma",
+        "1.2", "--seed", "7", "--threads", threads,
+    ]
+}
+
+fn write_fixture(dir: &Path) -> (String, String) {
+    let mut rng = Rng::new(1);
+    let data = gaussian_mixture_pm1(3000, DIM, K, &mut rng);
+    // The same uneven, chunk-unaligned split as stream_e2e.
+    let shard_a = dir.join("shard_a.csv");
+    let shard_b = dir.join("shard_b.csv");
+    save_csv(&shard_a, &data.points.select_rows(&(0..1337).collect::<Vec<_>>())).unwrap();
+    save_csv(&shard_b, &data.points.select_rows(&(1337..3000).collect::<Vec<_>>())).unwrap();
+    (
+        shard_a.display().to_string(),
+        shard_b.display().to_string(),
+    )
+}
+
+/// A running `qckm serve` child: killed on drop, watchdog-killed after a
+/// hard deadline even if the test thread is stuck waiting on it.
+struct Server {
+    child: Arc<Mutex<Child>>,
+    addr: String,
+}
+
+impl Server {
+    fn start(extra_args: &[&str]) -> Server {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_qckm"));
+        cmd.args(["serve", "--port", "0", "--threads", "2"])
+            .args(extra_args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit());
+        let mut child = cmd.spawn().expect("spawn qckm serve");
+        let stdout = child.stdout.take().expect("serve stdout");
+        let child = Arc::new(Mutex::new(child));
+
+        // Watchdog: no matter what, the server dies within the deadline.
+        let watchdog = Arc::clone(&child);
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_secs(150));
+            let _ = watchdog.lock().unwrap().kill();
+        });
+
+        // The first stdout line announces the bound address.
+        let mut line = String::new();
+        BufReader::new(stdout)
+            .read_line(&mut line)
+            .expect("read LISTENING line");
+        let addr = line
+            .trim()
+            .strip_prefix("LISTENING ")
+            .unwrap_or_else(|| panic!("unexpected serve banner: {line:?}"))
+            .to_string();
+        Server { child, addr }
+    }
+
+    /// Wait for a clean exit, bounded by a deadline.
+    fn wait_exit(&self) {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if let Some(status) = self.child.lock().unwrap().try_wait().unwrap() {
+                assert!(status.success(), "server exited with {status}");
+                return;
+            }
+            assert!(Instant::now() < deadline, "server did not exit after shutdown");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let mut child = self.child.lock().unwrap();
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}
+
+#[test]
+fn live_server_matches_offline_pipeline_bit_for_bit() {
+    let dir = work_dir("live");
+    let (shard_a, shard_b) = write_fixture(&dir);
+
+    // --- Offline reference: the PR-2 pipeline (sketch × 2 → merge → decode).
+    let a_qsk = dir.join("a.qsk").display().to_string();
+    let b_qsk = dir.join("b.qsk").display().to_string();
+    let merged_qsk = dir.join("merged.qsk").display().to_string();
+    let c_offline = dir.join("c_offline.csv").display().to_string();
+    qckm_ok(&sketch_args(&shard_a, &a_qsk, "2"));
+    qckm_ok(&sketch_args(&shard_b, &b_qsk, "7"));
+    qckm_ok(&["merge", "--out", &merged_qsk, &a_qsk, &b_qsk]);
+    qckm_ok(&[
+        "decode", "--sketch", &merged_qsk, "--k", "2", "--lo", "-2", "--hi", "2", "--out",
+        &c_offline,
+    ]);
+
+    // --- Live server: same operator parameters as the offline shards.
+    let server = Server::start(&[
+        "--dim", "5", "--m", "48", "--method", "qckm", "--sigma", "1.2", "--seed", "7",
+    ]);
+    let addr = server.addr.clone();
+
+    // Two concurrent client processes push the two shards, in uneven
+    // batches that are NOT multiples of the encode chunk sizes.
+    std::thread::scope(|scope| {
+        for (data, shard, batch) in [(&shard_a, "a", "999"), (&shard_b, "b", "777")] {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                qckm_ok(&[
+                    "push", "--addr", &addr, "--data", data, "--shard", shard, "--batch", batch,
+                ]);
+            });
+        }
+    });
+
+    // --- Query: the live centroids are bit-for-bit the offline centroids.
+    let c_live = dir.join("c_live.csv").display().to_string();
+    qckm_ok(&[
+        "query", "--addr", &addr, "--k", "2", "--lo", "-2", "--hi", "2", "--out", &c_live,
+    ]);
+    let offline = load_csv(Path::new(&c_offline)).unwrap();
+    let live = load_csv(Path::new(&c_live)).unwrap();
+    assert_eq!(offline.shape(), (K, DIM));
+    assert_eq!(
+        offline.as_slice(),
+        live.as_slice(),
+        "live centroids must equal the offline sketch → merge → decode exactly"
+    );
+
+    // A repeated query is served from the centroid cache, identically.
+    let c_cached = dir.join("c_cached.csv").display().to_string();
+    let err = qckm_ok(&[
+        "query", "--addr", &addr, "--k", "2", "--lo", "-2", "--hi", "2", "--out", &c_cached,
+    ]);
+    assert!(err.contains("[cached]"), "second query should hit the cache: {err}");
+    assert_eq!(load_csv(Path::new(&c_cached)).unwrap().as_slice(), live.as_slice());
+
+    // --- Snapshot: the live pool drains to a .qsk identical to the merged
+    // offline shards, and decodes offline to the same centroids.
+    let live_qsk = dir.join("live.qsk").display().to_string();
+    qckm_ok(&["snapshot", "--addr", &addr, "--out", &live_qsk]);
+    let (meta_merged, pool_merged, _) = load_sketch_full(Path::new(&merged_qsk)).unwrap();
+    let (meta_live, pool_live, prov_live) = load_sketch_full(Path::new(&live_qsk)).unwrap();
+    assert_eq!(meta_live, meta_merged);
+    assert_eq!(pool_live.count(), 3000);
+    assert_eq!(pool_live.sum(), pool_merged.sum(), "live pool deviated from offline merge");
+    let labels: Vec<&str> = prov_live.iter().map(|r| r.label.as_str()).collect();
+    assert_eq!(labels, ["a", "b"], "snapshot provenance in stable shard order");
+
+    let c_snap = dir.join("c_snap.csv").display().to_string();
+    qckm_ok(&[
+        "decode", "--sketch", &live_qsk, "--k", "2", "--lo", "-2", "--hi", "2", "--out",
+        &c_snap,
+    ]);
+    assert_eq!(load_csv(Path::new(&c_snap)).unwrap().as_slice(), offline.as_slice());
+
+    // --- Stats + clean shutdown (bounded).
+    qckm_ok(&["ctl", "--addr", &addr, "stats"]);
+    qckm_ok(&["ctl", "--addr", &addr, "shutdown"]);
+    server.wait_exit();
+
+    // --- Resurrection: a fresh server seeded from the live snapshot
+    // answers the same query identically.
+    let server2 = Server::start(&["--seed-sketch", &live_qsk]);
+    let c_seeded = dir.join("c_seeded.csv").display().to_string();
+    qckm_ok(&[
+        "query", "--addr", &server2.addr, "--k", "2", "--lo", "-2", "--hi", "2", "--out",
+        &c_seeded,
+    ]);
+    assert_eq!(load_csv(Path::new(&c_seeded)).unwrap().as_slice(), offline.as_slice());
+    qckm_ok(&["ctl", "--addr", &server2.addr, "shutdown"]);
+    server2.wait_exit();
+}
+
+/// `qckm sketch --append` (the online-update mode) must reproduce the
+/// offline two-shard merge exactly: sketch shard A, append shard B into
+/// the same file, and the pooled sums equal `qckm merge` of the two
+/// independent shard sketches.
+#[test]
+fn sketch_append_equals_offline_merge() {
+    let dir = work_dir("append");
+    let (shard_a, shard_b) = write_fixture(&dir);
+    let a_qsk = dir.join("a.qsk").display().to_string();
+    let b_qsk = dir.join("b.qsk").display().to_string();
+    let merged_qsk = dir.join("merged.qsk").display().to_string();
+    qckm_ok(&sketch_args(&shard_a, &a_qsk, "1"));
+    qckm_ok(&sketch_args(&shard_b, &b_qsk, "1"));
+    qckm_ok(&["merge", "--out", &merged_qsk, &a_qsk, &b_qsk]);
+
+    // Incremental: sketch A, then stream B into the same .qsk.
+    let inc_qsk = dir.join("inc.qsk").display().to_string();
+    qckm_ok(&sketch_args(&shard_a, &inc_qsk, "2"));
+    qckm_ok(&[
+        "sketch", "--data", &shard_b, "--append", &inc_qsk, "--threads", "3",
+    ]);
+
+    let (meta_merged, pool_merged, _) = load_sketch_full(Path::new(&merged_qsk)).unwrap();
+    let (meta_inc, pool_inc, prov_inc) = load_sketch_full(Path::new(&inc_qsk)).unwrap();
+    assert_eq!(meta_inc, meta_merged);
+    assert_eq!(pool_inc.count(), pool_merged.count());
+    assert_eq!(pool_inc.sum(), pool_merged.sum());
+    assert_eq!(prov_inc.len(), 2, "append adds a provenance record");
+    assert_eq!(prov_inc[1].label, "shard_b");
+    assert_eq!(prov_inc[1].rows, 1663);
+
+    // Conflicting operator flags are refused, and the file is untouched.
+    let out = Command::new(env!("CARGO_BIN_EXE_qckm"))
+        .args([
+            "sketch", "--data", &shard_b, "--append", &inc_qsk, "--seed", "8",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "conflicting --seed must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("conflicts"), "unexpected error: {stderr}");
+    let (_, pool_after, _) = load_sketch_full(Path::new(&inc_qsk)).unwrap();
+    assert_eq!(pool_after.sum(), pool_merged.sum(), "failed append must not modify the file");
+}
