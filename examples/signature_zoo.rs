@@ -23,6 +23,9 @@ fn main() {
         Arc::new(Triangle),
         Arc::new(MultiBitQuantizer::new(2)),
         Arc::new(MultiBitQuantizer::new(4)),
+        // The odd one out: the self-reset ramp's first harmonic carries a
+        // π/2 phase, which the decode atoms absorb (same row, same code).
+        Arc::new(ModuloRamp),
     ];
 
     // A fixed 2-Dirac mixture to recover in 3-D.

@@ -8,7 +8,6 @@
 //! cargo run --release --example spectral_mnist -- --quick # N = 8000
 //! ```
 
-use qckm::config::Method;
 use qckm::experiments::{run_method_once, MethodRun};
 use qckm::frequency::{FrequencyLaw, SigmaHeuristic};
 use qckm::metrics::{adjusted_rand_index, assign_labels};
@@ -47,9 +46,9 @@ fn main() {
         km_ari
     );
 
-    for method in [Method::Ckm, Method::Qckm] {
+    for method in [MethodSpec::parse("ckm").unwrap(), MethodSpec::parse("qckm").unwrap()] {
         let run = MethodRun {
-            method,
+            method: method.clone(),
             m,
             replicates: if quick { 1 } else { 5 },
             sigma,
@@ -60,7 +59,7 @@ fn main() {
         let out = run_method_once(&run, &data.points, Some(&data.labels), k, &mut rng);
         println!(
             "{:<10} {:>10.4} {:>8.3}",
-            method.name(),
+            method.canonical(),
             out.sse / n_samples as f64,
             out.ari
         );

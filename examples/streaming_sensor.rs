@@ -11,7 +11,6 @@
 //! cargo run --release --example streaming_sensor
 //! ```
 
-use qckm::config::Method;
 use qckm::coordinator::{run_pipeline, PipelineConfig, SampleSource, WireFormat};
 use qckm::frequency::{DrawnFrequencies, FrequencyLaw, SigmaHeuristic};
 use qckm::prelude::*;
@@ -62,7 +61,7 @@ fn main() {
     );
 
     // ---- CKM wire: 64-bit floats per measurement (same frequencies).
-    let op_c = SketchOperator::new(freqs, Method::Ckm.signature());
+    let op_c = SketchOperator::new(freqs, std::sync::Arc::new(Cosine));
     let rep_c = run_pipeline(
         &op_c,
         &source,

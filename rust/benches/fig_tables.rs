@@ -8,7 +8,6 @@
 #[path = "harness.rs"]
 mod harness;
 
-use qckm::config::Method;
 use qckm::experiments::*;
 use std::time::Instant;
 
@@ -70,5 +69,4 @@ fn main() {
     println!("{}", res.render());
     println!("[ablation mini: {:.1}s]", t.elapsed().as_secs_f64());
 
-    let _ = Method::Qckm;
 }

@@ -19,7 +19,7 @@ fn main() {
     let mut rng = Rng::new(0);
     let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, dim, m, 1.0, &mut rng);
     let op = SketchOperator::quantized(freqs.clone());
-    let op_dense = SketchOperator::new(freqs, qckm::config::Method::Ckm.signature());
+    let op_dense = SketchOperator::new(freqs, std::sync::Arc::new(qckm::signature::Cosine));
     let source = SampleSource::Synthetic {
         total,
         dim,

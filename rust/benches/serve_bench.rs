@@ -10,7 +10,7 @@
 mod harness;
 
 use harness::{bench, black_box, Summary};
-use qckm::config::Method;
+use qckm::method::MethodSpec;
 use qckm::frequency::FrequencyLaw;
 use qckm::linalg::Mat;
 use qckm::parallel::Parallelism;
@@ -23,8 +23,9 @@ const DIM: usize = 10;
 const M: usize = 512;
 
 fn service(threads: usize) -> SketchService {
-    let op = draw_operator(Method::Qckm, FrequencyLaw::AdaptedRadius, M, DIM, 1.0, 0);
-    let meta = SketchMeta::for_operator(&op, Method::Qckm, 0);
+    let qckm = MethodSpec::parse("qckm").unwrap();
+    let op = draw_operator(&qckm, FrequencyLaw::AdaptedRadius, M, DIM, 1.0, 0);
+    let meta = SketchMeta::for_operator(&op, &qckm, 0);
     SketchService::new(
         op,
         meta,

@@ -132,7 +132,7 @@ fn main() {
     write_stream_json(&stream_records);
 
     // Cosine signature (CKM) for the sincos-cost comparison.
-    let op_c = SketchOperator::new(freqs.clone(), qckm::config::Method::Ckm.signature());
+    let op_c = SketchOperator::new(freqs.clone(), std::sync::Arc::new(qckm::signature::Cosine));
     let native_c = NativeEngine::new(op_c);
     bench("native ckm sketch (256x10 -> 2000)", 3, 400, || {
         black_box(native_c.sketch_dataset(&x).unwrap());

@@ -12,7 +12,7 @@ mod parser;
 mod types;
 
 pub use parser::{parse_toml, TomlDoc, TomlError, TomlValue};
-pub use types::{DecodeConfig, JobConfig, Method, SketchConfig};
+pub use types::{DecodeConfig, JobConfig, SketchConfig};
 
 #[cfg(test)]
 mod tests;

@@ -81,7 +81,7 @@ wire = "dense"
     .unwrap();
     assert_eq!(cfg.seed, 7);
     assert_eq!(cfg.sketch.num_frequencies, 250);
-    assert_eq!(cfg.sketch.method, Method::Ckm);
+    assert_eq!(cfg.sketch.method.canonical(), "ckm");
     assert_eq!(cfg.sketch.law, crate::frequency::FrequencyLaw::Gaussian);
     assert!(matches!(
         cfg.sketch.sigma,
@@ -97,7 +97,7 @@ wire = "dense"
 fn job_config_defaults_when_empty() {
     let cfg = JobConfig::from_toml_str("").unwrap();
     assert_eq!(cfg.sketch.num_frequencies, 1000);
-    assert_eq!(cfg.sketch.method, Method::Qckm);
+    assert_eq!(cfg.sketch.method.canonical(), "qckm");
     assert_eq!(cfg.decode.k, 10);
     assert_eq!(cfg.pipeline.wire, crate::coordinator::WireFormat::PackedBits);
 }
@@ -115,13 +115,21 @@ fn job_config_validation_errors() {
 }
 
 #[test]
-fn method_signatures_and_dithering() {
-    assert_eq!(Method::parse("QCKM").unwrap(), Method::Qckm);
-    assert_eq!(Method::parse("tri").unwrap(), Method::Triangle);
-    assert!(Method::parse("other").is_err());
-    assert_eq!(Method::Qckm.signature().name(), "universal-1bit");
-    assert_eq!(Method::Ckm.signature().name(), "cosine");
-    assert!(!Method::Ckm.dithered());
-    assert!(Method::Qckm.dithered());
-    assert_eq!(Method::Triangle.name(), "triangle");
+fn method_specs_flow_through_the_config() {
+    // The config layer accepts any registry spec string, including
+    // parameterized and aliased forms, and stores the canonical spec.
+    let cfg =
+        JobConfig::from_toml_str("[sketch]\nmethod = \"qckm:bits=3\"\n").unwrap();
+    assert_eq!(cfg.sketch.method.canonical(), "qckm:bits=3");
+    assert_eq!(cfg.sketch.method.signature().name(), "multibit-3");
+    let cfg = JobConfig::from_toml_str("[sketch]\nmethod = \"tri\"\n").unwrap();
+    assert_eq!(cfg.sketch.method.canonical(), "triangle");
+    let cfg = JobConfig::from_toml_str("[sketch]\nmethod = \"modulo\"\n").unwrap();
+    assert!(cfg.sketch.method.dithered());
+    // Junk specs surface the registry's actionable error.
+    let err = format!(
+        "{:#}",
+        JobConfig::from_toml_str("[sketch]\nmethod = \"nope\"\n").unwrap_err()
+    );
+    assert!(err.contains("valid families"), "{err}");
 }

@@ -2,62 +2,19 @@
 
 use super::parser::TomlDoc;
 use crate::frequency::{FrequencyLaw, SigmaHeuristic};
+use crate::method::MethodSpec;
 use anyhow::{bail, Result};
 
-/// Which compressive method to run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Method {
-    /// Classical CKM: cosine (complex-exponential) full-precision sketch.
-    Ckm,
-    /// The paper's QCKM: dithered 1-bit universal-quantized sketch.
-    Qckm,
-    /// Ablation: dithered triangle-wave sketch.
-    Triangle,
-}
-
-impl Method {
-    pub fn parse(s: &str) -> Result<Method> {
-        Ok(match s.to_ascii_lowercase().as_str() {
-            "ckm" => Method::Ckm,
-            "qckm" => Method::Qckm,
-            "triangle" | "tri" => Method::Triangle,
-            other => bail!("unknown method '{other}' (expected ckm|qckm|triangle)"),
-        })
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            Method::Ckm => "ckm",
-            Method::Qckm => "qckm",
-            Method::Triangle => "triangle",
-        }
-    }
-
-    /// The signature function this method encodes with.
-    pub fn signature(self) -> std::sync::Arc<dyn crate::signature::Signature> {
-        use crate::signature::{Cosine, Triangle, UniversalQuantizer};
-        match self {
-            Method::Ckm => std::sync::Arc::new(Cosine),
-            Method::Qckm => std::sync::Arc::new(UniversalQuantizer),
-            Method::Triangle => std::sync::Arc::new(Triangle),
-        }
-    }
-
-    /// CKM historically runs undithered (the complex exponential needs no
-    /// dither); every other signature requires the dithering of Prop. 1.
-    pub fn dithered(self) -> bool {
-        !matches!(self, Method::Ckm)
-    }
-}
-
-/// Sketch-side configuration (`[sketch]` section).
+/// Sketch-side configuration (`[sketch]` section). The compressive method
+/// is an open, parameterized [`MethodSpec`] (`ckm`, `qckm`, `qckm:bits=3`,
+/// `triangle`, `modulo`, …) — see [`crate::method`] for the registry.
 #[derive(Clone, Debug)]
 pub struct SketchConfig {
     /// Number of frequencies M (the sketch has 2M real slots).
     pub num_frequencies: usize,
     pub law: FrequencyLaw,
     pub sigma: SigmaHeuristic,
-    pub method: Method,
+    pub method: MethodSpec,
 }
 
 impl Default for SketchConfig {
@@ -66,7 +23,7 @@ impl Default for SketchConfig {
             num_frequencies: 1000,
             law: FrequencyLaw::AdaptedRadius,
             sigma: SigmaHeuristic::default(),
-            method: Method::Qckm,
+            method: MethodSpec::parse("qckm").expect("default method spec"),
         }
     }
 }
@@ -128,8 +85,8 @@ impl JobConfig {
             bail!("sketch.num_frequencies must be >= 1, got {m}");
         }
         cfg.sketch.num_frequencies = m as usize;
-        let method_name = doc.get_str("sketch", "method", cfg.sketch.method.name());
-        cfg.sketch.method = Method::parse(method_name)?;
+        let default_method = cfg.sketch.method.canonical().to_string();
+        cfg.sketch.method = MethodSpec::parse(doc.get_str("sketch", "method", &default_method))?;
         cfg.sketch.law = FrequencyLaw::parse(doc.get_str("sketch", "law", "adapted-radius"))?;
         if let Some(v) = doc.get("sketch", "sigma") {
             let s = v

@@ -2,23 +2,24 @@
 //! lists it as the design-choice ablation for the generalized sketch of
 //! Sec. 3).
 //!
-//! On a fixed Fig.-2a-style mixture, sweep the signature function
-//! {cosine (CKM), universal 1-bit (QCKM), triangle, 2/4-bit staircases} at
-//! several measurement budgets and report success rates and *acquired bits
-//! per example* — making the paper's resource trade-off (`m` bits for QCKM
-//! vs `64·2m` for full-precision CKM) explicit.
+//! On a fixed Fig.-2a-style mixture, sweep the method spec — cosine (CKM),
+//! the B-bit staircase interpolation `qckm[:bits=B]` for B ∈ {1, 2, 3, 4},
+//! the triangle wave, and the self-reset modulo ramp — at several
+//! measurement budgets and report success rates and *acquired bits per
+//! example*, making the paper's resource trade-off (`m` bits for QCKM vs
+//! `64·2m` for full-precision CKM) explicit. Every arm resolves through
+//! the open method registry ([`crate::method`]), so the sweep is exactly
+//! the operator `qckm sketch --method <spec>` would build.
 
 use crate::clompr::ClOmprParams;
-use crate::config::Method;
 use crate::data::gaussian_mixture_pm1;
 use crate::frequency::{FrequencyLaw, SigmaHeuristic};
 use crate::kmeans::{kmeans, KMeansParams};
+use crate::method::MethodSpec;
 use crate::metrics::is_success;
 use crate::parallel::{self, Parallelism};
 use crate::rng::Rng;
-use crate::signature::{MultiBitQuantizer, Signature};
 use crate::sketch::SketchOperator;
-use std::sync::Arc;
 
 #[derive(Clone, Debug)]
 pub struct AblationConfig {
@@ -47,16 +48,22 @@ impl Default for AblationConfig {
     }
 }
 
-struct Arm {
-    label: &'static str,
-    signature: Arc<dyn Signature>,
-    bits_per_slot: f64,
-    dithered: bool,
-}
+/// The swept method specs: the full B ∈ {1, 2, 3, 4} staircase
+/// interpolation between QCKM and CKM, plus the non-quantizer signatures.
+const ARM_SPECS: [&str; 7] = [
+    "ckm",
+    "qckm",
+    "qckm:bits=2",
+    "qckm:bits=3",
+    "qckm:bits=4",
+    "triangle",
+    "modulo",
+];
 
 /// Success rate per (arm, ratio) and the per-example acquisition cost.
 pub struct AblationResult {
-    pub labels: Vec<&'static str>,
+    /// Display names of the swept specs ([`MethodSpec::display_name`]).
+    pub labels: Vec<String>,
     pub ratios: Vec<f64>,
     pub success: Vec<Vec<f64>>,
     /// bits per example at each (arm, ratio).
@@ -64,38 +71,10 @@ pub struct AblationResult {
 }
 
 pub fn run_ablation(cfg: &AblationConfig) -> AblationResult {
-    let arms: Vec<Arm> = vec![
-        Arm {
-            label: "ckm (64-bit cos)",
-            signature: Method::Ckm.signature(),
-            bits_per_slot: 64.0,
-            dithered: false,
-        },
-        Arm {
-            label: "qckm (1-bit)",
-            signature: Method::Qckm.signature(),
-            bits_per_slot: 1.0,
-            dithered: true,
-        },
-        Arm {
-            label: "triangle (64b)",
-            signature: Method::Triangle.signature(),
-            bits_per_slot: 64.0,
-            dithered: true,
-        },
-        Arm {
-            label: "2-bit staircase",
-            signature: Arc::new(MultiBitQuantizer::new(2)),
-            bits_per_slot: 2.0,
-            dithered: true,
-        },
-        Arm {
-            label: "4-bit staircase",
-            signature: Arc::new(MultiBitQuantizer::new(4)),
-            bits_per_slot: 4.0,
-            dithered: true,
-        },
-    ];
+    let arms: Vec<MethodSpec> = ARM_SPECS
+        .iter()
+        .map(|s| MethodSpec::parse(s).expect("registry spec"))
+        .collect();
 
     // The per-example acquisition cost depends only on the grid, not the
     // trials: fill it up front.
@@ -103,7 +82,7 @@ pub fn run_ablation(cfg: &AblationConfig) -> AblationResult {
     for (ai, arm) in arms.iter().enumerate() {
         for (ri, &ratio) in cfg.ratios.iter().enumerate() {
             let m = ((ratio * (cfg.n * cfg.k) as f64).round() as usize).max(2);
-            bits[ai][ri] = 2.0 * m as f64 * arm.bits_per_slot;
+            bits[ai][ri] = 2.0 * m as f64 * arm.bits_per_slot();
         }
     }
 
@@ -127,8 +106,7 @@ pub fn run_ablation(cfg: &AblationConfig) -> AblationResult {
         for (ai, arm) in arms.iter().enumerate() {
             for (ri, &ratio) in cfg.ratios.iter().enumerate() {
                 let m = ((ratio * (cfg.n * cfg.k) as f64).round() as usize).max(2);
-                // Build the operator directly (arms are not all `Method`s).
-                let freqs = if arm.dithered {
+                let freqs = if arm.dithered() {
                     crate::frequency::DrawnFrequencies::draw(
                         FrequencyLaw::AdaptedRadius,
                         cfg.n,
@@ -145,7 +123,7 @@ pub fn run_ablation(cfg: &AblationConfig) -> AblationResult {
                         &mut rng,
                     )
                 };
-                let op = SketchOperator::new(freqs, arm.signature.clone());
+                let op = SketchOperator::new(freqs, arm.signature());
                 let z = op.sketch_dataset(&data.points);
                 let (lo, hi) = crate::linalg::bounding_box(&data.points);
                 let sol = crate::clompr::ClOmpr::new(&op, cfg.k)
@@ -175,7 +153,7 @@ pub fn run_ablation(cfg: &AblationConfig) -> AblationResult {
         }
     }
     AblationResult {
-        labels: arms.iter().map(|a| a.label).collect(),
+        labels: arms.iter().map(|a| a.display_name().to_string()).collect(),
         ratios: cfg.ratios.clone(),
         success,
         bits_per_example: bits,
@@ -185,13 +163,13 @@ pub fn run_ablation(cfg: &AblationConfig) -> AblationResult {
 impl AblationResult {
     pub fn render(&self) -> String {
         let mut out = String::from("== Signature / bit-depth ablation ==\n");
-        out.push_str(&format!("{:<18}", "arm"));
+        out.push_str(&format!("{:<24}", "arm"));
         for r in &self.ratios {
             out.push_str(&format!("  m/nK={r:<4} (bits/ex)"));
         }
         out.push('\n');
         for (ai, label) in self.labels.iter().enumerate() {
-            out.push_str(&format!("{label:<18}"));
+            out.push_str(&format!("{label:<24}"));
             for ri in 0..self.ratios.len() {
                 out.push_str(&format!(
                     "  {:>5.0}%   ({:>6.0})",

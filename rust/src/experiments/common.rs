@@ -1,9 +1,9 @@
 //! Shared plumbing for the experiment harnesses.
 
 use crate::clompr::{decode_best_of, ClOmprParams};
-use crate::config::Method;
 use crate::coordinator::WireFormat;
 use crate::frequency::{DrawnFrequencies, FrequencyLaw};
+use crate::method::MethodSpec;
 use crate::linalg::{bounding_box, Mat};
 use crate::metrics::{adjusted_rand_index, assign_labels, sse};
 use crate::parallel::Parallelism;
@@ -14,7 +14,7 @@ use crate::stream::{sketch_reader, MatChunkedReader};
 /// One compressive-method run on one dataset.
 #[derive(Clone, Debug)]
 pub struct MethodRun {
-    pub method: Method,
+    pub method: MethodSpec,
     /// Frequencies M (sketch length 2M).
     pub m: usize,
     pub replicates: usize,

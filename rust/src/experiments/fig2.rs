@@ -9,10 +9,10 @@
 
 use super::common::{ascii_heatmap, run_method_once, transition_ratio, MethodRun};
 use crate::clompr::ClOmprParams;
-use crate::config::Method;
 use crate::data::gaussian_mixture_pm1;
 use crate::frequency::{FrequencyLaw, SigmaHeuristic};
 use crate::kmeans::{kmeans, KMeansParams};
+use crate::method::MethodSpec;
 use crate::metrics::is_success;
 use crate::parallel::{self, Parallelism};
 use crate::rng::Rng;
@@ -38,7 +38,7 @@ pub struct Fig2Config {
     pub trials: usize,
     /// Samples per trial dataset.
     pub n_samples: usize,
-    pub methods: Vec<Method>,
+    pub methods: Vec<MethodSpec>,
     pub sigma: SigmaHeuristic,
     pub law: FrequencyLaw,
     pub seed: u64,
@@ -72,7 +72,10 @@ impl Fig2Config {
             ratios,
             trials: 12,
             n_samples: 4096,
-            methods: vec![Method::Ckm, Method::Qckm],
+            methods: vec![
+                MethodSpec::parse("ckm").expect("registry spec"),
+                MethodSpec::parse("qckm").expect("registry spec"),
+            ],
             sigma: SigmaHeuristic::default(),
             law: FrequencyLaw::AdaptedRadius,
             seed: 0x20180619, // the paper's date
@@ -111,7 +114,7 @@ pub struct Fig2Result {
     pub config_desc: String,
     /// `success[method_idx][value_idx][ratio_idx]` ∈ [0, 1].
     pub success: Vec<Vec<Vec<f64>>>,
-    pub methods: Vec<Method>,
+    pub methods: Vec<MethodSpec>,
     pub values: Vec<usize>,
     pub ratios: Vec<f64>,
     /// ≥50% transition ratio per method per value (None = never).
@@ -156,13 +159,13 @@ pub fn run_fig2(cfg: &Fig2Config) -> Fig2Result {
         );
         cfg.methods
             .iter()
-            .map(|&method| {
+            .map(|method| {
                 cfg.ratios
                     .iter()
                     .map(|&ratio| {
                         let m = ((ratio * (n * k) as f64).round() as usize).max(2);
                         let run = MethodRun {
-                            method,
+                            method: method.clone(),
                             m,
                             replicates: 1,
                             sigma,
@@ -206,7 +209,7 @@ pub fn run_fig2(cfg: &Fig2Config) -> Fig2Result {
                 .collect::<Vec<_>>(),
         );
     }
-    let qckm_over_ckm = factor_between(&cfg.methods, &transitions, Method::Qckm, Method::Ckm);
+    let qckm_over_ckm = factor_between(&cfg.methods, &transitions, "qckm", "ckm");
 
     Fig2Result {
         config_desc: format!(
@@ -228,13 +231,13 @@ pub fn run_fig2(cfg: &Fig2Config) -> Fig2Result {
 }
 
 fn factor_between(
-    methods: &[Method],
+    methods: &[MethodSpec],
     transitions: &[Vec<Option<f64>>],
-    num: Method,
-    den: Method,
+    num: &str,
+    den: &str,
 ) -> Option<f64> {
-    let ni = methods.iter().position(|&m| m == num)?;
-    let di = methods.iter().position(|&m| m == den)?;
+    let ni = methods.iter().position(|m| m.canonical() == num)?;
+    let di = methods.iter().position(|m| m.canonical() == den)?;
     let mut ratios = Vec::new();
     for (a, b) in transitions[ni].iter().zip(&transitions[di]) {
         if let (Some(a), Some(b)) = (a, b) {
@@ -256,7 +259,7 @@ impl Fig2Result {
         let mut out = format!("== Fig. 2 phase transition ==\n{}\n\n", self.config_desc);
         let value_label = "n or K";
         for (mi, method) in self.methods.iter().enumerate() {
-            out.push_str(&format!("--- {} success rate ---\n", method.name()));
+            out.push_str(&format!("--- {} success rate ---\n", method.canonical()));
             let rows: Vec<String> = self
                 .values
                 .iter()

@@ -10,10 +10,10 @@
 
 use super::common::{run_method_once, MethodRun};
 use crate::clompr::ClOmprParams;
-use crate::config::Method;
 use crate::data::spectral_embedding_like;
 use crate::frequency::{FrequencyLaw, SigmaHeuristic};
 use crate::kmeans::{kmeans, KMeansParams};
+use crate::method::MethodSpec;
 use crate::metrics::{adjusted_rand_index, RunningStats};
 use crate::parallel::{self, Parallelism};
 use crate::rng::Rng;
@@ -75,7 +75,10 @@ pub struct Fig3Result {
 }
 
 pub fn run_fig3(cfg: &Fig3Config) -> Fig3Result {
-    let methods = [Method::Ckm, Method::Qckm];
+    let methods = [
+        MethodSpec::parse("ckm").expect("registry spec"),
+        MethodSpec::parse("qckm").expect("registry spec"),
+    ];
     let levels = &cfg.replicate_levels;
     // Accumulators: k-means rows first, then (method × level).
     let n_rows = levels.len() * (1 + methods.len());
@@ -87,7 +90,7 @@ pub fn run_fig3(cfg: &Fig3Config) -> Fig3Result {
     }
     for method in &methods {
         for &lvl in levels {
-            rows.push(format!("{} x{lvl}", method.name()));
+            rows.push(format!("{} x{lvl}", method.canonical()));
         }
     }
 
@@ -119,10 +122,10 @@ pub fn run_fig3(cfg: &Fig3Config) -> Fig3Result {
         }
 
         // Compressive methods (replicates selected by sketch objective).
-        for &method in &methods {
+        for method in &methods {
             for &lvl in levels {
                 let run = MethodRun {
-                    method,
+                    method: method.clone(),
                     m: cfg.m,
                     replicates: lvl,
                     sigma,

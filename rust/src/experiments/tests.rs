@@ -2,8 +2,8 @@
 //! grids run via the CLI and are recorded in EXPERIMENTS.md).
 
 use super::*;
-use crate::config::Method;
 use crate::frequency::SigmaHeuristic;
+use crate::method::MethodSpec;
 
 #[test]
 fn fig2_tiny_grid_runs_and_orders_sensibly() {
@@ -39,7 +39,7 @@ fn fig2b_variant_grid_shapes() {
     cfg.ratios = vec![4.0];
     cfg.trials = 2;
     cfg.n_samples = 600;
-    cfg.methods = vec![Method::Qckm];
+    cfg.methods = vec![MethodSpec::parse("qckm").unwrap()];
     let res = run_fig2(&cfg);
     assert_eq!(res.success.len(), 1);
     assert_eq!(res.success[0].len(), 2);
@@ -119,12 +119,17 @@ fn ablation_tiny_runs() {
         threads: 0,
     };
     let res = run_ablation(&cfg);
-    assert_eq!(res.labels.len(), 5);
+    // ckm, qckm bits 1..=4, triangle, modulo — all through the registry.
+    assert_eq!(res.labels.len(), 7);
     assert!(res.success.iter().flatten().all(|v| (0.0..=1.0).contains(v)));
-    // Bit accounting: qckm slot = 1 bit, ckm slot = 64 bits, same m.
-    let q = res.labels.iter().position(|l| l.starts_with("qckm")).unwrap();
+    // Bit accounting: qckm slot = 1 bit, ckm slot = 64 bits, same m; the
+    // B-bit staircases interpolate at exactly B bits per slot.
+    let q = res.labels.iter().position(|l| l.starts_with("qckm (1-bit")).unwrap();
     let c = res.labels.iter().position(|l| l.starts_with("ckm")).unwrap();
+    let b3 = res.labels.iter().position(|l| l.contains("3-bit")).unwrap();
     assert!((res.bits_per_example[c][0] / res.bits_per_example[q][0] - 64.0).abs() < 1e-9);
+    assert!((res.bits_per_example[b3][0] / res.bits_per_example[q][0] - 3.0).abs() < 1e-9);
+    assert!(res.labels.iter().any(|l| l.starts_with("modulo")));
     assert!(res.render().contains("bits/ex"));
     let _ = SigmaHeuristic::default();
 }

@@ -55,6 +55,7 @@ pub mod experiments;
 pub mod frequency;
 pub mod kmeans;
 pub mod linalg;
+pub mod method;
 pub mod metrics;
 pub mod optim;
 pub mod parallel;
@@ -72,9 +73,10 @@ pub mod prelude {
     pub use crate::frequency::{DrawnFrequencies, FrequencyLaw, SigmaHeuristic};
     pub use crate::kmeans::{kmeans, KMeansParams};
     pub use crate::linalg::Mat;
+    pub use crate::method::MethodSpec;
     pub use crate::metrics::{adjusted_rand_index, sse};
     pub use crate::parallel::Parallelism;
     pub use crate::rng::Rng;
-    pub use crate::signature::{Cosine, Signature, Triangle, UniversalQuantizer};
+    pub use crate::signature::{Cosine, ModuloRamp, Signature, Triangle, UniversalQuantizer};
     pub use crate::sketch::{BitAggregator, BitSketch, PooledSketch, SketchOperator};
 }

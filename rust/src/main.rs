@@ -1,7 +1,7 @@
 //! `qckm` — the command-line launcher.
 //!
 //! ```text
-//! qckm cluster     --data x.csv --k 10 [--method qckm] [--config job.toml]
+//! qckm cluster     --data x.csv --k 10 [--method qckm:bits=3] [--config job.toml]
 //! qckm sketch      --data shard.csv --sigma 1.2 --seed 7 --out shard.qsk
 //! qckm sketch      --data more.csv --append shard.qsk  (online update)
 //! qckm merge       --out merged.qsk shard0.qsk shard1.qsk …
@@ -25,6 +25,11 @@
 //! centroid cache), `snapshot` drains the live pool back into a `.qsk`
 //! the offline stages understand.
 //!
+//! Every `--method` takes an open-registry spec string (`ckm`, `qckm`,
+//! `qckm:bits=B`, `triangle`, `modulo` — see `qckm::method`); on the
+//! service verbs it is a *declaration* the server verifies, so a
+//! distributed job can never silently mix methods.
+//!
 //! Every run prints its seed and full parameterization so results are
 //! reproducible; experiment outputs are the rows/series recorded in
 //! EXPERIMENTS.md.
@@ -32,8 +37,9 @@
 use anyhow::{bail, Context, Result};
 use qckm::cli::CliSpec;
 use qckm::clompr::{decode_best_of, ClOmprParams};
-use qckm::config::{JobConfig, Method};
+use qckm::config::JobConfig;
 use qckm::coordinator::{run_pipeline, PipelineConfig, SampleSource, WireFormat};
+use qckm::method::MethodSpec;
 use qckm::data::{load_csv, save_csv};
 use qckm::experiments as exp;
 use qckm::frequency::{DrawnFrequencies, SigmaHeuristic};
@@ -100,7 +106,7 @@ fn job_from(args: &qckm::cli::ParsedArgs) -> Result<JobConfig> {
         cfg.decode.k = k;
     }
     if let Some(method) = args.get("method") {
-        cfg.sketch.method = Method::parse(method)?;
+        cfg.sketch.method = MethodSpec::parse(method)?;
     }
     if let Some(s) = args.get_f64("sigma")? {
         cfg.sketch.sigma = SigmaHeuristic::Fixed(s);
@@ -133,11 +139,32 @@ fn build_operator(cfg: &JobConfig, x: &Mat, rng: &mut Rng) -> SketchOperator {
     };
     eprintln!(
         "operator: method={} law={} M={} sigma={sigma:.4}",
-        cfg.sketch.method.name(),
+        cfg.sketch.method.canonical(),
         cfg.sketch.law.name(),
         cfg.sketch.num_frequencies
     );
     SketchOperator::new(freqs, cfg.sketch.method.signature())
+}
+
+/// Shared `--method` help text. The CLI layer needs a `'static` string, so
+/// this is a hint only; a bad spec gets the registry's authoritative
+/// valid-family list at parse time.
+const METHOD_HELP: &str = "method spec: ckm | qckm[:bits=B] | triangle | modulo";
+
+/// Verify an optional `--method` declaration against the method a `.qsk`
+/// header recorded (canonicalized through the registry first, so aliases
+/// and case agree). `what` names the conflicting source in the error.
+fn check_declared_method(
+    parsed: &qckm::cli::ParsedArgs,
+    meta_method: &str,
+    what: &str,
+) -> Result<()> {
+    if let Some(m) = parsed.get("method") {
+        if MethodSpec::parse(m)?.canonical() != meta_method {
+            bail!("--method {m} conflicts with {what} (method={meta_method})");
+        }
+    }
+    Ok(())
 }
 
 fn cmd_cluster(args: Vec<String>) -> Result<()> {
@@ -145,7 +172,7 @@ fn cmd_cluster(args: Vec<String>) -> Result<()> {
         .opt("data", "FILE", None, "input CSV (one sample per row)")
         .opt("k", "NUM", None, "number of clusters")
         .opt("m", "NUM", None, "number of frequencies")
-        .opt("method", "NAME", None, "ckm|qckm|triangle")
+        .opt("method", "SPEC", None, METHOD_HELP)
         .opt("sigma", "FLOAT", None, "kernel bandwidth (default: heuristic)")
         .opt("seed", "NUM", None, "RNG seed")
         .opt("replicates", "NUM", None, "decoder replicates")
@@ -166,11 +193,9 @@ fn cmd_cluster(args: Vec<String>) -> Result<()> {
     let mut rng = Rng::new(cfg.seed);
     let op = build_operator(&cfg, &x, &mut rng);
 
-    // Acquire through the streaming coordinator (the Fig. 1 dataflow).
-    let wire = match cfg.sketch.method {
-        Method::Qckm => WireFormat::PackedBits,
-        _ => WireFormat::DenseF64,
-    };
+    // Acquire through the streaming coordinator (the Fig. 1 dataflow),
+    // with the method's preferred pooling encoding on the wire.
+    let wire = cfg.sketch.method.preferred_wire_format();
     let report = run_pipeline(
         &op,
         &SampleSource::Shared(Arc::new(x.clone())),
@@ -213,13 +238,18 @@ fn cmd_cluster(args: Vec<String>) -> Result<()> {
     Ok(())
 }
 
-/// Per-chunk pooling encoding for the streamed sketch.
-fn wire_from(parsed: &qckm::cli::ParsedArgs, method: Method) -> Result<WireFormat> {
+/// Per-chunk pooling encoding for the streamed sketch — `auto` defers to
+/// the method's preferred wire format (the one source of the method→wire
+/// mapping, see [`MethodSpec::preferred_wire_format`]).
+fn wire_from(parsed: &qckm::cli::ParsedArgs, method: &MethodSpec) -> Result<WireFormat> {
     Ok(match parsed.get("encoding").unwrap_or("auto") {
-        "auto" => match method {
-            Method::Qckm => WireFormat::PackedBits,
-            _ => WireFormat::DenseF64,
-        },
+        "auto" => method.preferred_wire_format(),
+        // The streaming fold re-checks this against the signature, but
+        // failing at the flag gives the actionable error.
+        "bits" if method.preferred_wire_format() != WireFormat::PackedBits => bail!(
+            "--encoding bits needs a ±1-valued method (e.g. qckm); '{}' pools dense",
+            method.canonical()
+        ),
         "bits" => WireFormat::PackedBits,
         "dense" => WireFormat::DenseF64,
         other => bail!("unknown encoding '{other}' (auto|bits|dense)"),
@@ -233,7 +263,7 @@ fn cmd_sketch(args: Vec<String>) -> Result<()> {
     )
     .opt("data", "FILE", None, "input dataset (.csv, else raw f64 bin)")
     .opt("m", "NUM", None, "number of frequencies")
-    .opt("method", "NAME", None, "ckm|qckm|triangle")
+    .opt("method", "SPEC", None, METHOD_HELP)
     .opt(
         "sigma",
         "FLOAT",
@@ -269,8 +299,8 @@ fn cmd_sketch(args: Vec<String>) -> Result<()> {
     if let Some(append_path) = parsed.get("append") {
         return sketch_append(&parsed, append_path, data_path, &shard_label, &par);
     }
-    let method = cfg.sketch.method;
-    let wire = wire_from(&parsed, method)?;
+    let method = cfg.sketch.method.clone();
+    let wire = wire_from(&parsed, &method)?;
 
     // The frequency draw is a pure function of (method, law, m, d, sigma,
     // seed) — the `.qsk` contract that lets every shard and the decoder
@@ -280,7 +310,7 @@ fn cmd_sketch(args: Vec<String>) -> Result<()> {
         SigmaHeuristic::Fixed(sigma) => {
             let mut reader = stream::open_dataset(Path::new(data_path))?;
             let op = stream::draw_operator(
-                method,
+                &method,
                 cfg.sketch.law,
                 cfg.sketch.num_frequencies,
                 reader.dim(),
@@ -304,7 +334,7 @@ fn cmd_sketch(args: Vec<String>) -> Result<()> {
                  to stream out-of-core and to keep independent shards mergeable"
             );
             let op = stream::draw_operator(
-                method,
+                &method,
                 cfg.sketch.law,
                 cfg.sketch.num_frequencies,
                 x.cols(),
@@ -326,13 +356,13 @@ fn cmd_sketch(args: Vec<String>) -> Result<()> {
     };
     eprintln!(
         "operator: method={} law={} M={} sigma={:.4}",
-        method.name(),
+        method.canonical(),
         cfg.sketch.law.name(),
         op.num_frequencies(),
         op.frequencies().sigma
     );
 
-    let meta = stream::SketchMeta::for_operator(&op, method, cfg.seed);
+    let meta = stream::SketchMeta::for_operator(&op, &method, cfg.seed);
     if let Some(out) = parsed.get("out") {
         let prov = [stream::ShardRecord {
             label: shard_label.clone(),
@@ -375,11 +405,7 @@ fn sketch_append(
             bail!("--m {m} conflicts with {append_path} (m={})", meta.m);
         }
     }
-    if let Some(method) = parsed.get("method") {
-        if method != meta.method {
-            bail!("--method {method} conflicts with {append_path} (method={})", meta.method);
-        }
-    }
+    check_declared_method(parsed, &meta.method, append_path)?;
     if let Some(sigma) = parsed.get_f64("sigma")? {
         if sigma.to_bits() != meta.sigma.to_bits() {
             bail!("--sigma {sigma} conflicts with {append_path} (sigma={})", meta.sigma);
@@ -391,8 +417,8 @@ fn sketch_append(
         }
     }
     let op = meta.rebuild_operator()?;
-    let method = Method::parse(&meta.method)?;
-    let wire = wire_from(parsed, method)?;
+    let method = MethodSpec::parse(&meta.method)?;
+    let wire = wire_from(parsed, &method)?;
     let before = pool.count();
     let mut reader = stream::open_dataset(Path::new(data_path))?;
     let rows = stream::sketch_reader(&op, reader.as_mut(), wire, &mut pool, par)?;
@@ -418,6 +444,12 @@ fn cmd_merge(args: Vec<String>) -> Result<()> {
         "pool shard sketches (.qsk) into one — associative, any order",
     )
     .positionals("<shard.qsk>…")
+    .opt(
+        "method",
+        "SPEC",
+        None,
+        "declare the expected method; refused if the shards differ",
+    )
     .opt("out", "FILE", None, "write the merged .qsk here");
     let parsed = spec.parse(args)?;
     let inputs = parsed.positionals();
@@ -427,6 +459,7 @@ fn cmd_merge(args: Vec<String>) -> Result<()> {
     let out = parsed.get("out").context("--out is required")?;
 
     let (meta, mut pool, mut prov) = stream::load_sketch_full(Path::new(&inputs[0]))?;
+    check_declared_method(&parsed, &meta.method, &inputs[0])?;
     eprintln!("{}: {} samples [{}]", inputs[0], pool.count(), meta.describe());
     for input in &inputs[1..] {
         let (shard_meta, shard_pool, shard_prov) = stream::load_sketch_full(Path::new(input))?;
@@ -452,6 +485,12 @@ fn cmd_decode(args: Vec<String>) -> Result<()> {
     )
     .opt("sketch", "FILE", None, "input .qsk sketch")
     .opt("k", "NUM", None, "number of clusters")
+    .opt(
+        "method",
+        "SPEC",
+        None,
+        "declare the expected method; refused if the sketch differs",
+    )
     .opt("replicates", "NUM", Some("1"), "decoder replicates (best objective wins)")
     .opt("threads", "NUM", Some("1"), "decoder threads (0 = all cores)")
     .opt("seed", "NUM", None, "decoder RNG seed (default: the sketch's seed)")
@@ -464,6 +503,7 @@ fn cmd_decode(args: Vec<String>) -> Result<()> {
     let k = parsed.get_usize("k")?.context("--k is required")?;
 
     let (meta, pool) = stream::load_sketch(Path::new(sketch_path))?;
+    check_declared_method(&parsed, &meta.method, sketch_path)?;
     if pool.count() == 0 {
         bail!("{sketch_path}: sketch pools zero samples");
     }
@@ -538,7 +578,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     .opt("port", "NUM", Some("0"), "bind port (0 = ephemeral; the bound port is printed)")
     .opt("dim", "NUM", None, "data dimension (required unless --seed-sketch)")
     .opt("m", "NUM", None, "number of frequencies")
-    .opt("method", "NAME", None, "ckm|qckm|triangle")
+    .opt("method", "SPEC", None, METHOD_HELP)
     .opt("sigma", "FLOAT", None, "kernel bandwidth (required unless --seed-sketch)")
     .opt("seed", "NUM", None, "frequency-draw seed")
     .opt("threads", "NUM", None, "encode/decode threads (0 = all cores)")
@@ -569,11 +609,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                     bail!("--m {m} conflicts with {path} (m={})", meta.m);
                 }
             }
-            if let Some(method) = parsed.get("method") {
-                if method != meta.method {
-                    bail!("--method {method} conflicts with {path} (method={})", meta.method);
-                }
-            }
+            check_declared_method(&parsed, &meta.method, path)?;
             if let SigmaHeuristic::Fixed(sigma) = cfg.sketch.sigma {
                 if sigma.to_bits() != meta.sigma.to_bits() {
                     bail!("--sigma {sigma} conflicts with {path} (sigma={})", meta.sigma);
@@ -600,14 +636,14 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                 bail!("--sigma is required without --seed-sketch (shards must agree on it)");
             };
             let op = stream::draw_operator(
-                cfg.sketch.method,
+                &cfg.sketch.method,
                 cfg.sketch.law,
                 cfg.sketch.num_frequencies,
                 dim,
                 sigma,
                 cfg.seed,
             );
-            let meta = stream::SketchMeta::for_operator(&op, cfg.sketch.method, cfg.seed);
+            let meta = stream::SketchMeta::for_operator(&op, &cfg.sketch.method, cfg.seed);
             (meta, op, None)
         }
     };
@@ -643,11 +679,31 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// Connect a service client, declaring `--method` (canonicalized through
+/// the registry, so typos and junk fail locally with the valid-family
+/// list) if the flag was given.
+fn connect_with_method(
+    addr: &str,
+    parsed: &qckm::cli::ParsedArgs,
+) -> Result<qckm::server::Client> {
+    let client = qckm::server::Client::connect(addr)?;
+    Ok(match parsed.get("method") {
+        Some(m) => client.declare_method(MethodSpec::parse(m)?.canonical()),
+        None => client,
+    })
+}
+
 fn cmd_push(args: Vec<String>) -> Result<()> {
     let spec = CliSpec::new("qckm push", "stream a dataset into a serving node's shard")
         .opt("addr", "HOST:PORT", None, "server address")
         .opt("data", "FILE", None, "input dataset (.csv, else raw f64 bin)")
         .opt("shard", "NAME", None, "shard label (default: the data file stem)")
+        .opt(
+            "method",
+            "SPEC",
+            None,
+            "declare the expected method; the server refuses a mismatch",
+        )
         .opt("batch", "NUM", Some("4096"), "rows per push message");
     let parsed = spec.parse(args)?;
     let addr = parsed.get("addr").context("--addr is required")?;
@@ -671,7 +727,7 @@ fn cmd_push(args: Vec<String>) -> Result<()> {
     } else {
         batch
     };
-    let mut client = qckm::server::Client::connect(addr)?;
+    let mut client = connect_with_method(addr, &parsed)?;
     let mut pushed = 0u64;
     let mut buf: Vec<f64> = Vec::new();
     let (mut shard_rows, mut total_rows) = (0, 0);
@@ -708,6 +764,12 @@ fn cmd_query(args: Vec<String>) -> Result<()> {
         .opt("addr", "HOST:PORT", None, "server address")
         .opt("k", "NUM", None, "number of clusters")
         .opt(
+            "method",
+            "SPEC",
+            None,
+            "declare the expected method; the server refuses a mismatch",
+        )
+        .opt(
             "window",
             "NUM",
             Some("0"),
@@ -722,7 +784,7 @@ fn cmd_query(args: Vec<String>) -> Result<()> {
     let addr = parsed.get("addr").context("--addr is required")?;
     let k = parsed.get_usize("k")?.context("--k is required")?;
 
-    let mut client = qckm::server::Client::connect(addr)?;
+    let mut client = connect_with_method(addr, &parsed)?;
     let report = client.query(&QuerySpec {
         k: k as u32,
         window: parsed.get_usize("window")?.unwrap() as u32,
@@ -757,12 +819,18 @@ fn cmd_snapshot(args: Vec<String>) -> Result<()> {
     )
     .opt("addr", "HOST:PORT", None, "server address")
     .opt("window", "NUM", Some("0"), "epochs to pool (0 = all-time)")
+    .opt(
+        "method",
+        "SPEC",
+        None,
+        "declare the expected method; the server refuses a mismatch",
+    )
     .opt("out", "FILE", None, "write the .qsk here");
     let parsed = spec.parse(args)?;
     let addr = parsed.get("addr").context("--addr is required")?;
     let out = parsed.get("out").context("--out is required")?;
 
-    let mut client = qckm::server::Client::connect(addr)?;
+    let mut client = connect_with_method(addr, &parsed)?;
     let bytes = client.snapshot(parsed.get_usize("window")?.unwrap() as u32)?;
     std::fs::write(out, &bytes).with_context(|| format!("write {out}"))?;
     // Re-load what we wrote: validates the checksum end-to-end and tells
@@ -789,8 +857,9 @@ fn cmd_ctl(args: Vec<String>) -> Result<()> {
         "stats" => {
             let s = client.stats()?;
             println!(
-                "epoch {} | {} rows all-time | {} closed epoch(s) held | cache {} hit / {} miss",
-                s.epoch, s.rows_total, s.epochs_held, s.cache_hits, s.cache_misses
+                "method {} | epoch {} | {} rows all-time | {} closed epoch(s) held | \
+                 cache {} hit / {} miss",
+                s.method, s.epoch, s.rows_total, s.epochs_held, s.cache_hits, s.cache_misses
             );
             for (label, rows) in &s.shards {
                 println!("  shard '{label}': {rows} rows");
@@ -881,9 +950,10 @@ fn cmd_experiment(args: Vec<String>) -> Result<()> {
             if let Some(seed) = parsed.get_u64("seed")? {
                 cfg.seed = seed;
             }
-            let sigs: [Arc<dyn qckm::signature::Signature>; 2] = [
+            let sigs: [Arc<dyn qckm::signature::Signature>; 3] = [
                 Arc::new(qckm::signature::UniversalQuantizer),
                 Arc::new(qckm::signature::Triangle),
+                Arc::new(qckm::signature::ModuloRamp),
             ];
             for sig in sigs {
                 let res = exp::run_prop1(sig, &cfg);
@@ -920,6 +990,13 @@ fn cmd_pipeline(args: Vec<String>) -> Result<()> {
         .opt("batch", "NUM", Some("64"), "examples per wire message")
         .opt("queue", "NUM", Some("16"), "channel capacity")
         .opt("wire", "FMT", Some("bits"), "bits|dense")
+        .opt(
+            "method",
+            "SPEC",
+            None,
+            "encode method (default: the wire's preferred method — \
+             qckm for bits, ckm for dense)",
+        )
         .opt("seed", "NUM", Some("0"), "seed");
     let parsed = spec.parse(args)?;
     let workers = parsed.get_usize("workers")?.unwrap();
@@ -958,10 +1035,27 @@ fn cmd_pipeline(args: Vec<String>) -> Result<()> {
         sigma,
         &mut rng,
     );
-    let op = match wire {
-        WireFormat::PackedBits => SketchOperator::quantized(freqs),
-        WireFormat::DenseF64 => SketchOperator::new(freqs, Method::Ckm.signature()),
+    // The signature comes from the method spec, not from an assumption
+    // about the wire: dense no longer hardcodes the cosine, and any
+    // registry family can drive the demo. (The frequency draw above stays
+    // dithered for every method, as this demo always did.)
+    let method = match parsed.get("method") {
+        Some(s) => MethodSpec::parse(s)?,
+        None => MethodSpec::parse(match wire {
+            WireFormat::PackedBits => "qckm",
+            WireFormat::DenseF64 => "ckm",
+        })?,
     };
+    if wire == WireFormat::PackedBits
+        && method.preferred_wire_format() != WireFormat::PackedBits
+    {
+        bail!(
+            "--wire bits needs a ±1-valued method (e.g. qckm); '{}' requires --wire dense",
+            method.canonical()
+        );
+    }
+    eprintln!("pipeline method: {}", method.canonical());
+    let op = SketchOperator::new(freqs, method.signature());
 
     let report = run_pipeline(
         &op,

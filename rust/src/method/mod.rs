@@ -1,0 +1,350 @@
+//! The open method registry — parameterized compressive-method specs.
+//!
+//! The paper's Sec. 3 point is that the sketch generalizes to a *large
+//! class* of periodic nonlinearities; this module is the codebase's single
+//! extension point for that class. A [`MethodSpec`] is a parsed, canonical
+//! descriptor of one compressive method: it bundles the [`Signature`]
+//! instance, the dithering policy of Prop. 1, the preferred wire format
+//! for pooled transport, a display name, and the per-slot acquisition cost
+//! in bits. Every layer — TOML/CLI config, the streaming sketch stages,
+//! the `.qsk` container, the online server protocol, and the experiment
+//! harnesses — speaks spec strings and never matches on a method enum.
+//!
+//! ## Spec-string grammar
+//!
+//! ```text
+//! spec   := family [":" param ("," param)*]
+//! param  := key "=" value
+//! ```
+//!
+//! Case-insensitive; the canonical form (lowercase, defaulted params
+//! elided, keys in family-defined order) is what [`MethodSpec::canonical`]
+//! returns, what `.qsk` v3 headers store, and what the server protocol
+//! carries. Parsing the canonical form reproduces an equal spec.
+//!
+//! Current families (see [`MethodSpec::families_help`]):
+//!
+//! | spec            | signature                         | wire        |
+//! |-----------------|-----------------------------------|-------------|
+//! | `ckm`           | cosine (classical CKM)            | dense f64   |
+//! | `qckm`          | 1-bit universal quantizer         | packed bits |
+//! | `qckm:bits=B`   | `2^B`-level staircase, B in 2..=16| dense f64   |
+//! | `triangle`      | even triangle wave (`tri` alias)  | dense f64   |
+//! | `modulo`        | self-reset ADC ramp (sawtooth)    | dense f64   |
+//!
+//! `qckm:bits=1` canonicalizes to plain `qckm` — at one bit the staircase
+//! *is* the universal quantizer, and collapsing them keeps the 1-bit
+//! pipelines bit-for-bit identical to the legacy `qckm` name.
+//!
+//! ## Registering a new family
+//!
+//! Add one [`FamilyDef`] entry to [`FAMILIES`] with a builder that maps
+//! parsed params to a [`MethodSpec`]. Nothing else: config, `qckm sketch /
+//! merge / decode / serve / push / query`, `.qsk` persistence and the
+//! experiments all resolve methods through this table, and parse errors
+//! list the valid families from it automatically.
+
+use crate::coordinator::WireFormat;
+use crate::signature::{
+    Cosine, ModuloRamp, MultiBitQuantizer, Signature, Triangle, UniversalQuantizer,
+};
+use anyhow::{bail, Result};
+use std::fmt;
+use std::sync::Arc;
+
+/// A fully resolved compressive-method descriptor.
+///
+/// Equality and ordering go by the canonical spec string — two specs that
+/// print the same sketch identically.
+#[derive(Clone)]
+pub struct MethodSpec {
+    canonical: String,
+    display: String,
+    signature: Arc<dyn Signature>,
+    dithered: bool,
+    wire: WireFormat,
+    bits_per_slot: f64,
+}
+
+impl MethodSpec {
+    /// Parse a spec string (`ckm`, `qckm`, `qckm:bits=3`, `triangle`,
+    /// `modulo`, …). Case-insensitive; aliases accepted; junk specs get an
+    /// error naming the valid families.
+    pub fn parse(s: &str) -> Result<MethodSpec> {
+        let lowered = s.trim().to_ascii_lowercase();
+        if lowered.is_empty() {
+            bail!(
+                "empty method spec (valid families: {})",
+                Self::families_help()
+            );
+        }
+        let (family, rest) = match lowered.split_once(':') {
+            Some((f, r)) => (f, Some(r)),
+            None => (lowered.as_str(), None),
+        };
+        let Some(def) = FAMILIES
+            .iter()
+            .find(|d| d.family == family || d.aliases.iter().any(|a| *a == family))
+        else {
+            bail!(
+                "unknown method '{family}' (valid families: {})",
+                Self::families_help()
+            );
+        };
+        let mut params = Params::parse(def.family, rest)?;
+        let spec = (def.build)(&mut params)?;
+        params.finish(def.family, def.params_help)?;
+        Ok(spec)
+    }
+
+    /// The canonical spec string (`qckm:bits=3`); re-parses to an equal
+    /// spec. This is what `.qsk` headers store and the server protocol
+    /// carries.
+    pub fn canonical(&self) -> &str {
+        &self.canonical
+    }
+
+    /// Human-readable name for tables and logs (`qckm (3-bit staircase)`).
+    pub fn display_name(&self) -> &str {
+        &self.display
+    }
+
+    /// The signature function this method encodes with.
+    pub fn signature(&self) -> Arc<dyn Signature> {
+        Arc::clone(&self.signature)
+    }
+
+    /// Whether the frequency draw adds the uniform dither of Prop. 1.
+    /// CKM historically runs undithered (the complex exponential needs no
+    /// dither); every other signature requires it.
+    pub fn dithered(&self) -> bool {
+        self.dithered
+    }
+
+    /// The wire/pooling format this method's contributions prefer:
+    /// [`WireFormat::PackedBits`] for ±1-valued signatures (one bit per
+    /// slot), [`WireFormat::DenseF64`] otherwise. The single source of the
+    /// method→wire mapping the CLI used to duplicate.
+    pub fn preferred_wire_format(&self) -> WireFormat {
+        self.wire
+    }
+
+    /// Acquired bits per sketch slot (1 for the 1-bit quantizer, B for the
+    /// B-bit staircase, 64 for full-precision signatures) — the resource
+    /// axis of the bit-depth ablation.
+    pub fn bits_per_slot(&self) -> f64 {
+        self.bits_per_slot
+    }
+
+    /// The valid spec grammars, comma-separated — used by every "unknown
+    /// method" error and by `--help` text, so the list can never go stale.
+    pub fn families_help() -> String {
+        FAMILIES
+            .iter()
+            .map(|d| d.grammar)
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+impl PartialEq for MethodSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.canonical == other.canonical
+    }
+}
+
+impl Eq for MethodSpec {}
+
+impl fmt::Debug for MethodSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "MethodSpec({})", self.canonical)
+    }
+}
+
+impl fmt::Display for MethodSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.canonical)
+    }
+}
+
+impl std::str::FromStr for MethodSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse(s)
+    }
+}
+
+// ---------------------------------------------------------------- registry
+
+/// One method family: the single place a nonlinearity registers.
+struct FamilyDef {
+    /// Canonical family name.
+    family: &'static str,
+    /// Accepted alternative spellings.
+    aliases: &'static [&'static str],
+    /// Grammar shown in "valid families" errors, e.g. `qckm[:bits=B]`.
+    grammar: &'static str,
+    /// Params shown in unknown-parameter errors, e.g. `bits=B (1..=16)`.
+    params_help: &'static str,
+    /// Build a spec from parsed params (take what you accept; leftovers
+    /// are rejected by the caller).
+    build: fn(&mut Params) -> Result<MethodSpec>,
+}
+
+/// The method registry. Adding a family = adding one entry here.
+static FAMILIES: &[FamilyDef] = &[
+    FamilyDef {
+        family: "ckm",
+        aliases: &[],
+        grammar: "ckm",
+        params_help: "none",
+        build: build_ckm,
+    },
+    FamilyDef {
+        family: "qckm",
+        aliases: &[],
+        grammar: "qckm[:bits=B]",
+        params_help: "bits=B (1..=16, default 1)",
+        build: build_qckm,
+    },
+    FamilyDef {
+        family: "triangle",
+        aliases: &["tri"],
+        grammar: "triangle",
+        params_help: "none",
+        build: build_triangle,
+    },
+    FamilyDef {
+        family: "modulo",
+        aliases: &["sawtooth"],
+        grammar: "modulo",
+        params_help: "none",
+        build: build_modulo,
+    },
+];
+
+fn build_ckm(_p: &mut Params) -> Result<MethodSpec> {
+    Ok(MethodSpec {
+        canonical: "ckm".into(),
+        display: "ckm (64-bit cosine)".into(),
+        signature: Arc::new(Cosine),
+        dithered: false,
+        wire: WireFormat::DenseF64,
+        bits_per_slot: 64.0,
+    })
+}
+
+fn build_qckm(p: &mut Params) -> Result<MethodSpec> {
+    let bits = p.take_u32("bits")?.unwrap_or(1);
+    if !(1..=16).contains(&bits) {
+        bail!("qckm: bits must be in 1..=16, got {bits}");
+    }
+    Ok(if bits == 1 {
+        // At one bit the rescaled staircase IS the universal quantizer;
+        // canonicalizing keeps 1-bit pipelines on the legacy `qckm` name
+        // (and its packed-bit wire) bit-for-bit.
+        MethodSpec {
+            canonical: "qckm".into(),
+            display: "qckm (1-bit)".into(),
+            signature: Arc::new(UniversalQuantizer),
+            dithered: true,
+            wire: WireFormat::PackedBits,
+            bits_per_slot: 1.0,
+        }
+    } else {
+        MethodSpec {
+            canonical: format!("qckm:bits={bits}"),
+            display: format!("qckm ({bits}-bit staircase)"),
+            signature: Arc::new(MultiBitQuantizer::new(bits)),
+            dithered: true,
+            wire: WireFormat::DenseF64,
+            bits_per_slot: bits as f64,
+        }
+    })
+}
+
+fn build_triangle(_p: &mut Params) -> Result<MethodSpec> {
+    Ok(MethodSpec {
+        canonical: "triangle".into(),
+        display: "triangle (64-bit)".into(),
+        signature: Arc::new(Triangle),
+        dithered: true,
+        wire: WireFormat::DenseF64,
+        bits_per_slot: 64.0,
+    })
+}
+
+fn build_modulo(_p: &mut Params) -> Result<MethodSpec> {
+    Ok(MethodSpec {
+        canonical: "modulo".into(),
+        display: "modulo (self-reset ramp)".into(),
+        signature: Arc::new(ModuloRamp),
+        dithered: true,
+        wire: WireFormat::DenseF64,
+        bits_per_slot: 64.0,
+    })
+}
+
+// ------------------------------------------------------------------ params
+
+/// Parsed `key=value` params with taken-tracking, so a family builder only
+/// names the keys it accepts and everything else is an actionable error.
+struct Params {
+    pairs: Vec<(String, String, bool)>,
+}
+
+impl Params {
+    fn parse(family: &str, rest: Option<&str>) -> Result<Params> {
+        let mut pairs: Vec<(String, String, bool)> = Vec::new();
+        if let Some(rest) = rest {
+            if rest.is_empty() {
+                bail!("method '{family}': empty parameter list after ':'");
+            }
+            for item in rest.split(',') {
+                let Some((key, value)) = item.split_once('=') else {
+                    bail!(
+                        "method '{family}': malformed parameter '{item}' (expected key=value)"
+                    );
+                };
+                let (key, value) = (key.trim(), value.trim());
+                if key.is_empty() || value.is_empty() {
+                    bail!(
+                        "method '{family}': malformed parameter '{item}' (expected key=value)"
+                    );
+                }
+                if pairs.iter().any(|(k, _, _)| k == key) {
+                    bail!("method '{family}': duplicate parameter '{key}'");
+                }
+                pairs.push((key.to_string(), value.to_string(), false));
+            }
+        }
+        Ok(Params { pairs })
+    }
+
+    fn take_u32(&mut self, key: &str) -> Result<Option<u32>> {
+        for (k, v, taken) in self.pairs.iter_mut() {
+            if k == key {
+                *taken = true;
+                return match v.parse::<u32>() {
+                    Ok(n) => Ok(Some(n)),
+                    Err(_) => bail!("parameter '{key}': cannot parse '{v}' as an integer"),
+                };
+            }
+        }
+        Ok(None)
+    }
+
+    /// Reject leftover params, naming what the family accepts.
+    fn finish(&self, family: &str, params_help: &str) -> Result<()> {
+        if let Some((k, _, _)) = self.pairs.iter().find(|(_, _, taken)| !taken) {
+            bail!(
+                "method '{family}' does not accept parameter '{k}' (accepted: {params_help})"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests;

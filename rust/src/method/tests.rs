@@ -1,0 +1,181 @@
+//! Method-registry tests: spec grammar, canonicalization, round-trips,
+//! actionable errors, and an end-to-end decode through a registry-built
+//! operator for the new families.
+
+use super::*;
+use crate::testkit::property;
+
+#[test]
+fn legacy_names_resolve_to_the_seed_pipelines() {
+    let ckm = MethodSpec::parse("ckm").unwrap();
+    assert_eq!(ckm.canonical(), "ckm");
+    assert_eq!(ckm.signature().name(), "cosine");
+    assert!(!ckm.dithered());
+    assert_eq!(ckm.preferred_wire_format(), WireFormat::DenseF64);
+
+    let qckm = MethodSpec::parse("qckm").unwrap();
+    assert_eq!(qckm.canonical(), "qckm");
+    assert_eq!(qckm.signature().name(), "universal-1bit");
+    assert!(qckm.dithered());
+    assert_eq!(qckm.preferred_wire_format(), WireFormat::PackedBits);
+    assert_eq!(qckm.bits_per_slot(), 1.0);
+
+    let tri = MethodSpec::parse("triangle").unwrap();
+    assert_eq!(tri.signature().name(), "triangle");
+    assert!(tri.dithered());
+    assert_eq!(tri.preferred_wire_format(), WireFormat::DenseF64);
+}
+
+#[test]
+fn aliases_and_case_canonicalize() {
+    assert_eq!(MethodSpec::parse("tri").unwrap().canonical(), "triangle");
+    assert_eq!(MethodSpec::parse("QCKM").unwrap().canonical(), "qckm");
+    assert_eq!(
+        MethodSpec::parse(" Qckm:Bits=3 ").unwrap().canonical(),
+        "qckm:bits=3"
+    );
+    assert_eq!(MethodSpec::parse("sawtooth").unwrap().canonical(), "modulo");
+    // bits=1 collapses onto the legacy 1-bit family (same signature, same
+    // packed wire) so it stays bit-for-bit the seed pipeline.
+    let one = MethodSpec::parse("qckm:bits=1").unwrap();
+    assert_eq!(one, MethodSpec::parse("qckm").unwrap());
+    assert_eq!(one.signature().name(), "universal-1bit");
+}
+
+#[test]
+fn parameterized_qckm_builds_staircases() {
+    for bits in 2..=16u32 {
+        let spec = MethodSpec::parse(&format!("qckm:bits={bits}")).unwrap();
+        assert_eq!(spec.canonical(), format!("qckm:bits={bits}"));
+        assert_eq!(spec.signature().name(), format!("multibit-{bits}"));
+        assert!(spec.dithered());
+        assert_eq!(spec.preferred_wire_format(), WireFormat::DenseF64);
+        assert_eq!(spec.bits_per_slot(), bits as f64);
+    }
+    // Distinct bit depths must never collapse: their operators are
+    // incompatible and the fingerprint keys on the signature name.
+    assert_ne!(
+        MethodSpec::parse("qckm:bits=2").unwrap().signature().name(),
+        MethodSpec::parse("qckm:bits=3").unwrap().signature().name()
+    );
+}
+
+#[test]
+fn modulo_family_is_phase_shifted() {
+    let spec = MethodSpec::parse("modulo").unwrap();
+    assert_eq!(spec.signature().name(), "modulo-ramp");
+    assert!(spec.dithered());
+    assert!(
+        (spec.signature().first_harmonic_phase() - std::f64::consts::FRAC_PI_2).abs() < 1e-15
+    );
+    assert!(
+        (spec.signature().first_harmonic_amplitude() - 2.0 / std::f64::consts::PI).abs() < 1e-12
+    );
+}
+
+#[test]
+fn junk_specs_give_actionable_errors() {
+    // Unknown family names the valid ones.
+    let err = format!("{:#}", MethodSpec::parse("fourier").unwrap_err());
+    for family in ["ckm", "qckm[:bits=B]", "triangle", "modulo"] {
+        assert!(err.contains(family), "error does not name '{family}': {err}");
+    }
+    let err = format!("{:#}", MethodSpec::parse("").unwrap_err());
+    assert!(err.contains("valid families"), "{err}");
+
+    // Malformed / unknown / duplicate / out-of-range parameters.
+    assert!(MethodSpec::parse("qckm:").is_err());
+    assert!(MethodSpec::parse("qckm:bits").is_err());
+    assert!(MethodSpec::parse("qckm:bits=").is_err());
+    assert!(MethodSpec::parse("qckm:bits=zero").is_err());
+    assert!(MethodSpec::parse("qckm:bits=0").is_err());
+    assert!(MethodSpec::parse("qckm:bits=17").is_err());
+    assert!(MethodSpec::parse("qckm:bits=2,bits=3").is_err());
+    let err = format!("{:#}", MethodSpec::parse("qckm:depth=2").unwrap_err());
+    assert!(err.contains("bits=B"), "unknown-param error must name accepted params: {err}");
+    let err = format!("{:#}", MethodSpec::parse("ckm:bits=2").unwrap_err());
+    assert!(err.contains("does not accept"), "{err}");
+}
+
+/// Every canonical spec string re-parses to an equal spec with the same
+/// canonical form — the grammar round-trip contract (`.qsk` headers and
+/// the server protocol rely on it).
+#[test]
+fn prop_canonical_specs_round_trip() {
+    property("method spec round-trip", 200, |g| {
+        let spec = match g.usize_in(0, 4) {
+            0 => MethodSpec::parse("ckm").unwrap(),
+            1 => MethodSpec::parse("qckm").unwrap(),
+            2 => MethodSpec::parse("triangle").unwrap(),
+            3 => MethodSpec::parse("modulo").unwrap(),
+            _ => {
+                let bits = g.usize_in(1, 16);
+                MethodSpec::parse(&format!("qckm:bits={bits}")).unwrap()
+            }
+        };
+        let reparsed = MethodSpec::parse(spec.canonical()).unwrap();
+        assert_eq!(reparsed, spec);
+        assert_eq!(reparsed.canonical(), spec.canonical());
+        assert_eq!(reparsed.display_name(), spec.display_name());
+        assert_eq!(reparsed.signature().name(), spec.signature().name());
+        assert_eq!(reparsed.dithered(), spec.dithered());
+        assert_eq!(reparsed.preferred_wire_format(), spec.preferred_wire_format());
+        // Uppercasing / whitespace never changes the resolved spec.
+        let shouted = spec.canonical().to_ascii_uppercase();
+        assert_eq!(MethodSpec::parse(&format!(" {shouted} ")).unwrap(), spec);
+    });
+}
+
+/// Random junk never parses silently: either it is one of the known
+/// grammars or the error names the valid families.
+#[test]
+fn prop_junk_specs_error_with_family_list() {
+    property("junk method specs", 200, |g| {
+        let len = g.usize_in(1, 12);
+        let junk: String = (0..len)
+            .map(|_| (b'a' + g.usize_in(0, 25) as u8) as char)
+            .collect();
+        if let Err(e) = MethodSpec::parse(&junk) {
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("valid families") || msg.contains("parameter"),
+                "unhelpful error for '{junk}': {msg}"
+            );
+        }
+    });
+}
+
+/// The registry proves itself end-to-end: a constant dataset sketched
+/// through each *new* family decodes its single centroid back (the
+/// modulo ramp exercises the phase-shifted atom path — a wrong phase
+/// would send the centroid far off).
+#[test]
+fn new_families_decode_a_dirac_through_the_registry() {
+    use crate::clompr::ClOmpr;
+    use crate::frequency::{DrawnFrequencies, FrequencyLaw};
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+    use crate::sketch::SketchOperator;
+
+    for spec_str in ["modulo", "qckm:bits=3"] {
+        let spec = MethodSpec::parse(spec_str).unwrap();
+        let mut rng = Rng::new(61);
+        let x = Mat::from_fn(400, 3, |_, c| 0.3 * (c as f64 + 1.0)); // all rows equal
+        // m = 96 frequencies: the ramp's harmonic tail (π²/6 − 1 ≈ 0.64) is
+        // ~3× the quantizer's, so give the dithered average more samples.
+        let freqs = DrawnFrequencies::draw(FrequencyLaw::Gaussian, 3, 96, 1.0, &mut rng);
+        assert!(spec.dithered());
+        let op = SketchOperator::new(freqs, spec.signature());
+        let z = op.sketch_dataset(&x);
+        let sol = ClOmpr::new(&op, 1)
+            .with_bounds(vec![-1.0; 3], vec![2.0; 3])
+            .run(&z, &mut rng);
+        for (j, &v) in sol.centroids.row(0).iter().enumerate() {
+            let want = 0.3 * (j as f64 + 1.0);
+            assert!(
+                (v - want).abs() < 0.25,
+                "{spec_str}: coord {j}: {v} vs {want}"
+            );
+        }
+    }
+}

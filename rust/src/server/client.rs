@@ -14,6 +14,9 @@ use std::time::Duration;
 /// the server runs one handler thread per connection.
 pub struct Client {
     stream: TcpStream,
+    /// Declared canonical method spec carried on push/query/snapshot
+    /// (empty = declare nothing; the server then skips the check).
+    method: String,
 }
 
 impl Client {
@@ -26,7 +29,18 @@ impl Client {
             .set_read_timeout(Some(Duration::from_secs(300)))
             .context("set read timeout")?;
         stream.set_nodelay(true).ok();
-        Ok(Self { stream })
+        Ok(Self {
+            stream,
+            method: String::new(),
+        })
+    }
+
+    /// Declare the method this client expects the server to sketch with.
+    /// Every subsequent push/query/snapshot carries the spec, and the
+    /// server refuses the request if its operator's method differs.
+    pub fn declare_method(mut self, spec: &str) -> Self {
+        self.method = spec.to_string();
+        self
     }
 
     fn call(&mut self, req: &Request) -> Result<Response> {
@@ -42,6 +56,7 @@ impl Client {
     pub fn push(&mut self, shard: &str, batch: &Mat) -> Result<(u64, u64)> {
         let req = Request::Push {
             shard: shard.to_string(),
+            method: self.method.clone(),
             dim: batch.cols() as u32,
             data: batch.as_slice().to_vec(),
         };
@@ -56,7 +71,11 @@ impl Client {
 
     /// Decode centroids from a window.
     pub fn query(&mut self, spec: &QuerySpec) -> Result<CentroidReport> {
-        match self.call(&Request::Query(spec.clone()))? {
+        let req = Request::Query {
+            spec: spec.clone(),
+            method: self.method.clone(),
+        };
+        match self.call(&req)? {
             Response::Centroids(report) => Ok(report),
             other => bail!("unexpected reply to query: {other:?}"),
         }
@@ -65,7 +84,11 @@ impl Client {
     /// Fetch a window as `.qsk` bytes (write them to a file and they are a
     /// regular sketch file for `qckm merge` / `qckm decode`).
     pub fn snapshot(&mut self, window: u32) -> Result<Vec<u8>> {
-        match self.call(&Request::Snapshot { window })? {
+        let req = Request::Snapshot {
+            window,
+            method: self.method.clone(),
+        };
+        match self.call(&req)? {
             Response::Snapshot(bytes) => Ok(bytes),
             other => bail!("unexpected reply to snapshot: {other:?}"),
         }

@@ -19,8 +19,11 @@
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 
-/// Protocol version carried in every frame.
-pub const PROTO_VERSION: u8 = 1;
+/// Protocol version carried in every frame. Version 2 added the declared
+/// method-spec string to push/query/snapshot requests (so every stage of a
+/// distributed job agrees on the method, mismatches refused server-side)
+/// and to the stats report.
+pub const PROTO_VERSION: u8 = 2;
 /// Hard ceiling on one frame's payload (256 MiB) — covers the largest
 /// plausible push batch and snapshot while bounding allocations.
 pub const MAX_FRAME_BYTES: usize = 1 << 28;
@@ -38,6 +41,8 @@ pub fn max_batch_rows(dim: usize) -> usize {
 pub const MAX_DIM: usize = 1 << 24;
 /// Ceiling on shard-label bytes (matches `.qsk` provenance labels).
 pub const MAX_SHARD_BYTES: usize = 256;
+/// Ceiling on method-spec bytes (matches the `.qsk` method field cap).
+pub const MAX_METHOD_BYTES: usize = 64;
 
 const TAG_PUSH: u8 = 1;
 const TAG_QUERY: u8 = 2;
@@ -91,6 +96,8 @@ pub struct CentroidReport {
 /// Server counters returned by a stats request.
 #[derive(Clone, Debug, PartialEq)]
 pub struct StatsReport {
+    /// The server operator's canonical method spec.
+    pub method: String,
     /// Index of the open epoch (0-based; incremented by each roll).
     pub epoch: u64,
     /// All-time pooled rows.
@@ -104,19 +111,26 @@ pub struct StatsReport {
 }
 
 /// Client → server messages.
+///
+/// `method` on push/query/snapshot is the client's *declared* canonical
+/// method spec ([`crate::method::MethodSpec`]); empty means "don't check".
+/// The server refuses any request whose declared method does not resolve
+/// to its operator's method, so mixed-method pipelines fail loudly at the
+/// protocol boundary instead of pooling incompatible sketches.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     /// Ingest a row batch into `shard`'s accumulator (`rows × dim`,
     /// row-major).
     Push {
         shard: String,
+        method: String,
         dim: u32,
         data: Vec<f64>,
     },
     /// Decode centroids from a window.
-    Query(QuerySpec),
+    Query { spec: QuerySpec, method: String },
     /// Serialize a window as `.qsk` bytes.
-    Snapshot { window: u32 },
+    Snapshot { window: u32, method: String },
     /// Close the open epoch and start a new one.
     Roll,
     /// Report counters.
@@ -215,17 +229,24 @@ pub fn read_response(r: &mut impl Read) -> Result<Response> {
 pub fn encode_request(req: &Request) -> Vec<u8> {
     let mut b = vec![PROTO_VERSION];
     match req {
-        Request::Push { shard, dim, data } => {
+        Request::Push {
+            shard,
+            method,
+            dim,
+            data,
+        } => {
             b.push(TAG_PUSH);
             put_str(&mut b, shard);
+            put_str(&mut b, method);
             b.extend_from_slice(&dim.to_le_bytes());
             b.extend_from_slice(&(data.len() as u64).to_le_bytes());
             for &v in data {
                 b.extend_from_slice(&v.to_le_bytes());
             }
         }
-        Request::Query(q) => {
+        Request::Query { spec: q, method } => {
             b.push(TAG_QUERY);
+            put_str(&mut b, method);
             b.extend_from_slice(&q.k.to_le_bytes());
             b.extend_from_slice(&q.window.to_le_bytes());
             b.extend_from_slice(&q.replicates.to_le_bytes());
@@ -234,8 +255,9 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             b.extend_from_slice(&q.lo.to_le_bytes());
             b.extend_from_slice(&q.hi.to_le_bytes());
         }
-        Request::Snapshot { window } => {
+        Request::Snapshot { window, method } => {
             b.push(TAG_SNAPSHOT);
+            put_str(&mut b, method);
             b.extend_from_slice(&window.to_le_bytes());
         }
         Request::Roll => b.push(TAG_ROLL),
@@ -258,6 +280,7 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
             if shard.is_empty() {
                 bail!("push: empty shard label");
             }
+            let method = r.str(MAX_METHOD_BYTES)?;
             let dim = r.u32()?;
             if dim == 0 || dim as usize > MAX_DIM {
                 bail!("push: implausible dimension {dim}");
@@ -270,9 +293,15 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
                 bail!("push: batch exceeds {MAX_PUSH_ROWS} rows");
             }
             let data = r.f64_vec(len)?;
-            Request::Push { shard, dim, data }
+            Request::Push {
+                shard,
+                method,
+                dim,
+                data,
+            }
         }
         TAG_QUERY => {
+            let method = r.str(MAX_METHOD_BYTES)?;
             let k = r.u32()?;
             let window = r.u32()?;
             let replicates = r.u32()?;
@@ -280,16 +309,22 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
             let seed_raw = r.u64()?;
             let lo = r.f64()?;
             let hi = r.f64()?;
-            Request::Query(QuerySpec {
-                k,
-                window,
-                replicates,
-                seed: has_seed.then_some(seed_raw),
-                lo,
-                hi,
-            })
+            Request::Query {
+                spec: QuerySpec {
+                    k,
+                    window,
+                    replicates,
+                    seed: has_seed.then_some(seed_raw),
+                    lo,
+                    hi,
+                },
+                method,
+            }
         }
-        TAG_SNAPSHOT => Request::Snapshot { window: r.u32()? },
+        TAG_SNAPSHOT => Request::Snapshot {
+            method: r.str(MAX_METHOD_BYTES)?,
+            window: r.u32()?,
+        },
         TAG_ROLL => Request::Roll,
         TAG_STATS => Request::Stats,
         TAG_SHUTDOWN => Request::Shutdown,
@@ -347,6 +382,7 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
         Response::Stats(s) => {
             b.push(STATUS_OK);
             b.push(TAG_STATS);
+            put_str(&mut b, &s.method);
             b.extend_from_slice(&s.epoch.to_le_bytes());
             b.extend_from_slice(&s.rows_total.to_le_bytes());
             b.extend_from_slice(&s.epochs_held.to_le_bytes());
@@ -419,6 +455,7 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
             rows_closed: r.u64()?,
         },
         TAG_STATS => {
+            let method = r.str(MAX_METHOD_BYTES)?;
             let epoch = r.u64()?;
             let rows_total = r.u64()?;
             let epochs_held = r.u32()?;
@@ -435,6 +472,7 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
                 shards.push((label, rows));
             }
             Response::Stats(StatsReport {
+                method,
                 epoch,
                 rows_total,
                 epochs_held,

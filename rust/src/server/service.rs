@@ -113,7 +113,13 @@ fn handle_connection(
 /// Dispatch one request against the shared state.
 fn handle_request(service: &SketchService, req: Request) -> Result<Response> {
     Ok(match req {
-        Request::Push { shard, dim, data } => {
+        Request::Push {
+            shard,
+            method,
+            dim,
+            data,
+        } => {
+            service.check_method(&method)?;
             let rows = data.len() / dim as usize;
             let batch = Mat::from_vec(rows, dim as usize, data);
             let (shard_rows, total_rows) = service.ingest(&shard, &batch)?;
@@ -122,8 +128,14 @@ fn handle_request(service: &SketchService, req: Request) -> Result<Response> {
                 total_rows,
             }
         }
-        Request::Query(spec) => Response::Centroids(service.query(&spec)?),
-        Request::Snapshot { window } => Response::Snapshot(service.snapshot(window)?),
+        Request::Query { spec, method } => {
+            service.check_method(&method)?;
+            Response::Centroids(service.query(&spec)?)
+        }
+        Request::Snapshot { window, method } => {
+            service.check_method(&method)?;
+            Response::Snapshot(service.snapshot(window)?)
+        }
         Request::Roll => {
             let (epoch, rows_closed) = service.roll_epoch();
             Response::RollAck { epoch, rows_closed }

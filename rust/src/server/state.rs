@@ -151,6 +151,26 @@ impl SketchService {
         &self.meta
     }
 
+    /// Verify a client-declared method spec against this server's
+    /// operator. Empty means the client declared nothing (legacy behavior:
+    /// no check); anything else must parse and canonicalize to the
+    /// server's method, so push/query/snapshot can never silently mix
+    /// methods across a distributed job.
+    pub fn check_method(&self, declared: &str) -> Result<()> {
+        if declared.is_empty() {
+            return Ok(());
+        }
+        let spec = crate::method::MethodSpec::parse(declared)?;
+        if spec.canonical() != self.meta.method {
+            bail!(
+                "method mismatch: request declares '{}' but this server sketches with '{}'",
+                spec.canonical(),
+                self.meta.method
+            );
+        }
+        Ok(())
+    }
+
     /// Install a pre-existing pooled sketch (e.g. a snapshot from a
     /// previous run) as shard `label`'s *all-time* history. Seed data
     /// predates every epoch, so it participates in window-0 queries and
@@ -356,6 +376,7 @@ impl SketchService {
     pub fn stats(&self) -> StatsReport {
         let inner = self.inner.lock().unwrap();
         StatsReport {
+            method: self.meta.method.clone(),
             epoch: inner.epoch_index,
             rows_total: inner.alltime.values().map(|p| p.count()).sum(),
             epochs_held: inner.closed.len() as u32,

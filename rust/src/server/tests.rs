@@ -6,9 +6,9 @@
 
 use super::proto::{self, CentroidReport, QuerySpec, Request, Response, StatsReport};
 use super::state::{ServiceConfig, SketchService};
-use crate::config::Method;
 use crate::frequency::FrequencyLaw;
 use crate::linalg::Mat;
+use crate::method::MethodSpec;
 use crate::rng::Rng;
 use crate::sketch::PooledSketch;
 use crate::stream::{draw_operator, read_sketch_from, SketchMeta};
@@ -20,8 +20,9 @@ const SIGMA: f64 = 1.1;
 const SEED: u64 = 5;
 
 fn service(cfg: ServiceConfig) -> SketchService {
-    let op = draw_operator(Method::Qckm, FrequencyLaw::AdaptedRadius, M, DIM, SIGMA, SEED);
-    let meta = SketchMeta::for_operator(&op, Method::Qckm, SEED);
+    let qckm = MethodSpec::parse("qckm").unwrap();
+    let op = draw_operator(&qckm, FrequencyLaw::AdaptedRadius, M, DIM, SIGMA, SEED);
+    let meta = SketchMeta::for_operator(&op, &qckm, SEED);
     SketchService::new(op, meta, cfg)
 }
 
@@ -48,19 +49,35 @@ fn proto_round_trips_every_request_variant() {
     let requests = [
         Request::Push {
             shard: "sensor-7".into(),
+            method: "qckm:bits=2".into(),
             dim: 3,
             data: vec![1.5, -2.25, 0.0, 4.0, 5.0, -6.0],
         },
-        Request::Query(QuerySpec {
-            k: 4,
-            window: 2,
-            replicates: 3,
-            seed: Some(99),
-            lo: -1.5,
-            hi: 1.5,
-        }),
-        Request::Query(spec(1, 0)),
-        Request::Snapshot { window: 7 },
+        Request::Push {
+            shard: "sensor-8".into(),
+            method: String::new(),
+            dim: 2,
+            data: vec![1.0, 2.0],
+        },
+        Request::Query {
+            spec: QuerySpec {
+                k: 4,
+                window: 2,
+                replicates: 3,
+                seed: Some(99),
+                lo: -1.5,
+                hi: 1.5,
+            },
+            method: "modulo".into(),
+        },
+        Request::Query {
+            spec: spec(1, 0),
+            method: String::new(),
+        },
+        Request::Snapshot {
+            window: 7,
+            method: "qckm".into(),
+        },
         Request::Roll,
         Request::Stats,
         Request::Shutdown,
@@ -95,6 +112,7 @@ fn proto_round_trips_every_response_variant() {
             rows_closed: 512,
         },
         Response::Stats(StatsReport {
+            method: "qckm:bits=3".into(),
             epoch: 2,
             rows_total: 77,
             epochs_held: 2,
@@ -123,7 +141,10 @@ fn proto_rejects_malformed_payloads() {
     assert!(proto::decode_request(&bytes).is_err());
 
     // Truncated body.
-    let bytes = proto::encode_request(&Request::Query(spec(2, 0)));
+    let bytes = proto::encode_request(&Request::Query {
+        spec: spec(2, 0),
+        method: String::new(),
+    });
     assert!(proto::decode_request(&bytes[..bytes.len() - 1]).is_err());
 
     // Trailing garbage.
@@ -134,11 +155,13 @@ fn proto_rejects_malformed_payloads() {
     // Push payload not a whole number of rows.
     let mut ok = proto::encode_request(&Request::Push {
         shard: "s".into(),
+        method: String::new(),
         dim: 3,
         data: vec![0.0; 6],
     });
-    // dim lives right after the 1-byte version, 1-byte tag, 4+1 byte label.
-    ok[7] = 4; // now 6 values over dim 4
+    // dim lives after the 1-byte version, 1-byte tag, 4+1 byte shard
+    // label, and 4+0 byte method spec.
+    ok[11] = 4; // now 6 values over dim 4
     assert!(proto::decode_request(&ok).is_err());
 
     // Oversized frame length on the wire.
@@ -179,6 +202,23 @@ fn ingest_rejects_wrong_dimension_and_bad_labels() {
     assert!(svc.ingest("s", &random_mat(5, DIM + 1, 2)).is_err());
     assert!(svc.ingest("", &random_mat(5, DIM, 2)).is_err());
     assert!(svc.ingest(&"x".repeat(300), &random_mat(5, DIM, 2)).is_err());
+}
+
+#[test]
+fn declared_methods_are_checked_against_the_operator() {
+    let svc = service(ServiceConfig::default()); // operator method: qckm
+    svc.check_method("").unwrap(); // nothing declared → no check
+    svc.check_method("qckm").unwrap();
+    svc.check_method("QCKM").unwrap(); // canonicalized before comparing
+    svc.check_method("qckm:bits=1").unwrap(); // canonicalizes to qckm
+    let err = format!("{:#}", svc.check_method("qckm:bits=2").unwrap_err());
+    assert!(err.contains("method mismatch"), "{err}");
+    let err = format!("{:#}", svc.check_method("ckm").unwrap_err());
+    assert!(err.contains("method mismatch"), "{err}");
+    // Junk specs surface the registry's parse error.
+    let err = format!("{:#}", svc.check_method("nope").unwrap_err());
+    assert!(err.contains("valid families"), "{err}");
+    assert_eq!(svc.stats().method, "qckm");
 }
 
 #[test]
@@ -386,19 +426,26 @@ fn socket_smoke_push_query_snapshot_shutdown() {
     let a = data.points.select_rows(&(0..400).collect::<Vec<_>>());
     let b = data.points.select_rows(&(400..800).collect::<Vec<_>>());
 
-    // Two concurrent pushing connections.
+    // Two concurrent pushing connections, declaring the method (the server
+    // verifies it against its operator on every push).
     std::thread::scope(|scope| {
         for (label, x) in [("a", &a), ("b", &b)] {
             let addr = addr.clone();
             scope.spawn(move || {
-                let mut client = super::Client::connect(&addr).unwrap();
+                let mut client = super::Client::connect(&addr).unwrap().declare_method("qckm");
                 let (shard_rows, _) = client.push(label, x).unwrap();
                 assert_eq!(shard_rows, 400);
             });
         }
     });
 
-    let mut client = super::Client::connect(&addr).unwrap();
+    // A client declaring the wrong method is refused at the protocol
+    // boundary (the connection survives; only the request errors).
+    let mut wrong = super::Client::connect(&addr).unwrap().declare_method("ckm");
+    let err = format!("{:#}", wrong.query(&spec(2, 0)).unwrap_err());
+    assert!(err.contains("method mismatch"), "{err}");
+
+    let mut client = super::Client::connect(&addr).unwrap().declare_method("qckm:bits=1");
     let report = client.query(&spec(2, 0)).unwrap();
     assert_eq!(report.rows, 800);
     assert_eq!(report.centroids, svc.query(&spec(2, 0)).unwrap().centroids);
@@ -411,6 +458,7 @@ fn socket_smoke_push_query_snapshot_shutdown() {
     let stats = client.stats().unwrap();
     assert_eq!(stats.rows_total, 800);
     assert_eq!(stats.shards.len(), 2);
+    assert_eq!(stats.method, "qckm");
 
     client.shutdown().unwrap();
     let served = server.join().unwrap();

@@ -21,15 +21,21 @@
 //!   model), exercised in the ablation experiments,
 //! * [`MultiBitQuantizer`] — a B-bit staircase approximation of the cosine,
 //!   interpolating between `UniversalQuantizer` (B=1, after re-scaling) and
-//!   `Cosine` (B→∞); used by the bit-depth ablation.
+//!   `Cosine` (B→∞); used by the bit-depth ablation,
+//! * [`ModuloRamp`] — the self-reset ADC sawtooth `(t mod 2π)/π − 1`, the
+//!   one *odd* signature in the zoo: its first harmonic carries a π/2
+//!   phase, reported via [`Signature::first_harmonic_phase`] and absorbed
+//!   into the decode atoms by [`crate::sketch::SketchOperator`].
 //!
-//! All of these are *even* functions (their Fourier coefficients are real),
-//! which is what the sketch layout in `crate::sketch` assumes; the dithering
-//! supplies all needed phase diversity.
+//! Most of these are *even* functions (real Fourier coefficients, phase
+//! zero), which is the default the sketch layout in `crate::sketch`
+//! assumes; an odd signature like the ramp declares its first-harmonic
+//! phase and decoding evaluates `cos(· + φ₁)` instead — the dithering
+//! supplies all other phase diversity.
 
 mod quantizers;
 
-pub use quantizers::{MultiBitQuantizer, Triangle, UniversalQuantizer};
+pub use quantizers::{ModuloRamp, MultiBitQuantizer, Triangle, UniversalQuantizer};
 
 use std::f64::consts::PI;
 
@@ -38,19 +44,37 @@ pub trait Signature: Send + Sync {
     /// Evaluate `f(t)` (t need not be reduced mod 2π).
     fn eval(&self, t: f64) -> f64;
 
-    /// The (real) Fourier coefficient `F_k` of `e^{ikt}` in
-    /// `f(t) = Σ_k F_k e^{ikt}`. Even `f` ⇒ `F_k = F_{-k} ∈ ℝ`.
+    /// The Fourier coefficient `F_k` of `e^{ikt}` in
+    /// `f(t) = Σ_k F_k e^{ikt}`. Even `f` ⇒ `F_k = F_{-k} ∈ ℝ` and this is
+    /// the signed real coefficient; a non-even signature (e.g.
+    /// [`ModuloRamp`]) returns the *magnitude* `|F_k|` here and reports the
+    /// first harmonic's phase via
+    /// [`first_harmonic_phase`](Self::first_harmonic_phase). Every consumer
+    /// in this crate uses `|F_k|` or `F_k²` only, so both conventions feed
+    /// the same formulas.
     ///
-    /// The default implementation integrates numerically; concrete
-    /// signatures override with their analytic series (tests cross-check
-    /// the two).
+    /// The default implementation integrates numerically (even signatures
+    /// only); concrete signatures override with their analytic series
+    /// (tests cross-check the two).
     fn fourier_coeff(&self, k: i32) -> f64 {
         numeric_fourier_coeff(&|t| self.eval(t), k)
     }
 
-    /// Amplitude of the first harmonic `f1(t) = 2|F_1| cos t`. Must be > 0.
+    /// Amplitude of the first harmonic `f1(t) = 2|F_1| cos(t + φ₁)`.
+    /// Must be > 0.
     fn first_harmonic_amplitude(&self) -> f64 {
         2.0 * self.fourier_coeff(1).abs()
+    }
+
+    /// Phase `φ₁` of the first harmonic `f1(t) = 2|F_1| cos(t + φ₁)`.
+    ///
+    /// Even signatures have `φ₁ = 0` (the default). An odd signature like
+    /// the self-reset ramp declares its phase here;
+    /// [`crate::sketch::SketchOperator`] adds it to every decode-atom
+    /// argument so sketch matching stays phase-aligned (Prop. 1 holds for
+    /// any `φ₁` — the dither expectation cancels the phase).
+    fn first_harmonic_phase(&self) -> f64 {
+        0.0
     }
 
     /// Short identifier used in configs / logs.

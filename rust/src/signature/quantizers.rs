@@ -143,6 +143,66 @@ impl Signature for MultiBitQuantizer {
     }
 
     fn name(&self) -> &'static str {
-        "multibit-quantizer"
+        // Per-bit-depth names: the name feeds the `.qsk` operator
+        // fingerprint, and a 2-bit and a 3-bit staircase must never
+        // fingerprint equal (their sketches are incompatible).
+        const NAMES: [&str; 16] = [
+            "multibit-1",
+            "multibit-2",
+            "multibit-3",
+            "multibit-4",
+            "multibit-5",
+            "multibit-6",
+            "multibit-7",
+            "multibit-8",
+            "multibit-9",
+            "multibit-10",
+            "multibit-11",
+            "multibit-12",
+            "multibit-13",
+            "multibit-14",
+            "multibit-15",
+            "multibit-16",
+        ];
+        NAMES[(self.bits - 1) as usize]
+    }
+}
+
+/// Self-reset ADC ramp ("modulo" sampling): `f(t) = (t mod 2π)/π − 1`, the
+/// sawtooth a self-reset ADC front end produces when its integrator wraps
+/// instead of saturating.
+///
+/// The one *odd* signature in the zoo — its Fourier series is pure sine,
+/// `f(t) = −(2/π) Σ_{k≥1} sin(kt)/k`, so the first harmonic is
+/// `(2/π)·cos(t + π/2)`: amplitude `2|F_1| = 2/π` with a `π/2` phase that
+/// [`Signature::first_harmonic_phase`] reports and the decode atoms absorb.
+/// Exists to prove the open method registry handles signatures beyond the
+/// even family the seed shipped with.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ModuloRamp;
+
+impl Signature for ModuloRamp {
+    #[inline]
+    fn eval(&self, t: f64) -> f64 {
+        wrap_2pi(t) / PI - 1.0
+    }
+
+    /// Magnitudes `|F_k| = 1/(πk)` (odd signature — see the trait docs;
+    /// the phase lives in [`Signature::first_harmonic_phase`]).
+    fn fourier_coeff(&self, k: i32) -> f64 {
+        let k = k.abs();
+        if k == 0 {
+            0.0
+        } else {
+            1.0 / (PI * k as f64)
+        }
+    }
+
+    fn first_harmonic_phase(&self) -> f64 {
+        std::f64::consts::FRAC_PI_2
+    }
+
+    fn name(&self) -> &'static str {
+        "modulo-ramp"
     }
 }

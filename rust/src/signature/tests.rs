@@ -124,6 +124,89 @@ fn multibit_rejects_zero_bits() {
 }
 
 #[test]
+fn modulo_ramp_shape_and_sine_series() {
+    let f = ModuloRamp;
+    // Periodic, bounded, centered — but *odd*, not even.
+    for i in 0..200 {
+        let t = -10.0 + i as f64 * 0.1;
+        let v = f.eval(t);
+        assert!((-1.0..=1.0).contains(&v), "out of range at {t}");
+        assert!((f.eval(t + 2.0 * PI) - v).abs() < 1e-12, "not 2π-periodic at {t}");
+        // Odd symmetry f(−t) = −f(t), away from the wrap discontinuity.
+        let r = wrap_2pi(t);
+        if r > 1e-6 && (2.0 * PI - r) > 1e-6 {
+            assert!((f.eval(-t) + v).abs() < 1e-9, "not odd at {t}");
+        }
+    }
+    // The ramp itself: f(0⁺) = −1 rising linearly to f(2π⁻) = 1.
+    assert!((f.eval(0.0) + 1.0).abs() < 1e-12);
+    assert!((f.eval(PI) - 0.0).abs() < 1e-12);
+    assert!((f.eval(1.5 * PI) - 0.5).abs() < 1e-12);
+    // Mean zero (F_0 = 0) numerically.
+    assert!(numeric_fourier_coeff(&|t| f.eval(t), 0).abs() < 1e-9);
+
+    // fourier_coeff reports magnitudes |F_k| = 1/(πk): cross-check against
+    // the numeric cosine AND sine projections, c_k and s_k, via
+    // |F_k| = hypot(c_k, s_k) (for the pure sawtooth c_k ≈ 0).
+    for k in 1..=7i32 {
+        let c_k = numeric_fourier_coeff(&|t| f.eval(t), k);
+        let s_k = {
+            // (1/2π) ∫ f(t) sin(kt) dt on the same Simpson grid.
+            let n = 1 << 16;
+            let h = 2.0 * PI / n as f64;
+            let g = |t: f64| f.eval(t) * (k as f64 * t).sin();
+            let mut s = g(0.0) + g(2.0 * PI);
+            for i in 1..n {
+                let t = i as f64 * h;
+                s += if i % 2 == 1 { 4.0 } else { 2.0 } * g(t);
+            }
+            (s * h / 3.0) / (2.0 * PI)
+        };
+        assert!(c_k.abs() < 1e-6, "sawtooth has no cosine part: c_{k} = {c_k}");
+        let numeric_mag = (c_k * c_k + s_k * s_k).sqrt();
+        assert!(
+            (f.fourier_coeff(k) - numeric_mag).abs() < 1e-6,
+            "|F_{k}|: analytic {} vs numeric {numeric_mag}",
+            f.fourier_coeff(k)
+        );
+        // First harmonic phase: f1 = 2|F1| cos(t + φ) ⇒ c_1 = |F1| cos φ,
+        // s_1 = −|F1| sin φ ⇒ φ = atan2(−s_1, c_1).
+        if k == 1 {
+            let phi = (-s_k).atan2(c_k);
+            assert!(
+                (phi - f.first_harmonic_phase()).abs() < 1e-6,
+                "phase: numeric {phi} vs declared {}",
+                f.first_harmonic_phase()
+            );
+        }
+    }
+    assert!((f.first_harmonic_amplitude() - 2.0 / PI).abs() < 1e-12);
+    // Tail energy Σ_{k≥2} 1/k² = π²/6 − 1 (truncation at 1025 ≈ 1/1025).
+    assert!(
+        (f.tail_energy_ratio() - (PI * PI / 6.0 - 1.0)).abs() < 2e-3,
+        "ramp tail {}",
+        f.tail_energy_ratio()
+    );
+}
+
+#[test]
+fn even_signatures_declare_zero_phase() {
+    assert_eq!(Cosine.first_harmonic_phase(), 0.0);
+    assert_eq!(UniversalQuantizer.first_harmonic_phase(), 0.0);
+    assert_eq!(Triangle.first_harmonic_phase(), 0.0);
+    assert_eq!(MultiBitQuantizer::new(3).first_harmonic_phase(), 0.0);
+}
+
+#[test]
+fn multibit_names_distinguish_bit_depths() {
+    // The name feeds the .qsk operator fingerprint — depths must differ.
+    let names: Vec<&str> = (1..=16).map(|b| MultiBitQuantizer::new(b).name()).collect();
+    for (i, n) in names.iter().enumerate() {
+        assert_eq!(*n, format!("multibit-{}", i + 1));
+    }
+}
+
+#[test]
 fn prop1_constants() {
     // C_f = 8 F1⁴/(1+2F1)⁴. For cosine F1 = 1/2 → 8·(1/16)/16 = 1/32.
     assert!((Cosine.prop1_constant() - 1.0 / 32.0).abs() < 1e-12);

@@ -14,7 +14,10 @@
 //!   hardware of Fig. 1 computes, one bit per slot for QCKM.
 //! * **Decode** ([`SketchOperator::atom`], [`atom_grad_accumulate`]) always
 //!   uses the *first harmonic*: cosine atoms of amplitude `2|F_1|`
-//!   (Prop. 1). A convenient consequence of the paired-slot layout is that
+//!   (Prop. 1), shifted by the signature's first-harmonic phase `φ₁` when
+//!   it has one (odd signatures like the modulo ramp — see
+//!   [`crate::signature::Signature::first_harmonic_phase`]). A convenient
+//!   consequence of the paired-slot layout is that
 //!   `‖a(c)‖² = A²·M` for every `c` (cos² + sin² pairing), so normalized
 //!   atoms need no per-candidate norm computation.
 //!
@@ -50,6 +53,10 @@ pub struct SketchOperator {
     signature: Arc<dyn Signature>,
     /// Decode-atom amplitude `2|F_1|` (cached).
     amplitude: f64,
+    /// Decode-atom phase `φ₁` of `f1(t) = 2|F_1| cos(t + φ₁)` (cached).
+    /// Zero for every even signature; the modulo ramp's sine-led first
+    /// harmonic lands here, and every atom argument below adds it.
+    phase: f64,
 }
 
 impl SketchOperator {
@@ -60,10 +67,12 @@ impl SketchOperator {
             "signature '{}' has vanishing first harmonic",
             signature.name()
         );
+        let phase = signature.first_harmonic_phase();
         Self {
             freqs: Arc::new(freqs),
             signature,
             amplitude,
+            phase,
         }
     }
 
@@ -264,12 +273,21 @@ impl SketchOperator {
         }
     }
 
-    /// Decode-side atom `a(c)_{2j+p} = A·cos(ω_j^T c + ξ_j + pπ/2)`.
+    /// Decode-atom phase `φ₁` (0 for even signatures).
+    pub fn phase(&self) -> f64 {
+        self.phase
+    }
+
+    /// Decode-side atom `a(c)_{2j+p} = A·cos(ω_j^T c + ξ_j + φ₁ + pπ/2)`.
+    ///
+    /// (`φ₁` is the signature's first-harmonic phase — 0 for every even
+    /// signature, where `+ 0.0` is a bitwise no-op since no reachable
+    /// argument is `−0.0`.)
     pub fn atom(&self, c: &[f64]) -> Vec<f64> {
         let t = self.project(c);
         let mut a = vec![0.0; 2 * t.len()];
         for (j, &tj) in t.iter().enumerate() {
-            let arg = tj + self.freqs.xi[j];
+            let arg = tj + self.freqs.xi[j] + self.phase;
             let (s, co) = arg.sin_cos();
             a[2 * j] = self.amplitude * co;
             a[2 * j + 1] = -self.amplitude * s; // cos(arg + π/2) = −sin(arg)
@@ -293,7 +311,7 @@ impl SketchOperator {
         // w_j = −A (v_{2j} sinθ_j − v_{2j+1} cosθ_j); grad = Ω w = Σ_j w_j ω_j.
         let mut w = vec![0.0; m];
         for (j, &tj) in t.iter().enumerate() {
-            let arg = tj + self.freqs.xi[j];
+            let arg = tj + self.freqs.xi[j] + self.phase;
             let (s, co) = arg.sin_cos();
             a[2 * j] = self.amplitude * co;
             a[2 * j + 1] = -self.amplitude * s;

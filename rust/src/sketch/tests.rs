@@ -4,7 +4,7 @@ use super::*;
 use crate::frequency::{DrawnFrequencies, FrequencyLaw};
 use crate::linalg::{norm2, sq_dist, Mat};
 use crate::rng::Rng;
-use crate::signature::{Cosine, Triangle, UniversalQuantizer};
+use crate::signature::{Cosine, ModuloRamp, Triangle, UniversalQuantizer};
 use std::f64::consts::PI;
 use std::sync::Arc;
 
@@ -165,6 +165,61 @@ fn atom_norm_is_constant() {
         );
     }
     assert!((o.atom_norm() - (4.0 / PI) * 8.0).abs() < 1e-12); // A·√64
+}
+
+/// Decode atoms of a phase-shifted (odd) signature evaluate
+/// `A·cos(ω^T c + ξ + φ₁ + pπ/2)` — the first-harmonic phase is baked into
+/// every slot — while even signatures keep `φ₁ = 0` and their atoms are
+/// bit-for-bit the phase-free formula.
+#[test]
+fn atom_phase_shifts_for_odd_signatures_only() {
+    let o = op(Arc::new(ModuloRamp), 4, 20, 9);
+    assert!((o.phase() - 0.5 * PI).abs() < 1e-15);
+    assert!((o.amplitude() - 2.0 / PI).abs() < 1e-12);
+    let mut rng = Rng::new(10);
+    let c: Vec<f64> = (0..4).map(|_| rng.gaussian()).collect();
+    let a = o.atom(&c);
+    let freqs = o.frequencies();
+    for j in 0..20 {
+        let t: f64 = (0..4).map(|r| freqs.omega.get(r, j) * c[r]).sum();
+        let arg = t + freqs.xi[j] + 0.5 * PI;
+        assert!((a[2 * j] - o.amplitude() * arg.cos()).abs() < 1e-9);
+        assert!((a[2 * j + 1] + o.amplitude() * arg.sin()).abs() < 1e-9);
+    }
+    // Norm constancy survives the phase (cos² + sin² pairing).
+    assert!((norm2(&a) - o.atom_norm()).abs() < 1e-9);
+
+    // Even signature: phase 0, so `arg + phase` is the bitwise identity
+    // (`x + 0.0 == x` for every reachable argument) and the atom is the
+    // legacy phase-free formula.
+    let e = op(Arc::new(UniversalQuantizer), 4, 20, 9);
+    assert_eq!(e.phase(), 0.0);
+    let ae = e.atom(&c);
+    let freqs = e.frequencies();
+    for j in 0..20 {
+        let t: f64 = (0..4).map(|r| freqs.omega.get(r, j) * c[r]).sum();
+        let arg = t + freqs.xi[j];
+        assert!((ae[2 * j] - e.amplitude() * arg.cos()).abs() < 1e-12, "slot {j}");
+    }
+}
+
+/// The fused atom+gradient path agrees with the plain atom for a
+/// phase-shifted signature (both must add φ₁ identically).
+#[test]
+fn atom_and_jtv_matches_atom_under_phase() {
+    let o = op(Arc::new(ModuloRamp), 3, 16, 11);
+    let mut rng = Rng::new(12);
+    let c: Vec<f64> = (0..3).map(|_| rng.gaussian()).collect();
+    let v: Vec<f64> = (0..o.sketch_len()).map(|_| rng.gaussian()).collect();
+    let mut grad = vec![0.0; 3];
+    let a_fused = o.atom_and_jtv(&c, &v, &mut grad);
+    assert_eq!(a_fused, o.atom(&c), "fused atom must equal the plain atom");
+    // And the trig-free jtv_from_atom reproduces the fused gradient.
+    let mut grad2 = vec![0.0; 3];
+    o.jtv_from_atom(&a_fused, &v, &mut grad2);
+    for (g1, g2) in grad.iter().zip(&grad2) {
+        assert!((g1 - g2).abs() < 1e-9, "gradients diverge: {g1} vs {g2}");
+    }
 }
 
 #[test]

@@ -44,7 +44,7 @@ mod reader;
 pub use qsk::{
     draw_operator, load_sketch, load_sketch_full, operator_fingerprint, pool_fingerprint,
     read_sketch_from, save_sketch, save_sketch_with, write_sketch_to, ShardRecord, SketchMeta,
-    MAX_LABEL_BYTES, QSK_MAGIC, QSK_VERSION, QSK_VERSION_V1,
+    MAX_HEADER_STR_BYTES, MAX_LABEL_BYTES, QSK_MAGIC, QSK_VERSION, QSK_VERSION_V1, QSK_VERSION_V2,
 };
 pub(crate) use qsk::Fnv1a;
 pub use reader::{

@@ -14,8 +14,9 @@
 //!
 //! ```text
 //! magic       4  b"QSKF"
-//! version     u32   (2; version-1 files still load, see below)
-//! method      u32 length + UTF-8   (ckm|qckm|triangle, see config::Method)
+//! version     u32   (2 or 3 — see the version policy below)
+//! method      u32 length + UTF-8   (canonical method spec string, e.g.
+//!                    "qckm" or "qckm:bits=3" — see crate::method)
 //! law         u32 length + UTF-8   (frequency law name)
 //! sigma       f64   (kernel bandwidth the frequencies were scaled with)
 //! seed        u64   (frequency-draw seed)
@@ -34,15 +35,26 @@
 //!                    garbage centroids)
 //! ```
 //!
-//! Version-1 files (no provenance, no checksum) still load; the writer
-//! always emits version 2.
+//! ## Version policy
 //!
-//! The `config_hash` covers the actual frequency matrix bits, so two
-//! sketches merge only if they were drawn from the *same* randomness —
-//! matching `(seed, m, d, sigma, law, method)` alone would miss a changed
-//! RNG or draw algorithm between builds.
+//! * **v1** (no provenance, no checksum) still loads.
+//! * **v2** and **v3** share the exact layout above; the difference is the
+//!   *method field's vocabulary*. v2 carries only the legacy bare names
+//!   (`ckm`, `qckm`, `triangle`); v3 may carry any canonical
+//!   [`crate::method::MethodSpec`] string (`qckm:bits=3`, `modulo`, …).
+//! * The writer emits v2 whenever the method is a legacy name — so every
+//!   sketch a legacy pipeline could have produced stays **byte-for-byte**
+//!   what the previous build wrote — and v3 otherwise, so pre-registry
+//!   builds reject new-family sketches up front with a clear
+//!   "unsupported version" instead of failing mid-decode on an unknown
+//!   method name.
+//!
+//! The `config_hash` covers the actual frequency matrix bits and the
+//! signature name, so two sketches merge only if they were drawn from the
+//! *same* randomness — matching `(seed, m, d, sigma, law, method)` alone
+//! would miss a changed RNG or draw algorithm between builds.
 
-use crate::config::Method;
+use crate::method::MethodSpec;
 use crate::frequency::{DrawnFrequencies, FrequencyLaw};
 use crate::rng::Rng;
 use crate::sketch::{PooledSketch, SketchOperator};
@@ -52,17 +64,28 @@ use std::path::Path;
 
 /// File magic: "QSK file".
 pub const QSK_MAGIC: [u8; 4] = *b"QSKF";
-/// Current format version (checksummed payload + provenance records).
-pub const QSK_VERSION: u32 = 2;
+/// Newest format version (parameterized method-spec vocabulary; layout
+/// identical to v2 — see the version policy in the module docs).
+pub const QSK_VERSION: u32 = 3;
+/// The checksummed/provenance version, still written for legacy method
+/// names so their files stay byte-identical across builds.
+pub const QSK_VERSION_V2: u32 = 2;
 /// The original format version (still readable).
 pub const QSK_VERSION_V1: u32 = 1;
+/// Legacy (v2-era) method vocabulary: sketches of these methods keep the
+/// v2 header version.
+const LEGACY_V2_METHODS: [&str; 3] = ["ckm", "qckm", "triangle"];
 /// Longest accepted provenance label, in bytes.
 pub const MAX_LABEL_BYTES: usize = 256;
+/// Longest accepted method/law header string, in bytes. Enforced on write
+/// as well as read: a registry family whose canonical spec exceeded this
+/// would otherwise save files that no build can load back.
+pub const MAX_HEADER_STR_BYTES: usize = 64;
 
 /// Everything a `.qsk` header records about how its sketch was produced.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SketchMeta {
-    /// Compressive method name ([`Method::name`]).
+    /// Canonical method spec string ([`MethodSpec::canonical`]).
     pub method: String,
     /// Frequency-law name ([`FrequencyLaw::name`]).
     pub law: String,
@@ -91,10 +114,10 @@ pub struct ShardRecord {
 
 impl SketchMeta {
     /// Describe an operator produced by [`draw_operator`].
-    pub fn for_operator(op: &SketchOperator, method: Method, seed: u64) -> Self {
+    pub fn for_operator(op: &SketchOperator, method: &MethodSpec, seed: u64) -> Self {
         let freqs = op.frequencies();
         Self {
-            method: method.name().to_string(),
+            method: method.canonical().to_string(),
             law: freqs.law.name().to_string(),
             sigma: freqs.sigma,
             seed,
@@ -137,13 +160,13 @@ impl SketchMeta {
     /// fingerprint so a changed RNG/draw implementation fails loudly
     /// instead of decoding garbage.
     pub fn rebuild_operator(&self) -> Result<SketchOperator> {
-        let method = Method::parse(&self.method)?;
+        let method = MethodSpec::parse(&self.method)?;
         let law = FrequencyLaw::parse(&self.law)?;
         if self.m == 0 || self.d == 0 {
             bail!("corrupt sketch meta: m={} d={}", self.m, self.d);
         }
         let op = draw_operator(
-            method,
+            &method,
             law,
             self.m as usize,
             self.d as usize,
@@ -168,7 +191,7 @@ impl SketchMeta {
 /// contract. Every stage (shard sketchers, the decoder, the live server)
 /// calls this with the same arguments and gets the bit-identical Ω and ξ.
 pub fn draw_operator(
-    method: Method,
+    method: &MethodSpec,
     law: FrequencyLaw,
     m: usize,
     d: usize,
@@ -280,8 +303,20 @@ pub fn save_sketch_with(
     Ok(())
 }
 
-/// Serialize a `.qsk` (version 2) into any writer — the file format and the
-/// server's snapshot wire format are the same bytes.
+/// The header version a sketch of `method` is written with: legacy bare
+/// names keep v2 (byte-identical files to pre-registry builds), every
+/// parameterized or newer family needs v3 (see the module docs).
+fn wire_version(method: &str) -> u32 {
+    if LEGACY_V2_METHODS.iter().any(|m| *m == method) {
+        QSK_VERSION_V2
+    } else {
+        QSK_VERSION
+    }
+}
+
+/// Serialize a `.qsk` (version 2 or 3, by method vocabulary) into any
+/// writer — the file format and the server's snapshot wire format are the
+/// same bytes.
 pub fn write_sketch_to(
     w: &mut impl Write,
     meta: &SketchMeta,
@@ -295,8 +330,16 @@ pub fn write_sketch_to(
         pool.len(),
         meta.m
     );
+    for (field, value) in [("method", &meta.method), ("law", &meta.law)] {
+        if value.len() > MAX_HEADER_STR_BYTES {
+            bail!(
+                "{field} string '{value}' exceeds {MAX_HEADER_STR_BYTES} bytes — the file \
+                 would be unreadable"
+            );
+        }
+    }
     w.write_all(&QSK_MAGIC)?;
-    w.write_all(&QSK_VERSION.to_le_bytes())?;
+    w.write_all(&wire_version(&meta.method).to_le_bytes())?;
     write_str(w, &meta.method)?;
     write_str(w, &meta.law)?;
     w.write_all(&meta.sigma.to_le_bytes())?;
@@ -361,14 +404,14 @@ pub fn read_sketch_from(
         bail!("{src}: not a .qsk sketch file (bad magic)");
     }
     let version = read_u32(r, src)?;
-    if version != QSK_VERSION && version != QSK_VERSION_V1 {
+    if !(QSK_VERSION_V1..=QSK_VERSION).contains(&version) {
         bail!(
             "{src}: unsupported .qsk format version {version} \
-             (this build reads {QSK_VERSION_V1} and {QSK_VERSION})"
+             (this build reads {QSK_VERSION_V1} through {QSK_VERSION})"
         );
     }
-    let method = read_str(r, src, 64)?;
-    let law = read_str(r, src, 64)?;
+    let method = read_str(r, src, MAX_HEADER_STR_BYTES)?;
+    let law = read_str(r, src, MAX_HEADER_STR_BYTES)?;
     let sigma = f64::from_le_bytes(read_8(r, src)?);
     let seed = u64::from_le_bytes(read_8(r, src)?);
     let m = u64::from_le_bytes(read_8(r, src)?);
@@ -385,7 +428,7 @@ pub fn read_sketch_from(
         bail!("{src}: implausible data dimension d={d}");
     }
     let mut provenance = Vec::new();
-    if version >= QSK_VERSION {
+    if version >= QSK_VERSION_V2 {
         let prov_count = read_u32(r, src)?;
         if prov_count > (1 << 20) {
             bail!("{src}: implausible provenance record count {prov_count}");
@@ -401,7 +444,7 @@ pub fn read_sketch_from(
         *v = f64::from_le_bytes(read_8(r, src)?);
     }
     let pool = PooledSketch::from_raw(sum, count);
-    if version >= QSK_VERSION {
+    if version >= QSK_VERSION_V2 {
         let stored = u64::from_le_bytes(read_8(r, src)?);
         let actual = pool_fingerprint(&pool);
         if stored != actual {

@@ -4,8 +4,8 @@
 //! rejection.
 
 use super::*;
-use crate::config::Method;
 use crate::coordinator::WireFormat;
+use crate::method::MethodSpec;
 use crate::data::{save_csv, save_f64_bin};
 use crate::frequency::FrequencyLaw;
 use crate::linalg::Mat;
@@ -107,12 +107,16 @@ fn mat_reader_and_read_all_round_trip() {
 
 // ---------------------------------------------------- streamed == in-memory
 
+fn spec(s: &str) -> MethodSpec {
+    MethodSpec::parse(s).unwrap()
+}
+
 fn quantized_op(n: usize, m: usize, seed: u64) -> crate::sketch::SketchOperator {
-    draw_operator(Method::Qckm, FrequencyLaw::AdaptedRadius, m, n, 1.0, seed)
+    draw_operator(&spec("qckm"), FrequencyLaw::AdaptedRadius, m, n, 1.0, seed)
 }
 
 fn cosine_op(n: usize, m: usize, seed: u64) -> crate::sketch::SketchOperator {
-    draw_operator(Method::Ckm, FrequencyLaw::AdaptedRadius, m, n, 1.0, seed)
+    draw_operator(&spec("ckm"), FrequencyLaw::AdaptedRadius, m, n, 1.0, seed)
 }
 
 /// The acceptance bar: streamed sketching of a multi-chunk dataset is
@@ -194,7 +198,7 @@ fn sample_sketch(seed: u64) -> (SketchMeta, PooledSketch, crate::sketch::SketchO
     let x = random_mat(500, 4, seed ^ 0xABCD);
     let mut pool = PooledSketch::new(op.sketch_len());
     op.sketch_into(&x, &mut pool);
-    let meta = SketchMeta::for_operator(&op, Method::Qckm, seed);
+    let meta = SketchMeta::for_operator(&op, &spec("qckm"), seed);
     (meta, pool, op)
 }
 
@@ -331,6 +335,17 @@ fn qsk_v1_files_still_load() {
     let dir = temp_dir("qsk_v1");
     let path = dir.join("old.qsk");
     let (meta, pool, _op) = sample_sketch(42);
+    std::fs::write(&path, craft_v1_bytes(&meta, &pool)).unwrap();
+    let (meta2, pool2, prov) = load_sketch_full(&path).unwrap();
+    assert_eq!(meta2, meta);
+    assert_eq!(pool2.count(), pool.count());
+    assert_eq!(pool2.sum(), pool.sum());
+    assert!(prov.is_empty());
+}
+
+/// Write a version-1 `.qsk` byte stream by hand (no provenance, no
+/// checksum) for compatibility tests.
+fn craft_v1_bytes(meta: &SketchMeta, pool: &PooledSketch) -> Vec<u8> {
     let mut bytes = Vec::new();
     bytes.extend_from_slice(&QSK_MAGIC);
     bytes.extend_from_slice(&QSK_VERSION_V1.to_le_bytes());
@@ -347,12 +362,84 @@ fn qsk_v1_files_still_load() {
     for &v in pool.sum() {
         bytes.extend_from_slice(&v.to_le_bytes());
     }
-    std::fs::write(&path, &bytes).unwrap();
-    let (meta2, pool2, prov) = load_sketch_full(&path).unwrap();
+    bytes
+}
+
+// ------------------------------------------------------------------ qsk v3
+
+/// Legacy method names keep writing version-2 headers, so every file a
+/// pre-registry build could produce stays byte-identical.
+#[test]
+fn qsk_legacy_methods_keep_v2_header_bytes() {
+    let dir = temp_dir("qsk_legacy_version");
+    let path = dir.join("legacy.qsk");
+    let (meta, pool, _op) = sample_sketch(50); // method "qckm"
+    save_sketch(&path, &meta, &pool).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(
+        u32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+        QSK_VERSION_V2,
+        "legacy methods must stay on the v2 header"
+    );
+    let (meta2, _pool2) = load_sketch(&path).unwrap();
     assert_eq!(meta2, meta);
-    assert_eq!(pool2.count(), pool.count());
-    assert_eq!(pool2.sum(), pool.sum());
-    assert!(prov.is_empty());
+}
+
+/// Parameterized / new-family methods round-trip through a v3 header and
+/// rebuild their exact operator from it.
+#[test]
+fn qsk_v3_round_trips_parameterized_methods() {
+    let dir = temp_dir("qsk_v3");
+    for spec_str in ["qckm:bits=3", "modulo"] {
+        let m = MethodSpec::parse(spec_str).unwrap();
+        let op = draw_operator(&m, FrequencyLaw::AdaptedRadius, 16, 4, 1.0, 51);
+        let x = random_mat(300, 4, 52);
+        let mut pool = PooledSketch::new(op.sketch_len());
+        op.sketch_into(&x, &mut pool);
+        let meta = SketchMeta::for_operator(&op, &m, 51);
+        assert_eq!(meta.method, spec_str, "meta stores the canonical spec");
+
+        let path = dir.join(format!("{}.qsk", spec_str.replace([':', '='], "_")));
+        save_sketch(&path, &meta, &pool).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(
+            u32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+            QSK_VERSION,
+            "non-legacy methods need the v3 header"
+        );
+
+        let (meta2, pool2) = load_sketch(&path).unwrap();
+        assert_eq!(meta2, meta);
+        assert_eq!(pool2.sum(), pool.sum());
+        let rebuilt = meta2.rebuild_operator().unwrap();
+        assert_eq!(rebuilt.signature().name(), op.signature().name());
+        assert_eq!(operator_fingerprint(&rebuilt), meta.config_hash);
+    }
+}
+
+/// v1, v2 and v3 files of the *same* operator inter-load and merge: the
+/// version is a container detail, not an operator property.
+#[test]
+fn qsk_v1_v2_headers_still_merge_with_current_files() {
+    let dir = temp_dir("qsk_crossver");
+    let (meta, pool, op) = sample_sketch(53);
+
+    // A v1 file of shard A…
+    let v1_path = dir.join("old.qsk");
+    std::fs::write(&v1_path, craft_v1_bytes(&meta, &pool)).unwrap();
+    // …and a current-writer (v2, legacy method) file of shard B.
+    let x = random_mat(200, 4, 54);
+    let mut pool_b = PooledSketch::new(op.sketch_len());
+    op.sketch_into(&x, &mut pool_b);
+    let v2_path = dir.join("new.qsk");
+    save_sketch(&v2_path, &meta, &pool_b).unwrap();
+
+    let (meta_a, mut pool_a, _) = load_sketch_full(&v1_path).unwrap();
+    let (meta_b, pool_b2, _) = load_sketch_full(&v2_path).unwrap();
+    meta_a.ensure_mergeable(&meta_b).unwrap();
+    let want_count = pool_a.count() + pool_b2.count();
+    pool_a.merge(&pool_b2);
+    assert_eq!(pool_a.count(), want_count);
 }
 
 /// The wire form (`write_sketch_to` / `read_sketch_from`) is byte-identical

@@ -2,7 +2,6 @@
 //! invariants: sketch linearity/merging, bit-packing exactness, coordinator
 //! routing/batching, decoder feasibility, NNLS KKT, metrics ranges.
 
-use qckm::config::Method;
 use qckm::coordinator::{run_pipeline, PipelineConfig, SampleSource, WireFormat};
 use qckm::frequency::{DrawnFrequencies, FrequencyLaw};
 use qckm::linalg::Mat;
@@ -27,7 +26,7 @@ fn random_operator(g: &mut Gen, quantized: bool) -> SketchOperator {
     if quantized {
         SketchOperator::quantized(freqs)
     } else {
-        SketchOperator::new(freqs, Method::Ckm.signature())
+        SketchOperator::new(freqs, Arc::new(qckm::signature::Cosine))
     }
 }
 

@@ -221,6 +221,88 @@ fn live_server_matches_offline_pipeline_bit_for_bit() {
     server2.wait_exit();
 }
 
+/// A parameterized method (`qckm:bits=2`, the multi-bit staircase) through
+/// the *live* path: serve → push (two concurrent clients, each shard in a
+/// single batch so the dense floating-point fold matches the offline
+/// shard fold exactly) → query, against the offline `sketch → merge →
+/// decode` of the same spec — bit for bit. Also proves the protocol-level
+/// method check: a push declaring a different method is refused.
+#[test]
+fn parameterized_method_push_query_matches_offline() {
+    let dir = work_dir("param");
+    let (shard_a, shard_b) = write_fixture(&dir);
+
+    // --- Offline reference with --method qckm:bits=2.
+    let sketch2 = |data: &str, out: &str, threads: &str| {
+        qckm_ok(&[
+            "sketch", "--data", data, "--out", out, "--method", "qckm:bits=2", "--m", "48",
+            "--sigma", "1.2", "--seed", "7", "--threads", threads,
+        ]);
+    };
+    let a_qsk = dir.join("a2.qsk").display().to_string();
+    let b_qsk = dir.join("b2.qsk").display().to_string();
+    let merged_qsk = dir.join("merged2.qsk").display().to_string();
+    let c_offline = dir.join("c_offline2.csv").display().to_string();
+    sketch2(&shard_a, &a_qsk, "2");
+    sketch2(&shard_b, &b_qsk, "3");
+    qckm_ok(&["merge", "--out", &merged_qsk, &a_qsk, &b_qsk]);
+    qckm_ok(&[
+        "decode", "--sketch", &merged_qsk, "--k", "2", "--lo", "-2", "--hi", "2", "--out",
+        &c_offline,
+    ]);
+
+    // --- Live server with the same parameterized operator.
+    let server = Server::start(&[
+        "--dim", "5", "--m", "48", "--method", "qckm:bits=2", "--sigma", "1.2", "--seed", "7",
+    ]);
+    let addr = server.addr.clone();
+
+    // Each shard in ONE push batch (> shard rows): the server-side fold of
+    // the batch is then exactly the offline shard fold, so the dense sums
+    // agree to the last bit. Both pushers declare the method.
+    std::thread::scope(|scope| {
+        for (data, shard) in [(&shard_a, "a"), (&shard_b, "b")] {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                qckm_ok(&[
+                    "push", "--addr", &addr, "--data", data, "--shard", shard, "--batch",
+                    "2000", "--method", "qckm:bits=2",
+                ]);
+            });
+        }
+    });
+
+    // A push declaring the wrong method is refused by the server.
+    let out = Command::new(env!("CARGO_BIN_EXE_qckm"))
+        .args([
+            "push", "--addr", &addr, "--data", &shard_a, "--shard", "rogue", "--method",
+            "qckm",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "mismatched --method must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("method mismatch"), "unexpected error: {stderr}");
+
+    // --- Query (declaring the method) == offline decode, bit for bit.
+    let c_live = dir.join("c_live2.csv").display().to_string();
+    qckm_ok(&[
+        "query", "--addr", &addr, "--k", "2", "--lo", "-2", "--hi", "2", "--method",
+        "qckm:bits=2", "--out", &c_live,
+    ]);
+    let offline = load_csv(Path::new(&c_offline)).unwrap();
+    let live = load_csv(Path::new(&c_live)).unwrap();
+    assert_eq!(offline.shape(), (K, DIM));
+    assert_eq!(
+        offline.as_slice(),
+        live.as_slice(),
+        "live qckm:bits=2 centroids must equal the offline pipeline exactly"
+    );
+
+    qckm_ok(&["ctl", "--addr", &addr, "shutdown"]);
+    server.wait_exit();
+}
+
 /// `qckm sketch --append` (the online-update mode) must reproduce the
 /// offline two-shard merge exactly: sketch shard A, append shard B into
 /// the same file, and the pooled sums equal `qckm merge` of the two

@@ -4,12 +4,13 @@
 //! centroids exactly — the `.qsk` distributed-acquisition contract.
 
 use qckm::clompr::{decode_best_of, ClOmprParams};
-use qckm::config::Method;
 use qckm::data::{gaussian_mixture_pm1, load_csv, save_csv};
 use qckm::frequency::FrequencyLaw;
 use qckm::linalg::Mat;
+use qckm::method::MethodSpec;
 use qckm::parallel::Parallelism;
 use qckm::rng::Rng;
+use qckm::sketch::PooledSketch;
 use qckm::stream::{draw_operator, load_sketch};
 use std::path::{Path, PathBuf};
 use std::process::Command;
@@ -109,7 +110,14 @@ fn sharded_sketch_merge_decode_equals_single_process() {
     assert_eq!(pool_full.count(), 3000);
     assert_eq!(pool_merged.count(), 3000);
     assert_eq!(pool_full.sum(), pool_merged.sum());
-    let op = draw_operator(Method::Qckm, FrequencyLaw::AdaptedRadius, M, DIM, SIGMA, SEED);
+    let op = draw_operator(
+        &MethodSpec::parse("qckm").unwrap(),
+        FrequencyLaw::AdaptedRadius,
+        M,
+        DIM,
+        SIGMA,
+        SEED,
+    );
     let z_lib = op.sketch_dataset_par(&x, &Parallelism::serial());
     assert_eq!(pool_full.mean(), z_lib);
     assert_eq!(pool_merged.mean(), z_lib);
@@ -168,6 +176,95 @@ fn merge_refuses_shards_from_different_draws() {
         "unexpected merge error: {err}"
     );
     assert!(!Path::new(&merged).exists(), "merge must not write on failure");
+}
+
+/// The stage-split pipeline end-to-end for *parameterized / new* method
+/// specs: `--method qckm:bits=2` (the multi-bit staircase, finally
+/// reachable from the CLI) and `--method modulo` (the phase-shifted ramp).
+/// Dense-pooled sums are floating-point folds, so the assertion compares
+/// the CLI result against the library running the *same* shard-wise fold —
+/// bitwise — rather than against a single-process whole-dataset sketch.
+/// (Both shards fit one 4096-row chunk, so shard folds are unambiguous.)
+#[test]
+fn parameterized_methods_sketch_merge_decode_end_to_end() {
+    for spec_str in ["qckm:bits=2", "modulo"] {
+        let tag = format!("param_{}", spec_str.replace([':', '='], "_"));
+        let dir = work_dir(&tag);
+        let (x, _full, shard_a, shard_b) = write_fixture(&dir);
+        let a_qsk = dir.join("a.qsk").display().to_string();
+        let b_qsk = dir.join("b.qsk").display().to_string();
+        let merged_qsk = dir.join("merged.qsk").display().to_string();
+        let c_csv = dir.join("c.csv").display().to_string();
+
+        let sketch = |data: &str, out: &str, threads: &str| {
+            qckm_ok(&[
+                "sketch", "--data", data, "--out", out, "--method", spec_str, "--m", "48",
+                "--sigma", "1.2", "--seed", "7", "--threads", threads,
+            ]);
+        };
+        sketch(&shard_a, &a_qsk, "2");
+        sketch(&shard_b, &b_qsk, "3");
+        // merge/decode accept the spec as a declaration and verify it
+        // against the .qsk headers.
+        qckm_ok(&["merge", "--method", spec_str, "--out", &merged_qsk, &a_qsk, &b_qsk]);
+        qckm_ok(&[
+            "decode", "--sketch", &merged_qsk, "--method", spec_str, "--k", "2", "--lo", "-2",
+            "--hi", "2", "--out", &c_csv,
+        ]);
+        let err = qckm_err(&[
+            "decode", "--sketch", &merged_qsk, "--method", "qckm", "--k", "2",
+        ]);
+        assert!(err.contains("conflicts with"), "unexpected error: {err}");
+
+        // Library reference with the identical shard-wise fold.
+        let spec = MethodSpec::parse(spec_str).unwrap();
+        let op = draw_operator(&spec, FrequencyLaw::AdaptedRadius, M, DIM, SIGMA, SEED);
+        let xa = x.select_rows(&(0..1337).collect::<Vec<_>>());
+        let xb = x.select_rows(&(1337..3000).collect::<Vec<_>>());
+        let mut pool = PooledSketch::new(op.sketch_len());
+        op.sketch_into_par(&xa, &mut pool, &Parallelism::serial());
+        op.sketch_into_par(&xb, &mut pool, &Parallelism::serial());
+
+        let (meta, pool_cli) = load_sketch(Path::new(&merged_qsk)).unwrap();
+        assert_eq!(meta.method, spec.canonical(), "{spec_str}");
+        assert_eq!(pool_cli.count(), 3000);
+        assert_eq!(pool_cli.sum(), pool.sum(), "{spec_str}: CLI pool deviated");
+        assert!(meta.rebuild_operator().is_ok());
+
+        let sol = decode_best_of(
+            &op,
+            K,
+            &pool.mean(),
+            vec![-2.0; DIM],
+            vec![2.0; DIM],
+            &ClOmprParams::default(),
+            1,
+            &mut Rng::new(SEED),
+        );
+        let c = load_csv(Path::new(&c_csv)).unwrap();
+        assert_eq!(
+            c.as_slice(),
+            sol.centroids.as_slice(),
+            "{spec_str}: CLI centroids deviated from the library decode"
+        );
+    }
+}
+
+/// Junk method specs die at the CLI boundary with the registry's
+/// actionable error (naming the valid families / accepted params).
+#[test]
+fn junk_method_specs_fail_actionably_at_the_cli() {
+    let dir = work_dir("junk_method");
+    let (_x, full, _a, _b) = write_fixture(&dir);
+    let out = dir.join("x.qsk").display().to_string();
+    let err = qckm_err(&[
+        "sketch", "--data", &full, "--out", &out, "--method", "fourier", "--sigma", "1.2",
+    ]);
+    assert!(err.contains("valid families"), "unexpected error: {err}");
+    let err = qckm_err(&[
+        "sketch", "--data", &full, "--out", &out, "--method", "qckm:bits=99", "--sigma", "1.2",
+    ]);
+    assert!(err.contains("bits must be in 1..=16"), "unexpected error: {err}");
 }
 
 #[test]

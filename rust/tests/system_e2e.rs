@@ -3,7 +3,7 @@
 //! config plumbing; failure injection.
 
 use qckm::clompr::{decode_best_of, ClOmpr, ClOmprParams};
-use qckm::config::{JobConfig, Method};
+use qckm::config::JobConfig;
 use qckm::coordinator::{run_pipeline, PipelineConfig, SampleSource, WireFormat};
 use qckm::data::gaussian_mixture_pm1;
 use qckm::frequency::{DrawnFrequencies, FrequencyLaw, SigmaHeuristic};
@@ -144,7 +144,7 @@ fn job_config_round_trip_drives_pipeline() {
          [decode]\nk = 2\n[pipeline]\nworkers = 3\nwire = \"bits\"\n",
     )
     .unwrap();
-    assert_eq!(cfg.sketch.method, Method::Qckm);
+    assert_eq!(cfg.sketch.method.canonical(), "qckm");
     let mut rng = Rng::new(cfg.seed);
     let data = gaussian_mixture_pm1(2_000, 3, cfg.decode.k, &mut rng);
     let sigma = cfg.sketch.sigma.resolve(&data.points, &mut rng);
