@@ -54,6 +54,7 @@ fn main() {
             sigma,
             law: FrequencyLaw::AdaptedRadius,
             params: Default::default(),
+            decoder: Default::default(),
             streamed: false,
         };
         let out = run_method_once(&run, &data.points, Some(&data.labels), k, &mut rng);

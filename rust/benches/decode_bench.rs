@@ -1,5 +1,8 @@
-//! Decode-side benchmarks: CL-OMPR end-to-end at the paper's shapes, plus
-//! its component solvers (NNLS, projected L-BFGS, Step-1 screening).
+//! Decode-side benchmarks: CL-OMPR end-to-end at the paper's shapes, its
+//! component solvers (NNLS, projected L-BFGS, Step-1 screening), and the
+//! decoder-registry comparison — `clompr` vs `clompr:restarts=R` vs
+//! `hier` wall-time and SSE across k ∈ {4, 16, 64}, emitted to
+//! `BENCH_decode.json`.
 //!
 //! The paper's pitch is that decode cost is independent of N — verified
 //! here by decoding sketches pooled from different dataset sizes.
@@ -7,13 +10,15 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{bench, black_box};
+use harness::{bench, black_box, Summary};
 use qckm::clompr::{ClOmpr, ClOmprParams};
+use qckm::decoder::DecoderSpec;
 use qckm::frequency::{DrawnFrequencies, FrequencyLaw};
 use qckm::linalg::Mat;
 use qckm::optim::nnls;
 use qckm::rng::Rng;
 use qckm::sketch::SketchOperator;
+use std::path::PathBuf;
 
 fn decode_case(n: usize, k: usize, m: usize, seed: u64) -> (SketchOperator, Vec<f64>) {
     let mut rng = Rng::new(seed);
@@ -99,5 +104,88 @@ fn main() {
         .print();
     }
 
+    // ------------------------------------------------ decoder registry
+    // clompr vs clompr:restarts=6 vs hier across k — hier's bisection is
+    // O(K) cheap subproblems + one global polish, so its wall-time gap
+    // over CL-OMPR's O(K²)-refinement outer loop widens with k; SSE shows
+    // what that speed costs in quality. Base params are trimmed so the
+    // k = 64 cells stay minutes, not hours — the comparison is relative.
+    println!("\n== decoder registry: clompr vs clompr:restarts=6 vs hier ==");
+    let base = ClOmprParams {
+        step1_candidates: 32,
+        step1_iters: 30,
+        step5_iters: 30,
+        step5_final_iters: 60,
+        ..ClOmprParams::default()
+    };
+    let mut records: Vec<(String, Summary, f64)> = Vec::new();
+    for &k in &[4usize, 16, 64] {
+        let n = 8;
+        let m = n * k; // fixed budget ratio m/(nK) = 1
+        let mut rng = Rng::new(100 + k as u64);
+        let data = qckm::data::gaussian_mixture_pm1(4096, n, k, &mut rng);
+        let sigma = qckm::frequency::SigmaHeuristic::default().resolve(&data.points, &mut rng);
+        let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, n, m, sigma, &mut rng);
+        let op = SketchOperator::quantized(freqs);
+        let z = op.sketch_dataset(&data.points);
+        let (lo, hi) = qckm::linalg::bounding_box(&data.points);
+        for spec_str in ["clompr", "clompr:restarts=6", "hier"] {
+            let spec = DecoderSpec::parse(spec_str).expect("registry spec");
+            let budget_ms = if k <= 16 { 800 } else { 1 };
+            // Keep the last timed solution for the SSE column — every
+            // iteration decodes from the same seed, so re-running outside
+            // the timer would only repeat the identical (slow) decode.
+            let mut sol = None;
+            let summary = bench(
+                &format!("{spec_str} decode n={n} K={k} m={m}"),
+                usize::from(k <= 16),
+                budget_ms,
+                || {
+                    sol = Some(black_box(spec.decode_best_of(
+                        &op,
+                        k,
+                        &z,
+                        lo.clone(),
+                        hi.clone(),
+                        &base,
+                        1,
+                        &mut Rng::new(9),
+                    )));
+                },
+            );
+            summary.print();
+            let sol = sol.expect("bench ran at least once");
+            let sse_per_n =
+                qckm::metrics::sse(&data.points, &sol.centroids) / data.points.rows() as f64;
+            println!("    SSE/N = {sse_per_n:.5}");
+            records.push((format!("{spec_str}_k{k}"), summary, sse_per_n));
+        }
+    }
+    write_decode_json(&records);
+
     let _ = ClOmprParams::default();
+}
+
+/// Emit the decoder-comparison records as `BENCH_decode.json` at the repo
+/// root — machine-readable so successive PRs can track each decoder's
+/// wall-time/quality trajectory (same convention as `BENCH_stream.json`).
+fn write_decode_json(records: &[(String, Summary, f64)]) {
+    let mut json = String::from(
+        "{\n  \"bench\": \"decode\",\n  \"unit\": \"ns/iter\",\n  \"results\": [\n",
+    );
+    for (i, (name, s, sse_per_n)) in records.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"median_ns\": {:.0}, \"mean_ns\": {:.0}, \
+             \"sse_per_n\": {sse_per_n:.6}}}{}\n",
+            s.median_ns,
+            s.mean_ns,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_decode.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("(decode bench results written to {})", path.display()),
+        Err(e) => eprintln!("(could not write {}: {e})", path.display()),
+    }
 }

@@ -100,6 +100,7 @@ fn main() {
         seed: None,
         lo: -2.0,
         hi: 2.0,
+        decoder: String::new(),
     };
     let cold = bench("query cold (decode K=4, M=512)", 0, 3, || {
         // Vary the seed so every decode misses the cache.

@@ -1,0 +1,81 @@
+//! `qckm cluster` — compressively cluster a CSV dataset in one process:
+//! acquire through the streaming coordinator (the Fig. 1 dataflow), then
+//! decode through the configured [`qckm::decoder::DecoderSpec`].
+
+use super::common::{
+    build_operator, job_from, print_centroids, save_centroids, search_box, DECODER_HELP,
+    METHOD_HELP,
+};
+use anyhow::{Context, Result};
+use qckm::cli::CliSpec;
+use qckm::coordinator::{run_pipeline, PipelineConfig, SampleSource};
+use qckm::data::load_csv;
+use qckm::rng::Rng;
+use std::path::Path;
+use std::sync::Arc;
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new("qckm cluster", "compressively cluster a CSV dataset")
+        .opt("data", "FILE", None, "input CSV (one sample per row)")
+        .opt("k", "NUM", None, "number of clusters")
+        .opt("m", "NUM", None, "number of frequencies")
+        .opt("method", "SPEC", None, METHOD_HELP)
+        .opt("decoder", "SPEC", None, DECODER_HELP)
+        .opt("sigma", "FLOAT", None, "kernel bandwidth (default: heuristic)")
+        .opt("seed", "NUM", None, "RNG seed")
+        .opt("replicates", "NUM", None, "decoder replicates")
+        .opt(
+            "threads",
+            "NUM",
+            None,
+            "decoder threads, 0 = all cores (acquisition uses [pipeline] workers)",
+        )
+        .opt("config", "FILE", None, "TOML job config")
+        .opt("out", "FILE", None, "write centroids CSV here");
+    let parsed = spec.parse(args)?;
+    let cfg = job_from(&parsed)?;
+    let data_path = parsed.get("data").context("--data is required")?;
+    let x = load_csv(Path::new(data_path))?;
+    eprintln!("loaded {} x {} from {data_path}", x.rows(), x.cols());
+
+    let mut rng = Rng::new(cfg.seed);
+    let op = build_operator(&cfg, &x, &mut rng);
+
+    // Acquire through the streaming coordinator (the Fig. 1 dataflow),
+    // with the method's preferred pooling encoding on the wire.
+    let wire = cfg.sketch.method.preferred_wire_format();
+    let report = run_pipeline(
+        &op,
+        &SampleSource::Shared(Arc::new(x.clone())),
+        &PipelineConfig {
+            wire,
+            ..cfg.pipeline.clone()
+        },
+        cfg.seed,
+    );
+    eprintln!(
+        "acquired {} samples in {:.3}s ({:.0}/s), {} wire bytes, {} backpressure stalls",
+        report.samples,
+        report.elapsed_secs,
+        report.throughput(),
+        report.payload_bytes,
+        report.blocked_sends
+    );
+
+    let (lo, hi) = search_box(&parsed, Some(&x), x.cols())?;
+    eprintln!("decoder: {}", cfg.decode.decoder.canonical());
+    let sol = cfg.decode.decoder.decode_best_of(
+        &op,
+        cfg.decode.k,
+        &report.sketch,
+        lo,
+        hi,
+        &cfg.decode.params,
+        cfg.decode.replicates,
+        &mut rng,
+    );
+    let s = qckm::metrics::sse(&x, &sol.centroids);
+    println!("objective = {:.6}, SSE/N = {:.6}", sol.objective, s / x.rows() as f64);
+    print_centroids(&sol.centroids, &sol.weights);
+    save_centroids(parsed.get("out"), &sol.centroids)
+}

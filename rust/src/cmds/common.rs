@@ -1,0 +1,275 @@
+//! Plumbing shared by the `qckm` command modules: job-config resolution
+//! (file + CLI overrides), operator construction, the centroid search-box
+//! derivation every decode-side verb uses, declared-method checks against
+//! `.qsk` headers, wire-format resolution, and service-client helpers.
+
+use anyhow::{bail, Context, Result};
+use qckm::cli::ParsedArgs;
+use qckm::config::JobConfig;
+use qckm::coordinator::WireFormat;
+use qckm::decoder::DecoderSpec;
+use qckm::frequency::{DrawnFrequencies, SigmaHeuristic};
+use qckm::linalg::{bounding_box, Mat};
+use qckm::method::MethodSpec;
+use qckm::rng::Rng;
+use qckm::sketch::SketchOperator;
+use std::path::Path;
+
+/// Shared `--method` help text. The CLI layer needs a `'static` string, so
+/// this is a hint only; a bad spec gets the registry's authoritative
+/// valid-family list at parse time.
+pub const METHOD_HELP: &str = "method spec: ckm | qckm[:bits=B] | triangle | modulo";
+
+/// Shared `--decoder` help text (hint only, same convention as
+/// [`METHOD_HELP`]: junk specs get the decoder registry's authoritative
+/// list at parse time).
+pub const DECODER_HELP: &str =
+    "decoder spec: clompr[:restarts=R,replacements=P] | hier[:restarts=R]";
+
+/// Load the job config (file + CLI overrides).
+pub fn job_from(args: &ParsedArgs) -> Result<JobConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+            JobConfig::from_toml_str(&text)?
+        }
+        None => JobConfig::default(),
+    };
+    if let Some(m) = args.get_usize("m")? {
+        cfg.sketch.num_frequencies = m;
+    }
+    if let Some(k) = args.get_usize("k")? {
+        cfg.decode.k = k;
+    }
+    if let Some(method) = args.get("method") {
+        cfg.sketch.method = MethodSpec::parse(method)?;
+    }
+    if let Some(decoder) = args.get("decoder") {
+        cfg.decode.decoder = DecoderSpec::parse(decoder)?;
+    }
+    if let Some(s) = args.get_f64("sigma")? {
+        cfg.sketch.sigma = SigmaHeuristic::Fixed(s);
+    }
+    if let Some(seed) = args.get_u64("seed")? {
+        cfg.seed = seed;
+    }
+    if let Some(r) = args.get_usize("replicates")? {
+        cfg.decode.replicates = r;
+    }
+    if let Some(t) = args.get_usize("threads")? {
+        cfg.threads = t;
+        cfg.decode.params.threads = t;
+    }
+    Ok(cfg)
+}
+
+/// Draw the job's sketch operator for dataset `x` (sigma resolved through
+/// the config's heuristic, dithering per the method's policy).
+pub fn build_operator(cfg: &JobConfig, x: &Mat, rng: &mut Rng) -> SketchOperator {
+    let sigma = cfg.sketch.sigma.resolve(x, rng);
+    let freqs = if cfg.sketch.method.dithered() {
+        DrawnFrequencies::draw(cfg.sketch.law, x.cols(), cfg.sketch.num_frequencies, sigma, rng)
+    } else {
+        DrawnFrequencies::draw_undithered(
+            cfg.sketch.law,
+            x.cols(),
+            cfg.sketch.num_frequencies,
+            sigma,
+            rng,
+        )
+    };
+    eprintln!(
+        "operator: method={} law={} M={} sigma={sigma:.4}",
+        cfg.sketch.method.canonical(),
+        cfg.sketch.law.name(),
+        cfg.sketch.num_frequencies
+    );
+    SketchOperator::new(freqs, cfg.sketch.method.signature())
+}
+
+/// Resolve the `--decoder` flag through the registry (default: `clompr`,
+/// the paper's decoder — bit-for-bit the legacy pipelines).
+pub fn decoder_from(parsed: &ParsedArgs) -> Result<DecoderSpec> {
+    match parsed.get("decoder") {
+        Some(s) => DecoderSpec::parse(s),
+        None => Ok(DecoderSpec::default()),
+    }
+}
+
+/// Verify an optional `--method` declaration against the method a `.qsk`
+/// header recorded (canonicalized through the registry first, so aliases
+/// and case agree). `what` names the conflicting source in the error.
+pub fn check_declared_method(parsed: &ParsedArgs, meta_method: &str, what: &str) -> Result<()> {
+    if let Some(m) = parsed.get("method") {
+        if MethodSpec::parse(m)?.canonical() != meta_method {
+            bail!("--method {m} conflicts with {what} (method={meta_method})");
+        }
+    }
+    Ok(())
+}
+
+/// Per-chunk pooling encoding for the streamed sketch — `auto` defers to
+/// the method's preferred wire format (the one source of the method→wire
+/// mapping, see [`MethodSpec::preferred_wire_format`]).
+pub fn wire_from(parsed: &ParsedArgs, method: &MethodSpec) -> Result<WireFormat> {
+    Ok(match parsed.get("encoding").unwrap_or("auto") {
+        "auto" => method.preferred_wire_format(),
+        // The streaming fold re-checks this against the signature, but
+        // failing at the flag gives the actionable error.
+        "bits" if method.preferred_wire_format() != WireFormat::PackedBits => bail!(
+            "--encoding bits needs a ±1-valued method (e.g. qckm); '{}' pools dense",
+            method.canonical()
+        ),
+        "bits" => WireFormat::PackedBits,
+        "dense" => WireFormat::DenseF64,
+        other => bail!("unknown encoding '{other}' (auto|bits|dense)"),
+    })
+}
+
+/// The shard label for an ingest verb: `--shard` if given, else the data
+/// file's stem (the convention `qckm sketch` and `qckm push` share).
+pub fn shard_label(parsed: &ParsedArgs, data_path: &str) -> String {
+    match parsed.get("shard") {
+        Some(s) => s.to_string(),
+        None => Path::new(data_path)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| data_path.to_string()),
+    }
+}
+
+/// The validated scalar `--lo` / `--hi` pair (defaulting to −1 / 1, the
+/// declared CLI defaults) — the form the server protocol carries.
+pub fn scalar_box(parsed: &ParsedArgs) -> Result<(f64, f64)> {
+    let lo = parsed.get_f64("lo")?.unwrap_or(-1.0);
+    let hi = parsed.get_f64("hi")?.unwrap_or(1.0);
+    if lo > hi {
+        bail!("--lo {lo} must not exceed --hi {hi}");
+    }
+    Ok((lo, hi))
+}
+
+/// The centroid search box every decode-side verb uses (the one
+/// derivation `cluster` / `decode` / `query` used to hand-roll in three
+/// slightly divergent copies): the dataset's per-coordinate bounding box
+/// when data is available, else the validated scalar `--lo` / `--hi`
+/// flags replicated over `dim` coordinates.
+pub fn search_box(
+    parsed: &ParsedArgs,
+    data: Option<&Mat>,
+    dim: usize,
+) -> Result<(Vec<f64>, Vec<f64>)> {
+    match data {
+        Some(x) => Ok(bounding_box(x)),
+        None => {
+            let (lo, hi) = scalar_box(parsed)?;
+            Ok((vec![lo; dim], vec![hi; dim]))
+        }
+    }
+}
+
+/// Connect a service client, declaring `--method` (canonicalized through
+/// the registry, so typos and junk fail locally with the valid-family
+/// list) if the flag was given.
+pub fn connect_with_method(addr: &str, parsed: &ParsedArgs) -> Result<qckm::server::Client> {
+    let client = qckm::server::Client::connect(addr)?;
+    Ok(match parsed.get("method") {
+        Some(m) => client.declare_method(MethodSpec::parse(m)?.canonical()),
+        None => client,
+    })
+}
+
+/// Print the per-centroid rows every decode-side verb shares
+/// (`c[k] (alpha=…): …`, 5 decimals — the format the e2e suites diff).
+pub fn print_centroids(centroids: &Mat, weights: &[f64]) {
+    for c in 0..centroids.rows() {
+        let row: Vec<String> = centroids.row(c).iter().map(|v| format!("{v:.5}")).collect();
+        println!("c[{c}] (alpha={:.3}): {}", weights[c], row.join(", "));
+    }
+}
+
+/// Write the centroids CSV when `--out` was given.
+pub fn save_centroids(out: Option<&str>, centroids: &Mat) -> Result<()> {
+    if let Some(out) = out {
+        qckm::data::save_csv(Path::new(out), centroids)?;
+        eprintln!("centroids written to {out}");
+    }
+    Ok(())
+}
+
+/// Print a decoded solution the way `qckm decode` does: the objective
+/// line, optional SSE/N against a dataset, per-centroid rows, and an
+/// optional centroids CSV.
+pub fn report_solution(
+    sol: &qckm::clompr::Solution,
+    x: Option<&Mat>,
+    out: Option<&str>,
+) -> Result<()> {
+    println!("objective = {:.6}", sol.objective);
+    if let Some(x) = x {
+        let s = qckm::metrics::sse(x, &sol.centroids);
+        println!("SSE/N = {:.6}", s / x.rows() as f64);
+    }
+    print_centroids(&sol.centroids, &sol.weights);
+    save_centroids(out, &sol.centroids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use qckm::cli::CliSpec;
+
+    fn boxed_spec() -> CliSpec {
+        CliSpec::new("t", "test")
+            .opt("lo", "FLOAT", Some("-1"), "lower")
+            .opt("hi", "FLOAT", Some("1"), "upper")
+    }
+
+    #[test]
+    fn search_box_prefers_the_dataset_bounding_box() {
+        let parsed = boxed_spec()
+            .parse(["--lo", "-9", "--hi", "9"].map(String::from))
+            .unwrap();
+        let x = Mat::from_vec(3, 2, vec![0.0, 5.0, -2.0, 1.0, 4.0, -3.0]);
+        // Data wins over the flags — exactly what cmd_cluster/cmd_decode do.
+        let (lo, hi) = search_box(&parsed, Some(&x), 2).unwrap();
+        assert_eq!((lo, hi), (vec![-2.0, -3.0], vec![4.0, 5.0]));
+    }
+
+    #[test]
+    fn search_box_replicates_the_scalar_flags() {
+        let parsed = boxed_spec()
+            .parse(["--lo", "-2.5", "--hi", "2"].map(String::from))
+            .unwrap();
+        let (lo, hi) = search_box(&parsed, None, 3).unwrap();
+        assert_eq!((lo, hi), (vec![-2.5; 3], vec![2.0; 3]));
+    }
+
+    #[test]
+    fn search_box_defaults_and_validates() {
+        let parsed = boxed_spec().parse(Vec::<String>::new()).unwrap();
+        assert_eq!(scalar_box(&parsed).unwrap(), (-1.0, 1.0));
+        // Even without declared defaults the helper falls back to ±1.
+        let bare = CliSpec::new("t", "test").parse(Vec::<String>::new()).unwrap();
+        assert_eq!(scalar_box(&bare).unwrap(), (-1.0, 1.0));
+        let flipped = boxed_spec()
+            .parse(["--lo", "2", "--hi", "-2"].map(String::from))
+            .unwrap();
+        let err = format!("{:#}", search_box(&flipped, None, 2).unwrap_err());
+        assert!(err.contains("must not exceed"), "{err}");
+    }
+
+    #[test]
+    fn decoder_flag_resolves_through_the_registry() {
+        let spec = CliSpec::new("t", "test").opt("decoder", "SPEC", None, "d");
+        let parsed = spec.parse(Vec::<String>::new()).unwrap();
+        assert_eq!(decoder_from(&parsed).unwrap().canonical(), "clompr");
+        let parsed = spec
+            .parse(["--decoder", "hier:restarts=2"].map(String::from))
+            .unwrap();
+        assert_eq!(decoder_from(&parsed).unwrap().canonical(), "hier:restarts=2");
+        let parsed = spec.parse(["--decoder", "junk"].map(String::from)).unwrap();
+        let err = format!("{:#}", decoder_from(&parsed).unwrap_err());
+        assert!(err.contains("valid decoders"), "{err}");
+    }
+}

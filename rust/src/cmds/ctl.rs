@@ -1,0 +1,40 @@
+//! `qckm ctl` — administer a serving node (stats / roll / shutdown).
+
+use anyhow::{bail, Context, Result};
+use qckm::cli::CliSpec;
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new("qckm ctl", "administer a serving node")
+        .positionals("<stats|roll|shutdown>")
+        .opt("addr", "HOST:PORT", None, "server address");
+    let parsed = spec.parse(args)?;
+    let addr = parsed.get("addr").context("--addr is required")?;
+    let verb = parsed.positional(0).context("which action? (stats|roll|shutdown)")?;
+    let mut client = qckm::server::Client::connect(addr)?;
+    match verb {
+        "stats" => {
+            let s = client.stats()?;
+            println!(
+                "method {} | epoch {} | {} rows all-time | {} closed epoch(s) held | \
+                 cache {} hit / {} miss",
+                s.method, s.epoch, s.rows_total, s.epochs_held, s.cache_hits, s.cache_misses
+            );
+            for (label, rows) in &s.shards {
+                println!("  shard '{label}': {rows} rows");
+            }
+            for (decoder, queries) in &s.decoders {
+                println!("  decoder '{decoder}': {queries} queries");
+            }
+        }
+        "roll" => {
+            let (epoch, rows_closed) = client.roll()?;
+            println!("rolled: epoch {epoch} open, {rows_closed} rows closed");
+        }
+        "shutdown" => {
+            client.shutdown()?;
+            println!("server acknowledged shutdown");
+        }
+        other => bail!("unknown ctl action '{other}' (stats|roll|shutdown)"),
+    }
+    Ok(())
+}

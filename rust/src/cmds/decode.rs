@@ -1,0 +1,82 @@
+//! `qckm decode` — decode K centroids from a pooled sketch (`.qsk`), no
+//! dataset needed. The algorithm comes from `--decoder` (registry spec,
+//! default `clompr`).
+
+use super::common::{
+    check_declared_method, decoder_from, report_solution, search_box, DECODER_HELP,
+};
+use anyhow::{bail, Context, Result};
+use qckm::cli::CliSpec;
+use qckm::clompr::ClOmprParams;
+use qckm::rng::Rng;
+use qckm::stream;
+use std::path::Path;
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new(
+        "qckm decode",
+        "decode K centroids from a pooled sketch (.qsk) — no dataset needed",
+    )
+    .opt("sketch", "FILE", None, "input .qsk sketch")
+    .opt("k", "NUM", None, "number of clusters")
+    .opt(
+        "method",
+        "SPEC",
+        None,
+        "declare the expected method; refused if the sketch differs",
+    )
+    .opt("decoder", "SPEC", None, DECODER_HELP)
+    .opt("replicates", "NUM", Some("1"), "decoder replicates (best objective wins)")
+    .opt("threads", "NUM", Some("1"), "decoder threads (0 = all cores)")
+    .opt("seed", "NUM", None, "decoder RNG seed (default: the sketch's seed)")
+    .opt("lo", "FLOAT", Some("-1"), "centroid search box lower bound (every coordinate)")
+    .opt("hi", "FLOAT", Some("1"), "centroid search box upper bound (every coordinate)")
+    .opt("data", "FILE", None, "optional dataset: use its bounding box and report SSE")
+    .opt("out", "FILE", None, "write centroids CSV here");
+    let parsed = spec.parse(args)?;
+    let sketch_path = parsed.get("sketch").context("--sketch is required")?;
+    let k = parsed.get_usize("k")?.context("--k is required")?;
+
+    let (meta, pool) = stream::load_sketch(Path::new(sketch_path))?;
+    check_declared_method(&parsed, &meta.method, sketch_path)?;
+    if pool.count() == 0 {
+        bail!("{sketch_path}: sketch pools zero samples");
+    }
+    let op = meta.rebuild_operator()?;
+    eprintln!(
+        "sketch: {} samples, {} slots [{}]",
+        pool.count(),
+        pool.len(),
+        meta.describe()
+    );
+
+    let x = match parsed.get("data") {
+        Some(p) => {
+            let mut reader = stream::open_dataset(Path::new(p))?;
+            let x = stream::read_all(reader.as_mut())?;
+            if x.cols() != op.dim() {
+                bail!(
+                    "{p}: dataset dimension {} does not match the sketch's dimension {}",
+                    x.cols(),
+                    op.dim()
+                );
+            }
+            Some(x)
+        }
+        None => None,
+    };
+    let (lo, hi) = search_box(&parsed, x.as_ref(), op.dim())?;
+
+    let params = ClOmprParams {
+        threads: parsed.get_usize("threads")?.unwrap(),
+        ..ClOmprParams::default()
+    };
+    let decoder = decoder_from(&parsed)?;
+    let replicates = parsed.get_usize("replicates")?.unwrap().max(1);
+    let seed = parsed.get_u64("seed")?.unwrap_or(meta.seed);
+    let z = pool.mean();
+    let mut rng = Rng::new(seed);
+    eprintln!("decoder: {}", decoder.canonical());
+    let sol = decoder.decode_best_of(&op, k, &z, lo, hi, &params, replicates, &mut rng);
+    report_solution(&sol, x.as_ref(), parsed.get("out"))
+}

@@ -1,0 +1,121 @@
+//! `qckm experiment` — regenerate a paper figure. Every decoding trial
+//! routes through the `--decoder` registry spec (default `clompr`, the
+//! paper's CL-OMPR — bit-for-bit the legacy harness).
+
+use super::common::{decoder_from, DECODER_HELP};
+use anyhow::{bail, Context, Result};
+use qckm::cli::CliSpec;
+use qckm::experiments as exp;
+use std::sync::Arc;
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new("qckm experiment", "regenerate a paper figure")
+        .positionals("<fig2a|fig2b|fig3|prop1|ablation>")
+        .flag("full", "paper-scale grid (slow) instead of the quick grid")
+        .flag("streamed", "fig2 only: sketch trials through the streaming fold")
+        .opt("trials", "NUM", None, "override trials per cell")
+        .opt("samples", "NUM", None, "override dataset size")
+        .opt("seed", "NUM", None, "override seed")
+        .opt("decoder", "SPEC", None, DECODER_HELP)
+        .opt("threads", "NUM", None, "trial fan-out threads (0 = all cores)");
+    let parsed = spec.parse(args)?;
+    let which = parsed
+        .positional(0)
+        .context("which experiment? (fig2a|fig2b|fig3|prop1|ablation)")?;
+    let full = parsed.flag("full");
+    let decoder = decoder_from(&parsed)?;
+
+    match which {
+        "fig2a" | "fig2b" => {
+            let variant = if which == "fig2a" {
+                exp::Fig2Variant::VaryDimension
+            } else {
+                exp::Fig2Variant::VaryClusters
+            };
+            let mut cfg = if full {
+                exp::Fig2Config::full(variant)
+            } else {
+                exp::Fig2Config::quick(variant)
+            };
+            if let Some(t) = parsed.get_usize("trials")? {
+                cfg.trials = t;
+            }
+            if let Some(s) = parsed.get_usize("samples")? {
+                cfg.n_samples = s;
+            }
+            if let Some(seed) = parsed.get_u64("seed")? {
+                cfg.seed = seed;
+            }
+            if let Some(t) = parsed.get_usize("threads")? {
+                cfg.threads = t;
+            }
+            cfg.decoder_spec = decoder;
+            cfg.streamed = parsed.flag("streamed");
+            let res = exp::run_fig2(&cfg);
+            println!("{}", res.render());
+        }
+        "fig3" => {
+            let mut cfg = if full {
+                exp::Fig3Config::full()
+            } else {
+                exp::Fig3Config::quick()
+            };
+            if let Some(t) = parsed.get_usize("trials")? {
+                cfg.trials = t;
+            }
+            if let Some(s) = parsed.get_usize("samples")? {
+                cfg.n_samples = s;
+            }
+            if let Some(seed) = parsed.get_u64("seed")? {
+                cfg.seed = seed;
+            }
+            if let Some(t) = parsed.get_usize("threads")? {
+                cfg.threads = t;
+            }
+            cfg.decoder_spec = decoder;
+            let res = exp::run_fig3(&cfg);
+            println!("{}", res.render());
+        }
+        "prop1" => {
+            // Prop. 1 validates the *sketch*, not any decode — the decoder
+            // registry has nothing to route here.
+            if parsed.get("decoder").is_some() {
+                eprintln!("note: prop1 never decodes; --decoder is ignored");
+            }
+            let mut cfg = exp::Prop1Config::default();
+            if let Some(t) = parsed.get_usize("trials")? {
+                cfg.repeats = t;
+            }
+            if let Some(seed) = parsed.get_u64("seed")? {
+                cfg.seed = seed;
+            }
+            let sigs: [Arc<dyn qckm::signature::Signature>; 3] = [
+                Arc::new(qckm::signature::UniversalQuantizer),
+                Arc::new(qckm::signature::Triangle),
+                Arc::new(qckm::signature::ModuloRamp),
+            ];
+            for sig in sigs {
+                let res = exp::run_prop1(sig, &cfg);
+                println!("{}", res.render());
+            }
+        }
+        "ablation" => {
+            let mut cfg = exp::AblationConfig::default();
+            if let Some(t) = parsed.get_usize("trials")? {
+                cfg.trials = t;
+            }
+            if let Some(t) = parsed.get_usize("threads")? {
+                cfg.threads = t;
+            }
+            cfg.decoder = decoder;
+            if full {
+                cfg.trials = 30;
+                cfg.ratios = vec![0.5, 1.0, 2.0, 4.0, 8.0];
+            }
+            let res = exp::run_ablation(&cfg);
+            println!("{}", res.render());
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}

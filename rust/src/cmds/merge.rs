@@ -1,0 +1,48 @@
+//! `qckm merge` — pool shard sketches (`.qsk`) into one. Associative, any
+//! order; mismatched operators are refused at the fingerprint.
+
+use super::common::check_declared_method;
+use anyhow::{bail, Context, Result};
+use qckm::cli::CliSpec;
+use qckm::stream;
+use std::path::Path;
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new(
+        "qckm merge",
+        "pool shard sketches (.qsk) into one — associative, any order",
+    )
+    .positionals("<shard.qsk>…")
+    .opt(
+        "method",
+        "SPEC",
+        None,
+        "declare the expected method; refused if the shards differ",
+    )
+    .opt("out", "FILE", None, "write the merged .qsk here");
+    let parsed = spec.parse(args)?;
+    let inputs = parsed.positionals();
+    if inputs.is_empty() {
+        bail!("need at least one input .qsk (see --help)");
+    }
+    let out = parsed.get("out").context("--out is required")?;
+
+    let (meta, mut pool, mut prov) = stream::load_sketch_full(Path::new(&inputs[0]))?;
+    check_declared_method(&parsed, &meta.method, &inputs[0])?;
+    eprintln!("{}: {} samples [{}]", inputs[0], pool.count(), meta.describe());
+    for input in &inputs[1..] {
+        let (shard_meta, shard_pool, shard_prov) = stream::load_sketch_full(Path::new(input))?;
+        meta.ensure_mergeable(&shard_meta)
+            .with_context(|| format!("merging {input}"))?;
+        eprintln!("{}: {} samples", input, shard_pool.count());
+        pool.merge(&shard_pool);
+        prov.extend(shard_prov);
+    }
+    stream::save_sketch_with(Path::new(out), &meta, &pool, &prov)?;
+    println!(
+        "merged {} shard(s), {} samples -> {out}",
+        inputs.len(),
+        pool.count()
+    );
+    Ok(())
+}

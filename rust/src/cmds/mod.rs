@@ -1,0 +1,21 @@
+//! Per-verb command modules behind the `qckm` dispatcher.
+//!
+//! `main.rs` is a thin table mapping verb → `cmds::<verb>::run(args)`;
+//! every CLI concern lives here. [`common`] holds the plumbing the verbs
+//! share — job-config resolution, operator construction, search-box
+//! derivation, `.qsk` method checks — so no verb duplicates another's
+//! wiring.
+
+pub mod common;
+
+pub mod cluster;
+pub mod ctl;
+pub mod decode;
+pub mod experiment;
+pub mod merge;
+pub mod pipeline;
+pub mod push;
+pub mod query;
+pub mod serve;
+pub mod sketch;
+pub mod snapshot;

@@ -1,0 +1,89 @@
+//! `qckm push` — stream a dataset into a serving node's shard, with
+//! optional reconnect-and-resend under bounded exponential backoff
+//! (`--retry N`) so a server kill-and-restart does not abort the stream.
+
+use super::common::shard_label;
+use anyhow::{bail, Context, Result};
+use qckm::cli::CliSpec;
+use qckm::linalg::Mat;
+use qckm::method::MethodSpec;
+use qckm::server::{RetryClient, RetryPolicy};
+use qckm::stream;
+use std::path::Path;
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new("qckm push", "stream a dataset into a serving node's shard")
+        .opt("addr", "HOST:PORT", None, "server address")
+        .opt("data", "FILE", None, "input dataset (.csv, else raw f64 bin)")
+        .opt("shard", "NAME", None, "shard label (default: the data file stem)")
+        .opt(
+            "method",
+            "SPEC",
+            None,
+            "declare the expected method; the server refuses a mismatch",
+        )
+        .opt("batch", "NUM", Some("4096"), "rows per push message")
+        .opt(
+            "retry",
+            "NUM",
+            Some("0"),
+            "transport-error retries with exponential backoff (0 = fail fast); \
+             a re-sent batch may double-count if the failure hit mid-ack",
+        );
+    let parsed = spec.parse(args)?;
+    let addr = parsed.get("addr").context("--addr is required")?;
+    let data_path = parsed.get("data").context("--data is required")?;
+    let batch = parsed.get_usize("batch")?.unwrap().max(1);
+    let shard = shard_label(&parsed, data_path);
+
+    let mut reader = stream::open_dataset(Path::new(data_path))?;
+    let dim = reader.dim();
+    // Clamp the batch so every push message fits one protocol frame.
+    let cap = qckm::server::proto::max_batch_rows(dim);
+    let batch = if batch > cap {
+        eprintln!("note: --batch {batch} clamped to {cap} rows (frame size cap at dim {dim})");
+        cap
+    } else {
+        batch
+    };
+    // The declared method is canonicalized locally, so junk fails fast
+    // with the registry's valid-family list before any connection.
+    let method = match parsed.get("method") {
+        Some(m) => MethodSpec::parse(m)?.canonical().to_string(),
+        None => String::new(),
+    };
+    let policy = RetryPolicy {
+        attempts: parsed.get_u64("retry")?.unwrap().min(u32::MAX as u64) as u32,
+        ..RetryPolicy::default()
+    };
+    let mut client = RetryClient::connect(addr, &method, policy)?;
+    let mut pushed = 0u64;
+    let mut buf: Vec<f64> = Vec::new();
+    let (mut shard_rows, mut total_rows) = (0, 0);
+    loop {
+        buf.clear();
+        let mut rows = 0usize;
+        while rows < batch {
+            let got = reader.next_block(batch - rows, &mut buf)?;
+            if got == 0 {
+                break;
+            }
+            rows += got;
+        }
+        if rows == 0 {
+            break;
+        }
+        let block = Mat::from_vec(rows, dim, std::mem::take(&mut buf));
+        (shard_rows, total_rows) = client.push(&shard, &block)?;
+        buf = block.into_vec();
+        pushed += rows as u64;
+    }
+    if pushed == 0 {
+        bail!("{data_path}: empty dataset");
+    }
+    println!(
+        "pushed {pushed} rows from {data_path} to shard '{shard}' \
+         (shard total {shard_rows}, server total {total_rows})"
+    );
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! `qckm query` — decode centroids live from a serving node. The decoder
+//! spec rides the protocol frame, and the server's centroid cache keys on
+//! it, so a cached answer always matches the requested algorithm.
+
+use super::common::{connect_with_method, print_centroids, save_centroids, scalar_box, DECODER_HELP};
+use anyhow::{Context, Result};
+use qckm::cli::CliSpec;
+use qckm::decoder::DecoderSpec;
+use qckm::linalg::Mat;
+use qckm::server::QuerySpec;
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new("qckm query", "decode centroids live from a serving node")
+        .opt("addr", "HOST:PORT", None, "server address")
+        .opt("k", "NUM", None, "number of clusters")
+        .opt(
+            "method",
+            "SPEC",
+            None,
+            "declare the expected method; the server refuses a mismatch",
+        )
+        .opt("decoder", "SPEC", None, DECODER_HELP)
+        .opt(
+            "window",
+            "NUM",
+            Some("0"),
+            "epochs to pool: 0 = all-time, E = open epoch + E-1 newest closed",
+        )
+        .opt("replicates", "NUM", Some("1"), "decoder replicates (best objective wins)")
+        .opt("seed", "NUM", None, "decoder RNG seed (default: the operator's seed)")
+        .opt("lo", "FLOAT", Some("-1"), "centroid search box lower bound (every coordinate)")
+        .opt("hi", "FLOAT", Some("1"), "centroid search box upper bound (every coordinate)")
+        .opt("out", "FILE", None, "write centroids CSV here");
+    let parsed = spec.parse(args)?;
+    let addr = parsed.get("addr").context("--addr is required")?;
+    let k = parsed.get_usize("k")?.context("--k is required")?;
+    let (lo, hi) = scalar_box(&parsed)?;
+    // Canonicalize locally so junk fails fast with the registry list; an
+    // absent flag sends the empty spec (= the server's default, clompr).
+    let decoder = match parsed.get("decoder") {
+        Some(s) => DecoderSpec::parse(s)?.canonical().to_string(),
+        None => String::new(),
+    };
+
+    let mut client = connect_with_method(addr, &parsed)?;
+    let report = client.query(&QuerySpec {
+        k: k as u32,
+        window: parsed.get_usize("window")?.unwrap() as u32,
+        replicates: parsed.get_usize("replicates")?.unwrap().max(1) as u32,
+        seed: parsed.get_u64("seed")?,
+        lo,
+        hi,
+        decoder,
+    })?;
+    eprintln!(
+        "window: {} rows over {} epoch(s){}",
+        report.rows,
+        report.epochs,
+        if report.cached { " [cached]" } else { "" }
+    );
+    println!("objective = {:.6}", report.objective);
+    let centroids = Mat::from_vec(report.k as usize, report.dim as usize, report.centroids);
+    print_centroids(&centroids, &report.weights);
+    save_centroids(parsed.get("out"), &centroids)
+}

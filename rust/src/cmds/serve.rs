@@ -1,0 +1,122 @@
+//! `qckm serve` — the online sketch service (see `qckm::server`).
+
+use super::common::{check_declared_method, job_from, METHOD_HELP};
+use anyhow::{bail, Context, Result};
+use qckm::cli::CliSpec;
+use qckm::clompr::ClOmprParams;
+use qckm::frequency::SigmaHeuristic;
+use qckm::parallel::Parallelism;
+use qckm::server::{self, ServiceConfig, SketchService};
+use qckm::stream;
+use std::path::Path;
+use std::sync::Arc;
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new(
+        "qckm serve",
+        "run the online sketch service: concurrent ingest, windowed pooling, live decode",
+    )
+    .opt("host", "ADDR", Some("127.0.0.1"), "bind address")
+    .opt("port", "NUM", Some("0"), "bind port (0 = ephemeral; the bound port is printed)")
+    .opt("dim", "NUM", None, "data dimension (required unless --seed-sketch)")
+    .opt("m", "NUM", None, "number of frequencies")
+    .opt("method", "SPEC", None, METHOD_HELP)
+    .opt("sigma", "FLOAT", None, "kernel bandwidth (required unless --seed-sketch)")
+    .opt("seed", "NUM", None, "frequency-draw seed")
+    .opt("threads", "NUM", None, "encode/decode threads (0 = all cores)")
+    .opt("epochs", "NUM", Some("16"), "closed epochs retained for windowed queries")
+    .opt("cache", "NUM", Some("32"), "cached decodes retained")
+    .opt(
+        "seed-sketch",
+        "FILE",
+        None,
+        "seed the server from this .qsk (operator comes from its header)",
+    )
+    .opt("seed-shard", "NAME", Some("__seed__"), "shard label for the seeded history")
+    .opt("config", "FILE", None, "TOML job config");
+    let parsed = spec.parse(args)?;
+    let cfg = job_from(&parsed)?;
+
+    // The operator is fixed for the server's lifetime: either rebuilt from
+    // a snapshot header (fingerprint-verified) or drawn fresh from the
+    // CLI parameters — the same pure-function draw the offline stages use.
+    let (meta, op, seed_pool) = match parsed.get("seed-sketch") {
+        Some(path) => {
+            let (meta, pool, prov) = stream::load_sketch_full(Path::new(path))?;
+            // The operator comes entirely from the snapshot header; refuse
+            // operator flags that contradict it (same convention as
+            // `qckm sketch --append`) instead of silently ignoring them.
+            if let Some(m) = parsed.get_usize("m")? {
+                if m as u64 != meta.m {
+                    bail!("--m {m} conflicts with {path} (m={})", meta.m);
+                }
+            }
+            check_declared_method(&parsed, &meta.method, path)?;
+            if let SigmaHeuristic::Fixed(sigma) = cfg.sketch.sigma {
+                if sigma.to_bits() != meta.sigma.to_bits() {
+                    bail!("--sigma {sigma} conflicts with {path} (sigma={})", meta.sigma);
+                }
+            }
+            if let Some(seed) = parsed.get_u64("seed")? {
+                if seed != meta.seed {
+                    bail!("--seed {seed} conflicts with {path} (seed={})", meta.seed);
+                }
+            }
+            let op = meta.rebuild_operator()?;
+            eprintln!(
+                "seeded from {path}: {} samples across {} provenance record(s)",
+                pool.count(),
+                prov.len()
+            );
+            (meta, op, Some(pool))
+        }
+        None => {
+            let dim = parsed
+                .get_usize("dim")?
+                .context("--dim is required without --seed-sketch")?;
+            let SigmaHeuristic::Fixed(sigma) = cfg.sketch.sigma else {
+                bail!("--sigma is required without --seed-sketch (shards must agree on it)");
+            };
+            let op = stream::draw_operator(
+                &cfg.sketch.method,
+                cfg.sketch.law,
+                cfg.sketch.num_frequencies,
+                dim,
+                sigma,
+                cfg.seed,
+            );
+            let meta = stream::SketchMeta::for_operator(&op, &cfg.sketch.method, cfg.seed);
+            (meta, op, None)
+        }
+    };
+    eprintln!("operator: {}", meta.describe());
+
+    let service_cfg = ServiceConfig {
+        epoch_capacity: parsed.get_usize("epochs")?.unwrap().max(1),
+        cache_capacity: parsed.get_usize("cache")?.unwrap().max(1),
+        threads: Parallelism::fixed(cfg.threads),
+        decode: ClOmprParams {
+            threads: cfg.threads,
+            ..ClOmprParams::default()
+        },
+    };
+    let service = SketchService::new(op, meta, service_cfg);
+    if let Some(pool) = seed_pool {
+        service.seed_with(parsed.get("seed-shard").unwrap(), pool)?;
+    }
+
+    let host = parsed.get("host").unwrap();
+    let port = parsed.get_usize("port")?.unwrap();
+    if port > u16::MAX as usize {
+        bail!("--port {port} out of range");
+    }
+    let listener = std::net::TcpListener::bind((host, port as u16))
+        .with_context(|| format!("bind {host}:{port}"))?;
+    // Machine-parseable: tests and scripts read the ephemeral port here.
+    println!("LISTENING {}", listener.local_addr()?);
+    std::io::Write::flush(&mut std::io::stdout())?;
+
+    let served = server::serve(listener, Arc::new(service))?;
+    eprintln!("server stopped after {served} connection(s)");
+    Ok(())
+}

@@ -1,0 +1,192 @@
+//! `qckm sketch` — stream the pooled sketch of a dataset shard into a
+//! `.qsk` file (or `--append` it into an existing one: the online-update
+//! mode, operator rebuilt and fingerprint-verified from the header).
+
+use super::common::{check_declared_method, job_from, shard_label, wire_from, METHOD_HELP};
+use anyhow::{bail, Context, Result};
+use qckm::cli::{CliSpec, ParsedArgs};
+use qckm::data::save_csv;
+use qckm::frequency::SigmaHeuristic;
+use qckm::linalg::Mat;
+use qckm::method::MethodSpec;
+use qckm::parallel::Parallelism;
+use qckm::rng::Rng;
+use qckm::sketch::PooledSketch;
+use qckm::stream;
+use std::path::Path;
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new(
+        "qckm sketch",
+        "stream the pooled sketch of a dataset shard into a .qsk file",
+    )
+    .opt("data", "FILE", None, "input dataset (.csv, else raw f64 bin)")
+    .opt("m", "NUM", None, "number of frequencies")
+    .opt("method", "SPEC", None, METHOD_HELP)
+    .opt(
+        "sigma",
+        "FLOAT",
+        None,
+        "kernel bandwidth; required for out-of-core streaming and for shards to merge",
+    )
+    .opt("seed", "NUM", None, "frequency-draw seed (must match across shards)")
+    .opt("threads", "NUM", None, "compute threads (0 = all cores)")
+    .opt("encoding", "FMT", Some("auto"), "per-chunk pooling: auto|bits|dense")
+    .opt(
+        "append",
+        "FILE",
+        None,
+        "online update: stream --data into this existing .qsk (operator comes \
+         from its header, fingerprint-verified) and rewrite it",
+    )
+    .opt("shard", "NAME", None, "provenance label (default: the data file stem)")
+    .opt("config", "FILE", None, "TOML job config")
+    .opt("out", "FILE", None, "write the pooled sketch (.qsk) here")
+    .opt("out-csv", "FILE", None, "also write the mean sketch as one CSV row");
+    let parsed = spec.parse(args)?;
+    let cfg = job_from(&parsed)?;
+    let data_path = parsed.get("data").context("--data is required")?;
+    let par = Parallelism::fixed(cfg.threads);
+    let shard = shard_label(&parsed, data_path);
+
+    if let Some(append_path) = parsed.get("append") {
+        return sketch_append(&parsed, append_path, data_path, &shard, &par);
+    }
+    let method = cfg.sketch.method.clone();
+    let wire = wire_from(&parsed, &method)?;
+
+    // The frequency draw is a pure function of (method, law, m, d, sigma,
+    // seed) — the `.qsk` contract that lets every shard and the decoder
+    // reproduce the same operator. A fixed sigma streams out-of-core; the
+    // data-dependent heuristic needs the dataset once, in memory.
+    let (op, pool) = match cfg.sketch.sigma {
+        SigmaHeuristic::Fixed(sigma) => {
+            let mut reader = stream::open_dataset(Path::new(data_path))?;
+            let op = stream::draw_operator(
+                &method,
+                cfg.sketch.law,
+                cfg.sketch.num_frequencies,
+                reader.dim(),
+                sigma,
+                cfg.seed,
+            );
+            let mut pool = PooledSketch::new(op.sketch_len());
+            let rows = stream::sketch_reader(&op, reader.as_mut(), wire, &mut pool, &par)?;
+            if rows == 0 {
+                bail!("{data_path}: empty dataset");
+            }
+            eprintln!("streamed {rows} rows from {data_path} ({wire:?} pooling)");
+            (op, pool)
+        }
+        heuristic => {
+            let mut reader = stream::open_dataset(Path::new(data_path))?;
+            let x = stream::read_all(reader.as_mut())?;
+            let sigma = heuristic.resolve(&x, &mut Rng::new(cfg.seed).substream(1));
+            eprintln!(
+                "note: sigma {sigma:.4} was estimated from the data in memory; pass --sigma \
+                 to stream out-of-core and to keep independent shards mergeable"
+            );
+            let op = stream::draw_operator(
+                &method,
+                cfg.sketch.law,
+                cfg.sketch.num_frequencies,
+                x.cols(),
+                sigma,
+                cfg.seed,
+            );
+            // Same chunked fold as the streamed path (bitwise identical to
+            // `sketch_into_par`), so --encoding is honored here too.
+            let mut pool = PooledSketch::new(op.sketch_len());
+            stream::sketch_reader(
+                &op,
+                &mut stream::MatChunkedReader::new(&x),
+                wire,
+                &mut pool,
+                &par,
+            )?;
+            (op, pool)
+        }
+    };
+    eprintln!(
+        "operator: method={} law={} M={} sigma={:.4}",
+        method.canonical(),
+        cfg.sketch.law.name(),
+        op.num_frequencies(),
+        op.frequencies().sigma
+    );
+
+    let meta = stream::SketchMeta::for_operator(&op, &method, cfg.seed);
+    if let Some(out) = parsed.get("out") {
+        let prov = [stream::ShardRecord {
+            label: shard.clone(),
+            rows: pool.count(),
+        }];
+        stream::save_sketch_with(Path::new(out), &meta, &pool, &prov)?;
+        eprintln!("sketch written to {out} [{}]", meta.describe());
+    }
+    let z = pool.mean();
+    println!(
+        "sketch: {} slots over {} samples, first 8: {:?}",
+        z.len(),
+        pool.count(),
+        &z[..z.len().min(8)]
+    );
+    if let Some(out) = parsed.get("out-csv") {
+        save_csv(Path::new(out), &Mat::from_vec(1, z.len(), z))?;
+        eprintln!("mean sketch written to {out}");
+    }
+    Ok(())
+}
+
+/// `qckm sketch --append`: the online-update mode. The operator is NOT
+/// re-drawn from CLI flags — it is rebuilt from the existing `.qsk` header
+/// (fingerprint-verified), the new rows are streamed into the loaded pool
+/// through the same bounded-memory fold, and the file is rewritten with an
+/// extra provenance record. Any operator flag that contradicts the header
+/// is an error (silently sketching new rows with a different operator
+/// would corrupt the pool).
+fn sketch_append(
+    parsed: &ParsedArgs,
+    append_path: &str,
+    data_path: &str,
+    shard: &str,
+    par: &Parallelism,
+) -> Result<()> {
+    let (meta, mut pool, mut prov) = stream::load_sketch_full(Path::new(append_path))?;
+    if let Some(m) = parsed.get_usize("m")? {
+        if m as u64 != meta.m {
+            bail!("--m {m} conflicts with {append_path} (m={})", meta.m);
+        }
+    }
+    check_declared_method(parsed, &meta.method, append_path)?;
+    if let Some(sigma) = parsed.get_f64("sigma")? {
+        if sigma.to_bits() != meta.sigma.to_bits() {
+            bail!("--sigma {sigma} conflicts with {append_path} (sigma={})", meta.sigma);
+        }
+    }
+    if let Some(seed) = parsed.get_u64("seed")? {
+        if seed != meta.seed {
+            bail!("--seed {seed} conflicts with {append_path} (seed={})", meta.seed);
+        }
+    }
+    let op = meta.rebuild_operator()?;
+    let method = MethodSpec::parse(&meta.method)?;
+    let wire = wire_from(parsed, &method)?;
+    let before = pool.count();
+    let mut reader = stream::open_dataset(Path::new(data_path))?;
+    let rows = stream::sketch_reader(&op, reader.as_mut(), wire, &mut pool, par)?;
+    if rows == 0 {
+        bail!("{data_path}: empty dataset");
+    }
+    prov.push(stream::ShardRecord {
+        label: shard.to_string(),
+        rows,
+    });
+    let out = parsed.get("out").unwrap_or(append_path);
+    stream::save_sketch_with(Path::new(out), &meta, &pool, &prov)?;
+    println!(
+        "appended {rows} rows from {data_path} to {append_path} ({before} -> {} samples) -> {out}",
+        pool.count()
+    );
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! `qckm snapshot` — drain a serving node's window into a `.qsk` file the
+//! offline stages understand.
+
+use super::common::connect_with_method;
+use anyhow::{Context, Result};
+use qckm::cli::CliSpec;
+use qckm::stream;
+use std::path::Path;
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new(
+        "qckm snapshot",
+        "drain a serving node's window into a .qsk file (offline-decodable)",
+    )
+    .opt("addr", "HOST:PORT", None, "server address")
+    .opt("window", "NUM", Some("0"), "epochs to pool (0 = all-time)")
+    .opt(
+        "method",
+        "SPEC",
+        None,
+        "declare the expected method; the server refuses a mismatch",
+    )
+    .opt("out", "FILE", None, "write the .qsk here");
+    let parsed = spec.parse(args)?;
+    let addr = parsed.get("addr").context("--addr is required")?;
+    let out = parsed.get("out").context("--out is required")?;
+
+    let mut client = connect_with_method(addr, &parsed)?;
+    let bytes = client.snapshot(parsed.get_usize("window")?.unwrap() as u32)?;
+    std::fs::write(out, &bytes).with_context(|| format!("write {out}"))?;
+    // Re-load what we wrote: validates the checksum end-to-end and tells
+    // the operator what they got.
+    let (meta, pool, prov) = stream::load_sketch_full(Path::new(out))?;
+    println!(
+        "snapshot: {} samples across {} shard record(s) -> {out} [{}]",
+        pool.count(),
+        prov.len(),
+        meta.describe()
+    );
+    Ok(())
+}

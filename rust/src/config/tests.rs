@@ -71,6 +71,7 @@ sigma = 2.0
 [decode]
 k = 4
 replicates = 3
+decoder = "hier:restarts=2"
 [pipeline]
 workers = 2
 batch_size = 16
@@ -89,6 +90,7 @@ wire = "dense"
     ));
     assert_eq!(cfg.decode.k, 4);
     assert_eq!(cfg.decode.replicates, 3);
+    assert_eq!(cfg.decode.decoder.canonical(), "hier:restarts=2");
     assert_eq!(cfg.pipeline.workers, 2);
     assert_eq!(cfg.pipeline.wire, crate::coordinator::WireFormat::DenseF64);
 }
@@ -99,6 +101,7 @@ fn job_config_defaults_when_empty() {
     assert_eq!(cfg.sketch.num_frequencies, 1000);
     assert_eq!(cfg.sketch.method.canonical(), "qckm");
     assert_eq!(cfg.decode.k, 10);
+    assert_eq!(cfg.decode.decoder.canonical(), "clompr");
     assert_eq!(cfg.pipeline.wire, crate::coordinator::WireFormat::PackedBits);
 }
 
@@ -110,6 +113,7 @@ fn job_config_validation_errors() {
     assert!(JobConfig::from_toml_str("[sketch]\nsigma = -1.0\n").is_err());
     assert!(JobConfig::from_toml_str("[decode]\nk = 0\n").is_err());
     assert!(JobConfig::from_toml_str("[decode]\nreplicates = 0\n").is_err());
+    assert!(JobConfig::from_toml_str("[decode]\ndecoder = \"nope\"\n").is_err());
     assert!(JobConfig::from_toml_str("[pipeline]\nwire = \"morse\"\n").is_err());
     assert!(JobConfig::from_toml_str("[pipeline]\nworkers = 0\n").is_err());
 }

@@ -28,12 +28,16 @@ impl Default for SketchConfig {
     }
 }
 
-/// Decode-side configuration (`[decode]` section).
+/// Decode-side configuration (`[decode]` section). The decoding algorithm
+/// is an open, parameterized [`crate::decoder::DecoderSpec`] (`clompr`,
+/// `clompr:restarts=5`, `hier`, …) — see [`crate::decoder`] for the
+/// registry; `params` is the base tuning the chosen decoder refines.
 #[derive(Clone, Debug)]
 pub struct DecodeConfig {
     pub k: usize,
     pub replicates: usize,
     pub params: crate::clompr::ClOmprParams,
+    pub decoder: crate::decoder::DecoderSpec,
 }
 
 impl Default for DecodeConfig {
@@ -42,6 +46,7 @@ impl Default for DecodeConfig {
             k: 10,
             replicates: 1,
             params: crate::clompr::ClOmprParams::default(),
+            decoder: crate::decoder::DecoderSpec::default(),
         }
     }
 }
@@ -119,6 +124,9 @@ impl JobConfig {
             bail!("decode.replicates must be >= 1, got {reps}");
         }
         cfg.decode.replicates = reps as usize;
+        let default_decoder = cfg.decode.decoder.canonical().to_string();
+        cfg.decode.decoder =
+            crate::decoder::DecoderSpec::parse(doc.get_str("decode", "decoder", &default_decoder))?;
         cfg.decode.params.step1_restarts = doc
             .get_int("decode", "step1_restarts", cfg.decode.params.step1_restarts as i64)
             as usize;

@@ -1,5 +1,10 @@
 //! CL-OMPR — the sketch-matching decoder used by CKM and QCKM.
 //!
+//! One implementation in the open decoder registry ([`crate::decoder`]) —
+//! the default `clompr` spec, reachable at the legacy `crate::clompr`
+//! path too. Constructing [`ClOmpr`] directly and resolving
+//! `DecoderSpec::parse("clompr")` are bit-for-bit the same decode.
+//!
 //! Implements the paper's pseudocode (Sec. 2) over the generalized sketch of
 //! Sec. 3: given the pooled dataset sketch `z` (computed with *any*
 //! admissible signature `f`), find centroids `C` and weights `α ≥ 0`
@@ -261,8 +266,10 @@ impl<'a> ClOmpr<'a> {
     }
 
     /// Steps 3/4: NNLS of `z` on the atoms of `centroids`, columns scaled
-    /// by `col_scale` (use `1/atom_norm` for normalized atoms).
-    fn project_weights(&self, z: &[f64], centroids: &Mat, col_scale: f64) -> Vec<f64> {
+    /// by `col_scale` (use `1/atom_norm` for normalized atoms). Crate
+    /// visibility: other decoders (e.g. [`crate::decoder::HierDecoder`])
+    /// reuse it for their own weight projections.
+    pub(crate) fn project_weights(&self, z: &[f64], centroids: &Mat, col_scale: f64) -> Vec<f64> {
         let kc = centroids.rows();
         let rows = self.op.sketch_len();
         let mut a = Mat::zeros(rows, kc);
@@ -277,7 +284,15 @@ impl<'a> ClOmpr<'a> {
 
     /// Step 5: joint minimization of `‖z − Σ α_k a(c_k)‖²` over the packed
     /// variable `[c_1 … c_Kc, α]` with box bounds on centroids, `α ≥ 0`.
-    fn step5_refine(&self, z: &[f64], centroids: &mut Mat, alphas: &mut Vec<f64>, iters: usize) {
+    /// Crate visibility: other decoders (e.g.
+    /// [`crate::decoder::HierDecoder`]) reuse it as their global polish.
+    pub(crate) fn step5_refine(
+        &self,
+        z: &[f64],
+        centroids: &mut Mat,
+        alphas: &mut Vec<f64>,
+        iters: usize,
+    ) {
         let kc = centroids.rows();
         let n = self.op.dim();
         let dim = kc * n + kc;

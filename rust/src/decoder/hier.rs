@@ -1,0 +1,194 @@
+//! `hier` — the recursive-bisection decoder.
+//!
+//! Solves the K-centroid inverse problem as a tree of k = 2 CL-OMPR
+//! subproblems (see the algorithm sketch in [`crate::decoder`]):
+//!
+//! 1. Fit a 2-atom mixture to the current sketch inside the current box
+//!    with a short CL-OMPR run (subproblems skip the expensive final
+//!    polish — one global polish happens at the root instead).
+//! 2. Refit the two atoms' unnormalized weights by NNLS on the current
+//!    sketch, split the box at the midpoint of the two centroids along
+//!    their widest-separated coordinate, and divide the remaining cluster
+//!    budget between the halves in proportion to the fitted weights.
+//! 3. Recurse on each half with its *residual sketch* — the current
+//!    sketch minus the sibling's fitted atom — so mass the sibling
+//!    explains does not attract this branch's Step-1 search.
+//! 4. At the root, project the K leaf centroids' weights on the full
+//!    sketch (NNLS) and run one joint Step-5 refinement over the whole
+//!    support.
+//!
+//! The box split (not just the residual) is what prevents the two
+//! branches from rediscovering the same atom: every leaf's search is
+//! confined to a cell of a binary space partition, so each well-separated
+//! mode is reachable by exactly one branch. Cost is `O(K)` k = 2
+//! subproblems — each with O(1)-atom Step-5 refinements — plus one
+//! full-support polish, versus CL-OMPR's `2K` outer iterations with up to
+//! K-atom refinements; at large K the wall-clock gap is the point (see
+//! `benches/decode_bench.rs`). Quality on hard, overlapping mixtures is
+//! below CL-OMPR's — the bisection commits early — which is the trade.
+//!
+//! Determinism: the recursion order is fixed (low side first), every
+//! subproblem consumes the shared `rng` stream sequentially, and all the
+//! building blocks inherit the thread-invariance contract of
+//! [`crate::parallel`], so decodes are bit-for-bit reproducible at every
+//! thread count, like everything else in this crate.
+
+use super::clompr::{ClOmpr, ClOmprParams, Solution};
+use super::SketchDecoder;
+use crate::linalg::{axpy, norm2, sub, Mat};
+use crate::rng::Rng;
+use crate::sketch::SketchOperator;
+
+/// Below this total fitted weight the 2-atom fit carries no usable mass
+/// signal, and the cluster budget splits evenly instead of by weight.
+const MIN_BRANCH_WEIGHT: f64 = 1e-12;
+
+/// The recursive-bisection decoder. Register-constructed via the `hier`
+/// spec ([`crate::decoder::DecoderSpec`]); the params are the same base
+/// tuning CL-OMPR uses (thread budget, iteration caps), applied to every
+/// k = 2 subproblem and to the final global polish.
+pub struct HierDecoder {
+    params: ClOmprParams,
+}
+
+impl HierDecoder {
+    pub fn new(params: ClOmprParams) -> Self {
+        Self { params }
+    }
+
+    /// Subproblems skip the expensive final polish: their last outer
+    /// iteration refines with the intermediate `step5_iters` budget, and
+    /// the one `step5_final_iters` polish happens globally at the root.
+    fn subproblem_params(&self) -> ClOmprParams {
+        ClOmprParams {
+            step5_final_iters: self.params.step5_iters,
+            ..self.params.clone()
+        }
+    }
+
+    /// Recursively collect `k` leaf centroids from `z` inside `[lo, hi]`.
+    #[allow(clippy::too_many_arguments)]
+    fn bisect(
+        &self,
+        op: &SketchOperator,
+        z: &[f64],
+        k: usize,
+        lo: &[f64],
+        hi: &[f64],
+        rng: &mut Rng,
+        out: &mut Vec<Vec<f64>>,
+    ) {
+        let sub_k = k.min(2);
+        let sol = ClOmpr::new(op, sub_k)
+            .with_bounds(lo.to_vec(), hi.to_vec())
+            .with_params(self.subproblem_params())
+            .run(z, rng);
+        if k <= 2 {
+            for c in 0..sol.centroids.rows() {
+                out.push(sol.centroids.row(c).to_vec());
+            }
+            return;
+        }
+
+        // Refit the two atoms' unnormalized weights on this branch's
+        // sketch — `Solution` weights are normalized to sum 1, but the
+        // budget split and the residual subtraction need the fitted scale.
+        let solver = ClOmpr::new(op, 2)
+            .with_bounds(lo.to_vec(), hi.to_vec())
+            .with_params(self.subproblem_params());
+        let alphas = solver.project_weights(z, &sol.centroids, 1.0);
+        let (c0, c1) = (sol.centroids.row(0), sol.centroids.row(1));
+
+        // Split the box at the midpoint of the two centroids along their
+        // widest-separated coordinate; branch 0 keeps the low side.
+        let mut dim_split = 0;
+        let mut widest = -1.0;
+        for d in 0..op.dim() {
+            let gap = (c0[d] - c1[d]).abs();
+            if gap > widest {
+                widest = gap;
+                dim_split = d;
+            }
+        }
+        let mid = 0.5 * (c0[dim_split] + c1[dim_split]);
+        let mut hi_low = hi.to_vec();
+        hi_low[dim_split] = mid;
+        let mut lo_high = lo.to_vec();
+        lo_high[dim_split] = mid;
+
+        // Cluster budget proportional to the fitted weights of each side,
+        // clamped so both branches keep at least one cluster.
+        let (w_low, w_high) = if c0[dim_split] <= c1[dim_split] {
+            (alphas[0], alphas[1])
+        } else {
+            (alphas[1], alphas[0])
+        };
+        let total = w_low + w_high;
+        let k_low = if total > MIN_BRANCH_WEIGHT {
+            ((k as f64 * w_low / total).round() as usize).clamp(1, k - 1)
+        } else {
+            k / 2
+        };
+        let k_high = k - k_low;
+
+        // Residual sketches: each branch sees z minus the sibling's
+        // fitted atom.
+        let (i_low, i_high) = if c0[dim_split] <= c1[dim_split] {
+            (0, 1)
+        } else {
+            (1, 0)
+        };
+        let mut z_low = z.to_vec();
+        axpy(-alphas[i_high], &op.atom(sol.centroids.row(i_high)), &mut z_low);
+        let mut z_high = z.to_vec();
+        axpy(-alphas[i_low], &op.atom(sol.centroids.row(i_low)), &mut z_high);
+
+        self.bisect(op, &z_low, k_low, lo, &hi_low, rng, out);
+        self.bisect(op, &z_high, k_high, &lo_high, hi, rng, out);
+    }
+}
+
+impl SketchDecoder for HierDecoder {
+    fn decode(
+        &self,
+        op: &SketchOperator,
+        z: &[f64],
+        k: usize,
+        lo: &[f64],
+        hi: &[f64],
+        rng: &mut Rng,
+    ) -> Solution {
+        assert_eq!(z.len(), op.sketch_len(), "sketch length mismatch");
+        assert!(k >= 1, "need at least one cluster");
+        let mut leaves: Vec<Vec<f64>> = Vec::with_capacity(k);
+        self.bisect(op, z, k, lo, hi, rng, &mut leaves);
+        debug_assert_eq!(leaves.len(), k);
+        let mut centroids = Mat::zeros(0, op.dim());
+        for c in &leaves {
+            centroids.push_row(c);
+        }
+
+        // Global polish: NNLS weight projection on the full sketch, then
+        // one joint Step-5 refinement over the whole support — the same
+        // finishing moves CL-OMPR applies on its last outer iteration.
+        let polisher = ClOmpr::new(op, k)
+            .with_bounds(lo.to_vec(), hi.to_vec())
+            .with_params(self.params.clone());
+        let mut alphas = polisher.project_weights(z, &centroids, 1.0);
+        polisher.step5_refine(z, &mut centroids, &mut alphas, self.params.step5_final_iters);
+
+        let model = op.mixture_sketch(&centroids, &alphas);
+        let objective = norm2(&sub(z, &model));
+        let total: f64 = alphas.iter().sum();
+        let weights = if total > 0.0 {
+            alphas.iter().map(|a| a / total).collect()
+        } else {
+            vec![1.0 / k as f64; k]
+        };
+        Solution {
+            centroids,
+            weights,
+            objective,
+        }
+    }
+}

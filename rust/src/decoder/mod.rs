@@ -1,0 +1,375 @@
+//! The open decoder registry — pluggable sketch-to-centroids solvers.
+//!
+//! The compressive-learning literature treats the decoder as an
+//! interchangeable component: the sketch fixes the *moment-matching
+//! inverse problem* `min ‖z − Σ_k α_k a(c_k)‖²`, and CL-OMPR is just one
+//! greedy heuristic for it (Keriven et al., *Compressive K-means*;
+//! Gribonval et al., *Compressive Statistical Learning with Random
+//! Feature Moments*). This module is the decode-side mirror of the method
+//! registry ([`crate::method`]): a [`DecoderSpec`] is a parsed, canonical
+//! descriptor of one decoding algorithm, every layer (CLI flags, TOML
+//! config, the server protocol, the experiment harnesses) speaks decoder
+//! spec strings, and a new algorithm registers once in the `DECODERS`
+//! table.
+//!
+//! ## Spec-string grammar
+//!
+//! ```text
+//! spec   := name [":" param ("," param)*]
+//! param  := key "=" value
+//! ```
+//!
+//! Case-insensitive; the canonical form (lowercase, explicit params in
+//! registry order) is what [`DecoderSpec::canonical`] returns and what
+//! the server protocol carries — the centroid cache keys on it, so a
+//! query can never be answered with centroids decoded under a different
+//! algorithm. Parsing the canonical form reproduces an equal spec.
+//!
+//! Current decoders (see [`DecoderSpec::decoders_help`]):
+//!
+//! | spec                                | algorithm                                    |
+//! |-------------------------------------|----------------------------------------------|
+//! | `clompr`                            | CL-OMPR (the paper's decoder, the default)   |
+//! | `clompr:restarts=R,replacements=P`  | CL-OMPR, R Step-1 restarts, P outer passes/K |
+//! | `hier`                              | recursive bisection over k = 2 subproblems   |
+//! | `hier:restarts=R`                   | same, R Step-1 restarts per subproblem       |
+//!
+//! Explicit params always override the base [`ClOmprParams`] a caller
+//! supplies (even when they equal the compiled-in defaults), so
+//! `clompr:restarts=3` and `clompr` are distinct specs on purpose: the
+//! former pins Step 1 to 3 restarts no matter what the job config says.
+//!
+//! ## `hier` — the recursive-bisection decoder
+//!
+//! CL-OMPR runs `2K` outer iterations, each refining the *entire* support
+//! jointly — `O(K²)` atom evaluations per sweep — which dominates decode
+//! time at large K. `hier` instead splits the problem: fit a k = 2
+//! mixture with a short CL-OMPR run, split the search box at the midpoint
+//! of the two centroids (along their widest-separated coordinate), divide
+//! the remaining cluster budget between the halves in proportion to the
+//! fitted weights, and recurse on the *residual sketches* (each branch
+//! sees `z` minus the sibling's fitted atom) within its sub-box. The K
+//! leaf centroids then get one global NNLS weight projection and one
+//! joint Step-5 polish on the full sketch. Total work is `O(K)` cheap
+//! k = 2 subproblems plus a single full-support refinement — a genuinely
+//! different speed/quality trade-off (see `benches/decode_bench.rs`).
+//!
+//! ## Registering a new decoder
+//!
+//! Add one `DecoderDef` entry to `DECODERS` with a builder that maps
+//! parsed params to a [`DecoderSpec`] whose factory produces a
+//! [`SketchDecoder`]. Nothing else: the `--decoder` flags on
+//! `qckm cluster / decode / query / experiment`, the `decoder` TOML key,
+//! the server's query frames and centroid-cache keys, and the experiment
+//! harnesses all resolve decoders through this table, and parse errors
+//! list the valid decoders from it automatically.
+
+pub mod clompr;
+mod hier;
+
+pub use hier::HierDecoder;
+
+use crate::rng::Rng;
+use crate::sketch::SketchOperator;
+use crate::spec::Params;
+use anyhow::{bail, Result};
+use clompr::{ClOmpr, ClOmprParams, Solution};
+use std::fmt;
+use std::sync::Arc;
+
+/// One algorithm for the sketch inverse problem: given the pooled sketch
+/// `z`, produce `k` centroids inside the box `[lo, hi]`.
+///
+/// Implementations must be deterministic functions of `(op, z, k, lo, hi)`
+/// and the `rng` stream — the repo-wide reproducibility contract — and
+/// must return weights normalized to sum 1 with the residual objective
+/// `‖z − Σ α a(c)‖` of the *fitted* (unnormalized) weights, exactly like
+/// [`ClOmpr::run`], so replicate selection is decoder-agnostic.
+pub trait SketchDecoder: Send + Sync {
+    /// Decode `k` centroids from the pooled sketch `z` (length `2M`).
+    fn decode(
+        &self,
+        op: &SketchOperator,
+        z: &[f64],
+        k: usize,
+        lo: &[f64],
+        hi: &[f64],
+        rng: &mut Rng,
+    ) -> Solution;
+}
+
+/// Builds a decoder from the caller's base tuning. The base
+/// [`ClOmprParams`] carries the job-level knobs every current decoder
+/// shares (thread budget, L-BFGS iteration caps, candidate counts); spec
+/// params override individual fields on top of it.
+type DecoderFactory = dyn Fn(&ClOmprParams) -> Box<dyn SketchDecoder> + Send + Sync;
+
+/// A fully resolved decoder descriptor.
+///
+/// Equality and ordering go by the canonical spec string — two specs that
+/// print the same decode identically (given the same base params).
+#[derive(Clone)]
+pub struct DecoderSpec {
+    canonical: String,
+    display: String,
+    factory: Arc<DecoderFactory>,
+}
+
+impl DecoderSpec {
+    /// Parse a spec string (`clompr`, `clompr:restarts=5`, `hier`, …).
+    /// Case-insensitive; aliases accepted; junk specs get an error naming
+    /// the valid decoders.
+    pub fn parse(s: &str) -> Result<DecoderSpec> {
+        let lowered = s.trim().to_ascii_lowercase();
+        if lowered.is_empty() {
+            bail!(
+                "empty decoder spec (valid decoders: {})",
+                Self::decoders_help()
+            );
+        }
+        let (name, rest) = match lowered.split_once(':') {
+            Some((f, r)) => (f, Some(r)),
+            None => (lowered.as_str(), None),
+        };
+        let Some(def) = DECODERS
+            .iter()
+            .find(|d| d.name == name || d.aliases.iter().any(|a| *a == name))
+        else {
+            bail!(
+                "unknown decoder '{name}' (valid decoders: {})",
+                Self::decoders_help()
+            );
+        };
+        let mut params = Params::parse("decoder", def.name, rest)?;
+        let spec = (def.build)(&mut params)?;
+        params.finish(def.params_help)?;
+        Ok(spec)
+    }
+
+    /// The canonical spec string (`clompr:restarts=5`); re-parses to an
+    /// equal spec. This is what the server protocol carries and the
+    /// centroid cache keys on.
+    pub fn canonical(&self) -> &str {
+        &self.canonical
+    }
+
+    /// Human-readable name for tables and logs.
+    pub fn display_name(&self) -> &str {
+        &self.display
+    }
+
+    /// The valid spec grammars, comma-separated — used by every "unknown
+    /// decoder" error and by `--help` text, so the list can never go
+    /// stale.
+    pub fn decoders_help() -> String {
+        DECODERS
+            .iter()
+            .map(|d| d.grammar)
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// Instantiate the decoder over the caller's base tuning (spec params
+    /// override individual fields of `base`).
+    pub fn decoder(&self, base: &ClOmprParams) -> Box<dyn SketchDecoder> {
+        (self.factory)(base)
+    }
+
+    /// Run the decoder `replicates` times and keep the solution with the
+    /// best sketch-matching objective — the registry-routed form of
+    /// [`clompr::decode_best_of`], with identical replicate semantics
+    /// (serial on the shared `rng` stream, first strictly-better wins),
+    /// so `DecoderSpec::parse("clompr")` reproduces the legacy pipelines
+    /// bit for bit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_best_of(
+        &self,
+        op: &SketchOperator,
+        k: usize,
+        z: &[f64],
+        lo: Vec<f64>,
+        hi: Vec<f64>,
+        base: &ClOmprParams,
+        replicates: usize,
+        rng: &mut Rng,
+    ) -> Solution {
+        assert!(replicates >= 1);
+        let decoder = self.decoder(base);
+        let mut best: Option<Solution> = None;
+        for _ in 0..replicates {
+            let sol = decoder.decode(op, z, k, &lo, &hi, rng);
+            if best.as_ref().map_or(true, |b| sol.objective < b.objective) {
+                best = Some(sol);
+            }
+        }
+        best.unwrap()
+    }
+}
+
+impl Default for DecoderSpec {
+    /// The paper's decoder: plain CL-OMPR with the caller's base params.
+    fn default() -> Self {
+        DecoderSpec::parse("clompr").expect("default decoder spec")
+    }
+}
+
+impl PartialEq for DecoderSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.canonical == other.canonical
+    }
+}
+
+impl Eq for DecoderSpec {}
+
+impl fmt::Debug for DecoderSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "DecoderSpec({})", self.canonical)
+    }
+}
+
+impl fmt::Display for DecoderSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.canonical)
+    }
+}
+
+impl std::str::FromStr for DecoderSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse(s)
+    }
+}
+
+// ---------------------------------------------------------------- registry
+
+/// One decoder family: the single place an algorithm registers.
+struct DecoderDef {
+    /// Canonical decoder name.
+    name: &'static str,
+    /// Accepted alternative spellings.
+    aliases: &'static [&'static str],
+    /// Grammar shown in "valid decoders" errors, e.g. `hier[:restarts=R]`.
+    grammar: &'static str,
+    /// Params shown in unknown-parameter errors.
+    params_help: &'static str,
+    /// Build a spec from parsed params (take what you accept; leftovers
+    /// are rejected by the caller).
+    build: fn(&mut Params) -> Result<DecoderSpec>,
+}
+
+/// The decoder registry. Adding an algorithm = adding one entry here.
+static DECODERS: &[DecoderDef] = &[
+    DecoderDef {
+        name: "clompr",
+        aliases: &["cl-ompr", "clomp"],
+        grammar: "clompr[:restarts=R,replacements=P]",
+        params_help: "restarts=R (>= 1, Step-1 L-BFGS restarts), \
+                      replacements=P (>= 1, outer replacement passes per cluster)",
+        build: build_clompr,
+    },
+    DecoderDef {
+        name: "hier",
+        aliases: &["bisect"],
+        grammar: "hier[:restarts=R]",
+        params_help: "restarts=R (>= 1, Step-1 restarts of each k=2 subproblem)",
+        build: build_hier,
+    },
+];
+
+/// Render `name[:k1=v1,...]` for the given params, in registry order.
+fn render_canonical(name: &str, params: &[(&str, Option<u32>)]) -> String {
+    let given: Vec<String> = params
+        .iter()
+        .filter_map(|(k, v)| v.map(|v| format!("{k}={v}")))
+        .collect();
+    if given.is_empty() {
+        name.to_string()
+    } else {
+        format!("{name}:{}", given.join(","))
+    }
+}
+
+fn take_positive(p: &mut Params, key: &str) -> Result<Option<u32>> {
+    let v = p.take_u32(key)?;
+    if let Some(v) = v {
+        if v == 0 {
+            bail!("parameter '{key}': must be >= 1, got 0");
+        }
+    }
+    Ok(v)
+}
+
+fn build_clompr(p: &mut Params) -> Result<DecoderSpec> {
+    let restarts = take_positive(p, "restarts")?;
+    let replacements = take_positive(p, "replacements")?;
+    let canonical = render_canonical(
+        "clompr",
+        &[("restarts", restarts), ("replacements", replacements)],
+    );
+    Ok(DecoderSpec {
+        display: match (restarts, replacements) {
+            (None, None) => "cl-ompr (greedy matching pursuit)".to_string(),
+            _ => format!("cl-ompr ({canonical})"),
+        },
+        canonical,
+        factory: Arc::new(move |base: &ClOmprParams| {
+            let mut params = base.clone();
+            if let Some(r) = restarts {
+                params.step1_restarts = r as usize;
+            }
+            if let Some(p) = replacements {
+                params.outer_iters_factor = p as usize;
+            }
+            Box::new(ClOmprDecoder { params })
+        }),
+    })
+}
+
+fn build_hier(p: &mut Params) -> Result<DecoderSpec> {
+    let restarts = take_positive(p, "restarts")?;
+    let canonical = render_canonical("hier", &[("restarts", restarts)]);
+    Ok(DecoderSpec {
+        display: match restarts {
+            None => "hier (recursive bisection)".to_string(),
+            Some(_) => format!("hier ({canonical})"),
+        },
+        canonical,
+        factory: Arc::new(move |base: &ClOmprParams| {
+            let mut params = base.clone();
+            if let Some(r) = restarts {
+                params.step1_restarts = r as usize;
+            }
+            Box::new(HierDecoder::new(params))
+        }),
+    })
+}
+
+// ----------------------------------------------------------- implementations
+
+/// The paper's decoder behind the [`SketchDecoder`] trait: one
+/// [`ClOmpr::run`] per call, nothing added — the registry's default path
+/// is bitwise the legacy direct construction.
+struct ClOmprDecoder {
+    params: ClOmprParams,
+}
+
+impl SketchDecoder for ClOmprDecoder {
+    fn decode(
+        &self,
+        op: &SketchOperator,
+        z: &[f64],
+        k: usize,
+        lo: &[f64],
+        hi: &[f64],
+        rng: &mut Rng,
+    ) -> Solution {
+        ClOmpr::new(op, k)
+            .with_bounds(lo.to_vec(), hi.to_vec())
+            .with_params(self.params.clone())
+            .run(z, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests;

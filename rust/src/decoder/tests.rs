@@ -1,0 +1,243 @@
+//! Decoder-registry tests: spec grammar and canonicalization, bitwise
+//! parity between the registry's default `clompr` path and the direct
+//! [`ClOmpr`] construction, param plumbing, actionable junk-spec errors,
+//! and a `hier` recovery smoke test on well-separated centroids.
+
+use super::clompr::{decode_best_of, ClOmpr, ClOmprParams};
+use super::*;
+use crate::frequency::{DrawnFrequencies, FrequencyLaw};
+use crate::linalg::Mat;
+
+fn dirac_op(m: usize, dim: usize, seed: u64) -> SketchOperator {
+    let mut rng = Rng::new(seed);
+    let freqs = DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, dim, m, 1.0, &mut rng);
+    SketchOperator::quantized(freqs)
+}
+
+/// Match decoded centroids to true ones greedily; returns the worst
+/// matched distance.
+fn match_centroids(found: &Mat, truth: &Mat) -> f64 {
+    let k = truth.rows();
+    assert_eq!(found.rows(), k);
+    let mut used = vec![false; k];
+    let mut worst: f64 = 0.0;
+    for t in 0..k {
+        let mut best = f64::INFINITY;
+        let mut best_j = 0;
+        for j in 0..k {
+            if !used[j] {
+                let d = crate::linalg::sq_dist(found.row(j), truth.row(t));
+                if d < best {
+                    best = d;
+                    best_j = j;
+                }
+            }
+        }
+        used[best_j] = true;
+        worst = worst.max(best.sqrt());
+    }
+    worst
+}
+
+#[test]
+fn grammar_canonicalizes_aliases_case_and_param_order() {
+    assert_eq!(DecoderSpec::parse("clompr").unwrap().canonical(), "clompr");
+    assert_eq!(DecoderSpec::parse("CL-OMPR").unwrap().canonical(), "clompr");
+    assert_eq!(DecoderSpec::parse(" Hier ").unwrap().canonical(), "hier");
+    assert_eq!(DecoderSpec::parse("bisect").unwrap().canonical(), "hier");
+    assert_eq!(
+        DecoderSpec::parse("clompr:restarts=5").unwrap().canonical(),
+        "clompr:restarts=5"
+    );
+    // Params canonicalize into registry order regardless of input order.
+    assert_eq!(
+        DecoderSpec::parse("clompr:replacements=3,restarts=5")
+            .unwrap()
+            .canonical(),
+        "clompr:restarts=5,replacements=3"
+    );
+    assert_eq!(
+        DecoderSpec::parse("HIER:Restarts=2").unwrap().canonical(),
+        "hier:restarts=2"
+    );
+    // Explicit params are never elided, even at the compiled-in defaults:
+    // they pin the field against whatever base params the job supplies.
+    assert_ne!(
+        DecoderSpec::parse("clompr:restarts=3").unwrap(),
+        DecoderSpec::parse("clompr").unwrap()
+    );
+    assert_eq!(DecoderSpec::default(), DecoderSpec::parse("clompr").unwrap());
+}
+
+#[test]
+fn junk_specs_give_actionable_errors() {
+    let err = format!("{:#}", DecoderSpec::parse("omp").unwrap_err());
+    for grammar in ["clompr[:restarts=R,replacements=P]", "hier[:restarts=R]"] {
+        assert!(err.contains(grammar), "error does not name '{grammar}': {err}");
+    }
+    let err = format!("{:#}", DecoderSpec::parse("").unwrap_err());
+    assert!(err.contains("valid decoders"), "{err}");
+
+    assert!(DecoderSpec::parse("clompr:").is_err());
+    assert!(DecoderSpec::parse("clompr:restarts").is_err());
+    assert!(DecoderSpec::parse("clompr:restarts=").is_err());
+    assert!(DecoderSpec::parse("clompr:restarts=zero").is_err());
+    assert!(DecoderSpec::parse("clompr:restarts=0").is_err());
+    assert!(DecoderSpec::parse("clompr:restarts=2,restarts=3").is_err());
+    let err = format!("{:#}", DecoderSpec::parse("hier:replacements=2").unwrap_err());
+    assert!(err.contains("restarts=R"), "must name accepted params: {err}");
+    let err = format!("{:#}", DecoderSpec::parse("clompr:depth=2").unwrap_err());
+    assert!(err.contains("does not accept"), "{err}");
+}
+
+/// The registry's default path IS the legacy decoder: same sketch, same
+/// seed, bitwise-identical centroids/weights/objective — for a single
+/// run against [`ClOmpr::run`] and for replicate selection against
+/// [`decode_best_of`].
+#[test]
+fn registry_clompr_matches_direct_clompr_bitwise() {
+    let op = dirac_op(150, 2, 42);
+    let truth = Mat::from_vec(2, 2, vec![1.5, -0.5, -1.0, 1.0]);
+    let z = op.mixture_sketch(&truth, &[0.4, 0.6]);
+    let base = ClOmprParams::default();
+    let (lo, hi) = (vec![-3.0; 2], vec![3.0; 2]);
+
+    let direct = ClOmpr::new(&op, 2)
+        .with_bounds(lo.clone(), hi.clone())
+        .with_params(base.clone())
+        .run(&z, &mut Rng::new(7));
+    let spec = DecoderSpec::parse("clompr").unwrap();
+    let routed = spec
+        .decoder(&base)
+        .decode(&op, &z, 2, &lo, &hi, &mut Rng::new(7));
+    assert_eq!(direct.centroids.as_slice(), routed.centroids.as_slice());
+    assert_eq!(direct.weights, routed.weights);
+    assert_eq!(direct.objective.to_bits(), routed.objective.to_bits());
+
+    let direct_best = decode_best_of(
+        &op,
+        2,
+        &z,
+        lo.clone(),
+        hi.clone(),
+        &base,
+        3,
+        &mut Rng::new(9),
+    );
+    let routed_best = spec.decode_best_of(&op, 2, &z, lo, hi, &base, 3, &mut Rng::new(9));
+    assert_eq!(
+        direct_best.centroids.as_slice(),
+        routed_best.centroids.as_slice()
+    );
+    assert_eq!(direct_best.objective.to_bits(), routed_best.objective.to_bits());
+}
+
+/// Spec params override the base tuning field-for-field: the routed
+/// decode equals a direct run with the overridden params, bitwise.
+#[test]
+fn clompr_spec_params_override_the_base_tuning() {
+    let op = dirac_op(120, 2, 5);
+    let truth = Mat::from_vec(2, 2, vec![1.0, 1.0, -1.0, -1.0]);
+    let z = op.mixture_sketch(&truth, &[0.5, 0.5]);
+    let base = ClOmprParams::default();
+    let (lo, hi) = (vec![-2.0; 2], vec![2.0; 2]);
+
+    let spec = DecoderSpec::parse("clompr:restarts=5,replacements=3").unwrap();
+    let routed = spec
+        .decoder(&base)
+        .decode(&op, &z, 2, &lo, &hi, &mut Rng::new(11));
+    let want_params = ClOmprParams {
+        step1_restarts: 5,
+        outer_iters_factor: 3,
+        ..base
+    };
+    let direct = ClOmpr::new(&op, 2)
+        .with_bounds(lo, hi)
+        .with_params(want_params)
+        .run(&z, &mut Rng::new(11));
+    assert_eq!(direct.centroids.as_slice(), routed.centroids.as_slice());
+    assert_eq!(direct.objective.to_bits(), routed.objective.to_bits());
+}
+
+/// `hier` recovers the modes of a well-separated Dirac mixture: the
+/// bisection tree must reach every corner (no duplicated or dropped
+/// leaves) and the global polish must land each centroid near its truth.
+#[test]
+fn hier_recovers_well_separated_centroids() {
+    let op = dirac_op(256, 2, 17);
+    // Four Diracs at the corners of a [-2, 2]² square — separation 4.
+    let truth = Mat::from_vec(
+        4,
+        2,
+        vec![2.0, 2.0, 2.0, -2.0, -2.0, 2.0, -2.0, -2.0],
+    );
+    let z = op.mixture_sketch(&truth, &[0.25; 4]);
+    let spec = DecoderSpec::parse("hier").unwrap();
+    let sol = spec.decode_best_of(
+        &op,
+        4,
+        &z,
+        vec![-3.0; 2],
+        vec![3.0; 2],
+        &ClOmprParams::default(),
+        1,
+        &mut Rng::new(3),
+    );
+    assert_eq!(sol.centroids.rows(), 4);
+    let err = match_centroids(&sol.centroids, &truth);
+    assert!(err < 0.5, "hier centroid error {err}");
+    assert!((sol.weights.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    for &w in &sol.weights {
+        assert!(w >= 0.0);
+    }
+    // Every centroid stays inside the search box.
+    for c in 0..4 {
+        for &v in sol.centroids.row(c) {
+            assert!((-3.0..=3.0).contains(&v), "escaped the box: {v}");
+        }
+    }
+}
+
+/// `hier` at k <= 2 is a single subproblem — it must still satisfy the
+/// trait contract (k centroids, normalized weights, finite objective).
+#[test]
+fn hier_degenerate_small_k() {
+    let op = dirac_op(150, 2, 23);
+    let truth = Mat::from_vec(1, 2, vec![0.7, -1.2]);
+    let z = op.mixture_sketch(&truth, &[1.0]);
+    let spec = DecoderSpec::parse("hier").unwrap();
+    let sol = spec.decode_best_of(
+        &op,
+        1,
+        &z,
+        vec![-3.0; 2],
+        vec![3.0; 2],
+        &ClOmprParams::default(),
+        1,
+        &mut Rng::new(2),
+    );
+    assert_eq!(sol.centroids.rows(), 1);
+    let err = match_centroids(&sol.centroids, &truth);
+    assert!(err < 0.1, "hier K=1 error {err}");
+    assert_eq!(sol.weights, vec![1.0]);
+    assert!(sol.objective.is_finite());
+}
+
+/// Decodes are deterministic functions of the rng seed — two identical
+/// calls agree bitwise (locks in the recursion/rng ordering of `hier`).
+#[test]
+fn hier_is_deterministic() {
+    let op = dirac_op(128, 3, 31);
+    let truth = Mat::from_vec(3, 3, vec![2.0, 0.0, 0.0, -2.0, 1.0, 0.0, 0.0, -2.0, 2.0]);
+    let z = op.mixture_sketch(&truth, &[0.3, 0.3, 0.4]);
+    let spec = DecoderSpec::parse("hier").unwrap();
+    let base = ClOmprParams::default();
+    let a = spec
+        .decoder(&base)
+        .decode(&op, &z, 3, &[-3.0; 3], &[3.0; 3], &mut Rng::new(77));
+    let b = spec
+        .decoder(&base)
+        .decode(&op, &z, 3, &[-3.0; 3], &[3.0; 3], &mut Rng::new(77));
+    assert_eq!(a.centroids.as_slice(), b.centroids.as_slice());
+    assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+}

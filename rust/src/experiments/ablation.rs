@@ -13,6 +13,7 @@
 
 use crate::clompr::ClOmprParams;
 use crate::data::gaussian_mixture_pm1;
+use crate::decoder::DecoderSpec;
 use crate::frequency::{FrequencyLaw, SigmaHeuristic};
 use crate::kmeans::{kmeans, KMeansParams};
 use crate::method::MethodSpec;
@@ -29,6 +30,10 @@ pub struct AblationConfig {
     pub ratios: Vec<f64>,
     pub trials: usize,
     pub seed: u64,
+    /// The decoding algorithm every arm routes through
+    /// ([`crate::decoder`] registry spec). Default `clompr` keeps the
+    /// legacy staircase ablation bit for bit.
+    pub decoder: DecoderSpec,
     /// Threads for the trial fan-out (0 = all cores); results are
     /// bit-for-bit identical at any setting (per-trial RNG substreams).
     pub threads: usize,
@@ -43,6 +48,7 @@ impl Default for AblationConfig {
             ratios: vec![1.0, 2.0, 4.0],
             trials: 10,
             seed: 0xAB1A,
+            decoder: DecoderSpec::default(),
             threads: 0,
         }
     }
@@ -126,10 +132,18 @@ pub fn run_ablation(cfg: &AblationConfig) -> AblationResult {
                 let op = SketchOperator::new(freqs, arm.signature());
                 let z = op.sketch_dataset(&data.points);
                 let (lo, hi) = crate::linalg::bounding_box(&data.points);
-                let sol = crate::clompr::ClOmpr::new(&op, cfg.k)
-                    .with_bounds(lo, hi)
-                    .with_params(ClOmprParams::default())
-                    .run(&z, &mut rng);
+                // Routed through the decoder registry; `clompr` with the
+                // default base params is bitwise the old direct ClOmpr run.
+                let sol = cfg.decoder.decode_best_of(
+                    &op,
+                    cfg.k,
+                    &z,
+                    lo,
+                    hi,
+                    &ClOmprParams::default(),
+                    1,
+                    &mut rng,
+                );
                 let s = crate::metrics::sse(&data.points, &sol.centroids);
                 trial_flags[ai][ri] = is_success(s, km.sse);
             }

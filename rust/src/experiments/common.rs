@@ -1,10 +1,11 @@
 //! Shared plumbing for the experiment harnesses.
 
-use crate::clompr::{decode_best_of, ClOmprParams};
+use crate::clompr::ClOmprParams;
 use crate::coordinator::WireFormat;
+use crate::decoder::DecoderSpec;
 use crate::frequency::{DrawnFrequencies, FrequencyLaw};
-use crate::method::MethodSpec;
 use crate::linalg::{bounding_box, Mat};
+use crate::method::MethodSpec;
 use crate::metrics::{adjusted_rand_index, assign_labels, sse};
 use crate::parallel::Parallelism;
 use crate::rng::Rng;
@@ -21,6 +22,9 @@ pub struct MethodRun {
     pub sigma: f64,
     pub law: FrequencyLaw,
     pub params: ClOmprParams,
+    /// The decoding algorithm ([`crate::decoder`] registry spec); the
+    /// default `clompr` reproduces the legacy trials bit for bit.
+    pub decoder: DecoderSpec,
     /// Pool the sketch through the out-of-core streaming fold
     /// ([`crate::stream`]) instead of the in-memory encode. Identical to
     /// the in-memory sketch for ±1 signatures (exact integer sums) and for
@@ -71,7 +75,9 @@ pub fn run_method_once(
         op.sketch_dataset(x)
     };
     let (lo, hi) = bounding_box(x);
-    let sol = decode_best_of(&op, k, &z, lo, hi, &run.params, run.replicates, rng);
+    let sol = run
+        .decoder
+        .decode_best_of(&op, k, &z, lo, hi, &run.params, run.replicates, rng);
     let s = sse(x, &sol.centroids);
     let ari = truth_labels
         .map(|t| adjusted_rand_index(&assign_labels(x, &sol.centroids), t))

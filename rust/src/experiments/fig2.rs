@@ -10,6 +10,7 @@
 use super::common::{ascii_heatmap, run_method_once, transition_ratio, MethodRun};
 use crate::clompr::ClOmprParams;
 use crate::data::gaussian_mixture_pm1;
+use crate::decoder::DecoderSpec;
 use crate::frequency::{FrequencyLaw, SigmaHeuristic};
 use crate::kmeans::{kmeans, KMeansParams};
 use crate::method::MethodSpec;
@@ -43,6 +44,10 @@ pub struct Fig2Config {
     pub law: FrequencyLaw,
     pub seed: u64,
     pub decoder: ClOmprParams,
+    /// The decoding algorithm every trial routes through
+    /// ([`crate::decoder`] registry spec; `decoder` above is its base
+    /// tuning). Default `clompr` = the paper's CL-OMPR.
+    pub decoder_spec: DecoderSpec,
     /// Threads for the (value × trial) fan-out (0 = all cores). Per-trial
     /// RNG substreams make the grid bit-for-bit identical at any setting.
     pub threads: usize,
@@ -80,6 +85,7 @@ impl Fig2Config {
             law: FrequencyLaw::AdaptedRadius,
             seed: 0x20180619, // the paper's date
             decoder: ClOmprParams::default(),
+            decoder_spec: DecoderSpec::default(),
             threads: 0,
             streamed: false,
         }
@@ -171,6 +177,7 @@ pub fn run_fig2(cfg: &Fig2Config) -> Fig2Result {
                             sigma,
                             law: cfg.law,
                             params: cfg.decoder.clone(),
+                            decoder: cfg.decoder_spec.clone(),
                             streamed: cfg.streamed,
                         };
                         let out = run_method_once(&run, &data.points, None, k, &mut rng);
@@ -213,12 +220,13 @@ pub fn run_fig2(cfg: &Fig2Config) -> Fig2Result {
 
     Fig2Result {
         config_desc: format!(
-            "{:?}: values {:?}, ratios {:?}, {} trials, N = {}{}",
+            "{:?}: values {:?}, ratios {:?}, {} trials, N = {}, decoder {}{}",
             cfg.variant,
             cfg.values,
             cfg.ratios,
             cfg.trials,
             cfg.n_samples,
+            cfg.decoder_spec.canonical(),
             if cfg.streamed { ", streamed sketch" } else { "" }
         ),
         success,

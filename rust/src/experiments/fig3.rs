@@ -11,6 +11,7 @@
 use super::common::{run_method_once, MethodRun};
 use crate::clompr::ClOmprParams;
 use crate::data::spectral_embedding_like;
+use crate::decoder::DecoderSpec;
 use crate::frequency::{FrequencyLaw, SigmaHeuristic};
 use crate::kmeans::{kmeans, KMeansParams};
 use crate::method::MethodSpec;
@@ -32,6 +33,10 @@ pub struct Fig3Config {
     pub law: FrequencyLaw,
     pub seed: u64,
     pub decoder: ClOmprParams,
+    /// The decoding algorithm every compressive trial routes through
+    /// ([`crate::decoder`] registry spec; `decoder` above is its base
+    /// tuning). Default `clompr` = the paper's CL-OMPR.
+    pub decoder_spec: DecoderSpec,
     /// Threads for the trial fan-out (0 = all cores). Per-trial RNG
     /// substreams make results bit-for-bit identical at any setting.
     pub threads: usize,
@@ -50,6 +55,7 @@ impl Fig3Config {
             law: FrequencyLaw::AdaptedRadius,
             seed: 0x0F13,
             decoder: ClOmprParams::default(),
+            decoder_spec: DecoderSpec::default(),
             threads: 0,
         }
     }
@@ -131,6 +137,7 @@ pub fn run_fig3(cfg: &Fig3Config) -> Fig3Result {
                     sigma,
                     law: cfg.law,
                     params: cfg.decoder.clone(),
+                    decoder: cfg.decoder_spec.clone(),
                     streamed: false,
                 };
                 let out = run_method_once(&run, &data.points, Some(&data.labels), cfg.k, &mut rng);
@@ -149,8 +156,13 @@ pub fn run_fig3(cfg: &Fig3Config) -> Fig3Result {
 
     Fig3Result {
         config_desc: format!(
-            "N = {}, n = {}, K = {}, m = {}, {} trials",
-            cfg.n_samples, cfg.dim, cfg.k, cfg.m, cfg.trials
+            "N = {}, n = {}, K = {}, m = {}, {} trials, decoder {}",
+            cfg.n_samples,
+            cfg.dim,
+            cfg.k,
+            cfg.m,
+            cfg.trials,
+            cfg.decoder_spec.canonical()
         ),
         rows,
         sse_per_n: sse_stats.iter().map(|s| (s.mean(), s.std())).collect(),

@@ -116,7 +116,7 @@ fn ablation_tiny_runs() {
         ratios: vec![4.0],
         trials: 2,
         seed: 9,
-        threads: 0,
+        ..Default::default()
     };
     let res = run_ablation(&cfg);
     // ckm, qckm bits 1..=4, triangle, modulo — all through the registry.

@@ -47,10 +47,10 @@
 //! thread count.
 
 pub mod cli;
-pub mod clompr;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod decoder;
 pub mod experiments;
 pub mod frequency;
 pub mod kmeans;
@@ -64,12 +64,18 @@ pub mod runtime;
 pub mod server;
 pub mod signature;
 pub mod sketch;
+mod spec;
 pub mod stream;
 pub mod testkit;
+
+/// CL-OMPR now lives in the decoder registry ([`decoder`]); this re-export
+/// keeps the original `qckm::clompr` path working unchanged.
+pub use decoder::clompr;
 
 /// The most common imports in one place.
 pub mod prelude {
     pub use crate::clompr::{ClOmpr, ClOmprParams, Solution};
+    pub use crate::decoder::{DecoderSpec, SketchDecoder};
     pub use crate::frequency::{DrawnFrequencies, FrequencyLaw, SigmaHeuristic};
     pub use crate::kmeans::{kmeans, KMeansParams};
     pub use crate::linalg::Mat;

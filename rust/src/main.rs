@@ -1,56 +1,39 @@
 //! `qckm` — the command-line launcher.
 //!
 //! ```text
-//! qckm cluster     --data x.csv --k 10 [--method qckm:bits=3] [--config job.toml]
+//! qckm cluster     --data x.csv --k 10 [--method qckm:bits=3] [--decoder hier]
 //! qckm sketch      --data shard.csv --sigma 1.2 --seed 7 --out shard.qsk
 //! qckm sketch      --data more.csv --append shard.qsk  (online update)
 //! qckm merge       --out merged.qsk shard0.qsk shard1.qsk …
-//! qckm decode      --sketch merged.qsk --k 10 [--lo -2 --hi 2] --out c.csv
+//! qckm decode      --sketch merged.qsk --k 10 [--decoder clompr:restarts=5]
 //! qckm serve       --dim 5 --m 1000 --sigma 1.2 --seed 7 [--port 0]
-//! qckm push        --addr host:port --data shard.csv [--shard name]
-//! qckm query       --addr host:port --k 10 [--window E] [--out c.csv]
+//! qckm push        --addr host:port --data shard.csv [--shard name] [--retry 8]
+//! qckm query       --addr host:port --k 10 [--window E] [--decoder hier]
 //! qckm snapshot    --addr host:port --out live.qsk [--window E]
 //! qckm ctl         --addr host:port stats|roll|shutdown
-//! qckm experiment  fig2a|fig2b|fig3|prop1|ablation [--full]
+//! qckm experiment  fig2a|fig2b|fig3|prop1|ablation [--full] [--decoder SPEC]
 //! qckm pipeline    [--workers 8] [--samples 100000] … (streaming demo)
 //! ```
 //!
 //! `sketch` → `merge` → `decode` is the paper's distributed acquisition
-//! pipeline split into stages: each shard is stream-sketched (bounded
-//! memory, bit-for-bit the in-memory sketch) where its data lives, the
-//! tiny `.qsk` files are merged associatively, and centroids are decoded
-//! once from the pooled sketch — no stage ever needs the whole dataset.
-//! `serve` keeps the same pooled state live behind a TCP protocol:
-//! `push` streams batches in, `query` decodes centroids on demand (with a
-//! centroid cache), `snapshot` drains the live pool back into a `.qsk`
-//! the offline stages understand.
-//!
-//! Every `--method` takes an open-registry spec string (`ckm`, `qckm`,
-//! `qckm:bits=B`, `triangle`, `modulo` — see `qckm::method`); on the
-//! service verbs it is a *declaration* the server verifies, so a
-//! distributed job can never silently mix methods.
+//! pipeline split into stages; `serve` keeps the same pooled state live
+//! behind a TCP protocol (see the README for the tour). Every `--method`
+//! takes an open-registry spec string (`ckm`, `qckm`, `qckm:bits=B`,
+//! `triangle`, `modulo` — see `qckm::method`), and every decode-side verb
+//! takes a `--decoder` spec resolved by the mirror-image decoder registry
+//! (`clompr`, `clompr:restarts=R,replacements=P`, `hier` — see
+//! `qckm::decoder`); on the service verbs both are *declarations* the
+//! server verifies, so a distributed job can never silently mix methods
+//! and a cached answer can never come from a different decode algorithm.
 //!
 //! Every run prints its seed and full parameterization so results are
 //! reproducible; experiment outputs are the rows/series recorded in
-//! EXPERIMENTS.md.
+//! EXPERIMENTS.md. All verb logic lives in `cmds/` — this file is only
+//! the dispatch table.
 
-use anyhow::{bail, Context, Result};
-use qckm::cli::CliSpec;
-use qckm::clompr::{decode_best_of, ClOmprParams};
-use qckm::config::JobConfig;
-use qckm::coordinator::{run_pipeline, PipelineConfig, SampleSource, WireFormat};
-use qckm::method::MethodSpec;
-use qckm::data::{load_csv, save_csv};
-use qckm::experiments as exp;
-use qckm::frequency::{DrawnFrequencies, SigmaHeuristic};
-use qckm::linalg::{bounding_box, Mat};
-use qckm::parallel::Parallelism;
-use qckm::rng::Rng;
-use qckm::server::{self, QuerySpec, ServiceConfig, SketchService};
-use qckm::sketch::{PooledSketch, SketchOperator};
-use qckm::stream;
-use std::path::Path;
-use std::sync::Arc;
+use anyhow::{bail, Result};
+
+mod cmds;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -70,17 +53,17 @@ fn dispatch(args: Vec<String>) -> Result<()> {
     };
     let rest = args[1..].to_vec();
     match cmd.as_str() {
-        "cluster" => cmd_cluster(rest),
-        "sketch" => cmd_sketch(rest),
-        "merge" => cmd_merge(rest),
-        "decode" => cmd_decode(rest),
-        "serve" => cmd_serve(rest),
-        "push" => cmd_push(rest),
-        "query" => cmd_query(rest),
-        "snapshot" => cmd_snapshot(rest),
-        "ctl" => cmd_ctl(rest),
-        "experiment" => cmd_experiment(rest),
-        "pipeline" => cmd_pipeline(rest),
+        "cluster" => cmds::cluster::run(rest),
+        "sketch" => cmds::sketch::run(rest),
+        "merge" => cmds::merge::run(rest),
+        "decode" => cmds::decode::run(rest),
+        "serve" => cmds::serve::run(rest),
+        "push" => cmds::push::run(rest),
+        "query" => cmds::query::run(rest),
+        "snapshot" => cmds::snapshot::run(rest),
+        "ctl" => cmds::ctl::run(rest),
+        "experiment" => cmds::experiment::run(rest),
+        "pipeline" => cmds::pipeline::run(rest),
         other => {
             bail!(
                 "unknown command '{other}' (cluster|sketch|merge|decode|serve|push|query|\
@@ -88,1019 +71,4 @@ fn dispatch(args: Vec<String>) -> Result<()> {
             )
         }
     }
-}
-
-/// Load the job config (file + CLI overrides).
-fn job_from(args: &qckm::cli::ParsedArgs) -> Result<JobConfig> {
-    let mut cfg = match args.get("config") {
-        Some(path) => {
-            let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
-            JobConfig::from_toml_str(&text)?
-        }
-        None => JobConfig::default(),
-    };
-    if let Some(m) = args.get_usize("m")? {
-        cfg.sketch.num_frequencies = m;
-    }
-    if let Some(k) = args.get_usize("k")? {
-        cfg.decode.k = k;
-    }
-    if let Some(method) = args.get("method") {
-        cfg.sketch.method = MethodSpec::parse(method)?;
-    }
-    if let Some(s) = args.get_f64("sigma")? {
-        cfg.sketch.sigma = SigmaHeuristic::Fixed(s);
-    }
-    if let Some(seed) = args.get_u64("seed")? {
-        cfg.seed = seed;
-    }
-    if let Some(r) = args.get_usize("replicates")? {
-        cfg.decode.replicates = r;
-    }
-    if let Some(t) = args.get_usize("threads")? {
-        cfg.threads = t;
-        cfg.decode.params.threads = t;
-    }
-    Ok(cfg)
-}
-
-fn build_operator(cfg: &JobConfig, x: &Mat, rng: &mut Rng) -> SketchOperator {
-    let sigma = cfg.sketch.sigma.resolve(x, rng);
-    let freqs = if cfg.sketch.method.dithered() {
-        DrawnFrequencies::draw(cfg.sketch.law, x.cols(), cfg.sketch.num_frequencies, sigma, rng)
-    } else {
-        DrawnFrequencies::draw_undithered(
-            cfg.sketch.law,
-            x.cols(),
-            cfg.sketch.num_frequencies,
-            sigma,
-            rng,
-        )
-    };
-    eprintln!(
-        "operator: method={} law={} M={} sigma={sigma:.4}",
-        cfg.sketch.method.canonical(),
-        cfg.sketch.law.name(),
-        cfg.sketch.num_frequencies
-    );
-    SketchOperator::new(freqs, cfg.sketch.method.signature())
-}
-
-/// Shared `--method` help text. The CLI layer needs a `'static` string, so
-/// this is a hint only; a bad spec gets the registry's authoritative
-/// valid-family list at parse time.
-const METHOD_HELP: &str = "method spec: ckm | qckm[:bits=B] | triangle | modulo";
-
-/// Verify an optional `--method` declaration against the method a `.qsk`
-/// header recorded (canonicalized through the registry first, so aliases
-/// and case agree). `what` names the conflicting source in the error.
-fn check_declared_method(
-    parsed: &qckm::cli::ParsedArgs,
-    meta_method: &str,
-    what: &str,
-) -> Result<()> {
-    if let Some(m) = parsed.get("method") {
-        if MethodSpec::parse(m)?.canonical() != meta_method {
-            bail!("--method {m} conflicts with {what} (method={meta_method})");
-        }
-    }
-    Ok(())
-}
-
-fn cmd_cluster(args: Vec<String>) -> Result<()> {
-    let spec = CliSpec::new("qckm cluster", "compressively cluster a CSV dataset")
-        .opt("data", "FILE", None, "input CSV (one sample per row)")
-        .opt("k", "NUM", None, "number of clusters")
-        .opt("m", "NUM", None, "number of frequencies")
-        .opt("method", "SPEC", None, METHOD_HELP)
-        .opt("sigma", "FLOAT", None, "kernel bandwidth (default: heuristic)")
-        .opt("seed", "NUM", None, "RNG seed")
-        .opt("replicates", "NUM", None, "decoder replicates")
-        .opt(
-            "threads",
-            "NUM",
-            None,
-            "decoder threads, 0 = all cores (acquisition uses [pipeline] workers)",
-        )
-        .opt("config", "FILE", None, "TOML job config")
-        .opt("out", "FILE", None, "write centroids CSV here");
-    let parsed = spec.parse(args)?;
-    let cfg = job_from(&parsed)?;
-    let data_path = parsed.get("data").context("--data is required")?;
-    let x = load_csv(Path::new(data_path))?;
-    eprintln!("loaded {} x {} from {data_path}", x.rows(), x.cols());
-
-    let mut rng = Rng::new(cfg.seed);
-    let op = build_operator(&cfg, &x, &mut rng);
-
-    // Acquire through the streaming coordinator (the Fig. 1 dataflow),
-    // with the method's preferred pooling encoding on the wire.
-    let wire = cfg.sketch.method.preferred_wire_format();
-    let report = run_pipeline(
-        &op,
-        &SampleSource::Shared(Arc::new(x.clone())),
-        &PipelineConfig {
-            wire,
-            ..cfg.pipeline.clone()
-        },
-        cfg.seed,
-    );
-    eprintln!(
-        "acquired {} samples in {:.3}s ({:.0}/s), {} wire bytes, {} backpressure stalls",
-        report.samples,
-        report.elapsed_secs,
-        report.throughput(),
-        report.payload_bytes,
-        report.blocked_sends
-    );
-
-    let (lo, hi) = bounding_box(&x);
-    let sol = decode_best_of(
-        &op,
-        cfg.decode.k,
-        &report.sketch,
-        lo,
-        hi,
-        &cfg.decode.params,
-        cfg.decode.replicates,
-        &mut rng,
-    );
-    let s = qckm::metrics::sse(&x, &sol.centroids);
-    println!("objective = {:.6}, SSE/N = {:.6}", sol.objective, s / x.rows() as f64);
-    for k in 0..sol.centroids.rows() {
-        let row: Vec<String> = sol.centroids.row(k).iter().map(|v| format!("{v:.5}")).collect();
-        println!("c[{k}] (alpha={:.3}): {}", sol.weights[k], row.join(", "));
-    }
-    if let Some(out) = parsed.get("out") {
-        save_csv(Path::new(out), &sol.centroids)?;
-        eprintln!("centroids written to {out}");
-    }
-    Ok(())
-}
-
-/// Per-chunk pooling encoding for the streamed sketch — `auto` defers to
-/// the method's preferred wire format (the one source of the method→wire
-/// mapping, see [`MethodSpec::preferred_wire_format`]).
-fn wire_from(parsed: &qckm::cli::ParsedArgs, method: &MethodSpec) -> Result<WireFormat> {
-    Ok(match parsed.get("encoding").unwrap_or("auto") {
-        "auto" => method.preferred_wire_format(),
-        // The streaming fold re-checks this against the signature, but
-        // failing at the flag gives the actionable error.
-        "bits" if method.preferred_wire_format() != WireFormat::PackedBits => bail!(
-            "--encoding bits needs a ±1-valued method (e.g. qckm); '{}' pools dense",
-            method.canonical()
-        ),
-        "bits" => WireFormat::PackedBits,
-        "dense" => WireFormat::DenseF64,
-        other => bail!("unknown encoding '{other}' (auto|bits|dense)"),
-    })
-}
-
-fn cmd_sketch(args: Vec<String>) -> Result<()> {
-    let spec = CliSpec::new(
-        "qckm sketch",
-        "stream the pooled sketch of a dataset shard into a .qsk file",
-    )
-    .opt("data", "FILE", None, "input dataset (.csv, else raw f64 bin)")
-    .opt("m", "NUM", None, "number of frequencies")
-    .opt("method", "SPEC", None, METHOD_HELP)
-    .opt(
-        "sigma",
-        "FLOAT",
-        None,
-        "kernel bandwidth; required for out-of-core streaming and for shards to merge",
-    )
-    .opt("seed", "NUM", None, "frequency-draw seed (must match across shards)")
-    .opt("threads", "NUM", None, "compute threads (0 = all cores)")
-    .opt("encoding", "FMT", Some("auto"), "per-chunk pooling: auto|bits|dense")
-    .opt(
-        "append",
-        "FILE",
-        None,
-        "online update: stream --data into this existing .qsk (operator comes \
-         from its header, fingerprint-verified) and rewrite it",
-    )
-    .opt("shard", "NAME", None, "provenance label (default: the data file stem)")
-    .opt("config", "FILE", None, "TOML job config")
-    .opt("out", "FILE", None, "write the pooled sketch (.qsk) here")
-    .opt("out-csv", "FILE", None, "also write the mean sketch as one CSV row");
-    let parsed = spec.parse(args)?;
-    let cfg = job_from(&parsed)?;
-    let data_path = parsed.get("data").context("--data is required")?;
-    let par = Parallelism::fixed(cfg.threads);
-    let shard_label = match parsed.get("shard") {
-        Some(s) => s.to_string(),
-        None => Path::new(data_path)
-            .file_stem()
-            .map(|s| s.to_string_lossy().into_owned())
-            .unwrap_or_else(|| data_path.to_string()),
-    };
-
-    if let Some(append_path) = parsed.get("append") {
-        return sketch_append(&parsed, append_path, data_path, &shard_label, &par);
-    }
-    let method = cfg.sketch.method.clone();
-    let wire = wire_from(&parsed, &method)?;
-
-    // The frequency draw is a pure function of (method, law, m, d, sigma,
-    // seed) — the `.qsk` contract that lets every shard and the decoder
-    // reproduce the same operator. A fixed sigma streams out-of-core; the
-    // data-dependent heuristic needs the dataset once, in memory.
-    let (op, pool) = match cfg.sketch.sigma {
-        SigmaHeuristic::Fixed(sigma) => {
-            let mut reader = stream::open_dataset(Path::new(data_path))?;
-            let op = stream::draw_operator(
-                &method,
-                cfg.sketch.law,
-                cfg.sketch.num_frequencies,
-                reader.dim(),
-                sigma,
-                cfg.seed,
-            );
-            let mut pool = PooledSketch::new(op.sketch_len());
-            let rows = stream::sketch_reader(&op, reader.as_mut(), wire, &mut pool, &par)?;
-            if rows == 0 {
-                bail!("{data_path}: empty dataset");
-            }
-            eprintln!("streamed {rows} rows from {data_path} ({wire:?} pooling)");
-            (op, pool)
-        }
-        heuristic => {
-            let mut reader = stream::open_dataset(Path::new(data_path))?;
-            let x = stream::read_all(reader.as_mut())?;
-            let sigma = heuristic.resolve(&x, &mut Rng::new(cfg.seed).substream(1));
-            eprintln!(
-                "note: sigma {sigma:.4} was estimated from the data in memory; pass --sigma \
-                 to stream out-of-core and to keep independent shards mergeable"
-            );
-            let op = stream::draw_operator(
-                &method,
-                cfg.sketch.law,
-                cfg.sketch.num_frequencies,
-                x.cols(),
-                sigma,
-                cfg.seed,
-            );
-            // Same chunked fold as the streamed path (bitwise identical to
-            // `sketch_into_par`), so --encoding is honored here too.
-            let mut pool = PooledSketch::new(op.sketch_len());
-            stream::sketch_reader(
-                &op,
-                &mut stream::MatChunkedReader::new(&x),
-                wire,
-                &mut pool,
-                &par,
-            )?;
-            (op, pool)
-        }
-    };
-    eprintln!(
-        "operator: method={} law={} M={} sigma={:.4}",
-        method.canonical(),
-        cfg.sketch.law.name(),
-        op.num_frequencies(),
-        op.frequencies().sigma
-    );
-
-    let meta = stream::SketchMeta::for_operator(&op, &method, cfg.seed);
-    if let Some(out) = parsed.get("out") {
-        let prov = [stream::ShardRecord {
-            label: shard_label.clone(),
-            rows: pool.count(),
-        }];
-        stream::save_sketch_with(Path::new(out), &meta, &pool, &prov)?;
-        eprintln!("sketch written to {out} [{}]", meta.describe());
-    }
-    let z = pool.mean();
-    println!(
-        "sketch: {} slots over {} samples, first 8: {:?}",
-        z.len(),
-        pool.count(),
-        &z[..z.len().min(8)]
-    );
-    if let Some(out) = parsed.get("out-csv") {
-        save_csv(Path::new(out), &Mat::from_vec(1, z.len(), z))?;
-        eprintln!("mean sketch written to {out}");
-    }
-    Ok(())
-}
-
-/// `qckm sketch --append`: the online-update mode. The operator is NOT
-/// re-drawn from CLI flags — it is rebuilt from the existing `.qsk` header
-/// (fingerprint-verified), the new rows are streamed into the loaded pool
-/// through the same bounded-memory fold, and the file is rewritten with an
-/// extra provenance record. Any operator flag that contradicts the header
-/// is an error (silently sketching new rows with a different operator
-/// would corrupt the pool).
-fn sketch_append(
-    parsed: &qckm::cli::ParsedArgs,
-    append_path: &str,
-    data_path: &str,
-    shard_label: &str,
-    par: &Parallelism,
-) -> Result<()> {
-    let (meta, mut pool, mut prov) = stream::load_sketch_full(Path::new(append_path))?;
-    if let Some(m) = parsed.get_usize("m")? {
-        if m as u64 != meta.m {
-            bail!("--m {m} conflicts with {append_path} (m={})", meta.m);
-        }
-    }
-    check_declared_method(parsed, &meta.method, append_path)?;
-    if let Some(sigma) = parsed.get_f64("sigma")? {
-        if sigma.to_bits() != meta.sigma.to_bits() {
-            bail!("--sigma {sigma} conflicts with {append_path} (sigma={})", meta.sigma);
-        }
-    }
-    if let Some(seed) = parsed.get_u64("seed")? {
-        if seed != meta.seed {
-            bail!("--seed {seed} conflicts with {append_path} (seed={})", meta.seed);
-        }
-    }
-    let op = meta.rebuild_operator()?;
-    let method = MethodSpec::parse(&meta.method)?;
-    let wire = wire_from(parsed, &method)?;
-    let before = pool.count();
-    let mut reader = stream::open_dataset(Path::new(data_path))?;
-    let rows = stream::sketch_reader(&op, reader.as_mut(), wire, &mut pool, par)?;
-    if rows == 0 {
-        bail!("{data_path}: empty dataset");
-    }
-    prov.push(stream::ShardRecord {
-        label: shard_label.to_string(),
-        rows,
-    });
-    let out = parsed.get("out").unwrap_or(append_path);
-    stream::save_sketch_with(Path::new(out), &meta, &pool, &prov)?;
-    println!(
-        "appended {rows} rows from {data_path} to {append_path} ({before} -> {} samples) -> {out}",
-        pool.count()
-    );
-    Ok(())
-}
-
-fn cmd_merge(args: Vec<String>) -> Result<()> {
-    let spec = CliSpec::new(
-        "qckm merge",
-        "pool shard sketches (.qsk) into one — associative, any order",
-    )
-    .positionals("<shard.qsk>…")
-    .opt(
-        "method",
-        "SPEC",
-        None,
-        "declare the expected method; refused if the shards differ",
-    )
-    .opt("out", "FILE", None, "write the merged .qsk here");
-    let parsed = spec.parse(args)?;
-    let inputs = parsed.positionals();
-    if inputs.is_empty() {
-        bail!("need at least one input .qsk (see --help)");
-    }
-    let out = parsed.get("out").context("--out is required")?;
-
-    let (meta, mut pool, mut prov) = stream::load_sketch_full(Path::new(&inputs[0]))?;
-    check_declared_method(&parsed, &meta.method, &inputs[0])?;
-    eprintln!("{}: {} samples [{}]", inputs[0], pool.count(), meta.describe());
-    for input in &inputs[1..] {
-        let (shard_meta, shard_pool, shard_prov) = stream::load_sketch_full(Path::new(input))?;
-        meta.ensure_mergeable(&shard_meta)
-            .with_context(|| format!("merging {input}"))?;
-        eprintln!("{}: {} samples", input, shard_pool.count());
-        pool.merge(&shard_pool);
-        prov.extend(shard_prov);
-    }
-    stream::save_sketch_with(Path::new(out), &meta, &pool, &prov)?;
-    println!(
-        "merged {} shard(s), {} samples -> {out}",
-        inputs.len(),
-        pool.count()
-    );
-    Ok(())
-}
-
-fn cmd_decode(args: Vec<String>) -> Result<()> {
-    let spec = CliSpec::new(
-        "qckm decode",
-        "decode K centroids from a pooled sketch (.qsk) — no dataset needed",
-    )
-    .opt("sketch", "FILE", None, "input .qsk sketch")
-    .opt("k", "NUM", None, "number of clusters")
-    .opt(
-        "method",
-        "SPEC",
-        None,
-        "declare the expected method; refused if the sketch differs",
-    )
-    .opt("replicates", "NUM", Some("1"), "decoder replicates (best objective wins)")
-    .opt("threads", "NUM", Some("1"), "decoder threads (0 = all cores)")
-    .opt("seed", "NUM", None, "decoder RNG seed (default: the sketch's seed)")
-    .opt("lo", "FLOAT", Some("-1"), "centroid search box lower bound (every coordinate)")
-    .opt("hi", "FLOAT", Some("1"), "centroid search box upper bound (every coordinate)")
-    .opt("data", "FILE", None, "optional dataset: use its bounding box and report SSE")
-    .opt("out", "FILE", None, "write centroids CSV here");
-    let parsed = spec.parse(args)?;
-    let sketch_path = parsed.get("sketch").context("--sketch is required")?;
-    let k = parsed.get_usize("k")?.context("--k is required")?;
-
-    let (meta, pool) = stream::load_sketch(Path::new(sketch_path))?;
-    check_declared_method(&parsed, &meta.method, sketch_path)?;
-    if pool.count() == 0 {
-        bail!("{sketch_path}: sketch pools zero samples");
-    }
-    let op = meta.rebuild_operator()?;
-    eprintln!(
-        "sketch: {} samples, {} slots [{}]",
-        pool.count(),
-        pool.len(),
-        meta.describe()
-    );
-
-    let x = match parsed.get("data") {
-        Some(p) => {
-            let mut reader = stream::open_dataset(Path::new(p))?;
-            let x = stream::read_all(reader.as_mut())?;
-            if x.cols() != op.dim() {
-                bail!(
-                    "{p}: dataset dimension {} does not match the sketch's dimension {}",
-                    x.cols(),
-                    op.dim()
-                );
-            }
-            Some(x)
-        }
-        None => None,
-    };
-    let (lo, hi) = match &x {
-        Some(x) => bounding_box(x),
-        None => {
-            let lo = parsed.get_f64("lo")?.unwrap();
-            let hi = parsed.get_f64("hi")?.unwrap();
-            if lo > hi {
-                bail!("--lo {lo} must not exceed --hi {hi}");
-            }
-            (vec![lo; op.dim()], vec![hi; op.dim()])
-        }
-    };
-
-    let params = ClOmprParams {
-        threads: parsed.get_usize("threads")?.unwrap(),
-        ..ClOmprParams::default()
-    };
-    let replicates = parsed.get_usize("replicates")?.unwrap().max(1);
-    let seed = parsed.get_u64("seed")?.unwrap_or(meta.seed);
-    let z = pool.mean();
-    let mut rng = Rng::new(seed);
-    let sol = decode_best_of(&op, k, &z, lo, hi, &params, replicates, &mut rng);
-
-    println!("objective = {:.6}", sol.objective);
-    if let Some(x) = &x {
-        let s = qckm::metrics::sse(x, &sol.centroids);
-        println!("SSE/N = {:.6}", s / x.rows() as f64);
-    }
-    for c in 0..sol.centroids.rows() {
-        let row: Vec<String> = sol.centroids.row(c).iter().map(|v| format!("{v:.5}")).collect();
-        println!("c[{c}] (alpha={:.3}): {}", sol.weights[c], row.join(", "));
-    }
-    if let Some(out) = parsed.get("out") {
-        save_csv(Path::new(out), &sol.centroids)?;
-        eprintln!("centroids written to {out}");
-    }
-    Ok(())
-}
-
-/// `qckm serve` — the online sketch service (see `qckm::server`).
-fn cmd_serve(args: Vec<String>) -> Result<()> {
-    let spec = CliSpec::new(
-        "qckm serve",
-        "run the online sketch service: concurrent ingest, windowed pooling, live decode",
-    )
-    .opt("host", "ADDR", Some("127.0.0.1"), "bind address")
-    .opt("port", "NUM", Some("0"), "bind port (0 = ephemeral; the bound port is printed)")
-    .opt("dim", "NUM", None, "data dimension (required unless --seed-sketch)")
-    .opt("m", "NUM", None, "number of frequencies")
-    .opt("method", "SPEC", None, METHOD_HELP)
-    .opt("sigma", "FLOAT", None, "kernel bandwidth (required unless --seed-sketch)")
-    .opt("seed", "NUM", None, "frequency-draw seed")
-    .opt("threads", "NUM", None, "encode/decode threads (0 = all cores)")
-    .opt("epochs", "NUM", Some("16"), "closed epochs retained for windowed queries")
-    .opt("cache", "NUM", Some("32"), "cached decodes retained")
-    .opt(
-        "seed-sketch",
-        "FILE",
-        None,
-        "seed the server from this .qsk (operator comes from its header)",
-    )
-    .opt("seed-shard", "NAME", Some("__seed__"), "shard label for the seeded history")
-    .opt("config", "FILE", None, "TOML job config");
-    let parsed = spec.parse(args)?;
-    let cfg = job_from(&parsed)?;
-
-    // The operator is fixed for the server's lifetime: either rebuilt from
-    // a snapshot header (fingerprint-verified) or drawn fresh from the
-    // CLI parameters — the same pure-function draw the offline stages use.
-    let (meta, op, seed_pool) = match parsed.get("seed-sketch") {
-        Some(path) => {
-            let (meta, pool, prov) = stream::load_sketch_full(Path::new(path))?;
-            // The operator comes entirely from the snapshot header; refuse
-            // operator flags that contradict it (same convention as
-            // `qckm sketch --append`) instead of silently ignoring them.
-            if let Some(m) = parsed.get_usize("m")? {
-                if m as u64 != meta.m {
-                    bail!("--m {m} conflicts with {path} (m={})", meta.m);
-                }
-            }
-            check_declared_method(&parsed, &meta.method, path)?;
-            if let SigmaHeuristic::Fixed(sigma) = cfg.sketch.sigma {
-                if sigma.to_bits() != meta.sigma.to_bits() {
-                    bail!("--sigma {sigma} conflicts with {path} (sigma={})", meta.sigma);
-                }
-            }
-            if let Some(seed) = parsed.get_u64("seed")? {
-                if seed != meta.seed {
-                    bail!("--seed {seed} conflicts with {path} (seed={})", meta.seed);
-                }
-            }
-            let op = meta.rebuild_operator()?;
-            eprintln!(
-                "seeded from {path}: {} samples across {} provenance record(s)",
-                pool.count(),
-                prov.len()
-            );
-            (meta, op, Some(pool))
-        }
-        None => {
-            let dim = parsed
-                .get_usize("dim")?
-                .context("--dim is required without --seed-sketch")?;
-            let SigmaHeuristic::Fixed(sigma) = cfg.sketch.sigma else {
-                bail!("--sigma is required without --seed-sketch (shards must agree on it)");
-            };
-            let op = stream::draw_operator(
-                &cfg.sketch.method,
-                cfg.sketch.law,
-                cfg.sketch.num_frequencies,
-                dim,
-                sigma,
-                cfg.seed,
-            );
-            let meta = stream::SketchMeta::for_operator(&op, &cfg.sketch.method, cfg.seed);
-            (meta, op, None)
-        }
-    };
-    eprintln!("operator: {}", meta.describe());
-
-    let service_cfg = ServiceConfig {
-        epoch_capacity: parsed.get_usize("epochs")?.unwrap().max(1),
-        cache_capacity: parsed.get_usize("cache")?.unwrap().max(1),
-        threads: Parallelism::fixed(cfg.threads),
-        decode: ClOmprParams {
-            threads: cfg.threads,
-            ..ClOmprParams::default()
-        },
-    };
-    let service = SketchService::new(op, meta, service_cfg);
-    if let Some(pool) = seed_pool {
-        service.seed_with(parsed.get("seed-shard").unwrap(), pool)?;
-    }
-
-    let host = parsed.get("host").unwrap();
-    let port = parsed.get_usize("port")?.unwrap();
-    if port > u16::MAX as usize {
-        bail!("--port {port} out of range");
-    }
-    let listener = std::net::TcpListener::bind((host, port as u16))
-        .with_context(|| format!("bind {host}:{port}"))?;
-    // Machine-parseable: tests and scripts read the ephemeral port here.
-    println!("LISTENING {}", listener.local_addr()?);
-    std::io::Write::flush(&mut std::io::stdout())?;
-
-    let served = server::serve(listener, Arc::new(service))?;
-    eprintln!("server stopped after {served} connection(s)");
-    Ok(())
-}
-
-/// Connect a service client, declaring `--method` (canonicalized through
-/// the registry, so typos and junk fail locally with the valid-family
-/// list) if the flag was given.
-fn connect_with_method(
-    addr: &str,
-    parsed: &qckm::cli::ParsedArgs,
-) -> Result<qckm::server::Client> {
-    let client = qckm::server::Client::connect(addr)?;
-    Ok(match parsed.get("method") {
-        Some(m) => client.declare_method(MethodSpec::parse(m)?.canonical()),
-        None => client,
-    })
-}
-
-fn cmd_push(args: Vec<String>) -> Result<()> {
-    let spec = CliSpec::new("qckm push", "stream a dataset into a serving node's shard")
-        .opt("addr", "HOST:PORT", None, "server address")
-        .opt("data", "FILE", None, "input dataset (.csv, else raw f64 bin)")
-        .opt("shard", "NAME", None, "shard label (default: the data file stem)")
-        .opt(
-            "method",
-            "SPEC",
-            None,
-            "declare the expected method; the server refuses a mismatch",
-        )
-        .opt("batch", "NUM", Some("4096"), "rows per push message");
-    let parsed = spec.parse(args)?;
-    let addr = parsed.get("addr").context("--addr is required")?;
-    let data_path = parsed.get("data").context("--data is required")?;
-    let batch = parsed.get_usize("batch")?.unwrap().max(1);
-    let shard = match parsed.get("shard") {
-        Some(s) => s.to_string(),
-        None => Path::new(data_path)
-            .file_stem()
-            .map(|s| s.to_string_lossy().into_owned())
-            .unwrap_or_else(|| data_path.to_string()),
-    };
-
-    let mut reader = stream::open_dataset(Path::new(data_path))?;
-    let dim = reader.dim();
-    // Clamp the batch so every push message fits one protocol frame.
-    let cap = qckm::server::proto::max_batch_rows(dim);
-    let batch = if batch > cap {
-        eprintln!("note: --batch {batch} clamped to {cap} rows (frame size cap at dim {dim})");
-        cap
-    } else {
-        batch
-    };
-    let mut client = connect_with_method(addr, &parsed)?;
-    let mut pushed = 0u64;
-    let mut buf: Vec<f64> = Vec::new();
-    let (mut shard_rows, mut total_rows) = (0, 0);
-    loop {
-        buf.clear();
-        let mut rows = 0usize;
-        while rows < batch {
-            let got = reader.next_block(batch - rows, &mut buf)?;
-            if got == 0 {
-                break;
-            }
-            rows += got;
-        }
-        if rows == 0 {
-            break;
-        }
-        let block = Mat::from_vec(rows, dim, std::mem::take(&mut buf));
-        (shard_rows, total_rows) = client.push(&shard, &block)?;
-        buf = block.into_vec();
-        pushed += rows as u64;
-    }
-    if pushed == 0 {
-        bail!("{data_path}: empty dataset");
-    }
-    println!(
-        "pushed {pushed} rows from {data_path} to shard '{shard}' \
-         (shard total {shard_rows}, server total {total_rows})"
-    );
-    Ok(())
-}
-
-fn cmd_query(args: Vec<String>) -> Result<()> {
-    let spec = CliSpec::new("qckm query", "decode centroids live from a serving node")
-        .opt("addr", "HOST:PORT", None, "server address")
-        .opt("k", "NUM", None, "number of clusters")
-        .opt(
-            "method",
-            "SPEC",
-            None,
-            "declare the expected method; the server refuses a mismatch",
-        )
-        .opt(
-            "window",
-            "NUM",
-            Some("0"),
-            "epochs to pool: 0 = all-time, E = open epoch + E-1 newest closed",
-        )
-        .opt("replicates", "NUM", Some("1"), "decoder replicates (best objective wins)")
-        .opt("seed", "NUM", None, "decoder RNG seed (default: the operator's seed)")
-        .opt("lo", "FLOAT", Some("-1"), "centroid search box lower bound (every coordinate)")
-        .opt("hi", "FLOAT", Some("1"), "centroid search box upper bound (every coordinate)")
-        .opt("out", "FILE", None, "write centroids CSV here");
-    let parsed = spec.parse(args)?;
-    let addr = parsed.get("addr").context("--addr is required")?;
-    let k = parsed.get_usize("k")?.context("--k is required")?;
-
-    let mut client = connect_with_method(addr, &parsed)?;
-    let report = client.query(&QuerySpec {
-        k: k as u32,
-        window: parsed.get_usize("window")?.unwrap() as u32,
-        replicates: parsed.get_usize("replicates")?.unwrap().max(1) as u32,
-        seed: parsed.get_u64("seed")?,
-        lo: parsed.get_f64("lo")?.unwrap(),
-        hi: parsed.get_f64("hi")?.unwrap(),
-    })?;
-    eprintln!(
-        "window: {} rows over {} epoch(s){}",
-        report.rows,
-        report.epochs,
-        if report.cached { " [cached]" } else { "" }
-    );
-    println!("objective = {:.6}", report.objective);
-    let centroids = Mat::from_vec(report.k as usize, report.dim as usize, report.centroids);
-    for c in 0..centroids.rows() {
-        let row: Vec<String> = centroids.row(c).iter().map(|v| format!("{v:.5}")).collect();
-        println!("c[{c}] (alpha={:.3}): {}", report.weights[c], row.join(", "));
-    }
-    if let Some(out) = parsed.get("out") {
-        save_csv(Path::new(out), &centroids)?;
-        eprintln!("centroids written to {out}");
-    }
-    Ok(())
-}
-
-fn cmd_snapshot(args: Vec<String>) -> Result<()> {
-    let spec = CliSpec::new(
-        "qckm snapshot",
-        "drain a serving node's window into a .qsk file (offline-decodable)",
-    )
-    .opt("addr", "HOST:PORT", None, "server address")
-    .opt("window", "NUM", Some("0"), "epochs to pool (0 = all-time)")
-    .opt(
-        "method",
-        "SPEC",
-        None,
-        "declare the expected method; the server refuses a mismatch",
-    )
-    .opt("out", "FILE", None, "write the .qsk here");
-    let parsed = spec.parse(args)?;
-    let addr = parsed.get("addr").context("--addr is required")?;
-    let out = parsed.get("out").context("--out is required")?;
-
-    let mut client = connect_with_method(addr, &parsed)?;
-    let bytes = client.snapshot(parsed.get_usize("window")?.unwrap() as u32)?;
-    std::fs::write(out, &bytes).with_context(|| format!("write {out}"))?;
-    // Re-load what we wrote: validates the checksum end-to-end and tells
-    // the operator what they got.
-    let (meta, pool, prov) = stream::load_sketch_full(Path::new(out))?;
-    println!(
-        "snapshot: {} samples across {} shard record(s) -> {out} [{}]",
-        pool.count(),
-        prov.len(),
-        meta.describe()
-    );
-    Ok(())
-}
-
-fn cmd_ctl(args: Vec<String>) -> Result<()> {
-    let spec = CliSpec::new("qckm ctl", "administer a serving node")
-        .positionals("<stats|roll|shutdown>")
-        .opt("addr", "HOST:PORT", None, "server address");
-    let parsed = spec.parse(args)?;
-    let addr = parsed.get("addr").context("--addr is required")?;
-    let verb = parsed.positional(0).context("which action? (stats|roll|shutdown)")?;
-    let mut client = qckm::server::Client::connect(addr)?;
-    match verb {
-        "stats" => {
-            let s = client.stats()?;
-            println!(
-                "method {} | epoch {} | {} rows all-time | {} closed epoch(s) held | \
-                 cache {} hit / {} miss",
-                s.method, s.epoch, s.rows_total, s.epochs_held, s.cache_hits, s.cache_misses
-            );
-            for (label, rows) in &s.shards {
-                println!("  shard '{label}': {rows} rows");
-            }
-        }
-        "roll" => {
-            let (epoch, rows_closed) = client.roll()?;
-            println!("rolled: epoch {epoch} open, {rows_closed} rows closed");
-        }
-        "shutdown" => {
-            client.shutdown()?;
-            println!("server acknowledged shutdown");
-        }
-        other => bail!("unknown ctl action '{other}' (stats|roll|shutdown)"),
-    }
-    Ok(())
-}
-
-fn cmd_experiment(args: Vec<String>) -> Result<()> {
-    let spec = CliSpec::new("qckm experiment", "regenerate a paper figure")
-        .positionals("<fig2a|fig2b|fig3|prop1|ablation>")
-        .flag("full", "paper-scale grid (slow) instead of the quick grid")
-        .flag("streamed", "fig2 only: sketch trials through the streaming fold")
-        .opt("trials", "NUM", None, "override trials per cell")
-        .opt("samples", "NUM", None, "override dataset size")
-        .opt("seed", "NUM", None, "override seed")
-        .opt("threads", "NUM", None, "trial fan-out threads (0 = all cores)");
-    let parsed = spec.parse(args)?;
-    let which = parsed
-        .positional(0)
-        .context("which experiment? (fig2a|fig2b|fig3|prop1|ablation)")?;
-    let full = parsed.flag("full");
-
-    match which {
-        "fig2a" | "fig2b" => {
-            let variant = if which == "fig2a" {
-                exp::Fig2Variant::VaryDimension
-            } else {
-                exp::Fig2Variant::VaryClusters
-            };
-            let mut cfg = if full {
-                exp::Fig2Config::full(variant)
-            } else {
-                exp::Fig2Config::quick(variant)
-            };
-            if let Some(t) = parsed.get_usize("trials")? {
-                cfg.trials = t;
-            }
-            if let Some(s) = parsed.get_usize("samples")? {
-                cfg.n_samples = s;
-            }
-            if let Some(seed) = parsed.get_u64("seed")? {
-                cfg.seed = seed;
-            }
-            if let Some(t) = parsed.get_usize("threads")? {
-                cfg.threads = t;
-            }
-            cfg.streamed = parsed.flag("streamed");
-            let res = exp::run_fig2(&cfg);
-            println!("{}", res.render());
-        }
-        "fig3" => {
-            let mut cfg = if full {
-                exp::Fig3Config::full()
-            } else {
-                exp::Fig3Config::quick()
-            };
-            if let Some(t) = parsed.get_usize("trials")? {
-                cfg.trials = t;
-            }
-            if let Some(s) = parsed.get_usize("samples")? {
-                cfg.n_samples = s;
-            }
-            if let Some(seed) = parsed.get_u64("seed")? {
-                cfg.seed = seed;
-            }
-            if let Some(t) = parsed.get_usize("threads")? {
-                cfg.threads = t;
-            }
-            let res = exp::run_fig3(&cfg);
-            println!("{}", res.render());
-        }
-        "prop1" => {
-            let mut cfg = exp::Prop1Config::default();
-            if let Some(t) = parsed.get_usize("trials")? {
-                cfg.repeats = t;
-            }
-            if let Some(seed) = parsed.get_u64("seed")? {
-                cfg.seed = seed;
-            }
-            let sigs: [Arc<dyn qckm::signature::Signature>; 3] = [
-                Arc::new(qckm::signature::UniversalQuantizer),
-                Arc::new(qckm::signature::Triangle),
-                Arc::new(qckm::signature::ModuloRamp),
-            ];
-            for sig in sigs {
-                let res = exp::run_prop1(sig, &cfg);
-                println!("{}", res.render());
-            }
-        }
-        "ablation" => {
-            let mut cfg = exp::AblationConfig::default();
-            if let Some(t) = parsed.get_usize("trials")? {
-                cfg.trials = t;
-            }
-            if let Some(t) = parsed.get_usize("threads")? {
-                cfg.threads = t;
-            }
-            if full {
-                cfg.trials = 30;
-                cfg.ratios = vec![0.5, 1.0, 2.0, 4.0, 8.0];
-            }
-            let res = exp::run_ablation(&cfg);
-            println!("{}", res.render());
-        }
-        other => bail!("unknown experiment '{other}'"),
-    }
-    Ok(())
-}
-
-fn cmd_pipeline(args: Vec<String>) -> Result<()> {
-    let spec = CliSpec::new("qckm pipeline", "streaming 1-bit sensor-cloud demo")
-        .opt("workers", "NUM", Some("4"), "sensor workers")
-        .opt("samples", "NUM", Some("100000"), "total samples to acquire")
-        .opt("dim", "NUM", Some("10"), "sample dimension")
-        .opt("k", "NUM", Some("4"), "clusters to synthesize + decode")
-        .opt("m", "NUM", Some("400"), "frequencies")
-        .opt("batch", "NUM", Some("64"), "examples per wire message")
-        .opt("queue", "NUM", Some("16"), "channel capacity")
-        .opt("wire", "FMT", Some("bits"), "bits|dense")
-        .opt(
-            "method",
-            "SPEC",
-            None,
-            "encode method (default: the wire's preferred method — \
-             qckm for bits, ckm for dense)",
-        )
-        .opt("seed", "NUM", Some("0"), "seed");
-    let parsed = spec.parse(args)?;
-    let workers = parsed.get_usize("workers")?.unwrap();
-    let samples = parsed.get_usize("samples")?.unwrap();
-    let dim = parsed.get_usize("dim")?.unwrap();
-    let k = parsed.get_usize("k")?.unwrap();
-    let m = parsed.get_usize("m")?.unwrap();
-    let seed = parsed.get_u64("seed")?.unwrap();
-    let wire = match parsed.get("wire").unwrap() {
-        "bits" => WireFormat::PackedBits,
-        "dense" => WireFormat::DenseF64,
-        other => bail!("unknown wire '{other}'"),
-    };
-
-    // Synthetic sensor field: K Gaussians at random ±1 corners.
-    let mut rng = Rng::new(seed);
-    let proto = qckm::data::gaussian_mixture_pm1(k.max(2) * 64, dim, k, &mut rng);
-    let means = Arc::new(proto.means.clone());
-    let std = (dim as f64 / 20.0).sqrt();
-    let source = SampleSource::Synthetic {
-        total: samples,
-        dim,
-        make: Arc::new(move |r: &mut Rng, out: &mut [f64]| {
-            let c = r.next_below(means.rows() as u64) as usize;
-            for (j, v) in out.iter_mut().enumerate() {
-                *v = means.get(c, j) + std * r.gaussian();
-            }
-        }),
-    };
-
-    let sigma = SigmaHeuristic::default().resolve(&proto.points, &mut rng);
-    let freqs = DrawnFrequencies::draw(
-        qckm::frequency::FrequencyLaw::AdaptedRadius,
-        dim,
-        m,
-        sigma,
-        &mut rng,
-    );
-    // The signature comes from the method spec, not from an assumption
-    // about the wire: dense no longer hardcodes the cosine, and any
-    // registry family can drive the demo. (The frequency draw above stays
-    // dithered for every method, as this demo always did.)
-    let method = match parsed.get("method") {
-        Some(s) => MethodSpec::parse(s)?,
-        None => MethodSpec::parse(match wire {
-            WireFormat::PackedBits => "qckm",
-            WireFormat::DenseF64 => "ckm",
-        })?,
-    };
-    if wire == WireFormat::PackedBits
-        && method.preferred_wire_format() != WireFormat::PackedBits
-    {
-        bail!(
-            "--wire bits needs a ±1-valued method (e.g. qckm); '{}' requires --wire dense",
-            method.canonical()
-        );
-    }
-    eprintln!("pipeline method: {}", method.canonical());
-    let op = SketchOperator::new(freqs, method.signature());
-
-    let report = run_pipeline(
-        &op,
-        &source,
-        &PipelineConfig {
-            workers,
-            batch_size: parsed.get_usize("batch")?.unwrap(),
-            queue_capacity: parsed.get_usize("queue")?.unwrap(),
-            wire,
-        },
-        seed,
-    );
-    println!(
-        "pipeline: {} samples in {:.3}s → {:.0} samples/s",
-        report.samples,
-        report.elapsed_secs,
-        report.throughput()
-    );
-    println!(
-        "wire: {} bytes total ({:.2} bytes/sample), queue high-water {}, {} stalls",
-        report.payload_bytes,
-        report.payload_bytes as f64 / report.samples as f64,
-        report.queue_high_water,
-        report.blocked_sends
-    );
-
-    let lo = vec![-2.0; dim];
-    let hi = vec![2.0; dim];
-    let sol = qckm::clompr::ClOmpr::new(&op, k)
-        .with_bounds(lo, hi)
-        .run(&report.sketch, &mut rng);
-    println!(
-        "decoded {} centroids, objective {:.4}",
-        sol.centroids.rows(),
-        sol.objective
-    );
-    for i in 0..sol.centroids.rows() {
-        let c: Vec<String> = sol
-            .centroids
-            .row(i)
-            .iter()
-            .take(6)
-            .map(|v| format!("{v:+.2}"))
-            .collect();
-        println!("  c[{i}] alpha={:.3} [{} …]", sol.weights[i], c.join(", "));
-    }
-    Ok(())
 }

@@ -48,6 +48,7 @@ use crate::coordinator::WireFormat;
 use crate::signature::{
     Cosine, ModuloRamp, MultiBitQuantizer, Signature, Triangle, UniversalQuantizer,
 };
+use crate::spec::Params;
 use anyhow::{bail, Result};
 use std::fmt;
 use std::sync::Arc;
@@ -91,9 +92,9 @@ impl MethodSpec {
                 Self::families_help()
             );
         };
-        let mut params = Params::parse(def.family, rest)?;
+        let mut params = Params::parse("method", def.family, rest)?;
         let spec = (def.build)(&mut params)?;
-        params.finish(def.family, def.params_help)?;
+        params.finish(def.params_help)?;
         Ok(spec)
     }
 
@@ -284,66 +285,6 @@ fn build_modulo(_p: &mut Params) -> Result<MethodSpec> {
         wire: WireFormat::DenseF64,
         bits_per_slot: 64.0,
     })
-}
-
-// ------------------------------------------------------------------ params
-
-/// Parsed `key=value` params with taken-tracking, so a family builder only
-/// names the keys it accepts and everything else is an actionable error.
-struct Params {
-    pairs: Vec<(String, String, bool)>,
-}
-
-impl Params {
-    fn parse(family: &str, rest: Option<&str>) -> Result<Params> {
-        let mut pairs: Vec<(String, String, bool)> = Vec::new();
-        if let Some(rest) = rest {
-            if rest.is_empty() {
-                bail!("method '{family}': empty parameter list after ':'");
-            }
-            for item in rest.split(',') {
-                let Some((key, value)) = item.split_once('=') else {
-                    bail!(
-                        "method '{family}': malformed parameter '{item}' (expected key=value)"
-                    );
-                };
-                let (key, value) = (key.trim(), value.trim());
-                if key.is_empty() || value.is_empty() {
-                    bail!(
-                        "method '{family}': malformed parameter '{item}' (expected key=value)"
-                    );
-                }
-                if pairs.iter().any(|(k, _, _)| k == key) {
-                    bail!("method '{family}': duplicate parameter '{key}'");
-                }
-                pairs.push((key.to_string(), value.to_string(), false));
-            }
-        }
-        Ok(Params { pairs })
-    }
-
-    fn take_u32(&mut self, key: &str) -> Result<Option<u32>> {
-        for (k, v, taken) in self.pairs.iter_mut() {
-            if k == key {
-                *taken = true;
-                return match v.parse::<u32>() {
-                    Ok(n) => Ok(Some(n)),
-                    Err(_) => bail!("parameter '{key}': cannot parse '{v}' as an integer"),
-                };
-            }
-        }
-        Ok(None)
-    }
-
-    /// Reject leftover params, naming what the family accepts.
-    fn finish(&self, family: &str, params_help: &str) -> Result<()> {
-        if let Some((k, _, _)) = self.pairs.iter().find(|(_, _, taken)| !taken) {
-            bail!(
-                "method '{family}' does not accept parameter '{k}' (accepted: {params_help})"
-            );
-        }
-        Ok(())
-    }
 }
 
 #[cfg(test)]

@@ -1,13 +1,32 @@
 //! Blocking client for the sketch service — the library behind
-//! `qckm push` / `qckm query` / `qckm snapshot` / `qckm ctl`.
+//! `qckm push` / `qckm query` / `qckm snapshot` / `qckm ctl` — plus the
+//! reconnecting, bounded-exponential-backoff wrapper `qckm push` uses to
+//! survive server restarts.
 
 use super::proto::{
     self, CentroidReport, QuerySpec, Request, Response, StatsReport,
 };
 use crate::linalg::Mat;
 use anyhow::{bail, Context, Result};
+use std::fmt;
 use std::net::TcpStream;
 use std::time::Duration;
+
+/// An error the *server* reported after processing a request (method
+/// mismatch, bad query, …). The request reached the service and was
+/// refused — retrying it cannot succeed, so [`RetryClient`] fails fast on
+/// these and only retries transport-level errors (refused connections,
+/// resets, timeouts).
+#[derive(Debug)]
+pub struct ServerError(pub String);
+
+impl fmt::Display for ServerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "server: {}", self.0)
+    }
+}
+
+impl std::error::Error for ServerError {}
 
 /// One connection to a serving node. Requests are strictly sequential
 /// (send, then wait for the reply); open several clients for concurrency —
@@ -46,7 +65,7 @@ impl Client {
     fn call(&mut self, req: &Request) -> Result<Response> {
         proto::write_request(&mut self.stream, req)?;
         match proto::read_response(&mut self.stream)? {
-            Response::Error(msg) => bail!("server: {msg}"),
+            Response::Error(msg) => Err(anyhow::Error::new(ServerError(msg))),
             resp => Ok(resp),
         }
     }
@@ -116,5 +135,120 @@ impl Client {
             Response::ShutdownAck => Ok(()),
             other => bail!("unexpected reply to shutdown: {other:?}"),
         }
+    }
+}
+
+// ------------------------------------------------------------------- retry
+
+/// Bounded exponential backoff for [`RetryClient`]: delay
+/// `min(base · 2^attempt, cap)` between attempts, at most `attempts`
+/// retries after the first failure. No jitter — reconnect timing stays
+/// deterministic like everything else in this crate.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first failure (0 = fail fast, the legacy
+    /// behavior).
+    pub attempts: u32,
+    /// First backoff delay.
+    pub base: Duration,
+    /// Delay ceiling.
+    pub cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            attempts: 0,
+            base: Duration::from_millis(100),
+            cap: Duration::from_secs(2),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The delay before retry number `attempt` (0-based).
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let mult = 1u32.checked_shl(attempt.min(31)).unwrap_or(u32::MAX);
+        self.base.saturating_mul(mult).min(self.cap)
+    }
+}
+
+/// A reconnecting wrapper over [`Client`] for the ingest path: on a
+/// transport error (connection refused, reset, timeout) it drops the
+/// connection, sleeps per the [`RetryPolicy`]'s bounded exponential
+/// backoff, reconnects, and re-sends the failed request — so `qckm push`
+/// survives a server kill-and-restart mid-stream.
+///
+/// Semantics are **at-least-once**: if the failure hit after the server
+/// merged a batch but before the ack arrived, the re-send double-counts
+/// that batch. Application-level refusals ([`ServerError`], e.g. a method
+/// mismatch) fail immediately — the server processed and rejected the
+/// request, so retrying is useless.
+pub struct RetryClient {
+    addr: String,
+    method: String,
+    policy: RetryPolicy,
+    inner: Option<Client>,
+}
+
+impl RetryClient {
+    /// Connect to `addr`, retrying the initial connect under the same
+    /// policy — a pusher may come up before its server does. `method` is
+    /// the declared method spec (empty = declare nothing).
+    pub fn connect(addr: &str, method: &str, policy: RetryPolicy) -> Result<RetryClient> {
+        let mut rc = RetryClient {
+            addr: addr.to_string(),
+            method: method.to_string(),
+            policy,
+            inner: None,
+        };
+        rc.with_retry(|_| Ok(()))?;
+        Ok(rc)
+    }
+
+    fn client(&mut self) -> Result<&mut Client> {
+        if self.inner.is_none() {
+            let c = Client::connect(&self.addr)?;
+            self.inner = Some(if self.method.is_empty() {
+                c
+            } else {
+                c.declare_method(&self.method)
+            });
+        }
+        Ok(self.inner.as_mut().unwrap())
+    }
+
+    /// Run `op` against a (re)connected client, retrying transport errors
+    /// per the policy.
+    fn with_retry<T>(&mut self, op: impl Fn(&mut Client) -> Result<T>) -> Result<T> {
+        let mut attempt = 0u32;
+        loop {
+            match self.client().and_then(&op) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    // The connection may be mid-frame or half-dead: never
+                    // reuse it after any failure.
+                    self.inner = None;
+                    if e.downcast_ref::<ServerError>().is_some() || attempt >= self.policy.attempts
+                    {
+                        return Err(e).with_context(|| {
+                            format!("giving up on {} after {} attempt(s)", self.addr, attempt + 1)
+                        });
+                    }
+                    let delay = self.policy.delay(attempt);
+                    attempt += 1;
+                    eprintln!(
+                        "push: {e:#}; retrying in {delay:?} (attempt {attempt}/{})",
+                        self.policy.attempts
+                    );
+                    std::thread::sleep(delay);
+                }
+            }
+        }
+    }
+
+    /// [`Client::push`] with reconnect-and-resend on transport errors.
+    pub fn push(&mut self, shard: &str, batch: &Mat) -> Result<(u64, u64)> {
+        self.with_retry(|c| c.push(shard, batch))
     }
 }

@@ -17,7 +17,9 @@
 //!   encode via [`SketchOperator::sketch_into_par`] outside the state
 //!   lock, cooperative shutdown with bounded timeouts (CI can never hang).
 //! * [`Client`] — the blocking client used by `qckm push` / `qckm query` /
-//!   `qckm snapshot` / `qckm ctl`.
+//!   `qckm snapshot` / `qckm ctl`; [`RetryClient`] wraps it with
+//!   reconnect-and-resend under bounded exponential backoff so
+//!   `qckm push --retry N` survives a server kill-and-restart.
 //!
 //! ## Determinism
 //!
@@ -47,7 +49,7 @@ pub mod proto;
 mod service;
 mod state;
 
-pub use client::Client;
+pub use client::{Client, RetryClient, RetryPolicy, ServerError};
 pub use proto::{CentroidReport, QuerySpec, Request, Response, StatsReport};
 pub use service::serve;
 pub use state::{ServiceConfig, SketchService, WindowPool};

@@ -22,8 +22,11 @@ use std::io::{Read, Write};
 /// Protocol version carried in every frame. Version 2 added the declared
 /// method-spec string to push/query/snapshot requests (so every stage of a
 /// distributed job agrees on the method, mismatches refused server-side)
-/// and to the stats report.
-pub const PROTO_VERSION: u8 = 2;
+/// and to the stats report. Version 3 added the decoder-spec string to
+/// query frames (the centroid cache keys on it, so a query can never be
+/// served centroids decoded under a different algorithm) and per-decoder
+/// query counters to the stats report.
+pub const PROTO_VERSION: u8 = 3;
 /// Hard ceiling on one frame's payload (256 MiB) — covers the largest
 /// plausible push batch and snapshot while bounding allocations.
 pub const MAX_FRAME_BYTES: usize = 1 << 28;
@@ -43,6 +46,8 @@ pub const MAX_DIM: usize = 1 << 24;
 pub const MAX_SHARD_BYTES: usize = 256;
 /// Ceiling on method-spec bytes (matches the `.qsk` method field cap).
 pub const MAX_METHOD_BYTES: usize = 64;
+/// Ceiling on decoder-spec bytes carried in query frames.
+pub const MAX_DECODER_BYTES: usize = 64;
 
 const TAG_PUSH: u8 = 1;
 const TAG_QUERY: u8 = 2;
@@ -72,6 +77,10 @@ pub struct QuerySpec {
     pub lo: f64,
     /// Centroid search box upper bound (every coordinate).
     pub hi: f64,
+    /// Canonical decoder spec ([`crate::decoder::DecoderSpec`]); empty =
+    /// the server's default (`clompr`). Part of the centroid-cache key, so
+    /// two queries with different decoders never share cached centroids.
+    pub decoder: String,
 }
 
 /// A decoded window: centroids plus the window's bookkeeping.
@@ -108,6 +117,10 @@ pub struct StatsReport {
     pub cache_misses: u64,
     /// All-time per-shard row counts, in stable shard-key order.
     pub shards: Vec<(String, u64)>,
+    /// Queries answered per canonical decoder spec (hits and misses), in
+    /// stable spec order — the "active decoder(s)" view, so centroid-cache
+    /// effectiveness per algorithm is observable from `qckm ctl stats`.
+    pub decoders: Vec<(String, u64)>,
 }
 
 /// Client → server messages.
@@ -254,6 +267,7 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             b.extend_from_slice(&q.seed.unwrap_or(0).to_le_bytes());
             b.extend_from_slice(&q.lo.to_le_bytes());
             b.extend_from_slice(&q.hi.to_le_bytes());
+            put_str(&mut b, &q.decoder);
         }
         Request::Snapshot { window, method } => {
             b.push(TAG_SNAPSHOT);
@@ -309,6 +323,7 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
             let seed_raw = r.u64()?;
             let lo = r.f64()?;
             let hi = r.f64()?;
+            let decoder = r.str(MAX_DECODER_BYTES)?;
             Request::Query {
                 spec: QuerySpec {
                     k,
@@ -317,6 +332,7 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
                     seed: has_seed.then_some(seed_raw),
                     lo,
                     hi,
+                    decoder,
                 },
                 method,
             }
@@ -392,6 +408,11 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             for (label, rows) in &s.shards {
                 put_str(&mut b, label);
                 b.extend_from_slice(&rows.to_le_bytes());
+            }
+            b.extend_from_slice(&(s.decoders.len() as u32).to_le_bytes());
+            for (spec, queries) in &s.decoders {
+                put_str(&mut b, spec);
+                b.extend_from_slice(&queries.to_le_bytes());
             }
         }
         Response::ShutdownAck => {
@@ -471,6 +492,16 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
                 let rows = r.u64()?;
                 shards.push((label, rows));
             }
+            let nd = r.u32()? as usize;
+            if nd > 1 << 16 {
+                bail!("implausible decoder count {nd}");
+            }
+            let mut decoders = Vec::with_capacity(nd);
+            for _ in 0..nd {
+                let spec = r.str(MAX_DECODER_BYTES)?;
+                let queries = r.u64()?;
+                decoders.push((spec, queries));
+            }
             Response::Stats(StatsReport {
                 method,
                 epoch,
@@ -479,6 +510,7 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
                 cache_hits,
                 cache_misses,
                 shards,
+                decoders,
             })
         }
         TAG_SHUTDOWN => Response::ShutdownAck,

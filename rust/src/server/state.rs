@@ -16,10 +16,12 @@
 //!   is a *sufficient statistic*: the decode is a pure function of (pooled
 //!   bits, decoder configuration). The cache therefore keys on the FNV
 //!   fingerprint of the merged window's exact (count, sum-bits) plus the
-//!   [`QuerySpec`] fields — repeated queries against an unchanged window
-//!   are answered without running CL-OMPR, and any push or roll that
-//!   changes the pooled bits changes the key, so stale hits are
-//!   impossible by construction.
+//!   [`QuerySpec`] fields *and the canonical decoder spec* — repeated
+//!   queries against an unchanged window are answered without running the
+//!   decoder, any push or roll that changes the pooled bits changes the
+//!   key, and a query naming a different [`crate::decoder::DecoderSpec`]
+//!   is always a miss, so stale or cross-algorithm hits are impossible by
+//!   construction.
 //!
 //! ## Determinism
 //!
@@ -35,7 +37,8 @@
 //!
 //! [`sketch_into_par`]: crate::sketch::SketchOperator::sketch_into_par
 
-use crate::clompr::{decode_best_of, ClOmprParams};
+use crate::clompr::ClOmprParams;
+use crate::decoder::DecoderSpec;
 use crate::linalg::Mat;
 use crate::parallel::Parallelism;
 use crate::rng::Rng;
@@ -56,7 +59,10 @@ pub struct ServiceConfig {
     pub cache_capacity: usize,
     /// Threads for the per-push parallel encode (0 = all cores).
     pub threads: Parallelism,
-    /// Decoder parameters for query answering (including its thread knob).
+    /// Base decoder tuning for query answering (including its thread
+    /// knob). The algorithm itself comes from each query's declared
+    /// [`crate::decoder::DecoderSpec`] (default `clompr`), whose explicit
+    /// params override fields of this base.
     pub decode: ClOmprParams,
 }
 
@@ -102,7 +108,21 @@ struct Inner {
     cache: VecDeque<(u64, CentroidReport)>,
     cache_hits: u64,
     cache_misses: u64,
+    /// Queries answered per canonical decoder spec (hits and misses) —
+    /// the stats view of which decode algorithms this server is running.
+    /// Bounded at [`MAX_DECODER_STATS`] distinct specs (clients choose the
+    /// strings, and every other piece of server state is capacity-bounded);
+    /// overflow tallies under [`DECODER_STATS_OVERFLOW`].
+    decoder_uses: BTreeMap<String, u64>,
 }
+
+/// Distinct decoder specs tracked in stats before new ones collapse into
+/// the overflow bucket — plenty for real deployments (the registry has a
+/// handful of algorithms), tiny enough that an unauthenticated client
+/// spamming distinct-but-valid specs cannot grow server memory.
+const MAX_DECODER_STATS: usize = 32;
+/// The catch-all stats bucket once [`MAX_DECODER_STATS`] is reached.
+const DECODER_STATS_OVERFLOW: &str = "(other)";
 
 /// The shared, thread-safe server state. Cheap operations (merging a
 /// pre-encoded batch, cache lookups, stats) run under one mutex; the
@@ -137,6 +157,7 @@ impl SketchService {
                 cache: VecDeque::new(),
                 cache_hits: 0,
                 cache_misses: 0,
+                decoder_uses: BTreeMap::new(),
             }),
         }
     }
@@ -303,6 +324,15 @@ impl SketchService {
         if !(spec.lo <= spec.hi) {
             bail!("query: lo {} must not exceed hi {}", spec.lo, spec.hi);
         }
+        // Resolve the declared decoder through the registry (empty = the
+        // default `clompr`); junk specs error here with the valid-decoder
+        // list. The *canonical* spec goes into the cache key, so aliases
+        // share entries and different algorithms never do.
+        let decoder = if spec.decoder.is_empty() {
+            DecoderSpec::default()
+        } else {
+            DecoderSpec::parse(&spec.decoder)?
+        };
         let window = self.merge_window(spec.window);
         if window.pool.count() == 0 {
             bail!(
@@ -312,10 +342,18 @@ impl SketchService {
         }
         let replicates = spec.replicates.max(1);
         let seed = spec.seed.unwrap_or(self.meta.seed);
-        let key = cache_key(&window.pool, spec, replicates, seed);
+        let key = cache_key(&window.pool, spec, replicates, seed, decoder.canonical());
 
         {
             let mut inner = self.inner.lock().unwrap();
+            let stats_key = if inner.decoder_uses.contains_key(decoder.canonical())
+                || inner.decoder_uses.len() < MAX_DECODER_STATS
+            {
+                decoder.canonical()
+            } else {
+                DECODER_STATS_OVERFLOW
+            };
+            *inner.decoder_uses.entry(stats_key.to_string()).or_insert(0) += 1;
             if let Some((_, report)) = inner.cache.iter().find(|(k, _)| *k == key) {
                 let mut hit = report.clone();
                 hit.cached = true;
@@ -332,7 +370,7 @@ impl SketchService {
 
         let dim = self.op.dim();
         let z = window.pool.mean();
-        let sol = decode_best_of(
+        let sol = decoder.decode_best_of(
             &self.op,
             spec.k as usize,
             &z,
@@ -387,14 +425,27 @@ impl SketchService {
                 .iter()
                 .map(|(label, p)| (label.clone(), p.count()))
                 .collect(),
+            decoders: inner
+                .decoder_uses
+                .iter()
+                .map(|(spec, n)| (spec.clone(), *n))
+                .collect(),
         }
     }
 }
 
-/// Cache key: FNV over the merged window's exact pooled bits and every
-/// decode-relevant query field. Equal keys ⇒ identical mean sketch and
-/// decoder configuration ⇒ bit-identical decode, so hits are always sound.
-fn cache_key(pool: &PooledSketch, spec: &QuerySpec, replicates: u32, seed: u64) -> u64 {
+/// Cache key: FNV over the merged window's exact pooled bits, every
+/// decode-relevant query field, and the canonical decoder spec. Equal keys
+/// ⇒ identical mean sketch and decoder configuration *and algorithm* ⇒
+/// bit-identical decode, so hits are always sound — in particular a query
+/// with a different `--decoder` on an unchanged window is a miss.
+fn cache_key(
+    pool: &PooledSketch,
+    spec: &QuerySpec,
+    replicates: u32,
+    seed: u64,
+    decoder: &str,
+) -> u64 {
     let mut h = crate::stream::Fnv1a::new();
     h.write_u64(pool_fingerprint(pool));
     h.write_u64(spec.k as u64);
@@ -402,5 +453,6 @@ fn cache_key(pool: &PooledSketch, spec: &QuerySpec, replicates: u32, seed: u64) 
     h.write_u64(seed);
     h.write_u64(spec.lo.to_bits());
     h.write_u64(spec.hi.to_bits());
+    h.write_bytes(decoder.as_bytes());
     h.finish()
 }

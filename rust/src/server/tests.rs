@@ -39,6 +39,7 @@ fn spec(k: u32, window: u32) -> QuerySpec {
         seed: None,
         lo: -2.0,
         hi: 2.0,
+        decoder: String::new(),
     }
 }
 
@@ -67,6 +68,7 @@ fn proto_round_trips_every_request_variant() {
                 seed: Some(99),
                 lo: -1.5,
                 hi: 1.5,
+                decoder: "clompr:restarts=5".into(),
             },
             method: "modulo".into(),
         },
@@ -119,6 +121,7 @@ fn proto_round_trips_every_response_variant() {
             cache_hits: 5,
             cache_misses: 6,
             shards: vec![("a".into(), 40), ("b".into(), 37)],
+            decoders: vec![("clompr".into(), 9), ("hier".into(), 2)],
         }),
         Response::ShutdownAck,
     ];
@@ -289,6 +292,72 @@ fn query_decodes_and_caches_until_the_pool_changes() {
     let stats = svc.stats();
     assert_eq!(stats.cache_hits, 1);
     assert_eq!(stats.cache_misses, 3);
+}
+
+/// The centroid cache keys on the canonical decoder spec: a different
+/// `--decoder` on an unchanged window is a miss, an alias of the same
+/// decoder is a hit, and stats reports per-decoder query counts.
+#[test]
+fn cache_keys_on_the_decoder_spec() {
+    let svc = service(ServiceConfig::default());
+    let mut rng = Rng::new(13);
+    let data = crate::data::gaussian_mixture_pm1(600, DIM, 2, &mut rng);
+    svc.ingest("s", &data.points).unwrap();
+
+    let with_decoder = |decoder: &str| QuerySpec {
+        decoder: decoder.into(),
+        ..spec(2, 0)
+    };
+    // Empty (server default) and the explicit default share an entry.
+    let first = svc.query(&with_decoder("")).unwrap();
+    assert!(!first.cached);
+    let second = svc.query(&with_decoder("clompr")).unwrap();
+    assert!(second.cached, "'' and 'clompr' resolve to the same decoder");
+    assert_eq!(second.centroids, first.centroids);
+
+    // A different algorithm — or differently parameterized one — on the
+    // unchanged window must miss and may decode differently.
+    let hier = svc.query(&with_decoder("hier")).unwrap();
+    assert!(!hier.cached, "hier must not be served clompr centroids");
+    let pinned = svc.query(&with_decoder("clompr:restarts=3")).unwrap();
+    assert!(!pinned.cached, "explicit params are a distinct cache key");
+    // Aliases canonicalize before keying: a repeat through `bisect` hits.
+    let hier_again = svc.query(&with_decoder("bisect")).unwrap();
+    assert!(hier_again.cached);
+    assert_eq!(hier_again.centroids, hier.centroids);
+
+    // Junk decoder specs error with the registry list.
+    let err = format!("{:#}", svc.query(&with_decoder("nope")).unwrap_err());
+    assert!(err.contains("valid decoders"), "{err}");
+
+    let stats = svc.stats();
+    assert_eq!(stats.cache_hits, 2);
+    assert_eq!(stats.cache_misses, 3);
+    assert_eq!(
+        stats.decoders,
+        vec![
+            ("clompr".to_string(), 2),
+            ("clompr:restarts=3".to_string(), 1),
+            ("hier".to_string(), 2),
+        ]
+    );
+
+    // The per-decoder stats map is bounded: distinct-but-valid specs past
+    // the cap tally under the overflow bucket instead of growing state.
+    for r in 1..=40u32 {
+        let _ = svc.query(&with_decoder(&format!("clompr:restarts={r}")));
+    }
+    let stats = svc.stats();
+    assert!(
+        stats.decoders.len() <= 33,
+        "decoder stats must stay bounded, got {}",
+        stats.decoders.len()
+    );
+    assert!(
+        stats.decoders.iter().any(|(s, _)| s == "(other)"),
+        "overflow bucket missing: {:?}",
+        stats.decoders
+    );
 }
 
 #[test]

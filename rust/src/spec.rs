@@ -1,0 +1,88 @@
+//! Shared `key=value` parameter machinery for the open spec-string
+//! registries.
+//!
+//! Both registries — compressive methods ([`crate::method`]) and sketch
+//! decoders ([`crate::decoder`]) — speak the same grammar:
+//!
+//! ```text
+//! spec   := name [":" param ("," param)*]
+//! param  := key "=" value
+//! ```
+//!
+//! This module owns the param-list half of that grammar: splitting,
+//! duplicate detection, typed takes with taken-tracking, and the
+//! "unknown parameter" rejection that names what a family accepts. The
+//! `kind` string ("method" or "decoder") only flavors the error messages,
+//! so both registries fail with the same actionable shape.
+
+use anyhow::{bail, Result};
+
+/// Parsed `key=value` params with taken-tracking, so a family builder only
+/// names the keys it accepts and everything else is an actionable error.
+pub(crate) struct Params {
+    /// "method" or "decoder" — the registry kind, for error messages.
+    kind: &'static str,
+    /// The family name the params belong to, for error messages.
+    owner: String,
+    pairs: Vec<(String, String, bool)>,
+}
+
+impl Params {
+    /// Parse the part after the family name's `:` (or `None` when the spec
+    /// was just a bare family name).
+    pub(crate) fn parse(kind: &'static str, owner: &str, rest: Option<&str>) -> Result<Params> {
+        let mut pairs: Vec<(String, String, bool)> = Vec::new();
+        if let Some(rest) = rest {
+            if rest.is_empty() {
+                bail!("{kind} '{owner}': empty parameter list after ':'");
+            }
+            for item in rest.split(',') {
+                let Some((key, value)) = item.split_once('=') else {
+                    bail!(
+                        "{kind} '{owner}': malformed parameter '{item}' (expected key=value)"
+                    );
+                };
+                let (key, value) = (key.trim(), value.trim());
+                if key.is_empty() || value.is_empty() {
+                    bail!(
+                        "{kind} '{owner}': malformed parameter '{item}' (expected key=value)"
+                    );
+                }
+                if pairs.iter().any(|(k, _, _)| k == key) {
+                    bail!("{kind} '{owner}': duplicate parameter '{key}'");
+                }
+                pairs.push((key.to_string(), value.to_string(), false));
+            }
+        }
+        Ok(Params {
+            kind,
+            owner: owner.to_string(),
+            pairs,
+        })
+    }
+
+    pub(crate) fn take_u32(&mut self, key: &str) -> Result<Option<u32>> {
+        for (k, v, taken) in self.pairs.iter_mut() {
+            if k == key {
+                *taken = true;
+                return match v.parse::<u32>() {
+                    Ok(n) => Ok(Some(n)),
+                    Err(_) => bail!("parameter '{key}': cannot parse '{v}' as an integer"),
+                };
+            }
+        }
+        Ok(None)
+    }
+
+    /// Reject leftover params, naming what the family accepts.
+    pub(crate) fn finish(&self, params_help: &str) -> Result<()> {
+        if let Some((k, _, _)) = self.pairs.iter().find(|(_, _, taken)| !taken) {
+            bail!(
+                "{} '{}' does not accept parameter '{k}' (accepted: {params_help})",
+                self.kind,
+                self.owner
+            );
+        }
+        Ok(())
+    }
+}

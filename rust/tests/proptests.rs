@@ -335,3 +335,80 @@ fn prop_bit_aggregator_merge_is_order_and_grouping_invariant() {
         assert_eq!(forward.to_sum(), grouped.to_sum());
     });
 }
+
+// ---------------------------------------------------------------- decoders
+
+/// Every canonical decoder-spec string re-parses to an equal spec with the
+/// same canonical form — the grammar round-trip contract the server
+/// protocol and the centroid-cache key rely on. Case and whitespace never
+/// change the resolved spec, and param order canonicalizes.
+#[test]
+fn prop_decoder_specs_round_trip() {
+    use qckm::decoder::DecoderSpec;
+    property("decoder spec round-trip", 200, |g| {
+        let spec = match g.usize_in(0, 4) {
+            0 => DecoderSpec::parse("clompr").unwrap(),
+            1 => {
+                let r = g.usize_in(1, 9);
+                DecoderSpec::parse(&format!("clompr:restarts={r}")).unwrap()
+            }
+            2 => {
+                let r = g.usize_in(1, 9);
+                let p = g.usize_in(1, 4);
+                // Params in either order canonicalize to registry order.
+                let s = if g.bool() {
+                    format!("clompr:restarts={r},replacements={p}")
+                } else {
+                    format!("clompr:replacements={p},restarts={r}")
+                };
+                let spec = DecoderSpec::parse(&s).unwrap();
+                assert_eq!(
+                    spec.canonical(),
+                    format!("clompr:restarts={r},replacements={p}")
+                );
+                spec
+            }
+            3 => DecoderSpec::parse("hier").unwrap(),
+            _ => {
+                let r = g.usize_in(1, 9);
+                DecoderSpec::parse(&format!("hier:restarts={r}")).unwrap()
+            }
+        };
+        let reparsed = DecoderSpec::parse(spec.canonical()).unwrap();
+        assert_eq!(reparsed, spec);
+        assert_eq!(reparsed.canonical(), spec.canonical());
+        assert_eq!(reparsed.display_name(), spec.display_name());
+        let shouted = spec.canonical().to_ascii_uppercase();
+        assert_eq!(DecoderSpec::parse(&format!(" {shouted} ")).unwrap(), spec);
+    });
+}
+
+/// Random junk never parses silently: either it is one of the known
+/// decoder grammars or the error names the valid decoders (mirroring the
+/// method-registry contract).
+#[test]
+fn prop_junk_decoder_specs_error_with_registry_list() {
+    use qckm::decoder::DecoderSpec;
+    property("junk decoder specs", 200, |g| {
+        let len = g.usize_in(1, 12);
+        let junk: String = (0..len)
+            .map(|_| (b'a' + g.usize_in(0, 25) as u8) as char)
+            .collect();
+        if let Err(e) = DecoderSpec::parse(&junk) {
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("valid decoders") || msg.contains("parameter"),
+                "unhelpful error for '{junk}': {msg}"
+            );
+        }
+        // Junk params on a valid family are always rejected, actionably.
+        if junk != "restarts" && junk != "replacements" {
+            let e = DecoderSpec::parse(&format!("clompr:{junk}=1")).unwrap_err();
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("does not accept") || msg.contains("accepted"),
+                "unhelpful param error for '{junk}': {msg}"
+            );
+        }
+    });
+}

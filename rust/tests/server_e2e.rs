@@ -44,6 +44,22 @@ fn qckm_ok(args: &[&str]) -> String {
     String::from_utf8_lossy(&out.stderr).into_owned()
 }
 
+/// Like [`qckm_ok`] but returns captured *stdout* (for `ctl stats`
+/// counter assertions).
+fn qckm_stdout(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_qckm"))
+        .args(args)
+        .output()
+        .expect("spawn qckm");
+    assert!(
+        out.status.success(),
+        "qckm {:?} failed:\n{}",
+        args,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
 fn sketch_args<'a>(data: &'a str, out: &'a str, threads: &'a str) -> Vec<&'a str> {
     vec![
         "sketch", "--data", data, "--out", out, "--method", "qckm", "--m", "48", "--sigma",
@@ -101,6 +117,13 @@ impl Server {
             .unwrap_or_else(|| panic!("unexpected serve banner: {line:?}"))
             .to_string();
         Server { child, addr }
+    }
+
+    /// Hard-kill the server (the crash the retry e2e recovers from).
+    fn kill(&self) {
+        let mut child = self.child.lock().unwrap();
+        let _ = child.kill();
+        let _ = child.wait();
     }
 
     /// Wait for a clean exit, bounded by a deadline.
@@ -183,6 +206,26 @@ fn live_server_matches_offline_pipeline_bit_for_bit() {
     ]);
     assert!(err.contains("[cached]"), "second query should hit the cache: {err}");
     assert_eq!(load_csv(Path::new(&c_cached)).unwrap().as_slice(), live.as_slice());
+
+    // A different --decoder on the *unchanged* window must be a cache
+    // miss: the centroid cache keys on the decoder spec, so hier can
+    // never be served clompr's centroids.
+    let c_hier = dir.join("c_hier.csv").display().to_string();
+    let err = qckm_ok(&[
+        "query", "--addr", &addr, "--k", "2", "--lo", "-2", "--hi", "2", "--decoder", "hier",
+        "--out", &c_hier,
+    ]);
+    assert!(
+        !err.contains("[cached]"),
+        "a different decoder on an unchanged window must miss: {err}"
+    );
+    assert_eq!(load_csv(Path::new(&c_hier)).unwrap().shape(), (K, DIM));
+    // Proven by the stats counters: 1 hit (the repeat) vs 2 misses (the
+    // cold clompr decode + the hier decode), with both decoders active.
+    let stats = qckm_stdout(&["ctl", "--addr", &addr, "stats"]);
+    assert!(stats.contains("cache 1 hit / 2 miss"), "stats: {stats}");
+    assert!(stats.contains("decoder 'clompr': 2 queries"), "stats: {stats}");
+    assert!(stats.contains("decoder 'hier': 1 queries"), "stats: {stats}");
 
     // --- Snapshot: the live pool drains to a .qsk identical to the merged
     // offline shards, and decodes offline to the same centroids.
@@ -346,4 +389,121 @@ fn sketch_append_equals_offline_merge() {
     assert!(stderr.contains("conflicts"), "unexpected error: {stderr}");
     let (_, pool_after, _) = load_sketch_full(Path::new(&inc_qsk)).unwrap();
     assert_eq!(pool_after.sum(), pool_merged.sum(), "failed append must not modify the file");
+}
+
+/// The ROADMAP's server-hardening item: `qckm push --retry N` survives a
+/// server kill-and-restart with bounded exponential backoff. Shard A is
+/// pushed and snapshotted, the server is hard-killed, a retrying pusher
+/// for shard B starts while the port is dead, and a fresh server seeded
+/// from the snapshot comes back on the same port — the pusher reconnects
+/// and the final query equals the offline two-shard pipeline bit for bit.
+#[test]
+fn push_retries_across_server_restart() {
+    let dir = work_dir("retry");
+    let (shard_a, shard_b) = write_fixture(&dir);
+
+    // Offline reference: sketch × 2 → merge → decode.
+    let a_qsk = dir.join("a.qsk").display().to_string();
+    let b_qsk = dir.join("b.qsk").display().to_string();
+    let merged_qsk = dir.join("merged.qsk").display().to_string();
+    let c_offline = dir.join("c_offline.csv").display().to_string();
+    qckm_ok(&sketch_args(&shard_a, &a_qsk, "2"));
+    qckm_ok(&sketch_args(&shard_b, &b_qsk, "2"));
+    qckm_ok(&["merge", "--out", &merged_qsk, &a_qsk, &b_qsk]);
+    qckm_ok(&[
+        "decode", "--sketch", &merged_qsk, "--k", "2", "--lo", "-2", "--hi", "2", "--out",
+        &c_offline,
+    ]);
+
+    // First server incarnation: ingest shard A, snapshot it for the
+    // resurrection.
+    let server = Server::start(&[
+        "--dim", "5", "--m", "48", "--method", "qckm", "--sigma", "1.2", "--seed", "7",
+    ]);
+    let addr = server.addr.clone();
+    let port = addr.rsplit(':').next().unwrap().to_string();
+    qckm_ok(&["push", "--addr", &addr, "--data", &shard_a, "--shard", "a"]);
+    let seed_qsk = dir.join("seed.qsk").display().to_string();
+    qckm_ok(&["snapshot", "--addr", &addr, "--out", &seed_qsk]);
+
+    // Let the handlers observe the clients' EOFs (passive close on the
+    // server side keeps the port free of TIME_WAIT), then hard-kill.
+    std::thread::sleep(Duration::from_millis(500));
+    server.kill();
+
+    // Start the retrying pusher for shard B while the server is DOWN —
+    // its initial connect is refused and must back off and retry. Its
+    // stderr goes to a file the test polls, so the restart below happens
+    // only once backoff is *observed* (no fixed-sleep scheduling race).
+    let push_log = dir.join("push_b.stderr");
+    let mut pusher = Command::new(env!("CARGO_BIN_EXE_qckm"))
+        .args([
+            "push", "--addr", &addr, "--data", &shard_b, "--shard", "b", "--retry", "12",
+        ])
+        .stderr(Stdio::from(std::fs::File::create(&push_log).unwrap()))
+        .spawn()
+        .expect("spawn retrying pusher");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let log = std::fs::read_to_string(&push_log).unwrap_or_default();
+        if log.contains("retrying in") {
+            break;
+        }
+        assert!(
+            pusher.try_wait().unwrap().is_none(),
+            "pusher exited before ever backing off:\n{log}"
+        );
+        assert!(Instant::now() < deadline, "pusher never started retrying:\n{log}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // Second incarnation on the SAME port, seeded from the snapshot so
+    // shard A's history survives the crash.
+    let server2 = Server::start(&[
+        "--seed-sketch", &seed_qsk, "--seed-shard", "a", "--port", &port,
+    ]);
+    let status = pusher.wait().expect("wait for retrying pusher");
+    let push_err = std::fs::read_to_string(&push_log).unwrap_or_default();
+    assert!(status.success(), "retrying push failed:\n{push_err}");
+    assert!(
+        push_err.contains("retrying in"),
+        "the pusher never had to back off: {push_err}"
+    );
+
+    // The all-time window now pools both shards: the query equals the
+    // offline two-shard pipeline exactly.
+    let c_live = dir.join("c_retry.csv").display().to_string();
+    qckm_ok(&[
+        "query", "--addr", &server2.addr, "--k", "2", "--lo", "-2", "--hi", "2", "--out",
+        &c_live,
+    ]);
+    let offline = load_csv(Path::new(&c_offline)).unwrap();
+    let live = load_csv(Path::new(&c_live)).unwrap();
+    assert_eq!(offline.shape(), (K, DIM));
+    assert_eq!(
+        offline.as_slice(),
+        live.as_slice(),
+        "post-restart centroids must equal the offline pipeline exactly"
+    );
+
+    // A mismatched method declaration still fails fast under --retry
+    // (server-side refusals are not transport errors; no pointless
+    // backoff loop).
+    let out = Command::new(env!("CARGO_BIN_EXE_qckm"))
+        .args([
+            "push", "--addr", &server2.addr, "--data", &shard_a, "--shard", "rogue",
+            "--method", "ckm", "--retry", "5",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "mismatched --method must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("method mismatch"), "unexpected error: {stderr}");
+    assert!(
+        !stderr.contains("retrying in"),
+        "server-side refusals must not be retried: {stderr}"
+    );
+
+    qckm_ok(&["ctl", "--addr", &server2.addr, "shutdown"]);
+    server2.wait_exit();
 }

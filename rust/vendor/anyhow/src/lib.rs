@@ -9,16 +9,23 @@
 //! * [`anyhow!`] / [`bail!`] — format-style error construction / early return.
 //! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
 //!   `Option`.
+//! * [`Error::new`] / [`Error::downcast_ref`] — typed payloads that survive
+//!   `.context(..)` wrapping, so callers can classify errors (e.g. the
+//!   retry client separating server refusals from transport failures).
 //!
 //! Formatting follows the real crate's convention: `{}` prints the outermost
 //! message, `{:#}` prints the whole `outer: inner: …` chain.
 
+use std::any::Any;
 use std::fmt;
 
 /// An error with an optional chain of wrapped causes.
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    /// The typed error this link was built from (when constructed via
+    /// [`Error::new`] or the `?` conversion), for [`Error::downcast_ref`].
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
@@ -27,13 +34,38 @@ impl Error {
         Self {
             msg: message.to_string(),
             source: None,
+            payload: None,
         }
+    }
+
+    /// Build an error from a typed `std::error::Error`, preserving the
+    /// value for [`downcast_ref`](Self::downcast_ref) (like the real
+    /// crate's `Error::new`).
+    pub fn new<E>(error: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Self::from(error)
+    }
+
+    /// A reference to the first payload of type `E` in the context chain,
+    /// outermost first — survives any number of `.context(..)` wraps.
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            if let Some(r) = e.payload.as_ref().and_then(|p| p.downcast_ref::<E>()) {
+                return Some(r);
+            }
+            cur = e.source.as_deref();
+        }
+        None
     }
 
     fn wrap(msg: String, source: Error) -> Self {
         Self {
             msg,
             source: Some(Box::new(source)),
+            payload: None,
         }
     }
 
@@ -82,6 +114,9 @@ where
         for m in it {
             err = Error::wrap(m, err);
         }
+        // Keep the typed value on the outermost link so downcast_ref can
+        // recover it through later `.context(..)` wraps.
+        err.payload = Some(Box::new(e));
         err
     }
 }
@@ -192,6 +227,34 @@ mod tests {
             .with_context(|| format!("step {}", 2))
             .unwrap_err();
         assert_eq!(format!("{e:#}"), "step 2: missing file");
+    }
+
+    #[test]
+    fn downcast_ref_survives_context_wrapping() {
+        #[derive(Debug, PartialEq)]
+        struct Marker(u32);
+        impl fmt::Display for Marker {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "marker {}", self.0)
+            }
+        }
+        impl std::error::Error for Marker {}
+
+        let e = Error::new(Marker(7));
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(7)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+
+        // The payload survives context wrapping (chain walk).
+        let wrapped = Err::<(), _>(e).context("outer").unwrap_err();
+        assert_eq!(wrapped.downcast_ref::<Marker>(), Some(&Marker(7)));
+        assert_eq!(format!("{wrapped:#}"), "outer: marker 7");
+
+        // `?`-converted errors carry their payload too.
+        let via_from: Error = io_err().into();
+        assert!(via_from.downcast_ref::<std::io::Error>().is_some());
+
+        // Plain message errors have no payload.
+        assert!(anyhow!("no payload").downcast_ref::<Marker>().is_none());
     }
 
     #[test]
