@@ -27,6 +27,12 @@ pub fn run(args: Vec<String>) -> Result<()> {
     .opt("epochs", "NUM", Some("16"), "closed epochs retained for windowed queries")
     .opt("cache", "NUM", Some("32"), "cached decodes retained")
     .opt(
+        "max-shards",
+        "NUM",
+        Some("1024"),
+        "distinct shard labels accepted before new ones are refused",
+    )
+    .opt(
         "seed-sketch",
         "FILE",
         None,
@@ -94,6 +100,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
     let service_cfg = ServiceConfig {
         epoch_capacity: parsed.get_usize("epochs")?.unwrap().max(1),
         cache_capacity: parsed.get_usize("cache")?.unwrap().max(1),
+        max_shards: parsed.get_usize("max-shards")?.unwrap().max(1),
         threads: Parallelism::fixed(cfg.threads),
         decode: ClOmprParams {
             threads: cfg.threads,

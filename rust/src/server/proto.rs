@@ -48,6 +48,12 @@ pub const MAX_SHARD_BYTES: usize = 256;
 pub const MAX_METHOD_BYTES: usize = 64;
 /// Ceiling on decoder-spec bytes carried in query frames.
 pub const MAX_DECODER_BYTES: usize = 64;
+/// Ceiling on an error message's bytes, enforced on *both* sides of the
+/// wire: `encode_response` truncates (on a char boundary, with a marker)
+/// and `decode_response` refuses anything longer. Without the encode-side
+/// truncation a long server error would decode client-side as
+/// "implausible string field" instead of the actual message.
+pub const MAX_ERROR_BYTES: usize = 1 << 16;
 
 const TAG_PUSH: u8 = 1;
 const TAG_QUERY: u8 = 2;
@@ -300,6 +306,13 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
                 bail!("push: implausible dimension {dim}");
             }
             let len = r.u64()? as usize;
+            if len == 0 {
+                // A zero-row push would create an empty shard accumulator
+                // and a zero-row provenance record for nothing — refuse it
+                // at the protocol boundary (the client has no reason to
+                // send one, and a retrying client must not retry it).
+                bail!("push: empty batch (zero rows)");
+            }
             if len % dim as usize != 0 {
                 bail!("push: {len} values is not a whole number of {dim}-dim rows");
             }
@@ -356,7 +369,7 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
     match resp {
         Response::Error(msg) => {
             b.push(STATUS_ERR);
-            put_str(&mut b, msg);
+            put_str(&mut b, &truncate_error(msg));
         }
         Response::PushAck {
             shard_rows,
@@ -432,7 +445,7 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
     }
     let status = r.u8()?;
     if status == STATUS_ERR {
-        let msg = r.str(1 << 16)?;
+        let msg = r.str(MAX_ERROR_BYTES)?;
         r.finish()?;
         return Ok(Response::Error(msg));
     }
@@ -521,6 +534,22 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
 }
 
 // --------------------------------------------------------------- primitives
+
+/// Clamp an error message to [`MAX_ERROR_BYTES`] so the encode side never
+/// emits a string the decode side refuses. Truncation lands on a UTF-8
+/// char boundary and appends a marker so the client can tell the message
+/// was cut rather than malformed.
+fn truncate_error(msg: &str) -> std::borrow::Cow<'_, str> {
+    const MARKER: &str = "… [truncated]";
+    if msg.len() <= MAX_ERROR_BYTES {
+        return std::borrow::Cow::Borrowed(msg);
+    }
+    let mut cut = MAX_ERROR_BYTES - MARKER.len();
+    while !msg.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    std::borrow::Cow::Owned(format!("{}{MARKER}", &msg[..cut]))
+}
 
 fn put_str(b: &mut Vec<u8>, s: &str) {
     b.extend_from_slice(&(s.len() as u32).to_le_bytes());

@@ -46,7 +46,7 @@ use crate::sketch::{PooledSketch, SketchOperator};
 use crate::stream::{pool_fingerprint, write_sketch_to, ShardRecord, SketchMeta};
 use anyhow::{bail, Result};
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use super::proto::{CentroidReport, QuerySpec, StatsReport, MAX_SHARD_BYTES};
 
@@ -59,6 +59,13 @@ pub struct ServiceConfig {
     pub cache_capacity: usize,
     /// Threads for the per-push parallel encode (0 = all cores).
     pub threads: Parallelism,
+    /// Distinct shard labels accepted before new ones are refused. Labels
+    /// are client-chosen, so without a cap an unauthenticated pusher
+    /// spamming fresh labels grows the accumulator maps without bound;
+    /// with it every piece of server state is capacity-bounded. The
+    /// refusal is an application error, which [`super::RetryClient`] does
+    /// not retry.
+    pub max_shards: usize,
     /// Base decoder tuning for query answering (including its thread
     /// knob). The algorithm itself comes from each query's declared
     /// [`crate::decoder::DecoderSpec`] (default `clompr`), whose explicit
@@ -72,6 +79,7 @@ impl Default for ServiceConfig {
             epoch_capacity: 16,
             cache_capacity: 32,
             threads: Parallelism::serial(),
+            max_shards: 1024,
             decode: ClOmprParams::default(),
         }
     }
@@ -111,8 +119,10 @@ struct Inner {
     /// Queries answered per canonical decoder spec (hits and misses) —
     /// the stats view of which decode algorithms this server is running.
     /// Bounded at [`MAX_DECODER_STATS`] distinct specs (clients choose the
-    /// strings, and every other piece of server state is capacity-bounded);
-    /// overflow tallies under [`DECODER_STATS_OVERFLOW`].
+    /// strings, and every other piece of server state is capacity-bounded:
+    /// shards by [`ServiceConfig::max_shards`], epochs by the ring, the
+    /// cache by its capacity); overflow tallies under
+    /// [`DECODER_STATS_OVERFLOW`].
     decoder_uses: BTreeMap<String, u64>,
 }
 
@@ -162,6 +172,34 @@ impl SketchService {
         }
     }
 
+    /// Acquire the state lock, recovering from poisoning. A panic while
+    /// the lock is held poisons the mutex, and propagating that poison
+    /// would turn one bad request into a permanent denial of service:
+    /// every later connection thread's `.unwrap()` panics too. Recovery is
+    /// sound here because every lock-held mutation is merge-atomic — the
+    /// only compound write is [`PooledSketch::merge`], which validates
+    /// slot lengths *before* touching the accumulator, so a panic under
+    /// the lock leaves `Inner` in the last consistent state rather than
+    /// half-written.
+    fn locked(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Poison the state mutex by panicking while holding it — simulates a
+    /// request thread dying mid-critical-section so tests can prove the
+    /// service keeps answering afterwards.
+    #[cfg(test)]
+    pub(crate) fn poison_for_test(&self) {
+        let _ = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _guard = self.inner.lock().unwrap();
+                panic!("injected panic while holding the state lock");
+            })
+            .join()
+        });
+        assert!(self.inner.is_poisoned(), "test hook failed to poison the lock");
+    }
+
     /// The operator this service sketches with.
     pub fn operator(&self) -> &SketchOperator {
         &self.op
@@ -204,7 +242,14 @@ impl SketchService {
                 self.op.sketch_len()
             );
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.locked();
+        if !inner.alltime.contains_key(label) && inner.alltime.len() >= self.cfg.max_shards {
+            bail!(
+                "shard cap reached: {} labels already tracked (max_shards {})",
+                inner.alltime.len(),
+                self.cfg.max_shards
+            );
+        }
         inner
             .alltime
             .entry(label.to_string())
@@ -232,7 +277,19 @@ impl SketchService {
         if batch.rows() > 0 {
             self.op.sketch_into_par(batch, &mut partial, &self.cfg.threads);
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.locked();
+        if !inner.alltime.contains_key(shard) && inner.alltime.len() >= self.cfg.max_shards {
+            // `alltime` holds every label ever accepted (it never evicts),
+            // so it is the superset to cap on. Known labels always pass —
+            // only *new* ones are refused, and the refusal travels as an
+            // application error the retrying client fails fast on.
+            bail!(
+                "shard cap reached: {} labels already tracked (max_shards {}); \
+                 push to an existing shard or raise --max-shards",
+                inner.alltime.len(),
+                self.cfg.max_shards
+            );
+        }
         let len = self.op.sketch_len();
         inner
             .current
@@ -253,7 +310,7 @@ impl SketchService {
     /// capacity) and open the next. Returns the new open epoch's index and
     /// the rows that were in the closed one.
     pub fn roll_epoch(&self) -> (u64, u64) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.locked();
         let shards = std::mem::take(&mut inner.current);
         let rows_closed = shards.values().map(|p| p.count()).sum();
         let index = inner.epoch_index;
@@ -269,7 +326,7 @@ impl SketchService {
     /// chronologically, shards in key order within each epoch (window 0:
     /// the all-time shard accumulators in key order).
     pub fn merge_window(&self, window: u32) -> WindowPool {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.locked();
         let mut pool = PooledSketch::new(self.op.sketch_len());
         let mut provenance = Vec::new();
         if window == 0 {
@@ -345,7 +402,7 @@ impl SketchService {
         let key = cache_key(&window.pool, spec, replicates, seed, decoder.canonical());
 
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.locked();
             let stats_key = if inner.decoder_uses.contains_key(decoder.canonical())
                 || inner.decoder_uses.len() < MAX_DECODER_STATS
             {
@@ -390,7 +447,7 @@ impl SketchService {
             epochs: window.epochs,
             cached: false,
         };
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.locked();
         if !inner.cache.iter().any(|(k, _)| *k == key) {
             inner.cache.push_back((key, report.clone()));
             while inner.cache.len() > self.cfg.cache_capacity {
@@ -405,6 +462,14 @@ impl SketchService {
     /// `qckm merge` / `qckm decode` stages.
     pub fn snapshot(&self, window: u32) -> Result<Vec<u8>> {
         let win = self.merge_window(window);
+        if win.pool.count() == 0 {
+            // An empty pool has no mean sketch; a count=0 `.qsk` file is
+            // undecodable and `write_sketch_to` refuses to produce one.
+            // Surface the real condition instead.
+            bail!(
+                "snapshot: window {window} pools zero rows (nothing pushed yet?)"
+            );
+        }
         let mut bytes = Vec::new();
         write_sketch_to(&mut bytes, &self.meta, &win.pool, &win.provenance)?;
         Ok(bytes)
@@ -412,7 +477,7 @@ impl SketchService {
 
     /// Current counters.
     pub fn stats(&self) -> StatsReport {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.locked();
         StatsReport {
             method: self.meta.method.clone(),
             epoch: inner.epoch_index,

@@ -178,6 +178,45 @@ fn proto_rejects_malformed_payloads() {
     assert!(proto::read_frame(&mut &[1u8, 0][..]).is_err());
 }
 
+/// Regression: `decode_request` used to accept `len == 0` pushes, which
+/// created empty shard accumulators and zero-row provenance records for
+/// nothing. Empty batches are refused at the protocol boundary.
+#[test]
+fn proto_rejects_zero_row_pushes() {
+    let bytes = proto::encode_request(&Request::Push {
+        shard: "s".into(),
+        method: String::new(),
+        dim: 3,
+        data: vec![],
+    });
+    let err = format!("{:#}", proto::decode_request(&bytes).unwrap_err());
+    assert!(err.contains("empty batch"), "{err}");
+}
+
+/// Regression: `encode_response` used to write error strings unbounded
+/// while `decode_response` caps them at [`proto::MAX_ERROR_BYTES`], so a
+/// long server error surfaced client-side as "implausible string field"
+/// instead of the message. The encoder now truncates on a char boundary
+/// with a marker.
+#[test]
+fn error_responses_truncate_to_the_decode_cap() {
+    // Way past the cap, with multi-byte chars ('é' is 2 bytes in UTF-8) so
+    // a byte-offset cut would land mid-char and panic the slicer.
+    let long = "é".repeat(proto::MAX_ERROR_BYTES);
+    let bytes = proto::encode_response(&Response::Error(long));
+    let Response::Error(msg) = proto::decode_response(&bytes).unwrap() else {
+        panic!("expected an error response");
+    };
+    assert!(msg.len() <= proto::MAX_ERROR_BYTES);
+    assert!(msg.ends_with("[truncated]"), "missing truncation marker");
+    assert!(msg.starts_with("éé"), "prefix must survive");
+
+    // At or under the cap nothing changes.
+    let short = "x".repeat(proto::MAX_ERROR_BYTES);
+    let bytes = proto::encode_response(&Response::Error(short.clone()));
+    assert_eq!(proto::decode_response(&bytes).unwrap(), Response::Error(short));
+}
+
 // ------------------------------------------------------------------- state
 
 #[test]
@@ -376,6 +415,106 @@ fn query_validates_inputs_and_empty_windows() {
     svc.roll_epoch();
     assert!(svc.query(&spec(2, 1)).is_err(), "open epoch is empty");
     assert!(svc.query(&spec(2, 0)).is_ok());
+}
+
+/// Regression: the shard accumulator maps used to grow without bound under
+/// client-chosen labels — an unauthenticated pusher spamming fresh labels
+/// could OOM the server. New labels past `max_shards` are refused;
+/// existing shards keep accepting pushes.
+#[test]
+fn shard_cap_refuses_new_labels_but_keeps_serving() {
+    let svc = service(ServiceConfig {
+        max_shards: 2,
+        ..ServiceConfig::default()
+    });
+    svc.ingest("a", &random_mat(5, DIM, 1)).unwrap();
+    svc.ingest("b", &random_mat(5, DIM, 2)).unwrap();
+    let err = format!("{:#}", svc.ingest("c", &random_mat(5, DIM, 3)).unwrap_err());
+    assert!(err.contains("shard cap"), "{err}");
+    // Known labels are unaffected, and the refusal left no trace of "c".
+    svc.ingest("a", &random_mat(5, DIM, 4)).unwrap();
+    assert_eq!(svc.stats().shards.len(), 2);
+    assert_eq!(svc.merge_window(0).pool.count(), 15);
+    // Seeding is the other label-creating path; it honors the same cap.
+    let err = format!(
+        "{:#}",
+        svc.seed_with("d", PooledSketch::new(svc.operator().sketch_len())).unwrap_err()
+    );
+    assert!(err.contains("shard cap"), "{err}");
+    svc.seed_with("b", PooledSketch::new(svc.operator().sketch_len())).unwrap();
+}
+
+/// The cap refusal is an application error ([`super::ServerError`]), so
+/// the reconnecting push client fails fast instead of uselessly retrying a
+/// request the server has already processed and rejected.
+#[test]
+fn shard_cap_refusal_is_not_retried() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let svc = Arc::new(service(ServiceConfig {
+        max_shards: 1,
+        ..ServiceConfig::default()
+    }));
+    let server = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || super::serve(listener, svc).unwrap())
+    };
+
+    let policy = super::RetryPolicy {
+        attempts: 3,
+        base: std::time::Duration::from_millis(1),
+        cap: std::time::Duration::from_millis(2),
+    };
+    let mut rc = super::RetryClient::connect(&addr, "", policy).unwrap();
+    rc.push("only", &random_mat(4, DIM, 1)).unwrap();
+    let err = format!("{:#}", rc.push("extra", &random_mat(4, DIM, 2)).unwrap_err());
+    assert!(err.contains("shard cap"), "{err}");
+    // "after 1 attempt(s)" is the fail-fast proof: a transport error under
+    // this policy would have burned all 4 attempts.
+    assert!(err.contains("after 1 attempt"), "{err}");
+    // The server is still up and still accepts the known shard.
+    rc.push("only", &random_mat(4, DIM, 3)).unwrap();
+
+    super::Client::connect(&addr).unwrap().shutdown().unwrap();
+    server.join().unwrap();
+}
+
+/// Regression: every state method used `self.inner.lock().unwrap()`, so
+/// one panic under the lock (a thread dying mid-request) poisoned the
+/// mutex and permanently panicked every later connection — a one-shot
+/// denial of service. The service now recovers the guard (sound because
+/// lock-held mutations are merge-atomic: `PooledSketch::merge` validates
+/// before it writes).
+#[test]
+fn poisoned_lock_recovers_and_the_service_keeps_answering() {
+    let svc = service(ServiceConfig::default());
+    svc.ingest("s", &random_mat(50, DIM, 1)).unwrap();
+    let before = svc.merge_window(0).pool.sum().to_vec();
+
+    svc.poison_for_test();
+
+    // Reads, writes, and decodes all still work, on intact state.
+    assert_eq!(svc.merge_window(0).pool.sum(), &before[..]);
+    assert_eq!(svc.stats().rows_total, 50);
+    svc.ingest("s", &random_mat(10, DIM, 2)).unwrap();
+    svc.roll_epoch();
+    assert!(svc.query(&spec(2, 0)).is_ok());
+    assert_eq!(svc.stats().rows_total, 60);
+}
+
+/// Regression: `snapshot` of an empty window used to serialize a count=0
+/// `.qsk`, which decoded downstream into NaN centroids. It now refuses,
+/// like `query` always has.
+#[test]
+fn snapshot_refuses_empty_windows() {
+    let svc = service(ServiceConfig::default());
+    let err = format!("{:#}", svc.snapshot(0).unwrap_err());
+    assert!(err.contains("zero rows"), "{err}");
+    svc.ingest("s", &random_mat(20, DIM, 1)).unwrap();
+    svc.roll_epoch();
+    // The open epoch is empty again; window 1 covers only it.
+    assert!(svc.snapshot(1).is_err());
+    assert!(svc.snapshot(0).is_ok());
 }
 
 #[test]

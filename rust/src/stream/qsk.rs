@@ -338,6 +338,13 @@ pub fn write_sketch_to(
             );
         }
     }
+    if pool.count() == 0 {
+        // A count=0 sketch has no mean and therefore cannot be decoded;
+        // refusing to write one here keeps every `.qsk` on disk (and every
+        // server snapshot frame) decodable by construction. The reader
+        // enforces the same bound for files from other producers.
+        bail!("refusing to write an empty sketch (zero pooled rows)");
+    }
     w.write_all(&QSK_MAGIC)?;
     w.write_all(&wire_version(&meta.method).to_le_bytes())?;
     write_str(w, &meta.method)?;
@@ -426,6 +433,12 @@ pub fn read_sketch_from(
     }
     if d == 0 || d > (1 << 24) {
         bail!("{src}: implausible data dimension d={d}");
+    }
+    if count == 0 {
+        // The mean sketch z = sum/count is undefined at count=0 — such a
+        // file would decode to NaN centroids (or panic) downstream, so
+        // refuse it at the same boundary that checks m and d.
+        bail!("{src}: empty sketch (count=0) — nothing to decode");
     }
     let mut provenance = Vec::new();
     if version >= QSK_VERSION_V2 {

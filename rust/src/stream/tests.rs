@@ -261,6 +261,30 @@ fn qsk_load_rejects_bad_magic_version_and_truncation() {
     assert!(err.contains("trailing"), "{err}");
 }
 
+/// Regression: `read_sketch_from` used to accept `count = 0` files, whose
+/// undefined mean sketch decoded to NaN centroids downstream. Empty
+/// sketches are now refused at both the read and the write boundary.
+#[test]
+fn qsk_refuses_empty_sketches() {
+    let dir = temp_dir("qsk_empty");
+    let (meta, _pool, op) = sample_sketch(45);
+
+    // The writer refuses to produce a count=0 file…
+    let empty = PooledSketch::new(op.sketch_len());
+    let err = format!(
+        "{:#}",
+        save_sketch(&dir.join("empty.qsk"), &meta, &empty).unwrap_err()
+    );
+    assert!(err.contains("empty sketch"), "{err}");
+
+    // …and the reader refuses one from another producer (craft a v1 file
+    // by hand — v1 has no checksum, so only the count guard can catch it).
+    let path = dir.join("crafted_empty.qsk");
+    std::fs::write(&path, craft_v1_bytes(&meta, &empty)).unwrap();
+    let err = format!("{:#}", load_sketch(&path).unwrap_err());
+    assert!(err.contains("count=0"), "{err}");
+}
+
 #[test]
 fn qsk_refuses_merging_mismatched_operators() {
     let (meta_a, _pool_a, _) = sample_sketch(15);

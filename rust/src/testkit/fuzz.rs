@@ -1,0 +1,213 @@
+//! Deterministic structured-fuzz mutation engine for the untrusted-input
+//! decoders (`rust/tests/fuzz_corpus.rs` is the driver; `INVARIANTS.md`
+//! catalogs what it locks).
+//!
+//! Not coverage-guided fuzzing — a seeded corpus mutator: start from
+//! *valid* encodings (protocol frames, `.qsk` streams, spec strings) and
+//! apply the corruption classes a hostile or broken peer actually
+//! produces: bit flips, byte stomps, truncations, garbage extensions,
+//! length-field inflation, header/tag scrambling, zero runs, and splices
+//! of two valid inputs. Everything derives from one [`crate::rng::Rng`]
+//! seed, so a CI failure reproduces exactly with `QCKM_FUZZ_SEED`.
+
+use crate::rng::Rng;
+
+/// Interesting little-endian values for length-field inflation: cap edges,
+/// off-by-ones, and all-ones, for both 32- and 64-bit fields. These are
+/// the values bounds checks get wrong.
+const EVIL_LENGTHS: [u64; 10] = [
+    0,
+    1,
+    u32::MAX as u64,
+    u32::MAX as u64 - 1,
+    u64::MAX,
+    u64::MAX - 1,
+    1 << 28,       // MAX_FRAME_BYTES
+    (1 << 28) + 1, // just over it
+    (1 << 24) + 1, // just over the .qsk m/d plausibility bound
+    1 << 31,
+];
+
+/// Seeded mutation engine. One instance drives one fuzz target; every draw
+/// comes from the seed handed to [`Mutator::new`].
+pub struct Mutator {
+    rng: Rng,
+}
+
+impl Mutator {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed) }
+    }
+
+    /// Produce one mutated input: clone a random corpus entry and apply
+    /// 1–4 random corruption operators to it.
+    pub fn mutate(&mut self, corpus: &[Vec<u8>]) -> Vec<u8> {
+        assert!(!corpus.is_empty(), "mutate needs a non-empty corpus");
+        let pick = self.rng.next_below(corpus.len() as u64) as usize;
+        let mut buf = corpus[pick].clone();
+        let ops = 1 + self.rng.next_below(4);
+        for _ in 0..ops {
+            self.apply_one(&mut buf, corpus);
+        }
+        buf
+    }
+
+    fn apply_one(&mut self, buf: &mut Vec<u8>, corpus: &[Vec<u8>]) {
+        match self.rng.next_below(8) {
+            // Bit flip: the single-event corruption.
+            0 => {
+                if !buf.is_empty() {
+                    let at = self.rng.next_below(buf.len() as u64) as usize;
+                    buf[at] ^= 1 << self.rng.next_below(8);
+                }
+            }
+            // Byte stomp.
+            1 => {
+                if !buf.is_empty() {
+                    let at = self.rng.next_below(buf.len() as u64) as usize;
+                    buf[at] = self.rng.next_u64() as u8;
+                }
+            }
+            // Truncation: a peer dying mid-write.
+            2 => {
+                if !buf.is_empty() {
+                    let keep = self.rng.next_below(buf.len() as u64) as usize;
+                    buf.truncate(keep);
+                }
+            }
+            // Garbage extension: trailing bytes after a valid message.
+            3 => {
+                let extra = 1 + self.rng.next_below(64) as usize;
+                for _ in 0..extra {
+                    buf.push(self.rng.next_u64() as u8);
+                }
+            }
+            // Length-field inflation: stomp an EVIL_LENGTHS value (LE,
+            // 4 or 8 bytes wide) at a random offset — this is the op that
+            // turns "reads a length" into "allocates 16 EiB" in decoders
+            // that don't bounds-check before allocating.
+            4 => {
+                if !buf.is_empty() {
+                    let val = EVIL_LENGTHS[self.rng.next_below(EVIL_LENGTHS.len() as u64) as usize];
+                    let width = if self.rng.next_below(2) == 0 { 4 } else { 8 };
+                    let at = self.rng.next_below(buf.len() as u64) as usize;
+                    for (i, b) in val.to_le_bytes().iter().take(width).enumerate() {
+                        if at + i < buf.len() {
+                            buf[at + i] = *b;
+                        }
+                    }
+                }
+            }
+            // Zero run: a hole from a half-initialized buffer.
+            5 => {
+                if !buf.is_empty() {
+                    let at = self.rng.next_below(buf.len() as u64) as usize;
+                    let run = (1 + self.rng.next_below(16) as usize).min(buf.len() - at);
+                    buf[at..at + run].fill(0);
+                }
+            }
+            // Head scramble: magic / version / tag bytes live in the
+            // first few bytes of every format here.
+            6 => {
+                let head = buf.len().min(8);
+                if head > 0 {
+                    let at = self.rng.next_below(head as u64) as usize;
+                    buf[at] = self.rng.next_u64() as u8;
+                }
+            }
+            // Splice: the head of one valid input onto the tail of
+            // another — internally consistent pieces, inconsistent whole.
+            _ => {
+                let other = &corpus[self.rng.next_below(corpus.len() as u64) as usize];
+                if !buf.is_empty() && !other.is_empty() {
+                    let cut_a = self.rng.next_below(buf.len() as u64 + 1) as usize;
+                    let cut_b = self.rng.next_below(other.len() as u64) as usize;
+                    buf.truncate(cut_a);
+                    buf.extend_from_slice(&other[cut_b..]);
+                }
+            }
+        }
+    }
+
+    /// A junk string for grammar fuzzing (spec parsers): ASCII soup biased
+    /// toward the grammar's own separators, with occasional multi-byte
+    /// UTF-8 and long repeats. Always valid UTF-8, at most `max_chars`
+    /// chars.
+    pub fn junk_string(&mut self, max_chars: usize) -> String {
+        const FLAVOR: &[char] = &[
+            ':', ',', '=', ':', ',', '=', // double weight on separators
+            'a', 'z', 'A', 'Z', '0', '9', '_', '-', '.', '+', ' ', '\t',
+            'é', 'λ', '💥',
+        ];
+        let len = self.rng.next_below(max_chars as u64 + 1) as usize;
+        let mut s = String::new();
+        for _ in 0..len {
+            if self.rng.next_below(16) == 0 {
+                // A run of one char — tickles any O(n²) or unbounded
+                // accumulation in the parser.
+                let c = FLAVOR[self.rng.next_below(FLAVOR.len() as u64) as usize];
+                let reps = self.rng.next_below(32) as usize;
+                s.extend(std::iter::repeat(c).take(reps));
+            } else {
+                s.push(FLAVOR[self.rng.next_below(FLAVOR.len() as u64) as usize]);
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Vec<Vec<u8>> {
+        vec![vec![1, 2, 3, 4, 5, 6, 7, 8], vec![9; 32], vec![0xAB]]
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_same_mutations() {
+        let c = corpus();
+        let a: Vec<Vec<u8>> = {
+            let mut m = Mutator::new(42);
+            (0..50).map(|_| m.mutate(&c)).collect()
+        };
+        let b: Vec<Vec<u8>> = {
+            let mut m = Mutator::new(42);
+            (0..50).map(|_| m.mutate(&c)).collect()
+        };
+        assert_eq!(a, b, "mutations must be a pure function of the seed");
+        let mut other = Mutator::new(43);
+        let differs = (0..50).any(|i| other.mutate(&c) != a[i]);
+        assert!(differs, "different seeds should mutate differently");
+    }
+
+    #[test]
+    fn mutations_actually_mutate() {
+        let c = corpus();
+        let mut m = Mutator::new(7);
+        let changed = (0..100).filter(|_| !c.contains(&m.mutate(&c))).count();
+        assert!(changed > 50, "only {changed}/100 mutants differed from the corpus");
+    }
+
+    #[test]
+    fn mutation_size_stays_bounded() {
+        let c = corpus();
+        let mut m = Mutator::new(11);
+        for _ in 0..1000 {
+            let out = m.mutate(&c);
+            // Worst case: 4 ops, each a splice (≤ +32) or extension (≤ +64).
+            assert!(out.len() <= 32 + 4 * 64, "mutant grew to {} bytes", out.len());
+        }
+    }
+
+    #[test]
+    fn junk_strings_are_bounded_utf8() {
+        let mut m = Mutator::new(3);
+        for _ in 0..500 {
+            let s = m.junk_string(40);
+            // chars ≤ 40 plus runs of ≤ 31 extra; bytes ≤ 4× chars.
+            assert!(s.chars().count() <= 40 * 32);
+            assert!(std::str::from_utf8(s.as_bytes()).is_ok());
+        }
+    }
+}

@@ -14,6 +14,8 @@
 //! });
 //! ```
 
+pub mod fuzz;
+
 use crate::rng::Rng;
 
 /// Per-case random input generator.

@@ -9,7 +9,9 @@ use qckm::metrics::adjusted_rand_index;
 use qckm::optim::nnls;
 use qckm::parallel::Parallelism;
 use qckm::rng::Rng;
+use qckm::server::proto::{self, CentroidReport, QuerySpec, Request, Response, StatsReport};
 use qckm::sketch::{BitAggregator, PooledSketch, SketchOperator};
+use qckm::stream::{pool_fingerprint, read_sketch_from, write_sketch_to, ShardRecord, SketchMeta};
 use qckm::testkit::{property, Gen};
 use std::sync::Arc;
 
@@ -333,6 +335,204 @@ fn prop_bit_aggregator_merge_is_order_and_grouping_invariant() {
         assert_eq!(forward.mean(), reverse.mean());
         assert_eq!(forward.to_sum(), reverse.to_sum());
         assert_eq!(forward.to_sum(), grouped.to_sum());
+    });
+}
+
+// ---------------------------------------------------------------- protocol
+
+fn ascii_label(g: &mut Gen, lo: usize, hi: usize) -> String {
+    let len = g.usize_in(lo, hi);
+    (0..len)
+        .map(|_| (b'a' + g.usize_in(0, 25) as u8) as char)
+        .collect()
+}
+
+fn random_query_spec(g: &mut Gen) -> QuerySpec {
+    QuerySpec {
+        k: g.usize_in(1, 64) as u32,
+        window: g.usize_in(0, 20) as u32,
+        replicates: g.usize_in(1, 5) as u32,
+        seed: g.bool().then(|| g.rng().next_u64()),
+        lo: g.f64_in(-10.0, 0.0),
+        hi: g.f64_in(0.0, 10.0),
+        decoder: if g.bool() { String::new() } else { "clompr".into() },
+    }
+}
+
+fn random_request(g: &mut Gen) -> Request {
+    match g.usize_in(0, 5) {
+        0 => {
+            let dim = g.usize_in(1, 6);
+            let rows = g.usize_in(1, 20);
+            Request::Push {
+                shard: ascii_label(g, 1, 24),
+                method: if g.bool() { String::new() } else { "qckm:bits=2".into() },
+                dim: dim as u32,
+                data: g.vec_gaussian(rows * dim),
+            }
+        }
+        1 => Request::Query {
+            spec: random_query_spec(g),
+            method: ascii_label(g, 0, 8),
+        },
+        2 => Request::Snapshot {
+            window: g.usize_in(0, 9) as u32,
+            method: ascii_label(g, 0, 8),
+        },
+        3 => Request::Roll,
+        4 => Request::Stats,
+        _ => Request::Shutdown,
+    }
+}
+
+fn random_response(g: &mut Gen) -> Response {
+    match g.usize_in(0, 6) {
+        0 => Response::Error(ascii_label(g, 1, 200)),
+        1 => Response::PushAck {
+            shard_rows: g.rng().next_u64(),
+            total_rows: g.rng().next_u64(),
+        },
+        2 => {
+            let k = g.usize_in(1, 8);
+            let dim = g.usize_in(1, 6);
+            Response::Centroids(CentroidReport {
+                centroids: g.vec_gaussian(k * dim),
+                k: k as u32,
+                dim: dim as u32,
+                weights: g.vec_f64(k, 0.0, 1.0),
+                objective: g.gaussian(),
+                rows: g.rng().next_u64(),
+                epochs: g.usize_in(1, 99) as u32,
+                cached: g.bool(),
+            })
+        }
+        3 => {
+            let len = g.usize_in(0, 512);
+            Response::Snapshot((0..len).map(|_| g.rng().next_u64() as u8).collect())
+        }
+        4 => Response::RollAck {
+            epoch: g.rng().next_u64(),
+            rows_closed: g.rng().next_u64(),
+        },
+        5 => {
+            let shards = (0..g.usize_in(0, 5))
+                .map(|_| (ascii_label(g, 1, 16), g.rng().next_u64()))
+                .collect();
+            let decoders = (0..g.usize_in(0, 3))
+                .map(|_| (ascii_label(g, 1, 16), g.rng().next_u64()))
+                .collect();
+            Response::Stats(StatsReport {
+                method: ascii_label(g, 1, 16),
+                epoch: g.rng().next_u64(),
+                rows_total: g.rng().next_u64(),
+                epochs_held: g.usize_in(0, 64) as u32,
+                cache_hits: g.rng().next_u64(),
+                cache_misses: g.rng().next_u64(),
+                shards,
+                decoders,
+            })
+        }
+        _ => Response::ShutdownAck,
+    }
+}
+
+/// Every request variant survives encode → frame → read-frame → decode
+/// unchanged — the client half of the wire contract (INVARIANTS.md:
+/// "Frame round-trip").
+#[test]
+fn prop_request_frames_round_trip() {
+    property("request frame round-trip", 300, |g| {
+        let req = random_request(g);
+        // Payload round-trip…
+        let payload = proto::encode_request(&req);
+        assert_eq!(proto::decode_request(&payload).unwrap(), req);
+        // …and through the length-prefixed framing layer.
+        let mut wire = Vec::new();
+        proto::write_frame(&mut wire, &payload).unwrap();
+        let read = proto::read_frame(&mut &wire[..]).unwrap().expect("one frame");
+        assert_eq!(read, payload);
+    });
+}
+
+/// Every response variant survives encode → frame → read-frame → decode
+/// unchanged — the server half of the wire contract.
+#[test]
+fn prop_response_frames_round_trip() {
+    property("response frame round-trip", 300, |g| {
+        let resp = random_response(g);
+        let payload = proto::encode_response(&resp);
+        assert_eq!(proto::decode_response(&payload).unwrap(), resp);
+        let mut wire = Vec::new();
+        proto::write_frame(&mut wire, &payload).unwrap();
+        let read = proto::read_frame(&mut &wire[..]).unwrap().expect("one frame");
+        assert_eq!(read, payload);
+    });
+}
+
+// --------------------------------------------------------------------- .qsk
+
+/// A `.qsk` serialization of any pooled sketch — header, provenance
+/// records, payload, checksum — reads back to the identical meta, pool,
+/// and provenance (INVARIANTS.md: ".qsk round-trip").
+#[test]
+fn prop_qsk_wire_round_trips_with_provenance() {
+    property("qsk wire round-trip with provenance", 30, |g| {
+        let op = random_operator(g, true);
+        let rows = g.usize_in(1, 80);
+        let x = Mat::from_fn(rows, op.dim(), |_, _| g.gaussian());
+        let mut pool = PooledSketch::new(op.sketch_len());
+        op.sketch_into(&x, &mut pool);
+        let spec = qckm::method::MethodSpec::parse("qckm").unwrap();
+        let meta = SketchMeta::for_operator(&op, &spec, g.seed);
+        let prov: Vec<ShardRecord> = (0..g.usize_in(0, 4))
+            .map(|i| ShardRecord {
+                label: format!("e{i}/{}", ascii_label(g, 1, 12)),
+                rows: g.rng().next_u64() >> 40,
+            })
+            .collect();
+
+        let mut bytes = Vec::new();
+        write_sketch_to(&mut bytes, &meta, &pool, &prov).unwrap();
+        let mut cursor = &bytes[..];
+        let (meta2, pool2, prov2) = read_sketch_from(&mut cursor, "prop").unwrap();
+        assert!(cursor.is_empty(), "must consume exactly the sketch bytes");
+        assert_eq!(meta2, meta);
+        assert_eq!(pool2.count(), pool.count());
+        assert_eq!(pool2.sum(), pool.sum());
+        assert_eq!(prov2, prov);
+    });
+}
+
+/// The pool fingerprint (the heart of the centroid-cache key and the
+/// `.qsk` checksum) detects every single-bit change to the pooled sums
+/// and every count change (INVARIANTS.md: "Fingerprint soundness").
+#[test]
+fn prop_pool_fingerprint_detects_any_bit_change() {
+    property("pool fingerprint sensitivity", 60, |g| {
+        let op = random_operator(g, true);
+        let rows = g.usize_in(1, 60);
+        let x = Mat::from_fn(rows, op.dim(), |_, _| g.gaussian());
+        let mut pool = PooledSketch::new(op.sketch_len());
+        op.sketch_into(&x, &mut pool);
+        let base = pool_fingerprint(&pool);
+        // Deterministic: recomputing never drifts.
+        assert_eq!(pool_fingerprint(&pool), base);
+
+        // Flip one random bit of one random sum slot.
+        let mut sum = pool.sum().to_vec();
+        let slot = g.usize_in(0, sum.len() - 1);
+        let bit = g.usize_in(0, 63);
+        sum[slot] = f64::from_bits(sum[slot].to_bits() ^ (1u64 << bit));
+        let tampered = PooledSketch::from_raw(sum, pool.count());
+        assert_ne!(
+            pool_fingerprint(&tampered),
+            base,
+            "flipping bit {bit} of slot {slot} must change the fingerprint"
+        );
+
+        // Changing only the count must also change it.
+        let recount = PooledSketch::from_raw(pool.sum().to_vec(), pool.count() + 1);
+        assert_ne!(pool_fingerprint(&recount), base);
     });
 }
 
