@@ -1,0 +1,69 @@
+#!/usr/bin/env bash
+# Observability end-to-end smoke: serve with structured logging on, push a
+# small CSV, query, scrape `ctl metrics`, and assert both outputs are real.
+# Called from CI with a hard `timeout`; every wait below is also bounded.
+set -euo pipefail
+
+QCKM=target/release/qckm
+WORK=$(mktemp -d)
+trap 'kill $SERVER_PID 2>/dev/null || true; rm -rf "$WORK"' EXIT
+
+# A tiny 2-cluster dataset around ±0.5 in 3 dimensions.
+python3 - "$WORK/data.csv" <<'EOF'
+import random, sys
+random.seed(7)
+with open(sys.argv[1], "w") as f:
+    for i in range(400):
+        c = 0.5 if i % 2 else -0.5
+        f.write(",".join(f"{random.gauss(c, 0.1):.6f}" for _ in range(3)) + "\n")
+EOF
+
+# Serve on an ephemeral port with both logging switches exercised: the
+# --log-json flag and the QCKM_LOG env var (idempotent together).
+QCKM_LOG=json "$QCKM" serve --log-json --dim 3 --m 64 --method qckm \
+    --sigma 1.0 --seed 7 --port 0 >"$WORK/serve.out" 2>"$WORK/serve.err" &
+SERVER_PID=$!
+
+for _ in $(seq 1 100); do
+    grep -q '^LISTENING ' "$WORK/serve.out" 2>/dev/null && break
+    kill -0 $SERVER_PID 2>/dev/null || { cat "$WORK/serve.err"; exit 1; }
+    sleep 0.1
+done
+ADDR=$(sed -n 's/^LISTENING //p' "$WORK/serve.out" | head -n1)
+[ -n "$ADDR" ] || { echo "server never announced an address"; exit 1; }
+
+"$QCKM" push --addr "$ADDR" --data "$WORK/data.csv" --shard ci
+"$QCKM" query --addr "$ADDR" --k 2 --lo -1 --hi 1 --out "$WORK/centroids.csv"
+[ -s "$WORK/centroids.csv" ] || { echo "query produced no centroids"; exit 1; }
+
+# The scrape: non-empty, and covering server + library metric families.
+"$QCKM" ctl --addr "$ADDR" metrics >"$WORK/metrics.txt"
+for series in qckm_requests_total qckm_push_rows_total qckm_decode_seconds_bucket; do
+    grep -q "$series" "$WORK/metrics.txt" || {
+        echo "metrics page is missing $series:"; cat "$WORK/metrics.txt"; exit 1
+    }
+done
+grep -q 'qckm_push_rows_total 400' "$WORK/metrics.txt" || {
+    echo "push row counter wrong:"; grep qckm_push_rows "$WORK/metrics.txt"; exit 1
+}
+
+"$QCKM" ctl --addr "$ADDR" shutdown
+wait $SERVER_PID
+
+# Structured logs: at least one request event, and every json line parses.
+grep -q '"event":"request"' "$WORK/serve.err" || {
+    echo "no structured request events in server stderr:"; cat "$WORK/serve.err"; exit 1
+}
+python3 - "$WORK/serve.err" <<'EOF'
+import json, sys
+n = 0
+for line in open(sys.argv[1]):
+    line = line.strip()
+    if line.startswith("{"):
+        json.loads(line)
+        n += 1
+assert n > 0, "no JSON log lines found"
+print(f"validated {n} JSON log lines")
+EOF
+
+echo "observability e2e OK"

@@ -1,0 +1,173 @@
+//! Per-stage timing benchmark driven by the observability layer: instead
+//! of timing only whole operations, each cell of a threads × rows grid
+//! runs the streaming encode and reads back the per-stage histograms the
+//! code under test feeds (`qckm_parallel_chunk_seconds`,
+//! `qckm_stream_window_seconds`), and the decode section splits CL-OMPR
+//! wall time into its Step-1 / Step-5 histograms — so the emitted records
+//! show *where* the time went, not just how much there was.
+//!
+//! Run: `cargo bench --offline`. Results land in `BENCH_stage.json`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, black_box, Summary};
+use qckm::clompr::ClOmprParams;
+use qckm::coordinator::WireFormat;
+use qckm::decoder::DecoderSpec;
+use qckm::frequency::FrequencyLaw;
+use qckm::linalg::Mat;
+use qckm::method::MethodSpec;
+use qckm::obs::Histogram;
+use qckm::parallel::Parallelism;
+use qckm::rng::Rng;
+use qckm::sketch::PooledSketch;
+use qckm::stream::{draw_operator, MatChunkedReader};
+use std::path::PathBuf;
+
+const DIM: usize = 8;
+const M: usize = 256;
+
+/// One per-stage record: how many observations a stage histogram gained
+/// over a bench cell, and how many seconds they summed to.
+struct StageDelta {
+    cell: String,
+    stage: &'static str,
+    count: u64,
+    seconds: f64,
+}
+
+/// Snapshot a histogram's (count, sum) so a cell can report its delta.
+fn snap(h: &Histogram) -> (u64, f64) {
+    (h.count(), h.sum())
+}
+
+fn delta(cell: &str, stage: &'static str, h: &Histogram, before: (u64, f64)) -> StageDelta {
+    let (count, sum) = snap(h);
+    StageDelta {
+        cell: cell.to_string(),
+        stage,
+        count: count - before.0,
+        seconds: sum - before.1,
+    }
+}
+
+fn main() {
+    println!("== per-stage timing benchmarks (threads x rows grid) ==");
+    let spec = MethodSpec::parse("qckm").unwrap();
+    let op = draw_operator(&spec, FrequencyLaw::AdaptedRadius, M, DIM, 1.0, 0);
+    let m = qckm::obs::lib_metrics();
+
+    let mut results: Vec<(String, Summary, f64)> = Vec::new();
+    let mut stages: Vec<StageDelta> = Vec::new();
+
+    // --- Streaming encode grid: rows × threads. The whole-cell Summary is
+    // the outer wall time; the histogram deltas attribute it to windows
+    // and chunks.
+    let mut rng = Rng::new(3);
+    for rows in [2048usize, 8192] {
+        let data = Mat::from_fn(rows, DIM, |_, _| rng.gaussian());
+        for threads in [1usize, 2, 4] {
+            let cell = format!("sketch_{rows}x{DIM}_t{threads}");
+            let par = Parallelism::fixed(threads);
+            let window_before = snap(&m.stream_window_seconds);
+            let chunk_before = snap(&m.parallel_chunk_seconds);
+            let s = bench(&cell, 1, if rows > 4096 { 60 } else { 150 }, || {
+                let mut reader = MatChunkedReader::new(&data);
+                let mut pool = PooledSketch::new(op.sketch_len());
+                qckm::stream::sketch_reader(
+                    &op,
+                    &mut reader,
+                    WireFormat::DenseF64,
+                    &mut pool,
+                    &par,
+                )
+                .unwrap();
+                black_box(pool.count());
+            });
+            s.print_rate("rows", rows as f64);
+            stages.push(delta(&cell, "stream_window", &m.stream_window_seconds, window_before));
+            stages.push(delta(&cell, "parallel_chunk", &m.parallel_chunk_seconds, chunk_before));
+            results.push((cell, s, rows as f64));
+        }
+    }
+
+    // --- Decode split: one CL-OMPR decode per iteration; the Step-1 /
+    // Step-5 histogram deltas split the decoder's wall time into its two
+    // dominant phases (the gap to the whole-decode time is NNLS + glue).
+    println!();
+    let mut data_rng = Rng::new(7);
+    let mix = qckm::data::gaussian_mixture_pm1(4096, DIM, 4, &mut data_rng);
+    let z = op.sketch_dataset_par(&mix.points, &Parallelism::fixed(2));
+    let decoder = DecoderSpec::parse("clompr").unwrap();
+    for threads in [1usize, 4] {
+        let cell = format!("decode_k4_m{M}_t{threads}");
+        let params = ClOmprParams {
+            threads,
+            ..ClOmprParams::default()
+        };
+        let step1_before = snap(&m.clompr_step1_seconds);
+        let step5_before = snap(&m.clompr_step5_seconds);
+        let decode_before = snap(&qckm::obs::decode_seconds("clompr"));
+        let mut seed = 0u64;
+        let s = bench(&cell, 0, 2, || {
+            seed += 1;
+            let sol = decoder.decode_best_of(
+                &op,
+                4,
+                &z,
+                vec![-2.0; DIM],
+                vec![2.0; DIM],
+                &params,
+                1,
+                &mut Rng::new(seed),
+            );
+            black_box(sol.objective);
+        });
+        s.print();
+        stages.push(delta(&cell, "clompr_step1", &m.clompr_step1_seconds, step1_before));
+        stages.push(delta(&cell, "clompr_step5", &m.clompr_step5_seconds, step5_before));
+        stages.push(delta(
+            &cell,
+            "decode_total",
+            &qckm::obs::decode_seconds("clompr"),
+            decode_before,
+        ));
+        results.push((cell, s, 1.0));
+    }
+
+    write_stage_json(&results, &stages);
+}
+
+/// Emit `BENCH_stage.json` at the repo root: the usual per-cell timing
+/// records plus the per-stage histogram deltas keyed by cell.
+fn write_stage_json(results: &[(String, Summary, f64)], stages: &[StageDelta]) {
+    let mut json =
+        String::from("{\n  \"bench\": \"stage\",\n  \"unit\": \"ns/iter\",\n  \"results\": [\n");
+    for (i, (name, s, per_iter)) in results.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"median_ns\": {:.0}, \"mean_ns\": {:.0}, \
+             \"items_per_iter\": {per_iter}}}{}\n",
+            s.median_ns,
+            s.mean_ns,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n  \"stages\": [\n");
+    for (i, d) in stages.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"cell\": \"{}\", \"stage\": \"{}\", \"count\": {}, \"seconds\": {:.6}}}{}\n",
+            d.cell,
+            d.stage,
+            d.count,
+            d.seconds,
+            if i + 1 < stages.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_stage.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("(could not write {}: {e})", path.display()),
+    }
+}

@@ -1,23 +1,35 @@
-//! `qckm ctl` — administer a serving node (stats / roll / shutdown).
+//! `qckm ctl` — administer a serving node (stats / roll / metrics /
+//! shutdown). `metrics` prints the server's Prometheus exposition page
+//! verbatim, so `qckm ctl --addr … metrics` is a ready-made scrape target
+//! for a textfile collector or a curl-equivalent health probe.
 
 use anyhow::{bail, Context, Result};
 use qckm::cli::CliSpec;
 
 pub fn run(args: Vec<String>) -> Result<()> {
     let spec = CliSpec::new("qckm ctl", "administer a serving node")
-        .positionals("<stats|roll|shutdown>")
+        .positionals("<stats|roll|metrics|shutdown>")
         .opt("addr", "HOST:PORT", None, "server address");
     let parsed = spec.parse(args)?;
     let addr = parsed.get("addr").context("--addr is required")?;
-    let verb = parsed.positional(0).context("which action? (stats|roll|shutdown)")?;
+    let verb = parsed
+        .positional(0)
+        .context("which action? (stats|roll|metrics|shutdown)")?;
     let mut client = qckm::server::Client::connect(addr)?;
     match verb {
         "stats" => {
             let s = client.stats()?;
             println!(
                 "method {} | epoch {} | {} rows all-time | {} closed epoch(s) held | \
-                 cache {} hit / {} miss",
-                s.method, s.epoch, s.rows_total, s.epochs_held, s.cache_hits, s.cache_misses
+                 {} of {} shard slots | cache {} hit / {} miss",
+                s.method,
+                s.epoch,
+                s.rows_total,
+                s.epochs_held,
+                s.shards.len(),
+                s.max_shards,
+                s.cache_hits,
+                s.cache_misses
             );
             for (label, rows) in &s.shards {
                 println!("  shard '{label}': {rows} rows");
@@ -25,6 +37,11 @@ pub fn run(args: Vec<String>) -> Result<()> {
             for (decoder, queries) in &s.decoders {
                 println!("  decoder '{decoder}': {queries} queries");
             }
+        }
+        "metrics" => {
+            // The page is printed byte-for-byte as the server rendered it —
+            // already valid Prometheus text format, trailing newline and all.
+            print!("{}", client.metrics()?);
         }
         "roll" => {
             let (epoch, rows_closed) = client.roll()?;
@@ -34,7 +51,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
             client.shutdown()?;
             println!("server acknowledged shutdown");
         }
-        other => bail!("unknown ctl action '{other}' (stats|roll|shutdown)"),
+        other => bail!("unknown ctl action '{other}' (stats|roll|metrics|shutdown)"),
     }
     Ok(())
 }

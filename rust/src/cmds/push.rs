@@ -85,5 +85,16 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "pushed {pushed} rows from {data_path} to shard '{shard}' \
          (shard total {shard_rows}, server total {total_rows})"
     );
+    // Surface the retry accounting the client kept (mirrored into the
+    // qckm_retry_* registry counters): silent recoveries hide flaky
+    // networks, and the double-count caveat in --retry's help only
+    // matters when retries actually happened.
+    let (attempts, backoff) = client.retry_stats();
+    if attempts > 0 {
+        eprintln!(
+            "retries: {attempts} reconnect attempt(s), {} ms total backoff",
+            backoff.as_millis()
+        );
+    }
     Ok(())
 }

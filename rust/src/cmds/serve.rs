@@ -39,9 +39,13 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "seed the server from this .qsk (operator comes from its header)",
     )
     .opt("seed-shard", "NAME", Some("__seed__"), "shard label for the seeded history")
-    .opt("config", "FILE", None, "TOML job config");
+    .opt("config", "FILE", None, "TOML job config")
+    .flag("log-json", "emit structured JSON logs on stderr (same as QCKM_LOG=json)");
     let parsed = spec.parse(args)?;
     let cfg = job_from(&parsed)?;
+    if parsed.flag("log-json") {
+        qckm::obs::set_json(true, qckm::obs::Level::Info);
+    }
 
     // The operator is fixed for the server's lifetime: either rebuilt from
     // a snapshot header (fingerprint-verified) or drawn fresh from the
@@ -97,6 +101,12 @@ pub fn run(args: Vec<String>) -> Result<()> {
     };
     eprintln!("operator: {}", meta.describe());
 
+    // The server shares the process-global registry so a single
+    // `ctl metrics` scrape covers every layer: request handling here,
+    // plus the stream/decoder/parallel families the library registers
+    // lazily. Touch them up front so the first scrape already lists the
+    // full catalog, not just whatever stages have run.
+    qckm::obs::lib_metrics();
     let service_cfg = ServiceConfig {
         epoch_capacity: parsed.get_usize("epochs")?.unwrap().max(1),
         cache_capacity: parsed.get_usize("cache")?.unwrap().max(1),
@@ -106,6 +116,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
             threads: cfg.threads,
             ..ClOmprParams::default()
         },
+        registry: qckm::obs::global().clone(),
     };
     let service = SketchService::new(op, meta, service_cfg);
     if let Some(pool) = seed_pool {

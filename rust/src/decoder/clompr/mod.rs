@@ -143,9 +143,17 @@ impl<'a> ClOmpr<'a> {
         let mut residual = z.to_vec();
 
         let outer = self.params.outer_iters_factor * self.k;
+        // Step 1 and Step 5 dominate decode cost in opposite regimes
+        // (screening scales with M·candidates, refinement with k·M·iters),
+        // so each outer iteration times both into its own histogram —
+        // observational only (I-18).
+        let obs = crate::obs::lib_metrics();
         for _t in 0..outer {
             // ---- Step 1: pick the atom best correlated with the residual.
-            let c_new = self.step1_pick(&residual, rng);
+            let c_new = {
+                let _span = crate::obs::global().span("clompr_step1", &obs.clompr_step1_seconds);
+                self.step1_pick(&residual, rng)
+            };
 
             // ---- Step 2: extend the support.
             centroids.push_row(&c_new);
@@ -170,7 +178,10 @@ impl<'a> ClOmpr<'a> {
             } else {
                 self.params.step5_iters
             };
-            self.step5_refine(z, &mut centroids, &mut alphas, iters);
+            {
+                let _span = crate::obs::global().span("clompr_step5", &obs.clompr_step5_seconds);
+                self.step5_refine(z, &mut centroids, &mut alphas, iters);
+            }
 
             // ---- Residual update.
             let model = self.op.mixture_sketch(&centroids, &alphas);

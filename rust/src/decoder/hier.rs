@@ -79,10 +79,15 @@ impl HierDecoder {
         out: &mut Vec<Vec<f64>>,
     ) {
         let sub_k = k.min(2);
-        let sol = ClOmpr::new(op, sub_k)
-            .with_bounds(lo.to_vec(), hi.to_vec())
-            .with_params(self.subproblem_params())
-            .run(z, rng);
+        let sol = {
+            // One span per split solve (observational only, I-18).
+            let _span = crate::obs::global()
+                .span("hier_split", &crate::obs::lib_metrics().hier_split_seconds);
+            ClOmpr::new(op, sub_k)
+                .with_bounds(lo.to_vec(), hi.to_vec())
+                .with_params(self.subproblem_params())
+                .run(z, rng)
+        };
         if k <= 2 {
             for c in 0..sol.centroids.rows() {
                 out.push(sol.centroids.row(c).to_vec());

@@ -195,9 +195,18 @@ impl DecoderSpec {
     ) -> Solution {
         assert!(replicates >= 1);
         let decoder = self.decoder(base);
+        // Per-replicate latency histogram, labeled by decoder *family*
+        // (the canonical spec's name segment) — clients choose parameter
+        // strings freely, so full specs would be unbounded label
+        // cardinality (observational only, I-18).
+        let family = self.canonical.split(':').next().unwrap_or("unknown");
+        let hist = crate::obs::decode_seconds(family);
         let mut best: Option<Solution> = None;
         for _ in 0..replicates {
-            let sol = decoder.decode(op, z, k, &lo, &hi, rng);
+            let sol = {
+                let _span = crate::obs::global().span("decode", &hist);
+                decoder.decode(op, z, k, &lo, &hi, rng)
+            };
             if best.as_ref().map_or(true, |b| sol.objective < b.objective) {
                 best = Some(sol);
             }

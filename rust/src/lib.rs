@@ -57,6 +57,7 @@ pub mod kmeans;
 pub mod linalg;
 pub mod method;
 pub mod metrics;
+pub mod obs;
 pub mod optim;
 pub mod parallel;
 pub mod rng;

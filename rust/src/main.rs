@@ -36,6 +36,9 @@ use anyhow::{bail, Result};
 mod cmds;
 
 fn main() {
+    // QCKM_LOG=json[:level] turns on structured logging for any verb;
+    // `qckm serve --log-json` is the flag-shaped equivalent.
+    qckm::obs::init_from_env();
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = dispatch(args) {
         eprintln!("{e:#}");

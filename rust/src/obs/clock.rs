@@ -1,0 +1,68 @@
+//! The time source behind span timers and histogram observations.
+//!
+//! Production uses [`MonotonicClock`] (an `Instant` anchor, immune to
+//! wall-clock steps). Tests inject [`FakeClock`] and advance it by hand,
+//! so a span's measured duration — and therefore the whole Prometheus
+//! exposition page — is an exact, assertable constant.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Nanosecond time source. `now_ns` must be monotone non-decreasing; the
+/// epoch is arbitrary (spans only ever subtract two readings).
+pub trait Clock: Send + Sync {
+    fn now_ns(&self) -> u64;
+}
+
+/// Monotonic production clock: nanoseconds since the clock was created.
+pub struct MonotonicClock {
+    base: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> Self {
+        Self { base: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_ns(&self) -> u64 {
+        // A u64 of nanoseconds lasts ~584 years from the anchor.
+        self.base.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+}
+
+/// Manually-advanced test clock. Starts at 0; time moves only through
+/// [`FakeClock::advance_ns`], so timings recorded against it are exact.
+pub struct FakeClock {
+    now_ns: AtomicU64,
+}
+
+impl FakeClock {
+    pub fn new() -> Self {
+        Self { now_ns: AtomicU64::new(0) }
+    }
+
+    /// Move time forward by `ns` nanoseconds.
+    pub fn advance_ns(&self, ns: u64) {
+        self.now_ns.fetch_add(ns, Ordering::SeqCst);
+    }
+}
+
+impl Default for FakeClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for FakeClock {
+    fn now_ns(&self) -> u64 {
+        self.now_ns.load(Ordering::SeqCst)
+    }
+}

@@ -1,0 +1,141 @@
+//! Opt-in structured event log: one JSON object per line on stderr.
+//!
+//! Off by default (zero output, one relaxed atomic load per guard).
+//! Enabled by `QCKM_LOG=json` (or `json:debug` / `json:info` / `json:warn`
+//! / `json:error` to set the minimum level) via [`init_from_env`], or
+//! programmatically by `qckm serve --log-json` via [`set_json`].
+//!
+//! Schema (see README §Observability): every line is one object with
+//! `ts_ms` (Unix epoch milliseconds), `level`, `event`, then the event's
+//! own fields. Lines go to stderr so they never interleave with protocol
+//! or CSV output on stdout.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Event severity, ordered `Debug < Info < Warn < Error`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl Level {
+    fn name(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+}
+
+/// 0 = off; otherwise `min_level as u8 + 1`.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Turn JSON logging on (at `min_level` and above) or off.
+pub fn set_json(enabled: bool, min_level: Level) {
+    MODE.store(if enabled { min_level as u8 + 1 } else { 0 }, Ordering::Relaxed);
+}
+
+/// Configure from `QCKM_LOG` (`json` or `json:<level>`; default level
+/// info). Unknown values are ignored — observability must never turn an
+/// env typo into a startup failure.
+pub fn init_from_env() {
+    let Ok(raw) = std::env::var("QCKM_LOG") else { return };
+    let (mode, level) = match raw.split_once(':') {
+        Some((m, l)) => (m, Level::parse(l).unwrap_or(Level::Info)),
+        None => (raw.as_str(), Level::Info),
+    };
+    if mode.trim().eq_ignore_ascii_case("json") {
+        set_json(true, level);
+    }
+}
+
+/// Would an event at `level` be written? Use to skip building fields.
+pub fn enabled(level: Level) -> bool {
+    let mode = MODE.load(Ordering::Relaxed);
+    mode != 0 && (level as u8) + 1 >= mode
+}
+
+/// A typed JSON field value.
+pub enum Value<'a> {
+    Str(&'a str),
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Bool(bool),
+}
+
+/// Emit one event line (a no-op unless [`enabled`]). The line is built in
+/// full then written under the stderr lock, so concurrent events never
+/// interleave mid-line.
+pub fn event(level: Level, event: &str, fields: &[(&str, Value<'_>)]) {
+    if !enabled(level) {
+        return;
+    }
+    let ts_ms = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis().min(u64::MAX as u128) as u64)
+        .unwrap_or(0);
+    let mut line = String::with_capacity(96);
+    line.push_str("{\"ts_ms\":");
+    line.push_str(&ts_ms.to_string());
+    line.push_str(",\"level\":\"");
+    line.push_str(level.name());
+    line.push_str("\",\"event\":\"");
+    escape_into(&mut line, event);
+    line.push('"');
+    for (key, value) in fields {
+        line.push_str(",\"");
+        escape_into(&mut line, key);
+        line.push_str("\":");
+        match value {
+            Value::Str(s) => {
+                line.push('"');
+                escape_into(&mut line, s);
+                line.push('"');
+            }
+            Value::U64(n) => line.push_str(&n.to_string()),
+            Value::I64(n) => line.push_str(&n.to_string()),
+            // JSON has no Inf/NaN literal; null is the conventional stand-in.
+            Value::F64(x) if x.is_finite() => line.push_str(&format!("{x}")),
+            Value::F64(_) => line.push_str("null"),
+            Value::Bool(b) => line.push_str(if *b { "true" } else { "false" }),
+        }
+    }
+    line.push_str("}\n");
+    let stderr = std::io::stderr();
+    let mut out = stderr.lock();
+    let _ = out.write_all(line.as_bytes());
+}
+
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}

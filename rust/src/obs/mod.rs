@@ -1,0 +1,168 @@
+//! Std-only observability: a metrics registry, scoped span timers,
+//! Prometheus text exposition, and an opt-in structured JSON event log.
+//!
+//! The crate vendors no telemetry dependency, so this module is the whole
+//! stack: [`registry::Registry`] holds atomic counters, gauges, and
+//! fixed-boundary histograms; [`span::Span`] times a scope against a
+//! [`clock::Clock`] (monotonic in production, a settable
+//! [`clock::FakeClock`] in tests so exposition pages are deterministically
+//! golden-testable); [`prom::render`] encodes the registry as a Prometheus
+//! text page (served by the `qckm ctl metrics` protocol verb); and
+//! [`log`] emits one JSON line per event/span to stderr when enabled via
+//! `QCKM_LOG=json[:level]` or `qckm serve --log-json`.
+//!
+//! ## The observational-only contract (INVARIANTS.md I-18)
+//!
+//! Instrumentation never touches the data path: handles are atomics, spans
+//! read the clock and write atomics, and the logger writes stderr. No RNG
+//! is consumed, no float in a result is produced or reordered, so every
+//! sketch/decode/serve output is bit-for-bit identical with telemetry on,
+//! off, or logging enabled (locked by
+//! `telemetry_never_perturbs_outputs`).
+//!
+//! ## Instrument naming
+//!
+//! All metric families are prefixed `qckm_`, durations are histograms in
+//! seconds (`*_seconds`), monotone totals end in `_total`. The full name
+//! table lives in README §Observability; the library-wide (label-free)
+//! handles are centralized in [`LibMetrics`] so names can never drift
+//! between call sites.
+
+pub mod clock;
+pub mod log;
+pub mod prom;
+pub mod registry;
+pub mod span;
+
+#[cfg(test)]
+mod tests;
+
+pub use clock::{Clock, FakeClock, MonotonicClock};
+pub use log::{init_from_env, set_json, Level};
+pub use registry::{Counter, Gauge, Histogram, Registry};
+pub use span::Span;
+
+use std::sync::{Arc, OnceLock};
+
+/// The process-wide registry, on a monotonic clock. Library-layer
+/// instrumentation (stream, decoder, parallel, retry) always records
+/// here; the server wires the same registry into its [`ServiceConfig`] so
+/// one `ctl metrics` scrape covers every layer.
+///
+/// [`ServiceConfig`]: crate::server::ServiceConfig
+pub fn global() -> &'static Arc<Registry> {
+    static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(Registry::new(Arc::new(MonotonicClock::new()))))
+}
+
+/// The standard log-scale latency boundaries, in seconds: 1 µs · 4^i for
+/// i in 0..16, topping out near 18 minutes — wide enough for a chunk
+/// kernel and a worst-case decode on one fixed grid, so every duration
+/// histogram is cross-comparable.
+pub fn latency_buckets() -> Vec<f64> {
+    Histogram::log_boundaries(1e-6, 4.0, 16)
+}
+
+/// Per-replicate decode latency, labeled by decoder *family* (`clompr`,
+/// `hier`, …) rather than the full canonical spec: clients choose spec
+/// parameters freely, and label cardinality must stay bounded like every
+/// other piece of client-influenced state (cf. the shard and
+/// decoder-stats caps).
+pub fn decode_seconds(family: &str) -> Arc<Histogram> {
+    global().histogram(
+        "qckm_decode_seconds",
+        "Wall time of one decoder replicate, by decoder family.",
+        &[("decoder", family)],
+        &latency_buckets(),
+    )
+}
+
+/// Label-free handles for the library's hot layers, registered in the
+/// [`global`] registry on first touch. One struct so the name table has a
+/// single source of truth, and so `qckm serve` can pre-register every
+/// family at startup (a scrape then shows the full schema even before the
+/// first push).
+pub struct LibMetrics {
+    /// `qckm_stream_rows_total` — rows consumed by the streaming sketcher.
+    pub stream_rows: Arc<Counter>,
+    /// `qckm_stream_window_seconds` — sketch+merge time per streaming window.
+    pub stream_window_seconds: Arc<Histogram>,
+    /// `qckm_clompr_step1_seconds` — CL-OMPR Step 1 (atom pick) per outer iteration.
+    pub clompr_step1_seconds: Arc<Histogram>,
+    /// `qckm_clompr_step5_seconds` — CL-OMPR Step 5 (joint refinement) per outer iteration.
+    pub clompr_step5_seconds: Arc<Histogram>,
+    /// `qckm_hier_split_seconds` — one hierarchical-bisection k=2 split solve.
+    pub hier_split_seconds: Arc<Histogram>,
+    /// `qckm_parallel_runs_total` — `run_chunked` invocations.
+    pub parallel_runs: Arc<Counter>,
+    /// `qckm_parallel_chunks_total` — chunks executed across all runs.
+    pub parallel_chunks: Arc<Counter>,
+    /// `qckm_parallel_chunk_seconds` — per-chunk wall time in the runner.
+    pub parallel_chunk_seconds: Arc<Histogram>,
+    /// `qckm_retry_attempts_total` — RetryClient reconnect attempts.
+    pub retry_attempts: Arc<Counter>,
+    /// `qckm_retry_backoff_ms_total` — total backoff milliseconds slept.
+    pub retry_backoff_ms: Arc<Counter>,
+}
+
+/// The library-layer instruments (see [`LibMetrics`]).
+pub fn lib_metrics() -> &'static LibMetrics {
+    static LIB: OnceLock<LibMetrics> = OnceLock::new();
+    LIB.get_or_init(|| {
+        let r = global();
+        let lat = latency_buckets();
+        LibMetrics {
+            stream_rows: r.counter(
+                "qckm_stream_rows_total",
+                "Rows consumed by the streaming sketcher.",
+                &[],
+            ),
+            stream_window_seconds: r.histogram(
+                "qckm_stream_window_seconds",
+                "Wall time to sketch and merge one streaming window.",
+                &[],
+                &lat,
+            ),
+            clompr_step1_seconds: r.histogram(
+                "qckm_clompr_step1_seconds",
+                "CL-OMPR Step 1 (screen + L-BFGS atom pick) wall time per outer iteration.",
+                &[],
+                &lat,
+            ),
+            clompr_step5_seconds: r.histogram(
+                "qckm_clompr_step5_seconds",
+                "CL-OMPR Step 5 (joint refinement) wall time per outer iteration.",
+                &[],
+                &lat,
+            ),
+            hier_split_seconds: r.histogram(
+                "qckm_hier_split_seconds",
+                "Hierarchical-bisection k=2 split solve wall time.",
+                &[],
+                &lat,
+            ),
+            parallel_runs: r.counter("qckm_parallel_runs_total", "run_chunked invocations.", &[]),
+            parallel_chunks: r.counter(
+                "qckm_parallel_chunks_total",
+                "Chunks executed across all run_chunked invocations.",
+                &[],
+            ),
+            parallel_chunk_seconds: r.histogram(
+                "qckm_parallel_chunk_seconds",
+                "Per-chunk wall time inside the deterministic chunked runner.",
+                &[],
+                &lat,
+            ),
+            retry_attempts: r.counter(
+                "qckm_retry_attempts_total",
+                "Transport-level reconnect attempts by RetryClient.",
+                &[],
+            ),
+            retry_backoff_ms: r.counter(
+                "qckm_retry_backoff_ms_total",
+                "Total backoff milliseconds slept by RetryClient.",
+                &[],
+            ),
+        }
+    })
+}

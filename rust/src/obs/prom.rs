@@ -1,0 +1,197 @@
+//! Prometheus text-format exposition (version 0.0.4): rendering from the
+//! registry, plus a grammar validator the test suite (and `INVARIANTS.md`
+//! I-17's fuzz coverage of the metrics frame) checks pages against.
+//!
+//! Families render in name order and series in label order (both
+//! `BTreeMap`s), so two scrapes of identical counter states are
+//! byte-identical — that is what makes the fake-clock golden test
+//! possible.
+
+use super::registry::{valid_label_name, valid_metric_name, Family, Instrument};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write;
+
+/// Render families as a text page: `# HELP` / `# TYPE` then one sample
+/// line per series (histograms expand to cumulative `_bucket` lines plus
+/// `_sum` and `_count`).
+pub(crate) fn render(families: &BTreeMap<String, Family>) -> String {
+    let mut out = String::new();
+    for (name, fam) in families {
+        let _ = writeln!(out, "# HELP {name} {}", escape_help(&fam.help));
+        let _ = writeln!(out, "# TYPE {name} {}", fam.kind);
+        for (labels, inst) in &fam.series {
+            match inst {
+                Instrument::Counter(c) => {
+                    let _ = writeln!(out, "{name}{labels} {}", c.get());
+                }
+                Instrument::Gauge(g) => {
+                    let _ = writeln!(out, "{name}{labels} {}", fmt_f64(g.get()));
+                }
+                Instrument::Histogram(h) => {
+                    let (buckets, count, sum) = h.snapshot();
+                    let mut cumulative = 0u64;
+                    for (i, bound) in h.bounds().iter().enumerate() {
+                        cumulative += buckets[i];
+                        let le = with_le(labels, &fmt_f64(*bound));
+                        let _ = writeln!(out, "{name}_bucket{le} {cumulative}");
+                    }
+                    cumulative += buckets[h.bounds().len()];
+                    let le = with_le(labels, "+Inf");
+                    let _ = writeln!(out, "{name}_bucket{le} {cumulative}");
+                    let _ = writeln!(out, "{name}_sum{labels} {}", fmt_f64(sum));
+                    let _ = writeln!(out, "{name}_count{labels} {count}");
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Append `le="<bound>"` to a rendered label block (or create one).
+fn with_le(labels: &str, le: &str) -> String {
+    if labels.is_empty() {
+        format!("{{le=\"{le}\"}}")
+    } else {
+        // labels is `{…}` — splice before the closing brace.
+        format!("{},le=\"{le}\"}}", &labels[..labels.len() - 1])
+    }
+}
+
+/// Exposition float formatting. Rust's `{}` never uses scientific
+/// notation and round-trips shortest, which Prometheus accepts; the
+/// non-finite spellings are the format's own.
+pub(crate) fn fmt_f64(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".to_string()
+    } else if x == f64::INFINITY {
+        "+Inf".to_string()
+    } else if x == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{x}")
+    }
+}
+
+fn escape_help(help: &str) -> String {
+    help.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Check that `page` is well-formed exposition text: every non-empty line
+/// is `# HELP <name> <text>`, `# TYPE <name> <type>`, or a sample
+/// `name[{labels}] value`. This is the checker behind the golden test and
+/// the e2e scrape assertion — kept in the library so every consumer
+/// validates against one grammar.
+pub fn validate(page: &str) -> Result<()> {
+    for (i, line) in page.lines().enumerate() {
+        validate_line(line).with_context(|| format!("exposition line {}: {line:?}", i + 1))?;
+    }
+    Ok(())
+}
+
+fn validate_line(line: &str) -> Result<()> {
+    if line.is_empty() {
+        return Ok(());
+    }
+    if let Some(rest) = line.strip_prefix("# ") {
+        let (keyword, rest) = rest.split_once(' ').context("bare comment keyword")?;
+        if keyword != "HELP" && keyword != "TYPE" {
+            bail!("unknown comment keyword {keyword:?}");
+        }
+        let name = rest.split(' ').next().unwrap_or("");
+        if !valid_metric_name(name) {
+            bail!("invalid metric name {name:?}");
+        }
+        if keyword == "TYPE" {
+            let kind = rest[name.len()..].trim();
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                bail!("invalid metric type {kind:?}");
+            }
+        }
+        return Ok(());
+    }
+    // Sample line: name[{labels}] value
+    let (name_part, value_part) = match line.find('{') {
+        Some(brace) => {
+            let name = &line[..brace];
+            let close = find_label_block_end(&line[brace..])
+                .context("unterminated label block")?;
+            let labels = &line[brace..brace + close + 1];
+            validate_labels(labels)?;
+            (name, line[brace + close + 1..].trim_start())
+        }
+        None => {
+            let (name, value) = line.split_once(' ').context("sample line without value")?;
+            (name, value)
+        }
+    };
+    if !valid_metric_name(name_part) {
+        bail!("invalid sample metric name {name_part:?}");
+    }
+    let value = value_part.trim();
+    // f64 parsing accepts the exposition spellings ("+Inf", "NaN") too.
+    if value.is_empty() || value.parse::<f64>().is_err() {
+        bail!("unparseable sample value {value:?}");
+    }
+    Ok(())
+}
+
+/// Index of the `}` closing the label block that starts at byte 0 of `s`,
+/// honoring `\"` escapes inside label values.
+fn find_label_block_end(s: &str) -> Option<usize> {
+    let mut in_string = false;
+    let mut escaped = false;
+    for (i, c) in s.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_string => escaped = true,
+            '"' => in_string = !in_string,
+            '}' if !in_string => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn validate_labels(block: &str) -> Result<()> {
+    let inner = block
+        .strip_prefix('{')
+        .and_then(|s| s.strip_suffix('}'))
+        .context("label block must be brace-delimited")?;
+    if inner.is_empty() {
+        return Ok(()); // `{}` is legal, if pointless.
+    }
+    let mut rest = inner;
+    loop {
+        let eq = rest.find('=').context("label without '='")?;
+        let name = &rest[..eq];
+        if !valid_label_name(name) {
+            bail!("invalid label name {name:?}");
+        }
+        rest = rest[eq + 1..]
+            .strip_prefix('"')
+            .context("label value must be quoted")?;
+        // Scan to the closing quote, honoring backslash escapes.
+        let mut end = None;
+        let mut escaped = false;
+        for (i, c) in rest.char_indices() {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                end = Some(i);
+                break;
+            }
+        }
+        let end = end.context("unterminated label value")?;
+        rest = &rest[end + 1..];
+        if rest.is_empty() {
+            return Ok(());
+        }
+        rest = rest.strip_prefix(',').context("expected ',' between labels")?;
+    }
+}

@@ -1,0 +1,317 @@
+//! The metric registry: named families of counters, gauges, and
+//! histograms, each family fanning out into label-keyed series.
+//!
+//! Registration (rare) takes a mutex; every increment/observe on a
+//! returned handle is lock-free atomics, so instrumenting a hot loop
+//! costs a few relaxed atomic ops. Handles are `Arc`s — callers cache
+//! them (in a struct or a `OnceLock`) instead of re-looking-up by name on
+//! the hot path.
+//!
+//! Metric and label names are validated against the Prometheus grammar at
+//! registration; violations panic, because a bad name is a programming
+//! error in this crate, never runtime input.
+
+use super::clock::Clock;
+use super::span::Span;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotone event count (`*_total`).
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    fn new() -> Self {
+        Self { v: AtomicU64::new(0) }
+    }
+
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A value that can go up and down, stored as f64 bits in one atomic.
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    fn new() -> Self {
+        Self { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-boundary histogram. `bounds` are the finite bucket upper limits
+/// (strictly increasing); an implicit `+Inf` bucket catches the rest —
+/// exactly the Prometheus model, where bucket `le=B` counts observations
+/// `≤ B` cumulatively.
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `bounds.len() + 1` entries,
+    /// the last being the `+Inf` overflow bucket.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        assert!(
+            bounds.iter().all(|b| b.is_finite()),
+            "histogram bounds must be finite (the +Inf bucket is implicit)"
+        );
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        Self {
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Log-scale boundaries `start · factor^i` for `i in 0..n`.
+    pub fn log_boundaries(start: f64, factor: f64, n: usize) -> Vec<f64> {
+        assert!(start > 0.0 && factor > 1.0 && n >= 1);
+        (0..n).map(|i| start * factor.powi(i as i32)).collect()
+    }
+
+    /// Record one observation (for latency histograms: seconds).
+    pub fn observe(&self, v: f64) {
+        // First bound ≥ v, i.e. the smallest bucket with v ≤ le; NaN falls
+        // through every comparison into +Inf.
+        let idx = self.bounds.partition_point(|b| *b < v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        // f64 add via CAS on the bit pattern — lock-free like the rest.
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// The finite bucket bounds.
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket (non-cumulative) counts, `+Inf` last, plus count and sum.
+    pub(crate) fn snapshot(&self) -> (Vec<u64>, u64, f64) {
+        let buckets = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        (buckets, self.count(), self.sum())
+    }
+}
+
+/// One registered series handle.
+pub(crate) enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// One metric family: a name's help text, type, and label-keyed series.
+pub(crate) struct Family {
+    pub(crate) help: String,
+    pub(crate) kind: &'static str,
+    /// Keyed by the rendered label block (`{k="v",…}`, empty for none) —
+    /// already exposition-ready and totally ordered for stable output.
+    pub(crate) series: BTreeMap<String, Instrument>,
+}
+
+/// A set of metric families sharing one [`Clock`]. See the module docs;
+/// most code uses the process-global instance ([`super::global`]) — tests
+/// build private registries around a [`super::FakeClock`].
+pub struct Registry {
+    clock: Arc<dyn Clock>,
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Registry {
+    pub fn new(clock: Arc<dyn Clock>) -> Self {
+        Self { clock, families: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Register (or re-fetch) a counter series. Idempotent: the same
+    /// (name, labels) always returns the same underlying counter.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.series(name, help, "counter", labels, || {
+            Instrument::Counter(Arc::new(Counter::new()))
+        }) {
+            Instrument::Counter(c) => c,
+            _ => unreachable!("kind checked in series()"),
+        }
+    }
+
+    /// Register (or re-fetch) a gauge series.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.series(name, help, "gauge", labels, || {
+            Instrument::Gauge(Arc::new(Gauge::new()))
+        }) {
+            Instrument::Gauge(g) => g,
+            _ => unreachable!("kind checked in series()"),
+        }
+    }
+
+    /// Register (or re-fetch) a histogram series with the given finite
+    /// bucket bounds. Re-registration must use identical bounds.
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        match self.series(name, help, "histogram", labels, || {
+            Instrument::Histogram(Arc::new(Histogram::new(bounds)))
+        }) {
+            Instrument::Histogram(h) => {
+                assert!(
+                    h.bounds() == bounds,
+                    "histogram {name} re-registered with different bounds"
+                );
+                h
+            }
+            _ => unreachable!("kind checked in series()"),
+        }
+    }
+
+    fn series(
+        &self,
+        name: &str,
+        help: &str,
+        kind: &'static str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Instrument,
+    ) -> Instrument {
+        assert!(valid_metric_name(name), "invalid metric name {name:?}");
+        let key = label_key(labels);
+        // Lock recovery mirrors the server state lock: registration never
+        // leaves a family half-written (BTreeMap insert is the only
+        // mutation), so a poisoned guard is safe to take over.
+        let mut fams = self.families.lock().unwrap_or_else(|e| e.into_inner());
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            series: BTreeMap::new(),
+        });
+        assert!(
+            fam.kind == kind,
+            "metric {name} already registered as a {} (asked for a {kind})",
+            fam.kind
+        );
+        let inst = fam.series.entry(key).or_insert_with(make);
+        match inst {
+            Instrument::Counter(c) => Instrument::Counter(Arc::clone(c)),
+            Instrument::Gauge(g) => Instrument::Gauge(Arc::clone(g)),
+            Instrument::Histogram(h) => Instrument::Histogram(Arc::clone(h)),
+        }
+    }
+
+    /// Start a scoped timer: on drop it observes the elapsed seconds into
+    /// `hist` and, when JSON logging is on at debug level, emits one span
+    /// line.
+    pub fn span(&self, stage: &'static str, hist: &Arc<Histogram>) -> Span {
+        Span::new(Arc::clone(&self.clock), Arc::clone(hist), stage)
+    }
+
+    /// The registry's clock reading (the span primitive, exposed for
+    /// callers that need raw timestamps).
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// Render every family as a Prometheus text-format page.
+    pub fn render(&self) -> String {
+        let fams = self.families.lock().unwrap_or_else(|e| e.into_inner());
+        super::prom::render(&fams)
+    }
+}
+
+impl fmt::Debug for Registry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let n = self.families.lock().map(|g| g.len()).unwrap_or(0);
+        f.debug_struct("Registry").field("families", &n).finish_non_exhaustive()
+    }
+}
+
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*` — the Prometheus metric-name grammar.
+pub(crate) fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    matches!(chars.next(), Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// `[a-zA-Z_][a-zA-Z0-9_]*` — the label-name grammar (no colon).
+pub(crate) fn valid_label_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    matches!(chars.next(), Some(c) if c.is_ascii_alphabetic() || c == '_')
+        && chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Render a label set as its exposition block (`{k="v",…}`), keys sorted
+/// so the same set always produces the same series key whatever order the
+/// call site lists them in.
+fn label_key(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut sorted: Vec<&(&str, &str)> = labels.iter().collect();
+    sorted.sort_by_key(|(k, _)| *k);
+    let mut s = String::from("{");
+    for (i, (k, v)) in sorted.iter().enumerate() {
+        assert!(valid_label_name(k), "invalid label name {k:?}");
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(k);
+        s.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '\\' => s.push_str("\\\\"),
+                '"' => s.push_str("\\\""),
+                '\n' => s.push_str("\\n"),
+                c => s.push(c),
+            }
+        }
+        s.push('"');
+    }
+    s.push('}');
+    s
+}

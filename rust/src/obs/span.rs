@@ -1,0 +1,40 @@
+//! Scoped span timers: construct at the top of a stage, drop at the end.
+//!
+//! On drop the span observes its elapsed time (in seconds) into its
+//! histogram, and — only when JSON logging is enabled at debug level —
+//! emits one `{"event":"span",…}` line. Cost when logging is off: two
+//! clock reads and a histogram observe (a few relaxed atomics).
+
+use super::clock::Clock;
+use super::log::{self, Level, Value};
+use super::registry::Histogram;
+use std::sync::Arc;
+
+/// A running stage timer; created via [`super::Registry::span`].
+pub struct Span {
+    clock: Arc<dyn Clock>,
+    hist: Arc<Histogram>,
+    stage: &'static str,
+    start_ns: u64,
+}
+
+impl Span {
+    pub(crate) fn new(clock: Arc<dyn Clock>, hist: Arc<Histogram>, stage: &'static str) -> Self {
+        let start_ns = clock.now_ns();
+        Self { clock, hist, stage, start_ns }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let elapsed_ns = self.clock.now_ns().saturating_sub(self.start_ns);
+        self.hist.observe(elapsed_ns as f64 * 1e-9);
+        if log::enabled(Level::Debug) {
+            log::event(
+                Level::Debug,
+                "span",
+                &[("stage", Value::Str(self.stage)), ("elapsed_ns", Value::U64(elapsed_ns))],
+            );
+        }
+    }
+}

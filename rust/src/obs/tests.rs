@@ -1,0 +1,234 @@
+//! Unit tests for the observability layer: instrument semantics, the
+//! fake-clock golden exposition page, the exposition grammar validator,
+//! JSON log filtering/escaping, and the I-18 lock — telemetry never
+//! perturbs deterministic outputs.
+
+use super::clock::FakeClock;
+use super::log::{self, Level};
+use super::prom;
+use super::registry::{Histogram, Registry};
+use super::latency_buckets;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// The JSON log mode is process-global state; tests that flip it hold
+/// this lock so they cannot race each other under the parallel test
+/// runner.
+fn log_mode_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fake_registry() -> (Arc<FakeClock>, Registry) {
+    let clock = Arc::new(FakeClock::new());
+    let reg = Registry::new(clock.clone());
+    (clock, reg)
+}
+
+// -------------------------------------------------------------- instruments
+
+#[test]
+fn counters_and_gauges_do_arithmetic() {
+    let (_, reg) = fake_registry();
+    let c = reg.counter("qckm_test_total", "t", &[]);
+    c.inc();
+    c.add(41);
+    assert_eq!(c.get(), 42);
+    let g = reg.gauge("qckm_test_gauge", "t", &[]);
+    g.set(-2.5);
+    assert_eq!(g.get(), -2.5);
+}
+
+#[test]
+fn registration_is_idempotent_and_labels_are_order_invariant() {
+    let (_, reg) = fake_registry();
+    let a = reg.counter("qckm_test_total", "t", &[("x", "1"), ("y", "2")]);
+    let b = reg.counter("qckm_test_total", "t", &[("y", "2"), ("x", "1")]);
+    a.inc();
+    assert_eq!(b.get(), 1, "same (name, labels) must share one counter");
+    let other = reg.counter("qckm_test_total", "t", &[("x", "other")]);
+    assert_eq!(other.get(), 0, "different labels are a different series");
+}
+
+#[test]
+#[should_panic(expected = "already registered")]
+fn kind_conflict_panics() {
+    let (_, reg) = fake_registry();
+    let _ = reg.counter("qckm_test_total", "t", &[]);
+    let _ = reg.gauge("qckm_test_total", "t", &[]);
+}
+
+#[test]
+fn histogram_buckets_are_le_inclusive() {
+    let (_, reg) = fake_registry();
+    let h = reg.histogram("qckm_test_seconds", "t", &[], &[1.0, 10.0]);
+    h.observe(1.0); // exactly a bound: belongs to that bucket (v <= le)
+    h.observe(0.5);
+    h.observe(10.5); // overflows into +Inf
+    h.observe(f64::NAN); // NaN compares false everywhere -> +Inf
+    let (buckets, count, _) = h.snapshot();
+    assert_eq!(buckets, vec![2, 0, 2]);
+    assert_eq!(count, 4);
+    assert!(h.sum().is_nan());
+}
+
+#[test]
+fn log_boundaries_are_geometric() {
+    let b = Histogram::log_boundaries(1e-6, 4.0, 3);
+    assert_eq!(b, vec![1e-6, 4e-6, 1.6e-5]);
+    let lat = latency_buckets();
+    assert_eq!(lat.len(), 16);
+    assert!(lat.windows(2).all(|w| w[0] < w[1]));
+}
+
+// ------------------------------------------------------- golden exposition
+
+/// The fake-clock golden test the ISSUE names: spans timed on a settable
+/// clock make the whole page an exact constant.
+#[test]
+fn fake_clock_exposition_page_is_golden() {
+    let (clock, reg) = fake_registry();
+    let c = reg.counter("qckm_requests_total", "Requests handled.", &[("verb", "push")]);
+    c.add(3);
+    let h = reg.histogram("qckm_request_seconds", "Latency.", &[], &[0.001, 0.01, 0.1]);
+    {
+        let _span = reg.span("request", &h);
+        clock.advance_ns(2_000_000); // exactly 2 ms
+    }
+    let page = reg.render();
+    let expected = "\
+# HELP qckm_request_seconds Latency.
+# TYPE qckm_request_seconds histogram
+qckm_request_seconds_bucket{le=\"0.001\"} 0
+qckm_request_seconds_bucket{le=\"0.01\"} 1
+qckm_request_seconds_bucket{le=\"0.1\"} 1
+qckm_request_seconds_bucket{le=\"+Inf\"} 1
+qckm_request_seconds_sum 0.002
+qckm_request_seconds_count 1
+# HELP qckm_requests_total Requests handled.
+# TYPE qckm_requests_total counter
+qckm_requests_total{verb=\"push\"} 3
+";
+    assert_eq!(page, expected);
+    prom::validate(&page).unwrap();
+}
+
+#[test]
+fn exposition_validator_accepts_the_global_page_and_rejects_junk() {
+    // Touch the library families so the global page is non-trivial.
+    let _ = super::lib_metrics();
+    let _ = super::decode_seconds("clompr");
+    let page = super::global().render();
+    assert!(page.contains("qckm_stream_rows_total"));
+    // Display formatting never goes scientific: the first latency bound
+    // (1 µs) renders as a plain decimal.
+    assert!(page.contains("qckm_decode_seconds_bucket{decoder=\"clompr\",le=\"0.000001\"}"));
+    prom::validate(&page).unwrap();
+
+    for bad in [
+        "no_value_here",
+        "1leading_digit 3",
+        "name{unclosed=\"x\" 3",
+        "name{le=0.1} 3",
+        "name{} not_a_number",
+        "# WAT name counter",
+        "# TYPE name flavor",
+    ] {
+        assert!(prom::validate(bad).is_err(), "accepted {bad:?}");
+    }
+    for good in [
+        "name 3",
+        "name{a=\"b\",c=\"d e,f\"} 0.25",
+        "name{a=\"quote \\\" and brace } inside\"} +Inf",
+        "# HELP name some help",
+        "# TYPE name histogram",
+        "",
+    ] {
+        assert!(prom::validate(good).is_ok(), "rejected {good:?}");
+    }
+}
+
+#[test]
+fn label_values_are_escaped_in_exposition() {
+    let (_, reg) = fake_registry();
+    let c = reg.counter("qckm_test_total", "t", &[("path", "a\"b\\c\nd")]);
+    c.inc();
+    let page = reg.render();
+    assert!(page.contains("qckm_test_total{path=\"a\\\"b\\\\c\\nd\"} 1"));
+    prom::validate(&page).unwrap();
+}
+
+// ------------------------------------------------------------ structured log
+
+#[test]
+fn json_log_mode_filters_by_level() {
+    let _guard = log_mode_lock();
+    log::set_json(false, Level::Debug);
+    assert!(!log::enabled(Level::Error), "off means nothing is enabled");
+    log::set_json(true, Level::Warn);
+    assert!(log::enabled(Level::Error));
+    assert!(log::enabled(Level::Warn));
+    assert!(!log::enabled(Level::Info));
+    assert!(!log::enabled(Level::Debug));
+    log::set_json(true, Level::Debug);
+    assert!(log::enabled(Level::Debug));
+    // Emit one of each shape — exercises the writer path end to end.
+    log::event(
+        Level::Info,
+        "test \"quoted\"",
+        &[
+            ("s", log::Value::Str("line\nbreak")),
+            ("u", log::Value::U64(7)),
+            ("i", log::Value::I64(-7)),
+            ("f", log::Value::F64(0.5)),
+            ("nan", log::Value::F64(f64::NAN)),
+            ("b", log::Value::Bool(true)),
+        ],
+    );
+    log::set_json(false, Level::Info);
+}
+
+// ------------------------------------------------------------------- I-18
+
+/// INVARIANTS.md I-18: telemetry is observational only. The same decode —
+/// through the instrumented parallel runner, CL-OMPR step spans, and
+/// per-family decode histograms — must be bit-for-bit identical with JSON
+/// span logging at debug level versus logging off.
+#[test]
+fn telemetry_never_perturbs_outputs() {
+    use crate::clompr::ClOmprParams;
+    use crate::decoder::DecoderSpec;
+    use crate::frequency::{DrawnFrequencies, FrequencyLaw};
+    use crate::parallel::Parallelism;
+    use crate::rng::Rng;
+    use crate::sketch::SketchOperator;
+
+    let run = || {
+        let mut rng = Rng::new(9);
+        let data = crate::data::gaussian_mixture_pm1(300, 3, 2, &mut rng);
+        let freqs =
+            DrawnFrequencies::draw(FrequencyLaw::AdaptedRadius, 3, 48, 1.0, &mut Rng::new(5));
+        let op = SketchOperator::quantized(freqs);
+        let z = op.sketch_dataset_par(&data.points, &Parallelism::fixed(2));
+        let spec = DecoderSpec::parse("clompr").unwrap();
+        let sol = spec.decode_best_of(
+            &op,
+            2,
+            &z,
+            vec![-1.0; 3],
+            vec![1.0; 3],
+            &ClOmprParams::default(),
+            1,
+            &mut Rng::new(1),
+        );
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        (bits(sol.centroids.as_slice()), bits(&sol.weights), sol.objective.to_bits())
+    };
+
+    let _guard = log_mode_lock();
+    log::set_json(false, Level::Info);
+    let quiet = run();
+    log::set_json(true, Level::Debug); // every span now also emits a line
+    let loud = run();
+    log::set_json(false, Level::Info);
+    assert_eq!(quiet, loud, "telemetry must never perturb decode outputs");
+}

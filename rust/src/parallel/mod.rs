@@ -112,18 +112,29 @@ where
     let chunks = fixed_chunks(total, chunk);
     let n_chunks = chunks.len();
     let threads = par.resolved_threads().clamp(1, n_chunks.max(1));
+    // Per-run and per-chunk accounting (observational only, I-18): the
+    // chunk histogram is how utilization shows up — if per-chunk times
+    // vary wildly, dynamic stealing is doing real balancing work. Costs a
+    // few relaxed atomics per chunk, negligible against the chunk itself.
+    let m = crate::obs::lib_metrics();
+    m.parallel_runs.inc();
+    m.parallel_chunks.add(n_chunks as u64);
+    let timed_work = |i: usize, range: Range<usize>| {
+        let _span = crate::obs::global().span("parallel_chunk", &m.parallel_chunk_seconds);
+        work(i, range)
+    };
     if threads <= 1 {
         return chunks
             .into_iter()
             .enumerate()
-            .map(|(i, range)| work(i, range))
+            .map(|(i, range)| timed_work(i, range))
             .collect();
     }
 
     let next = AtomicUsize::new(0);
     let next_ref = &next;
     let chunks_ref = &chunks;
-    let work_ref = &work;
+    let work_ref = &timed_work;
     let per_thread: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..threads)
             .map(|_| {

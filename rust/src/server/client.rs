@@ -7,6 +7,7 @@ use super::proto::{
     self, CentroidReport, QuerySpec, Request, Response, StatsReport,
 };
 use crate::linalg::Mat;
+use crate::obs::log::{self, Level, Value};
 use anyhow::{bail, Context, Result};
 use std::fmt;
 use std::net::TcpStream;
@@ -129,6 +130,14 @@ impl Client {
         }
     }
 
+    /// Fetch the server's metrics registry as a Prometheus text page.
+    pub fn metrics(&mut self) -> Result<String> {
+        match self.call(&Request::Metrics)? {
+            Response::Metrics(page) => Ok(page),
+            other => bail!("unexpected reply to metrics: {other:?}"),
+        }
+    }
+
     /// Ask the server to stop (acked before it exits).
     pub fn shutdown(&mut self) -> Result<()> {
         match self.call(&Request::Shutdown)? {
@@ -189,6 +198,11 @@ pub struct RetryClient {
     method: String,
     policy: RetryPolicy,
     inner: Option<Client>,
+    /// Reconnect attempts made over this client's lifetime (also counted
+    /// in the global registry as `qckm_retry_attempts_total`).
+    attempts_total: u64,
+    /// Total backoff slept (also `qckm_retry_backoff_ms_total`).
+    backoff_total: Duration,
 }
 
 impl RetryClient {
@@ -201,9 +215,18 @@ impl RetryClient {
             method: method.to_string(),
             policy,
             inner: None,
+            attempts_total: 0,
+            backoff_total: Duration::ZERO,
         };
         rc.with_retry(|_| Ok(()))?;
         Ok(rc)
+    }
+
+    /// Retry counters for this client: (reconnect attempts, total backoff
+    /// slept). Zero attempts means no transport failure ever occurred —
+    /// the summary `qckm push` prints on exit.
+    pub fn retry_stats(&self) -> (u64, Duration) {
+        (self.attempts_total, self.backoff_total)
     }
 
     fn client(&mut self) -> Result<&mut Client> {
@@ -237,6 +260,23 @@ impl RetryClient {
                     }
                     let delay = self.policy.delay(attempt);
                     attempt += 1;
+                    self.attempts_total += 1;
+                    self.backoff_total += delay;
+                    let m = crate::obs::lib_metrics();
+                    m.retry_attempts.inc();
+                    m.retry_backoff_ms.add(delay.as_millis().min(u64::MAX as u128) as u64);
+                    if log::enabled(Level::Warn) {
+                        log::event(
+                            Level::Warn,
+                            "retry",
+                            &[
+                                ("addr", Value::Str(&self.addr)),
+                                ("attempt", Value::U64(attempt as u64)),
+                                ("backoff_ms", Value::U64(delay.as_millis() as u64)),
+                                ("error", Value::Str(&format!("{e:#}"))),
+                            ],
+                        );
+                    }
                     eprintln!(
                         "push: {e:#}; retrying in {delay:?} (attempt {attempt}/{})",
                         self.policy.attempts

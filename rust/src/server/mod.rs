@@ -7,7 +7,9 @@
 //! (`qckm sketch` → `merge` → `decode`) into an always-on TCP service:
 //!
 //! * [`proto`] — a dependency-free length-prefixed binary protocol
-//!   (push / query / snapshot / roll / stats / shutdown) over TCP.
+//!   (push / query / snapshot / roll / stats / metrics / shutdown) over
+//!   TCP; `metrics` returns the node's Prometheus exposition page (see
+//!   [`crate::obs`]).
 //! * [`SketchService`] — the shared server state: one accumulator per
 //!   *shard* (the client-chosen partition label), a ring of per-epoch
 //!   windows so queries can ask for "the last E epochs" as well as

@@ -25,8 +25,10 @@ use std::io::{Read, Write};
 /// and to the stats report. Version 3 added the decoder-spec string to
 /// query frames (the centroid cache keys on it, so a query can never be
 /// served centroids decoded under a different algorithm) and per-decoder
-/// query counters to the stats report.
-pub const PROTO_VERSION: u8 = 3;
+/// query counters to the stats report. Version 4 added the metrics verb
+/// (a Prometheus text page response, `qckm ctl metrics`) and the
+/// `max_shards` capacity field to the stats report.
+pub const PROTO_VERSION: u8 = 4;
 /// Hard ceiling on one frame's payload (256 MiB) — covers the largest
 /// plausible push batch and snapshot while bounding allocations.
 pub const MAX_FRAME_BYTES: usize = 1 << 28;
@@ -54,6 +56,11 @@ pub const MAX_DECODER_BYTES: usize = 64;
 /// truncation a long server error would decode client-side as
 /// "implausible string field" instead of the actual message.
 pub const MAX_ERROR_BYTES: usize = 1 << 16;
+/// Ceiling on a metrics page's bytes (4 MiB), enforced like
+/// [`MAX_ERROR_BYTES`] on both sides: `encode_response` truncates on a
+/// char boundary with a marker, `decode_response` refuses anything
+/// longer. A real page is kilobytes; the cap only bounds a hostile peer.
+pub const MAX_METRICS_BYTES: usize = 1 << 22;
 
 const TAG_PUSH: u8 = 1;
 const TAG_QUERY: u8 = 2;
@@ -61,6 +68,7 @@ const TAG_SNAPSHOT: u8 = 3;
 const TAG_ROLL: u8 = 4;
 const TAG_STATS: u8 = 5;
 const TAG_SHUTDOWN: u8 = 6;
+const TAG_METRICS: u8 = 7;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
@@ -119,6 +127,10 @@ pub struct StatsReport {
     pub rows_total: u64,
     /// Closed epochs currently held in the window ring.
     pub epochs_held: u32,
+    /// The server's shard-label cap ([`crate::server::ServiceConfig::max_shards`]) —
+    /// reported so operators can see headroom against the cap (refusals
+    /// start when `shards.len()` reaches it).
+    pub max_shards: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
     /// All-time per-shard row counts, in stable shard-key order.
@@ -154,8 +166,26 @@ pub enum Request {
     Roll,
     /// Report counters.
     Stats,
+    /// Render the server's metrics registry as a Prometheus text page.
+    Metrics,
     /// Stop the server (responds before exiting).
     Shutdown,
+}
+
+impl Request {
+    /// The request's protocol verb name — the `verb` label on the
+    /// server's request counters and latency histograms.
+    pub fn verb(&self) -> &'static str {
+        match self {
+            Request::Push { .. } => "push",
+            Request::Query { .. } => "query",
+            Request::Snapshot { .. } => "snapshot",
+            Request::Roll => "roll",
+            Request::Stats => "stats",
+            Request::Metrics => "metrics",
+            Request::Shutdown => "shutdown",
+        }
+    }
 }
 
 /// Server → client messages.
@@ -172,6 +202,8 @@ pub enum Response {
     /// Epoch rolled: the new open epoch's index and the closed epoch's rows.
     RollAck { epoch: u64, rows_closed: u64 },
     Stats(StatsReport),
+    /// A Prometheus text-format exposition page.
+    Metrics(String),
     ShutdownAck,
 }
 
@@ -282,6 +314,7 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
         }
         Request::Roll => b.push(TAG_ROLL),
         Request::Stats => b.push(TAG_STATS),
+        Request::Metrics => b.push(TAG_METRICS),
         Request::Shutdown => b.push(TAG_SHUTDOWN),
     }
     b
@@ -356,6 +389,7 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
         },
         TAG_ROLL => Request::Roll,
         TAG_STATS => Request::Stats,
+        TAG_METRICS => Request::Metrics,
         TAG_SHUTDOWN => Request::Shutdown,
         tag => bail!("unknown request tag {tag}"),
     };
@@ -369,7 +403,7 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
     match resp {
         Response::Error(msg) => {
             b.push(STATUS_ERR);
-            put_str(&mut b, &truncate_error(msg));
+            put_str(&mut b, &truncate_to(msg, MAX_ERROR_BYTES));
         }
         Response::PushAck {
             shard_rows,
@@ -415,6 +449,7 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             b.extend_from_slice(&s.epoch.to_le_bytes());
             b.extend_from_slice(&s.rows_total.to_le_bytes());
             b.extend_from_slice(&s.epochs_held.to_le_bytes());
+            b.extend_from_slice(&s.max_shards.to_le_bytes());
             b.extend_from_slice(&s.cache_hits.to_le_bytes());
             b.extend_from_slice(&s.cache_misses.to_le_bytes());
             b.extend_from_slice(&(s.shards.len() as u32).to_le_bytes());
@@ -427,6 +462,11 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
                 put_str(&mut b, spec);
                 b.extend_from_slice(&queries.to_le_bytes());
             }
+        }
+        Response::Metrics(page) => {
+            b.push(STATUS_OK);
+            b.push(TAG_METRICS);
+            put_str(&mut b, &truncate_to(page, MAX_METRICS_BYTES));
         }
         Response::ShutdownAck => {
             b.push(STATUS_OK);
@@ -493,6 +533,7 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
             let epoch = r.u64()?;
             let rows_total = r.u64()?;
             let epochs_held = r.u32()?;
+            let max_shards = r.u64()?;
             let cache_hits = r.u64()?;
             let cache_misses = r.u64()?;
             let n = r.u32()? as usize;
@@ -520,12 +561,14 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
                 epoch,
                 rows_total,
                 epochs_held,
+                max_shards,
                 cache_hits,
                 cache_misses,
                 shards,
                 decoders,
             })
         }
+        TAG_METRICS => Response::Metrics(r.str(MAX_METRICS_BYTES)?),
         TAG_SHUTDOWN => Response::ShutdownAck,
         tag => bail!("unknown response tag {tag}"),
     };
@@ -535,16 +578,17 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
 
 // --------------------------------------------------------------- primitives
 
-/// Clamp an error message to [`MAX_ERROR_BYTES`] so the encode side never
-/// emits a string the decode side refuses. Truncation lands on a UTF-8
-/// char boundary and appends a marker so the client can tell the message
-/// was cut rather than malformed.
-fn truncate_error(msg: &str) -> std::borrow::Cow<'_, str> {
+/// Clamp a string field to its decode-side cap so the encode side never
+/// emits a string the decode side refuses (error messages to
+/// [`MAX_ERROR_BYTES`], metrics pages to [`MAX_METRICS_BYTES`]).
+/// Truncation lands on a UTF-8 char boundary and appends a marker so the
+/// client can tell the content was cut rather than malformed.
+fn truncate_to(msg: &str, cap: usize) -> std::borrow::Cow<'_, str> {
     const MARKER: &str = "… [truncated]";
-    if msg.len() <= MAX_ERROR_BYTES {
+    if msg.len() <= cap {
         return std::borrow::Cow::Borrowed(msg);
     }
-    let mut cut = MAX_ERROR_BYTES - MARKER.len();
+    let mut cut = cap - MARKER.len();
     while !msg.is_char_boundary(cut) {
         cut -= 1;
     }

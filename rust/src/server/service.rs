@@ -13,6 +13,7 @@
 use super::proto::{self, Request, Response};
 use super::state::SketchService;
 use crate::linalg::Mat;
+use crate::obs::log::{self, Level, Value};
 use anyhow::{bail, Context, Result};
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -89,6 +90,14 @@ fn handle_connection(
         let response = match proto::decode_request(&payload) {
             Err(e) => Response::Error(format!("{e:#}")),
             Ok(Request::Shutdown) => {
+                let _span = service.request_span("shutdown");
+                if log::enabled(Level::Info) {
+                    log::event(
+                        Level::Info,
+                        "request",
+                        &[("verb", Value::Str("shutdown")), ("ok", Value::Bool(true))],
+                    );
+                }
                 proto::write_response(&mut stream, &Response::ShutdownAck)?;
                 stop.store(true, Ordering::SeqCst);
                 // Wake the accept loop so it observes the flag. An
@@ -110,8 +119,24 @@ fn handle_connection(
     }
 }
 
-/// Dispatch one request against the shared state.
+/// Dispatch one request against the shared state, counting it and timing
+/// it under its verb's metrics; with JSON logging on, one info-level
+/// `request` event records the verb and outcome.
 fn handle_request(service: &SketchService, req: Request) -> Result<Response> {
+    let verb = req.verb();
+    let _span = service.request_span(verb);
+    let result = dispatch(service, req);
+    if log::enabled(Level::Info) {
+        log::event(
+            Level::Info,
+            "request",
+            &[("verb", Value::Str(verb)), ("ok", Value::Bool(result.is_ok()))],
+        );
+    }
+    result
+}
+
+fn dispatch(service: &SketchService, req: Request) -> Result<Response> {
     Ok(match req {
         Request::Push {
             shard,
@@ -141,6 +166,7 @@ fn handle_request(service: &SketchService, req: Request) -> Result<Response> {
             Response::RollAck { epoch, rows_closed }
         }
         Request::Stats => Response::Stats(service.stats()),
+        Request::Metrics => Response::Metrics(service.render_metrics()),
         Request::Shutdown => unreachable!("handled by the connection loop"),
     })
 }

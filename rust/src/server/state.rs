@@ -40,13 +40,14 @@
 use crate::clompr::ClOmprParams;
 use crate::decoder::DecoderSpec;
 use crate::linalg::Mat;
+use crate::obs::{Counter, Histogram, Registry, Span};
 use crate::parallel::Parallelism;
 use crate::rng::Rng;
 use crate::sketch::{PooledSketch, SketchOperator};
 use crate::stream::{pool_fingerprint, write_sketch_to, ShardRecord, SketchMeta};
 use anyhow::{bail, Result};
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use super::proto::{CentroidReport, QuerySpec, StatsReport, MAX_SHARD_BYTES};
 
@@ -71,6 +72,12 @@ pub struct ServiceConfig {
     /// [`crate::decoder::DecoderSpec`] (default `clompr`), whose explicit
     /// params override fields of this base.
     pub decode: ClOmprParams,
+    /// Where the service registers its counters/histograms. The default
+    /// is a fresh private registry (so in-process unit-test services
+    /// never share counters); `qckm serve` passes
+    /// [`crate::obs::global`] so one `ctl metrics` scrape covers the
+    /// server alongside the stream/decoder/parallel library metrics.
+    pub registry: Arc<Registry>,
 }
 
 impl Default for ServiceConfig {
@@ -81,6 +88,92 @@ impl Default for ServiceConfig {
             threads: Parallelism::serial(),
             max_shards: 1024,
             decode: ClOmprParams::default(),
+            registry: Arc::new(Registry::new(Arc::new(crate::obs::MonotonicClock::new()))),
+        }
+    }
+}
+
+/// The protocol verbs, in tag order — the label set of the per-verb
+/// request counters and latency histograms.
+const VERBS: [&str; 7] = ["push", "query", "snapshot", "roll", "stats", "metrics", "shutdown"];
+
+/// The service's registered instruments, resolved once at construction so
+/// the request path never does a name lookup.
+struct ServerMetrics {
+    /// `qckm_requests_total{verb}` / `qckm_request_seconds{verb}`,
+    /// indexed like [`VERBS`].
+    verbs: Vec<(&'static str, Arc<Counter>, Arc<Histogram>)>,
+    /// `qckm_push_rows_total` — rows accepted into shard accumulators.
+    push_rows: Arc<Counter>,
+    /// `qckm_push_bytes_total` — accepted row payload bytes (rows × dim × 8).
+    push_bytes: Arc<Counter>,
+    /// `qckm_ingest_encode_seconds` — per-batch parallel sketch encode.
+    encode_seconds: Arc<Histogram>,
+    /// `qckm_window_merge_seconds` — merging a query/snapshot window.
+    window_merge_seconds: Arc<Histogram>,
+    /// `qckm_cache_hits_total` / `qckm_cache_misses_total` — the centroid
+    /// cache (these back [`StatsReport`]'s fields; there is no separate
+    /// hand-rolled counter anymore).
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+}
+
+impl ServerMetrics {
+    fn new(reg: &Registry) -> Self {
+        let lat = crate::obs::latency_buckets();
+        let verbs = VERBS
+            .iter()
+            .map(|&verb| {
+                (
+                    verb,
+                    reg.counter(
+                        "qckm_requests_total",
+                        "Requests handled, by protocol verb.",
+                        &[("verb", verb)],
+                    ),
+                    reg.histogram(
+                        "qckm_request_seconds",
+                        "Request handling latency, by protocol verb.",
+                        &[("verb", verb)],
+                        &lat,
+                    ),
+                )
+            })
+            .collect();
+        Self {
+            verbs,
+            push_rows: reg.counter(
+                "qckm_push_rows_total",
+                "Rows accepted into shard accumulators.",
+                &[],
+            ),
+            push_bytes: reg.counter(
+                "qckm_push_bytes_total",
+                "Accepted push payload bytes (rows x dim x 8).",
+                &[],
+            ),
+            encode_seconds: reg.histogram(
+                "qckm_ingest_encode_seconds",
+                "Parallel sketch encode of one push batch.",
+                &[],
+                &lat,
+            ),
+            window_merge_seconds: reg.histogram(
+                "qckm_window_merge_seconds",
+                "Merging one query/snapshot window from shard accumulators.",
+                &[],
+                &lat,
+            ),
+            cache_hits: reg.counter(
+                "qckm_cache_hits_total",
+                "Centroid-cache hits (query answered without decoding).",
+                &[],
+            ),
+            cache_misses: reg.counter(
+                "qckm_cache_misses_total",
+                "Centroid-cache misses (a decode ran).",
+                &[],
+            ),
         }
     }
 }
@@ -112,10 +205,9 @@ struct Inner {
     closed: VecDeque<ClosedEpoch>,
     /// All-time accumulators — never evicted, the window-0 source.
     alltime: BTreeMap<String, PooledSketch>,
-    /// Centroid cache: (key, report) in insertion order.
+    /// Centroid cache: (key, report) in insertion order. Hit/miss
+    /// counters live in [`ServerMetrics`], not here.
     cache: VecDeque<(u64, CentroidReport)>,
-    cache_hits: u64,
-    cache_misses: u64,
     /// Queries answered per canonical decoder spec (hits and misses) —
     /// the stats view of which decode algorithms this server is running.
     /// Bounded at [`MAX_DECODER_STATS`] distinct specs (clients choose the
@@ -142,6 +234,7 @@ pub struct SketchService {
     op: SketchOperator,
     meta: SketchMeta,
     cfg: ServiceConfig,
+    metrics: ServerMetrics,
     inner: Mutex<Inner>,
 }
 
@@ -155,21 +248,40 @@ impl SketchService {
             crate::stream::operator_fingerprint(&op),
             "meta does not describe the operator"
         );
+        let metrics = ServerMetrics::new(&cfg.registry);
         Self {
             op,
             meta,
             cfg,
+            metrics,
             inner: Mutex::new(Inner {
                 epoch_index: 0,
                 current: BTreeMap::new(),
                 closed: VecDeque::new(),
                 alltime: BTreeMap::new(),
                 cache: VecDeque::new(),
-                cache_hits: 0,
-                cache_misses: 0,
                 decoder_uses: BTreeMap::new(),
             }),
         }
+    }
+
+    /// Count one request of `verb` and start its latency span (drop the
+    /// span when the response is ready). Used by the connection handler.
+    pub(crate) fn request_span(&self, verb: &'static str) -> Span {
+        let (_, count, seconds) = self
+            .metrics
+            .verbs
+            .iter()
+            .find(|(v, _, _)| *v == verb)
+            .expect("unknown protocol verb");
+        count.inc();
+        self.cfg.registry.span(verb, seconds)
+    }
+
+    /// Render this service's metrics registry as a Prometheus text page —
+    /// the body of the `ctl metrics` response.
+    pub fn render_metrics(&self) -> String {
+        self.cfg.registry.render()
     }
 
     /// Acquire the state lock, recovering from poisoning. A panic while
@@ -275,6 +387,10 @@ impl SketchService {
         }
         let mut partial = PooledSketch::new(self.op.sketch_len());
         if batch.rows() > 0 {
+            let _span = self
+                .cfg
+                .registry
+                .span("ingest_encode", &self.metrics.encode_seconds);
             self.op.sketch_into_par(batch, &mut partial, &self.cfg.threads);
         }
         let mut inner = self.locked();
@@ -303,6 +419,11 @@ impl SketchService {
         shard_pool.merge(&partial);
         let shard_rows = shard_pool.count();
         let total_rows = inner.alltime.values().map(|p| p.count()).sum();
+        // Counted after the cap check: these are *accepted* rows/bytes.
+        self.metrics.push_rows.add(batch.rows() as u64);
+        self.metrics
+            .push_bytes
+            .add((batch.rows() * batch.cols() * 8) as u64);
         Ok((shard_rows, total_rows))
     }
 
@@ -326,6 +447,10 @@ impl SketchService {
     /// chronologically, shards in key order within each epoch (window 0:
     /// the all-time shard accumulators in key order).
     pub fn merge_window(&self, window: u32) -> WindowPool {
+        let _span = self
+            .cfg
+            .registry
+            .span("window_merge", &self.metrics.window_merge_seconds);
         let inner = self.locked();
         let mut pool = PooledSketch::new(self.op.sketch_len());
         let mut provenance = Vec::new();
@@ -419,10 +544,10 @@ impl SketchService {
                 // epoch bookkeeping must come from THIS merge, not the
                 // cached one.
                 hit.epochs = window.epochs;
-                inner.cache_hits += 1;
+                self.metrics.cache_hits.inc();
                 return Ok(hit);
             }
-            inner.cache_misses += 1;
+            self.metrics.cache_misses.inc();
         }
 
         let dim = self.op.dim();
@@ -483,8 +608,9 @@ impl SketchService {
             epoch: inner.epoch_index,
             rows_total: inner.alltime.values().map(|p| p.count()).sum(),
             epochs_held: inner.closed.len() as u32,
-            cache_hits: inner.cache_hits,
-            cache_misses: inner.cache_misses,
+            max_shards: self.cfg.max_shards as u64,
+            cache_hits: self.metrics.cache_hits.get(),
+            cache_misses: self.metrics.cache_misses.get(),
             shards: inner
                 .alltime
                 .iter()

@@ -82,6 +82,7 @@ fn proto_round_trips_every_request_variant() {
         },
         Request::Roll,
         Request::Stats,
+        Request::Metrics,
         Request::Shutdown,
     ];
     for req in &requests {
@@ -118,11 +119,13 @@ fn proto_round_trips_every_response_variant() {
             epoch: 2,
             rows_total: 77,
             epochs_held: 2,
+            max_shards: 1024,
             cache_hits: 5,
             cache_misses: 6,
             shards: vec![("a".into(), 40), ("b".into(), 37)],
             decoders: vec![("clompr".into(), 9), ("hier".into(), 2)],
         }),
+        Response::Metrics("# HELP qckm_requests_total req\n".into()),
         Response::ShutdownAck,
     ];
     for resp in &responses {
@@ -215,6 +218,51 @@ fn error_responses_truncate_to_the_decode_cap() {
     let short = "x".repeat(proto::MAX_ERROR_BYTES);
     let bytes = proto::encode_response(&Response::Error(short.clone()));
     assert_eq!(proto::decode_response(&bytes).unwrap(), Response::Error(short));
+}
+
+/// Metrics pages get the same both-side truncation treatment as error
+/// strings: the encoder cuts to [`proto::MAX_METRICS_BYTES`] on a char
+/// boundary with a marker, so any decoded page re-encodes identically
+/// (the canonicalization fixed-point the fuzz suite relies on).
+#[test]
+fn metrics_responses_truncate_to_the_decode_cap() {
+    let long = "x".repeat(proto::MAX_METRICS_BYTES + 100);
+    let bytes = proto::encode_response(&Response::Metrics(long));
+    let Response::Metrics(page) = proto::decode_response(&bytes).unwrap() else {
+        panic!("expected a metrics response");
+    };
+    assert!(page.len() <= proto::MAX_METRICS_BYTES);
+    assert!(page.ends_with("[truncated]"), "missing truncation marker");
+
+    let short = "# HELP a b\n".to_string();
+    let bytes = proto::encode_response(&Response::Metrics(short.clone()));
+    assert_eq!(proto::decode_response(&bytes).unwrap(), Response::Metrics(short));
+}
+
+/// The service's exposition page is valid Prometheus text and covers the
+/// server families even before their stages have run (registration is
+/// eager, so a scrape lists the whole catalog at zero).
+#[test]
+fn metrics_page_covers_server_families_and_validates() {
+    let svc = service(ServiceConfig::default());
+    let mut rng = Rng::new(21);
+    let data = crate::data::gaussian_mixture_pm1(400, DIM, 2, &mut rng);
+    svc.ingest("s", &data.points).unwrap();
+    let _ = svc.query(&spec(2, 0)).unwrap(); // miss → decode
+    let _ = svc.query(&spec(2, 0)).unwrap(); // hit
+    let page = svc.render_metrics();
+    crate::obs::prom::validate(&page).unwrap_or_else(|e| panic!("{e:#}\n{page}"));
+    for needle in [
+        "qckm_requests_total{verb=\"push\"} 0", // direct state calls skip request spans
+        "qckm_requests_total{verb=\"metrics\"} 0",
+        "qckm_push_rows_total 400",
+        "qckm_ingest_encode_seconds_count 1",
+        "qckm_window_merge_seconds_count",
+        "qckm_cache_hits_total 1",
+        "qckm_cache_misses_total 1",
+    ] {
+        assert!(page.contains(needle), "missing `{needle}` in page:\n{page}");
+    }
 }
 
 // ------------------------------------------------------------------- state
@@ -666,7 +714,15 @@ fn socket_smoke_push_query_snapshot_shutdown() {
     let stats = client.stats().unwrap();
     assert_eq!(stats.rows_total, 800);
     assert_eq!(stats.shards.len(), 2);
+    assert_eq!(stats.max_shards, 1024);
     assert_eq!(stats.method, "qckm");
+
+    // A metrics scrape over the same socket: valid exposition text whose
+    // request counters reflect the traffic this test just generated.
+    let page = client.metrics().unwrap();
+    crate::obs::prom::validate(&page).unwrap_or_else(|e| panic!("{e:#}\n{page}"));
+    assert!(page.contains("qckm_requests_total{verb=\"push\"} 2"), "{page}");
+    assert!(page.contains("qckm_push_rows_total 800"), "{page}");
 
     client.shutdown().unwrap();
     let served = server.join().unwrap();

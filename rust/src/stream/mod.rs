@@ -111,6 +111,11 @@ pub fn sketch_reader(
         if rows == 0 {
             break;
         }
+        // Observational only (I-18): a rows counter plus one span per
+        // window into `qckm_stream_window_seconds`.
+        let m = crate::obs::lib_metrics();
+        m.stream_rows.add(rows as u64);
+        let _span = crate::obs::global().span("stream_window", &m.stream_window_seconds);
         let window = Mat::from_vec(rows, dim, buf);
         let partials = parallel::run_chunked(rows, PAR_CHUNK_ROWS, par, |_, range| match wire {
             WireFormat::DenseF64 => {

@@ -137,6 +137,7 @@ fn request_corpus() -> Vec<Vec<u8>> {
         },
         Request::Roll,
         Request::Stats,
+        Request::Metrics,
         Request::Shutdown,
     ];
     requests.iter().map(proto::encode_request).collect()
@@ -169,11 +170,18 @@ fn response_corpus() -> Vec<Vec<u8>> {
             epoch: 2,
             rows_total: 77,
             epochs_held: 2,
+            max_shards: 1024,
             cache_hits: 5,
             cache_misses: 6,
             shards: vec![("a".into(), 40), ("b".into(), 37)],
             decoders: vec![("clompr".into(), 9), ("hier".into(), 2)],
         }),
+        Response::Metrics(
+            "# HELP qckm_requests_total Requests received, by verb.\n\
+             # TYPE qckm_requests_total counter\n\
+             qckm_requests_total{verb=\"push\"} 3\n"
+                .into(),
+        ),
         Response::ShutdownAck,
     ];
     responses.iter().map(proto::encode_response).collect()

@@ -360,7 +360,7 @@ fn random_query_spec(g: &mut Gen) -> QuerySpec {
 }
 
 fn random_request(g: &mut Gen) -> Request {
-    match g.usize_in(0, 5) {
+    match g.usize_in(0, 6) {
         0 => {
             let dim = g.usize_in(1, 6);
             let rows = g.usize_in(1, 20);
@@ -381,12 +381,13 @@ fn random_request(g: &mut Gen) -> Request {
         },
         3 => Request::Roll,
         4 => Request::Stats,
+        5 => Request::Metrics,
         _ => Request::Shutdown,
     }
 }
 
 fn random_response(g: &mut Gen) -> Response {
-    match g.usize_in(0, 6) {
+    match g.usize_in(0, 7) {
         0 => Response::Error(ascii_label(g, 1, 200)),
         1 => Response::PushAck {
             shard_rows: g.rng().next_u64(),
@@ -426,12 +427,14 @@ fn random_response(g: &mut Gen) -> Response {
                 epoch: g.rng().next_u64(),
                 rows_total: g.rng().next_u64(),
                 epochs_held: g.usize_in(0, 64) as u32,
+                max_shards: g.rng().next_u64(),
                 cache_hits: g.rng().next_u64(),
                 cache_misses: g.rng().next_u64(),
                 shards,
                 decoders,
             })
         }
+        6 => Response::Metrics(ascii_label(g, 0, 400)),
         _ => Response::ShutdownAck,
     }
 }

@@ -224,8 +224,29 @@ fn live_server_matches_offline_pipeline_bit_for_bit() {
     // cold clompr decode + the hier decode), with both decoders active.
     let stats = qckm_stdout(&["ctl", "--addr", &addr, "stats"]);
     assert!(stats.contains("cache 1 hit / 2 miss"), "stats: {stats}");
+    assert!(stats.contains("2 of 1024 shard slots"), "stats: {stats}");
     assert!(stats.contains("decoder 'clompr': 2 queries"), "stats: {stats}");
     assert!(stats.contains("decoder 'hier': 1 queries"), "stats: {stats}");
+
+    // --- Metrics: `ctl metrics` prints a valid Prometheus exposition page
+    // covering every layer of the serve→push→query path — request
+    // counters, ingest rows, cache traffic, per-family decode timings, and
+    // the parallel runner (the server shares the process-global registry).
+    let page = qckm_stdout(&["ctl", "--addr", &addr, "metrics"]);
+    qckm::obs::prom::validate(&page).unwrap_or_else(|e| panic!("{e:#}\npage:\n{page}"));
+    for needle in [
+        "qckm_requests_total{verb=\"push\"}",
+        "qckm_request_seconds_bucket{verb=\"query\",le=",
+        "qckm_push_rows_total 3000",
+        "qckm_cache_hits_total 1",
+        "qckm_cache_misses_total 2",
+        "qckm_decode_seconds_count{decoder=\"clompr\"}",
+        "qckm_decode_seconds_count{decoder=\"hier\"}",
+        "qckm_parallel_runs_total",
+        "qckm_stream_rows_total", // pre-registered at startup, 0 on this path
+    ] {
+        assert!(page.contains(needle), "missing `{needle}` in page:\n{page}");
+    }
 
     // --- Snapshot: the live pool drains to a .qsk identical to the merged
     // offline shards, and decodes offline to the same centroids.
