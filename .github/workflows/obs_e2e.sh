@@ -33,12 +33,20 @@ ADDR=$(sed -n 's/^LISTENING //p' "$WORK/serve.out" | head -n1)
 [ -n "$ADDR" ] || { echo "server never announced an address"; exit 1; }
 
 "$QCKM" push --addr "$ADDR" --data "$WORK/data.csv" --shard ci
-"$QCKM" query --addr "$ADDR" --k 2 --lo -1 --hi 1 --out "$WORK/centroids.csv"
+# A traced query: stdout (the objective + centroids) must be unaffected,
+# and the span tree lands on stderr.
+"$QCKM" query --addr "$ADDR" --k 2 --lo -1 --hi 1 --trace \
+    --out "$WORK/centroids.csv" 2>"$WORK/query.err"
 [ -s "$WORK/centroids.csv" ] || { echo "query produced no centroids"; exit 1; }
+grep -q '"stage": "window_merge"' "$WORK/query.err" || {
+    echo "traced query printed no span tree:"; cat "$WORK/query.err"; exit 1
+}
 
 # The scrape: non-empty, and covering server + library metric families.
 "$QCKM" ctl --addr "$ADDR" metrics >"$WORK/metrics.txt"
-for series in qckm_requests_total qckm_push_rows_total qckm_decode_seconds_bucket; do
+for series in qckm_requests_total qckm_push_rows_total qckm_decode_seconds_bucket \
+              qckm_build_info qckm_uptime_seconds qckm_shard_bit_balance \
+              qckm_query_residual_norm; do
     grep -q "$series" "$WORK/metrics.txt" || {
         echo "metrics page is missing $series:"; cat "$WORK/metrics.txt"; exit 1
     }
@@ -46,6 +54,50 @@ done
 grep -q 'qckm_push_rows_total 400' "$WORK/metrics.txt" || {
     echo "push row counter wrong:"; grep qckm_push_rows "$WORK/metrics.txt"; exit 1
 }
+
+# Scrape again and assert every counter is monotone non-decreasing across
+# the two pages (the Prometheus contract a restart-free server must hold).
+"$QCKM" ctl --addr "$ADDR" metrics >"$WORK/metrics2.txt"
+python3 - "$WORK/metrics.txt" "$WORK/metrics2.txt" <<'EOF'
+import sys
+
+def counters(path):
+    series, kind = {}, {}
+    for line in open(path):
+        line = line.strip()
+        if line.startswith("# TYPE "):
+            _, _, name, k = line.split()
+            kind[name] = k
+        elif line and not line.startswith("#"):
+            key, value = line.rsplit(" ", 1)
+            name = key.split("{")[0]
+            base = name.rsplit("_bucket", 1)[0].rsplit("_sum", 1)[0].rsplit("_count", 1)[0]
+            if kind.get(name) == "counter" or (kind.get(base) == "histogram" and value != "NaN"):
+                series[key] = float(value)
+    return series
+
+first, second = counters(sys.argv[1]), counters(sys.argv[2])
+regressed = [k for k, v in first.items() if k in second and second[k] < v]
+assert not regressed, f"counters went backwards between scrapes: {regressed}"
+assert len(second) >= len(first), "second scrape lost series"
+print(f"counter monotonicity OK over {len(first)} series")
+EOF
+
+# The trace verb: valid JSON holding the traced query (and the traced
+# batch pushes), newest first. Kept as a CI artifact for debugging.
+"$QCKM" ctl --addr "$ADDR" trace --limit 10 >"$WORK/traces.json"
+python3 - "$WORK/traces.json" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+traces = doc["traces"]
+assert traces, "the trace ring is empty after a traced query"
+verbs = [t["verb"] for t in traces]
+assert "query" in verbs, f"no query trace in {verbs}"
+stages = [s["stage"] for s in traces[verbs.index("query")]["spans"]]
+assert "frame_decode" in stages, f"missing frame_decode root in {stages}"
+print(f"validated {len(traces)} trace(s): verbs {verbs}")
+EOF
+cp "$WORK/traces.json" TRACE_e2e.json
 
 "$QCKM" ctl --addr "$ADDR" shutdown
 wait $SERVER_PID

@@ -1,20 +1,29 @@
 //! `qckm ctl` — administer a serving node (stats / roll / metrics /
-//! shutdown). `metrics` prints the server's Prometheus exposition page
-//! verbatim, so `qckm ctl --addr … metrics` is a ready-made scrape target
-//! for a textfile collector or a curl-equivalent health probe.
+//! trace / shutdown). `metrics` prints the server's Prometheus exposition
+//! page verbatim, so `qckm ctl --addr … metrics` is a ready-made scrape
+//! target for a textfile collector or a curl-equivalent health probe;
+//! `trace` prints recent request span trees (or one, by `--id`) as JSON.
 
 use anyhow::{bail, Context, Result};
 use qckm::cli::CliSpec;
+use qckm::obs::trace::parse_trace_id;
 
 pub fn run(args: Vec<String>) -> Result<()> {
     let spec = CliSpec::new("qckm ctl", "administer a serving node")
-        .positionals("<stats|roll|metrics|shutdown>")
-        .opt("addr", "HOST:PORT", None, "server address");
+        .positionals("<stats|roll|metrics|trace|shutdown>")
+        .opt("addr", "HOST:PORT", None, "server address")
+        .opt("id", "HEX", None, "trace: fetch this 32-hex-char trace id only")
+        .opt(
+            "limit",
+            "NUM",
+            Some("0"),
+            "trace: newest traces to return (0 = the server default)",
+        );
     let parsed = spec.parse(args)?;
     let addr = parsed.get("addr").context("--addr is required")?;
     let verb = parsed
         .positional(0)
-        .context("which action? (stats|roll|metrics|shutdown)")?;
+        .context("which action? (stats|roll|metrics|trace|shutdown)")?;
     let mut client = qckm::server::Client::connect(addr)?;
     match verb {
         "stats" => {
@@ -43,6 +52,13 @@ pub fn run(args: Vec<String>) -> Result<()> {
             // already valid Prometheus text format, trailing newline and all.
             print!("{}", client.metrics()?);
         }
+        "trace" => {
+            let id = parsed.get("id").map(parse_trace_id).transpose()?;
+            let limit = parsed.get_usize("limit")?.unwrap().min(u32::MAX as usize) as u32;
+            // The JSON is printed as the server rendered it (no trailing
+            // newline in the payload — println! supplies the final one).
+            println!("{}", client.trace(id, limit)?);
+        }
         "roll" => {
             let (epoch, rows_closed) = client.roll()?;
             println!("rolled: epoch {epoch} open, {rows_closed} rows closed");
@@ -51,7 +67,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
             client.shutdown()?;
             println!("server acknowledged shutdown");
         }
-        other => bail!("unknown ctl action '{other}' (stats|roll|metrics|shutdown)"),
+        other => bail!("unknown ctl action '{other}' (stats|roll|metrics|trace|shutdown)"),
     }
     Ok(())
 }

@@ -29,6 +29,11 @@ pub fn run(args: Vec<String>) -> Result<()> {
             Some("0"),
             "transport-error retries with exponential backoff (0 = fail fast); \
              a re-sent batch may double-count if the failure hit mid-ack",
+        )
+        .flag(
+            "trace",
+            "attach a trace context to every batch and print the last \
+             batch's server-side span tree (JSON, stderr) on exit",
         );
     let parsed = spec.parse(args)?;
     let addr = parsed.get("addr").context("--addr is required")?;
@@ -57,6 +62,9 @@ pub fn run(args: Vec<String>) -> Result<()> {
         ..RetryPolicy::default()
     };
     let mut client = RetryClient::connect(addr, &method, policy)?;
+    if parsed.flag("trace") {
+        client.enable_tracing();
+    }
     let mut pushed = 0u64;
     let mut buf: Vec<f64> = Vec::new();
     let (mut shard_rows, mut total_rows) = (0, 0);
@@ -95,6 +103,15 @@ pub fn run(args: Vec<String>) -> Result<()> {
             "retries: {attempts} reconnect attempt(s), {} ms total backoff",
             backoff.as_millis()
         );
+    }
+    // With --trace every batch carried a context; fetch the last one's
+    // server-side span tree so the push's latency breakdown (frame
+    // decode / cap check / encode / merge) is visible without a
+    // separate `ctl trace` round.
+    if parsed.flag("trace") {
+        if let Some(id) = client.last_trace_id() {
+            eprintln!("{}", client.trace(Some(id), 1)?);
+        }
     }
     Ok(())
 }

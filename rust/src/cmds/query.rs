@@ -30,7 +30,13 @@ pub fn run(args: Vec<String>) -> Result<()> {
         .opt("seed", "NUM", None, "decoder RNG seed (default: the operator's seed)")
         .opt("lo", "FLOAT", Some("-1"), "centroid search box lower bound (every coordinate)")
         .opt("hi", "FLOAT", Some("1"), "centroid search box upper bound (every coordinate)")
-        .opt("out", "FILE", None, "write centroids CSV here");
+        .opt("out", "FILE", None, "write centroids CSV here")
+        .flag(
+            "trace",
+            "attach a trace context and print the server-side span tree \
+             (JSON, stderr): frame decode, cap check, window merge, and \
+             per-iteration decoder timings",
+        );
     let parsed = spec.parse(args)?;
     let addr = parsed.get("addr").context("--addr is required")?;
     let k = parsed.get_usize("k")?.context("--k is required")?;
@@ -43,6 +49,9 @@ pub fn run(args: Vec<String>) -> Result<()> {
     };
 
     let mut client = connect_with_method(addr, &parsed)?;
+    if parsed.flag("trace") {
+        client = client.with_tracing(Box::new(qckm::obs::ProcessIdGen::new()));
+    }
     let report = client.query(&QuerySpec {
         k: k as u32,
         window: parsed.get_usize("window")?.unwrap() as u32,
@@ -59,6 +68,13 @@ pub fn run(args: Vec<String>) -> Result<()> {
         if report.cached { " [cached]" } else { "" }
     );
     println!("objective = {:.6}", report.objective);
+    // The span tree is diagnostics, not output: stderr, like the window
+    // summary, so `--out`/stdout pipelines stay byte-identical (I-19).
+    if parsed.flag("trace") {
+        if let Some(id) = client.last_trace_id() {
+            eprintln!("{}", client.trace(Some(id), 1)?);
+        }
+    }
     let centroids = Mat::from_vec(report.k as usize, report.dim as usize, report.centroids);
     print_centroids(&centroids, &report.weights);
     save_centroids(parsed.get("out"), &centroids)

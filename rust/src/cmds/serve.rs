@@ -33,6 +33,12 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "distinct shard labels accepted before new ones are refused",
     )
     .opt(
+        "trace-ring",
+        "NUM",
+        Some("128"),
+        "finished request traces retained for `qckm ctl trace`",
+    )
+    .opt(
         "seed-sketch",
         "FILE",
         None,
@@ -117,6 +123,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
             ..ClOmprParams::default()
         },
         registry: qckm::obs::global().clone(),
+        trace_capacity: parsed.get_usize("trace-ring")?.unwrap().max(1),
     };
     let service = SketchService::new(op, meta, service_cfg);
     if let Some(pool) = seed_pool {

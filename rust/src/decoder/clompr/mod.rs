@@ -92,6 +92,14 @@ pub struct Solution {
     /// *unnormalized* weights actually fitted) — the model-selection score
     /// used to pick among replicates without touching the data.
     pub objective: f64,
+    /// Outer iterations the decoder ran (CL-OMPR: `outer_iters_factor·K`;
+    /// hier: the `K − 1` bisections). Observational bookkeeping for the
+    /// serve-side decode-quality instruments.
+    pub outer_iters: u32,
+    /// Outer iterations whose freshly added atom survived the Step-3
+    /// hard-threshold, displacing an established one — the support-churn
+    /// signal (0 for the hier decoder, which never thresholds).
+    pub atoms_replaced: u32,
 }
 
 /// The decoder, bound to a sketch operator and a target cluster count.
@@ -148,6 +156,7 @@ impl<'a> ClOmpr<'a> {
         // so each outer iteration times both into its own histogram —
         // observational only (I-18).
         let obs = crate::obs::lib_metrics();
+        let mut atoms_replaced: u32 = 0;
         for _t in 0..outer {
             // ---- Step 1: pick the atom best correlated with the residual.
             let c_new = {
@@ -161,10 +170,16 @@ impl<'a> ClOmpr<'a> {
 
             // ---- Step 3: hard-threshold the support back to K.
             if centroids.rows() > self.k {
+                let new_idx = centroids.rows() - 1; // the atom Step 2 added
                 let beta = self.project_weights(z, &centroids, 1.0 / atom_norm);
                 let mut order: Vec<usize> = (0..beta.len()).collect();
                 order.sort_by(|&a, &b| beta[b].partial_cmp(&beta[a]).unwrap());
                 order.truncate(self.k);
+                if order.contains(&new_idx) {
+                    // The new atom made the cut, so an established one
+                    // was displaced — support churn, worth counting.
+                    atoms_replaced += 1;
+                }
                 centroids = centroids.select_rows(&order);
                 alphas.truncate(self.k); // values refreshed by Step 4 below
             }
@@ -201,6 +216,8 @@ impl<'a> ClOmpr<'a> {
             centroids,
             weights,
             objective,
+            outer_iters: outer as u32,
+            atoms_replaced,
         }
     }
 

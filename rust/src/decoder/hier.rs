@@ -194,6 +194,10 @@ impl SketchDecoder for HierDecoder {
             centroids,
             weights,
             objective,
+            // A k-leaf binary bisection tree runs exactly k − 1 splits;
+            // there is no hard-threshold step, so nothing is replaced.
+            outer_iters: (k as u32).saturating_sub(1),
+            atoms_replaced: 0,
         }
     }
 }

@@ -39,14 +39,25 @@ impl Clock for MonotonicClock {
 }
 
 /// Manually-advanced test clock. Starts at 0; time moves only through
-/// [`FakeClock::advance_ns`], so timings recorded against it are exact.
+/// [`FakeClock::advance_ns`] — or, in stepping mode
+/// ([`FakeClock::stepping`]), by a fixed increment after every read — so
+/// timings recorded against it are exact.
 pub struct FakeClock {
     now_ns: AtomicU64,
+    /// Auto-advance per `now_ns` read; 0 in the plain (settable) mode.
+    step_ns: u64,
 }
 
 impl FakeClock {
     pub fn new() -> Self {
-        Self { now_ns: AtomicU64::new(0) }
+        Self { now_ns: AtomicU64::new(0), step_ns: 0 }
+    }
+
+    /// A clock whose every read returns the previous reading plus
+    /// `step_ns`, starting from 0. Trace timings under it are exact
+    /// functions of the clock-read count — nonzero and assertable.
+    pub fn stepping(step_ns: u64) -> Self {
+        Self { now_ns: AtomicU64::new(0), step_ns }
     }
 
     /// Move time forward by `ns` nanoseconds.
@@ -63,6 +74,8 @@ impl Default for FakeClock {
 
 impl Clock for FakeClock {
     fn now_ns(&self) -> u64 {
-        self.now_ns.load(Ordering::SeqCst)
+        // fetch_add returns the pre-increment value: the first read is 0
+        // in both modes, and a step of 0 is a plain load.
+        self.now_ns.fetch_add(self.step_ns, Ordering::SeqCst)
     }
 }

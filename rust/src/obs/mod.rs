@@ -9,7 +9,10 @@
 //! golden-testable); [`prom::render`] encodes the registry as a Prometheus
 //! text page (served by the `qckm ctl metrics` protocol verb); and
 //! [`log`] emits one JSON line per event/span to stderr when enabled via
-//! `QCKM_LOG=json[:level]` or `qckm serve --log-json`.
+//! `QCKM_LOG=json[:level]` or `qckm serve --log-json`; and [`trace`]
+//! threads the same `Span` guards into per-request hierarchical span
+//! trees for the proto-v5 tracing extension (`query --trace`,
+//! `ctl trace`).
 //!
 //! ## The observational-only contract (INVARIANTS.md I-18)
 //!
@@ -33,6 +36,7 @@ pub mod log;
 pub mod prom;
 pub mod registry;
 pub mod span;
+pub mod trace;
 
 #[cfg(test)]
 mod tests;
@@ -41,6 +45,7 @@ pub use clock::{Clock, FakeClock, MonotonicClock};
 pub use log::{init_from_env, set_json, Level};
 pub use registry::{Counter, Gauge, Histogram, Registry};
 pub use span::Span;
+pub use trace::{IdGen, ProcessIdGen, SeqIdGen, TraceContext, TraceRecord, TraceStore};
 
 use std::sync::{Arc, OnceLock};
 

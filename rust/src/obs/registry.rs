@@ -257,6 +257,12 @@ impl Registry {
         self.clock.now_ns()
     }
 
+    /// The clock itself — shared with trace recorders so span-tree
+    /// timings and histogram timings come from one time source.
+    pub fn clock(&self) -> Arc<dyn Clock> {
+        Arc::clone(&self.clock)
+    }
+
     /// Render every family as a Prometheus text-format page.
     pub fn render(&self) -> String {
         let fams = self.families.lock().unwrap_or_else(|e| e.into_inner());

@@ -8,25 +8,37 @@
 use super::clock::Clock;
 use super::log::{self, Level, Value};
 use super::registry::Histogram;
+use super::trace;
 use std::sync::Arc;
 
 /// A running stage timer; created via [`super::Registry::span`].
+///
+/// When a request trace is active on this thread (see [`trace`]), the
+/// span doubles as a node in that trace's tree — timed on the *trace's*
+/// clock, nested by RAII order. Holding the trace handle makes `Span`
+/// `!Send`, which is fine: spans are always scoped guards on the thread
+/// that opened them.
 pub struct Span {
     clock: Arc<dyn Clock>,
     hist: Arc<Histogram>,
     stage: &'static str,
     start_ns: u64,
+    trace: Option<trace::SpanHandle>,
 }
 
 impl Span {
     pub(crate) fn new(clock: Arc<dyn Clock>, hist: Arc<Histogram>, stage: &'static str) -> Self {
         let start_ns = clock.now_ns();
-        Self { clock, hist, stage, start_ns }
+        let trace = trace::on_span_start(stage);
+        Self { clock, hist, stage, start_ns, trace }
     }
 }
 
 impl Drop for Span {
     fn drop(&mut self) {
+        if let Some(handle) = self.trace.take() {
+            handle.finish();
+        }
         let elapsed_ns = self.clock.now_ns().saturating_sub(self.start_ns);
         self.hist.observe(elapsed_ns as f64 * 1e-9);
         if log::enabled(Level::Debug) {

@@ -157,6 +157,86 @@ fn label_values_are_escaped_in_exposition() {
     prom::validate(&page).unwrap();
 }
 
+// ----------------------------------------------------------------- tracing
+
+#[test]
+fn trace_ids_render_and_parse_round_trip() {
+    use super::trace::{hex, parse_trace_id};
+    let id: [u8; 16] = *b"\x00\x01\x02\x03\x04\x05\x06\x07\x08\x09\x0a\x0b\x0c\x0d\x0e\xff";
+    let s = hex(&id);
+    assert_eq!(s, "000102030405060708090a0b0c0d0eff");
+    assert_eq!(parse_trace_id(&s).unwrap(), id);
+    assert_eq!(parse_trace_id(" 000102030405060708090a0b0c0d0eff\n").unwrap(), id);
+    let (short, nonhex, long) = ("0".repeat(31), "g".repeat(32), "0".repeat(33));
+    for bad in ["", "abc", short.as_str(), nonhex.as_str(), long.as_str()] {
+        assert!(parse_trace_id(bad).is_err(), "accepted {bad:?}");
+    }
+}
+
+/// The recorder's JSON under a stepping clock is an exact constant:
+/// every clock read advances time by a fixed step, so each span's start
+/// and elapsed time is a pure function of the read count — outer opens
+/// at read 0 and closes at read 3 (30 ns), inner occupies reads 1–2.
+#[test]
+fn stepping_clock_trace_json_is_golden() {
+    use super::trace::{self, IdGen, SeqIdGen, TraceRecorder};
+    let rec = TraceRecorder::new(
+        Arc::new(FakeClock::stepping(10)),
+        SeqIdGen::new(0xF00D).next_context(),
+    );
+    rec.record_closed("frame_decode", 0, 5);
+    {
+        let _g = trace::install(&rec);
+        let _outer = trace::scoped("outer");
+        let _inner = trace::scoped("inner");
+    }
+    let expected = r#"{
+  "trace_id": "000000000000f00d0000000000000001",
+  "parent_span": "0000000000000001",
+  "verb": "demo",
+  "ok": true,
+  "dropped_spans": 0,
+  "spans": [
+    {
+      "stage": "frame_decode",
+      "start_ns": 0,
+      "elapsed_ns": 5,
+      "children": []
+    },
+    {
+      "stage": "outer",
+      "start_ns": 0,
+      "elapsed_ns": 30,
+      "children": [
+        {
+          "stage": "inner",
+          "start_ns": 10,
+          "elapsed_ns": 10,
+          "children": []
+        }
+      ]
+    }
+  ]
+}"#;
+    assert_eq!(rec.snapshot("demo", true).to_json(), expected);
+}
+
+/// The per-trace span cap bounds memory and is accounted for: spans past
+/// [`MAX_TRACE_SPANS`] vanish but bump the record's `dropped_spans`.
+#[test]
+fn span_cap_bounds_the_tree_and_counts_drops() {
+    use super::trace::{self, IdGen, SeqIdGen, TraceRecorder, MAX_TRACE_SPANS};
+    let rec = TraceRecorder::new(Arc::new(FakeClock::new()), SeqIdGen::new(1).next_context());
+    let _g = trace::install(&rec);
+    for _ in 0..MAX_TRACE_SPANS + 3 {
+        let _s = trace::scoped("leaf");
+    }
+    let record = rec.snapshot("push", true);
+    assert_eq!(record.spans.len(), MAX_TRACE_SPANS);
+    assert_eq!(record.dropped, 3);
+    assert!(record.to_json().contains("\"dropped_spans\": 3"));
+}
+
 // ------------------------------------------------------------ structured log
 
 #[test]
@@ -231,4 +311,23 @@ fn telemetry_never_perturbs_outputs() {
     let loud = run();
     log::set_json(false, Level::Info);
     assert_eq!(quiet, loud, "telemetry must never perturb decode outputs");
+
+    // I-19 extends the lock to tracing: the same run under an installed
+    // trace recorder is also bit-for-bit identical, and the recorder saw
+    // the request-thread stages only — parallel worker spans stay out by
+    // construction (workers never inherit the thread-local recorder, and
+    // their stage is excluded even on the calling thread).
+    use super::trace::{self, IdGen, SeqIdGen, TraceRecorder};
+    let rec = TraceRecorder::new(Arc::new(FakeClock::new()), SeqIdGen::new(7).next_context());
+    let traced = {
+        let _g = trace::install(&rec);
+        run()
+    };
+    assert_eq!(quiet, traced, "tracing must never perturb decode outputs");
+    let record = rec.snapshot("query", true);
+    let stages: Vec<&str> = record.spans.iter().map(|s| s.stage.as_str()).collect();
+    assert!(stages.contains(&"decode"), "{stages:?}");
+    assert!(stages.contains(&"clompr_step1"), "{stages:?}");
+    assert!(stages.contains(&"clompr_step5"), "{stages:?}");
+    assert!(!stages.contains(&"parallel_chunk"), "{stages:?}");
 }

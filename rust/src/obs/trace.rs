@@ -1,0 +1,535 @@
+//! End-to-end request tracing: binary trace context, a per-request span
+//! tree recorder, and a bounded server-side trace ring.
+//!
+//! A client that opts in (`push --trace` / `query --trace`) generates a
+//! 16-byte trace id plus an 8-byte parent span id through an injectable
+//! [`IdGen`] (deterministic in tests) and sends them in a proto-v5 frame
+//! extension. On the server, the connection thread installs a
+//! [`TraceRecorder`] for the duration of that one request; every
+//! [`super::Span`] the request passes through — frame decode, cap check,
+//! `ingest_encode`, `window_merge`, per-iteration `clompr_step1`/`step5`,
+//! `hier_split` — attaches itself as a node in the recorder's tree. The
+//! finished tree lands in a bounded [`TraceStore`] ring, served back as
+//! JSON by the `ctl trace` protocol verb.
+//!
+//! ## The observational-only contract (INVARIANTS.md I-19)
+//!
+//! Recording is clock reads and `Vec` pushes on the connection thread;
+//! no RNG is consumed and no data-path float is touched, so outputs are
+//! bit-for-bit identical with tracing on or off. Worker threads spawned
+//! by the parallel runner never see the thread-local recorder (it is
+//! deliberately thread-local, not global), and the unbounded-cardinality
+//! `parallel_chunk` stage is excluded outright.
+
+use super::clock::Clock;
+use anyhow::{bail, Result};
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Span-tree nodes recorded per trace before further spans are counted
+/// only in `dropped_spans`. Bounds server memory against a pathological
+/// decode (the deepest honest tree is `O(outer_iters)` ≈ tens of nodes).
+pub const MAX_TRACE_SPANS: usize = 512;
+
+// ------------------------------------------------------------- trace context
+
+/// The client-generated identity of one traced request: a 16-byte trace
+/// id (globally unique per request) and an 8-byte parent span id (the
+/// client-side span the server tree hangs under; opaque to the server).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceContext {
+    pub trace_id: [u8; 16],
+    pub parent_span: [u8; 8],
+}
+
+impl TraceContext {
+    pub fn trace_id_hex(&self) -> String {
+        hex(&self.trace_id)
+    }
+
+    pub fn parent_span_hex(&self) -> String {
+        hex(&self.parent_span)
+    }
+}
+
+/// Lowercase hex of a byte string (trace ids in logs, JSON, and `--id`).
+pub fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        s.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+    }
+    s
+}
+
+/// Parse the 32-hex-char form produced by [`TraceContext::trace_id_hex`]
+/// (the `ctl trace --id` argument).
+pub fn parse_trace_id(s: &str) -> Result<[u8; 16]> {
+    let s = s.trim();
+    if s.len() != 32 || !s.is_ascii() {
+        bail!("trace id must be exactly 32 hex characters, got {:?}", s);
+    }
+    let mut id = [0u8; 16];
+    for (i, chunk) in s.as_bytes().chunks_exact(2).enumerate() {
+        let hi = (chunk[0] as char).to_digit(16);
+        let lo = (chunk[1] as char).to_digit(16);
+        match (hi, lo) {
+            (Some(h), Some(l)) => id[i] = ((h << 4) | l) as u8,
+            _ => bail!("trace id contains a non-hex character: {:?}", s),
+        }
+    }
+    Ok(id)
+}
+
+// ------------------------------------------------------------------- id gen
+
+/// Source of trace contexts on the client side. Injectable so tests pin
+/// ids exactly; production uses [`ProcessIdGen`].
+pub trait IdGen: Send {
+    fn next_context(&mut self) -> TraceContext;
+}
+
+/// Deterministic generator for tests: trace id = `base` ++ a counter
+/// (both big-endian u64s), parent span = the counter.
+pub struct SeqIdGen {
+    base: u64,
+    counter: u64,
+}
+
+impl SeqIdGen {
+    pub fn new(base: u64) -> Self {
+        Self { base, counter: 0 }
+    }
+}
+
+impl IdGen for SeqIdGen {
+    fn next_context(&mut self) -> TraceContext {
+        self.counter += 1;
+        let mut trace_id = [0u8; 16];
+        trace_id[..8].copy_from_slice(&self.base.to_be_bytes());
+        trace_id[8..].copy_from_slice(&self.counter.to_be_bytes());
+        TraceContext { trace_id, parent_span: self.counter.to_be_bytes() }
+    }
+}
+
+/// Std-only production generator: a splitmix64 stream seeded from wall
+/// time, the process id, and a process-global counter. Not
+/// cryptographic — trace ids only need to be distinct, not secret.
+pub struct ProcessIdGen {
+    state: u64,
+}
+
+impl ProcessIdGen {
+    pub fn new() -> Self {
+        static NONCE: AtomicU64 = AtomicU64::new(0);
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let n = NONCE.fetch_add(1, Ordering::Relaxed);
+        Self { state: t ^ (std::process::id() as u64).rotate_left(32) ^ n.rotate_left(17) }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // splitmix64: full-period, passes the mixers-we-need bar.
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+impl Default for ProcessIdGen {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IdGen for ProcessIdGen {
+    fn next_context(&mut self) -> TraceContext {
+        let mut trace_id = [0u8; 16];
+        trace_id[..8].copy_from_slice(&self.next_u64().to_be_bytes());
+        trace_id[8..].copy_from_slice(&self.next_u64().to_be_bytes());
+        TraceContext { trace_id, parent_span: self.next_u64().to_be_bytes() }
+    }
+}
+
+// ----------------------------------------------------------------- recorder
+
+struct Node {
+    stage: &'static str,
+    parent: Option<u32>,
+    start_ns: u64,
+    end_ns: u64,
+}
+
+/// Per-request span-tree recorder, installed in a thread-local for the
+/// duration of one request on the connection thread. Spans nest by RAII
+/// order: an open span is the parent of any span opened before it
+/// closes, which matches the call tree exactly because `Span` guards are
+/// scoped.
+pub struct TraceRecorder {
+    clock: Arc<dyn Clock>,
+    ctx: TraceContext,
+    nodes: RefCell<Vec<Node>>,
+    stack: RefCell<Vec<u32>>,
+    dropped: Cell<u32>,
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Rc<TraceRecorder>>> = const { RefCell::new(None) };
+}
+
+impl TraceRecorder {
+    pub fn new(clock: Arc<dyn Clock>, ctx: TraceContext) -> Rc<Self> {
+        Rc::new(Self {
+            clock,
+            ctx,
+            nodes: RefCell::new(Vec::new()),
+            stack: RefCell::new(Vec::new()),
+            dropped: Cell::new(0),
+        })
+    }
+
+    fn enter(&self, stage: &'static str) -> Option<u32> {
+        let mut nodes = self.nodes.borrow_mut();
+        if nodes.len() >= MAX_TRACE_SPANS {
+            self.dropped.set(self.dropped.get().saturating_add(1));
+            return None;
+        }
+        let parent = self.stack.borrow().last().copied();
+        let now = self.clock.now_ns();
+        nodes.push(Node { stage, parent, start_ns: now, end_ns: now });
+        let idx = (nodes.len() - 1) as u32;
+        self.stack.borrow_mut().push(idx);
+        Some(idx)
+    }
+
+    fn exit(&self, idx: u32) {
+        let now = self.clock.now_ns();
+        self.nodes.borrow_mut()[idx as usize].end_ns = now;
+        let mut stack = self.stack.borrow_mut();
+        // LIFO in the common case; tolerate out-of-order guard drops
+        // rather than corrupting later parentage.
+        if stack.last() == Some(&idx) {
+            stack.pop();
+        } else {
+            stack.retain(|&i| i != idx);
+        }
+    }
+
+    /// Record an already-measured interval as a node (no stack entry).
+    /// Used for frame decode, which finishes before the trace context it
+    /// carries can be installed.
+    pub fn record_closed(&self, stage: &'static str, start_ns: u64, end_ns: u64) {
+        let mut nodes = self.nodes.borrow_mut();
+        if nodes.len() >= MAX_TRACE_SPANS {
+            self.dropped.set(self.dropped.get().saturating_add(1));
+            return;
+        }
+        let parent = self.stack.borrow().last().copied();
+        nodes.push(Node { stage, parent, start_ns, end_ns });
+    }
+
+    /// Freeze the tree into an owned record (the recorder stays usable,
+    /// but in practice this is the last touch before the store).
+    pub fn snapshot(&self, verb: &str, ok: bool) -> TraceRecord {
+        let spans = self
+            .nodes
+            .borrow()
+            .iter()
+            .map(|n| SpanRecord {
+                stage: n.stage.to_string(),
+                parent: n.parent,
+                start_ns: n.start_ns,
+                end_ns: n.end_ns.max(n.start_ns),
+            })
+            .collect();
+        TraceRecord {
+            trace_id: self.ctx.trace_id,
+            parent_span: self.ctx.parent_span,
+            verb: verb.to_string(),
+            ok,
+            dropped: self.dropped.get(),
+            spans,
+        }
+    }
+}
+
+/// Install `rec` as this thread's active recorder until the guard drops.
+pub fn install(rec: &Rc<TraceRecorder>) -> InstallGuard {
+    let prev = ACTIVE.with(|a| a.borrow_mut().replace(Rc::clone(rec)));
+    InstallGuard { prev }
+}
+
+/// Restores the previously-active recorder (usually `None`) on drop.
+pub struct InstallGuard {
+    prev: Option<Rc<TraceRecorder>>,
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        ACTIVE.with(|a| *a.borrow_mut() = prev);
+    }
+}
+
+/// `parallel_chunk` is the one span stage excluded from traces: its node
+/// count is workload-proportional (one per chunk) and under a threaded
+/// runner most chunks execute off the connection thread anyway, so
+/// including it would record a thread-schedule-dependent subset.
+fn stage_is_traced(stage: &str) -> bool {
+    stage != "parallel_chunk"
+}
+
+/// Hook for [`super::Span::new`]: attach a node to the active recorder,
+/// if any. Returns `None` (free) when no trace is active on this thread.
+pub(crate) fn on_span_start(stage: &'static str) -> Option<SpanHandle> {
+    if !stage_is_traced(stage) {
+        return None;
+    }
+    let rec = ACTIVE.with(|a| a.borrow().as_ref().map(Rc::clone))?;
+    let idx = rec.enter(stage)?;
+    Some(SpanHandle { rec, idx })
+}
+
+/// An open node in the active trace; closed by [`SpanHandle::finish`]
+/// from the owning `Span`'s drop.
+pub(crate) struct SpanHandle {
+    rec: Rc<TraceRecorder>,
+    idx: u32,
+}
+
+impl SpanHandle {
+    pub(crate) fn finish(self) {
+        self.rec.exit(self.idx);
+    }
+}
+
+/// A trace-only scoped node for stages that have no metrics histogram
+/// (e.g. the server's cap/method check). Free when no trace is active.
+pub fn scoped(stage: &'static str) -> Option<ScopedTraceSpan> {
+    on_span_start(stage).map(|handle| ScopedTraceSpan { handle: Some(handle) })
+}
+
+pub struct ScopedTraceSpan {
+    handle: Option<SpanHandle>,
+}
+
+impl Drop for ScopedTraceSpan {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            h.finish();
+        }
+    }
+}
+
+// ------------------------------------------------------------------ records
+
+/// One closed span: `parent` indexes into the owning record's `spans`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub stage: String,
+    pub parent: Option<u32>,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+/// One finished request trace, as stored in the ring and rendered by
+/// `ctl trace`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceRecord {
+    pub trace_id: [u8; 16],
+    pub parent_span: [u8; 8],
+    pub verb: String,
+    pub ok: bool,
+    /// Spans not recorded because the tree hit [`MAX_TRACE_SPANS`].
+    pub dropped: u32,
+    pub spans: Vec<SpanRecord>,
+}
+
+impl TraceRecord {
+    /// Deterministic pretty JSON (2-space indent, keys in fixed order,
+    /// spans as a forest in recording order). The CLI prints this string
+    /// verbatim — no client-side JSON machinery needed — and the golden
+    /// test pins it exactly.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        write_record(&mut out, self, 0);
+        out
+    }
+}
+
+/// Render a batch of records as `{"traces":[…]}`, newest first (the
+/// `ctl trace` response body).
+pub fn traces_to_json(records: &[TraceRecord]) -> String {
+    let mut out = String::new();
+    if records.is_empty() {
+        out.push_str("{\n  \"traces\": []\n}");
+        return out;
+    }
+    out.push_str("{\n  \"traces\": [\n");
+    for (i, rec) in records.iter().enumerate() {
+        push_indent(&mut out, 2);
+        write_record(&mut out, rec, 2);
+        out.push_str(if i + 1 < records.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}");
+    out
+}
+
+fn push_indent(out: &mut String, level: usize) {
+    for _ in 0..level {
+        out.push_str("  ");
+    }
+}
+
+fn push_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// `level` is the indent depth (in 2-space units) of the record's own
+/// opening brace; continuation lines indent one deeper.
+fn write_record(out: &mut String, rec: &TraceRecord, level: usize) {
+    // Children lists from the flat parent-indexed representation.
+    let n = rec.spans.len();
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, s) in rec.spans.iter().enumerate() {
+        match s.parent {
+            // Defend against a corrupt parent index (forward or
+            // self-reference cannot come from the recorder, but records
+            // are stored data): treat it as a root.
+            Some(p) if (p as usize) < i => children[p as usize].push(i),
+            Some(_) => roots.push(i),
+            None => roots.push(i),
+        }
+    }
+
+    out.push_str("{\n");
+    push_indent(out, level + 1);
+    out.push_str("\"trace_id\": ");
+    push_json_str(out, &hex(&rec.trace_id));
+    out.push_str(",\n");
+    push_indent(out, level + 1);
+    out.push_str("\"parent_span\": ");
+    push_json_str(out, &hex(&rec.parent_span));
+    out.push_str(",\n");
+    push_indent(out, level + 1);
+    out.push_str("\"verb\": ");
+    push_json_str(out, &rec.verb);
+    out.push_str(",\n");
+    push_indent(out, level + 1);
+    out.push_str(&format!("\"ok\": {},\n", rec.ok));
+    push_indent(out, level + 1);
+    out.push_str(&format!("\"dropped_spans\": {},\n", rec.dropped));
+    push_indent(out, level + 1);
+    if roots.is_empty() {
+        out.push_str("\"spans\": []\n");
+    } else {
+        out.push_str("\"spans\": [\n");
+        for (i, &r) in roots.iter().enumerate() {
+            write_span(out, rec, &children, r, level + 2);
+            out.push_str(if i + 1 < roots.len() { ",\n" } else { "\n" });
+        }
+        push_indent(out, level + 1);
+        out.push_str("]\n");
+    }
+    push_indent(out, level);
+    out.push('}');
+}
+
+fn write_span(out: &mut String, rec: &TraceRecord, children: &[Vec<usize>], idx: usize, level: usize) {
+    let s = &rec.spans[idx];
+    push_indent(out, level);
+    out.push_str("{\n");
+    push_indent(out, level + 1);
+    out.push_str("\"stage\": ");
+    push_json_str(out, &s.stage);
+    out.push_str(",\n");
+    push_indent(out, level + 1);
+    out.push_str(&format!("\"start_ns\": {},\n", s.start_ns));
+    push_indent(out, level + 1);
+    out.push_str(&format!("\"elapsed_ns\": {},\n", s.end_ns.saturating_sub(s.start_ns)));
+    push_indent(out, level + 1);
+    let kids = &children[idx];
+    if kids.is_empty() {
+        out.push_str("\"children\": []\n");
+    } else {
+        out.push_str("\"children\": [\n");
+        for (i, &k) in kids.iter().enumerate() {
+            write_span(out, rec, children, k, level + 2);
+            out.push_str(if i + 1 < kids.len() { ",\n" } else { "\n" });
+        }
+        push_indent(out, level + 1);
+        out.push_str("]\n");
+    }
+    push_indent(out, level);
+    out.push('}');
+}
+
+// -------------------------------------------------------------------- store
+
+/// Bounded ring of finished traces: pushing past capacity evicts the
+/// oldest. Shared across connection threads behind one mutex — traces
+/// finish at request granularity, so contention is negligible next to
+/// the request itself.
+pub struct TraceStore {
+    cap: usize,
+    inner: Mutex<VecDeque<TraceRecord>>,
+}
+
+impl TraceStore {
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), inner: Mutex::new(VecDeque::new()) }
+    }
+
+    fn locked(&self) -> std::sync::MutexGuard<'_, VecDeque<TraceRecord>> {
+        // Same poison-recovery stance as the server state lock: every
+        // mutation leaves the deque structurally whole.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.locked().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.locked().is_empty()
+    }
+
+    pub fn push(&self, rec: TraceRecord) {
+        let mut q = self.locked();
+        if q.len() == self.cap {
+            q.pop_front();
+        }
+        q.push_back(rec);
+    }
+
+    /// Newest-first, at most `limit` records.
+    pub fn recent(&self, limit: usize) -> Vec<TraceRecord> {
+        self.locked().iter().rev().take(limit).cloned().collect()
+    }
+
+    pub fn find(&self, trace_id: &[u8; 16]) -> Option<TraceRecord> {
+        self.locked().iter().rev().find(|r| &r.trace_id == trace_id).cloned()
+    }
+}

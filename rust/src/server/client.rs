@@ -8,6 +8,7 @@ use super::proto::{
 };
 use crate::linalg::Mat;
 use crate::obs::log::{self, Level, Value};
+use crate::obs::trace::{IdGen, ProcessIdGen, TraceContext};
 use anyhow::{bail, Context, Result};
 use std::fmt;
 use std::net::TcpStream;
@@ -37,6 +38,12 @@ pub struct Client {
     /// Declared canonical method spec carried on push/query/snapshot
     /// (empty = declare nothing; the server then skips the check).
     method: String,
+    /// When set, every push/query/snapshot carries a fresh trace context
+    /// from this generator (`--trace`); the server then records a span
+    /// tree retrievable via [`Client::trace`].
+    tracer: Option<Box<dyn IdGen>>,
+    /// The context the most recent traced request carried.
+    last_trace: Option<TraceContext>,
 }
 
 impl Client {
@@ -52,6 +59,8 @@ impl Client {
         Ok(Self {
             stream,
             method: String::new(),
+            tracer: None,
+            last_trace: None,
         })
     }
 
@@ -61,6 +70,28 @@ impl Client {
     pub fn declare_method(mut self, spec: &str) -> Self {
         self.method = spec.to_string();
         self
+    }
+
+    /// Trace every subsequent push/query/snapshot: each request carries a
+    /// fresh context from `gen` (inject [`crate::obs::SeqIdGen`] in tests
+    /// for deterministic ids, [`ProcessIdGen`] in production).
+    pub fn with_tracing(mut self, gen: Box<dyn IdGen>) -> Self {
+        self.tracer = Some(gen);
+        self
+    }
+
+    /// The trace id of the most recent traced request — the handle to
+    /// fetch its server-side span tree via [`Client::trace`].
+    pub fn last_trace_id(&self) -> Option<[u8; 16]> {
+        self.last_trace.map(|c| c.trace_id)
+    }
+
+    fn next_trace(&mut self) -> Option<TraceContext> {
+        let ctx = self.tracer.as_mut().map(|g| g.next_context());
+        if ctx.is_some() {
+            self.last_trace = ctx;
+        }
+        ctx
     }
 
     fn call(&mut self, req: &Request) -> Result<Response> {
@@ -79,6 +110,7 @@ impl Client {
             method: self.method.clone(),
             dim: batch.cols() as u32,
             data: batch.as_slice().to_vec(),
+            trace: self.next_trace(),
         };
         match self.call(&req)? {
             Response::PushAck {
@@ -94,6 +126,7 @@ impl Client {
         let req = Request::Query {
             spec: spec.clone(),
             method: self.method.clone(),
+            trace: self.next_trace(),
         };
         match self.call(&req)? {
             Response::Centroids(report) => Ok(report),
@@ -107,6 +140,7 @@ impl Client {
         let req = Request::Snapshot {
             window,
             method: self.method.clone(),
+            trace: self.next_trace(),
         };
         match self.call(&req)? {
             Response::Snapshot(bytes) => Ok(bytes),
@@ -135,6 +169,15 @@ impl Client {
         match self.call(&Request::Metrics)? {
             Response::Metrics(page) => Ok(page),
             other => bail!("unexpected reply to metrics: {other:?}"),
+        }
+    }
+
+    /// Fetch recent server-side traces as a JSON document — one trace by
+    /// id, or the newest `limit` (0 = the server's default).
+    pub fn trace(&mut self, id: Option<[u8; 16]>, limit: u32) -> Result<String> {
+        match self.call(&Request::Trace { id, limit })? {
+            Response::Traces(json) => Ok(json),
+            other => bail!("unexpected reply to trace: {other:?}"),
         }
     }
 
@@ -197,6 +240,10 @@ pub struct RetryClient {
     addr: String,
     method: String,
     policy: RetryPolicy,
+    /// When true, every (re)connected inner client traces its requests
+    /// through a fresh [`ProcessIdGen`] (each retry attempt is a
+    /// distinct trace — causality stays per-wire-request).
+    tracing: bool,
     inner: Option<Client>,
     /// Reconnect attempts made over this client's lifetime (also counted
     /// in the global registry as `qckm_retry_attempts_total`).
@@ -214,12 +261,33 @@ impl RetryClient {
             addr: addr.to_string(),
             method: method.to_string(),
             policy,
+            tracing: false,
             inner: None,
             attempts_total: 0,
             backoff_total: Duration::ZERO,
         };
         rc.with_retry(|_| Ok(()))?;
         Ok(rc)
+    }
+
+    /// Trace every subsequent push (`qckm push --trace`). Applies to the
+    /// current connection and every reconnect.
+    pub fn enable_tracing(&mut self) {
+        self.tracing = true;
+        if let Some(c) = self.inner.take() {
+            self.inner = Some(c.with_tracing(Box::new(ProcessIdGen::new())));
+        }
+    }
+
+    /// The trace id of the most recent traced request, if any.
+    pub fn last_trace_id(&self) -> Option<[u8; 16]> {
+        self.inner.as_ref().and_then(|c| c.last_trace_id())
+    }
+
+    /// Fetch one server-side trace by id (see [`Client::trace`]),
+    /// retrying transport errors like any other request.
+    pub fn trace(&mut self, id: Option<[u8; 16]>, limit: u32) -> Result<String> {
+        self.with_retry(|c| c.trace(id, limit))
     }
 
     /// Retry counters for this client: (reconnect attempts, total backoff
@@ -231,12 +299,14 @@ impl RetryClient {
 
     fn client(&mut self) -> Result<&mut Client> {
         if self.inner.is_none() {
-            let c = Client::connect(&self.addr)?;
-            self.inner = Some(if self.method.is_empty() {
-                c
-            } else {
-                c.declare_method(&self.method)
-            });
+            let mut c = Client::connect(&self.addr)?;
+            if !self.method.is_empty() {
+                c = c.declare_method(&self.method);
+            }
+            if self.tracing {
+                c = c.with_tracing(Box::new(ProcessIdGen::new()));
+            }
+            self.inner = Some(c);
         }
         Ok(self.inner.as_mut().unwrap())
     }

@@ -7,9 +7,12 @@
 //! (`qckm sketch` → `merge` → `decode`) into an always-on TCP service:
 //!
 //! * [`proto`] — a dependency-free length-prefixed binary protocol
-//!   (push / query / snapshot / roll / stats / metrics / shutdown) over
-//!   TCP; `metrics` returns the node's Prometheus exposition page (see
-//!   [`crate::obs`]).
+//!   (push / query / snapshot / roll / stats / metrics / trace /
+//!   shutdown) over TCP; `metrics` returns the node's Prometheus
+//!   exposition page (see [`crate::obs`]), `trace` returns recent
+//!   per-request span trees as JSON (see [`crate::obs::trace`]). Since
+//!   v5, push/query/snapshot can carry an optional client-generated
+//!   trace context; v4 clients are still decoded and answered at v4.
 //! * [`SketchService`] — the shared server state: one accumulator per
 //!   *shard* (the client-chosen partition label), a ring of per-epoch
 //!   windows so queries can ask for "the last E epochs" as well as

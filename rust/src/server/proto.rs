@@ -16,6 +16,7 @@
 //! lengths and vector sizes are all bounds-checked before allocation, so a
 //! corrupt or adversarial peer gets an error, never an OOM or a panic.
 
+use crate::obs::trace::TraceContext;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 
@@ -27,8 +28,26 @@ use std::io::{Read, Write};
 /// served centroids decoded under a different algorithm) and per-decoder
 /// query counters to the stats report. Version 4 added the metrics verb
 /// (a Prometheus text page response, `qckm ctl metrics`) and the
-/// `max_shards` capacity field to the stats report.
-pub const PROTO_VERSION: u8 = 4;
+/// `max_shards` capacity field to the stats report. Version 5 added the
+/// optional trace-context extension on push/query/snapshot (a trailing
+/// presence byte plus 16-byte trace id and 8-byte parent span id) and
+/// the trace verb (`qckm ctl trace`, a JSON response of recent
+/// server-side span trees).
+///
+/// Unlike earlier bumps, v5 keeps v4 decodable: this build *accepts*
+/// versions [`MIN_PROTO_VERSION`]..=[`PROTO_VERSION`] and replies to
+/// each request at the version the request arrived in, so pre-v5
+/// clients are served identically (INVARIANTS.md I-19).
+pub const PROTO_VERSION: u8 = 5;
+/// Oldest protocol version this build still decodes (see
+/// [`PROTO_VERSION`]). Requests below it are refused with a version
+/// error, exactly as before.
+pub const MIN_PROTO_VERSION: u8 = 4;
+
+/// Whether `version` is one this build speaks.
+pub fn version_supported(version: u8) -> bool {
+    (MIN_PROTO_VERSION..=PROTO_VERSION).contains(&version)
+}
 /// Hard ceiling on one frame's payload (256 MiB) — covers the largest
 /// plausible push batch and snapshot while bounding allocations.
 pub const MAX_FRAME_BYTES: usize = 1 << 28;
@@ -61,6 +80,13 @@ pub const MAX_ERROR_BYTES: usize = 1 << 16;
 /// char boundary with a marker, `decode_response` refuses anything
 /// longer. A real page is kilobytes; the cap only bounds a hostile peer.
 pub const MAX_METRICS_BYTES: usize = 1 << 22;
+/// Ceiling on a trace-JSON response's bytes (4 MiB), enforced like
+/// [`MAX_METRICS_BYTES`] on both sides. A full ring of max-depth traces
+/// is well under this; the cap only bounds a hostile peer.
+pub const MAX_TRACE_BYTES: usize = 1 << 22;
+/// Ceiling on the `limit` field of a trace request — far above any real
+/// ring capacity, small enough to be an obvious plausibility bound.
+pub const MAX_TRACE_LIMIT: u32 = 1 << 16;
 
 const TAG_PUSH: u8 = 1;
 const TAG_QUERY: u8 = 2;
@@ -69,6 +95,7 @@ const TAG_ROLL: u8 = 4;
 const TAG_STATS: u8 = 5;
 const TAG_SHUTDOWN: u8 = 6;
 const TAG_METRICS: u8 = 7;
+const TAG_TRACE: u8 = 8;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
@@ -157,17 +184,35 @@ pub enum Request {
         method: String,
         dim: u32,
         data: Vec<f64>,
+        /// Optional v5 trace context; `None` on the wire at v4.
+        trace: Option<TraceContext>,
     },
     /// Decode centroids from a window.
-    Query { spec: QuerySpec, method: String },
+    Query {
+        spec: QuerySpec,
+        method: String,
+        /// Optional v5 trace context; `None` on the wire at v4.
+        trace: Option<TraceContext>,
+    },
     /// Serialize a window as `.qsk` bytes.
-    Snapshot { window: u32, method: String },
+    Snapshot {
+        window: u32,
+        method: String,
+        /// Optional v5 trace context; `None` on the wire at v4.
+        trace: Option<TraceContext>,
+    },
     /// Close the open epoch and start a new one.
     Roll,
     /// Report counters.
     Stats,
     /// Render the server's metrics registry as a Prometheus text page.
     Metrics,
+    /// Fetch recent server-side traces as JSON: one by id, or the
+    /// newest `limit` (0 = the server's default). v5 only.
+    Trace {
+        id: Option<[u8; 16]>,
+        limit: u32,
+    },
     /// Stop the server (responds before exiting).
     Shutdown,
 }
@@ -183,7 +228,19 @@ impl Request {
             Request::Roll => "roll",
             Request::Stats => "stats",
             Request::Metrics => "metrics",
+            Request::Trace { .. } => "trace",
             Request::Shutdown => "shutdown",
+        }
+    }
+
+    /// The trace context carried by this request, if any (only
+    /// push/query/snapshot can carry one).
+    pub fn trace_context(&self) -> Option<TraceContext> {
+        match self {
+            Request::Push { trace, .. }
+            | Request::Query { trace, .. }
+            | Request::Snapshot { trace, .. } => *trace,
+            _ => None,
         }
     }
 }
@@ -204,6 +261,8 @@ pub enum Response {
     Stats(StatsReport),
     /// A Prometheus text-format exposition page.
     Metrics(String),
+    /// A JSON document of recent traces (`{"traces":[…]}`). v5 only.
+    Traces(String),
     ShutdownAck,
 }
 
@@ -276,15 +335,30 @@ pub fn read_response(r: &mut impl Read) -> Result<Response> {
 
 // ----------------------------------------------------------------- encoding
 
-/// Serialize a request payload (version byte included, frame length not).
+/// Serialize a request payload at the current version (version byte
+/// included, frame length not).
 pub fn encode_request(req: &Request) -> Vec<u8> {
-    let mut b = vec![PROTO_VERSION];
+    encode_request_v(req, PROTO_VERSION).expect("the current version encodes every request")
+}
+
+/// Serialize a request payload at a specific protocol version. Fails
+/// when the request needs a capability the version lacks: at v4 that is
+/// a carried trace context or the trace verb.
+pub fn encode_request_v(req: &Request, version: u8) -> Result<Vec<u8>> {
+    if !version_supported(version) {
+        bail!("cannot encode protocol version {version} (this build speaks {MIN_PROTO_VERSION}..={PROTO_VERSION})");
+    }
+    if version < 5 && req.trace_context().is_some() {
+        bail!("trace context needs proto v5 (asked to encode v{version})");
+    }
+    let mut b = vec![version];
     match req {
         Request::Push {
             shard,
             method,
             dim,
             data,
+            trace,
         } => {
             b.push(TAG_PUSH);
             put_str(&mut b, shard);
@@ -294,8 +368,9 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             for &v in data {
                 b.extend_from_slice(&v.to_le_bytes());
             }
+            put_trace(&mut b, trace, version);
         }
-        Request::Query { spec: q, method } => {
+        Request::Query { spec: q, method, trace } => {
             b.push(TAG_QUERY);
             put_str(&mut b, method);
             b.extend_from_slice(&q.k.to_le_bytes());
@@ -306,26 +381,46 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             b.extend_from_slice(&q.lo.to_le_bytes());
             b.extend_from_slice(&q.hi.to_le_bytes());
             put_str(&mut b, &q.decoder);
+            put_trace(&mut b, trace, version);
         }
-        Request::Snapshot { window, method } => {
+        Request::Snapshot { window, method, trace } => {
             b.push(TAG_SNAPSHOT);
             put_str(&mut b, method);
             b.extend_from_slice(&window.to_le_bytes());
+            put_trace(&mut b, trace, version);
         }
         Request::Roll => b.push(TAG_ROLL),
         Request::Stats => b.push(TAG_STATS),
         Request::Metrics => b.push(TAG_METRICS),
+        Request::Trace { id, limit } => {
+            if version < 5 {
+                bail!("the trace verb needs proto v5 (asked to encode v{version})");
+            }
+            b.push(TAG_TRACE);
+            b.push(id.is_some() as u8);
+            if let Some(id) = id {
+                b.extend_from_slice(id);
+            }
+            b.extend_from_slice(&limit.to_le_bytes());
+        }
         Request::Shutdown => b.push(TAG_SHUTDOWN),
     }
-    b
+    Ok(b)
 }
 
-/// Parse a request payload.
+/// Parse a request payload (any supported version; the version is
+/// discarded — use [`decode_request_v`] to echo it in the reply).
 pub fn decode_request(payload: &[u8]) -> Result<Request> {
+    Ok(decode_request_v(payload)?.1)
+}
+
+/// Parse a request payload, returning the version it arrived in so the
+/// server can answer pre-v5 clients at their own version.
+pub fn decode_request_v(payload: &[u8]) -> Result<(u8, Request)> {
     let mut r = ByteReader::new(payload);
     let version = r.u8()?;
-    if version != PROTO_VERSION {
-        bail!("unsupported protocol version {version} (this build speaks {PROTO_VERSION})");
+    if !version_supported(version) {
+        bail!("unsupported protocol version {version} (this build speaks {MIN_PROTO_VERSION}..={PROTO_VERSION})");
     }
     let req = match r.u8()? {
         TAG_PUSH => {
@@ -353,11 +448,13 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
                 bail!("push: batch exceeds {MAX_PUSH_ROWS} rows");
             }
             let data = r.f64_vec(len)?;
+            let trace = take_trace(&mut r, version)?;
             Request::Push {
                 shard,
                 method,
                 dim,
                 data,
+                trace,
             }
         }
         TAG_QUERY => {
@@ -370,6 +467,7 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
             let lo = r.f64()?;
             let hi = r.f64()?;
             let decoder = r.str(MAX_DECODER_BYTES)?;
+            let trace = take_trace(&mut r, version)?;
             Request::Query {
                 spec: QuerySpec {
                     k,
@@ -381,25 +479,91 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
                     decoder,
                 },
                 method,
+                trace,
             }
         }
-        TAG_SNAPSHOT => Request::Snapshot {
-            method: r.str(MAX_METHOD_BYTES)?,
-            window: r.u32()?,
-        },
+        TAG_SNAPSHOT => {
+            let method = r.str(MAX_METHOD_BYTES)?;
+            let window = r.u32()?;
+            let trace = take_trace(&mut r, version)?;
+            Request::Snapshot { method, window, trace }
+        }
         TAG_ROLL => Request::Roll,
         TAG_STATS => Request::Stats,
         TAG_METRICS => Request::Metrics,
+        TAG_TRACE => {
+            if version < 5 {
+                bail!("the trace verb needs proto v5 (frame declares v{version})");
+            }
+            let has_id = r.u8()? != 0;
+            let id = if has_id {
+                let mut id = [0u8; 16];
+                id.copy_from_slice(r.take(16)?);
+                Some(id)
+            } else {
+                None
+            };
+            let limit = r.u32()?;
+            if limit > MAX_TRACE_LIMIT {
+                bail!("implausible trace limit {limit}");
+            }
+            Request::Trace { id, limit }
+        }
         TAG_SHUTDOWN => Request::Shutdown,
         tag => bail!("unknown request tag {tag}"),
     };
     r.finish()?;
-    Ok(req)
+    Ok((version, req))
 }
 
-/// Serialize a response payload.
+/// Append the v5 trace-context block: a presence byte, then (when
+/// present) the 16-byte trace id and 8-byte parent span id. At v4
+/// nothing is written — the caller already refused Some(trace) at v4.
+fn put_trace(b: &mut Vec<u8>, trace: &Option<TraceContext>, version: u8) {
+    if version < 5 {
+        return;
+    }
+    b.push(trace.is_some() as u8);
+    if let Some(t) = trace {
+        b.extend_from_slice(&t.trace_id);
+        b.extend_from_slice(&t.parent_span);
+    }
+}
+
+/// Read the v5 trace-context block (absent entirely at v4).
+fn take_trace(r: &mut ByteReader<'_>, version: u8) -> Result<Option<TraceContext>> {
+    if version < 5 {
+        return Ok(None);
+    }
+    if r.u8()? == 0 {
+        return Ok(None);
+    }
+    let mut trace_id = [0u8; 16];
+    trace_id.copy_from_slice(r.take(16)?);
+    let mut parent_span = [0u8; 8];
+    parent_span.copy_from_slice(r.take(8)?);
+    Ok(Some(TraceContext { trace_id, parent_span }))
+}
+
+/// Serialize a response payload at the current version.
 pub fn encode_response(resp: &Response) -> Vec<u8> {
-    let mut b = vec![PROTO_VERSION];
+    encode_response_v(resp, PROTO_VERSION).expect("the current version encodes every response")
+}
+
+/// Serialize a response payload at a specific protocol version — the
+/// server answers every request at the version it arrived in. Fails for
+/// v5-only content at v4 (a traces response), which cannot arise from a
+/// well-formed v4 request.
+pub fn encode_response_v(resp: &Response, version: u8) -> Result<Vec<u8>> {
+    if !version_supported(version) {
+        bail!("cannot encode protocol version {version} (this build speaks {MIN_PROTO_VERSION}..={PROTO_VERSION})");
+    }
+    if version < 5 {
+        if let Response::Traces(_) = resp {
+            bail!("a traces response needs proto v5 (asked to encode v{version})");
+        }
+    }
+    let mut b = vec![version];
     match resp {
         Response::Error(msg) => {
             b.push(STATUS_ERR);
@@ -468,20 +632,25 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             b.push(TAG_METRICS);
             put_str(&mut b, &truncate_to(page, MAX_METRICS_BYTES));
         }
+        Response::Traces(json) => {
+            b.push(STATUS_OK);
+            b.push(TAG_TRACE);
+            put_str(&mut b, &truncate_to(json, MAX_TRACE_BYTES));
+        }
         Response::ShutdownAck => {
             b.push(STATUS_OK);
             b.push(TAG_SHUTDOWN);
         }
     }
-    b
+    Ok(b)
 }
 
-/// Parse a response payload.
+/// Parse a response payload (any supported version).
 pub fn decode_response(payload: &[u8]) -> Result<Response> {
     let mut r = ByteReader::new(payload);
     let version = r.u8()?;
-    if version != PROTO_VERSION {
-        bail!("unsupported protocol version {version} (this build speaks {PROTO_VERSION})");
+    if !version_supported(version) {
+        bail!("unsupported protocol version {version} (this build speaks {MIN_PROTO_VERSION}..={PROTO_VERSION})");
     }
     let status = r.u8()?;
     if status == STATUS_ERR {
@@ -569,6 +738,12 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
             })
         }
         TAG_METRICS => Response::Metrics(r.str(MAX_METRICS_BYTES)?),
+        TAG_TRACE => {
+            if version < 5 {
+                bail!("a traces response needs proto v5 (frame declares v{version})");
+            }
+            Response::Traces(r.str(MAX_TRACE_BYTES)?)
+        }
         TAG_SHUTDOWN => Response::ShutdownAck,
         tag => bail!("unknown response tag {tag}"),
     };

@@ -14,6 +14,7 @@ use super::proto::{self, Request, Response};
 use super::state::SketchService;
 use crate::linalg::Mat;
 use crate::obs::log::{self, Level, Value};
+use crate::obs::trace::{self, TraceContext, TraceRecorder};
 use anyhow::{bail, Context, Result};
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -85,20 +86,10 @@ fn handle_connection(
             Some(p) => p,
             None => return Ok(()), // clean EOF or shutdown while idle
         };
-        // Decode errors are protocol-level: report and keep the connection
-        // (framing is intact — the bad frame was fully consumed).
-        let response = match proto::decode_request(&payload) {
-            Err(e) => Response::Error(format!("{e:#}")),
-            Ok(Request::Shutdown) => {
-                let _span = service.request_span("shutdown");
-                if log::enabled(Level::Info) {
-                    log::event(
-                        Level::Info,
-                        "request",
-                        &[("verb", Value::Str("shutdown")), ("ok", Value::Bool(true))],
-                    );
-                }
-                proto::write_response(&mut stream, &Response::ShutdownAck)?;
+        match handle_payload(service, &payload) {
+            Handled::Reply(frame) => proto::write_frame(&mut stream, &frame)?,
+            Handled::Shutdown(frame) => {
+                proto::write_frame(&mut stream, &frame)?;
                 stop.store(true, Ordering::SeqCst);
                 // Wake the accept loop so it observes the flag. An
                 // unspecified bind address (0.0.0.0) is not connectable on
@@ -110,28 +101,108 @@ fn handle_connection(
                 let _ = TcpStream::connect(wake);
                 return Ok(());
             }
-            Ok(req) => match handle_request(service, req) {
+        }
+    }
+}
+
+/// The outcome of one request payload: a reply frame to write, plus
+/// whether the connection loop must raise the shutdown flag afterwards.
+pub(crate) enum Handled {
+    Reply(Vec<u8>),
+    /// The encoded shutdown ack — write it, then stop the server.
+    Shutdown(Vec<u8>),
+}
+
+/// Process one request payload end to end — decode (timed, so a traced
+/// request's tree includes `frame_decode`), install the trace recorder
+/// when the request carries a context, dispatch, store the finished
+/// trace, and encode the reply *at the version the request arrived in*
+/// so pre-v5 clients are served identically (I-19). Socket-free, so
+/// tests drive the full path in-process.
+pub(crate) fn handle_payload(service: &SketchService, payload: &[u8]) -> Handled {
+    let clock = service.registry_clock();
+    let t0 = clock.now_ns();
+    let decoded = proto::decode_request_v(payload);
+    let t1 = clock.now_ns();
+    // Reply version: echo the request's. For an undecodable frame, trust
+    // the leading version byte if it is one we speak (the error must be
+    // readable by the sender), else answer at the current version.
+    let reply_version = match &decoded {
+        Ok((v, _)) => *v,
+        Err(_) => payload
+            .first()
+            .copied()
+            .filter(|&v| proto::version_supported(v))
+            .unwrap_or(proto::PROTO_VERSION),
+    };
+    let encode = |resp: &Response| -> Vec<u8> {
+        proto::encode_response_v(resp, reply_version).unwrap_or_else(|e| {
+            // Unrepresentable at the peer's version (cannot arise from a
+            // well-formed request of that version) — send the reason.
+            proto::encode_response(&Response::Error(format!("{e:#}")))
+        })
+    };
+    match decoded {
+        // Decode errors are protocol-level: report and keep the
+        // connection (framing is intact — the bad frame was consumed).
+        Err(e) => Handled::Reply(encode(&Response::Error(format!("{e:#}")))),
+        Ok((_, Request::Shutdown)) => {
+            let _span = service.request_span("shutdown");
+            if log::enabled(Level::Info) {
+                log::event(
+                    Level::Info,
+                    "request",
+                    &[("verb", Value::Str("shutdown")), ("ok", Value::Bool(true))],
+                );
+            }
+            Handled::Shutdown(encode(&Response::ShutdownAck))
+        }
+        Ok((_, req)) => {
+            let result = match req.trace_context() {
+                None => handle_request(service, req, None),
+                Some(ctx) => {
+                    let verb = req.verb();
+                    let recorder = TraceRecorder::new(clock, ctx);
+                    let result = {
+                        let _active = trace::install(&recorder);
+                        // Frame decode happened before the context it
+                        // carries could be installed — backfill it as a
+                        // root-level node from the measured interval.
+                        recorder.record_closed("frame_decode", t0, t1);
+                        handle_request(service, req, Some(&ctx))
+                    };
+                    service.record_trace(recorder.snapshot(verb, result.is_ok()));
+                    result
+                }
+            };
+            let resp = match result {
                 Ok(resp) => resp,
                 Err(e) => Response::Error(format!("{e:#}")),
-            },
-        };
-        proto::write_response(&mut stream, &response)?;
+            };
+            Handled::Reply(encode(&resp))
+        }
     }
 }
 
 /// Dispatch one request against the shared state, counting it and timing
 /// it under its verb's metrics; with JSON logging on, one info-level
-/// `request` event records the verb and outcome.
-fn handle_request(service: &SketchService, req: Request) -> Result<Response> {
+/// `request` event records the verb, outcome, and (when traced) the
+/// trace id — the log ↔ trace join key.
+fn handle_request(
+    service: &SketchService,
+    req: Request,
+    ctx: Option<&TraceContext>,
+) -> Result<Response> {
     let verb = req.verb();
     let _span = service.request_span(verb);
     let result = dispatch(service, req);
     if log::enabled(Level::Info) {
-        log::event(
-            Level::Info,
-            "request",
-            &[("verb", Value::Str(verb)), ("ok", Value::Bool(result.is_ok()))],
-        );
+        let trace_hex = ctx.map(|c| c.trace_id_hex());
+        let mut fields = vec![("verb", Value::Str(verb)), ("ok", Value::Bool(result.is_ok()))];
+        if let Some(hex) = &trace_hex {
+            fields.push(("trace", Value::Str(hex)));
+        }
+        log::event(Level::Info, "request", &fields);
     }
     result
 }
@@ -143,8 +214,12 @@ fn dispatch(service: &SketchService, req: Request) -> Result<Response> {
             method,
             dim,
             data,
+            trace: _,
         } => {
-            service.check_method(&method)?;
+            {
+                let _t = trace::scoped("cap_check");
+                service.check_method(&method)?;
+            }
             let rows = data.len() / dim as usize;
             let batch = Mat::from_vec(rows, dim as usize, data);
             let (shard_rows, total_rows) = service.ingest(&shard, &batch)?;
@@ -153,12 +228,18 @@ fn dispatch(service: &SketchService, req: Request) -> Result<Response> {
                 total_rows,
             }
         }
-        Request::Query { spec, method } => {
-            service.check_method(&method)?;
+        Request::Query { spec, method, trace: _ } => {
+            {
+                let _t = trace::scoped("cap_check");
+                service.check_method(&method)?;
+            }
             Response::Centroids(service.query(&spec)?)
         }
-        Request::Snapshot { window, method } => {
-            service.check_method(&method)?;
+        Request::Snapshot { window, method, trace: _ } => {
+            {
+                let _t = trace::scoped("cap_check");
+                service.check_method(&method)?;
+            }
             Response::Snapshot(service.snapshot(window)?)
         }
         Request::Roll => {
@@ -167,6 +248,7 @@ fn dispatch(service: &SketchService, req: Request) -> Result<Response> {
         }
         Request::Stats => Response::Stats(service.stats()),
         Request::Metrics => Response::Metrics(service.render_metrics()),
+        Request::Trace { id, limit } => Response::Traces(service.traces_json(id, limit)?),
         Request::Shutdown => unreachable!("handled by the connection loop"),
     })
 }

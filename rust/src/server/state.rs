@@ -40,7 +40,8 @@
 use crate::clompr::ClOmprParams;
 use crate::decoder::DecoderSpec;
 use crate::linalg::Mat;
-use crate::obs::{Counter, Histogram, Registry, Span};
+use crate::obs::trace::{TraceRecord, TraceStore};
+use crate::obs::{Clock, Counter, Gauge, Histogram, Registry, Span};
 use crate::parallel::Parallelism;
 use crate::rng::Rng;
 use crate::sketch::{PooledSketch, SketchOperator};
@@ -78,6 +79,9 @@ pub struct ServiceConfig {
     /// [`crate::obs::global`] so one `ctl metrics` scrape covers the
     /// server alongside the stream/decoder/parallel library metrics.
     pub registry: Arc<Registry>,
+    /// Finished request traces retained in the ring served by
+    /// `ctl trace` (oldest evicted past this).
+    pub trace_capacity: usize,
 }
 
 impl Default for ServiceConfig {
@@ -89,13 +93,18 @@ impl Default for ServiceConfig {
             max_shards: 1024,
             decode: ClOmprParams::default(),
             registry: Arc::new(Registry::new(Arc::new(crate::obs::MonotonicClock::new()))),
+            trace_capacity: 128,
         }
     }
 }
 
-/// The protocol verbs, in tag order — the label set of the per-verb
-/// request counters and latency histograms.
-const VERBS: [&str; 7] = ["push", "query", "snapshot", "roll", "stats", "metrics", "shutdown"];
+/// The protocol verbs — the label set of the per-verb request counters
+/// and latency histograms.
+const VERBS: [&str; 8] =
+    ["push", "query", "snapshot", "roll", "stats", "metrics", "trace", "shutdown"];
+
+/// `ctl trace` with no explicit limit returns this many newest traces.
+pub(crate) const DEFAULT_TRACE_LIMIT: usize = 16;
 
 /// The service's registered instruments, resolved once at construction so
 /// the request path never does a name lookup.
@@ -116,6 +125,22 @@ struct ServerMetrics {
     /// hand-rolled counter anymore).
     cache_hits: Arc<Counter>,
     cache_misses: Arc<Counter>,
+    /// `qckm_uptime_seconds` — seconds since service construction, on the
+    /// registry's clock (so the FakeClock golden stays exact). Refreshed
+    /// at scrape time by [`SketchService::render_metrics`].
+    uptime_seconds: Arc<Gauge>,
+    /// `qckm_shards` / `qckm_epoch_ring_epochs` — occupancy mirrors of
+    /// what `ctl stats` reports, refreshed at scrape time.
+    shards_gauge: Arc<Gauge>,
+    epoch_ring_gauge: Arc<Gauge>,
+    /// `qckm_query_residual_norm` — final sketch-matching residual
+    /// `‖z − A(P)‖` of each decode that ran (cache hits excluded: no
+    /// decode, no residual).
+    residual_norm: Arc<Histogram>,
+    /// `qckm_query_outer_iters_total` / `qckm_query_atoms_replaced_total`
+    /// — CL-OMPR effort and churn of the winning replicate per decode.
+    outer_iters: Arc<Counter>,
+    atoms_replaced: Arc<Counter>,
 }
 
 impl ServerMetrics {
@@ -172,6 +197,37 @@ impl ServerMetrics {
             cache_misses: reg.counter(
                 "qckm_cache_misses_total",
                 "Centroid-cache misses (a decode ran).",
+                &[],
+            ),
+            uptime_seconds: reg.gauge(
+                "qckm_uptime_seconds",
+                "Seconds since service construction, on the registry clock.",
+                &[],
+            ),
+            shards_gauge: reg.gauge(
+                "qckm_shards",
+                "Distinct shard labels tracked (all-time accumulators).",
+                &[],
+            ),
+            epoch_ring_gauge: reg.gauge(
+                "qckm_epoch_ring_epochs",
+                "Closed epochs currently held in the window ring.",
+                &[],
+            ),
+            residual_norm: reg.histogram(
+                "qckm_query_residual_norm",
+                "Final sketch-matching residual of each decode that ran.",
+                &[],
+                &Histogram::log_boundaries(1e-4, 4.0, 12),
+            ),
+            outer_iters: reg.counter(
+                "qckm_query_outer_iters_total",
+                "Decoder outer iterations across all decodes that ran.",
+                &[],
+            ),
+            atoms_replaced: reg.counter(
+                "qckm_query_atoms_replaced_total",
+                "CL-OMPR hard-threshold atom replacements across all decodes.",
                 &[],
             ),
         }
@@ -236,6 +292,11 @@ pub struct SketchService {
     cfg: ServiceConfig,
     metrics: ServerMetrics,
     inner: Mutex<Inner>,
+    /// Finished request traces, ring-bounded at
+    /// [`ServiceConfig::trace_capacity`].
+    traces: TraceStore,
+    /// Registry-clock reading at construction — the uptime anchor.
+    start_ns: u64,
 }
 
 impl SketchService {
@@ -249,6 +310,18 @@ impl SketchService {
             "meta does not describe the operator"
         );
         let metrics = ServerMetrics::new(&cfg.registry);
+        // `qckm_build_info`: the constant-1 series whose label carries the
+        // build's version — the standard Prometheus idiom for joining any
+        // other series to a version.
+        cfg.registry
+            .gauge(
+                "qckm_build_info",
+                "Constant 1; the version label identifies this build.",
+                &[("version", env!("CARGO_PKG_VERSION"))],
+            )
+            .set(1.0);
+        let traces = TraceStore::new(cfg.trace_capacity);
+        let start_ns = cfg.registry.now_ns();
         Self {
             op,
             meta,
@@ -262,6 +335,8 @@ impl SketchService {
                 cache: VecDeque::new(),
                 decoder_uses: BTreeMap::new(),
             }),
+            traces,
+            start_ns,
         }
     }
 
@@ -279,9 +354,54 @@ impl SketchService {
     }
 
     /// Render this service's metrics registry as a Prometheus text page —
-    /// the body of the `ctl metrics` response.
+    /// the body of the `ctl metrics` response. Scrape-time gauges
+    /// (uptime, occupancy) are refreshed first, so the page always
+    /// reflects the state at the moment of the scrape. The state lock is
+    /// released before rendering (which takes the registry lock), keeping
+    /// the lock order state → registry everywhere.
     pub fn render_metrics(&self) -> String {
+        let (shards, epochs_held) = {
+            let inner = self.locked();
+            (inner.alltime.len(), inner.closed.len())
+        };
+        self.metrics.shards_gauge.set(shards as f64);
+        self.metrics.epoch_ring_gauge.set(epochs_held as f64);
+        let now = self.cfg.registry.now_ns();
+        self.metrics
+            .uptime_seconds
+            .set(now.saturating_sub(self.start_ns) as f64 * 1e-9);
         self.cfg.registry.render()
+    }
+
+    /// The registry's clock — the time source for request trace trees,
+    /// shared with every histogram span so the two never disagree.
+    pub(crate) fn registry_clock(&self) -> Arc<dyn Clock> {
+        self.cfg.registry.clock()
+    }
+
+    /// Store one finished request trace in the ring.
+    pub(crate) fn record_trace(&self, rec: TraceRecord) {
+        self.traces.push(rec);
+    }
+
+    /// Answer the trace verb: `{"traces":[…]}`, newest first — either
+    /// the one trace with `id`, or the newest `limit` (0 = default).
+    pub fn traces_json(&self, id: Option<[u8; 16]>, limit: u32) -> Result<String> {
+        let records = match id {
+            Some(id) => match self.traces.find(&id) {
+                Some(rec) => vec![rec],
+                None => bail!(
+                    "trace {} not found (the ring keeps the newest {}; was the request sent with --trace?)",
+                    crate::obs::trace::hex(&id),
+                    self.traces.capacity()
+                ),
+            },
+            None => {
+                let limit = if limit == 0 { DEFAULT_TRACE_LIMIT } else { limit as usize };
+                self.traces.recent(limit)
+            }
+        };
+        Ok(crate::obs::trace::traces_to_json(&records))
     }
 
     /// Acquire the state lock, recovering from poisoning. A panic while
@@ -320,6 +440,33 @@ impl SketchService {
     /// The operator's `.qsk` header description.
     pub fn meta(&self) -> &SketchMeta {
         &self.meta
+    }
+
+    /// Refresh shard `label`'s health gauges from its all-time
+    /// accumulator: `qckm_shard_rows{shard}` and
+    /// `qckm_shard_bit_balance{shard}` — the mean pooled slot value. For
+    /// the ±1 quantized signature this is the paper's checkable
+    /// fingerprint (PAPER.md §II): under proper dithering the pooled
+    /// sums stay balanced near 0, so a drifting or mis-dithered pusher
+    /// shows up as a walking balance long before clustering degrades.
+    /// Label cardinality is bounded by [`ServiceConfig::max_shards`],
+    /// the same cap that bounds the accumulator maps. Values are
+    /// computed under the state lock by the caller; the gauge writes
+    /// (which take the registry lock) happen after it is released.
+    fn set_shard_health(&self, label: &str, rows: u64, balance: f64) {
+        let reg = &self.cfg.registry;
+        reg.gauge(
+            "qckm_shard_rows",
+            "All-time rows pooled per shard.",
+            &[("shard", label)],
+        )
+        .set(rows as f64);
+        reg.gauge(
+            "qckm_shard_bit_balance",
+            "Mean pooled slot value per shard (near 0 under proper dithering for quantized methods).",
+            &[("shard", label)],
+        )
+        .set(balance);
     }
 
     /// Verify a client-declared method spec against this server's
@@ -362,11 +509,14 @@ impl SketchService {
                 self.cfg.max_shards
             );
         }
-        inner
+        let seeded = inner
             .alltime
             .entry(label.to_string())
-            .or_insert_with(|| PooledSketch::new(pool.len()))
-            .merge(&pool);
+            .or_insert_with(|| PooledSketch::new(pool.len()));
+        seeded.merge(&pool);
+        let (rows, balance) = (seeded.count(), pool_balance(seeded));
+        drop(inner);
+        self.set_shard_health(label, rows, balance);
         Ok(())
     }
 
@@ -418,12 +568,15 @@ impl SketchService {
             .or_insert_with(|| PooledSketch::new(len));
         shard_pool.merge(&partial);
         let shard_rows = shard_pool.count();
+        let balance = pool_balance(shard_pool);
         let total_rows = inner.alltime.values().map(|p| p.count()).sum();
+        drop(inner);
         // Counted after the cap check: these are *accepted* rows/bytes.
         self.metrics.push_rows.add(batch.rows() as u64);
         self.metrics
             .push_bytes
             .add((batch.rows() * batch.cols() * 8) as u64);
+        self.set_shard_health(shard, shard_rows, balance);
         Ok((shard_rows, total_rows))
     }
 
@@ -562,6 +715,13 @@ impl SketchService {
             replicates as usize,
             &mut Rng::new(seed),
         );
+        // Decode-quality instruments (I-18: reads of the finished
+        // solution, nothing fed back): the final residual `‖z − A(P)‖`
+        // is the objective itself, effort/churn come from the winning
+        // replicate's iteration counters.
+        self.metrics.residual_norm.observe(sol.objective);
+        self.metrics.outer_iters.add(sol.outer_iters as u64);
+        self.metrics.atoms_replaced.add(sol.atoms_replaced as u64);
         let report = CentroidReport {
             centroids: sol.centroids.as_slice().to_vec(),
             k: spec.k,
@@ -623,6 +783,16 @@ impl SketchService {
                 .collect(),
         }
     }
+}
+
+/// Mean pooled slot value — the bit-balance health signal (0 when the
+/// pool is empty). See [`SketchService::set_shard_health`].
+fn pool_balance(pool: &PooledSketch) -> f64 {
+    let rows = pool.count();
+    if rows == 0 || pool.len() == 0 {
+        return 0.0;
+    }
+    pool.sum().iter().sum::<f64>() / (pool.len() as f64 * rows as f64)
 }
 
 /// Cache key: FNV over the merged window's exact pooled bits, every

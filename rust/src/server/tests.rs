@@ -1,14 +1,18 @@
 //! Unit tests for the sketch service: protocol round-trips and defensive
-//! decoding, shard/epoch/window state semantics, the centroid cache, the
-//! snapshot ⇄ `.qsk` bridge, concurrent-ingest determinism, and one
-//! in-process socket smoke (real `TcpListener`, no child processes —
-//! `rust/tests/server_e2e.rs` drives the actual binary).
+//! decoding (v4 and v5), shard/epoch/window state semantics, the centroid
+//! cache, the snapshot ⇄ `.qsk` bridge, request tracing (the golden span
+//! tree, the bounded ring, v4 compatibility), concurrent-ingest
+//! determinism, and one in-process socket smoke (real `TcpListener`, no
+//! child processes — `rust/tests/server_e2e.rs` drives the actual binary).
 
 use super::proto::{self, CentroidReport, QuerySpec, Request, Response, StatsReport};
+use super::service::{handle_payload, Handled};
 use super::state::{ServiceConfig, SketchService};
 use crate::frequency::FrequencyLaw;
 use crate::linalg::Mat;
 use crate::method::MethodSpec;
+use crate::obs::trace::{IdGen, SeqIdGen, TraceContext};
+use crate::obs::{FakeClock, Registry};
 use crate::rng::Rng;
 use crate::sketch::PooledSketch;
 use crate::stream::{draw_operator, read_sketch_from, SketchMeta};
@@ -45,6 +49,14 @@ fn spec(k: u32, window: u32) -> QuerySpec {
 
 // ------------------------------------------------------------------- proto
 
+/// A fixed, nontrivial trace context for round-trip literals.
+fn test_ctx() -> TraceContext {
+    TraceContext {
+        trace_id: *b"0123456789abcdef",
+        parent_span: *b"fedcba98",
+    }
+}
+
 #[test]
 fn proto_round_trips_every_request_variant() {
     let requests = [
@@ -53,12 +65,14 @@ fn proto_round_trips_every_request_variant() {
             method: "qckm:bits=2".into(),
             dim: 3,
             data: vec![1.5, -2.25, 0.0, 4.0, 5.0, -6.0],
+            trace: None,
         },
         Request::Push {
             shard: "sensor-8".into(),
             method: String::new(),
             dim: 2,
             data: vec![1.0, 2.0],
+            trace: Some(test_ctx()),
         },
         Request::Query {
             spec: QuerySpec {
@@ -71,24 +85,114 @@ fn proto_round_trips_every_request_variant() {
                 decoder: "clompr:restarts=5".into(),
             },
             method: "modulo".into(),
+            trace: None,
         },
         Request::Query {
             spec: spec(1, 0),
             method: String::new(),
+            trace: Some(test_ctx()),
         },
         Request::Snapshot {
             window: 7,
             method: "qckm".into(),
+            trace: None,
+        },
+        Request::Snapshot {
+            window: 0,
+            method: String::new(),
+            trace: Some(test_ctx()),
         },
         Request::Roll,
         Request::Stats,
         Request::Metrics,
+        Request::Trace { id: None, limit: 0 },
+        Request::Trace {
+            id: Some(test_ctx().trace_id),
+            limit: 25,
+        },
         Request::Shutdown,
     ];
     for req in &requests {
         let bytes = proto::encode_request(req);
         assert_eq!(&proto::decode_request(&bytes).unwrap(), req, "{req:?}");
     }
+}
+
+/// The v4 wire format is still spoken on both sides: every trace-free
+/// request round-trips at version 4 (and reports that version to the
+/// server), while v5-only content refuses to encode at v4 instead of
+/// silently dropping fields.
+#[test]
+fn proto_v4_round_trips_and_refuses_v5_content() {
+    let v4_requests = [
+        Request::Push {
+            shard: "sensor-7".into(),
+            method: "qckm".into(),
+            dim: 2,
+            data: vec![1.0, 2.0],
+            trace: None,
+        },
+        Request::Query {
+            spec: spec(3, 1),
+            method: String::new(),
+            trace: None,
+        },
+        Request::Snapshot {
+            window: 2,
+            method: String::new(),
+            trace: None,
+        },
+        Request::Roll,
+        Request::Stats,
+        Request::Metrics,
+        Request::Shutdown,
+    ];
+    for req in &v4_requests {
+        let bytes = proto::encode_request_v(req, 4).unwrap();
+        assert_eq!(bytes[0], 4, "{req:?}");
+        let (version, decoded) = proto::decode_request_v(&bytes).unwrap();
+        assert_eq!(version, 4, "{req:?}");
+        assert_eq!(&decoded, req, "{req:?}");
+    }
+
+    // A carried trace context and the trace verb are v5 capabilities: the
+    // encoder refuses rather than producing a frame v4 peers misread.
+    let traced = Request::Query {
+        spec: spec(1, 0),
+        method: String::new(),
+        trace: Some(test_ctx()),
+    };
+    let err = format!("{:#}", proto::encode_request_v(&traced, 4).unwrap_err());
+    assert!(err.contains("needs proto v5"), "{err}");
+    let err = format!(
+        "{:#}",
+        proto::encode_request_v(&Request::Trace { id: None, limit: 1 }, 4).unwrap_err()
+    );
+    assert!(err.contains("needs proto v5"), "{err}");
+
+    // Responses: everything the v4 protocol had encodes at v4 and decodes
+    // back; a traces response is v5-only in both directions.
+    let ack = Response::PushAck {
+        shard_rows: 3,
+        total_rows: 9,
+    };
+    let bytes = proto::encode_response_v(&ack, 4).unwrap();
+    assert_eq!(bytes[0], 4);
+    assert_eq!(proto::decode_response(&bytes).unwrap(), ack);
+    let err = format!(
+        "{:#}",
+        proto::encode_response_v(&Response::Traces("{}".into()), 4).unwrap_err()
+    );
+    assert!(err.contains("needs proto v5"), "{err}");
+    // A hand-crafted v4 frame claiming the traces tag is refused too:
+    // version byte 4, STATUS_OK, tag 8 (trace), empty string.
+    let forged = [4u8, 0, 8, 0, 0, 0, 0];
+    let err = format!("{:#}", proto::decode_response(&forged).unwrap_err());
+    assert!(err.contains("needs proto v5"), "{err}");
+    // Same for a request frame: version 4, tag 8 (trace), no id, limit 0.
+    let forged = [4u8, 8, 0, 0, 0, 0, 0];
+    let err = format!("{:#}", proto::decode_request(&forged).unwrap_err());
+    assert!(err.contains("needs proto v5"), "{err}");
 }
 
 #[test]
@@ -126,6 +230,7 @@ fn proto_round_trips_every_response_variant() {
             decoders: vec![("clompr".into(), 9), ("hier".into(), 2)],
         }),
         Response::Metrics("# HELP qckm_requests_total req\n".into()),
+        Response::Traces("{\n  \"traces\": []\n}".into()),
         Response::ShutdownAck,
     ];
     for resp in &responses {
@@ -150,8 +255,25 @@ fn proto_rejects_malformed_payloads() {
     let bytes = proto::encode_request(&Request::Query {
         spec: spec(2, 0),
         method: String::new(),
+        trace: None,
     });
     assert!(proto::decode_request(&bytes[..bytes.len() - 1]).is_err());
+
+    // Truncated trace block: presence byte says a context follows, but
+    // the id bytes are missing.
+    let bytes = proto::encode_request(&Request::Query {
+        spec: spec(2, 0),
+        method: String::new(),
+        trace: Some(test_ctx()),
+    });
+    assert!(proto::decode_request(&bytes[..bytes.len() - 8]).is_err());
+
+    // Implausible trace limit.
+    let mut bytes = proto::encode_request(&Request::Trace { id: None, limit: 1 });
+    let at = bytes.len() - 4;
+    bytes[at..].copy_from_slice(&(proto::MAX_TRACE_LIMIT + 1).to_le_bytes());
+    let err = format!("{:#}", proto::decode_request(&bytes).unwrap_err());
+    assert!(err.contains("implausible trace limit"), "{err}");
 
     // Trailing garbage.
     let mut bytes = proto::encode_request(&Request::Stats);
@@ -164,6 +286,7 @@ fn proto_rejects_malformed_payloads() {
         method: String::new(),
         dim: 3,
         data: vec![0.0; 6],
+        trace: None,
     });
     // dim lives after the 1-byte version, 1-byte tag, 4+1 byte shard
     // label, and 4+0 byte method spec.
@@ -191,6 +314,7 @@ fn proto_rejects_zero_row_pushes() {
         method: String::new(),
         dim: 3,
         data: vec![],
+        trace: None,
     });
     let err = format!("{:#}", proto::decode_request(&bytes).unwrap_err());
     assert!(err.contains("empty batch"), "{err}");
@@ -255,14 +379,299 @@ fn metrics_page_covers_server_families_and_validates() {
     for needle in [
         "qckm_requests_total{verb=\"push\"} 0", // direct state calls skip request spans
         "qckm_requests_total{verb=\"metrics\"} 0",
+        "qckm_requests_total{verb=\"trace\"} 0",
         "qckm_push_rows_total 400",
         "qckm_ingest_encode_seconds_count 1",
         "qckm_window_merge_seconds_count",
         "qckm_cache_hits_total 1",
         "qckm_cache_misses_total 1",
+        // Build identity and scrape-time occupancy mirrors.
+        concat!("qckm_build_info{version=\"", env!("CARGO_PKG_VERSION"), "\"} 1"),
+        "qckm_uptime_seconds",
+        "qckm_shards 1",
+        "qckm_epoch_ring_epochs 0",
+        // Sketch-health gauges, refreshed by the push above.
+        "qckm_shard_rows{shard=\"s\"} 400",
+        "qckm_shard_bit_balance{shard=\"s\"}",
+        // Decode-quality instruments: exactly one decode ran (the second
+        // query hit the cache), a k=2 CL-OMPR decode runs 2k = 4 outer
+        // iterations.
+        "qckm_query_residual_norm_count 1",
+        "qckm_query_outer_iters_total 4",
+        "qckm_query_atoms_replaced_total",
     ] {
         assert!(page.contains(needle), "missing `{needle}` in page:\n{page}");
     }
+}
+
+/// The uptime gauge runs on the registry's clock, so under a fake clock
+/// the scraped value is an exact constant — and build info is pinned to
+/// the crate version with a constant sample value of 1.
+#[test]
+fn uptime_and_build_info_track_the_registry_clock() {
+    let clock = Arc::new(FakeClock::new());
+    let svc = service(ServiceConfig {
+        registry: Arc::new(Registry::new(clock.clone())),
+        ..ServiceConfig::default()
+    });
+    clock.advance_ns(1_500_000_000); // exactly 1.5 s after construction
+    let page = svc.render_metrics();
+    assert!(page.contains("qckm_uptime_seconds 1.5"), "{page}");
+    let build = concat!("qckm_build_info{version=\"", env!("CARGO_PKG_VERSION"), "\"} 1");
+    assert!(page.contains(build), "{page}");
+}
+
+// ----------------------------------------------------------------- tracing
+
+/// Drive one encoded request through the full socket-free payload path
+/// (frame decode → trace install → dispatch → version-echoed encode).
+fn roundtrip(svc: &SketchService, req: &Request) -> Response {
+    let frame = match handle_payload(svc, &proto::encode_request(req)) {
+        Handled::Reply(frame) | Handled::Shutdown(frame) => frame,
+    };
+    proto::decode_response(&frame).unwrap()
+}
+
+/// The tentpole acceptance: a traced query's server-side span tree,
+/// fetched back through the trace verb, is an exact constant under the
+/// fake clock — both the structure (frame decode, then the query span
+/// with cap check / window merge / decode under it, the decode running
+/// `2k = 2` CL-OMPR outer iterations of step 1 + step 5) and the
+/// timings (all zero: a plain fake clock never moves).
+#[test]
+fn traced_query_span_tree_is_golden() {
+    let svc = service(ServiceConfig {
+        registry: Arc::new(Registry::new(Arc::new(FakeClock::new()))),
+        ..ServiceConfig::default()
+    });
+    let mut rng = Rng::new(17);
+    let data = crate::data::gaussian_mixture_pm1(300, DIM, 1, &mut rng);
+    svc.ingest("s", &data.points).unwrap();
+
+    let ctx = SeqIdGen::new(0xABCD).next_context();
+    let resp = roundtrip(
+        &svc,
+        &Request::Query {
+            spec: spec(1, 0),
+            method: String::new(),
+            trace: Some(ctx),
+        },
+    );
+    assert!(matches!(resp, Response::Centroids(_)), "{resp:?}");
+
+    let fetched = roundtrip(
+        &svc,
+        &Request::Trace {
+            id: Some(ctx.trace_id),
+            limit: 0,
+        },
+    );
+    let Response::Traces(json) = fetched else {
+        panic!("expected a traces response, got {fetched:?}");
+    };
+    let expected = r#"{
+  "traces": [
+    {
+      "trace_id": "000000000000abcd0000000000000001",
+      "parent_span": "0000000000000001",
+      "verb": "query",
+      "ok": true,
+      "dropped_spans": 0,
+      "spans": [
+        {
+          "stage": "frame_decode",
+          "start_ns": 0,
+          "elapsed_ns": 0,
+          "children": []
+        },
+        {
+          "stage": "query",
+          "start_ns": 0,
+          "elapsed_ns": 0,
+          "children": [
+            {
+              "stage": "cap_check",
+              "start_ns": 0,
+              "elapsed_ns": 0,
+              "children": []
+            },
+            {
+              "stage": "window_merge",
+              "start_ns": 0,
+              "elapsed_ns": 0,
+              "children": []
+            },
+            {
+              "stage": "decode",
+              "start_ns": 0,
+              "elapsed_ns": 0,
+              "children": [
+                {
+                  "stage": "clompr_step1",
+                  "start_ns": 0,
+                  "elapsed_ns": 0,
+                  "children": []
+                },
+                {
+                  "stage": "clompr_step5",
+                  "start_ns": 0,
+                  "elapsed_ns": 0,
+                  "children": []
+                },
+                {
+                  "stage": "clompr_step1",
+                  "start_ns": 0,
+                  "elapsed_ns": 0,
+                  "children": []
+                },
+                {
+                  "stage": "clompr_step5",
+                  "start_ns": 0,
+                  "elapsed_ns": 0,
+                  "children": []
+                }
+              ]
+            }
+          ]
+        }
+      ]
+    }
+  ]
+}"#;
+    assert_eq!(json, expected);
+}
+
+/// The trace ring is bounded at `trace_capacity` (oldest evicted), id
+/// lookups search newest-first, a missing id errors helpfully, and an
+/// explicit limit caps the batch.
+#[test]
+fn trace_ring_bounds_evicts_and_finds_by_id() {
+    let svc = service(ServiceConfig {
+        trace_capacity: 2,
+        ..ServiceConfig::default()
+    });
+    let mut gen = SeqIdGen::new(7);
+    let mut ids = Vec::new();
+    for i in 0..3u64 {
+        let ctx = gen.next_context();
+        ids.push(ctx.trace_id);
+        let resp = roundtrip(
+            &svc,
+            &Request::Push {
+                shard: "s".into(),
+                method: String::new(),
+                dim: DIM as u32,
+                data: vec![0.25; DIM],
+                trace: Some(ctx),
+            },
+        );
+        assert!(matches!(resp, Response::PushAck { .. }), "push {i}: {resp:?}");
+    }
+
+    // The oldest of the three was evicted; the newest two are held.
+    let err = format!("{:#}", svc.traces_json(Some(ids[0]), 0).unwrap_err());
+    assert!(err.contains("not found"), "{err}");
+    for id in &ids[1..] {
+        let json = svc.traces_json(Some(*id), 0).unwrap();
+        assert!(json.contains(&crate::obs::trace::hex(id)), "{json}");
+        // A traced push times the encode under its push span.
+        assert!(json.contains("\"verb\": \"push\""), "{json}");
+        assert!(json.contains("\"stage\": \"ingest_encode\""), "{json}");
+    }
+
+    // Batch fetches: newest first, limited, defaulting when limit = 0.
+    let batch = svc.traces_json(None, 1).unwrap();
+    assert_eq!(batch.matches("\"trace_id\"").count(), 1);
+    assert!(batch.contains(&crate::obs::trace::hex(&ids[2])), "{batch}");
+    let both = svc.traces_json(None, 0).unwrap();
+    assert_eq!(both.matches("\"trace_id\"").count(), 2);
+    let first = both.find(&crate::obs::trace::hex(&ids[2])).unwrap();
+    let second = both.find(&crate::obs::trace::hex(&ids[1])).unwrap();
+    assert!(first < second, "newest must come first:\n{both}");
+
+    // Untraced requests leave nothing behind (I-19: tracing is opt-in).
+    let before = both.matches("\"trace_id\"").count();
+    let resp = roundtrip(
+        &svc,
+        &Request::Push {
+            shard: "s".into(),
+            method: String::new(),
+            dim: DIM as u32,
+            data: vec![0.5; DIM],
+            trace: None,
+        },
+    );
+    assert!(matches!(resp, Response::PushAck { .. }));
+    let after = svc.traces_json(None, 0).unwrap();
+    assert_eq!(after.matches("\"trace_id\"").count(), before);
+}
+
+/// I-19 end to end: a v4 client (no trace fields anywhere) is served
+/// byte-identically by the v5 server — every reply frame carries version
+/// 4 — and a forged v4 trace-verb frame is refused without killing the
+/// connection.
+#[test]
+fn v4_clients_are_served_at_their_own_version() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let svc = Arc::new(service(ServiceConfig::default()));
+    let server = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || super::serve(listener, svc).unwrap())
+    };
+
+    fn call_v4(stream: &mut std::net::TcpStream, req: &Request) -> (u8, Response) {
+        let frame = proto::encode_request_v(req, 4).unwrap();
+        proto::write_frame(stream, &frame).unwrap();
+        let payload = proto::read_frame(stream).unwrap().unwrap();
+        (payload[0], proto::decode_response(&payload).unwrap())
+    }
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+
+    let x = random_mat(40, DIM, 11);
+    let (version, resp) = call_v4(&mut stream, &Request::Push {
+        shard: "old-client".into(),
+        method: "qckm".into(),
+        dim: DIM as u32,
+        data: x.as_slice().to_vec(),
+        trace: None,
+    });
+    assert_eq!(version, 4, "reply must echo the request's version");
+    assert!(matches!(resp, Response::PushAck { .. }), "{resp:?}");
+
+    let (version, resp) = call_v4(&mut stream, &Request::Query {
+        spec: spec(1, 0),
+        method: String::new(),
+        trace: None,
+    });
+    assert_eq!(version, 4);
+    let Response::Centroids(report) = resp else {
+        panic!("expected centroids");
+    };
+    assert_eq!(report.rows, 40);
+    // The v4 answer is the same decode a v5 client gets, bit for bit.
+    assert_eq!(report.centroids, svc.query(&spec(1, 0)).unwrap().centroids);
+
+    let (version, resp) = call_v4(&mut stream, &Request::Stats);
+    assert_eq!(version, 4);
+    assert!(matches!(resp, Response::Stats(_)));
+
+    // A forged v4 frame with the trace tag (8): refused, at v4, and the
+    // connection keeps serving.
+    proto::write_frame(&mut stream, &[4u8, 8, 0, 0, 0, 0, 0]).unwrap();
+    let payload = proto::read_frame(&mut stream).unwrap().unwrap();
+    assert_eq!(payload[0], 4);
+    let Response::Error(msg) = proto::decode_response(&payload).unwrap() else {
+        panic!("expected an error");
+    };
+    assert!(msg.contains("needs proto v5"), "{msg}");
+    let (version, resp) = call_v4(&mut stream, &Request::Stats);
+    assert_eq!(version, 4);
+    assert!(matches!(resp, Response::Stats(_)));
+    drop(stream);
+
+    super::Client::connect(&addr).unwrap().shutdown().unwrap();
+    server.join().unwrap();
 }
 
 // ------------------------------------------------------------------- state
@@ -723,6 +1132,19 @@ fn socket_smoke_push_query_snapshot_shutdown() {
     crate::obs::prom::validate(&page).unwrap_or_else(|e| panic!("{e:#}\n{page}"));
     assert!(page.contains("qckm_requests_total{verb=\"push\"} 2"), "{page}");
     assert!(page.contains("qckm_push_rows_total 800"), "{page}");
+
+    // A traced query over a fresh socket, then the trace verb on the
+    // same connection: the server hands back the span tree for exactly
+    // the id the client generated.
+    let mut traced = super::Client::connect(&addr)
+        .unwrap()
+        .declare_method("qckm")
+        .with_tracing(Box::new(SeqIdGen::new(1)));
+    traced.query(&spec(2, 0)).unwrap();
+    let id = traced.last_trace_id().expect("a traced query records its id");
+    let json = traced.trace(Some(id), 1).unwrap();
+    assert!(json.contains(&crate::obs::trace::hex(&id)), "{json}");
+    assert!(json.contains("\"verb\": \"query\""), "{json}");
 
     client.shutdown().unwrap();
     let served = server.join().unwrap();

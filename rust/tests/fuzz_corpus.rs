@@ -25,6 +25,7 @@ use qckm::frequency::FrequencyLaw;
 use qckm::linalg::Mat;
 use qckm::method::MethodSpec;
 use qckm::decoder::DecoderSpec;
+use qckm::obs::trace::TraceContext;
 use qckm::rng::Rng;
 use qckm::server::proto::{
     self, CentroidReport, QuerySpec, Request, Response, StatsReport, MAX_FRAME_BYTES,
@@ -105,6 +106,13 @@ fn fuzz_seed(target: &str) -> u64 {
 
 // ----------------------------------------------------------------- corpora
 
+fn corpus_trace() -> TraceContext {
+    TraceContext {
+        trace_id: *b"0123456789abcdef",
+        parent_span: *b"fedcba98",
+    }
+}
+
 fn request_corpus() -> Vec<Vec<u8>> {
     let requests = [
         Request::Push {
@@ -112,12 +120,14 @@ fn request_corpus() -> Vec<Vec<u8>> {
             method: "qckm:bits=2".into(),
             dim: 3,
             data: vec![1.5, -2.25, 0.0, 4.0, 5.0, -6.0],
+            trace: None,
         },
         Request::Push {
             shard: "s".into(),
             method: String::new(),
             dim: 1,
             data: vec![0.25],
+            trace: Some(corpus_trace()),
         },
         Request::Query {
             spec: QuerySpec {
@@ -130,14 +140,21 @@ fn request_corpus() -> Vec<Vec<u8>> {
                 decoder: "clompr:restarts=5".into(),
             },
             method: "modulo".into(),
+            trace: Some(corpus_trace()),
         },
         Request::Snapshot {
             window: 7,
             method: "qckm".into(),
+            trace: None,
         },
         Request::Roll,
         Request::Stats,
         Request::Metrics,
+        Request::Trace { id: None, limit: 0 },
+        Request::Trace {
+            id: Some(corpus_trace().trace_id),
+            limit: 16,
+        },
         Request::Shutdown,
     ];
     requests.iter().map(proto::encode_request).collect()
@@ -180,6 +197,11 @@ fn response_corpus() -> Vec<Vec<u8>> {
             "# HELP qckm_requests_total Requests received, by verb.\n\
              # TYPE qckm_requests_total counter\n\
              qckm_requests_total{verb=\"push\"} 3\n"
+                .into(),
+        ),
+        Response::Traces(
+            "{\n  \"traces\": [\n    {\n      \"trace_id\": \
+             \"30313233343536373839616263646566\",\n      \"spans\": []\n    }\n  ]\n}"
                 .into(),
         ),
         Response::ShutdownAck,
@@ -301,6 +323,79 @@ fn fuzz_read_frame_never_panics_or_overallocates() {
         }
     }
     assert_allocations_capped("read_frame");
+}
+
+/// Trace-heavy frames get their own target so the v5 trailing trace
+/// block, the trace-verb body, and the traces response see concentrated
+/// mutation pressure (the mixed corpus above dilutes them). v4 siblings
+/// of the carrier requests ride along: a mutant that lands on a valid v4
+/// frame decodes trace-free and re-encodes canonically at the current
+/// version, which is itself a fixed point from the first re-decode on.
+#[test]
+fn fuzz_trace_frames_never_panic() {
+    let mut corpus: Vec<Vec<u8>> = Vec::new();
+    let traced = [
+        Request::Push {
+            shard: "s".into(),
+            method: String::new(),
+            dim: 2,
+            data: vec![0.5, -0.5],
+            trace: Some(corpus_trace()),
+        },
+        Request::Query {
+            spec: QuerySpec {
+                k: 2,
+                window: 0,
+                replicates: 1,
+                seed: None,
+                lo: -1.0,
+                hi: 1.0,
+                decoder: String::new(),
+            },
+            method: "qckm".into(),
+            trace: Some(corpus_trace()),
+        },
+        Request::Snapshot {
+            window: 0,
+            method: String::new(),
+            trace: Some(corpus_trace()),
+        },
+        Request::Trace { id: None, limit: 1 },
+        Request::Trace {
+            id: Some(corpus_trace().trace_id),
+            limit: proto::MAX_TRACE_LIMIT,
+        },
+    ];
+    corpus.extend(traced.iter().map(proto::encode_request));
+    for req in traced.iter() {
+        let mut v4 = req.clone();
+        match &mut v4 {
+            Request::Push { trace, .. }
+            | Request::Query { trace, .. }
+            | Request::Snapshot { trace, .. } => *trace = None,
+            _ => continue, // the trace verb has no v4 form
+        }
+        corpus.push(proto::encode_request_v(&v4, 4).unwrap());
+    }
+    corpus.push(proto::encode_response(&Response::Traces("{\n  \"traces\": []\n}".into())));
+
+    let mut m = Mutator::new(fuzz_seed("trace_frames"));
+    for _ in 0..fuzz_cases() {
+        let input = m.mutate(&corpus);
+        if let Ok(req) = proto::decode_request(&input) {
+            let canon = proto::encode_request(&req);
+            let again = proto::decode_request(&canon)
+                .expect("re-decoding a canonical encoding must succeed");
+            assert_eq!(proto::encode_request(&again), canon);
+        }
+        if let Ok(resp) = proto::decode_response(&input) {
+            let canon = proto::encode_response(&resp);
+            let again = proto::decode_response(&canon)
+                .expect("re-decoding a canonical encoding must succeed");
+            assert_eq!(proto::encode_response(&again), canon);
+        }
+    }
+    assert_allocations_capped("trace_frames");
 }
 
 #[test]

@@ -6,6 +6,7 @@ use qckm::coordinator::{run_pipeline, PipelineConfig, SampleSource, WireFormat};
 use qckm::frequency::{DrawnFrequencies, FrequencyLaw};
 use qckm::linalg::Mat;
 use qckm::metrics::adjusted_rand_index;
+use qckm::obs::trace::TraceContext;
 use qckm::optim::nnls;
 use qckm::parallel::Parallelism;
 use qckm::rng::Rng;
@@ -359,8 +360,21 @@ fn random_query_spec(g: &mut Gen) -> QuerySpec {
     }
 }
 
+fn random_trace_context(g: &mut Gen) -> TraceContext {
+    let mut trace_id = [0u8; 16];
+    let mut parent_span = [0u8; 8];
+    trace_id[..8].copy_from_slice(&g.rng().next_u64().to_be_bytes());
+    trace_id[8..].copy_from_slice(&g.rng().next_u64().to_be_bytes());
+    parent_span.copy_from_slice(&g.rng().next_u64().to_be_bytes());
+    TraceContext { trace_id, parent_span }
+}
+
+fn random_trace(g: &mut Gen) -> Option<TraceContext> {
+    g.bool().then(|| random_trace_context(g))
+}
+
 fn random_request(g: &mut Gen) -> Request {
-    match g.usize_in(0, 6) {
+    match g.usize_in(0, 7) {
         0 => {
             let dim = g.usize_in(1, 6);
             let rows = g.usize_in(1, 20);
@@ -369,25 +383,32 @@ fn random_request(g: &mut Gen) -> Request {
                 method: if g.bool() { String::new() } else { "qckm:bits=2".into() },
                 dim: dim as u32,
                 data: g.vec_gaussian(rows * dim),
+                trace: random_trace(g),
             }
         }
         1 => Request::Query {
             spec: random_query_spec(g),
             method: ascii_label(g, 0, 8),
+            trace: random_trace(g),
         },
         2 => Request::Snapshot {
             window: g.usize_in(0, 9) as u32,
             method: ascii_label(g, 0, 8),
+            trace: random_trace(g),
         },
         3 => Request::Roll,
         4 => Request::Stats,
         5 => Request::Metrics,
+        6 => Request::Trace {
+            id: g.bool().then(|| random_trace_context(g).trace_id),
+            limit: g.usize_in(0, proto::MAX_TRACE_LIMIT as usize) as u32,
+        },
         _ => Request::Shutdown,
     }
 }
 
 fn random_response(g: &mut Gen) -> Response {
-    match g.usize_in(0, 7) {
+    match g.usize_in(0, 8) {
         0 => Response::Error(ascii_label(g, 1, 200)),
         1 => Response::PushAck {
             shard_rows: g.rng().next_u64(),
@@ -435,8 +456,34 @@ fn random_response(g: &mut Gen) -> Response {
             })
         }
         6 => Response::Metrics(ascii_label(g, 0, 400)),
+        7 => Response::Traces(ascii_label(g, 0, 400)),
         _ => Response::ShutdownAck,
     }
+}
+
+/// A request is representable at proto v4 exactly when it carries no
+/// trace content: trace-free requests round-trip through a v4 frame
+/// unchanged, while traced ones (and the trace verb) refuse to encode
+/// rather than silently dropping their context.
+#[test]
+fn prop_v4_frames_round_trip_iff_trace_free() {
+    property("v4 encoding iff trace-free", 300, |g| {
+        let req = random_request(g);
+        let traced = matches!(req, Request::Trace { .. }) || req.trace_context().is_some();
+        match proto::encode_request_v(&req, 4) {
+            Ok(payload) => {
+                assert!(!traced, "a traced request must not encode at v4: {req:?}");
+                assert_eq!(payload[0], 4, "the frame must carry the requested version");
+                let (version, back) = proto::decode_request_v(&payload).unwrap();
+                assert_eq!(version, 4);
+                assert_eq!(back, req);
+            }
+            Err(e) => {
+                assert!(traced, "a trace-free request must encode at v4: {req:?}");
+                assert!(format!("{e:#}").contains("needs proto v5"), "{e:#}");
+            }
+        }
+    });
 }
 
 /// Every request variant survives encode → frame → read-frame → decode
