@@ -1,0 +1,210 @@
+#!/usr/bin/env bash
+# Aggregation-tier end-to-end: two edge aggregators fan into one root
+# server hosting two tenants, with concurrent pushers, deliberate delta
+# replays (--replay on edge 1), and a kill -9 + restart of edge 2
+# mid-stream. The lock: per tenant, the tree's decoded centroids are
+# bit-for-bit identical to a flat single-server pipeline fed the same
+# rows directly (INVARIANTS.md I-20), and the replayed deltas are
+# recognized and dropped upstream (I-21). Called from CI with a hard
+# `timeout`; every wait below is also bounded.
+set -euo pipefail
+
+QCKM=target/release/qckm
+WORK=$(mktemp -d)
+PIDS=""
+trap 'kill $PIDS 2>/dev/null || true; rm -rf "$WORK"' EXIT
+
+# --- tenant specs, shared verbatim by root, flat reference, and edges:
+# sharing the file is what guarantees every node draws the same operator.
+cat >"$WORK/acme.toml" <<'EOF'
+dim = 3
+token = "s3cret"
+seed = 7
+[sketch]
+method = "qckm"
+num_frequencies = 64
+sigma = 1.0
+EOF
+cat >"$WORK/beta.toml" <<'EOF'
+dim = 2
+seed = 11
+[sketch]
+method = "qckm:bits=3"
+num_frequencies = 48
+sigma = 0.8
+EOF
+
+# --- datasets: 2-cluster gaussians, split into the parts each route takes.
+python3 - "$WORK" <<'EOF'
+import random, sys
+work = sys.argv[1]
+def gen(path, rows, dim, seed):
+    random.seed(seed)
+    with open(path, "w") as f:
+        for i in range(rows):
+            c = 0.5 if i % 2 else -0.5
+            f.write(",".join(f"{random.gauss(c, 0.1):.6f}" for _ in range(dim)) + "\n")
+gen(f"{work}/acme_1.csv", 300, 3, 71)  # edge 1, pusher A (concurrent)
+gen(f"{work}/acme_2.csv", 300, 3, 72)  # edge 1, pusher B (concurrent)
+gen(f"{work}/acme_3.csv", 200, 3, 73)  # edge 2, before the kill
+gen(f"{work}/acme_4.csv", 200, 3, 74)  # edge 2, after the restart
+gen(f"{work}/beta_1.csv", 150, 2, 75)  # edge 1
+gen(f"{work}/beta_2.csv", 100, 2, 76)  # straight to the root
+EOF
+
+wait_listen() { # outfile errfile pid -> prints HOST:PORT
+    for _ in $(seq 1 100); do
+        grep -q '^LISTENING ' "$1" 2>/dev/null && break
+        kill -0 "$3" 2>/dev/null || { cat "$2" >&2; return 1; }
+        sleep 0.1
+    done
+    sed -n 's/^LISTENING //p' "$1" | head -n1
+}
+
+rows_at() { # addr tenant token -> prints the tenant's all-time row count
+    "$QCKM" ctl --addr "$1" --tenant "$2" ${3:+--token "$3"} stats 2>/dev/null |
+        sed -n 's/.*| \([0-9]*\) rows all-time.*/\1/p'
+}
+
+wait_rows() { # addr tenant token want
+    for _ in $(seq 1 150); do
+        [ "$(rows_at "$1" "$2" "$3")" = "$4" ] && return 0
+        sleep 0.2
+    done
+    echo "tenant '$2' on $1 never reached $4 rows (have '$(rows_at "$1" "$2" "$3")')"
+    return 1
+}
+
+# --- the root and the flat reference server (identical tenant specs).
+"$QCKM" serve --tenant "acme=$WORK/acme.toml" --tenant "beta=$WORK/beta.toml" \
+    --port 0 >"$WORK/root.out" 2>"$WORK/root.err" &
+ROOT_PID=$!; PIDS="$PIDS $ROOT_PID"
+"$QCKM" serve --tenant "acme=$WORK/acme.toml" --tenant "beta=$WORK/beta.toml" \
+    --port 0 >"$WORK/flat.out" 2>"$WORK/flat.err" &
+FLAT_PID=$!; PIDS="$PIDS $FLAT_PID"
+ROOT=$(wait_listen "$WORK/root.out" "$WORK/root.err" $ROOT_PID)
+FLAT=$(wait_listen "$WORK/flat.out" "$WORK/flat.err" $FLAT_PID)
+
+# --- edge 1: both tenants, row-threshold flushes, and --replay fault
+# injection (every delta is sent twice; the process aborts if the root
+# ever merges the duplicate, so it doubles as an in-band assertion).
+"$QCKM" aggregate --upstream "$ROOT" --agg-id edge-1 \
+    --tenant "acme=$WORK/acme.toml" --tenant "beta=$WORK/beta.toml" \
+    --flush-rows 256 --flush-ms 200 --replay \
+    --port 0 >"$WORK/edge1.out" 2>"$WORK/edge1.err" &
+EDGE1_PID=$!; PIDS="$PIDS $EDGE1_PID"
+# --- edge 2: acme only, timer-driven flushes. This is the one we kill.
+"$QCKM" aggregate --upstream "$ROOT" --agg-id edge-2 \
+    --tenant "acme=$WORK/acme.toml" \
+    --flush-ms 200 --port 0 >"$WORK/edge2.out" 2>"$WORK/edge2.err" &
+EDGE2_PID=$!; PIDS="$PIDS $EDGE2_PID"
+EDGE1=$(wait_listen "$WORK/edge1.out" "$WORK/edge1.err" $EDGE1_PID)
+EDGE2=$(wait_listen "$WORK/edge2.out" "$WORK/edge2.err" $EDGE2_PID)
+
+# --- concurrent pushers into edge 1, plus edge 2's pre-kill batch.
+"$QCKM" push --addr "$EDGE1" --tenant acme --token s3cret --retry 8 \
+    --data "$WORK/acme_1.csv" --shard pusher-a &
+PUSH_A=$!
+"$QCKM" push --addr "$EDGE1" --tenant acme --token s3cret --retry 8 \
+    --data "$WORK/acme_2.csv" --shard pusher-b &
+PUSH_B=$!
+"$QCKM" push --addr "$EDGE1" --tenant beta --retry 8 --data "$WORK/beta_1.csv"
+"$QCKM" push --addr "$EDGE2" --tenant acme --token s3cret --retry 8 \
+    --data "$WORK/acme_3.csv"
+wait $PUSH_A $PUSH_B
+
+# Every pushed acme row (600 via edge 1, 200 via edge 2) must reach the
+# root before the kill — rows still pooled at edge 2 would die with it.
+wait_rows "$ROOT" acme s3cret 800
+
+# --- kill -9 edge 2 mid-stream and restart it under the same agg-id.
+# The restart gets a fresh instance nonce, so the root accepts its new
+# (instance, seq=1) stream instead of dropping it below the dead
+# process's high-water sequence.
+kill -9 $EDGE2_PID
+wait $EDGE2_PID 2>/dev/null || true
+"$QCKM" aggregate --upstream "$ROOT" --agg-id edge-2 \
+    --tenant "acme=$WORK/acme.toml" \
+    --flush-ms 200 --port 0 >"$WORK/edge2b.out" 2>"$WORK/edge2b.err" &
+EDGE2B_PID=$!; PIDS="$PIDS $EDGE2B_PID"
+EDGE2B=$(wait_listen "$WORK/edge2b.out" "$WORK/edge2b.err" $EDGE2B_PID)
+"$QCKM" push --addr "$EDGE2B" --tenant acme --token s3cret --retry 8 \
+    --data "$WORK/acme_4.csv"
+# One batch skips the tree entirely — direct pushes and deltas must pool
+# into the same tenant state.
+"$QCKM" push --addr "$ROOT" --tenant beta --data "$WORK/beta_2.csv"
+
+# --- graceful shutdown drains both edges (pending + in-flight deltas).
+"$QCKM" ctl --addr "$EDGE1" shutdown
+"$QCKM" ctl --addr "$EDGE2B" shutdown
+wait $EDGE1_PID $EDGE2B_PID
+wait_rows "$ROOT" acme s3cret 1000
+wait_rows "$ROOT" beta "" 250
+
+# --- auth: a wrong token must be refused (and counted), not pooled.
+if "$QCKM" push --addr "$ROOT" --tenant acme --token wrong \
+    --data "$WORK/acme_1.csv" 2>/dev/null; then
+    echo "a push with a bad token was accepted"; exit 1
+fi
+wait_rows "$ROOT" acme s3cret 1000
+
+# --- per-tenant occupancy in ctl stats (the v6 stats block).
+"$QCKM" ctl --addr "$ROOT" --tenant acme --token s3cret stats >"$WORK/stats.txt"
+grep -q "tenant 'acme': 1000 rows" "$WORK/stats.txt" || {
+    echo "stats is missing acme occupancy:"; cat "$WORK/stats.txt"; exit 1
+}
+grep -q "tenant 'beta': 250 rows" "$WORK/stats.txt" || {
+    echo "stats is missing beta occupancy:"; cat "$WORK/stats.txt"; exit 1
+}
+
+# --- the root's metrics must show merged deltas, recognized replays
+# (edge 1 sent every delta twice), and exactly one auth failure.
+"$QCKM" ctl --addr "$ROOT" metrics >"$WORK/metrics.txt"
+grep 'qckm_deltas_total' "$WORK/metrics.txt" | grep 'outcome="merged"' |
+    grep -qv ' 0$' || {
+    echo "no merged deltas counted:"; grep qckm_deltas "$WORK/metrics.txt"; exit 1
+}
+grep 'qckm_deltas_total' "$WORK/metrics.txt" | grep 'outcome="replayed"' |
+    grep -qv ' 0$' || {
+    echo "no replayed deltas counted:"; grep qckm_deltas "$WORK/metrics.txt" || true; exit 1
+}
+grep -q 'qckm_auth_failures_total{tenant="acme"} 1' "$WORK/metrics.txt" || {
+    echo "auth failure counter wrong:"
+    grep qckm_auth "$WORK/metrics.txt" || true; exit 1
+}
+
+# --- the flat reference: the same rows, pushed straight to one server.
+for part in 1 2 3 4; do
+    "$QCKM" push --addr "$FLAT" --tenant acme --token s3cret \
+        --data "$WORK/acme_$part.csv"
+done
+"$QCKM" push --addr "$FLAT" --tenant beta --data "$WORK/beta_1.csv"
+"$QCKM" push --addr "$FLAT" --tenant beta --data "$WORK/beta_2.csv"
+
+# --- the lock: identical queries, bit-for-bit identical centroids.
+for side in tree flat; do
+    addr=$ROOT; [ "$side" = flat ] && addr=$FLAT
+    "$QCKM" query --addr "$addr" --tenant acme --token s3cret \
+        --k 2 --lo -1 --hi 1 --out "$WORK/${side}_acme.csv"
+    "$QCKM" query --addr "$addr" --tenant beta \
+        --k 2 --lo -1 --hi 1 --out "$WORK/${side}_beta.csv"
+done
+for tenant in acme beta; do
+    cmp "$WORK/tree_$tenant.csv" "$WORK/flat_$tenant.csv" || {
+        echo "tenant '$tenant': aggregator tree != flat server"; exit 1
+    }
+    echo "tenant '$tenant': tree centroids == flat centroids (bit-for-bit)"
+done
+
+# CI artifacts: the exactness evidence plus the root's telemetry.
+cp "$WORK/metrics.txt" AGG_e2e_metrics.txt
+cp "$WORK/stats.txt" AGG_e2e_stats.txt
+for f in tree_acme tree_beta flat_acme flat_beta; do
+    cp "$WORK/$f.csv" "AGG_e2e_$f.csv"
+done
+
+"$QCKM" ctl --addr "$ROOT" shutdown
+"$QCKM" ctl --addr "$FLAT" shutdown
+wait $ROOT_PID $FLAT_PID
+
+echo "aggregator e2e OK"

@@ -15,6 +15,9 @@ pub struct OptSpec {
     pub help: &'static str,
     /// `true` for boolean flags (no value token).
     pub is_flag: bool,
+    /// `true` for repeatable value options: every occurrence is kept, in
+    /// order, retrievable via [`ParsedArgs::get_all`].
+    pub is_multi: bool,
     /// Shown in usage for value options.
     pub value_hint: &'static str,
     pub default: Option<&'static str>,
@@ -56,8 +59,28 @@ impl CliSpec {
             name,
             help,
             is_flag: false,
+            is_multi: false,
             value_hint,
             default,
+        });
+        self
+    }
+
+    /// Declare a repeatable value option: `--name a --name b` keeps both,
+    /// in order (a plain [`CliSpec::opt`] would keep only the last).
+    pub fn multi(
+        mut self,
+        name: &'static str,
+        value_hint: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: false,
+            is_multi: true,
+            value_hint,
+            default: None,
         });
         self
     }
@@ -68,6 +91,7 @@ impl CliSpec {
             name,
             help,
             is_flag: true,
+            is_multi: false,
             value_hint: "",
             default: None,
         });
@@ -85,6 +109,8 @@ impl CliSpec {
         for o in &self.opts {
             let left = if o.is_flag {
                 format!("  --{}", o.name)
+            } else if o.is_multi {
+                format!("  --{} <{}>...", o.name, o.value_hint)
             } else {
                 format!("  --{} <{}>", o.name, o.value_hint)
             };
@@ -101,6 +127,7 @@ impl CliSpec {
     /// Parse a token stream (not including argv[0]).
     pub fn parse<I: IntoIterator<Item = String>>(&self, args: I) -> Result<ParsedArgs> {
         let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut multi: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut flags: Vec<String> = Vec::new();
         let mut positionals: Vec<String> = Vec::new();
         let mut it = args.into_iter().peekable();
@@ -129,7 +156,11 @@ impl CliSpec {
                             None => bail!("option '--{name}' requires a value"),
                         },
                     };
-                    values.insert(name, value);
+                    if spec.is_multi {
+                        multi.entry(name).or_default().push(value);
+                    } else {
+                        values.insert(name, value);
+                    }
                 }
             } else {
                 positionals.push(tok);
@@ -143,6 +174,7 @@ impl CliSpec {
         }
         Ok(ParsedArgs {
             values,
+            multi,
             flags,
             positionals,
         })
@@ -153,6 +185,7 @@ impl CliSpec {
 #[derive(Clone, Debug, Default)]
 pub struct ParsedArgs {
     values: BTreeMap<String, String>,
+    multi: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     positionals: Vec<String>,
 }
@@ -164,6 +197,12 @@ impl ParsedArgs {
 
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable option, in argv order (empty if
+    /// absent).
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.multi.get(name).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
@@ -206,6 +245,7 @@ mod tests {
             .positionals("<cmd>")
             .opt("m", "NUM", Some("1000"), "frequencies")
             .opt("sigma", "FLOAT", None, "bandwidth")
+            .multi("tenant", "NAME=SPEC", "declare a tenant (repeatable)")
             .flag("full", "run the full grid")
     }
 
@@ -220,6 +260,22 @@ mod tests {
         assert!(args.flag("full"));
         assert!(!args.flag("other"));
         assert_eq!(args.positionals().len(), 1);
+    }
+
+    #[test]
+    fn multi_options_keep_every_occurrence_in_order() {
+        let args = spec()
+            .parse(
+                ["--tenant", "a=a.toml", "--m", "5", "--tenant=b=b.toml"].map(String::from),
+            )
+            .unwrap();
+        assert_eq!(args.get_all("tenant"), ["a=a.toml", "b=b.toml"]);
+        assert_eq!(args.get_all("absent"), Vec::<String>::new().as_slice());
+        // A plain value option still keeps only the last occurrence.
+        let args = spec()
+            .parse(["--m", "5", "--m", "7"].map(String::from))
+            .unwrap();
+        assert_eq!(args.get_usize("m").unwrap(), Some(7));
     }
 
     #[test]

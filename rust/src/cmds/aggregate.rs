@@ -1,0 +1,198 @@
+//! `qckm aggregate` — a fan-in edge node (see `qckm::fanin`).
+//!
+//! Accepts the same push protocol as `qckm serve`, pools batches into
+//! local per-tenant accumulators, and flushes merged deltas upstream on a
+//! row threshold or timer. Because the pooled sketch is an associative
+//! integer statistic, an aggregator tree of any depth answers bit-for-bit
+//! identically to the flat single-server pipeline (INVARIANTS.md I-20);
+//! each flush carries an (aggregator-id, instance, seq) idempotency key
+//! so at-least-once delivery never double-counts (I-21).
+//!
+//! Two shapes, mirroring `qckm serve`:
+//!
+//! * **Single-tenant**: operator flags (`--dim --m --sigma --seed
+//!   [--method]`) describe the one pooled sketch; pushes with no scope
+//!   land here, and flushes go upstream unscoped.
+//! * **Multi-tenant**: `--tenant name=specfile` declarations (same spec
+//!   files as the root server — sharing them is what guarantees the
+//!   edge's operator draw matches the root's, so the deltas merge).
+
+use super::common::{job_from, load_tenant_spec, METHOD_HELP};
+use anyhow::{bail, Context, Result};
+use qckm::cli::CliSpec;
+use qckm::fanin::{serve_aggregator, AggregatorConfig, AggregatorNode};
+use qckm::frequency::SigmaHeuristic;
+use qckm::parallel::Parallelism;
+use qckm::server::{tenants, RateLimit, RetryPolicy};
+use qckm::sketch::SketchOperator;
+use qckm::stream::{self, SketchMeta};
+use std::time::Duration;
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let spec = CliSpec::new(
+        "qckm aggregate",
+        "run a fan-in edge node: pool pushes locally, flush merged deltas upstream",
+    )
+    .opt("host", "ADDR", Some("127.0.0.1"), "bind address")
+    .opt("port", "NUM", Some("0"), "bind port (0 = ephemeral; the bound port is printed)")
+    .opt("upstream", "HOST:PORT", None, "the parent to flush into (server or aggregator)")
+    .opt(
+        "agg-id",
+        "ID",
+        None,
+        "this node's identity upstream (unique among the parent's children)",
+    )
+    .opt("dim", "NUM", None, "data dimension (single-tenant mode)")
+    .opt("m", "NUM", None, "number of frequencies")
+    .opt("method", "SPEC", None, METHOD_HELP)
+    .opt("sigma", "FLOAT", None, "kernel bandwidth (required in single-tenant mode)")
+    .opt("seed", "NUM", None, "frequency-draw seed")
+    .opt("threads", "NUM", None, "encode threads (0 = all cores)")
+    .multi(
+        "tenant",
+        "NAME=SPECFILE",
+        "pool a named tenant from a TOML spec file (repeatable); \
+         use the root server's spec files so the operators match",
+    )
+    .opt(
+        "flush-rows",
+        "NUM",
+        Some("4096"),
+        "flush a tenant upstream once its pending pool reaches this many rows",
+    )
+    .opt(
+        "flush-ms",
+        "NUM",
+        Some("1000"),
+        "flush every tenant at least this often (milliseconds)",
+    )
+    .opt("retry", "NUM", Some("8"), "upstream flush retries (reconnect + resend)")
+    .opt(
+        "max-shards",
+        "NUM",
+        Some("1024"),
+        "distinct shard labels accepted per tenant before new ones are refused",
+    )
+    .opt(
+        "rate-limit",
+        "RATE[:BURST]",
+        None,
+        "per-connection ingest rate limit in frames/s (burst defaults to RATE)",
+    )
+    .flag(
+        "replay",
+        "fault injection: send every delta twice to prove the upstream dedup gate",
+    )
+    .opt("config", "FILE", None, "TOML job config (a [tenants] table declares tenants)");
+    let parsed = spec.parse(args)?;
+    let cfg = job_from(&parsed)?;
+
+    let upstream = parsed.get("upstream").context("--upstream is required")?;
+    let agg_id = parsed.get("agg-id").context("--agg-id is required")?;
+    let rate = parsed.get("rate-limit").map(RateLimit::parse).transpose()?;
+
+    // Tenant declarations: --tenant flags first, then the config file's
+    // [tenants] table (flags win) — the same precedence as `qckm serve`.
+    let mut decls: Vec<(String, String)> = Vec::new();
+    for d in parsed.get_all("tenant") {
+        let Some((name, path)) = d.split_once('=') else {
+            bail!("--tenant wants NAME=SPECFILE, got '{d}'");
+        };
+        decls.push((name.to_string(), path.to_string()));
+    }
+    if let Some(path) = parsed.get("config") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        let doc = qckm::config::parse_toml(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        for key in doc.keys("tenants") {
+            if decls.iter().any(|(n, _)| n == key) {
+                continue;
+            }
+            let Some(file) = doc.get("tenants", key).and_then(|v| v.as_str()) else {
+                bail!("{path}: [tenants] {key} must be a spec-file path string");
+            };
+            decls.push((key.to_string(), file.to_string()));
+        }
+    }
+
+    let mut tenants_vec: Vec<(String, SketchMeta, SketchOperator, Option<String>)> = Vec::new();
+    if decls.is_empty() {
+        let (meta, op) = single_operator(&parsed, &cfg)?;
+        eprintln!("operator: {}", meta.describe());
+        tenants_vec.push((String::new(), meta, op, None));
+    } else {
+        for (name, path) in &decls {
+            tenants::validate_tenant_name(name)?;
+            if tenants_vec.iter().any(|(n, _, _, _)| n == name) {
+                bail!("tenant '{name}' declared twice");
+            }
+            let (meta, op, token, _job) = load_tenant_spec(name, path)?;
+            tenants_vec.push((name.clone(), meta, op, token));
+        }
+        eprintln!(
+            "pooling {} tenant(s): {}",
+            tenants_vec.len(),
+            tenants_vec.iter().map(|(n, ..)| n.as_str()).collect::<Vec<_>>().join(", ")
+        );
+    }
+
+    let node = AggregatorNode::new(
+        AggregatorConfig {
+            agg_id: agg_id.to_string(),
+            upstream: upstream.to_string(),
+            flush_rows: parsed.get_usize("flush-rows")?.unwrap().max(1) as u64,
+            flush_interval: Duration::from_millis(
+                parsed.get_usize("flush-ms")?.unwrap().max(1) as u64
+            ),
+            retry: RetryPolicy {
+                attempts: parsed.get_usize("retry")?.unwrap() as u32,
+                ..RetryPolicy::default()
+            },
+            replay: parsed.flag("replay"),
+            rate,
+            registry: qckm::obs::global().clone(),
+            threads: Parallelism::fixed(cfg.threads),
+            max_shards: parsed.get_usize("max-shards")?.unwrap().max(1),
+        },
+        tenants_vec,
+    )?;
+
+    let host = parsed.get("host").unwrap();
+    let port = parsed.get_usize("port")?.unwrap();
+    if port > u16::MAX as usize {
+        bail!("--port {port} out of range");
+    }
+    let listener = std::net::TcpListener::bind((host, port as u16))
+        .with_context(|| format!("bind {host}:{port}"))?;
+    // Machine-parseable: tests and scripts read the ephemeral port here.
+    println!("LISTENING {}", listener.local_addr()?);
+    std::io::Write::flush(&mut std::io::stdout())?;
+    eprintln!("aggregate: '{agg_id}' flushing to {upstream}");
+
+    let served = serve_aggregator(listener, node)?;
+    eprintln!("aggregator stopped after {served} connection(s)");
+    Ok(())
+}
+
+/// The single-tenant operator from the CLI flags — the same draw `qckm
+/// serve` (and the offline `qckm sketch`) performs for these parameters.
+fn single_operator(
+    parsed: &qckm::cli::ParsedArgs,
+    cfg: &qckm::config::JobConfig,
+) -> Result<(SketchMeta, SketchOperator)> {
+    let dim = parsed
+        .get_usize("dim")?
+        .context("--dim is required without --tenant")?;
+    let SigmaHeuristic::Fixed(sigma) = cfg.sketch.sigma else {
+        bail!("--sigma is required without --tenant (the upstream must agree on it)");
+    };
+    let op = stream::draw_operator(
+        &cfg.sketch.method,
+        cfg.sketch.law,
+        cfg.sketch.num_frequencies,
+        dim,
+        sigma,
+        cfg.seed,
+    );
+    let meta = stream::SketchMeta::for_operator(&op, &cfg.sketch.method, cfg.seed);
+    Ok((meta, op))
+}

@@ -168,15 +168,69 @@ pub fn search_box(
     }
 }
 
+/// Shared `--tenant` / `--token` help text for verbs that talk to a
+/// serving node.
+pub const TENANT_HELP: &str = "address this named tenant on a multi-tenant node";
+pub const TOKEN_HELP: &str = "auth token for the addressed tenant";
+
+/// The `--tenant` / `--token` scope flags (both default to empty = the
+/// server's unnamed default tenant, no auth).
+pub fn scope_from(parsed: &ParsedArgs) -> (String, String) {
+    (
+        parsed.get("tenant").unwrap_or("").to_string(),
+        parsed.get("token").unwrap_or("").to_string(),
+    )
+}
+
+/// Parse a tenant spec file — a TOML job config plus top-level `dim`
+/// (required) and `token` (optional) — and draw its operator. `qckm
+/// serve --tenant` and `qckm aggregate --tenant` share this, which is
+/// what makes an edge's pools mergeable with the root's by construction:
+/// both sides draw from the same spec.
+pub fn load_tenant_spec(
+    name: &str,
+    path: &str,
+) -> Result<(qckm::stream::SketchMeta, SketchOperator, Option<String>, JobConfig)> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("tenant '{name}': read {path}"))?;
+    let doc = qckm::config::parse_toml(&text)
+        .map_err(|e| anyhow::anyhow!("tenant '{name}': {path}: {e}"))?;
+    let job = JobConfig::from_toml(&doc).with_context(|| format!("tenant '{name}': {path}"))?;
+    let dim = doc.get_int("", "dim", 0);
+    if dim < 1 {
+        bail!("tenant '{name}': {path} needs a top-level dim >= 1");
+    }
+    let SigmaHeuristic::Fixed(sigma) = job.sketch.sigma else {
+        bail!("tenant '{name}': {path} needs an explicit sketch.sigma (pushers must agree on it)");
+    };
+    let token = doc.get_str("", "token", "").to_string();
+    let op = qckm::stream::draw_operator(
+        &job.sketch.method,
+        job.sketch.law,
+        job.sketch.num_frequencies,
+        dim as usize,
+        sigma,
+        job.seed,
+    );
+    let meta = qckm::stream::SketchMeta::for_operator(&op, &job.sketch.method, job.seed);
+    eprintln!("tenant '{name}': {}", meta.describe());
+    Ok((meta, op, (!token.is_empty()).then_some(token), job))
+}
+
 /// Connect a service client, declaring `--method` (canonicalized through
 /// the registry, so typos and junk fail locally with the valid-family
-/// list) if the flag was given.
+/// list) and applying the `--tenant` / `--token` scope if the flags were
+/// given.
 pub fn connect_with_method(addr: &str, parsed: &ParsedArgs) -> Result<qckm::server::Client> {
-    let client = qckm::server::Client::connect(addr)?;
-    Ok(match parsed.get("method") {
-        Some(m) => client.declare_method(MethodSpec::parse(m)?.canonical()),
-        None => client,
-    })
+    let mut client = qckm::server::Client::connect(addr)?;
+    if let Some(m) = parsed.get("method") {
+        client = client.declare_method(MethodSpec::parse(m)?.canonical());
+    }
+    let (tenant, token) = scope_from(parsed);
+    if !tenant.is_empty() || !token.is_empty() {
+        client = client.with_scope(&tenant, &token);
+    }
+    Ok(client)
 }
 
 /// Print the per-centroid rows every decode-side verb shares

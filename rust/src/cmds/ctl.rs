@@ -4,6 +4,7 @@
 //! target for a textfile collector or a curl-equivalent health probe;
 //! `trace` prints recent request span trees (or one, by `--id`) as JSON.
 
+use super::common::{TENANT_HELP, TOKEN_HELP};
 use anyhow::{bail, Context, Result};
 use qckm::cli::CliSpec;
 use qckm::obs::trace::parse_trace_id;
@@ -12,6 +13,8 @@ pub fn run(args: Vec<String>) -> Result<()> {
     let spec = CliSpec::new("qckm ctl", "administer a serving node")
         .positionals("<stats|roll|metrics|trace|shutdown>")
         .opt("addr", "HOST:PORT", None, "server address")
+        .opt("tenant", "NAME", None, TENANT_HELP)
+        .opt("token", "TOKEN", None, TOKEN_HELP)
         .opt("id", "HEX", None, "trace: fetch this 32-hex-char trace id only")
         .opt(
             "limit",
@@ -25,9 +28,16 @@ pub fn run(args: Vec<String>) -> Result<()> {
         .positional(0)
         .context("which action? (stats|roll|metrics|trace|shutdown)")?;
     let mut client = qckm::server::Client::connect(addr)?;
+    let (tenant, token) = super::common::scope_from(&parsed);
+    if !tenant.is_empty() || !token.is_empty() {
+        client = client.with_scope(&tenant, &token);
+    }
     match verb {
         "stats" => {
             let s = client.stats()?;
+            if !s.tenant.is_empty() {
+                println!("tenant '{}'", s.tenant);
+            }
             println!(
                 "method {} | epoch {} | {} rows all-time | {} closed epoch(s) held | \
                  {} of {} shard slots | cache {} hit / {} miss",
@@ -45,6 +55,12 @@ pub fn run(args: Vec<String>) -> Result<()> {
             }
             for (decoder, queries) in &s.decoders {
                 println!("  decoder '{decoder}': {queries} queries");
+            }
+            // Per-tenant occupancy — present only when a multi-tenant
+            // node answered (v6), so single-tenant output is unchanged.
+            for (name, rows, shards) in &s.tenants {
+                let shown = if name.is_empty() { "(default)" } else { name };
+                println!("  tenant '{shown}': {rows} rows, {shards} shard slot(s)");
             }
         }
         "metrics" => {

@@ -8,6 +8,7 @@
 
 pub mod common;
 
+pub mod aggregate;
 pub mod cluster;
 pub mod ctl;
 pub mod decode;

@@ -2,7 +2,7 @@
 //! optional reconnect-and-resend under bounded exponential backoff
 //! (`--retry N`) so a server kill-and-restart does not abort the stream.
 
-use super::common::shard_label;
+use super::common::{scope_from, shard_label, TENANT_HELP, TOKEN_HELP};
 use anyhow::{bail, Context, Result};
 use qckm::cli::CliSpec;
 use qckm::linalg::Mat;
@@ -23,12 +23,15 @@ pub fn run(args: Vec<String>) -> Result<()> {
             "declare the expected method; the server refuses a mismatch",
         )
         .opt("batch", "NUM", Some("4096"), "rows per push message")
+        .opt("tenant", "NAME", None, TENANT_HELP)
+        .opt("token", "TOKEN", None, TOKEN_HELP)
         .opt(
             "retry",
             "NUM",
             Some("0"),
-            "transport-error retries with exponential backoff (0 = fail fast); \
-             a re-sent batch may double-count if the failure hit mid-ack",
+            "transport-error and rate-limit retries with exponential backoff \
+             (0 = fail fast); a re-sent batch may double-count if the \
+             failure hit mid-ack",
         )
         .flag(
             "trace",
@@ -62,6 +65,10 @@ pub fn run(args: Vec<String>) -> Result<()> {
         ..RetryPolicy::default()
     };
     let mut client = RetryClient::connect(addr, &method, policy)?;
+    let (tenant, token) = scope_from(&parsed);
+    if !tenant.is_empty() || !token.is_empty() {
+        client.set_scope(&tenant, &token);
+    }
     if parsed.flag("trace") {
         client.enable_tracing();
     }

@@ -2,7 +2,10 @@
 //! spec rides the protocol frame, and the server's centroid cache keys on
 //! it, so a cached answer always matches the requested algorithm.
 
-use super::common::{connect_with_method, print_centroids, save_centroids, scalar_box, DECODER_HELP};
+use super::common::{
+    connect_with_method, print_centroids, save_centroids, scalar_box, DECODER_HELP, TENANT_HELP,
+    TOKEN_HELP,
+};
 use anyhow::{Context, Result};
 use qckm::cli::CliSpec;
 use qckm::decoder::DecoderSpec;
@@ -20,6 +23,8 @@ pub fn run(args: Vec<String>) -> Result<()> {
             "declare the expected method; the server refuses a mismatch",
         )
         .opt("decoder", "SPEC", None, DECODER_HELP)
+        .opt("tenant", "NAME", None, TENANT_HELP)
+        .opt("token", "TOKEN", None, TOKEN_HELP)
         .opt(
             "window",
             "NUM",

@@ -1,13 +1,30 @@
 //! `qckm serve` — the online sketch service (see `qckm::server`).
+//!
+//! Two shapes:
+//!
+//! * **Single-tenant** (legacy): operator flags (`--dim --m --sigma …`)
+//!   or `--seed-sketch` describe the one hosted sketch; pre-v6 clients
+//!   are served byte-identically.
+//! * **Multi-tenant**: one or more `--tenant name=specfile` declarations
+//!   (or a `[tenants]` table in `--config`), each spec file a TOML job
+//!   config plus top-level `dim` (required) and `token` (optional). Every
+//!   tenant gets its own operator draw and state; clients address one
+//!   with `--tenant`/`--token`.
+//!
+//! `--rate-limit RATE[:BURST]` arms a per-connection token bucket on
+//! ingest frames (push/delta) in either shape; shed frames get a busy
+//! reply with a retry-after hint that `--retry` clients sleep on.
 
 use super::common::{check_declared_method, job_from, METHOD_HELP};
 use anyhow::{bail, Context, Result};
 use qckm::cli::CliSpec;
 use qckm::clompr::ClOmprParams;
+use qckm::config::JobConfig;
 use qckm::frequency::SigmaHeuristic;
 use qckm::parallel::Parallelism;
-use qckm::server::{self, ServiceConfig, SketchService};
+use qckm::server::{self, tenants, Node, RateLimit, ServiceConfig, SketchService};
 use qckm::stream;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
@@ -18,7 +35,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
     )
     .opt("host", "ADDR", Some("127.0.0.1"), "bind address")
     .opt("port", "NUM", Some("0"), "bind port (0 = ephemeral; the bound port is printed)")
-    .opt("dim", "NUM", None, "data dimension (required unless --seed-sketch)")
+    .opt("dim", "NUM", None, "data dimension (required unless --seed-sketch / --tenant)")
     .opt("m", "NUM", None, "number of frequencies")
     .opt("method", "SPEC", None, METHOD_HELP)
     .opt("sigma", "FLOAT", None, "kernel bandwidth (required unless --seed-sketch)")
@@ -45,7 +62,25 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "seed the server from this .qsk (operator comes from its header)",
     )
     .opt("seed-shard", "NAME", Some("__seed__"), "shard label for the seeded history")
-    .opt("config", "FILE", None, "TOML job config")
+    .multi(
+        "tenant",
+        "NAME=SPECFILE",
+        "host a named tenant from a TOML spec file (repeatable); \
+         spec = job config + top-level dim (required) and token (optional)",
+    )
+    .opt(
+        "token",
+        "TOKEN",
+        None,
+        "require this auth token on every scoped request (single-tenant mode)",
+    )
+    .opt(
+        "rate-limit",
+        "RATE[:BURST]",
+        None,
+        "per-connection ingest rate limit in frames/s (burst defaults to RATE)",
+    )
+    .opt("config", "FILE", None, "TOML job config (a [tenants] table declares tenants)")
     .flag("log-json", "emit structured JSON logs on stderr (same as QCKM_LOG=json)");
     let parsed = spec.parse(args)?;
     let cfg = job_from(&parsed)?;
@@ -53,6 +88,105 @@ pub fn run(args: Vec<String>) -> Result<()> {
         qckm::obs::set_json(true, qckm::obs::Level::Info);
     }
 
+    let rate = parsed.get("rate-limit").map(RateLimit::parse).transpose()?;
+
+    // Tenant declarations: every --tenant flag, then the config file's
+    // [tenants] table (flags win on a name collision — same precedence
+    // as every other CLI-over-config override).
+    let mut decls: Vec<(String, String)> = Vec::new();
+    for d in parsed.get_all("tenant") {
+        let Some((name, path)) = d.split_once('=') else {
+            bail!("--tenant wants NAME=SPECFILE, got '{d}'");
+        };
+        decls.push((name.to_string(), path.to_string()));
+    }
+    if let Some(path) = parsed.get("config") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        let doc = qckm::config::parse_toml(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        for key in doc.keys("tenants") {
+            if decls.iter().any(|(n, _)| n == key) {
+                continue;
+            }
+            let Some(file) = doc.get("tenants", key).and_then(|v| v.as_str()) else {
+                bail!("{path}: [tenants] {key} must be a spec-file path string");
+            };
+            decls.push((key.to_string(), file.to_string()));
+        }
+    }
+
+    // Shared per-node tuning; each tenant (or the single default service)
+    // gets its own copy with its own identity fields.
+    let base_cfg = ServiceConfig {
+        epoch_capacity: parsed.get_usize("epochs")?.unwrap().max(1),
+        cache_capacity: parsed.get_usize("cache")?.unwrap().max(1),
+        max_shards: parsed.get_usize("max-shards")?.unwrap().max(1),
+        threads: Parallelism::fixed(cfg.threads),
+        decode: ClOmprParams {
+            threads: cfg.threads,
+            ..ClOmprParams::default()
+        },
+        registry: qckm::obs::global().clone(),
+        trace_capacity: parsed.get_usize("trace-ring")?.unwrap().max(1),
+        tenant: String::new(),
+        token: None,
+        default_decoder: String::new(),
+    };
+    // The server shares the process-global registry so a single
+    // `ctl metrics` scrape covers every layer: request handling here,
+    // plus the stream/decoder/parallel families the library registers
+    // lazily. Touch them up front so the first scrape already lists the
+    // full catalog, not just whatever stages have run.
+    qckm::obs::lib_metrics();
+
+    let mut tenant_map: BTreeMap<String, Arc<SketchService>> = BTreeMap::new();
+    if decls.is_empty() {
+        tenant_map.insert(String::new(), Arc::new(single_service(&parsed, &cfg, &base_cfg)?));
+    } else {
+        if parsed.get("seed-sketch").is_some() {
+            bail!("--seed-sketch only applies in single-tenant mode (put seeding in a tenant spec later)");
+        }
+        if parsed.get("token").is_some() {
+            bail!("--token only applies in single-tenant mode (tenant spec files carry their own)");
+        }
+        for (name, path) in &decls {
+            tenants::validate_tenant_name(name)?;
+            if tenant_map.contains_key(name) {
+                bail!("tenant '{name}' declared twice");
+            }
+            tenant_map.insert(name.clone(), Arc::new(tenant_service(name, path, &base_cfg)?));
+        }
+        eprintln!(
+            "hosting {} tenant(s): {}",
+            tenant_map.len(),
+            tenant_map.keys().cloned().collect::<Vec<_>>().join(", ")
+        );
+    }
+
+    let node = Node::new(tenant_map, rate, base_cfg.registry.clone())?;
+
+    let host = parsed.get("host").unwrap();
+    let port = parsed.get_usize("port")?.unwrap();
+    if port > u16::MAX as usize {
+        bail!("--port {port} out of range");
+    }
+    let listener = std::net::TcpListener::bind((host, port as u16))
+        .with_context(|| format!("bind {host}:{port}"))?;
+    // Machine-parseable: tests and scripts read the ephemeral port here.
+    println!("LISTENING {}", listener.local_addr()?);
+    std::io::Write::flush(&mut std::io::stdout())?;
+
+    let served = server::serve_node(listener, Arc::new(node))?;
+    eprintln!("server stopped after {served} connection(s)");
+    Ok(())
+}
+
+/// Build the legacy single-tenant service from the operator flags /
+/// `--seed-sketch`, exactly as before multi-tenancy (plus `--token`).
+fn single_service(
+    parsed: &qckm::cli::ParsedArgs,
+    cfg: &JobConfig,
+    base_cfg: &ServiceConfig,
+) -> Result<SketchService> {
     // The operator is fixed for the server's lifetime: either rebuilt from
     // a snapshot header (fingerprint-verified) or drawn fresh from the
     // CLI parameters — the same pure-function draw the offline stages use.
@@ -67,7 +201,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
                     bail!("--m {m} conflicts with {path} (m={})", meta.m);
                 }
             }
-            check_declared_method(&parsed, &meta.method, path)?;
+            check_declared_method(parsed, &meta.method, path)?;
             if let SigmaHeuristic::Fixed(sigma) = cfg.sketch.sigma {
                 if sigma.to_bits() != meta.sigma.to_bits() {
                     bail!("--sigma {sigma} conflicts with {path} (sigma={})", meta.sigma);
@@ -89,7 +223,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         None => {
             let dim = parsed
                 .get_usize("dim")?
-                .context("--dim is required without --seed-sketch")?;
+                .context("--dim is required without --seed-sketch or --tenant")?;
             let SigmaHeuristic::Fixed(sigma) = cfg.sketch.sigma else {
                 bail!("--sigma is required without --seed-sketch (shards must agree on it)");
             };
@@ -107,41 +241,32 @@ pub fn run(args: Vec<String>) -> Result<()> {
     };
     eprintln!("operator: {}", meta.describe());
 
-    // The server shares the process-global registry so a single
-    // `ctl metrics` scrape covers every layer: request handling here,
-    // plus the stream/decoder/parallel families the library registers
-    // lazily. Touch them up front so the first scrape already lists the
-    // full catalog, not just whatever stages have run.
-    qckm::obs::lib_metrics();
     let service_cfg = ServiceConfig {
-        epoch_capacity: parsed.get_usize("epochs")?.unwrap().max(1),
-        cache_capacity: parsed.get_usize("cache")?.unwrap().max(1),
-        max_shards: parsed.get_usize("max-shards")?.unwrap().max(1),
-        threads: Parallelism::fixed(cfg.threads),
-        decode: ClOmprParams {
-            threads: cfg.threads,
-            ..ClOmprParams::default()
-        },
-        registry: qckm::obs::global().clone(),
-        trace_capacity: parsed.get_usize("trace-ring")?.unwrap().max(1),
+        token: parsed.get("token").map(str::to_string),
+        ..base_cfg.clone()
     };
     let service = SketchService::new(op, meta, service_cfg);
     if let Some(pool) = seed_pool {
         service.seed_with(parsed.get("seed-shard").unwrap(), pool)?;
     }
+    Ok(service)
+}
 
-    let host = parsed.get("host").unwrap();
-    let port = parsed.get_usize("port")?.unwrap();
-    if port > u16::MAX as usize {
-        bail!("--port {port} out of range");
-    }
-    let listener = std::net::TcpListener::bind((host, port as u16))
-        .with_context(|| format!("bind {host}:{port}"))?;
-    // Machine-parseable: tests and scripts read the ephemeral port here.
-    println!("LISTENING {}", listener.local_addr()?);
-    std::io::Write::flush(&mut std::io::stdout())?;
-
-    let served = server::serve(listener, Arc::new(service))?;
-    eprintln!("server stopped after {served} connection(s)");
-    Ok(())
+/// Build one named tenant from its TOML spec file: a job config (method,
+/// m, sigma, seed, decoder, threads) plus top-level `dim` (required) and
+/// `token` (optional).
+fn tenant_service(name: &str, path: &str, base_cfg: &ServiceConfig) -> Result<SketchService> {
+    let (meta, op, token, job) = super::common::load_tenant_spec(name, path)?;
+    let service_cfg = ServiceConfig {
+        tenant: name.to_string(),
+        token,
+        default_decoder: job.decode.decoder.canonical().to_string(),
+        decode: ClOmprParams {
+            threads: job.threads,
+            ..job.decode.params
+        },
+        threads: Parallelism::fixed(job.threads),
+        ..base_cfg.clone()
+    };
+    Ok(SketchService::new(op, meta, service_cfg))
 }

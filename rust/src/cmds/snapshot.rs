@@ -1,7 +1,7 @@
 //! `qckm snapshot` — drain a serving node's window into a `.qsk` file the
 //! offline stages understand.
 
-use super::common::connect_with_method;
+use super::common::{connect_with_method, TENANT_HELP, TOKEN_HELP};
 use anyhow::{Context, Result};
 use qckm::cli::CliSpec;
 use qckm::stream;
@@ -20,6 +20,8 @@ pub fn run(args: Vec<String>) -> Result<()> {
         None,
         "declare the expected method; the server refuses a mismatch",
     )
+    .opt("tenant", "NAME", None, TENANT_HELP)
+    .opt("token", "TOKEN", None, TOKEN_HELP)
     .opt("out", "FILE", None, "write the .qsk here");
     let parsed = spec.parse(args)?;
     let addr = parsed.get("addr").context("--addr is required")?;

@@ -1,0 +1,557 @@
+//! The fan-in aggregation tier — `qckm aggregate`.
+//!
+//! One serving node cannot terminate millions of pusher connections, but
+//! the pooled sketch is an associative (sum, count) statistic: pooling a
+//! million pushes at the edge and forwarding one merged delta upstream
+//! yields *bit-for-bit* the state the root would have reached ingesting
+//! every push directly (for ±1 quantized methods the sums are exact small
+//! integers, so float addition is order- and grouping-invariant — the
+//! same argument as I-2/I-3, now across processes). An aggregator tree of
+//! any depth is therefore exact, and `rust/tests/proptests.rs` locks the
+//! tree == flat invariant (I-20) over random topologies.
+//!
+//! [`AggregatorNode`] speaks the same wire protocol as the server:
+//!
+//! * **push** — authorized, method-checked, encoded through the same
+//!   fixed-chunk parallel fold, then merged into the tenant's local
+//!   *pending* accumulator. The pusher gets a normal ack; nothing goes
+//!   upstream yet.
+//! * **delta** — a child aggregator's flush: dedup-gated by the child's
+//!   (aggregator id, instance, seq) key exactly like the root (trees
+//!   compose), then merged into pending.
+//! * **query / snapshot / roll / stats / trace** — refused with a
+//!   pointer at the root: the edge holds only an unflushed remainder,
+//!   so answering locally would silently serve a sliver of the data.
+//!
+//! A flusher thread drains pending upstream over [`RetryClient`] when a
+//! row threshold or timer fires. Flushes are **at-least-once with an
+//! idempotency key** (I-21): each rotation assigns the next `seq` and the
+//! frozen `(seq, bytes)` stays *in flight* until the parent acks it —
+//! a retried or replayed send re-transmits the same delta, never a
+//! re-pooled one under a fresh seq, so the parent either merges it once
+//! or recognizes the key and drops it. Shutdown drains synchronously:
+//! the ack is written, connections are joined, then every tenant's
+//! pending + in-flight delta is pushed upstream before the process exits.
+
+use crate::linalg::Mat;
+use crate::obs::{Counter, Registry};
+use crate::parallel::Parallelism;
+use crate::server::proto::{self, Response, Scope};
+use crate::server::tenants::{constant_time_eq, RateLimit, TokenBucket};
+use crate::server::{encode_reply, reply_version, ConnCtx, FrameHandler, Handled};
+use crate::server::{RetryClient, RetryPolicy};
+use crate::sketch::{PooledSketch, SketchOperator};
+use crate::stream::{read_sketch_from, write_sketch_to, ShardRecord, SketchMeta};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Tuning for one aggregator process.
+pub struct AggregatorConfig {
+    /// This aggregator's identity upstream — the idempotency-key prefix
+    /// and the provenance label its deltas carry. Must be unique among
+    /// the parent's children (two nodes sharing an id would dedupe each
+    /// other's deltas away).
+    pub agg_id: String,
+    /// The parent to flush into: a serving node or another aggregator.
+    pub upstream: String,
+    /// Flush when a tenant's pending pool reaches this many rows.
+    pub flush_rows: u64,
+    /// Flush every tenant at least this often regardless of rows.
+    pub flush_interval: Duration,
+    /// Retry policy for the upstream links.
+    pub retry: RetryPolicy,
+    /// Fault injection: send every delta twice. The duplicate must be
+    /// recognized upstream and dropped (`merged = false`) — the CI e2e
+    /// runs one edge in this mode to prove the dedup gate end to end.
+    pub replay: bool,
+    /// Optional per-connection ingest rate limit (same bucket as serve).
+    pub rate: Option<RateLimit>,
+    pub registry: Arc<Registry>,
+    /// Threads for the per-push parallel encode.
+    pub threads: Parallelism,
+    /// Distinct shard labels accepted per tenant before new ones are
+    /// refused (the same I-13 bound the root enforces).
+    pub max_shards: usize,
+}
+
+/// One tenant hosted at the edge: the operator it encodes pushes with
+/// (drawn from the same spec as the root's, so the pools are mergeable)
+/// plus its local accumulator state.
+pub struct EdgeTenant {
+    pub meta: SketchMeta,
+    pub op: SketchOperator,
+    /// Token pushers must present to this edge (usually the same spec
+    /// file as the root tenant, hence the same token — which is also
+    /// what the edge presents upstream).
+    pub token: Option<String>,
+    state: Mutex<TenantState>,
+    counters: FaninCounters,
+}
+
+struct TenantState {
+    /// Rows pooled since the last rotation.
+    pending: PooledSketch,
+    pending_rows: u64,
+    /// Lifetime rows accepted (pushes + child deltas) — the `total_rows`
+    /// the acks report.
+    total_rows: u64,
+    /// Per-shard lifetime rows, capped at `max_shards` labels (I-13).
+    shards: BTreeMap<String, u64>,
+    /// The rotated-but-unacked delta. At most one: rotation waits for
+    /// the ack so a retry always re-sends the identical (seq, bytes).
+    inflight: Option<Inflight>,
+    /// Last assigned flush sequence number.
+    seq: u64,
+    /// Child-aggregator dedup gate: agg_id → (instance, last seq), the
+    /// same I-21 gate the root keeps — trees compose.
+    deltas: BTreeMap<String, (u64, u64)>,
+}
+
+struct Inflight {
+    seq: u64,
+    rows: u64,
+    bytes: Vec<u8>,
+}
+
+/// The handful of fan-in instruments, pre-labeled per tenant.
+struct FaninCounters {
+    rows: Arc<Counter>,
+    flushes: Arc<Counter>,
+    flush_failures: Arc<Counter>,
+    replays_sent: Arc<Counter>,
+}
+
+impl FaninCounters {
+    fn new(reg: &Registry, tenant: &str) -> Self {
+        let labels: Vec<(&str, &str)> = if tenant.is_empty() {
+            Vec::new()
+        } else {
+            vec![("tenant", tenant)]
+        };
+        Self {
+            rows: reg.counter(
+                "qckm_fanin_rows_total",
+                "Rows pooled at this aggregator (pushes and child deltas).",
+                &labels,
+            ),
+            flushes: reg.counter(
+                "qckm_fanin_flushes_total",
+                "Deltas acked by the upstream parent.",
+                &labels,
+            ),
+            flush_failures: reg.counter(
+                "qckm_fanin_flush_failures_total",
+                "Flush attempts that exhausted their retries (delta kept in flight).",
+                &labels,
+            ),
+            replays_sent: reg.counter(
+                "qckm_fanin_replays_sent_total",
+                "Duplicate deltas deliberately sent under --replay fault injection.",
+                &labels,
+            ),
+        }
+    }
+}
+
+/// The edge node: a [`FrameHandler`] pooling pushes per tenant plus the
+/// flusher that forwards merged deltas upstream.
+pub struct AggregatorNode {
+    cfg: AggregatorConfig,
+    /// Startup nonce distinguishing this process's sequence stream from
+    /// any predecessor with the same `agg_id`: a restart starts from
+    /// empty accumulators, so the parent must accept the fresh stream
+    /// rather than dropping everything below the old high-water seq.
+    instance: u64,
+    tenants: BTreeMap<String, EdgeTenant>,
+    /// Flusher wakeup: notified when a tenant crosses `flush_rows` and
+    /// on shutdown.
+    wake: (Mutex<bool>, Condvar),
+    stop: AtomicBool,
+}
+
+impl AggregatorNode {
+    pub fn new(
+        cfg: AggregatorConfig,
+        tenants: Vec<(String, SketchMeta, SketchOperator, Option<String>)>,
+    ) -> Result<Arc<Self>> {
+        if cfg.agg_id.is_empty() || cfg.agg_id.len() > proto::MAX_SHARD_BYTES {
+            bail!(
+                "aggregator id must be 1..={} bytes (it doubles as the provenance label)",
+                proto::MAX_SHARD_BYTES
+            );
+        }
+        if tenants.is_empty() {
+            bail!("an aggregator needs at least one tenant");
+        }
+        let instance = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(1)
+            .max(1);
+        let mut map = BTreeMap::new();
+        for (name, meta, op, token) in tenants {
+            if !name.is_empty() {
+                crate::server::tenants::validate_tenant_name(&name)?;
+            }
+            let sketch_len = op.sketch_len();
+            let counters = FaninCounters::new(&cfg.registry, &name);
+            let prev = map.insert(
+                name.clone(),
+                EdgeTenant {
+                    meta,
+                    op,
+                    token,
+                    state: Mutex::new(TenantState {
+                        pending: PooledSketch::new(sketch_len),
+                        pending_rows: 0,
+                        total_rows: 0,
+                        shards: BTreeMap::new(),
+                        inflight: None,
+                        seq: 0,
+                        deltas: BTreeMap::new(),
+                    }),
+                    counters,
+                },
+            );
+            if prev.is_some() {
+                bail!("tenant '{name}' declared twice");
+            }
+        }
+        Ok(Arc::new(Self {
+            cfg,
+            instance,
+            tenants: map,
+            wake: (Mutex::new(false), Condvar::new()),
+            stop: AtomicBool::new(false),
+        }))
+    }
+
+    /// Spawn the background flusher. Joined by the caller after the
+    /// accept loop returns (the final drain already ran by then, so the
+    /// join is immediate).
+    pub fn spawn_flusher(self: &Arc<Self>) -> std::thread::JoinHandle<()> {
+        let node = Arc::clone(self);
+        std::thread::spawn(move || {
+            let mut clients: BTreeMap<String, RetryClient> = BTreeMap::new();
+            while !node.stop.load(Ordering::SeqCst) {
+                {
+                    let (lock, cv) = &node.wake;
+                    let mut signaled = lock.lock().unwrap_or_else(|e| e.into_inner());
+                    if !*signaled {
+                        let (guard, _) = cv
+                            .wait_timeout(signaled, node.cfg.flush_interval)
+                            .unwrap_or_else(|e| e.into_inner());
+                        signaled = guard;
+                    }
+                    *signaled = false;
+                }
+                if node.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                node.flush_all(&mut clients);
+            }
+        })
+    }
+
+    fn locked<'a>(&self, t: &'a EdgeTenant) -> std::sync::MutexGuard<'a, TenantState> {
+        // Same poisoning stance as the server: state is counters and
+        // mergeable pools, never left half-updated across a panic point.
+        t.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn wake_flusher(&self) {
+        let (lock, cv) = &self.wake;
+        *lock.lock().unwrap_or_else(|e| e.into_inner()) = true;
+        cv.notify_one();
+    }
+
+    /// Flush every tenant once: rotate pending into an in-flight delta
+    /// where needed, then push each in-flight delta upstream. Failures
+    /// keep the delta in flight for the next round.
+    fn flush_all(&self, clients: &mut BTreeMap<String, RetryClient>) {
+        for (name, tenant) in &self.tenants {
+            if let Err(e) = self.flush_tenant(name, tenant, clients) {
+                tenant.counters.flush_failures.inc();
+                eprintln!("aggregate: flush tenant '{name}': {e:#}");
+            }
+        }
+    }
+
+    fn flush_tenant(
+        &self,
+        name: &str,
+        tenant: &EdgeTenant,
+        clients: &mut BTreeMap<String, RetryClient>,
+    ) -> Result<()> {
+        // Rotate under the lock; send outside it (pushes keep landing in
+        // the fresh pending pool while the delta is on the wire).
+        let send = {
+            let mut st = self.locked(tenant);
+            if st.inflight.is_none() && st.pending_rows > 0 {
+                let rows = st.pending_rows;
+                let sketch_len = st.pending.len();
+                let pool = std::mem::replace(&mut st.pending, PooledSketch::new(sketch_len));
+                st.pending_rows = 0;
+                st.seq += 1;
+                let prov = [ShardRecord {
+                    label: self.cfg.agg_id.clone(),
+                    rows,
+                }];
+                let mut bytes = Vec::new();
+                write_sketch_to(&mut bytes, &tenant.meta, &pool, &prov)?;
+                let seq = st.seq;
+                st.inflight = Some(Inflight { seq, rows, bytes });
+            }
+            st.inflight
+                .as_ref()
+                .map(|i| (i.seq, i.rows, i.bytes.clone()))
+        };
+        let Some((seq, rows, bytes)) = send else {
+            return Ok(());
+        };
+        if !clients.contains_key(name) {
+            let mut c = RetryClient::connect(&self.cfg.upstream, "", self.cfg.retry.clone())
+                .with_context(|| format!("connect upstream {}", self.cfg.upstream))?;
+            let token = tenant.token.as_deref().unwrap_or("");
+            if !name.is_empty() || !token.is_empty() {
+                c.set_scope(name, token);
+            }
+            clients.insert(name.to_string(), c);
+        }
+        let client = clients.get_mut(name).expect("just inserted");
+        let (merged, _) = client.delta(&self.cfg.agg_id, self.instance, seq, &bytes)?;
+        if self.cfg.replay {
+            // Deliberate duplicate: the parent must recognize the key and
+            // drop it. A parent that merged it twice would double-count —
+            // the aggregator e2e runs one edge in this mode to prove it
+            // cannot.
+            let (again, _) = client.delta(&self.cfg.agg_id, self.instance, seq, &bytes)?;
+            tenant.counters.replays_sent.inc();
+            if again {
+                bail!("upstream merged a replayed delta (seq {seq}) — dedup gate broken");
+            }
+        }
+        let mut st = self.locked(tenant);
+        if st.inflight.as_ref().map(|i| i.seq) == Some(seq) {
+            st.inflight = None;
+        }
+        drop(st);
+        tenant.counters.flushes.inc();
+        if !merged {
+            // The parent had already seen this key (an earlier send's ack
+            // was lost). The rows are safe upstream; nothing to redo.
+            eprintln!("aggregate: tenant '{name}' delta seq {seq} was a recognized replay");
+        } else {
+            eprintln!("aggregate: tenant '{name}' flushed {rows} row(s) upstream (seq {seq})");
+        }
+        Ok(())
+    }
+
+    fn resolve(&self, scope: &Scope) -> Result<&EdgeTenant> {
+        match self.tenants.get(&scope.tenant) {
+            Some(t) => Ok(t),
+            None if scope.tenant.is_empty() => {
+                bail!("this aggregator hosts only named tenants; address one with --tenant")
+            }
+            None => bail!("unknown tenant '{}'", scope.tenant),
+        }
+    }
+
+    fn authorize(tenant: &EdgeTenant, scope: &Scope) -> Result<()> {
+        if let Some(expected) = &tenant.token {
+            if !constant_time_eq(expected.as_bytes(), scope.token.as_bytes()) {
+                bail!("auth failed (bad or missing token)");
+            }
+        }
+        Ok(())
+    }
+
+    fn dispatch(&self, req: proto::Request) -> Result<Response> {
+        match req {
+            proto::Request::Push {
+                scope,
+                shard,
+                method,
+                dim,
+                data,
+                trace: _,
+            } => {
+                let tenant = self.resolve(&scope)?;
+                Self::authorize(tenant, &scope)?;
+                if !method.is_empty() && method != tenant.meta.method {
+                    bail!(
+                        "method mismatch: client declared '{method}', aggregator pools '{}'",
+                        tenant.meta.method
+                    );
+                }
+                if shard.is_empty() || shard.len() > proto::MAX_SHARD_BYTES {
+                    bail!("invalid shard label ({} bytes)", shard.len());
+                }
+                if dim as usize != tenant.op.dim() {
+                    bail!("dimension mismatch: push dim {dim}, operator dim {}", tenant.op.dim());
+                }
+                let rows = data.len() / dim as usize;
+                if rows == 0 {
+                    bail!("push carries zero rows");
+                }
+                let batch = Mat::from_vec(rows, dim as usize, data);
+                // Encode outside the tenant lock — the exact same
+                // fixed-chunk fold as the root, so edge pooling changes
+                // nothing bit-wise (I-20).
+                let mut partial = PooledSketch::new(tenant.op.sketch_len());
+                tenant.op.sketch_into_par(&batch, &mut partial, &self.cfg.threads);
+                let (shard_rows, total_rows, full) = {
+                    let mut st = self.locked(tenant);
+                    if !st.shards.contains_key(&shard) && st.shards.len() >= self.cfg.max_shards {
+                        bail!(
+                            "shard limit reached ({} labels); reuse an existing label",
+                            self.cfg.max_shards
+                        );
+                    }
+                    st.pending.merge(&partial);
+                    st.pending_rows += rows as u64;
+                    st.total_rows += rows as u64;
+                    let entry = st.shards.entry(shard).or_insert(0);
+                    *entry += rows as u64;
+                    (*entry, st.total_rows, st.pending_rows >= self.cfg.flush_rows)
+                };
+                tenant.counters.rows.add(rows as u64);
+                if full {
+                    self.wake_flusher();
+                }
+                Ok(Response::PushAck {
+                    shard_rows,
+                    total_rows,
+                })
+            }
+            proto::Request::Delta {
+                scope,
+                agg_id,
+                instance,
+                seq,
+                sketch,
+                trace: _,
+            } => {
+                let tenant = self.resolve(&scope)?;
+                Self::authorize(tenant, &scope)?;
+                // Decode + validate outside the lock, like the root.
+                let (meta, pool, _prov) = read_sketch_from(&mut &sketch[..], "delta")?;
+                tenant.meta.ensure_mergeable(&meta)?;
+                let rows = pool.count();
+                let (merged, total_rows, full) = {
+                    let mut st = self.locked(tenant);
+                    let replay = match st.deltas.get(&agg_id) {
+                        Some(&(inst, last)) => inst == instance && seq <= last,
+                        None => false,
+                    };
+                    if replay {
+                        (false, st.total_rows, false)
+                    } else {
+                        st.pending.merge(&pool);
+                        st.pending_rows += rows;
+                        st.total_rows += rows;
+                        st.deltas.insert(agg_id, (instance, seq));
+                        (true, st.total_rows, st.pending_rows >= self.cfg.flush_rows)
+                    }
+                };
+                if merged {
+                    tenant.counters.rows.add(rows);
+                }
+                if full {
+                    self.wake_flusher();
+                }
+                Ok(Response::DeltaAck {
+                    merged,
+                    rows_total: total_rows,
+                })
+            }
+            proto::Request::Metrics => Ok(Response::Metrics(self.cfg.registry.render())),
+            proto::Request::Shutdown => unreachable!("handled before dispatch"),
+            other => bail!(
+                "this node is a fan-in aggregator; it only pools pushes and deltas — \
+                 send '{}' to the root server",
+                other.verb()
+            ),
+        }
+    }
+}
+
+impl FrameHandler for AggregatorNode {
+    fn new_conn(&self) -> ConnCtx {
+        ConnCtx {
+            bucket: self
+                .cfg
+                .rate
+                .map(|limit| TokenBucket::new(limit, self.cfg.registry.now_ns())),
+        }
+    }
+
+    fn handle(&self, conn: &mut ConnCtx, payload: &[u8]) -> Handled {
+        if proto::payload_is_ingest(payload) {
+            if let Some(bucket) = conn.bucket.as_mut() {
+                if let Err(retry_after_ms) = bucket.try_take(self.cfg.registry.now_ns()) {
+                    let resp = Response::Busy {
+                        retry_after_ms,
+                        message: "per-connection ingest rate limit".to_string(),
+                    };
+                    return Handled::Reply(encode_reply(&resp, reply_version(payload)));
+                }
+            }
+        }
+        let version = reply_version(payload);
+        match proto::decode_request_v(payload) {
+            Err(e) => Handled::Reply(encode_reply(&Response::Error(format!("{e:#}")), version)),
+            Ok((_, proto::Request::Shutdown)) => {
+                Handled::Shutdown(encode_reply(&Response::ShutdownAck, version))
+            }
+            Ok((_, req)) => {
+                let resp = self
+                    .dispatch(req)
+                    .unwrap_or_else(|e| Response::Error(format!("{e:#}")));
+                Handled::Reply(encode_reply(&resp, version))
+            }
+        }
+    }
+
+    /// The drain: the accept loop has stopped and every connection is
+    /// joined, so no new rows can arrive. Push everything upstream, then
+    /// release the flusher thread.
+    fn drained(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.wake_flusher();
+        let mut clients = BTreeMap::new();
+        self.flush_all(&mut clients);
+        let stranded: u64 = self
+            .tenants
+            .values()
+            .map(|t| {
+                let st = self.locked(t);
+                st.pending_rows + st.inflight.as_ref().map(|i| i.rows).unwrap_or(0)
+            })
+            .sum();
+        if stranded > 0 {
+            eprintln!(
+                "aggregate: WARNING — {stranded} row(s) could not be flushed upstream and are lost"
+            );
+        }
+    }
+}
+
+/// Serve an aggregator on `listener` until a shutdown request arrives,
+/// draining pending deltas upstream before returning. Returns the number
+/// of connections served.
+pub fn serve_aggregator(
+    listener: std::net::TcpListener,
+    node: Arc<AggregatorNode>,
+) -> Result<u64> {
+    let flusher = node.spawn_flusher();
+    let served = crate::server::serve_handler(listener, Arc::clone(&node))?;
+    let _ = flusher.join();
+    Ok(served)
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,358 @@
+//! Unit tests for the fan-in aggregator: local pooling and acks, tenant
+//! auth, the child-delta dedup gate (trees compose), verb refusals,
+//! defensive frame handling with rate limiting, at-least-once rotation
+//! under a dead upstream, and one in-process socket test proving a flush
+//! (with deliberate replay injection) lands rows upstream bit-for-bit.
+
+use super::*;
+use crate::frequency::FrequencyLaw;
+use crate::method::MethodSpec;
+use crate::obs::{FakeClock, MonotonicClock, Registry};
+use crate::rng::Rng;
+use crate::server::{serve, ServiceConfig, SketchService};
+use crate::stream::draw_operator;
+
+const DIM: usize = 4;
+const M: usize = 24;
+const SIGMA: f64 = 1.1;
+const SEED: u64 = 5;
+
+fn op_and_meta() -> (SketchMeta, SketchOperator) {
+    let qckm = MethodSpec::parse("qckm").unwrap();
+    let op = draw_operator(&qckm, FrequencyLaw::AdaptedRadius, M, DIM, SIGMA, SEED);
+    let meta = SketchMeta::for_operator(&op, &qckm, SEED);
+    (meta, op)
+}
+
+fn edge(
+    tenant: &str,
+    token: Option<&str>,
+    upstream: &str,
+    replay: bool,
+    rate: Option<RateLimit>,
+    registry: Arc<Registry>,
+) -> Arc<AggregatorNode> {
+    let (meta, op) = op_and_meta();
+    AggregatorNode::new(
+        AggregatorConfig {
+            agg_id: "edge-1".to_string(),
+            upstream: upstream.to_string(),
+            flush_rows: 1_000_000,
+            flush_interval: Duration::from_secs(3600),
+            retry: RetryPolicy {
+                attempts: 0,
+                base: Duration::from_millis(5),
+                cap: Duration::from_millis(20),
+            },
+            replay,
+            rate,
+            registry,
+            threads: Parallelism::serial(),
+            max_shards: 4,
+        },
+        vec![(tenant.to_string(), meta, op, token.map(str::to_string))],
+    )
+    .unwrap()
+}
+
+fn test_registry() -> Arc<Registry> {
+    Arc::new(Registry::new(Arc::new(MonotonicClock::new())))
+}
+
+fn rows(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n * DIM).map(|_| rng.gaussian()).collect()
+}
+
+fn push(tenant: &str, token: &str, shard: &str, n: usize, seed: u64) -> proto::Request {
+    proto::Request::Push {
+        scope: Scope::new(tenant, token),
+        shard: shard.to_string(),
+        method: String::new(),
+        dim: DIM as u32,
+        data: rows(n, seed),
+        trace: None,
+    }
+}
+
+/// A well-formed `.qsk` delta payload: `n` rows pooled under `label`.
+fn delta_bytes(n: usize, seed: u64, label: &str) -> Vec<u8> {
+    let (meta, op) = op_and_meta();
+    let batch = Mat::from_vec(n, DIM, rows(n, seed));
+    let mut pool = PooledSketch::new(op.sketch_len());
+    op.sketch_into_par(&batch, &mut pool, &Parallelism::serial());
+    let mut bytes = Vec::new();
+    write_sketch_to(
+        &mut bytes,
+        &meta,
+        &pool,
+        &[ShardRecord { label: label.to_string(), rows: n as u64 }],
+    )
+    .unwrap();
+    bytes
+}
+
+// --------------------------------------------------------------- dispatch
+
+#[test]
+fn push_pools_locally_and_acks_shard_and_total_rows() {
+    let node = edge("acme", None, "127.0.0.1:1", false, None, test_registry());
+    match node.dispatch(push("acme", "", "s1", 3, 10)).unwrap() {
+        Response::PushAck { shard_rows, total_rows } => {
+            assert_eq!((shard_rows, total_rows), (3, 3));
+        }
+        other => panic!("expected PushAck, got {other:?}"),
+    }
+    match node.dispatch(push("acme", "", "s2", 2, 11)).unwrap() {
+        Response::PushAck { shard_rows, total_rows } => {
+            assert_eq!((shard_rows, total_rows), (2, 5));
+        }
+        other => panic!("expected PushAck, got {other:?}"),
+    }
+    let tenant = node.tenants.get("acme").unwrap();
+    let st = node.locked(tenant);
+    assert_eq!(st.pending_rows, 5);
+    assert_eq!(st.pending.count(), 5);
+    assert!(st.inflight.is_none());
+}
+
+#[test]
+fn push_refusals_cover_tenant_method_dim_and_shard_cap() {
+    let node = edge("acme", None, "127.0.0.1:1", false, None, test_registry());
+    // Unknown tenant; unscoped push against a named-tenant-only node.
+    let err = node.dispatch(push("ghost", "", "s", 1, 1)).unwrap_err();
+    assert!(err.to_string().contains("unknown tenant"), "{err:#}");
+    let err = node.dispatch(push("", "", "s", 1, 1)).unwrap_err();
+    assert!(err.to_string().contains("named tenants"), "{err:#}");
+    // Declared method must match the tenant's operator.
+    let mut req = push("acme", "", "s", 1, 1);
+    if let proto::Request::Push { method, .. } = &mut req {
+        *method = "modulo".to_string();
+    }
+    let err = node.dispatch(req).unwrap_err();
+    assert!(err.to_string().contains("method mismatch"), "{err:#}");
+    // Dimension must match.
+    let bad_dim = proto::Request::Push {
+        scope: Scope::new("acme", ""),
+        shard: "s".to_string(),
+        method: String::new(),
+        dim: DIM as u32 + 1,
+        data: vec![0.0; DIM + 1],
+        trace: None,
+    };
+    let err = node.dispatch(bad_dim).unwrap_err();
+    assert!(err.to_string().contains("dimension mismatch"), "{err:#}");
+    // The I-13 shard-label cap (max_shards = 4 in the fixture).
+    for i in 0..4 {
+        node.dispatch(push("acme", "", &format!("s{i}"), 1, i as u64)).unwrap();
+    }
+    let err = node.dispatch(push("acme", "", "s5", 1, 9)).unwrap_err();
+    assert!(err.to_string().contains("shard limit"), "{err:#}");
+    // Known labels still pass after the cap is reached.
+    node.dispatch(push("acme", "", "s0", 1, 12)).unwrap();
+}
+
+#[test]
+fn push_requires_the_tenant_token() {
+    let node = edge("acme", Some("hunter2"), "127.0.0.1:1", false, None, test_registry());
+    let err = node.dispatch(push("acme", "", "s", 1, 1)).unwrap_err();
+    assert!(err.to_string().contains("auth failed"), "{err:#}");
+    let err = node.dispatch(push("acme", "hunter3", "s", 1, 1)).unwrap_err();
+    assert!(err.to_string().contains("auth failed"), "{err:#}");
+    node.dispatch(push("acme", "hunter2", "s", 1, 1)).unwrap();
+}
+
+#[test]
+fn child_delta_dedup_gate_matches_root_semantics() {
+    let node = edge("acme", None, "127.0.0.1:1", false, None, test_registry());
+    let bytes = delta_bytes(4, 20, "child-a");
+    let delta = |instance: u64, seq: u64, b: &[u8]| proto::Request::Delta {
+        scope: Scope::new("acme", ""),
+        agg_id: "child-1".to_string(),
+        instance,
+        seq,
+        sketch: b.to_vec(),
+        trace: None,
+    };
+    let ack = |r: Response| match r {
+        Response::DeltaAck { merged, rows_total } => (merged, rows_total),
+        other => panic!("expected DeltaAck, got {other:?}"),
+    };
+    assert_eq!(ack(node.dispatch(delta(7, 1, &bytes)).unwrap()), (true, 4));
+    // Replay of an admitted seq: dropped idempotently (I-21).
+    assert_eq!(ack(node.dispatch(delta(7, 1, &bytes)).unwrap()), (false, 4));
+    // The next seq merges.
+    let bytes2 = delta_bytes(2, 21, "child-a");
+    assert_eq!(ack(node.dispatch(delta(7, 2, &bytes2)).unwrap()), (true, 6));
+    // A restarted child (new instance) resets the gate: seq 1 is new data.
+    assert_eq!(ack(node.dispatch(delta(8, 1, &bytes)).unwrap()), (true, 10));
+    // A corrupt payload is an error, and merges nothing.
+    let err = node.dispatch(delta(8, 2, b"garbage")).unwrap_err();
+    assert!(err.to_string().contains("delta"), "{err:#}");
+    let tenant = node.tenants.get("acme").unwrap();
+    assert_eq!(node.locked(tenant).total_rows, 10);
+}
+
+#[test]
+fn non_ingest_verbs_are_refused_with_a_pointer_at_the_root() {
+    let node = edge("acme", None, "127.0.0.1:1", false, None, test_registry());
+    for req in [
+        proto::Request::Query {
+            scope: Scope::new("acme", ""),
+            spec: crate::server::QuerySpec {
+                k: 2,
+                window: 0,
+                replicates: 1,
+                seed: None,
+                lo: -1.0,
+                hi: 1.0,
+                decoder: String::new(),
+            },
+            method: String::new(),
+            trace: None,
+        },
+        proto::Request::Snapshot {
+            scope: Scope::new("acme", ""),
+            window: 0,
+            method: String::new(),
+            trace: None,
+        },
+        proto::Request::Roll { scope: Scope::new("acme", "") },
+        proto::Request::Stats { scope: Scope::new("acme", "") },
+        proto::Request::Trace { scope: Scope::new("acme", ""), id: None, limit: 0 },
+    ] {
+        let verb = req.verb();
+        let err = node.dispatch(req).unwrap_err();
+        assert!(
+            err.to_string().contains("root server"),
+            "verb {verb}: {err:#}"
+        );
+    }
+}
+
+// ----------------------------------------------------------------- frames
+
+#[test]
+fn handle_answers_garbage_with_an_error_and_rate_limits_ingest() {
+    let clock = Arc::new(FakeClock::new());
+    let registry = Arc::new(Registry::new(clock.clone()));
+    let limit = RateLimit { rate: 10.0, burst: 1.0 };
+    let node = edge("acme", None, "127.0.0.1:1", false, Some(limit), registry);
+    let mut conn = node.new_conn();
+    assert!(conn.bucket.is_some());
+    // Garbage never panics — it answers a decodable error frame.
+    match node.handle(&mut conn, &[0xFF, 0xFE, 0xFD]) {
+        Handled::Reply(bytes) => match proto::decode_response(&bytes).unwrap() {
+            Response::Error(_) => {}
+            other => panic!("expected Error, got {other:?}"),
+        },
+        Handled::Shutdown(_) => panic!("garbage must not shut the node down"),
+    }
+    // Burst 1: the first push is admitted, the second answers Busy with a
+    // retry hint; after the hinted wait the bucket has refilled.
+    let frame = proto::encode_request(&push("acme", "", "s", 1, 1));
+    match node.handle(&mut conn, &frame) {
+        Handled::Reply(bytes) => match proto::decode_response(&bytes).unwrap() {
+            Response::PushAck { .. } => {}
+            other => panic!("expected PushAck, got {other:?}"),
+        },
+        Handled::Shutdown(_) => unreachable!(),
+    }
+    let retry_ms = match node.handle(&mut conn, &frame) {
+        Handled::Reply(bytes) => match proto::decode_response(&bytes).unwrap() {
+            Response::Busy { retry_after_ms, .. } => retry_after_ms,
+            other => panic!("expected Busy, got {other:?}"),
+        },
+        Handled::Shutdown(_) => unreachable!(),
+    };
+    assert!(retry_ms >= 1);
+    clock.advance_ns(retry_ms * 1_000_000);
+    match node.handle(&mut conn, &frame) {
+        Handled::Reply(bytes) => match proto::decode_response(&bytes).unwrap() {
+            Response::PushAck { .. } => {}
+            other => panic!("expected PushAck after refill, got {other:?}"),
+        },
+        Handled::Shutdown(_) => unreachable!(),
+    }
+    // A shutdown frame reaches the Shutdown path, not a reply.
+    let shutdown = proto::encode_request(&proto::Request::Shutdown);
+    assert!(matches!(node.handle(&mut conn, &shutdown), Handled::Shutdown(_)));
+}
+
+// --------------------------------------------------------------- rotation
+
+#[test]
+fn rotation_freezes_one_delta_and_survives_a_dead_upstream() {
+    // Port 1 refuses connections: every flush fails after rotation.
+    let node = edge("acme", None, "127.0.0.1:1", false, None, test_registry());
+    node.dispatch(push("acme", "", "s", 3, 30)).unwrap();
+    let mut clients = BTreeMap::new();
+    let tenant = node.tenants.get("acme").unwrap();
+    assert!(node.flush_tenant("acme", tenant, &mut clients).is_err());
+    {
+        let st = node.locked(tenant);
+        let inflight = st.inflight.as_ref().expect("delta frozen in flight");
+        assert_eq!((inflight.seq, inflight.rows), (1, 3));
+        assert_eq!(st.pending_rows, 0, "rotation drained pending");
+    }
+    // More rows land in the fresh pending pool; a second failed flush
+    // re-sends the SAME frozen delta — it must not rotate a second one
+    // on top (at-least-once needs a stable (seq, bytes) pair).
+    node.dispatch(push("acme", "", "s", 2, 31)).unwrap();
+    assert!(node.flush_tenant("acme", tenant, &mut clients).is_err());
+    let st = node.locked(tenant);
+    assert_eq!(st.inflight.as_ref().map(|i| (i.seq, i.rows)), Some((1, 3)));
+    assert_eq!((st.pending_rows, st.seq), (2, 1));
+}
+
+// ----------------------------------------------------------------- socket
+
+/// One real upstream server: a flush (run in `--replay` fault-injection
+/// mode, so every delta is sent twice) lands the edge's pooled rows, the
+/// duplicate is deduped, and the upstream pool is bit-for-bit the offline
+/// pool of the same rows (I-20/I-21 at module scope).
+#[test]
+fn flush_delivers_rows_upstream_exactly_once_and_bit_exact() {
+    let (meta, op) = op_and_meta();
+    let service = Arc::new(SketchService::new(op, meta, ServiceConfig::default()));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || serve(listener, service).unwrap());
+
+    // A single-tenant edge (empty tenant name), replay injection on.
+    let node = edge("", None, &addr, true, None, test_registry());
+    node.dispatch(push("", "", "s", 3, 40)).unwrap();
+    let mut clients = BTreeMap::new();
+    let tenant = node.tenants.get("").unwrap();
+    node.flush_tenant("", tenant, &mut clients).unwrap();
+    {
+        let st = node.locked(tenant);
+        assert!(st.inflight.is_none(), "acked delta cleared");
+        assert_eq!(st.pending_rows, 0);
+    }
+    // Remainder rows drain on shutdown.
+    node.dispatch(push("", "", "s", 2, 41)).unwrap();
+    node.drained();
+
+    let mut client = crate::server::Client::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.rows_total, 5, "replayed deltas must not double-count");
+    assert_eq!(stats.shards, vec![("edge-1".to_string(), 5)]);
+
+    // Bit-exactness: the upstream snapshot pools the same bits as an
+    // offline encode of the identical rows.
+    let snapshot = client.snapshot(0).unwrap();
+    let (_, upstream_pool, _) = read_sketch_from(&mut &snapshot[..], "snapshot").unwrap();
+    let (_, op2) = op_and_meta();
+    let mut offline = PooledSketch::new(op2.sketch_len());
+    for seed in [40u64, 41] {
+        let n = if seed == 40 { 3 } else { 2 };
+        let batch = Mat::from_vec(n, DIM, rows(n, seed));
+        op2.sketch_into_par(&batch, &mut offline, &Parallelism::serial());
+    }
+    assert_eq!(upstream_pool.count(), offline.count());
+    assert_eq!(upstream_pool.sum(), offline.sum(), "tree != flat — I-20 broken");
+
+    client.shutdown().unwrap();
+    server.join().unwrap();
+}

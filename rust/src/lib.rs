@@ -52,6 +52,7 @@ pub mod coordinator;
 pub mod data;
 pub mod decoder;
 pub mod experiments;
+pub mod fanin;
 pub mod frequency;
 pub mod kmeans;
 pub mod linalg;

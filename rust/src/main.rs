@@ -7,6 +7,8 @@
 //! qckm merge       --out merged.qsk shard0.qsk shard1.qsk …
 //! qckm decode      --sketch merged.qsk --k 10 [--decoder clompr:restarts=5]
 //! qckm serve       --dim 5 --m 1000 --sigma 1.2 --seed 7 [--port 0]
+//! qckm serve       --tenant acme=acme.toml --tenant beta=beta.toml [--rate-limit 100]
+//! qckm aggregate   --upstream host:port --agg-id edge-1 [--tenant name=spec …]
 //! qckm push        --addr host:port --data shard.csv [--shard name] [--retry 8]
 //! qckm query       --addr host:port --k 10 [--window E] [--decoder hier]
 //! qckm snapshot    --addr host:port --out live.qsk [--window E]
@@ -49,8 +51,8 @@ fn main() {
 fn dispatch(args: Vec<String>) -> Result<()> {
     let Some(cmd) = args.first().cloned() else {
         bail!(
-            "usage: qckm <cluster|sketch|merge|decode|serve|push|query|snapshot|ctl|\
-             experiment|pipeline> …  (use --help per command)\n\
+            "usage: qckm <cluster|sketch|merge|decode|serve|aggregate|push|query|snapshot|\
+             ctl|experiment|pipeline> …  (use --help per command)\n\
              see README.md for a tour"
         );
     };
@@ -61,6 +63,7 @@ fn dispatch(args: Vec<String>) -> Result<()> {
         "merge" => cmds::merge::run(rest),
         "decode" => cmds::decode::run(rest),
         "serve" => cmds::serve::run(rest),
+        "aggregate" => cmds::aggregate::run(rest),
         "push" => cmds::push::run(rest),
         "query" => cmds::query::run(rest),
         "snapshot" => cmds::snapshot::run(rest),
@@ -69,8 +72,8 @@ fn dispatch(args: Vec<String>) -> Result<()> {
         "pipeline" => cmds::pipeline::run(rest),
         other => {
             bail!(
-                "unknown command '{other}' (cluster|sketch|merge|decode|serve|push|query|\
-                 snapshot|ctl|experiment|pipeline)"
+                "unknown command '{other}' (cluster|sketch|merge|decode|serve|aggregate|\
+                 push|query|snapshot|ctl|experiment|pipeline)"
             )
         }
     }

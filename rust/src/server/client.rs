@@ -4,7 +4,7 @@
 //! survive server restarts.
 
 use super::proto::{
-    self, CentroidReport, QuerySpec, Request, Response, StatsReport,
+    self, CentroidReport, QuerySpec, Request, Response, Scope, StatsReport,
 };
 use crate::linalg::Mat;
 use crate::obs::log::{self, Level, Value};
@@ -30,6 +30,31 @@ impl fmt::Display for ServerError {
 
 impl std::error::Error for ServerError {}
 
+/// The server shed this request under load (per-connection ingest rate
+/// limit) and told us when to come back. Unlike [`ServerError`] this is
+/// retryable *on the same connection* — the rate bucket is per
+/// connection, so reconnecting would reset it and defeat the limit.
+/// [`RetryClient`] sleeps the hint and re-sends without reconnecting.
+#[derive(Debug)]
+pub struct ServerBusy {
+    /// The server's hint: how long until a token has refilled.
+    pub retry_after: Duration,
+    pub message: String,
+}
+
+impl fmt::Display for ServerBusy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "server busy (retry after {} ms): {}",
+            self.retry_after.as_millis(),
+            self.message
+        )
+    }
+}
+
+impl std::error::Error for ServerBusy {}
+
 /// One connection to a serving node. Requests are strictly sequential
 /// (send, then wait for the reply); open several clients for concurrency —
 /// the server runs one handler thread per connection.
@@ -38,6 +63,10 @@ pub struct Client {
     /// Declared canonical method spec carried on push/query/snapshot
     /// (empty = declare nothing; the server then skips the check).
     method: String,
+    /// Tenant scope (name + token) carried on every scoped request.
+    /// Empty = the server's unnamed default tenant, encoded identically
+    /// to a pre-v6 client's frames.
+    scope: Scope,
     /// When set, every push/query/snapshot carries a fresh trace context
     /// from this generator (`--trace`); the server then records a span
     /// tree retrievable via [`Client::trace`].
@@ -59,6 +88,7 @@ impl Client {
         Ok(Self {
             stream,
             method: String::new(),
+            scope: Scope::default(),
             tracer: None,
             last_trace: None,
         })
@@ -69,6 +99,14 @@ impl Client {
     /// server refuses the request if its operator's method differs.
     pub fn declare_method(mut self, spec: &str) -> Self {
         self.method = spec.to_string();
+        self
+    }
+
+    /// Address a named tenant (with its auth token) on a multi-tenant
+    /// node. Empty tenant + empty token is the default scope — the
+    /// unnamed tenant, no auth.
+    pub fn with_scope(mut self, tenant: &str, token: &str) -> Self {
+        self.scope = Scope::new(tenant, token);
         self
     }
 
@@ -98,6 +136,13 @@ impl Client {
         proto::write_request(&mut self.stream, req)?;
         match proto::read_response(&mut self.stream)? {
             Response::Error(msg) => Err(anyhow::Error::new(ServerError(msg))),
+            Response::Busy {
+                retry_after_ms,
+                message,
+            } => Err(anyhow::Error::new(ServerBusy {
+                retry_after: Duration::from_millis(retry_after_ms),
+                message,
+            })),
             resp => Ok(resp),
         }
     }
@@ -106,6 +151,7 @@ impl Client {
     /// accumulated all-time on the server.
     pub fn push(&mut self, shard: &str, batch: &Mat) -> Result<(u64, u64)> {
         let req = Request::Push {
+            scope: self.scope.clone(),
             shard: shard.to_string(),
             method: self.method.clone(),
             dim: batch.cols() as u32,
@@ -121,9 +167,35 @@ impl Client {
         }
     }
 
+    /// Forward a pre-pooled `.qsk` delta under the (aggregator id,
+    /// instance, sequence) idempotency key. Returns (merged, total rows):
+    /// `merged = false` means the server recognized a replay and dropped
+    /// it — success, not an error.
+    pub fn delta(
+        &mut self,
+        agg_id: &str,
+        instance: u64,
+        seq: u64,
+        sketch: Vec<u8>,
+    ) -> Result<(bool, u64)> {
+        let req = Request::Delta {
+            scope: self.scope.clone(),
+            agg_id: agg_id.to_string(),
+            instance,
+            seq,
+            sketch,
+            trace: self.next_trace(),
+        };
+        match self.call(&req)? {
+            Response::DeltaAck { merged, rows_total } => Ok((merged, rows_total)),
+            other => bail!("unexpected reply to delta: {other:?}"),
+        }
+    }
+
     /// Decode centroids from a window.
     pub fn query(&mut self, spec: &QuerySpec) -> Result<CentroidReport> {
         let req = Request::Query {
+            scope: self.scope.clone(),
             spec: spec.clone(),
             method: self.method.clone(),
             trace: self.next_trace(),
@@ -138,6 +210,7 @@ impl Client {
     /// regular sketch file for `qckm merge` / `qckm decode`).
     pub fn snapshot(&mut self, window: u32) -> Result<Vec<u8>> {
         let req = Request::Snapshot {
+            scope: self.scope.clone(),
             window,
             method: self.method.clone(),
             trace: self.next_trace(),
@@ -150,7 +223,10 @@ impl Client {
 
     /// Close the open epoch. Returns (new epoch index, rows closed).
     pub fn roll(&mut self) -> Result<(u64, u64)> {
-        match self.call(&Request::Roll)? {
+        let req = Request::Roll {
+            scope: self.scope.clone(),
+        };
+        match self.call(&req)? {
             Response::RollAck { epoch, rows_closed } => Ok((epoch, rows_closed)),
             other => bail!("unexpected reply to roll: {other:?}"),
         }
@@ -158,7 +234,10 @@ impl Client {
 
     /// Fetch server counters.
     pub fn stats(&mut self) -> Result<StatsReport> {
-        match self.call(&Request::Stats)? {
+        let req = Request::Stats {
+            scope: self.scope.clone(),
+        };
+        match self.call(&req)? {
             Response::Stats(report) => Ok(report),
             other => bail!("unexpected reply to stats: {other:?}"),
         }
@@ -175,7 +254,12 @@ impl Client {
     /// Fetch recent server-side traces as a JSON document — one trace by
     /// id, or the newest `limit` (0 = the server's default).
     pub fn trace(&mut self, id: Option<[u8; 16]>, limit: u32) -> Result<String> {
-        match self.call(&Request::Trace { id, limit })? {
+        let req = Request::Trace {
+            scope: self.scope.clone(),
+            id,
+            limit,
+        };
+        match self.call(&req)? {
             Response::Traces(json) => Ok(json),
             other => bail!("unexpected reply to trace: {other:?}"),
         }
@@ -235,10 +319,14 @@ impl RetryPolicy {
 /// merged a batch but before the ack arrived, the re-send double-counts
 /// that batch. Application-level refusals ([`ServerError`], e.g. a method
 /// mismatch) fail immediately — the server processed and rejected the
-/// request, so retrying is useless.
+/// request, so retrying is useless. [`ServerBusy`] (rate-limited) is the
+/// third case: retried after sleeping the server's hint, *keeping* the
+/// connection — the rate bucket is per connection and a reconnect would
+/// reset it.
 pub struct RetryClient {
     addr: String,
     method: String,
+    scope: Scope,
     policy: RetryPolicy,
     /// When true, every (re)connected inner client traces its requests
     /// through a fresh [`ProcessIdGen`] (each retry attempt is a
@@ -260,6 +348,7 @@ impl RetryClient {
         let mut rc = RetryClient {
             addr: addr.to_string(),
             method: method.to_string(),
+            scope: Scope::default(),
             policy,
             tracing: false,
             inner: None,
@@ -268,6 +357,15 @@ impl RetryClient {
         };
         rc.with_retry(|_| Ok(()))?;
         Ok(rc)
+    }
+
+    /// Address a named tenant (see [`Client::with_scope`]). Applies to
+    /// the current connection and every reconnect.
+    pub fn set_scope(&mut self, tenant: &str, token: &str) {
+        self.scope = Scope::new(tenant, token);
+        if let Some(c) = self.inner.take() {
+            self.inner = Some(c.with_scope(tenant, token));
+        }
     }
 
     /// Trace every subsequent push (`qckm push --trace`). Applies to the
@@ -303,6 +401,9 @@ impl RetryClient {
             if !self.method.is_empty() {
                 c = c.declare_method(&self.method);
             }
+            if !self.scope.is_empty() {
+                c = c.with_scope(&self.scope.tenant, &self.scope.token);
+            }
             if self.tracing {
                 c = c.with_tracing(Box::new(ProcessIdGen::new()));
             }
@@ -312,23 +413,35 @@ impl RetryClient {
     }
 
     /// Run `op` against a (re)connected client, retrying transport errors
-    /// per the policy.
+    /// (reconnecting) and busy refusals (sleeping the server's hint on
+    /// the same connection) per the policy.
     fn with_retry<T>(&mut self, op: impl Fn(&mut Client) -> Result<T>) -> Result<T> {
         let mut attempt = 0u32;
         loop {
             match self.client().and_then(&op) {
                 Ok(v) => return Ok(v),
                 Err(e) => {
-                    // The connection may be mid-frame or half-dead: never
-                    // reuse it after any failure.
-                    self.inner = None;
-                    if e.downcast_ref::<ServerError>().is_some() || attempt >= self.policy.attempts
-                    {
+                    let busy_hint = e.downcast_ref::<ServerBusy>().map(|b| b.retry_after);
+                    if busy_hint.is_none() {
+                        // The connection may be mid-frame or half-dead:
+                        // never reuse it after a non-busy failure. (A busy
+                        // refusal left the connection healthy — the frame
+                        // was consumed, the reply read — and the rate
+                        // bucket it drew from is per connection.)
+                        self.inner = None;
+                    }
+                    let fatal = busy_hint.is_none() && e.downcast_ref::<ServerError>().is_some();
+                    if fatal || attempt >= self.policy.attempts {
                         return Err(e).with_context(|| {
                             format!("giving up on {} after {} attempt(s)", self.addr, attempt + 1)
                         });
                     }
-                    let delay = self.policy.delay(attempt);
+                    let delay = match busy_hint {
+                        // Honor the server's hint (one token's refill
+                        // time), bounded by the policy's ceiling.
+                        Some(hint) => hint.min(self.policy.cap).max(Duration::from_millis(1)),
+                        None => self.policy.delay(attempt),
+                    };
                     attempt += 1;
                     self.attempts_total += 1;
                     self.backoff_total += delay;
@@ -360,5 +473,18 @@ impl RetryClient {
     /// [`Client::push`] with reconnect-and-resend on transport errors.
     pub fn push(&mut self, shard: &str, batch: &Mat) -> Result<(u64, u64)> {
         self.with_retry(|c| c.push(shard, batch))
+    }
+
+    /// [`Client::delta`] with reconnect-and-resend. Safe to re-send
+    /// blind: the (agg_id, instance, seq) key makes the merge idempotent
+    /// — a replay of an already-merged delta acks `merged = false`.
+    pub fn delta(
+        &mut self,
+        agg_id: &str,
+        instance: u64,
+        seq: u64,
+        sketch: &[u8],
+    ) -> Result<(bool, u64)> {
+        self.with_retry(|c| c.delta(agg_id, instance, seq, sketch.to_vec()))
     }
 }

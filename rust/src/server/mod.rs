@@ -13,6 +13,14 @@
 //!   per-request span trees as JSON (see [`crate::obs::trace`]). Since
 //!   v5, push/query/snapshot can carry an optional client-generated
 //!   trace context; v4 clients are still decoded and answered at v4.
+//!   Since v6, frames can carry a *scope* (tenant name + auth token), a
+//!   `delta` verb merges pre-pooled `.qsk` payloads idempotently, and a
+//!   `busy` status carries a retry-after hint.
+//! * [`tenants`] — the multi-tenant [`Node`]: several named
+//!   [`SketchService`]s behind one listener, each its own operator draw
+//!   and state, with constant-time token auth and per-connection
+//!   token-bucket ingest rate limits. `crate::fanin` builds the fan-in
+//!   aggregator tier on the same frame-handler machinery.
 //! * [`SketchService`] — the shared server state: one accumulator per
 //!   *shard* (the client-chosen partition label), a ring of per-epoch
 //!   windows so queries can ask for "the last E epochs" as well as
@@ -53,11 +61,15 @@ pub mod client;
 pub mod proto;
 mod service;
 mod state;
+pub mod tenants;
 
-pub use client::{Client, RetryClient, RetryPolicy, ServerError};
-pub use proto::{CentroidReport, QuerySpec, Request, Response, StatsReport};
-pub use service::serve;
+pub(crate) use service::{encode_reply, reply_version, serve_handler, ConnCtx, FrameHandler, Handled};
+
+pub use client::{Client, RetryClient, RetryPolicy, ServerBusy, ServerError};
+pub use proto::{CentroidReport, QuerySpec, Request, Response, Scope, StatsReport};
+pub use service::{serve, serve_node};
 pub use state::{ServiceConfig, SketchService, WindowPool};
+pub use tenants::{Node, RateLimit};
 
 #[cfg(test)]
 mod tests;

@@ -32,13 +32,24 @@ use std::io::{Read, Write};
 /// optional trace-context extension on push/query/snapshot (a trailing
 /// presence byte plus 16-byte trace id and 8-byte parent span id) and
 /// the trace verb (`qckm ctl trace`, a JSON response of recent
-/// server-side span trees).
+/// server-side span trees). Version 6 added the tenant scope block (a
+/// tenant name + auth token addressing one of several named sketches
+/// hosted by a multi-tenant server) on push/query/snapshot/roll/stats/
+/// trace, the delta verb (an aggregator forwarding a merged `.qsk` pool
+/// upstream with an idempotency key, see `crate::fanin`), the busy
+/// status (a typed overload refusal carrying a retry-after hint the
+/// retrying client sleeps on), and per-tenant occupancy in the stats
+/// report.
 ///
-/// Unlike earlier bumps, v5 keeps v4 decodable: this build *accepts*
+/// Unlike pre-v5 bumps, v5/v6 keep v4 decodable: this build *accepts*
 /// versions [`MIN_PROTO_VERSION`]..=[`PROTO_VERSION`] and replies to
-/// each request at the version the request arrived in, so pre-v5
-/// clients are served identically (INVARIANTS.md I-19).
-pub const PROTO_VERSION: u8 = 5;
+/// each request at the version the request arrived in, so pre-v6
+/// clients are served identically (INVARIANTS.md I-19). Requests that
+/// *carry* v6 content (a non-empty scope, the delta verb) refuse to
+/// encode at lower versions instead of silently dropping it; the v6
+/// stats extension fields are informational and are omitted, not
+/// refused, in replies to older clients.
+pub const PROTO_VERSION: u8 = 6;
 /// Oldest protocol version this build still decodes (see
 /// [`PROTO_VERSION`]). Requests below it are refused with a version
 /// error, exactly as before.
@@ -87,18 +98,57 @@ pub const MAX_TRACE_BYTES: usize = 1 << 22;
 /// Ceiling on the `limit` field of a trace request — far above any real
 /// ring capacity, small enough to be an obvious plausibility bound.
 pub const MAX_TRACE_LIMIT: u32 = 1 << 16;
+/// Ceiling on a tenant name's bytes. Tenant names also double as the
+/// bounded `tenant` metric label, so they are further validated (charset
+/// and declaration-time registration) above the wire layer.
+pub const MAX_TENANT_BYTES: usize = 64;
+/// Ceiling on an auth token's bytes carried in the v6 scope block.
+pub const MAX_TOKEN_BYTES: usize = 128;
+/// Ceiling on the `.qsk` payload of one delta frame — a merged pool plus
+/// provenance, same bound as a snapshot body.
+pub const MAX_DELTA_BYTES: usize = MAX_FRAME_BYTES / 2;
 
-const TAG_PUSH: u8 = 1;
-const TAG_QUERY: u8 = 2;
-const TAG_SNAPSHOT: u8 = 3;
-const TAG_ROLL: u8 = 4;
-const TAG_STATS: u8 = 5;
-const TAG_SHUTDOWN: u8 = 6;
-const TAG_METRICS: u8 = 7;
-const TAG_TRACE: u8 = 8;
+pub(crate) const TAG_PUSH: u8 = 1;
+pub(crate) const TAG_QUERY: u8 = 2;
+pub(crate) const TAG_SNAPSHOT: u8 = 3;
+pub(crate) const TAG_ROLL: u8 = 4;
+pub(crate) const TAG_STATS: u8 = 5;
+pub(crate) const TAG_SHUTDOWN: u8 = 6;
+pub(crate) const TAG_METRICS: u8 = 7;
+pub(crate) const TAG_TRACE: u8 = 8;
+pub(crate) const TAG_DELTA: u8 = 9;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
+const STATUS_BUSY: u8 = 2;
+
+/// The v6 tenant scope: which named sketch a request addresses, and the
+/// auth token presented for it. An all-empty scope is the wire form of
+/// "the server's default tenant, no token" — exactly what pre-v6 frames
+/// decode to, so a single-tenant server serves old and new clients
+/// identically.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Scope {
+    /// Tenant name; empty = the server's default tenant.
+    pub tenant: String,
+    /// Auth token; empty = none presented.
+    pub token: String,
+}
+
+impl Scope {
+    /// A scope addressing `tenant` with `token` (either may be empty).
+    pub fn new(tenant: impl Into<String>, token: impl Into<String>) -> Self {
+        Self {
+            tenant: tenant.into(),
+            token: token.into(),
+        }
+    }
+
+    /// Whether this scope carries nothing — encodable at any version.
+    pub fn is_empty(&self) -> bool {
+        self.tenant.is_empty() && self.token.is_empty()
+    }
+}
 
 /// A decode query: how many centroids, over which window, with which
 /// decoder configuration.
@@ -143,7 +193,9 @@ pub struct CentroidReport {
     pub cached: bool,
 }
 
-/// Server counters returned by a stats request.
+/// Server counters returned by a stats request. The `tenant` and
+/// `tenants` fields are v6 extensions: informational, omitted (not
+/// refused) when the reply encodes at v4/v5.
 #[derive(Clone, Debug, PartialEq)]
 pub struct StatsReport {
     /// The server operator's canonical method spec.
@@ -166,6 +218,13 @@ pub struct StatsReport {
     /// stable spec order — the "active decoder(s)" view, so centroid-cache
     /// effectiveness per algorithm is observable from `qckm ctl stats`.
     pub decoders: Vec<(String, u64)>,
+    /// The tenant this report describes; empty on a single-tenant server
+    /// and in every pre-v6 reply.
+    pub tenant: String,
+    /// Per-tenant occupancy across the whole server, in stable name
+    /// order: `(tenant, all-time rows, shard slots used)`. Empty on a
+    /// single-tenant server and in every pre-v6 reply.
+    pub tenants: Vec<(String, u64, u64)>,
 }
 
 /// Client → server messages.
@@ -180,6 +239,7 @@ pub enum Request {
     /// Ingest a row batch into `shard`'s accumulator (`rows × dim`,
     /// row-major).
     Push {
+        scope: Scope,
         shard: String,
         method: String,
         dim: u32,
@@ -189,6 +249,7 @@ pub enum Request {
     },
     /// Decode centroids from a window.
     Query {
+        scope: Scope,
         spec: QuerySpec,
         method: String,
         /// Optional v5 trace context; `None` on the wire at v4.
@@ -196,22 +257,45 @@ pub enum Request {
     },
     /// Serialize a window as `.qsk` bytes.
     Snapshot {
+        scope: Scope,
         window: u32,
         method: String,
         /// Optional v5 trace context; `None` on the wire at v4.
         trace: Option<TraceContext>,
     },
     /// Close the open epoch and start a new one.
-    Roll,
+    Roll { scope: Scope },
     /// Report counters.
-    Stats,
+    Stats { scope: Scope },
     /// Render the server's metrics registry as a Prometheus text page.
     Metrics,
     /// Fetch recent server-side traces as JSON: one by id, or the
     /// newest `limit` (0 = the server's default). v5 only.
     Trace {
+        scope: Scope,
         id: Option<[u8; 16]>,
         limit: u32,
+    },
+    /// Merge an aggregator's pre-pooled `.qsk` delta (see `crate::fanin`).
+    /// Idempotency key: `(agg_id, instance, seq)` — the parent admits a
+    /// delta only when `seq` advances past the last admitted sequence for
+    /// this `agg_id`'s current `instance`, so the retrying flush link may
+    /// replay a delta without double-counting (INVARIANTS.md I-21).
+    /// v6 only.
+    Delta {
+        scope: Scope,
+        /// The aggregator's identity; doubles as the server-side shard
+        /// label prefix for the merged rows.
+        agg_id: String,
+        /// Startup nonce — a restarted aggregator gets a fresh instance,
+        /// which resets its sequence tracking upstream.
+        instance: u64,
+        /// Flush sequence number, strictly increasing per instance.
+        seq: u64,
+        /// A full `.qsk` byte stream (meta + pooled sums + provenance).
+        sketch: Vec<u8>,
+        /// Optional trace context.
+        trace: Option<TraceContext>,
     },
     /// Stop the server (responds before exiting).
     Shutdown,
@@ -225,22 +309,39 @@ impl Request {
             Request::Push { .. } => "push",
             Request::Query { .. } => "query",
             Request::Snapshot { .. } => "snapshot",
-            Request::Roll => "roll",
-            Request::Stats => "stats",
+            Request::Roll { .. } => "roll",
+            Request::Stats { .. } => "stats",
             Request::Metrics => "metrics",
             Request::Trace { .. } => "trace",
+            Request::Delta { .. } => "delta",
             Request::Shutdown => "shutdown",
         }
     }
 
     /// The trace context carried by this request, if any (only
-    /// push/query/snapshot can carry one).
+    /// push/query/snapshot/delta can carry one).
     pub fn trace_context(&self) -> Option<TraceContext> {
         match self {
             Request::Push { trace, .. }
             | Request::Query { trace, .. }
-            | Request::Snapshot { trace, .. } => *trace,
+            | Request::Snapshot { trace, .. }
+            | Request::Delta { trace, .. } => *trace,
             _ => None,
+        }
+    }
+
+    /// The tenant scope this request addresses, if the verb is scoped
+    /// (metrics and shutdown are server-wide).
+    pub fn scope(&self) -> Option<&Scope> {
+        match self {
+            Request::Push { scope, .. }
+            | Request::Query { scope, .. }
+            | Request::Snapshot { scope, .. }
+            | Request::Roll { scope }
+            | Request::Stats { scope }
+            | Request::Trace { scope, .. }
+            | Request::Delta { scope, .. } => Some(scope),
+            Request::Metrics | Request::Shutdown => None,
         }
     }
 }
@@ -250,6 +351,16 @@ impl Request {
 pub enum Response {
     /// The request failed; human-readable reason.
     Error(String),
+    /// The server is shedding load (rate limit or ingest backpressure):
+    /// retry the same request after the hinted delay. Encodes as its own
+    /// status byte at v6; for pre-v6 clients it degrades to a plain
+    /// error carrying the same hint in text.
+    Busy {
+        /// How long the client should wait before retrying.
+        retry_after_ms: u64,
+        /// Human-readable reason (which limiter fired).
+        message: String,
+    },
     /// Push accepted: the shard's all-time rows and the server's total.
     PushAck { shard_rows: u64, total_rows: u64 },
     /// Query result.
@@ -263,6 +374,10 @@ pub enum Response {
     Metrics(String),
     /// A JSON document of recent traces (`{"traces":[…]}`). v5 only.
     Traces(String),
+    /// A delta was processed: whether it was merged (`false` = recognized
+    /// replay, dropped idempotently) and the tenant's all-time rows after
+    /// the call. v6 only.
+    DeltaAck { merged: bool, rows_total: u64 },
     ShutdownAck,
 }
 
@@ -343,7 +458,9 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
 
 /// Serialize a request payload at a specific protocol version. Fails
 /// when the request needs a capability the version lacks: at v4 that is
-/// a carried trace context or the trace verb.
+/// a carried trace context or the trace verb; below v6 it is a
+/// non-empty tenant scope or the delta verb — refusing beats silently
+/// dropping the tenant address and pooling into the wrong sketch.
 pub fn encode_request_v(req: &Request, version: u8) -> Result<Vec<u8>> {
     if !version_supported(version) {
         bail!("cannot encode protocol version {version} (this build speaks {MIN_PROTO_VERSION}..={PROTO_VERSION})");
@@ -351,9 +468,13 @@ pub fn encode_request_v(req: &Request, version: u8) -> Result<Vec<u8>> {
     if version < 5 && req.trace_context().is_some() {
         bail!("trace context needs proto v5 (asked to encode v{version})");
     }
+    if version < 6 && req.scope().is_some_and(|s| !s.is_empty()) {
+        bail!("tenant scope needs proto v6 (asked to encode v{version})");
+    }
     let mut b = vec![version];
     match req {
         Request::Push {
+            scope,
             shard,
             method,
             dim,
@@ -361,6 +482,7 @@ pub fn encode_request_v(req: &Request, version: u8) -> Result<Vec<u8>> {
             trace,
         } => {
             b.push(TAG_PUSH);
+            put_scope(&mut b, scope, version);
             put_str(&mut b, shard);
             put_str(&mut b, method);
             b.extend_from_slice(&dim.to_le_bytes());
@@ -370,8 +492,14 @@ pub fn encode_request_v(req: &Request, version: u8) -> Result<Vec<u8>> {
             }
             put_trace(&mut b, trace, version);
         }
-        Request::Query { spec: q, method, trace } => {
+        Request::Query {
+            scope,
+            spec: q,
+            method,
+            trace,
+        } => {
             b.push(TAG_QUERY);
+            put_scope(&mut b, scope, version);
             put_str(&mut b, method);
             b.extend_from_slice(&q.k.to_le_bytes());
             b.extend_from_slice(&q.window.to_le_bytes());
@@ -383,25 +511,58 @@ pub fn encode_request_v(req: &Request, version: u8) -> Result<Vec<u8>> {
             put_str(&mut b, &q.decoder);
             put_trace(&mut b, trace, version);
         }
-        Request::Snapshot { window, method, trace } => {
+        Request::Snapshot {
+            scope,
+            window,
+            method,
+            trace,
+        } => {
             b.push(TAG_SNAPSHOT);
+            put_scope(&mut b, scope, version);
             put_str(&mut b, method);
             b.extend_from_slice(&window.to_le_bytes());
             put_trace(&mut b, trace, version);
         }
-        Request::Roll => b.push(TAG_ROLL),
-        Request::Stats => b.push(TAG_STATS),
+        Request::Roll { scope } => {
+            b.push(TAG_ROLL);
+            put_scope(&mut b, scope, version);
+        }
+        Request::Stats { scope } => {
+            b.push(TAG_STATS);
+            put_scope(&mut b, scope, version);
+        }
         Request::Metrics => b.push(TAG_METRICS),
-        Request::Trace { id, limit } => {
+        Request::Trace { scope, id, limit } => {
             if version < 5 {
                 bail!("the trace verb needs proto v5 (asked to encode v{version})");
             }
             b.push(TAG_TRACE);
+            put_scope(&mut b, scope, version);
             b.push(id.is_some() as u8);
             if let Some(id) = id {
                 b.extend_from_slice(id);
             }
             b.extend_from_slice(&limit.to_le_bytes());
+        }
+        Request::Delta {
+            scope,
+            agg_id,
+            instance,
+            seq,
+            sketch,
+            trace,
+        } => {
+            if version < 6 {
+                bail!("the delta verb needs proto v6 (asked to encode v{version})");
+            }
+            b.push(TAG_DELTA);
+            put_scope(&mut b, scope, version);
+            put_str(&mut b, agg_id);
+            b.extend_from_slice(&instance.to_le_bytes());
+            b.extend_from_slice(&seq.to_le_bytes());
+            b.extend_from_slice(&(sketch.len() as u64).to_le_bytes());
+            b.extend_from_slice(sketch);
+            put_trace(&mut b, trace, version);
         }
         Request::Shutdown => b.push(TAG_SHUTDOWN),
     }
@@ -424,6 +585,7 @@ pub fn decode_request_v(payload: &[u8]) -> Result<(u8, Request)> {
     }
     let req = match r.u8()? {
         TAG_PUSH => {
+            let scope = take_scope(&mut r, version)?;
             let shard = r.str(MAX_SHARD_BYTES)?;
             if shard.is_empty() {
                 bail!("push: empty shard label");
@@ -450,6 +612,7 @@ pub fn decode_request_v(payload: &[u8]) -> Result<(u8, Request)> {
             let data = r.f64_vec(len)?;
             let trace = take_trace(&mut r, version)?;
             Request::Push {
+                scope,
                 shard,
                 method,
                 dim,
@@ -458,6 +621,7 @@ pub fn decode_request_v(payload: &[u8]) -> Result<(u8, Request)> {
             }
         }
         TAG_QUERY => {
+            let scope = take_scope(&mut r, version)?;
             let method = r.str(MAX_METHOD_BYTES)?;
             let k = r.u32()?;
             let window = r.u32()?;
@@ -469,6 +633,7 @@ pub fn decode_request_v(payload: &[u8]) -> Result<(u8, Request)> {
             let decoder = r.str(MAX_DECODER_BYTES)?;
             let trace = take_trace(&mut r, version)?;
             Request::Query {
+                scope,
                 spec: QuerySpec {
                     k,
                     window,
@@ -483,18 +648,29 @@ pub fn decode_request_v(payload: &[u8]) -> Result<(u8, Request)> {
             }
         }
         TAG_SNAPSHOT => {
+            let scope = take_scope(&mut r, version)?;
             let method = r.str(MAX_METHOD_BYTES)?;
             let window = r.u32()?;
             let trace = take_trace(&mut r, version)?;
-            Request::Snapshot { method, window, trace }
+            Request::Snapshot {
+                scope,
+                method,
+                window,
+                trace,
+            }
         }
-        TAG_ROLL => Request::Roll,
-        TAG_STATS => Request::Stats,
+        TAG_ROLL => Request::Roll {
+            scope: take_scope(&mut r, version)?,
+        },
+        TAG_STATS => Request::Stats {
+            scope: take_scope(&mut r, version)?,
+        },
         TAG_METRICS => Request::Metrics,
         TAG_TRACE => {
             if version < 5 {
                 bail!("the trace verb needs proto v5 (frame declares v{version})");
             }
+            let scope = take_scope(&mut r, version)?;
             let has_id = r.u8()? != 0;
             let id = if has_id {
                 let mut id = [0u8; 16];
@@ -507,7 +683,36 @@ pub fn decode_request_v(payload: &[u8]) -> Result<(u8, Request)> {
             if limit > MAX_TRACE_LIMIT {
                 bail!("implausible trace limit {limit}");
             }
-            Request::Trace { id, limit }
+            Request::Trace { scope, id, limit }
+        }
+        TAG_DELTA => {
+            if version < 6 {
+                bail!("the delta verb needs proto v6 (frame declares v{version})");
+            }
+            let scope = take_scope(&mut r, version)?;
+            let agg_id = r.str(MAX_SHARD_BYTES)?;
+            if agg_id.is_empty() {
+                bail!("delta: empty aggregator id");
+            }
+            let instance = r.u64()?;
+            let seq = r.u64()?;
+            let len = r.u64()? as usize;
+            if len == 0 {
+                bail!("delta: empty sketch payload");
+            }
+            if len > MAX_DELTA_BYTES {
+                bail!("delta: sketch payload of {len} bytes exceeds the {MAX_DELTA_BYTES}-byte cap");
+            }
+            let sketch = r.bytes(len)?;
+            let trace = take_trace(&mut r, version)?;
+            Request::Delta {
+                scope,
+                agg_id,
+                instance,
+                seq,
+                sketch,
+                trace,
+            }
         }
         TAG_SHUTDOWN => Request::Shutdown,
         tag => bail!("unknown request tag {tag}"),
@@ -528,6 +733,69 @@ fn put_trace(b: &mut Vec<u8>, trace: &Option<TraceContext>, version: u8) {
         b.extend_from_slice(&t.trace_id);
         b.extend_from_slice(&t.parent_span);
     }
+}
+
+/// The tag byte of a request payload (`payload[1]`), if present. Lets
+/// the multi-tenant router classify a frame (ingest? metrics? stats?)
+/// without decoding the body.
+pub(crate) fn payload_tag(payload: &[u8]) -> Option<u8> {
+    payload.get(1).copied()
+}
+
+/// Whether this payload is an ingest frame (push or delta) — the verbs
+/// the per-connection token-bucket rate limit applies to. Cheap: reads
+/// two bytes, never allocates, so an overloaded node can shed the frame
+/// before paying for a decode.
+pub(crate) fn payload_is_ingest(payload: &[u8]) -> bool {
+    matches!(payload_tag(payload), Some(TAG_PUSH) | Some(TAG_DELTA))
+}
+
+/// Peek the tenant scope of a request payload without a full decode —
+/// the multi-tenant router reads it to pick the target service, then the
+/// chosen service decodes the frame once. Anything that prevents a clean
+/// peek (pre-v6 frame, unscoped verb, malformed block) yields the empty
+/// scope: the request then routes to the default tenant, whose full
+/// decode reports the real error.
+pub(crate) fn peek_scope(payload: &[u8]) -> Scope {
+    let Some(&version) = payload.first() else {
+        return Scope::default();
+    };
+    if version < 6 || !version_supported(version) {
+        return Scope::default();
+    }
+    match payload_tag(payload) {
+        Some(TAG_PUSH) | Some(TAG_QUERY) | Some(TAG_SNAPSHOT) | Some(TAG_ROLL)
+        | Some(TAG_STATS) | Some(TAG_TRACE) | Some(TAG_DELTA) => {
+            let mut r = ByteReader::new(&payload[2..]);
+            match (r.str(MAX_TENANT_BYTES), r.str(MAX_TOKEN_BYTES)) {
+                (Ok(tenant), Ok(token)) => Scope { tenant, token },
+                _ => Scope::default(),
+            }
+        }
+        _ => Scope::default(),
+    }
+}
+
+/// Append the v6 tenant-scope block: two strings (tenant, token)
+/// immediately after the tag of every scoped verb. Below v6 nothing is
+/// written — the caller already refused a non-empty scope there.
+fn put_scope(b: &mut Vec<u8>, scope: &Scope, version: u8) {
+    if version < 6 {
+        return;
+    }
+    put_str(b, &scope.tenant);
+    put_str(b, &scope.token);
+}
+
+/// Read the v6 tenant-scope block (absent entirely below v6, which
+/// decodes to the empty scope — the default tenant, no token).
+fn take_scope(r: &mut ByteReader<'_>, version: u8) -> Result<Scope> {
+    if version < 6 {
+        return Ok(Scope::default());
+    }
+    let tenant = r.str(MAX_TENANT_BYTES)?;
+    let token = r.str(MAX_TOKEN_BYTES)?;
+    Ok(Scope { tenant, token })
 }
 
 /// Read the v5 trace-context block (absent entirely at v4).
@@ -552,8 +820,12 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
 
 /// Serialize a response payload at a specific protocol version — the
 /// server answers every request at the version it arrived in. Fails for
-/// v5-only content at v4 (a traces response), which cannot arise from a
-/// well-formed v4 request.
+/// v5-only content at v4 (a traces response) and v6-only content below
+/// v6 (a delta ack), neither of which can arise from a well-formed
+/// older request. A busy response *degrades* below v6 — pre-v6 clients
+/// must still hear about overload, so they get a plain error carrying
+/// the hint in text. The v6 stats extension fields are informational
+/// and are simply omitted below v6.
 pub fn encode_response_v(resp: &Response, version: u8) -> Result<Vec<u8>> {
     if !version_supported(version) {
         bail!("cannot encode protocol version {version} (this build speaks {MIN_PROTO_VERSION}..={PROTO_VERSION})");
@@ -563,11 +835,32 @@ pub fn encode_response_v(resp: &Response, version: u8) -> Result<Vec<u8>> {
             bail!("a traces response needs proto v5 (asked to encode v{version})");
         }
     }
+    if version < 6 {
+        if let Response::DeltaAck { .. } = resp {
+            bail!("a delta ack needs proto v6 (asked to encode v{version})");
+        }
+    }
     let mut b = vec![version];
     match resp {
         Response::Error(msg) => {
             b.push(STATUS_ERR);
             put_str(&mut b, &truncate_to(msg, MAX_ERROR_BYTES));
+        }
+        Response::Busy {
+            retry_after_ms,
+            message,
+        } => {
+            if version < 6 {
+                // Degrade, don't refuse: an old client must still learn
+                // it was shed. The hint survives in text only.
+                b.push(STATUS_ERR);
+                let msg = format!("server busy (retry after {retry_after_ms} ms): {message}");
+                put_str(&mut b, &truncate_to(&msg, MAX_ERROR_BYTES));
+            } else {
+                b.push(STATUS_BUSY);
+                b.extend_from_slice(&retry_after_ms.to_le_bytes());
+                put_str(&mut b, &truncate_to(message, MAX_ERROR_BYTES));
+            }
         }
         Response::PushAck {
             shard_rows,
@@ -626,6 +919,15 @@ pub fn encode_response_v(resp: &Response, version: u8) -> Result<Vec<u8>> {
                 put_str(&mut b, spec);
                 b.extend_from_slice(&queries.to_le_bytes());
             }
+            if version >= 6 {
+                put_str(&mut b, &s.tenant);
+                b.extend_from_slice(&(s.tenants.len() as u32).to_le_bytes());
+                for (name, rows, shards) in &s.tenants {
+                    put_str(&mut b, name);
+                    b.extend_from_slice(&rows.to_le_bytes());
+                    b.extend_from_slice(&shards.to_le_bytes());
+                }
+            }
         }
         Response::Metrics(page) => {
             b.push(STATUS_OK);
@@ -636,6 +938,12 @@ pub fn encode_response_v(resp: &Response, version: u8) -> Result<Vec<u8>> {
             b.push(STATUS_OK);
             b.push(TAG_TRACE);
             put_str(&mut b, &truncate_to(json, MAX_TRACE_BYTES));
+        }
+        Response::DeltaAck { merged, rows_total } => {
+            b.push(STATUS_OK);
+            b.push(TAG_DELTA);
+            b.push(*merged as u8);
+            b.extend_from_slice(&rows_total.to_le_bytes());
         }
         Response::ShutdownAck => {
             b.push(STATUS_OK);
@@ -657,6 +965,18 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
         let msg = r.str(MAX_ERROR_BYTES)?;
         r.finish()?;
         return Ok(Response::Error(msg));
+    }
+    if status == STATUS_BUSY {
+        if version < 6 {
+            bail!("the busy status needs proto v6 (frame declares v{version})");
+        }
+        let retry_after_ms = r.u64()?;
+        let message = r.str(MAX_ERROR_BYTES)?;
+        r.finish()?;
+        return Ok(Response::Busy {
+            retry_after_ms,
+            message,
+        });
     }
     if status != STATUS_OK {
         bail!("unknown response status {status}");
@@ -725,6 +1045,23 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
                 let queries = r.u64()?;
                 decoders.push((spec, queries));
             }
+            let (tenant, tenants) = if version >= 6 {
+                let tenant = r.str(MAX_TENANT_BYTES)?;
+                let nt = r.u32()? as usize;
+                if nt > 1 << 16 {
+                    bail!("implausible tenant count {nt}");
+                }
+                let mut tenants = Vec::with_capacity(nt);
+                for _ in 0..nt {
+                    let name = r.str(MAX_TENANT_BYTES)?;
+                    let rows = r.u64()?;
+                    let shards = r.u64()?;
+                    tenants.push((name, rows, shards));
+                }
+                (tenant, tenants)
+            } else {
+                (String::new(), Vec::new())
+            };
             Response::Stats(StatsReport {
                 method,
                 epoch,
@@ -735,6 +1072,8 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
                 cache_misses,
                 shards,
                 decoders,
+                tenant,
+                tenants,
             })
         }
         TAG_METRICS => Response::Metrics(r.str(MAX_METRICS_BYTES)?),
@@ -743,6 +1082,15 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
                 bail!("a traces response needs proto v5 (frame declares v{version})");
             }
             Response::Traces(r.str(MAX_TRACE_BYTES)?)
+        }
+        TAG_DELTA => {
+            if version < 6 {
+                bail!("a delta ack needs proto v6 (frame declares v{version})");
+            }
+            Response::DeltaAck {
+                merged: r.u8()? != 0,
+                rows_total: r.u64()?,
+            }
         }
         TAG_SHUTDOWN => Response::ShutdownAck,
         tag => bail!("unknown response tag {tag}"),

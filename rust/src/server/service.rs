@@ -25,9 +25,49 @@ use std::time::Duration;
 /// How often a blocked handler read re-checks the shutdown flag.
 const POLL_INTERVAL: Duration = Duration::from_millis(200);
 
+/// Per-connection state a [`FrameHandler`] threads through a connection's
+/// lifetime. Today that is the ingest rate bucket: rate limits are per
+/// connection (reconnecting resets the bucket), so the bucket lives here
+/// rather than on the handler.
+pub(crate) struct ConnCtx {
+    pub(crate) bucket: Option<super::tenants::TokenBucket>,
+}
+
+/// What the accept loop serves: anything that can turn one request
+/// payload into a reply frame. The single- and multi-tenant servers
+/// ([`super::tenants::Node`]) and the fan-in aggregator
+/// (`crate::fanin::AggregatorNode`) all plug in here, sharing the
+/// accept/read/shutdown machinery.
+pub(crate) trait FrameHandler: Send + Sync {
+    /// Called once per accepted connection.
+    fn new_conn(&self) -> ConnCtx;
+    /// Handle one length-prefixed payload.
+    fn handle(&self, conn: &mut ConnCtx, payload: &[u8]) -> Handled;
+    /// Called after the accept loop has stopped and every connection
+    /// handler has been joined — the drain hook (aggregators flush
+    /// pending deltas upstream here).
+    fn drained(&self) {}
+}
+
 /// Run the service on an already-bound listener until a shutdown request
 /// arrives. Returns the number of connections served.
 pub fn serve(listener: TcpListener, service: Arc<SketchService>) -> Result<u64> {
+    serve_handler(listener, Arc::new(super::tenants::Node::single(service)))
+}
+
+/// Run a multi-tenant node on an already-bound listener until a shutdown
+/// request arrives. Returns the number of connections served.
+pub fn serve_node(listener: TcpListener, node: Arc<super::tenants::Node>) -> Result<u64> {
+    serve_handler(listener, node)
+}
+
+/// The generalized accept loop: one handler thread per connection, each
+/// frame answered by `handler`, cooperative shutdown, drain hook after
+/// the last connection is joined.
+pub(crate) fn serve_handler<H: FrameHandler + 'static>(
+    listener: TcpListener,
+    handler: Arc<H>,
+) -> Result<u64> {
     let addr = listener.local_addr().context("listener address")?;
     let stop = Arc::new(AtomicBool::new(false));
     let mut handlers = Vec::new();
@@ -47,14 +87,14 @@ pub fn serve(listener: TcpListener, service: Arc<SketchService>) -> Result<u64> 
         // Reap finished handlers so a long-lived server taking many
         // short-lived connections does not grow this Vec without bound.
         handlers.retain(|h| !h.is_finished());
-        let service = Arc::clone(&service);
+        let handler = Arc::clone(&handler);
         let stop = Arc::clone(&stop);
         handlers.push(std::thread::spawn(move || {
             let peer = stream
                 .peer_addr()
                 .map(|a| a.to_string())
                 .unwrap_or_else(|_| "?".into());
-            if let Err(e) = handle_connection(stream, &service, &stop, addr) {
+            if let Err(e) = handle_connection(stream, &*handler, &stop, addr) {
                 eprintln!("connection {peer}: {e:#}");
             }
         }));
@@ -62,13 +102,14 @@ pub fn serve(listener: TcpListener, service: Arc<SketchService>) -> Result<u64> 
     for h in handlers {
         let _ = h.join();
     }
+    handler.drained();
     Ok(served)
 }
 
 /// Serve one connection until the peer hangs up or shutdown is flagged.
-fn handle_connection(
+fn handle_connection<H: FrameHandler>(
     mut stream: TcpStream,
-    service: &SketchService,
+    handler: &H,
     stop: &AtomicBool,
     listen_addr: SocketAddr,
 ) -> Result<()> {
@@ -81,12 +122,13 @@ fn handle_connection(
         .set_write_timeout(Some(Duration::from_secs(30)))
         .context("set write timeout")?;
     stream.set_nodelay(true).ok();
+    let mut conn = handler.new_conn();
     loop {
         let payload = match read_frame_interruptible(&mut stream, stop)? {
             Some(p) => p,
             None => return Ok(()), // clean EOF or shutdown while idle
         };
-        match handle_payload(service, &payload) {
+        match handler.handle(&mut conn, &payload) {
             Handled::Reply(frame) => proto::write_frame(&mut stream, &frame)?,
             Handled::Shutdown(frame) => {
                 proto::write_frame(&mut stream, &frame)?;
@@ -127,21 +169,11 @@ pub(crate) fn handle_payload(service: &SketchService, payload: &[u8]) -> Handled
     // Reply version: echo the request's. For an undecodable frame, trust
     // the leading version byte if it is one we speak (the error must be
     // readable by the sender), else answer at the current version.
-    let reply_version = match &decoded {
+    let version = match &decoded {
         Ok((v, _)) => *v,
-        Err(_) => payload
-            .first()
-            .copied()
-            .filter(|&v| proto::version_supported(v))
-            .unwrap_or(proto::PROTO_VERSION),
+        Err(_) => reply_version(payload),
     };
-    let encode = |resp: &Response| -> Vec<u8> {
-        proto::encode_response_v(resp, reply_version).unwrap_or_else(|e| {
-            // Unrepresentable at the peer's version (cannot arise from a
-            // well-formed request of that version) — send the reason.
-            proto::encode_response(&Response::Error(format!("{e:#}")))
-        })
-    };
+    let encode = |resp: &Response| -> Vec<u8> { encode_reply(resp, version) };
     match decoded {
         // Decode errors are protocol-level: report and keep the
         // connection (framing is intact — the bad frame was consumed).
@@ -210,6 +242,7 @@ fn handle_request(
 fn dispatch(service: &SketchService, req: Request) -> Result<Response> {
     Ok(match req {
         Request::Push {
+            scope,
             shard,
             method,
             dim,
@@ -218,6 +251,7 @@ fn dispatch(service: &SketchService, req: Request) -> Result<Response> {
         } => {
             {
                 let _t = trace::scoped("cap_check");
+                service.authorize(&scope)?;
                 service.check_method(&method)?;
             }
             let rows = data.len() / dim as usize;
@@ -228,29 +262,72 @@ fn dispatch(service: &SketchService, req: Request) -> Result<Response> {
                 total_rows,
             }
         }
-        Request::Query { spec, method, trace: _ } => {
+        Request::Query { scope, spec, method, trace: _ } => {
             {
                 let _t = trace::scoped("cap_check");
+                service.authorize(&scope)?;
                 service.check_method(&method)?;
             }
             Response::Centroids(service.query(&spec)?)
         }
-        Request::Snapshot { window, method, trace: _ } => {
+        Request::Snapshot { scope, window, method, trace: _ } => {
             {
                 let _t = trace::scoped("cap_check");
+                service.authorize(&scope)?;
                 service.check_method(&method)?;
             }
             Response::Snapshot(service.snapshot(window)?)
         }
-        Request::Roll => {
+        Request::Delta {
+            scope,
+            agg_id,
+            instance,
+            seq,
+            sketch,
+            trace: _,
+        } => {
+            {
+                let _t = trace::scoped("cap_check");
+                service.authorize(&scope)?;
+            }
+            let (merged, rows_total) = service.ingest_delta(&agg_id, instance, seq, &sketch)?;
+            Response::DeltaAck { merged, rows_total }
+        }
+        Request::Roll { scope } => {
+            service.authorize(&scope)?;
             let (epoch, rows_closed) = service.roll_epoch();
             Response::RollAck { epoch, rows_closed }
         }
-        Request::Stats => Response::Stats(service.stats()),
+        Request::Stats { scope } => {
+            service.authorize(&scope)?;
+            Response::Stats(service.stats())
+        }
         Request::Metrics => Response::Metrics(service.render_metrics()),
-        Request::Trace { id, limit } => Response::Traces(service.traces_json(id, limit)?),
+        Request::Trace { scope, id, limit } => {
+            service.authorize(&scope)?;
+            Response::Traces(service.traces_json(id, limit)?)
+        }
         Request::Shutdown => unreachable!("handled by the connection loop"),
     })
+}
+
+/// The version an error or node-level reply to `payload` should be
+/// encoded at: the frame's leading version byte when it is one we speak,
+/// else the current version.
+pub(crate) fn reply_version(payload: &[u8]) -> u8 {
+    payload
+        .first()
+        .copied()
+        .filter(|&v| proto::version_supported(v))
+        .unwrap_or(proto::PROTO_VERSION)
+}
+
+/// Encode `resp` at `version`, degrading to a current-version error frame
+/// when the content is unrepresentable at the peer's version (cannot
+/// arise from a well-formed request of that version — send the reason).
+pub(crate) fn encode_reply(resp: &Response, version: u8) -> Vec<u8> {
+    proto::encode_response_v(resp, version)
+        .unwrap_or_else(|e| proto::encode_response(&Response::Error(format!("{e:#}"))))
 }
 
 /// Read one frame, tolerating read timeouts between bytes so the shutdown

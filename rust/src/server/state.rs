@@ -82,6 +82,22 @@ pub struct ServiceConfig {
     /// Finished request traces retained in the ring served by
     /// `ctl trace` (oldest evicted past this).
     pub trace_capacity: usize,
+    /// This service's tenant name on a multi-tenant node (see
+    /// [`super::tenants`]). Empty = the unnamed default tenant, which is
+    /// also the legacy single-tenant mode: every instrument keeps its
+    /// historical label set (no `tenant` label) and requests with an
+    /// empty scope are served exactly as before proto v6. Non-empty
+    /// names add a bounded `tenant` label to every instrument.
+    pub tenant: String,
+    /// Auth token required on every scoped request addressed to this
+    /// tenant. `None` = open (the legacy behavior). Compared in constant
+    /// time ([`super::tenants::constant_time_eq`]); failures count under
+    /// `qckm_auth_failures_total{tenant}`.
+    pub token: Option<String>,
+    /// Canonical decoder spec used when a query declares none (empty =
+    /// the registry default, `clompr`). Per-tenant, so two tenants on one
+    /// node can default to different decode algorithms.
+    pub default_decoder: String,
 }
 
 impl Default for ServiceConfig {
@@ -94,14 +110,17 @@ impl Default for ServiceConfig {
             decode: ClOmprParams::default(),
             registry: Arc::new(Registry::new(Arc::new(crate::obs::MonotonicClock::new()))),
             trace_capacity: 128,
+            tenant: String::new(),
+            token: None,
+            default_decoder: String::new(),
         }
     }
 }
 
 /// The protocol verbs — the label set of the per-verb request counters
 /// and latency histograms.
-const VERBS: [&str; 8] =
-    ["push", "query", "snapshot", "roll", "stats", "metrics", "trace", "shutdown"];
+const VERBS: [&str; 9] =
+    ["push", "query", "snapshot", "roll", "stats", "metrics", "trace", "delta", "shutdown"];
 
 /// `ctl trace` with no explicit limit returns this many newest traces.
 pub(crate) const DEFAULT_TRACE_LIMIT: usize = 16;
@@ -141,25 +160,63 @@ struct ServerMetrics {
     /// — CL-OMPR effort and churn of the winning replicate per decode.
     outer_iters: Arc<Counter>,
     atoms_replaced: Arc<Counter>,
+    /// `qckm_deltas_total{outcome}` — aggregator deltas merged vs.
+    /// recognized replays dropped by the idempotency gate (I-21).
+    delta_merged: Arc<Counter>,
+    delta_replayed: Arc<Counter>,
 }
 
 impl ServerMetrics {
-    fn new(reg: &Registry) -> Self {
+    /// Register this service's instruments. A non-empty `tenant` adds a
+    /// `tenant` label to every series, so several tenants can share one
+    /// registry (the `qckm serve` global) without colliding; the empty
+    /// name keeps the exact historical label sets, preserving every
+    /// pinned single-tenant exposition page.
+    fn new(reg: &Registry, tenant: &str) -> Self {
         let lat = crate::obs::latency_buckets();
+        // Extend a label set with the tenant label when the tenant is
+        // named; registration copies the slices, so borrowing from a
+        // temporary Vec here is fine.
+        let with_tenant = |labels: &[(&str, &str)]| -> Vec<(String, String)> {
+            let mut v: Vec<(String, String)> = labels
+                .iter()
+                .map(|&(k, val)| (k.to_string(), val.to_string()))
+                .collect();
+            if !tenant.is_empty() {
+                v.push(("tenant".to_string(), tenant.to_string()));
+            }
+            v
+        };
+        let refs = |owned: &[(String, String)]| -> Vec<(&str, &str)> {
+            owned.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect()
+        };
+        let counter = |name: &str, help: &str, labels: &[(&str, &str)]| {
+            let owned = with_tenant(labels);
+            reg.counter(name, help, &refs(&owned))
+        };
+        let gauge = |name: &str, help: &str| {
+            let owned = with_tenant(&[]);
+            reg.gauge(name, help, &refs(&owned))
+        };
+        let histogram = |name: &str, help: &str, buckets: &[f64]| {
+            let owned = with_tenant(&[]);
+            reg.histogram(name, help, &refs(&owned), buckets)
+        };
         let verbs = VERBS
             .iter()
             .map(|&verb| {
+                let owned = with_tenant(&[("verb", verb)]);
                 (
                     verb,
                     reg.counter(
                         "qckm_requests_total",
                         "Requests handled, by protocol verb.",
-                        &[("verb", verb)],
+                        &refs(&owned),
                     ),
                     reg.histogram(
                         "qckm_request_seconds",
                         "Request handling latency, by protocol verb.",
-                        &[("verb", verb)],
+                        &refs(&owned),
                         &lat,
                     ),
                 )
@@ -167,68 +224,72 @@ impl ServerMetrics {
             .collect();
         Self {
             verbs,
-            push_rows: reg.counter(
+            push_rows: counter(
                 "qckm_push_rows_total",
                 "Rows accepted into shard accumulators.",
                 &[],
             ),
-            push_bytes: reg.counter(
+            push_bytes: counter(
                 "qckm_push_bytes_total",
                 "Accepted push payload bytes (rows x dim x 8).",
                 &[],
             ),
-            encode_seconds: reg.histogram(
+            encode_seconds: histogram(
                 "qckm_ingest_encode_seconds",
                 "Parallel sketch encode of one push batch.",
-                &[],
                 &lat,
             ),
-            window_merge_seconds: reg.histogram(
+            window_merge_seconds: histogram(
                 "qckm_window_merge_seconds",
                 "Merging one query/snapshot window from shard accumulators.",
-                &[],
                 &lat,
             ),
-            cache_hits: reg.counter(
+            cache_hits: counter(
                 "qckm_cache_hits_total",
                 "Centroid-cache hits (query answered without decoding).",
                 &[],
             ),
-            cache_misses: reg.counter(
+            cache_misses: counter(
                 "qckm_cache_misses_total",
                 "Centroid-cache misses (a decode ran).",
                 &[],
             ),
-            uptime_seconds: reg.gauge(
+            uptime_seconds: gauge(
                 "qckm_uptime_seconds",
                 "Seconds since service construction, on the registry clock.",
-                &[],
             ),
-            shards_gauge: reg.gauge(
+            shards_gauge: gauge(
                 "qckm_shards",
                 "Distinct shard labels tracked (all-time accumulators).",
-                &[],
             ),
-            epoch_ring_gauge: reg.gauge(
+            epoch_ring_gauge: gauge(
                 "qckm_epoch_ring_epochs",
                 "Closed epochs currently held in the window ring.",
-                &[],
             ),
-            residual_norm: reg.histogram(
+            residual_norm: histogram(
                 "qckm_query_residual_norm",
                 "Final sketch-matching residual of each decode that ran.",
-                &[],
                 &Histogram::log_boundaries(1e-4, 4.0, 12),
             ),
-            outer_iters: reg.counter(
+            outer_iters: counter(
                 "qckm_query_outer_iters_total",
                 "Decoder outer iterations across all decodes that ran.",
                 &[],
             ),
-            atoms_replaced: reg.counter(
+            atoms_replaced: counter(
                 "qckm_query_atoms_replaced_total",
                 "CL-OMPR hard-threshold atom replacements across all decodes.",
                 &[],
+            ),
+            delta_merged: counter(
+                "qckm_deltas_total",
+                "Aggregator deltas, by outcome (merged vs replayed-and-dropped).",
+                &[("outcome", "merged")],
+            ),
+            delta_replayed: counter(
+                "qckm_deltas_total",
+                "Aggregator deltas, by outcome (merged vs replayed-and-dropped).",
+                &[("outcome", "replayed")],
             ),
         }
     }
@@ -272,6 +333,14 @@ struct Inner {
     /// cache by its capacity); overflow tallies under
     /// [`DECODER_STATS_OVERFLOW`].
     decoder_uses: BTreeMap<String, u64>,
+    /// Delta idempotency gate: per aggregator id, the `(instance,
+    /// last admitted seq)` pair. A delta with the same instance and
+    /// `seq <= last` is a recognized replay and is dropped without
+    /// merging; a new instance (aggregator restart) replaces the record
+    /// and restarts the sequence. Bounded alongside the shard maps —
+    /// an aggregator id is only admitted here after it passed the
+    /// shard-label cap check (I-13, I-21).
+    deltas: BTreeMap<String, (u64, u64)>,
 }
 
 /// Distinct decoder specs tracked in stats before new ones collapse into
@@ -297,6 +366,10 @@ pub struct SketchService {
     traces: TraceStore,
     /// Registry-clock reading at construction — the uptime anchor.
     start_ns: u64,
+    /// `qckm_auth_failures_total{tenant}` — registered only when this
+    /// tenant requires a token, so open servers keep their historical
+    /// exposition pages byte-identical.
+    auth_failures: Option<Arc<Counter>>,
 }
 
 impl SketchService {
@@ -309,7 +382,14 @@ impl SketchService {
             crate::stream::operator_fingerprint(&op),
             "meta does not describe the operator"
         );
-        let metrics = ServerMetrics::new(&cfg.registry);
+        let metrics = ServerMetrics::new(&cfg.registry, &cfg.tenant);
+        let auth_failures = cfg.token.as_ref().map(|_| {
+            cfg.registry.counter(
+                "qckm_auth_failures_total",
+                "Scoped requests refused for a bad or missing token, by tenant.",
+                &[("tenant", &cfg.tenant)],
+            )
+        });
         // `qckm_build_info`: the constant-1 series whose label carries the
         // build's version — the standard Prometheus idiom for joining any
         // other series to a version.
@@ -334,10 +414,39 @@ impl SketchService {
                 alltime: BTreeMap::new(),
                 cache: VecDeque::new(),
                 decoder_uses: BTreeMap::new(),
+                deltas: BTreeMap::new(),
             }),
             traces,
             start_ns,
+            auth_failures,
         }
+    }
+
+    /// This service's tenant name (empty = the unnamed default tenant).
+    pub fn tenant(&self) -> &str {
+        &self.cfg.tenant
+    }
+
+    /// Authorize one scoped request against this tenant: the scope's
+    /// tenant name must be this tenant (or empty — routing already
+    /// happened), and when a token is configured the presented one must
+    /// match in constant time (no early-exit byte compare, so response
+    /// timing leaks nothing about how much of a guess was right).
+    /// Failures count under `qckm_auth_failures_total{tenant}`.
+    pub fn authorize(&self, scope: &super::proto::Scope) -> Result<()> {
+        if !scope.tenant.is_empty() && scope.tenant != self.cfg.tenant {
+            bail!("unknown tenant '{}'", scope.tenant);
+        }
+        if let Some(expected) = &self.cfg.token {
+            if !super::tenants::constant_time_eq(expected.as_bytes(), scope.token.as_bytes()) {
+                if let Some(c) = &self.auth_failures {
+                    c.inc();
+                }
+                let shown = if self.cfg.tenant.is_empty() { "(default)" } else { &self.cfg.tenant };
+                bail!("auth failed for tenant '{shown}' (bad or missing token)");
+            }
+        }
+        Ok(())
     }
 
     /// Count one request of `verb` and start its latency span (drop the
@@ -360,6 +469,14 @@ impl SketchService {
     /// released before rendering (which takes the registry lock), keeping
     /// the lock order state → registry everywhere.
     pub fn render_metrics(&self) -> String {
+        self.refresh_gauges();
+        self.cfg.registry.render()
+    }
+
+    /// Refresh this service's scrape-time gauges (uptime, occupancy)
+    /// without rendering. A multi-tenant node calls this on every tenant
+    /// before rendering their shared registry once.
+    pub fn refresh_gauges(&self) {
         let (shards, epochs_held) = {
             let inner = self.locked();
             (inner.alltime.len(), inner.closed.len())
@@ -370,13 +487,30 @@ impl SketchService {
         self.metrics
             .uptime_seconds
             .set(now.saturating_sub(self.start_ns) as f64 * 1e-9);
-        self.cfg.registry.render()
+    }
+
+    /// This tenant's occupancy snapshot: (all-time rows, shard slots
+    /// used) — the per-tenant row of the v6 stats report.
+    pub fn occupancy(&self) -> (u64, u64) {
+        let inner = self.locked();
+        (
+            inner.alltime.values().map(|p| p.count()).sum(),
+            inner.alltime.len() as u64,
+        )
     }
 
     /// The registry's clock — the time source for request trace trees,
     /// shared with every histogram span so the two never disagree.
     pub(crate) fn registry_clock(&self) -> Arc<dyn Clock> {
         self.cfg.registry.clock()
+    }
+
+    /// The metrics registry this service registers into. A multi-tenant
+    /// node shares one registry across every tenant (label sets differ by
+    /// `tenant`), renders it once per scrape, and drives its rate-limit
+    /// bucket off the same clock.
+    pub(crate) fn registry(&self) -> &Arc<Registry> {
+        &self.cfg.registry
     }
 
     /// Store one finished request trace in the ring.
@@ -455,16 +589,20 @@ impl SketchService {
     /// (which take the registry lock) happen after it is released.
     fn set_shard_health(&self, label: &str, rows: u64, balance: f64) {
         let reg = &self.cfg.registry;
+        let mut labels = vec![("shard", label)];
+        if !self.cfg.tenant.is_empty() {
+            labels.push(("tenant", &self.cfg.tenant));
+        }
         reg.gauge(
             "qckm_shard_rows",
             "All-time rows pooled per shard.",
-            &[("shard", label)],
+            &labels,
         )
         .set(rows as f64);
         reg.gauge(
             "qckm_shard_bit_balance",
             "Mean pooled slot value per shard (near 0 under proper dithering for quantized methods).",
-            &[("shard", label)],
+            &labels,
         )
         .set(balance);
     }
@@ -580,6 +718,74 @@ impl SketchService {
         Ok((shard_rows, total_rows))
     }
 
+    /// Merge an aggregator's pre-pooled `.qsk` delta under the shard
+    /// label `agg_id`, guarded by the idempotency gate: within one
+    /// aggregator `instance`, only a `seq` strictly greater than the
+    /// last admitted one merges — an at-least-once flush link may replay
+    /// a delta (ack lost, connection resent) without double-counting
+    /// (INVARIANTS.md I-21). A new instance (aggregator restart) resets
+    /// the sequence; a restarted aggregator starts from empty local
+    /// accumulators, so its fresh stream is genuinely new data.
+    ///
+    /// Returns `(merged, total_rows)`: `merged == false` means the delta
+    /// was a recognized replay and was dropped, which the aggregator
+    /// treats as success.
+    pub fn ingest_delta(
+        &self,
+        agg_id: &str,
+        instance: u64,
+        seq: u64,
+        sketch: &[u8],
+    ) -> Result<(bool, u64)> {
+        if agg_id.is_empty() || agg_id.len() > MAX_SHARD_BYTES {
+            bail!("invalid aggregator id ({} bytes)", agg_id.len());
+        }
+        // Parse and verify outside the lock: the payload is a complete
+        // `.qsk` stream (checksummed, fingerprinted), so a corrupt or
+        // cross-operator delta is refused before any state is touched.
+        let (meta, partial, _prov) =
+            crate::stream::read_sketch_from(&mut &sketch[..], "delta")?;
+        self.meta.ensure_mergeable(&meta)?;
+        let rows = partial.count();
+        let mut inner = self.locked();
+        if let Some(&(inst, last)) = inner.deltas.get(agg_id) {
+            if inst == instance && seq <= last {
+                let total_rows = inner.alltime.values().map(|p| p.count()).sum();
+                drop(inner);
+                self.metrics.delta_replayed.inc();
+                return Ok((false, total_rows));
+            }
+        }
+        if !inner.alltime.contains_key(agg_id) && inner.alltime.len() >= self.cfg.max_shards {
+            bail!(
+                "shard cap reached: {} labels already tracked (max_shards {}); \
+                 cannot admit aggregator '{agg_id}'",
+                inner.alltime.len(),
+                self.cfg.max_shards
+            );
+        }
+        let len = self.op.sketch_len();
+        inner
+            .current
+            .entry(agg_id.to_string())
+            .or_insert_with(|| PooledSketch::new(len))
+            .merge(&partial);
+        let shard_pool = inner
+            .alltime
+            .entry(agg_id.to_string())
+            .or_insert_with(|| PooledSketch::new(len));
+        shard_pool.merge(&partial);
+        let shard_rows = shard_pool.count();
+        let balance = pool_balance(shard_pool);
+        inner.deltas.insert(agg_id.to_string(), (instance, seq));
+        let total_rows = inner.alltime.values().map(|p| p.count()).sum();
+        drop(inner);
+        self.metrics.delta_merged.inc();
+        self.metrics.push_rows.add(rows);
+        self.set_shard_health(agg_id, shard_rows, balance);
+        Ok((true, total_rows))
+    }
+
     /// Close the open epoch into the ring (evicting the oldest beyond
     /// capacity) and open the next. Returns the new open epoch's index and
     /// the rows that were in the closed one.
@@ -660,13 +866,19 @@ impl SketchService {
             bail!("query: lo {} must not exceed hi {}", spec.lo, spec.hi);
         }
         // Resolve the declared decoder through the registry (empty = the
+        // tenant's configured default, falling back to the registry
         // default `clompr`); junk specs error here with the valid-decoder
         // list. The *canonical* spec goes into the cache key, so aliases
         // share entries and different algorithms never do.
-        let decoder = if spec.decoder.is_empty() {
+        let declared = if spec.decoder.is_empty() {
+            self.cfg.default_decoder.as_str()
+        } else {
+            spec.decoder.as_str()
+        };
+        let decoder = if declared.is_empty() {
             DecoderSpec::default()
         } else {
-            DecoderSpec::parse(&spec.decoder)?
+            DecoderSpec::parse(declared)?
         };
         let window = self.merge_window(spec.window);
         if window.pool.count() == 0 {
@@ -781,6 +993,10 @@ impl SketchService {
                 .iter()
                 .map(|(spec, n)| (spec.clone(), *n))
                 .collect(),
+            tenant: self.cfg.tenant.clone(),
+            // A single service only knows itself; the multi-tenant node
+            // fills this with every tenant's occupancy.
+            tenants: Vec::new(),
         }
     }
 }

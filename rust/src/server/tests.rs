@@ -1,11 +1,12 @@
 //! Unit tests for the sketch service: protocol round-trips and defensive
-//! decoding (v4 and v5), shard/epoch/window state semantics, the centroid
-//! cache, the snapshot ⇄ `.qsk` bridge, request tracing (the golden span
-//! tree, the bounded ring, v4 compatibility), concurrent-ingest
-//! determinism, and one in-process socket smoke (real `TcpListener`, no
+//! decoding (v4 through v6), shard/epoch/window state semantics, the
+//! centroid cache, the snapshot ⇄ `.qsk` bridge, request tracing (the
+//! golden span tree, the bounded ring, v4 compatibility), tenant scoping
+//! (auth, routing, delta idempotency, rate limiting), concurrent-ingest
+//! determinism, and in-process socket smokes (real `TcpListener`, no
 //! child processes — `rust/tests/server_e2e.rs` drives the actual binary).
 
-use super::proto::{self, CentroidReport, QuerySpec, Request, Response, StatsReport};
+use super::proto::{self, CentroidReport, QuerySpec, Request, Response, Scope, StatsReport};
 use super::service::{handle_payload, Handled};
 use super::state::{ServiceConfig, SketchService};
 use crate::frequency::FrequencyLaw;
@@ -15,7 +16,7 @@ use crate::obs::trace::{IdGen, SeqIdGen, TraceContext};
 use crate::obs::{FakeClock, Registry};
 use crate::rng::Rng;
 use crate::sketch::PooledSketch;
-use crate::stream::{draw_operator, read_sketch_from, SketchMeta};
+use crate::stream::{draw_operator, read_sketch_from, write_sketch_to, ShardRecord, SketchMeta};
 use std::sync::Arc;
 
 const DIM: usize = 4;
@@ -61,6 +62,7 @@ fn test_ctx() -> TraceContext {
 fn proto_round_trips_every_request_variant() {
     let requests = [
         Request::Push {
+            scope: Scope::default(),
             shard: "sensor-7".into(),
             method: "qckm:bits=2".into(),
             dim: 3,
@@ -68,6 +70,7 @@ fn proto_round_trips_every_request_variant() {
             trace: None,
         },
         Request::Push {
+            scope: Scope::new("acme", "s3cret-token"),
             shard: "sensor-8".into(),
             method: String::new(),
             dim: 2,
@@ -75,6 +78,7 @@ fn proto_round_trips_every_request_variant() {
             trace: Some(test_ctx()),
         },
         Request::Query {
+            scope: Scope::new("acme", ""),
             spec: QuerySpec {
                 k: 4,
                 window: 2,
@@ -88,27 +92,55 @@ fn proto_round_trips_every_request_variant() {
             trace: None,
         },
         Request::Query {
+            scope: Scope::default(),
             spec: spec(1, 0),
             method: String::new(),
             trace: Some(test_ctx()),
         },
         Request::Snapshot {
+            scope: Scope::new("", "token-without-tenant"),
             window: 7,
             method: "qckm".into(),
             trace: None,
         },
         Request::Snapshot {
+            scope: Scope::default(),
             window: 0,
             method: String::new(),
             trace: Some(test_ctx()),
         },
-        Request::Roll,
-        Request::Stats,
+        Request::Roll {
+            scope: Scope::new("beta", "t"),
+        },
+        Request::Stats {
+            scope: Scope::default(),
+        },
         Request::Metrics,
-        Request::Trace { id: None, limit: 0 },
         Request::Trace {
+            scope: Scope::default(),
+            id: None,
+            limit: 0,
+        },
+        Request::Trace {
+            scope: Scope::new("acme", "tok"),
             id: Some(test_ctx().trace_id),
             limit: 25,
+        },
+        Request::Delta {
+            scope: Scope::new("acme", "tok"),
+            agg_id: "edge-1".into(),
+            instance: 0xDEAD_BEEF,
+            seq: 42,
+            sketch: vec![9, 8, 7, 6, 5],
+            trace: Some(test_ctx()),
+        },
+        Request::Delta {
+            scope: Scope::default(),
+            agg_id: "edge-2".into(),
+            instance: 1,
+            seq: 1,
+            sketch: vec![0],
+            trace: None,
         },
         Request::Shutdown,
     ];
@@ -126,6 +158,7 @@ fn proto_round_trips_every_request_variant() {
 fn proto_v4_round_trips_and_refuses_v5_content() {
     let v4_requests = [
         Request::Push {
+            scope: Scope::default(),
             shard: "sensor-7".into(),
             method: "qckm".into(),
             dim: 2,
@@ -133,17 +166,23 @@ fn proto_v4_round_trips_and_refuses_v5_content() {
             trace: None,
         },
         Request::Query {
+            scope: Scope::default(),
             spec: spec(3, 1),
             method: String::new(),
             trace: None,
         },
         Request::Snapshot {
+            scope: Scope::default(),
             window: 2,
             method: String::new(),
             trace: None,
         },
-        Request::Roll,
-        Request::Stats,
+        Request::Roll {
+            scope: Scope::default(),
+        },
+        Request::Stats {
+            scope: Scope::default(),
+        },
         Request::Metrics,
         Request::Shutdown,
     ];
@@ -158,6 +197,7 @@ fn proto_v4_round_trips_and_refuses_v5_content() {
     // A carried trace context and the trace verb are v5 capabilities: the
     // encoder refuses rather than producing a frame v4 peers misread.
     let traced = Request::Query {
+        scope: Scope::default(),
         spec: spec(1, 0),
         method: String::new(),
         trace: Some(test_ctx()),
@@ -166,7 +206,15 @@ fn proto_v4_round_trips_and_refuses_v5_content() {
     assert!(err.contains("needs proto v5"), "{err}");
     let err = format!(
         "{:#}",
-        proto::encode_request_v(&Request::Trace { id: None, limit: 1 }, 4).unwrap_err()
+        proto::encode_request_v(
+            &Request::Trace {
+                scope: Scope::default(),
+                id: None,
+                limit: 1,
+            },
+            4,
+        )
+        .unwrap_err()
     );
     assert!(err.contains("needs proto v5"), "{err}");
 
@@ -199,6 +247,10 @@ fn proto_v4_round_trips_and_refuses_v5_content() {
 fn proto_round_trips_every_response_variant() {
     let responses = [
         Response::Error("bad things".into()),
+        Response::Busy {
+            retry_after_ms: 250,
+            message: "per-connection ingest rate limit".into(),
+        },
         Response::PushAck {
             shard_rows: 10,
             total_rows: 30,
@@ -228,9 +280,19 @@ fn proto_round_trips_every_response_variant() {
             cache_misses: 6,
             shards: vec![("a".into(), 40), ("b".into(), 37)],
             decoders: vec![("clompr".into(), 9), ("hier".into(), 2)],
+            tenant: "acme".into(),
+            tenants: vec![("acme".into(), 77, 2), ("beta".into(), 0, 0)],
         }),
         Response::Metrics("# HELP qckm_requests_total req\n".into()),
         Response::Traces("{\n  \"traces\": []\n}".into()),
+        Response::DeltaAck {
+            merged: true,
+            rows_total: 4096,
+        },
+        Response::DeltaAck {
+            merged: false,
+            rows_total: 0,
+        },
         Response::ShutdownAck,
     ];
     for resp in &responses {
@@ -242,17 +304,22 @@ fn proto_round_trips_every_response_variant() {
 #[test]
 fn proto_rejects_malformed_payloads() {
     // Wrong protocol version.
-    let mut bytes = proto::encode_request(&Request::Roll);
+    let mut bytes = proto::encode_request(&Request::Roll {
+        scope: Scope::default(),
+    });
     bytes[0] = 99;
     assert!(proto::decode_request(&bytes).is_err());
 
     // Unknown tag.
-    let mut bytes = proto::encode_request(&Request::Roll);
+    let mut bytes = proto::encode_request(&Request::Roll {
+        scope: Scope::default(),
+    });
     bytes[1] = 200;
     assert!(proto::decode_request(&bytes).is_err());
 
     // Truncated body.
     let bytes = proto::encode_request(&Request::Query {
+        scope: Scope::default(),
         spec: spec(2, 0),
         method: String::new(),
         trace: None,
@@ -262,6 +329,7 @@ fn proto_rejects_malformed_payloads() {
     // Truncated trace block: presence byte says a context follows, but
     // the id bytes are missing.
     let bytes = proto::encode_request(&Request::Query {
+        scope: Scope::default(),
         spec: spec(2, 0),
         method: String::new(),
         trace: Some(test_ctx()),
@@ -269,29 +337,48 @@ fn proto_rejects_malformed_payloads() {
     assert!(proto::decode_request(&bytes[..bytes.len() - 8]).is_err());
 
     // Implausible trace limit.
-    let mut bytes = proto::encode_request(&Request::Trace { id: None, limit: 1 });
+    let mut bytes = proto::encode_request(&Request::Trace {
+        scope: Scope::default(),
+        id: None,
+        limit: 1,
+    });
     let at = bytes.len() - 4;
     bytes[at..].copy_from_slice(&(proto::MAX_TRACE_LIMIT + 1).to_le_bytes());
     let err = format!("{:#}", proto::decode_request(&bytes).unwrap_err());
     assert!(err.contains("implausible trace limit"), "{err}");
 
     // Trailing garbage.
-    let mut bytes = proto::encode_request(&Request::Stats);
+    let mut bytes = proto::encode_request(&Request::Stats {
+        scope: Scope::default(),
+    });
     bytes.push(0);
     assert!(proto::decode_request(&bytes).is_err());
 
     // Push payload not a whole number of rows.
     let mut ok = proto::encode_request(&Request::Push {
+        scope: Scope::default(),
         shard: "s".into(),
         method: String::new(),
         dim: 3,
         data: vec![0.0; 6],
         trace: None,
     });
-    // dim lives after the 1-byte version, 1-byte tag, 4+1 byte shard
-    // label, and 4+0 byte method spec.
-    ok[11] = 4; // now 6 values over dim 4
+    // dim lives after the 1-byte version, 1-byte tag, 4+0 byte tenant
+    // name, 4+0 byte token, 4+1 byte shard label, and 4+0 byte method
+    // spec.
+    ok[19] = 4; // now 6 values over dim 4
     assert!(proto::decode_request(&ok).is_err());
+
+    // Oversized scope strings: a tenant name or token past the caps is
+    // refused before any allocation tracks the declared length.
+    let long = proto::encode_request(&Request::Roll {
+        scope: Scope::new("x".repeat(proto::MAX_TENANT_BYTES + 1), ""),
+    });
+    assert!(proto::decode_request(&long).is_err());
+    let long = proto::encode_request(&Request::Roll {
+        scope: Scope::new("t", "x".repeat(proto::MAX_TOKEN_BYTES + 1)),
+    });
+    assert!(proto::decode_request(&long).is_err());
 
     // Oversized frame length on the wire.
     let mut wire = Vec::new();
@@ -310,6 +397,7 @@ fn proto_rejects_malformed_payloads() {
 #[test]
 fn proto_rejects_zero_row_pushes() {
     let bytes = proto::encode_request(&Request::Push {
+        scope: Scope::default(),
         shard: "s".into(),
         method: String::new(),
         dim: 3,
@@ -452,6 +540,7 @@ fn traced_query_span_tree_is_golden() {
     let resp = roundtrip(
         &svc,
         &Request::Query {
+            scope: Scope::default(),
             spec: spec(1, 0),
             method: String::new(),
             trace: Some(ctx),
@@ -462,6 +551,7 @@ fn traced_query_span_tree_is_golden() {
     let fetched = roundtrip(
         &svc,
         &Request::Trace {
+            scope: Scope::default(),
             id: Some(ctx.trace_id),
             limit: 0,
         },
@@ -558,6 +648,7 @@ fn trace_ring_bounds_evicts_and_finds_by_id() {
         let resp = roundtrip(
             &svc,
             &Request::Push {
+                scope: Scope::default(),
                 shard: "s".into(),
                 method: String::new(),
                 dim: DIM as u32,
@@ -594,6 +685,7 @@ fn trace_ring_bounds_evicts_and_finds_by_id() {
     let resp = roundtrip(
         &svc,
         &Request::Push {
+            scope: Scope::default(),
             shard: "s".into(),
             method: String::new(),
             dim: DIM as u32,
@@ -630,6 +722,7 @@ fn v4_clients_are_served_at_their_own_version() {
 
     let x = random_mat(40, DIM, 11);
     let (version, resp) = call_v4(&mut stream, &Request::Push {
+        scope: Scope::default(),
         shard: "old-client".into(),
         method: "qckm".into(),
         dim: DIM as u32,
@@ -640,6 +733,7 @@ fn v4_clients_are_served_at_their_own_version() {
     assert!(matches!(resp, Response::PushAck { .. }), "{resp:?}");
 
     let (version, resp) = call_v4(&mut stream, &Request::Query {
+        scope: Scope::default(),
         spec: spec(1, 0),
         method: String::new(),
         trace: None,
@@ -652,7 +746,9 @@ fn v4_clients_are_served_at_their_own_version() {
     // The v4 answer is the same decode a v5 client gets, bit for bit.
     assert_eq!(report.centroids, svc.query(&spec(1, 0)).unwrap().centroids);
 
-    let (version, resp) = call_v4(&mut stream, &Request::Stats);
+    let (version, resp) = call_v4(&mut stream, &Request::Stats {
+        scope: Scope::default(),
+    });
     assert_eq!(version, 4);
     assert!(matches!(resp, Response::Stats(_)));
 
@@ -665,10 +761,352 @@ fn v4_clients_are_served_at_their_own_version() {
         panic!("expected an error");
     };
     assert!(msg.contains("needs proto v5"), "{msg}");
-    let (version, resp) = call_v4(&mut stream, &Request::Stats);
+    let (version, resp) = call_v4(&mut stream, &Request::Stats {
+        scope: Scope::default(),
+    });
     assert_eq!(version, 4);
     assert!(matches!(resp, Response::Stats(_)));
     drop(stream);
+
+    super::Client::connect(&addr).unwrap().shutdown().unwrap();
+    server.join().unwrap();
+}
+
+// ------------------------------------- tenants, deltas & rate limiting
+
+/// The v5 wire format keeps working, and every v6-only construct (tenant
+/// scopes, the delta verb, busy status) refuses to encode below v6 —
+/// degrading where an old peer must still learn something (busy → error
+/// text) and failing loudly everywhere silence would corrupt.
+#[test]
+fn proto_v5_round_trips_and_refuses_v6_content() {
+    // An empty scope encodes at v5 (the scope block simply isn't written)
+    // and round-trips, echoing the old version.
+    let unscoped = Request::Push {
+        scope: Scope::default(),
+        shard: "s".into(),
+        method: String::new(),
+        dim: 2,
+        data: vec![1.0, 2.0],
+        trace: Some(test_ctx()),
+    };
+    let bytes = proto::encode_request_v(&unscoped, 5).unwrap();
+    assert_eq!(bytes[0], 5);
+    let (version, decoded) = proto::decode_request_v(&bytes).unwrap();
+    assert_eq!(version, 5);
+    assert_eq!(decoded, unscoped);
+
+    // A non-empty scope is v6-only: refused at v5, round-tripped at v6.
+    let scoped = Request::Push {
+        scope: Scope::new("acme", "s3cret"),
+        shard: "s".into(),
+        method: String::new(),
+        dim: 2,
+        data: vec![1.0, 2.0],
+        trace: None,
+    };
+    let err = format!("{:#}", proto::encode_request_v(&scoped, 5).unwrap_err());
+    assert!(err.contains("needs proto v6"), "{err}");
+    let bytes = proto::encode_request_v(&scoped, 6).unwrap();
+    assert_eq!(proto::decode_request(&bytes).unwrap(), scoped);
+
+    // The delta verb is v6-only in both directions.
+    let delta = Request::Delta {
+        scope: Scope::default(),
+        agg_id: "edge-1".into(),
+        instance: 3,
+        seq: 1,
+        sketch: vec![1, 2, 3],
+        trace: None,
+    };
+    let err = format!("{:#}", proto::encode_request_v(&delta, 5).unwrap_err());
+    assert!(err.contains("needs proto v6"), "{err}");
+    let bytes = proto::encode_request_v(&delta, 6).unwrap();
+    assert_eq!(proto::decode_request(&bytes).unwrap(), delta);
+    // Forged v5 frame claiming the delta tag (9): refused at decode.
+    let err = format!("{:#}", proto::decode_request(&[5u8, 9]).unwrap_err());
+    assert!(err.contains("needs proto v6"), "{err}");
+
+    // A delta ack is v6-only in both directions too.
+    let ack = Response::DeltaAck {
+        merged: true,
+        rows_total: 7,
+    };
+    let err = format!("{:#}", proto::encode_response_v(&ack, 5).unwrap_err());
+    assert!(err.contains("needs proto v6"), "{err}");
+    // Forged v5 response: STATUS_OK then the delta tag (9).
+    let err = format!("{:#}", proto::decode_response(&[5u8, 0, 9]).unwrap_err());
+    assert!(err.contains("needs proto v6"), "{err}");
+
+    // Busy *degrades* below v6 instead of refusing: an old client must
+    // still learn it was shed, so the hint survives in the error text.
+    let busy = Response::Busy {
+        retry_after_ms: 120,
+        message: "per-connection ingest rate limit".into(),
+    };
+    let bytes = proto::encode_response_v(&busy, 5).unwrap();
+    assert_eq!(bytes[0], 5);
+    let Response::Error(msg) = proto::decode_response(&bytes).unwrap() else {
+        panic!("a v5 busy must decode as an error");
+    };
+    assert!(msg.contains("retry after 120 ms"), "{msg}");
+    assert_eq!(proto::decode_response(&proto::encode_response(&busy)).unwrap(), busy);
+    // A forged v5 frame claiming the busy status byte is refused.
+    let err = format!("{:#}", proto::decode_response(&[5u8, 2]).unwrap_err());
+    assert!(err.contains("needs proto v6"), "{err}");
+}
+
+/// Tenant auth: the configured token is required (compared in constant
+/// time — see `tenants::constant_time_eq_matches_slice_equality` for the
+/// primitive), a scope naming the wrong tenant is refused, and failures
+/// count under `qckm_auth_failures_total{tenant}`.
+#[test]
+fn scoped_requests_authorize_and_count_failures() {
+    let registry = Arc::new(Registry::new(Arc::new(FakeClock::new())));
+    let svc = service(ServiceConfig {
+        tenant: "acme".into(),
+        token: Some("s3cret".into()),
+        registry,
+        ..ServiceConfig::default()
+    });
+
+    svc.authorize(&Scope::new("acme", "s3cret")).unwrap();
+    // Routing already matched the tenant: an empty name means "whoever
+    // you are" and only the token is checked.
+    svc.authorize(&Scope::new("", "s3cret")).unwrap();
+
+    let err = format!("{:#}", svc.authorize(&Scope::new("acme", "wrong")).unwrap_err());
+    assert!(err.contains("auth failed"), "{err}");
+    let err = format!("{:#}", svc.authorize(&Scope::new("acme", "")).unwrap_err());
+    assert!(err.contains("auth failed"), "{err}");
+    // Wrong tenant name is a routing error, not an auth failure.
+    let err = format!("{:#}", svc.authorize(&Scope::new("beta", "s3cret")).unwrap_err());
+    assert!(err.contains("unknown tenant"), "{err}");
+
+    let page = svc.render_metrics();
+    crate::obs::prom::validate(&page).unwrap_or_else(|e| panic!("{e:#}\n{page}"));
+    assert!(
+        page.contains("qckm_auth_failures_total{tenant=\"acme\"} 2"),
+        "{page}"
+    );
+    // A named tenant labels every request-side series; the single-tenant
+    // default keeps the historical unlabeled names (checked by
+    // `metrics_page_covers_server_families_and_validates`).
+    assert!(page.contains("tenant=\"acme\""), "{page}");
+}
+
+/// Build one pre-pooled `.qsk` delta payload the way an aggregator does:
+/// sketch `rows` rows offline, serialize under the `edge-1` provenance.
+fn delta_bytes(svc: &SketchService, rows: usize, seed: u64) -> Vec<u8> {
+    let x = random_mat(rows, DIM, seed);
+    let mut pool = PooledSketch::new(svc.operator().sketch_len());
+    svc.operator().sketch_into(&x, &mut pool);
+    let prov = [ShardRecord {
+        label: "edge-1".into(),
+        rows: rows as u64,
+    }];
+    let mut bytes = Vec::new();
+    write_sketch_to(&mut bytes, svc.meta(), &pool, &prov).unwrap();
+    bytes
+}
+
+/// I-21: within one aggregator instance, only strictly increasing
+/// sequence numbers merge — replays and reordered stale deltas drop as
+/// recognized duplicates; a new instance (restart) resets the gate. Each
+/// aggregator id has an independent gate, and outcomes are counted under
+/// `qckm_deltas_total{outcome}`.
+#[test]
+fn delta_ingest_is_idempotent_per_instance() {
+    let svc = service(ServiceConfig::default());
+
+    let d1 = delta_bytes(&svc, 5, 1);
+    assert_eq!(svc.ingest_delta("edge-1", 7, 1, &d1).unwrap(), (true, 5));
+    // Exact replay (ack lost, flush re-sent): dropped, totals unchanged.
+    assert_eq!(svc.ingest_delta("edge-1", 7, 1, &d1).unwrap(), (false, 5));
+    // A stale reordered sequence is a replay too.
+    let d0 = delta_bytes(&svc, 9, 2);
+    assert_eq!(svc.ingest_delta("edge-1", 7, 0, &d0).unwrap(), (false, 5));
+    // The next sequence merges.
+    let d2 = delta_bytes(&svc, 3, 3);
+    assert_eq!(svc.ingest_delta("edge-1", 7, 2, &d2).unwrap(), (true, 8));
+    // Restart: new instance, sequence starts over — genuinely new data
+    // (a restarted aggregator begins from empty accumulators).
+    let d3 = delta_bytes(&svc, 2, 4);
+    assert_eq!(svc.ingest_delta("edge-1", 8, 1, &d3).unwrap(), (true, 10));
+    // A different aggregator has its own gate.
+    let d4 = delta_bytes(&svc, 4, 5);
+    assert_eq!(svc.ingest_delta("edge-2", 7, 1, &d4).unwrap(), (true, 14));
+
+    // All merged rows pool under the aggregator-id shard labels, exactly
+    // once each: the merged window equals offline pooling of the four
+    // admitted batches (replays contributed nothing).
+    let mut want = PooledSketch::new(svc.operator().sketch_len());
+    for (rows, seed) in [(5, 1u64), (3, 3), (2, 4), (4, 5)] {
+        svc.operator().sketch_into(&random_mat(rows, DIM, seed), &mut want);
+    }
+    assert_eq!(svc.merge_window(0).pool.sum(), want.sum());
+    let stats = svc.stats();
+    assert_eq!(
+        stats.shards,
+        vec![("edge-1".to_string(), 10), ("edge-2".to_string(), 4)]
+    );
+
+    // Corrupt payloads are refused before any state changes.
+    assert!(svc.ingest_delta("edge-1", 8, 2, b"not a qsk").is_err());
+    // A delta sketched under a different operator draw (same shape,
+    // different seed → different fingerprint) cannot merge.
+    let foreign = {
+        let qckm = MethodSpec::parse("qckm").unwrap();
+        let op = draw_operator(&qckm, FrequencyLaw::AdaptedRadius, M, DIM, SIGMA, SEED + 1);
+        let meta = SketchMeta::for_operator(&op, &qckm, SEED + 1);
+        let mut pool = PooledSketch::new(op.sketch_len());
+        op.sketch_into(&random_mat(2, DIM, 6), &mut pool);
+        let mut bytes = Vec::new();
+        write_sketch_to(
+            &mut bytes,
+            &meta,
+            &pool,
+            &[ShardRecord {
+                label: "edge-1".into(),
+                rows: 2,
+            }],
+        )
+        .unwrap();
+        bytes
+    };
+    assert!(svc.ingest_delta("edge-1", 8, 2, &foreign).is_err());
+
+    let page = svc.render_metrics();
+    assert!(page.contains("qckm_deltas_total{outcome=\"merged\"} 4"), "{page}");
+    assert!(page.contains("qckm_deltas_total{outcome=\"replayed\"} 2"), "{page}");
+}
+
+/// The multi-tenant node routes scoped frames to the addressed tenant's
+/// isolated state, refuses unknown and unscoped requests helpfully,
+/// answers stats with the node-wide occupancy block, renders one shared
+/// metrics page covering every tenant, and shuts down without needing an
+/// unnamed default tenant.
+#[test]
+fn node_routes_scoped_requests_across_tenants() {
+    use super::FrameHandler;
+
+    let registry = Arc::new(Registry::new(Arc::new(FakeClock::new())));
+    let tenant_svc = |name: &str, token: Option<&str>| {
+        Arc::new(service(ServiceConfig {
+            tenant: name.into(),
+            token: token.map(str::to_string),
+            registry: registry.clone(),
+            ..ServiceConfig::default()
+        }))
+    };
+    let mut tenants = std::collections::BTreeMap::new();
+    tenants.insert("acme".to_string(), tenant_svc("acme", Some("ta")));
+    tenants.insert("beta".to_string(), tenant_svc("beta", None));
+    let node = super::Node::new(tenants, None, registry).unwrap();
+    let mut conn = node.new_conn();
+    let mut call = |req: &Request| -> Response {
+        let frame = match node.handle(&mut conn, &proto::encode_request(req)) {
+            Handled::Reply(f) | Handled::Shutdown(f) => f,
+        };
+        proto::decode_response(&frame).unwrap()
+    };
+    let push = |scope: Scope, rows: usize, seed: u64| Request::Push {
+        scope,
+        shard: "s".into(),
+        method: String::new(),
+        dim: DIM as u32,
+        data: random_mat(rows, DIM, seed).as_slice().to_vec(),
+        trace: None,
+    };
+
+    // Scoped pushes land in their tenant's isolated accumulators.
+    let resp = call(&push(Scope::new("acme", "ta"), 3, 1));
+    assert!(matches!(resp, Response::PushAck { total_rows: 3, .. }), "{resp:?}");
+    let resp = call(&push(Scope::new("beta", ""), 2, 2));
+    assert!(matches!(resp, Response::PushAck { total_rows: 2, .. }), "{resp:?}");
+
+    // Bad scopes: wrong token, unknown tenant, and no tenant at all on a
+    // node hosting only named ones.
+    let Response::Error(msg) = call(&push(Scope::new("acme", "wrong"), 1, 3)) else {
+        panic!("expected an auth error");
+    };
+    assert!(msg.contains("auth failed"), "{msg}");
+    let Response::Error(msg) = call(&push(Scope::new("nope", ""), 1, 3)) else {
+        panic!("expected a routing error");
+    };
+    assert!(msg.contains("unknown tenant"), "{msg}");
+    let Response::Error(msg) = call(&push(Scope::default(), 1, 3)) else {
+        panic!("expected a routing error");
+    };
+    assert!(msg.contains("named tenants"), "{msg}");
+
+    // Stats answers from the addressed tenant and attaches every
+    // tenant's occupancy, in stable name order.
+    let Response::Stats(report) = call(&Request::Stats {
+        scope: Scope::new("beta", ""),
+    }) else {
+        panic!("expected stats");
+    };
+    assert_eq!(report.tenant, "beta");
+    assert_eq!(report.rows_total, 2);
+    assert_eq!(
+        report.tenants,
+        vec![("acme".to_string(), 3, 1), ("beta".to_string(), 2, 1)]
+    );
+
+    // One shared page covers both tenants, label-separated.
+    let Response::Metrics(page) = call(&Request::Metrics) else {
+        panic!("expected metrics");
+    };
+    crate::obs::prom::validate(&page).unwrap_or_else(|e| panic!("{e:#}\n{page}"));
+    assert!(page.contains("tenant=\"acme\""), "{page}");
+    assert!(page.contains("tenant=\"beta\""), "{page}");
+
+    // Shutdown is node-wide: no default tenant needed.
+    let handled = node.handle(&mut conn, &proto::encode_request(&Request::Shutdown));
+    assert!(matches!(handled, Handled::Shutdown(_)));
+}
+
+/// Satellite regression: a rate-limited push comes back as a typed busy
+/// refusal carrying a retry-after hint, and the retrying client sleeps
+/// the hint *on the same connection* (reconnecting would reset the
+/// per-connection bucket) until the push succeeds.
+#[test]
+fn rate_limited_pushes_back_off_and_eventually_succeed() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let svc = Arc::new(service(ServiceConfig::default()));
+    let mut tenants = std::collections::BTreeMap::new();
+    tenants.insert(String::new(), Arc::clone(&svc));
+    let node = super::Node::new(
+        tenants,
+        // One-frame burst, 50 tokens/s: the second immediate push is shed
+        // with a ~20 ms hint.
+        Some(super::RateLimit {
+            rate: 50.0,
+            burst: 1.0,
+        }),
+        Arc::clone(svc.registry()),
+    )
+    .unwrap();
+    let server = std::thread::spawn(move || super::serve_node(listener, Arc::new(node)).unwrap());
+
+    let policy = super::RetryPolicy {
+        attempts: 5,
+        base: std::time::Duration::from_millis(1),
+        cap: std::time::Duration::from_millis(2),
+    };
+    let mut rc = super::RetryClient::connect(&addr, "qckm", policy).unwrap();
+    rc.push("s", &random_mat(4, DIM, 1)).unwrap();
+    // The burst token is spent: this push is shed at least once, then
+    // succeeds after the client honors the server's hint.
+    rc.push("s", &random_mat(4, DIM, 2)).unwrap();
+    assert_eq!(svc.stats().rows_total, 8, "both pushes must land exactly once");
+
+    // The shed frames were counted.
+    let page = svc.render_metrics();
+    assert!(page.contains("qckm_rate_limited_total"), "{page}");
+    assert!(!page.contains("qckm_rate_limited_total 0\n"), "{page}");
 
     super::Client::connect(&addr).unwrap().shutdown().unwrap();
     server.join().unwrap();

@@ -28,7 +28,7 @@ use qckm::decoder::DecoderSpec;
 use qckm::obs::trace::TraceContext;
 use qckm::rng::Rng;
 use qckm::server::proto::{
-    self, CentroidReport, QuerySpec, Request, Response, StatsReport, MAX_FRAME_BYTES,
+    self, CentroidReport, QuerySpec, Request, Response, Scope, StatsReport, MAX_FRAME_BYTES,
 };
 use qckm::sketch::PooledSketch;
 use qckm::stream::{
@@ -116,6 +116,7 @@ fn corpus_trace() -> TraceContext {
 fn request_corpus() -> Vec<Vec<u8>> {
     let requests = [
         Request::Push {
+            scope: Scope::default(),
             shard: "sensor-7".into(),
             method: "qckm:bits=2".into(),
             dim: 3,
@@ -123,6 +124,7 @@ fn request_corpus() -> Vec<Vec<u8>> {
             trace: None,
         },
         Request::Push {
+            scope: Scope::new("acme", "s3cret-token"),
             shard: "s".into(),
             method: String::new(),
             dim: 1,
@@ -130,6 +132,7 @@ fn request_corpus() -> Vec<Vec<u8>> {
             trace: Some(corpus_trace()),
         },
         Request::Query {
+            scope: Scope::new("acme", ""),
             spec: QuerySpec {
                 k: 4,
                 window: 2,
@@ -143,17 +146,35 @@ fn request_corpus() -> Vec<Vec<u8>> {
             trace: Some(corpus_trace()),
         },
         Request::Snapshot {
+            scope: Scope::default(),
             window: 7,
             method: "qckm".into(),
             trace: None,
         },
-        Request::Roll,
-        Request::Stats,
+        Request::Roll {
+            scope: Scope::default(),
+        },
+        Request::Stats {
+            scope: Scope::new("beta", "tok"),
+        },
         Request::Metrics,
-        Request::Trace { id: None, limit: 0 },
         Request::Trace {
+            scope: Scope::default(),
+            id: None,
+            limit: 0,
+        },
+        Request::Trace {
+            scope: Scope::default(),
             id: Some(corpus_trace().trace_id),
             limit: 16,
+        },
+        Request::Delta {
+            scope: Scope::new("acme", "s3cret-token"),
+            agg_id: "edge-1".into(),
+            instance: 7,
+            seq: 3,
+            sketch: vec![0xAB; 32],
+            trace: None,
         },
         Request::Shutdown,
     ];
@@ -192,7 +213,17 @@ fn response_corpus() -> Vec<Vec<u8>> {
             cache_misses: 6,
             shards: vec![("a".into(), 40), ("b".into(), 37)],
             decoders: vec![("clompr".into(), 9), ("hier".into(), 2)],
+            tenant: "acme".into(),
+            tenants: vec![("acme".into(), 77, 2), ("beta".into(), 0, 0)],
         }),
+        Response::Busy {
+            retry_after_ms: 120,
+            message: "per-connection ingest rate limit".into(),
+        },
+        Response::DeltaAck {
+            merged: true,
+            rows_total: 4096,
+        },
         Response::Metrics(
             "# HELP qckm_requests_total Requests received, by verb.\n\
              # TYPE qckm_requests_total counter\n\
@@ -336,6 +367,7 @@ fn fuzz_trace_frames_never_panic() {
     let mut corpus: Vec<Vec<u8>> = Vec::new();
     let traced = [
         Request::Push {
+            scope: Scope::default(),
             shard: "s".into(),
             method: String::new(),
             dim: 2,
@@ -343,6 +375,7 @@ fn fuzz_trace_frames_never_panic() {
             trace: Some(corpus_trace()),
         },
         Request::Query {
+            scope: Scope::default(),
             spec: QuerySpec {
                 k: 2,
                 window: 0,
@@ -356,12 +389,18 @@ fn fuzz_trace_frames_never_panic() {
             trace: Some(corpus_trace()),
         },
         Request::Snapshot {
+            scope: Scope::default(),
             window: 0,
             method: String::new(),
             trace: Some(corpus_trace()),
         },
-        Request::Trace { id: None, limit: 1 },
         Request::Trace {
+            scope: Scope::default(),
+            id: None,
+            limit: 1,
+        },
+        Request::Trace {
+            scope: Scope::default(),
             id: Some(corpus_trace().trace_id),
             limit: proto::MAX_TRACE_LIMIT,
         },
@@ -396,6 +435,152 @@ fn fuzz_trace_frames_never_panic() {
         }
     }
     assert_allocations_capped("trace_frames");
+}
+
+/// Tenant-scoped and aggregation frames get the same concentrated
+/// treatment: the v6 scope block (tenant + token, including both at their
+/// maximum lengths), the delta verb carrying a real `.qsk` payload, and
+/// the busy / delta-ack responses. v5 and v4 siblings of the scope-free
+/// carriers ride along so mutants that land on an older-version frame
+/// exercise the downgrade paths — those decode scope-free and re-encode
+/// canonically at the current version, a fixed point from the first
+/// re-decode on.
+#[test]
+fn fuzz_tenant_frames_never_panic() {
+    let mut corpus: Vec<Vec<u8>> = Vec::new();
+
+    // A genuine delta payload: the same construction `qckm aggregate`
+    // flushes upstream, so mutations sit just off a real sketch stream.
+    let spec = MethodSpec::parse("qckm:bits=2").unwrap();
+    let op = draw_operator(&spec, FrequencyLaw::AdaptedRadius, 12, 3, 1.0, 31);
+    let mut rng = Rng::new(31 ^ 0xABCD);
+    let x = Mat::from_fn(50, 3, |_, _| rng.gaussian());
+    let mut pool = PooledSketch::new(op.sketch_len());
+    op.sketch_into(&x, &mut pool);
+    let meta = SketchMeta::for_operator(&op, &spec, 31);
+    let mut qsk = Vec::new();
+    write_sketch_to(&mut qsk, &meta, &pool, &[]).unwrap();
+
+    let scoped = [
+        Request::Push {
+            scope: Scope::new("acme", "s3cret-token"),
+            shard: "edge/sensor-3".into(),
+            method: "qckm:bits=2".into(),
+            dim: 3,
+            data: vec![0.5, -0.5, 1.0],
+            trace: Some(corpus_trace()),
+        },
+        Request::Push {
+            scope: Scope::new(
+                "t".repeat(proto::MAX_TENANT_BYTES),
+                "k".repeat(proto::MAX_TOKEN_BYTES),
+            ),
+            shard: "s".into(),
+            method: String::new(),
+            dim: 1,
+            data: vec![0.25],
+            trace: None,
+        },
+        Request::Query {
+            scope: Scope::new("beta", ""),
+            spec: QuerySpec {
+                k: 2,
+                window: 0,
+                replicates: 1,
+                seed: None,
+                lo: -1.0,
+                hi: 1.0,
+                decoder: String::new(),
+            },
+            method: String::new(),
+            trace: None,
+        },
+        Request::Snapshot {
+            scope: Scope::new("acme", "s3cret-token"),
+            window: 1,
+            method: String::new(),
+            trace: None,
+        },
+        Request::Roll {
+            scope: Scope::new("acme", "s3cret-token"),
+        },
+        Request::Stats {
+            scope: Scope::new("beta", "tok"),
+        },
+        Request::Trace {
+            scope: Scope::new("acme", ""),
+            id: None,
+            limit: 4,
+        },
+        Request::Delta {
+            scope: Scope::new("acme", "s3cret-token"),
+            agg_id: "edge-1".into(),
+            instance: 0x1122_3344_5566_7788,
+            seq: 42,
+            sketch: qsk,
+            trace: Some(corpus_trace()),
+        },
+        Request::Delta {
+            scope: Scope::default(),
+            agg_id: "e".into(),
+            instance: 1,
+            seq: 1,
+            sketch: vec![0; 8],
+            trace: None,
+        },
+    ];
+    corpus.extend(scoped.iter().map(proto::encode_request));
+    for req in scoped.iter() {
+        // Older-version siblings must be scope-free (and the delta verb
+        // has no pre-v6 form at all).
+        let mut old = req.clone();
+        match &mut old {
+            Request::Push { scope, .. }
+            | Request::Query { scope, .. }
+            | Request::Snapshot { scope, .. }
+            | Request::Roll { scope }
+            | Request::Stats { scope }
+            | Request::Trace { scope, .. } => *scope = Scope::default(),
+            _ => continue,
+        }
+        corpus.push(proto::encode_request_v(&old, 5).unwrap());
+        let v4_ok = !matches!(
+            &old,
+            Request::Push { trace: Some(_), .. }
+                | Request::Query { trace: Some(_), .. }
+                | Request::Snapshot { trace: Some(_), .. }
+                | Request::Trace { .. }
+        );
+        if v4_ok {
+            corpus.push(proto::encode_request_v(&old, 4).unwrap());
+        }
+    }
+    corpus.push(proto::encode_response(&Response::Busy {
+        retry_after_ms: 20,
+        message: "per-connection ingest rate limit".into(),
+    }));
+    corpus.push(proto::encode_response(&Response::DeltaAck {
+        merged: false,
+        rows_total: 77,
+    }));
+
+    let mut m = Mutator::new(fuzz_seed("tenant_frames"));
+    for _ in 0..fuzz_cases() {
+        let input = m.mutate(&corpus);
+        if let Ok(req) = proto::decode_request(&input) {
+            let canon = proto::encode_request(&req);
+            let again = proto::decode_request(&canon)
+                .expect("re-decoding a canonical encoding must succeed");
+            assert_eq!(proto::encode_request(&again), canon);
+        }
+        if let Ok(resp) = proto::decode_response(&input) {
+            let canon = proto::encode_response(&resp);
+            let again = proto::decode_response(&canon)
+                .expect("re-decoding a canonical encoding must succeed");
+            assert_eq!(proto::encode_response(&again), canon);
+        }
+    }
+    assert_allocations_capped("tenant_frames");
 }
 
 #[test]

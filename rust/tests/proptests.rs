@@ -10,7 +10,8 @@ use qckm::obs::trace::TraceContext;
 use qckm::optim::nnls;
 use qckm::parallel::Parallelism;
 use qckm::rng::Rng;
-use qckm::server::proto::{self, CentroidReport, QuerySpec, Request, Response, StatsReport};
+use qckm::server::proto::{self, CentroidReport, QuerySpec, Request, Response, Scope, StatsReport};
+use qckm::server::{ServiceConfig, SketchService};
 use qckm::sketch::{BitAggregator, PooledSketch, SketchOperator};
 use qckm::stream::{pool_fingerprint, read_sketch_from, write_sketch_to, ShardRecord, SketchMeta};
 use qckm::testkit::{property, Gen};
@@ -373,12 +374,28 @@ fn random_trace(g: &mut Gen) -> Option<TraceContext> {
     g.bool().then(|| random_trace_context(g))
 }
 
+/// Empty half the time (the pre-v6 shape every old client sends), else a
+/// tenant name / token pair up to the wire caps.
+fn random_scope(g: &mut Gen) -> Scope {
+    if g.bool() {
+        return Scope::default();
+    }
+    let tenant = ascii_label(g, 0, proto::MAX_TENANT_BYTES);
+    let token = if g.bool() {
+        String::new()
+    } else {
+        ascii_label(g, 1, proto::MAX_TOKEN_BYTES)
+    };
+    Scope::new(tenant, token)
+}
+
 fn random_request(g: &mut Gen) -> Request {
-    match g.usize_in(0, 7) {
+    match g.usize_in(0, 8) {
         0 => {
             let dim = g.usize_in(1, 6);
             let rows = g.usize_in(1, 20);
             Request::Push {
+                scope: random_scope(g),
                 shard: ascii_label(g, 1, 24),
                 method: if g.bool() { String::new() } else { "qckm:bits=2".into() },
                 dim: dim as u32,
@@ -387,32 +404,58 @@ fn random_request(g: &mut Gen) -> Request {
             }
         }
         1 => Request::Query {
+            scope: random_scope(g),
             spec: random_query_spec(g),
             method: ascii_label(g, 0, 8),
             trace: random_trace(g),
         },
         2 => Request::Snapshot {
+            scope: random_scope(g),
             window: g.usize_in(0, 9) as u32,
             method: ascii_label(g, 0, 8),
             trace: random_trace(g),
         },
-        3 => Request::Roll,
-        4 => Request::Stats,
+        3 => Request::Roll {
+            scope: random_scope(g),
+        },
+        4 => Request::Stats {
+            scope: random_scope(g),
+        },
         5 => Request::Metrics,
         6 => Request::Trace {
+            scope: random_scope(g),
             id: g.bool().then(|| random_trace_context(g).trace_id),
             limit: g.usize_in(0, proto::MAX_TRACE_LIMIT as usize) as u32,
         },
+        7 => {
+            let len = g.usize_in(1, 256);
+            Request::Delta {
+                scope: random_scope(g),
+                agg_id: ascii_label(g, 1, 24),
+                instance: g.rng().next_u64(),
+                seq: g.rng().next_u64(),
+                sketch: (0..len).map(|_| g.rng().next_u64() as u8).collect(),
+                trace: random_trace(g),
+            }
+        }
         _ => Request::Shutdown,
     }
 }
 
 fn random_response(g: &mut Gen) -> Response {
-    match g.usize_in(0, 8) {
+    match g.usize_in(0, 10) {
         0 => Response::Error(ascii_label(g, 1, 200)),
         1 => Response::PushAck {
             shard_rows: g.rng().next_u64(),
             total_rows: g.rng().next_u64(),
+        },
+        9 => Response::Busy {
+            retry_after_ms: g.rng().next_u64(),
+            message: ascii_label(g, 0, 120),
+        },
+        10 => Response::DeltaAck {
+            merged: g.bool(),
+            rows_total: g.rng().next_u64(),
         },
         2 => {
             let k = g.usize_in(1, 8);
@@ -443,6 +486,9 @@ fn random_response(g: &mut Gen) -> Response {
             let decoders = (0..g.usize_in(0, 3))
                 .map(|_| (ascii_label(g, 1, 16), g.rng().next_u64()))
                 .collect();
+            let tenants = (0..g.usize_in(0, 4))
+                .map(|_| (ascii_label(g, 1, 16), g.rng().next_u64(), g.rng().next_u64()))
+                .collect();
             Response::Stats(StatsReport {
                 method: ascii_label(g, 1, 16),
                 epoch: g.rng().next_u64(),
@@ -453,6 +499,8 @@ fn random_response(g: &mut Gen) -> Response {
                 cache_misses: g.rng().next_u64(),
                 shards,
                 decoders,
+                tenant: ascii_label(g, 0, 16),
+                tenants,
             })
         }
         6 => Response::Metrics(ascii_label(g, 0, 400)),
@@ -462,25 +510,64 @@ fn random_response(g: &mut Gen) -> Response {
 }
 
 /// A request is representable at proto v4 exactly when it carries no
-/// trace content: trace-free requests round-trip through a v4 frame
-/// unchanged, while traced ones (and the trace verb) refuse to encode
-/// rather than silently dropping their context.
+/// v5/v6 content — no trace context, no tenant scope, and not one of the
+/// newer verbs: those round-trip through a v4 frame unchanged, while the
+/// rest refuse to encode rather than silently dropping fields.
 #[test]
-fn prop_v4_frames_round_trip_iff_trace_free() {
-    property("v4 encoding iff trace-free", 300, |g| {
+fn prop_v4_frames_round_trip_iff_v4_representable() {
+    property("v4 encoding iff v4-representable", 300, |g| {
         let req = random_request(g);
         let traced = matches!(req, Request::Trace { .. }) || req.trace_context().is_some();
+        let scoped = req.scope().is_some_and(|s| !s.is_empty());
+        let delta = matches!(req, Request::Delta { .. });
         match proto::encode_request_v(&req, 4) {
             Ok(payload) => {
-                assert!(!traced, "a traced request must not encode at v4: {req:?}");
+                assert!(
+                    !traced && !scoped && !delta,
+                    "v5/v6 content must not encode at v4: {req:?}"
+                );
                 assert_eq!(payload[0], 4, "the frame must carry the requested version");
                 let (version, back) = proto::decode_request_v(&payload).unwrap();
                 assert_eq!(version, 4);
                 assert_eq!(back, req);
             }
             Err(e) => {
-                assert!(traced, "a trace-free request must encode at v4: {req:?}");
-                assert!(format!("{e:#}").contains("needs proto v5"), "{e:#}");
+                assert!(
+                    traced || scoped || delta,
+                    "a v4-representable request must encode at v4: {req:?}"
+                );
+                assert!(format!("{e:#}").contains("needs proto v"), "{e:#}");
+            }
+        }
+    });
+}
+
+/// The v6 capabilities gate independently of the v5 ones: at v5, exactly
+/// the requests with a non-empty tenant scope or the delta verb refuse to
+/// encode — traced requests are fine there.
+#[test]
+fn prop_v5_frames_round_trip_iff_unscoped() {
+    property("v5 encoding iff unscoped and not delta", 300, |g| {
+        let req = random_request(g);
+        let scoped = req.scope().is_some_and(|s| !s.is_empty());
+        let delta = matches!(req, Request::Delta { .. });
+        match proto::encode_request_v(&req, 5) {
+            Ok(payload) => {
+                assert!(
+                    !scoped && !delta,
+                    "v6 content must not encode at v5: {req:?}"
+                );
+                assert_eq!(payload[0], 5);
+                let (version, back) = proto::decode_request_v(&payload).unwrap();
+                assert_eq!(version, 5);
+                assert_eq!(back, req);
+            }
+            Err(e) => {
+                assert!(
+                    scoped || delta,
+                    "a v5-representable request must encode at v5: {req:?}"
+                );
+                assert!(format!("{e:#}").contains("needs proto v6"), "{e:#}");
             }
         }
     });
@@ -516,6 +603,128 @@ fn prop_response_frames_round_trip() {
         proto::write_frame(&mut wire, &payload).unwrap();
         let read = proto::read_frame(&mut &wire[..]).unwrap().expect("one frame");
         assert_eq!(read, payload);
+    });
+}
+
+// -------------------------------------------------------------- aggregation
+
+/// One `.qsk` delta payload, the shape an aggregator flushes upstream.
+fn delta_frame(meta: &SketchMeta, pool: &PooledSketch, label: &str) -> Vec<u8> {
+    let prov = [ShardRecord {
+        label: label.into(),
+        rows: pool.count(),
+    }];
+    let mut bytes = Vec::new();
+    write_sketch_to(&mut bytes, meta, pool, &prov).unwrap();
+    bytes
+}
+
+/// I-20 + I-21 together: a random aggregation tree — batches pushed
+/// directly to the root, batches flushed as deltas by an edge aggregator,
+/// and batches routed through a two-level edge → mid → root chain — pools
+/// to the bitwise-identical sketch as flat offline pooling of the same
+/// batches, even with replayed and stale deltas interleaved at every
+/// level (the idempotency gates drop them, so nothing double-counts).
+#[test]
+fn prop_aggregator_trees_equal_flat_pooling_with_replays() {
+    property("aggregator tree == flat pooling", 10, |g| {
+        let dim = g.usize_in(1, 5);
+        let m = g.usize_in(1, 40);
+        let sigma = g.f64_in(0.5, 2.0);
+        let seed = g.rng().next_u64();
+        let spec = qckm::method::MethodSpec::parse("qckm").unwrap();
+        // The operator draw is a pure function of its parameters, so
+        // every node in the tree — and the offline reference — holds the
+        // identical operator, exactly as shared spec files guarantee in
+        // deployment.
+        let draw = || qckm::stream::draw_operator(&spec, FrequencyLaw::AdaptedRadius, m, dim, sigma, seed);
+        let op = draw();
+        let meta = SketchMeta::for_operator(&op, &spec, seed);
+        let root = SketchService::new(draw(), meta.clone(), ServiceConfig::default());
+        let mid = SketchService::new(draw(), meta.clone(), ServiceConfig::default());
+
+        let (inst_edge, inst_mid) = (g.rng().next_u64(), g.rng().next_u64());
+        let (mut seq_edge, mut seq_mid) = (0u64, 0u64);
+        let mut edge_flushes: Vec<(u64, Vec<u8>)> = Vec::new();
+        let mut want = PooledSketch::new(op.sketch_len());
+        let batches = g.usize_in(1, 6);
+        for i in 0..batches {
+            let rows = g.usize_in(1, 30);
+            let x = Mat::from_fn(rows, dim, |_, _| g.gaussian());
+            op.sketch_into(&x, &mut want);
+            let mut partial = PooledSketch::new(op.sketch_len());
+            op.sketch_into(&x, &mut partial);
+            match g.usize_in(0, 2) {
+                // Straight to the root, like any ordinary pusher.
+                0 => {
+                    root.ingest(&format!("direct-{i}"), &x).unwrap();
+                }
+                // Through the edge aggregator: one delta per batch.
+                1 => {
+                    seq_edge += 1;
+                    let bytes = delta_frame(&meta, &partial, "edge-1");
+                    let (merged, _) =
+                        root.ingest_delta("edge-1", inst_edge, seq_edge, &bytes).unwrap();
+                    assert!(merged, "fresh delta seq {seq_edge} must merge");
+                    if g.bool() {
+                        // At-least-once replay (lost ack): dropped.
+                        let (merged, _) =
+                            root.ingest_delta("edge-1", inst_edge, seq_edge, &bytes).unwrap();
+                        assert!(!merged, "replayed delta seq {seq_edge} must drop");
+                    }
+                    edge_flushes.push((seq_edge, bytes));
+                }
+                // Two levels: edge-2 → mid, mid flushes to the root below.
+                _ => {
+                    seq_mid += 1;
+                    let bytes = delta_frame(&meta, &partial, "edge-2");
+                    let (merged, _) =
+                        mid.ingest_delta("edge-2", inst_mid, seq_mid, &bytes).unwrap();
+                    assert!(merged);
+                    if g.bool() {
+                        let (merged, _) =
+                            mid.ingest_delta("edge-2", inst_mid, seq_mid, &bytes).unwrap();
+                        assert!(!merged, "mid-level gate must drop the replay");
+                    }
+                }
+            }
+        }
+
+        // The mid aggregator drains everything it pooled as one delta.
+        let pooled = mid.merge_window(0).pool;
+        if pooled.count() > 0 {
+            let bytes = delta_frame(&meta, &pooled, "mid");
+            let (merged, _) = root.ingest_delta("mid", inst_mid, 1, &bytes).unwrap();
+            assert!(merged);
+            if g.bool() {
+                let (merged, _) = root.ingest_delta("mid", inst_mid, 1, &bytes).unwrap();
+                assert!(!merged, "the mid flush replay must drop");
+            }
+        }
+        // A stale out-of-order re-send from the edge's past: dropped.
+        if !edge_flushes.is_empty() {
+            let (seq, bytes) = &edge_flushes[g.usize_in(0, edge_flushes.len() - 1)];
+            let (merged, _) = root.ingest_delta("edge-1", inst_edge, *seq, bytes).unwrap();
+            assert!(!merged, "stale seq {seq} must drop after seq {seq_edge}");
+        }
+        // An edge restart: new instance, sequence restarts, data merges —
+        // a restarted aggregator begins empty, so its stream is new.
+        if g.bool() {
+            let rows = g.usize_in(1, 10);
+            let x = Mat::from_fn(rows, dim, |_, _| g.gaussian());
+            op.sketch_into(&x, &mut want);
+            let mut partial = PooledSketch::new(op.sketch_len());
+            op.sketch_into(&x, &mut partial);
+            let bytes = delta_frame(&meta, &partial, "edge-1");
+            let (merged, _) = root
+                .ingest_delta("edge-1", inst_edge.wrapping_add(1), 1, &bytes)
+                .unwrap();
+            assert!(merged, "a restarted instance must merge from seq 1");
+        }
+
+        let got = root.merge_window(0).pool;
+        assert_eq!(got.count(), want.count(), "row conservation across the tree");
+        assert_eq!(got.sum(), want.sum(), "tree pooling must be bit-exact");
     });
 }
 
