@@ -7,6 +7,9 @@
 //! show *where* the time went, not just how much there was.
 //!
 //! Run: `cargo bench --offline`. Results land in `BENCH_stage.json`.
+//! `-- --smoke` shrinks every grid to a seconds-long sanity pass (the CI
+//! mode: proves the bench and the JSON emitter still work, numbers are not
+//! publication-grade).
 
 #[path = "harness.rs"]
 mod harness;
@@ -53,10 +56,15 @@ fn delta(cell: &str, stage: &'static str, h: &Histogram, before: (u64, f64)) -> 
 }
 
 fn main() {
-    println!("== per-stage timing benchmarks (threads x rows grid) ==");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "== per-stage timing benchmarks (threads x rows grid{}) ==",
+        if smoke { ", smoke mode" } else { "" }
+    );
     let spec = MethodSpec::parse("qckm").unwrap();
     let op = draw_operator(&spec, FrequencyLaw::AdaptedRadius, M, DIM, 1.0, 0);
     let m = qckm::obs::lib_metrics();
+    println!("compute kernels: {}", qckm::kernel::describe());
 
     let mut results: Vec<(String, Summary, f64)> = Vec::new();
     let mut stages: Vec<StageDelta> = Vec::new();
@@ -65,14 +73,23 @@ fn main() {
     // the outer wall time; the histogram deltas attribute it to windows
     // and chunks.
     let mut rng = Rng::new(3);
-    for rows in [2048usize, 8192] {
+    let sketch_rows: &[usize] = if smoke { &[2048] } else { &[2048, 8192] };
+    let sketch_threads: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    for &rows in sketch_rows {
         let data = Mat::from_fn(rows, DIM, |_, _| rng.gaussian());
-        for threads in [1usize, 2, 4] {
+        for &threads in sketch_threads {
             let cell = format!("sketch_{rows}x{DIM}_t{threads}");
             let par = Parallelism::fixed(threads);
             let window_before = snap(&m.stream_window_seconds);
             let chunk_before = snap(&m.parallel_chunk_seconds);
-            let s = bench(&cell, 1, if rows > 4096 { 60 } else { 150 }, || {
+            let budget = if smoke {
+                20
+            } else if rows > 4096 {
+                60
+            } else {
+                150
+            };
+            let s = bench(&cell, 1, budget, || {
                 let mut reader = MatChunkedReader::new(&data);
                 let mut pool = PooledSketch::new(op.sketch_len());
                 qckm::stream::sketch_reader(
@@ -92,9 +109,52 @@ fn main() {
         }
     }
 
+    // --- Encode-kernel comparison: the identical parallel encode under
+    // each forced dispatch mode (I-22 guarantees identical *outputs*, so
+    // any delta here is pure kernel speed). `qckm` exercises the bit-panel
+    // + SIMD projection path, `ckm` (cosine) the SIMD dot/axpy side alone.
+    println!();
+    let ckm_op = draw_operator(
+        &MethodSpec::parse("ckm").unwrap(),
+        FrequencyLaw::AdaptedRadius,
+        M,
+        DIM,
+        1.0,
+        0,
+    );
+    let kernel_rows: usize = if smoke { 2048 } else { 8192 };
+    let kernel_threads: &[usize] = if smoke { &[1] } else { &[1, 4] };
+    let kernel_data = Mat::from_fn(kernel_rows, DIM, |_, _| rng.gaussian());
+    for (op_name, kop) in [("qckm", &op), ("ckm", &ckm_op)] {
+        for &threads in kernel_threads {
+            let par = Parallelism::fixed(threads);
+            for mode in [
+                qckm::kernel::KernelMode::Scalar,
+                qckm::kernel::KernelMode::Wide,
+            ] {
+                qckm::kernel::set_mode(mode);
+                let cell = format!(
+                    "encode_kernel_{op_name}_{}_{kernel_rows}x{DIM}_t{threads}",
+                    mode.name()
+                );
+                let s = bench(&cell, 1, if smoke { 20 } else { 60 }, || {
+                    black_box(op_sketch(kop, &kernel_data, &par));
+                });
+                s.print_rate("rows", kernel_rows as f64);
+                results.push((cell, s, kernel_rows as f64));
+            }
+        }
+    }
+    qckm::kernel::set_mode(qckm::kernel::default_mode());
+
     // --- Decode split: one CL-OMPR decode per iteration; the Step-1 /
     // Step-5 histogram deltas split the decoder's wall time into its two
     // dominant phases (the gap to the whole-decode time is NNLS + glue).
+    // Skipped in smoke mode (a single decode dwarfs the smoke budget).
+    if smoke {
+        write_stage_json(&results, &stages);
+        return;
+    }
     println!();
     let mut data_rng = Rng::new(7);
     let mix = qckm::data::gaussian_mixture_pm1(4096, DIM, 4, &mut data_rng);
@@ -137,6 +197,14 @@ fn main() {
     }
 
     write_stage_json(&results, &stages);
+}
+
+/// One full parallel encode — the unit of work the kernel-comparison cells
+/// time under each dispatch mode.
+fn op_sketch(op: &qckm::sketch::SketchOperator, x: &Mat, par: &Parallelism) -> u64 {
+    let mut pool = PooledSketch::new(op.sketch_len());
+    op.sketch_into_par(x, &mut pool, par);
+    pool.count()
 }
 
 /// Emit `BENCH_stage.json` at the repo root: the usual per-cell timing

@@ -137,6 +137,9 @@ pub fn run(args: Vec<String>) -> Result<()> {
     // lazily. Touch them up front so the first scrape already lists the
     // full catalog, not just whatever stages have run.
     qckm::obs::lib_metrics();
+    // One line so operators can see which encode path this box runs without
+    // scraping the `qckm_kernel_info` gauge.
+    eprintln!("compute kernels: {}", qckm::kernel::describe());
 
     let mut tenant_map: BTreeMap<String, Arc<SketchService>> = BTreeMap::new();
     if decls.is_empty() {

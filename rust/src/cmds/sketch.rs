@@ -42,10 +42,15 @@ pub fn run(args: Vec<String>) -> Result<()> {
     .opt("shard", "NAME", None, "provenance label (default: the data file stem)")
     .opt("config", "FILE", None, "TOML job config")
     .opt("out", "FILE", None, "write the pooled sketch (.qsk) here")
-    .opt("out-csv", "FILE", None, "also write the mean sketch as one CSV row");
+    .opt("out-csv", "FILE", None, "also write the mean sketch as one CSV row")
+    .flag(
+        "mmap",
+        "raw-f64 input: windowed positional reader (no buffered copy)",
+    );
     let parsed = spec.parse(args)?;
     let cfg = job_from(&parsed)?;
     let data_path = parsed.get("data").context("--data is required")?;
+    let mmap = parsed.flag("mmap");
     let par = Parallelism::fixed(cfg.threads);
     let shard = shard_label(&parsed, data_path);
 
@@ -61,7 +66,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
     // data-dependent heuristic needs the dataset once, in memory.
     let (op, pool) = match cfg.sketch.sigma {
         SigmaHeuristic::Fixed(sigma) => {
-            let mut reader = stream::open_dataset(Path::new(data_path))?;
+            let mut reader = stream::open_dataset_with(Path::new(data_path), mmap)?;
             let op = stream::draw_operator(
                 &method,
                 cfg.sketch.law,
@@ -79,7 +84,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
             (op, pool)
         }
         heuristic => {
-            let mut reader = stream::open_dataset(Path::new(data_path))?;
+            let mut reader = stream::open_dataset_with(Path::new(data_path), mmap)?;
             let x = stream::read_all(reader.as_mut())?;
             let sigma = heuristic.resolve(&x, &mut Rng::new(cfg.seed).substream(1));
             eprintln!(
@@ -173,7 +178,7 @@ fn sketch_append(
     let method = MethodSpec::parse(&meta.method)?;
     let wire = wire_from(parsed, &method)?;
     let before = pool.count();
-    let mut reader = stream::open_dataset(Path::new(data_path))?;
+    let mut reader = stream::open_dataset_with(Path::new(data_path), parsed.flag("mmap"))?;
     let rows = stream::sketch_reader(&op, reader.as_mut(), wire, &mut pool, par)?;
     if rows == 0 {
         bail!("{data_path}: empty dataset");

@@ -1,0 +1,147 @@
+//! Transposed bit-panel encode/pool for ±1-valued signatures.
+//!
+//! The QCKM signature is one bit per slot, but the original fold evaluated
+//! that bit as an `f64` and pooled it with f64 additions — one add per row
+//! per slot. This module keeps the projection (that part is genuinely
+//! dense) and replaces everything after the sign with word-level
+//! parallelism: the signs of up to 64 rows are packed *transposed* into one
+//! `u64` lane per slot (bit `i` of the slot-`j` word is row `i`'s sign),
+//! and pooling a whole 64-row panel into a slot costs a single
+//! `count_ones()` instead of 64 additions.
+//!
+//! ## Exactness (I-22)
+//!
+//! A batch of `b ≤ 64` rows contributes `Σ_i ±1 = 2·ones − b` to each
+//! slot — an integer of magnitude ≤ 64, exactly representable in `f64`.
+//! The f64 fold computes the same value by accumulating the ±1 terms one
+//! by one, and every partial sum along the way is also a small integer, so
+//! no rounding occurs anywhere: the panel's `(2·ones − b) as f64` is
+//! bit-for-bit the fold's accumulator. Both paths then add that one value
+//! to the pool in the same per-batch order. Locked by
+//! `prop_bit_panel_pooling_matches_scalar_fold_bitwise` and the `i22_*`
+//! determinism tests.
+//!
+//! Two entry points mirror the two legacy encode conventions (their
+//! projections round differently in the last ulp, so each panel fold
+//! replicates its own legacy path exactly):
+//!
+//! * [`pool_dense_range`] mirrors `SketchOperator::sketch_range_into`
+//!   (ξ-initialized batched projection, pooled into an f64 sum);
+//! * [`pool_bits_range`] mirrors per-row `encode_point_bits` +
+//!   `BitAggregator::add` (zero-initialized projection with ξ added after
+//!   the fold, pooled into integer one-counts).
+
+use crate::linalg::Mat;
+use crate::signature::Signature;
+use crate::sketch::BitAggregator;
+use std::ops::Range;
+
+/// Panel height: one `u64` lane holds one sign bit per row.
+pub const PANEL_ROWS: usize = 64;
+
+/// Pool rows `rows` of `x` into the running f64 slot sums `sum`
+/// (length `2M`), bit-for-bit like the dense fold in
+/// `SketchOperator::sketch_range_into` — see the module docs.
+///
+/// `om` is the `n × M` frequency matrix, `xi` the `M` dithers, and `sig`
+/// must be ±1-valued (`Signature::is_binary`); the caller dispatches.
+pub fn pool_dense_range(
+    om: &Mat,
+    xi: &[f64],
+    sig: &dyn Signature,
+    x: &Mat,
+    rows: Range<usize>,
+    sum: &mut [f64],
+) {
+    let m = om.cols();
+    debug_assert_eq!(xi.len(), m);
+    debug_assert_eq!(sum.len(), 2 * m);
+    debug_assert_eq!(x.cols(), om.rows());
+    let mut proj = vec![0.0; PANEL_ROWS * m];
+    let mut s0 = vec![false; m];
+    let mut s1 = vec![false; m];
+    let mut w0 = vec![0u64; m];
+    let mut w1 = vec![0u64; m];
+    let mut row = rows.start;
+    while row < rows.end {
+        let b = PANEL_ROWS.min(rows.end - row);
+        // Projection identical to the f64 fold: ξ-initialized rows, then one
+        // (branchless) axpy per data coordinate.
+        for i in 0..b {
+            proj[i * m..(i + 1) * m].copy_from_slice(xi);
+        }
+        for i in 0..b {
+            let xrow = x.row(row + i);
+            let dst = &mut proj[i * m..(i + 1) * m];
+            for (r, &xr) in xrow.iter().enumerate() {
+                super::axpy(xr, om.row(r), dst);
+            }
+        }
+        // Transpose the signs into slot-major lanes: bit i of w0[j] is row
+        // i's sign for slot 2j (w1 for slot 2j+1).
+        w0.fill(0);
+        w1.fill(0);
+        for i in 0..b {
+            sig.eval_pair_sign_batch(&proj[i * m..(i + 1) * m], &mut s0, &mut s1);
+            for j in 0..m {
+                w0[j] |= (s0[j] as u64) << i;
+                w1[j] |= (s1[j] as u64) << i;
+            }
+        }
+        // Σ_i ±1 = 2·ones − b: the exact integer the f64 fold's batch
+        // accumulator holds, added to the pool at the same point.
+        let bi = b as i64;
+        for j in 0..m {
+            sum[2 * j] += (2 * w0[j].count_ones() as i64 - bi) as f64;
+            sum[2 * j + 1] += (2 * w1[j].count_ones() as i64 - bi) as f64;
+        }
+        row += b;
+    }
+}
+
+/// Pool rows `rows` of `x` into `agg`'s integer one-counts, bit-for-bit
+/// like per-row `encode_point_bits` + `BitAggregator::add` — the sensor
+/// acquisition path (see the module docs).
+pub fn pool_bits_range(
+    om: &Mat,
+    xi: &[f64],
+    sig: &dyn Signature,
+    x: &Mat,
+    rows: Range<usize>,
+    agg: &mut BitAggregator,
+) {
+    let m = om.cols();
+    debug_assert_eq!(xi.len(), m);
+    debug_assert_eq!(agg.len(), 2 * m);
+    debug_assert_eq!(x.cols(), om.rows());
+    let mut proj = vec![0.0; m];
+    let mut s0 = vec![false; m];
+    let mut s1 = vec![false; m];
+    let mut w0 = vec![0u64; m];
+    let mut w1 = vec![0u64; m];
+    let mut row = rows.start;
+    while row < rows.end {
+        let b = PANEL_ROWS.min(rows.end - row);
+        w0.fill(0);
+        w1.fill(0);
+        for i in 0..b {
+            // Projection identical to encode_point_bits: zero-initialized
+            // fold, dither added after.
+            proj.fill(0.0);
+            let xrow = x.row(row + i);
+            for (r, &xr) in xrow.iter().enumerate() {
+                super::axpy(xr, om.row(r), &mut proj);
+            }
+            for (p, &d) in proj.iter_mut().zip(xi) {
+                *p += d;
+            }
+            sig.eval_pair_sign_batch(&proj, &mut s0, &mut s1);
+            for j in 0..m {
+                w0[j] |= (s0[j] as u64) << i;
+                w1[j] |= (s1[j] as u64) << i;
+            }
+        }
+        agg.add_panel(&w0, &w1, b as u32);
+        row += b;
+    }
+}

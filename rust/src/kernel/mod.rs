@@ -1,0 +1,227 @@
+//! Runtime-dispatched compute kernels — the word-parallel / SIMD hot layer.
+//!
+//! Everything above this module (sketch encode, streaming, serving, fan-in)
+//! funnels its inner loops through three primitives:
+//!
+//! * [`dot`] / [`axpy`] — the dense f64 vector kernels behind the Ω·x
+//!   projection, the decode gemv, and the gemm in [`crate::linalg`];
+//! * [`bitpanel`] — the transposed 64-row bit-panel encode for ±1-valued
+//!   signatures: pack the signs of up to 64 examples × `2M` slots into
+//!   `u64` lanes (one word = 64 rows' bits for one slot) and pool with a
+//!   single `count_ones()` per slot instead of 64 f64 additions.
+//!
+//! Two implementations exist for the dense kernels: the portable scalar
+//! code ([`scalar`], the exact code `linalg/ops.rs` always had) and wide
+//! SIMD specializations ([`simd`], AVX2 on x86-64). Selection happens once
+//! per process, at first use:
+//!
+//! 1. `QCKM_KERNEL=scalar|wide` forces a mode (anything else warns once and
+//!    falls back to the default);
+//! 2. otherwise the default is `wide`, which uses AVX2 when
+//!    `is_x86_feature_detected!("avx2")` says the CPU has it and the
+//!    portable code when it does not.
+//!
+//! The resolved selection is visible as the `qckm_kernel_info` gauge on the
+//! `qckm ctl metrics` page and via [`describe`].
+//!
+//! ## The invariant that makes dispatch safe (I-22)
+//!
+//! Kernel dispatch **never changes any output bit**:
+//!
+//! * the AVX2 `dot` reproduces the scalar code's 4-accumulator reduction
+//!   tree exactly — four independent lanes combined as `(s0+s1)+(s2+s3)`
+//!   plus a scalar remainder — using separate multiply and add (never FMA,
+//!   which would change rounding);
+//! * `axpy` is element-wise, so vectorizing it cannot reorder anything;
+//! * the bit-panel pool produces per-slot partial sums `2·ones − rows`
+//!   that are small exact integers — the same integers the f64 fold
+//!   accumulates (±1 terms round nowhere) — added to the pool in the same
+//!   per-batch order.
+//!
+//! Locked by `rust/tests/determinism.rs` (`i22_*`), the bit-panel proptests,
+//! and the unit tests in this module.
+
+pub mod bitpanel;
+pub mod scalar;
+#[cfg(target_arch = "x86_64")]
+pub mod simd;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which kernel family is selected (see the module docs for how).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// The portable scalar reference path everywhere: f64 signature fold,
+    /// scalar `dot`/`axpy`. This is the exact legacy code path.
+    Scalar,
+    /// Word-parallel bit-panel pooling for ±1 signatures plus the widest
+    /// SIMD `dot`/`axpy` the CPU supports (portable code when it supports
+    /// none). Bit-for-bit identical to [`KernelMode::Scalar`] (I-22).
+    Wide,
+}
+
+impl KernelMode {
+    /// Stable lowercase name (`scalar` / `wide`) — the `QCKM_KERNEL` values
+    /// and the `mode` label of the `qckm_kernel_info` gauge.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelMode::Scalar => "scalar",
+            KernelMode::Wide => "wide",
+        }
+    }
+}
+
+/// Resolved dispatch state, cached in [`DISPATCH`].
+const UNRESOLVED: u8 = 0;
+const SCALAR: u8 = 1;
+const WIDE_PORTABLE: u8 = 2;
+const WIDE_AVX2: u8 = 3;
+
+/// One-time-resolved dispatch cache. `set_mode` may overwrite it (tests and
+/// benches compare modes in-process); plain loads keep the hot-path cost to
+/// one relaxed atomic read.
+static DISPATCH: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+#[inline]
+fn dispatch() -> u8 {
+    let d = DISPATCH.load(Ordering::Relaxed);
+    if d != UNRESOLVED {
+        d
+    } else {
+        resolve_from_env()
+    }
+}
+
+#[cold]
+fn resolve_from_env() -> u8 {
+    set_mode(default_mode());
+    DISPATCH.load(Ordering::Relaxed)
+}
+
+/// The mode the environment asks for: `QCKM_KERNEL=scalar|wide`, defaulting
+/// to [`KernelMode::Wide`]. An unrecognized value warns once on stderr and
+/// falls back to the default (never an error: kernel selection is a
+/// performance knob, not a correctness one — see I-22).
+pub fn default_mode() -> KernelMode {
+    match std::env::var("QCKM_KERNEL") {
+        Ok(v) if v.eq_ignore_ascii_case("scalar") => KernelMode::Scalar,
+        Ok(v) if v.eq_ignore_ascii_case("wide") => KernelMode::Wide,
+        Ok(v) => {
+            eprintln!("qckm: ignoring unknown QCKM_KERNEL={v:?} (expected scalar|wide)");
+            KernelMode::Wide
+        }
+        Err(_) => KernelMode::Wide,
+    }
+}
+
+/// Force a kernel mode for the rest of the process (until the next call).
+///
+/// Exists so tests and benches can compare modes within one process — the
+/// env var alone would pin the whole run. Safe to call at any time from any
+/// thread *because of I-22*: both modes produce identical bits, so a flip
+/// mid-computation cannot change any result.
+pub fn set_mode(mode: KernelMode) {
+    let d = match mode {
+        KernelMode::Scalar => SCALAR,
+        KernelMode::Wide => {
+            if simd_available() {
+                WIDE_AVX2
+            } else {
+                WIDE_PORTABLE
+            }
+        }
+    };
+    DISPATCH.store(d, Ordering::Relaxed);
+}
+
+/// Whether the wide SIMD specializations can run on this CPU.
+#[inline]
+fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The currently selected mode (resolving it on first call).
+#[inline]
+pub fn mode() -> KernelMode {
+    if dispatch() == SCALAR {
+        KernelMode::Scalar
+    } else {
+        KernelMode::Wide
+    }
+}
+
+/// The instruction set the dispatched dense kernels execute with:
+/// `"avx2"` when the wide AVX2 specializations are active, `"portable"`
+/// otherwise (scalar mode, or a CPU without AVX2).
+pub fn simd_level() -> &'static str {
+    if dispatch() == WIDE_AVX2 {
+        "avx2"
+    } else {
+        "portable"
+    }
+}
+
+/// Human-readable summary of the resolved dispatch, e.g. `wide (avx2)` —
+/// what `qckm serve` logs at startup and what the `qckm_kernel_info` gauge
+/// labels carry.
+pub fn describe() -> String {
+    format!("{} ({})", mode().name(), simd_level())
+}
+
+/// Dot product, dispatched. Bitwise identical across modes (I-22).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if dispatch() == WIDE_AVX2 {
+        // SAFETY: WIDE_AVX2 is only ever stored after
+        // `is_x86_feature_detected!("avx2")` returned true.
+        return unsafe { simd::dot_avx2(a, b) };
+    }
+    scalar::dot(a, b)
+}
+
+/// `y += alpha * x`, dispatched. Bitwise identical across modes (I-22).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if dispatch() == WIDE_AVX2 {
+        // SAFETY: WIDE_AVX2 is only ever stored after
+        // `is_x86_feature_detected!("avx2")` returned true.
+        unsafe { simd::axpy_avx2(alpha, x, y) };
+        return;
+    }
+    scalar::axpy(alpha, x, y)
+}
+
+/// Serializes crate tests that flip the dispatch mode via [`set_mode`], and
+/// restores the environment-resolved default when dropped — so concurrent
+/// tests always observe a settled mode outside these critical sections.
+/// (Even a mid-test flip would be invisible in outputs — that is I-22 — but
+/// serializing keeps each comparison honest about which mode it measured.)
+#[cfg(test)]
+pub(crate) struct ModeGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+#[cfg(test)]
+pub(crate) fn lock_mode_for_test() -> ModeGuard {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    ModeGuard(LOCK.lock().unwrap_or_else(|p| p.into_inner()))
+}
+
+#[cfg(test)]
+impl Drop for ModeGuard {
+    fn drop(&mut self) {
+        set_mode(default_mode());
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,42 @@
+//! Portable scalar reference kernels.
+//!
+//! This is the exact code `linalg/ops.rs` shipped from the seed onward —
+//! moved here unchanged so the SIMD specializations in [`super::simd`] have
+//! a pinned reduction order to reproduce (I-22). `linalg::dot`/`axpy` now
+//! delegate to the dispatcher in [`super`], which falls back here.
+
+/// Dot product — 4-way unrolled accumulators combined as
+/// `(s0+s1)+(s2+s3)`, then a scalar remainder loop.
+///
+/// The unroll lets the compiler vectorize without violating float
+/// associativity semantics in a surprising way, and the fixed reduction
+/// tree is what the AVX2 kernel reproduces lane-for-lane.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// `y += alpha * x` — element-wise, so any vectorization of it is
+/// automatically bitwise identical.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}

@@ -1,0 +1,89 @@
+//! x86-64 AVX2 specializations of the dense kernels.
+//!
+//! Bitwise-equivalence argument (I-22, locked by `tests/determinism.rs` and
+//! the unit tests in [`super::tests`]):
+//!
+//! * [`dot_avx2`] holds the scalar code's four accumulators `s0..s3` as the
+//!   four lanes of one `__m256d`. Each loop iteration performs exactly the
+//!   scalar iteration's `sN += a[4i+N] * b[4i+N]` in lane `N`, using
+//!   separate `mul`/`add` — **never FMA**, which fuses the rounding step and
+//!   would change results. The horizontal reduction combines lanes in the
+//!   scalar order `(s0+s1)+(s2+s3)` with SSE2 shuffles, and the remainder
+//!   loop is the scalar code verbatim. Same multiplies, same adds, same
+//!   order ⇒ same bits.
+//! * [`axpy_avx2`] is element-wise: `y[j] += alpha * x[j]` has no reduction
+//!   order to preserve, so the 4-lane version is trivially identical.
+//!
+//! These functions are `unsafe` only because of `#[target_feature]`: the
+//! dispatcher in [`super`] guarantees they are reached exclusively after
+//! `is_x86_feature_detected!("avx2")` succeeded.
+
+#![cfg(target_arch = "x86_64")]
+
+use std::arch::x86_64::{
+    __m128d, _mm256_add_pd, _mm256_castpd256_pd128, _mm256_extractf128_pd, _mm256_loadu_pd,
+    _mm256_mul_pd, _mm256_set1_pd, _mm256_setzero_pd, _mm256_storeu_pd, _mm_add_sd, _mm_cvtsd_f64,
+    _mm_unpackhi_pd,
+};
+
+/// Lane 0 of `v` plus lane 1 of `v`, as a scalar in lane 0.
+#[inline]
+unsafe fn hsum2(v: __m128d) -> __m128d {
+    _mm_add_sd(v, _mm_unpackhi_pd(v, v))
+}
+
+/// AVX2 dot product, bitwise identical to [`super::scalar::dot`].
+///
+/// # Safety
+///
+/// The CPU must support AVX2 (`is_x86_feature_detected!("avx2")`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    // acc lanes 0..3 are the scalar accumulators s0..s3.
+    let mut acc = _mm256_setzero_pd();
+    for i in 0..chunks {
+        let j = i * 4;
+        let av = _mm256_loadu_pd(pa.add(j));
+        let bv = _mm256_loadu_pd(pb.add(j));
+        // mul then add — not fmadd — to round exactly like the scalar code.
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(av, bv));
+    }
+    // (s0 + s1) + (s2 + s3), the scalar reduction order.
+    let lo = _mm256_castpd256_pd128(acc); // [s0, s1]
+    let hi = _mm256_extractf128_pd::<1>(acc); // [s2, s3]
+    let mut s = _mm_cvtsd_f64(_mm_add_sd(hsum2(lo), hsum2(hi)));
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// AVX2 `y += alpha * x`, bitwise identical to [`super::scalar::axpy`].
+///
+/// # Safety
+///
+/// The CPU must support AVX2 (`is_x86_feature_detected!("avx2")`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let px = x.as_ptr();
+    let py = y.as_mut_ptr();
+    let av = _mm256_set1_pd(alpha);
+    for i in 0..chunks {
+        let j = i * 4;
+        let xv = _mm256_loadu_pd(px.add(j));
+        let yv = _mm256_loadu_pd(py.add(j));
+        // mul then add — not fmadd — to round exactly like the scalar code.
+        _mm256_storeu_pd(py.add(j), _mm256_add_pd(yv, _mm256_mul_pd(xv, av)));
+    }
+    for j in chunks * 4..n {
+        y[j] += alpha * x[j];
+    }
+}

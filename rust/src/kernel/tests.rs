@@ -1,0 +1,182 @@
+//! Unit locks for the kernel layer — I-22 at the smallest scope: the
+//! dispatched dense kernels and the bit-panel pooling must be bit-for-bit
+//! the scalar reference on every input shape, including the awkward ones
+//! (empty, sub-lane, non-multiple-of-4/64 lengths).
+
+use super::{bitpanel, scalar, KernelMode};
+use crate::frequency::{DrawnFrequencies, FrequencyLaw};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::signature::{MultiBitQuantizer, Signature, UniversalQuantizer};
+use crate::sketch::{BitAggregator, SketchOperator};
+
+#[test]
+fn mode_names_and_describe_are_stable() {
+    assert_eq!(KernelMode::Scalar.name(), "scalar");
+    assert_eq!(KernelMode::Wide.name(), "wide");
+    let _guard = super::lock_mode_for_test();
+    super::set_mode(KernelMode::Scalar);
+    assert_eq!(super::mode(), KernelMode::Scalar);
+    assert!(super::describe().starts_with("scalar ("));
+    super::set_mode(KernelMode::Wide);
+    assert_eq!(super::mode(), KernelMode::Wide);
+    assert!(super::describe().starts_with("wide ("));
+    assert!(matches!(super::simd_level(), "avx2" | "portable"));
+}
+
+/// The dispatched `dot`/`axpy` equal the scalar reference bit-for-bit in
+/// both modes, across lengths that cover the remainder-loop edge cases.
+#[test]
+fn dispatched_dense_kernels_match_scalar_bitwise() {
+    let _guard = super::lock_mode_for_test();
+    let mut rng = Rng::new(0x5EED);
+    for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 15, 16, 63, 64, 65, 257] {
+        let a: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let b: Vec<f64> = (0..n).map(|_| 3.0 * rng.gaussian()).collect();
+        let alpha = rng.gaussian();
+        let want_dot = scalar::dot(&a, &b);
+        let mut want_y = b.clone();
+        scalar::axpy(alpha, &a, &mut want_y);
+        for mode in [KernelMode::Scalar, KernelMode::Wide] {
+            super::set_mode(mode);
+            assert_eq!(
+                super::dot(&a, &b).to_bits(),
+                want_dot.to_bits(),
+                "dot n={n} mode={}",
+                mode.name()
+            );
+            let mut y = b.clone();
+            super::axpy(alpha, &a, &mut y);
+            let same = y
+                .iter()
+                .zip(&want_y)
+                .all(|(u, v)| u.to_bits() == v.to_bits());
+            assert!(same, "axpy n={n} mode={}", mode.name());
+        }
+    }
+}
+
+fn quantized_op(dim: usize, m: usize, seed: u64) -> SketchOperator {
+    let freqs = DrawnFrequencies::draw(
+        FrequencyLaw::AdaptedRadius,
+        dim,
+        m,
+        0.8,
+        &mut Rng::new(seed),
+    );
+    SketchOperator::quantized(freqs)
+}
+
+/// Reference fold for the panel paths: force scalar mode and run the
+/// legacy per-row / f64 code, then compare the wide panel against it.
+#[test]
+fn bit_panel_pooling_matches_scalar_fold_bitwise() {
+    let _guard = super::lock_mode_for_test();
+    // Row counts around the 64-row panel boundary (trailing-lane masking).
+    for rows in [1usize, 63, 64, 65, 130] {
+        let op = quantized_op(5, 37, rows as u64);
+        let mut rng = Rng::new(99 + rows as u64);
+        let x = Mat::from_fn(rows, op.dim(), |_, _| {
+            // Exact zeros mixed in: the branchless-axpy edge case.
+            if rng.next_u64() % 4 == 0 {
+                0.0
+            } else {
+                rng.gaussian()
+            }
+        });
+
+        super::set_mode(KernelMode::Scalar);
+        let mut want = crate::sketch::PooledSketch::new(op.sketch_len());
+        op.sketch_into(&x, &mut want);
+        let mut want_agg = BitAggregator::new(op.sketch_len());
+        op.pool_bits_range(&x, 0..rows, &mut want_agg);
+
+        super::set_mode(KernelMode::Wide);
+        let mut got = crate::sketch::PooledSketch::new(op.sketch_len());
+        op.sketch_into(&x, &mut got);
+        assert_eq!(got.count(), want.count(), "rows={rows}");
+        let sums_equal = got
+            .sum()
+            .iter()
+            .zip(want.sum())
+            .all(|(u, v)| u.to_bits() == v.to_bits());
+        assert!(sums_equal, "dense panel fold rows={rows}");
+
+        let mut got_agg = BitAggregator::new(op.sketch_len());
+        op.pool_bits_range(&x, 0..rows, &mut got_agg);
+        assert_eq!(got_agg.count(), want_agg.count(), "rows={rows}");
+        assert_eq!(got_agg.to_sum(), want_agg.to_sum(), "bit panel rows={rows}");
+    }
+}
+
+/// The `is_binary` sign contract: `eval_pair_sign_batch` equals
+/// `eval_pair_batch(..) > 0.0` slot-for-slot and the values are exactly ±1
+/// — for the hand-written [`UniversalQuantizer`] override (whose sign and
+/// value formulas are written separately) and for the derived default
+/// ([`MultiBitQuantizer`] at B = 1).
+#[test]
+fn panel_sign_bits_match_f64_signature_values() {
+    let mut rng = Rng::new(7);
+    let sig = UniversalQuantizer;
+    let args: Vec<f64> = (0..257).map(|_| 7.0 * rng.gaussian()).collect();
+    let mut v0 = vec![0.0; args.len()];
+    let mut v1 = vec![0.0; args.len()];
+    sig.eval_pair_batch(&args, &mut v0, &mut v1);
+    let mut s0 = vec![false; args.len()];
+    let mut s1 = vec![false; args.len()];
+    sig.eval_pair_sign_batch(&args, &mut s0, &mut s1);
+    for j in 0..args.len() {
+        assert_eq!(s0[j], v0[j] > 0.0, "slot0 t={}", args[j]);
+        assert_eq!(s1[j], v1[j] > 0.0, "slot1 t={}", args[j]);
+        assert_eq!(v0[j].abs(), 1.0);
+        assert_eq!(v1[j].abs(), 1.0);
+    }
+    // The derived default (MultiBitQuantizer B=1) honors the same contract.
+    let mb = MultiBitQuantizer::new(1);
+    assert!(mb.is_binary());
+    assert!(!MultiBitQuantizer::new(2).is_binary());
+    sig_contract_holds(&mb, &args);
+    assert!(UniversalQuantizer.is_binary());
+    assert!(!crate::signature::Cosine.is_binary());
+}
+
+fn sig_contract_holds(sig: &dyn Signature, args: &[f64]) {
+    let mut v0 = vec![0.0; args.len()];
+    let mut v1 = vec![0.0; args.len()];
+    sig.eval_pair_batch(args, &mut v0, &mut v1);
+    let mut s0 = vec![false; args.len()];
+    let mut s1 = vec![false; args.len()];
+    sig.eval_pair_sign_batch(args, &mut s0, &mut s1);
+    for j in 0..args.len() {
+        assert_eq!(v0[j].abs(), 1.0, "is_binary signature must be ±1");
+        assert_eq!(v1[j].abs(), 1.0);
+        assert_eq!(s0[j], v0[j] > 0.0);
+        assert_eq!(s1[j], v1[j] > 0.0);
+    }
+}
+
+/// `pool_bits_range` (the kernel entry, not the operator dispatch) equals
+/// per-row encode + add for a partial trailing panel, and the counts add up.
+#[test]
+fn bitpanel_aggregator_entry_matches_per_row_adds() {
+    let op = quantized_op(3, 21, 42);
+    let rows = 70; // one full panel + a 6-row trailing panel
+    let mut rng = Rng::new(4242);
+    let x = Mat::from_fn(rows, op.dim(), |_, _| rng.gaussian());
+    let mut want = BitAggregator::new(op.sketch_len());
+    for r in 0..rows {
+        want.add(&op.encode_point_bits(x.row(r)));
+    }
+    let mut got = BitAggregator::new(op.sketch_len());
+    bitpanel::pool_bits_range(
+        &op.frequencies().omega,
+        &op.frequencies().xi,
+        op.signature(),
+        &x,
+        0..rows,
+        &mut got,
+    );
+    assert_eq!(got.count(), rows as u64);
+    assert_eq!(got.to_sum(), want.to_sum());
+    assert_eq!(got.mean(), want.mean());
+}

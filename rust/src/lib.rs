@@ -45,6 +45,14 @@
 //! 0 = all cores) and change wall-clock time only: fixed chunk boundaries
 //! plus ordered merges make every result bit-for-bit independent of the
 //! thread count.
+//!
+//! ## Kernels
+//!
+//! The innermost loops — the Ω·x projection, the dense `dot`/`axpy`, and
+//! the 1-bit sign pooling — dispatch through [`kernel`]: a word-parallel
+//! bit-panel encode for ±1 signatures plus runtime-selected SIMD wide
+//! kernels, forceable via `QCKM_KERNEL=scalar|wide` and guaranteed to
+//! never change any output bit (invariant I-22).
 
 pub mod cli;
 pub mod config;
@@ -54,6 +62,7 @@ pub mod decoder;
 pub mod experiments;
 pub mod fanin;
 pub mod frequency;
+pub mod kernel;
 pub mod kmeans;
 pub mod linalg;
 pub mod method;

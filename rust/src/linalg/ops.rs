@@ -1,41 +1,26 @@
 //! Vector kernels and matrix products.
 //!
-//! The gemm here is a simple register-blocked ikj loop — enough to keep the
-//! sketch encode memory-bound rather than instruction-bound (see
-//! EXPERIMENTS.md §Perf for measurements against the roofline).
+//! The `dot`/`axpy` primitives dispatch through [`crate::kernel`] (portable
+//! scalar reference vs runtime-selected SIMD — bitwise identical either
+//! way, I-22); the gemm here is a simple register-blocked ikj loop built on
+//! them — enough to keep the sketch encode memory-bound rather than
+//! instruction-bound (see EXPERIMENTS.md §Perf for measurements against
+//! the roofline).
 
 use super::Mat;
 
-/// Dot product.
+/// Dot product — dispatched through [`crate::kernel`] (scalar reference or
+/// runtime-selected SIMD; bitwise identical either way, I-22).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulators: lets the compiler vectorize without
-    // violating float associativity semantics in a surprising way.
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for j in chunks * 4..n {
-        s += a[j] * b[j];
-    }
-    s
+    crate::kernel::dot(a, b)
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x` — dispatched through [`crate::kernel`] (scalar
+/// reference or runtime-selected SIMD; bitwise identical either way, I-22).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    crate::kernel::axpy(alpha, x, y)
 }
 
 /// `x *= alpha`.
@@ -95,10 +80,8 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
         a.shape(),
         b.shape()
     );
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Mat::zeros(m, n);
+    let mut c = Mat::zeros(a.rows(), b.cols());
     matmul_into(a, b, &mut c);
-    let _ = (m, k, n);
     c
 }
 
@@ -110,7 +93,7 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols(), b.rows());
     assert_eq!(c.shape(), (a.rows(), b.cols()));
-    let (m, kk, n) = (a.rows(), a.cols(), b.cols());
+    let (m, kk) = (a.rows(), a.cols());
     c.as_mut_slice().fill(0.0);
     const KB: usize = 256; // k-panel
     for k0 in (0..kk).step_by(KB) {
@@ -128,7 +111,6 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
             }
         }
     }
-    let _ = n;
 }
 
 /// `C = Aᵀ·B` without materializing the transpose.

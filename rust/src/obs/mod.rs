@@ -108,6 +108,14 @@ pub struct LibMetrics {
     pub retry_attempts: Arc<Counter>,
     /// `qckm_retry_backoff_ms_total` — total backoff milliseconds slept.
     pub retry_backoff_ms: Arc<Counter>,
+    /// `qckm_kernel_info{mode,simd}` — constant `1` gauge carrying the
+    /// resolved compute-kernel dispatch (see [`crate::kernel`]): `mode` is
+    /// `scalar`/`wide` and `simd` the instruction set the dense kernels run
+    /// with. Labels reflect the dispatch at first registry touch; flipping
+    /// modes later (tests/benches) is invisible here, which is fine — the
+    /// gauge is informational and I-22 makes the modes indistinguishable by
+    /// output.
+    pub kernel_info: Arc<Gauge>,
 }
 
 /// The library-layer instruments (see [`LibMetrics`]).
@@ -168,6 +176,18 @@ pub fn lib_metrics() -> &'static LibMetrics {
                 "Total backoff milliseconds slept by RetryClient.",
                 &[],
             ),
+            kernel_info: {
+                let g = r.gauge(
+                    "qckm_kernel_info",
+                    "Resolved compute-kernel dispatch (constant 1; see labels).",
+                    &[
+                        ("mode", crate::kernel::mode().name()),
+                        ("simd", crate::kernel::simd_level()),
+                    ],
+                );
+                g.set(1.0);
+                g
+            },
         }
     })
 }

@@ -96,6 +96,42 @@ pub trait Signature: Send + Sync {
         }
     }
 
+    /// Whether this signature takes values in `{-1, +1}` only (a 1-bit
+    /// signature in the paper's sense).
+    ///
+    /// `true` is a contract with the bit-parallel encode kernels
+    /// ([`crate::kernel::bitpanel`]): [`eval_pair_batch`] must produce
+    /// exactly `±1.0` and [`eval_pair_sign_batch`] must equal
+    /// `eval_pair_batch(..) > 0.0` slot for slot, so pooling signs with
+    /// popcounts reproduces the f64 fold bit-for-bit (I-22).
+    ///
+    /// [`eval_pair_batch`]: Self::eval_pair_batch
+    /// [`eval_pair_sign_batch`]: Self::eval_pair_sign_batch
+    fn is_binary(&self) -> bool {
+        false
+    }
+
+    /// Batched *sign* evaluation of the paired slots: `out0[j] = f(t_j) > 0`
+    /// and `out1[j] = f(t_j + π/2) > 0` — the 1-bit acquisition hot loop.
+    ///
+    /// Only meaningful for ±1 signatures ([`is_binary`](Self::is_binary)),
+    /// where the sign *is* the value; the bit-panel kernels call this so no
+    /// f64 signature values are ever materialized. The default derives the
+    /// signs from [`eval_pair_batch`](Self::eval_pair_batch), which keeps
+    /// the contract true by construction; concrete ±1 signatures override
+    /// with the direct bit computation.
+    fn eval_pair_sign_batch(&self, args: &[f64], out0: &mut [bool], out1: &mut [bool]) {
+        debug_assert_eq!(args.len(), out0.len());
+        debug_assert_eq!(args.len(), out1.len());
+        let mut v0 = vec![0.0; args.len()];
+        let mut v1 = vec![0.0; args.len()];
+        self.eval_pair_batch(args, &mut v0, &mut v1);
+        for j in 0..args.len() {
+            out0[j] = v0[j] > 0.0;
+            out1[j] = v1[j] > 0.0;
+        }
+    }
+
     /// The concentration constant `C_f = 8|F_1|⁴ (1 + 2|F_1|)⁻⁴` of Prop. 1:
     /// the failure probability is `≤ 2 exp(−C_f m ε²)`.
     fn prop1_constant(&self) -> f64 {

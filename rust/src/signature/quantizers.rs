@@ -52,6 +52,24 @@ impl Signature for UniversalQuantizer {
         }
     }
 
+    fn is_binary(&self) -> bool {
+        true
+    }
+
+    fn eval_pair_sign_batch(&self, args: &[f64], out0: &mut [bool], out1: &mut [bool]) {
+        // The cell formula of `eval_pair_batch`, keeping only the LSB: the
+        // sign is "cell index even". (The `div_euclid` view in `bit()` can
+        // disagree with this in the last ulp; the batch formula is what the
+        // encode paths evaluate, so it is what the bit path must replicate
+        // — I-22.)
+        const INV_PI: f64 = 1.0 / PI;
+        for ((t, o0), o1) in args.iter().zip(out0.iter_mut()).zip(out1.iter_mut()) {
+            let u = t * INV_PI; // cells of the stepsize-π quantizer
+            *o0 = ((u + 0.5).floor() as i64) & 1 == 0;
+            *o1 = ((u + 1.0).floor() as i64) & 1 == 0;
+        }
+    }
+
     fn fourier_coeff(&self, k: i32) -> f64 {
         let k = k.abs();
         if k % 2 == 0 {
@@ -140,6 +158,16 @@ impl Signature for MultiBitQuantizer {
     #[inline]
     fn eval(&self, t: f64) -> f64 {
         self.quantize(t.cos())
+    }
+
+    /// `B = 1` is a ±1 staircase (levels ±1 after the rescale), so it
+    /// qualifies for the bit-parallel encode; the default derived
+    /// [`Signature::eval_pair_sign_batch`] keeps the sign/value contract
+    /// true by construction. (Note the canonical 1-bit spec `qckm:bits=1`
+    /// builds a [`UniversalQuantizer`] instead — see
+    /// `crate::method::MethodSpec` — so this mostly guards direct users.)
+    fn is_binary(&self) -> bool {
+        self.bits == 1
     }
 
     fn name(&self) -> &'static str {

@@ -70,9 +70,16 @@ impl BitSketch {
 
     /// Expand to the dense ±1 representation.
     pub fn to_dense(&self) -> Vec<f64> {
-        (0..self.len)
-            .map(|i| if self.get(i) { 1.0 } else { -1.0 })
-            .collect()
+        // Word-wise unpack: one shift/mask per bit off a register-resident
+        // word instead of a bounds-checked `get()` per bit.
+        let mut out = Vec::with_capacity(self.len);
+        for (w, &word) in self.words.iter().enumerate() {
+            let top = (self.len - w * 64).min(64);
+            for b in 0..top {
+                out.push(2.0 * ((word >> b) & 1) as f64 - 1.0);
+            }
+        }
+        out
     }
 
     /// Hamming distance to another contribution (same length).
@@ -122,24 +129,41 @@ impl BitAggregator {
     /// Pool one contribution.
     pub fn add(&mut self, s: &BitSketch) {
         assert_eq!(s.len(), self.len, "aggregator length mismatch");
-        // Unpack word-by-word; the trailing partial word is masked by `len`.
+        // Branch-free word-wise unpack: sketch bits are ~50% dense (each is
+        // a dithered sign), so iterating set bits via `trailing_zeros` costs
+        // more than unconditionally adding every bit of the word — and the
+        // unit-stride `+= (word >> b) & 1` loop vectorizes.
         for (w, &word) in s.words().iter().enumerate() {
-            if word == 0 {
-                continue;
-            }
             let base = w * 64;
             let top = (self.len - base).min(64);
-            let mut bits = word;
-            while bits != 0 {
-                let b = bits.trailing_zeros() as usize;
-                if b >= top {
-                    break;
-                }
-                self.ones[base + b] += 1;
-                bits &= bits - 1;
+            for (b, o) in self.ones[base..base + top].iter_mut().enumerate() {
+                *o += (word >> b) & 1;
             }
         }
         self.count += 1;
+    }
+
+    /// Pool a transposed bit panel: bit `i` of `panel0[j]` / `panel1[j]` is
+    /// example `i`'s contribution to slot `2j` / `2j+1`, for `i < rows ≤ 64`
+    /// (bits at and above `rows` must be zero). One `count_ones()` per slot
+    /// pools the whole panel — the word-level parallelism the 1-bit format
+    /// was chosen for; see [`crate::kernel::bitpanel`].
+    ///
+    /// Equivalent to `rows` individual [`add`](Self::add) calls with the
+    /// panel's columns.
+    pub fn add_panel(&mut self, panel0: &[u64], panel1: &[u64], rows: u32) {
+        assert_eq!(panel0.len(), panel1.len(), "panel length mismatch");
+        assert_eq!(2 * panel0.len(), self.len, "aggregator length mismatch");
+        assert!(rows as usize <= 64, "panel holds at most 64 rows");
+        debug_assert!(
+            rows == 64 || panel0.iter().chain(panel1).all(|&w| w >> rows == 0),
+            "panel bits above `rows` must be zero"
+        );
+        for (j, (&w0, &w1)) in panel0.iter().zip(panel1).enumerate() {
+            self.ones[2 * j] += u64::from(w0.count_ones());
+            self.ones[2 * j + 1] += u64::from(w1.count_ones());
+        }
+        self.count += u64::from(rows);
     }
 
     /// Merge another aggregator (the sketch's linearity: distributed pooling).
@@ -161,8 +185,6 @@ impl BitAggregator {
     /// (sum of ±1 contributions, count) — for merging into a
     /// [`super::PooledSketch`] alongside full-precision shards.
     pub fn to_sum(&self) -> (Vec<f64>, u64) {
-        let n = self.count as f64;
-        let _ = n;
         (
             self.ones
                 .iter()

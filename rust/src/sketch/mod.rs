@@ -115,15 +115,18 @@ impl SketchOperator {
     }
 
     /// Projections `ω_j^T x` for all j (helper; hot paths use batched gemm).
+    ///
+    /// Branchless on purpose: a zero coordinate's axpy adds exact zeros
+    /// (finite Ω, and no accumulator here can reach `−0.0`), so skipping it
+    /// cannot change a bit — but the skip branch defeats vectorization of
+    /// the inner loop, which [`crate::kernel::axpy`] dispatches wide.
     fn project(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.dim(), "point dimension mismatch");
         let om = &self.freqs.omega;
         let m = om.cols();
         let mut t = vec![0.0; m];
         for (r, &xr) in x.iter().enumerate() {
-            if xr != 0.0 {
-                crate::linalg::axpy(xr, om.row(r), &mut t);
-            }
+            crate::kernel::axpy(xr, om.row(r), &mut t);
         }
         t
     }
@@ -155,10 +158,23 @@ impl SketchOperator {
         for (a, &xi) in args.iter_mut().zip(&self.freqs.xi) {
             *a += xi;
         }
+        let mut bits = BitSketch::zeros(2 * m);
+        if crate::kernel::mode() == crate::kernel::KernelMode::Wide && self.signature.is_binary() {
+            // Sign-bit kernel: no f64 signature values are materialized.
+            // Identical bits by the `is_binary` contract (sign == value > 0,
+            // same cell formula — I-22).
+            let mut s0 = vec![false; m];
+            let mut s1 = vec![false; m];
+            self.signature.eval_pair_sign_batch(&args, &mut s0, &mut s1);
+            for j in 0..m {
+                bits.set(2 * j, s0[j]);
+                bits.set(2 * j + 1, s1[j]);
+            }
+            return bits;
+        }
         let mut v0 = vec![0.0; m];
         let mut v1 = vec![0.0; m];
         self.signature.eval_pair_batch(&args, &mut v0, &mut v1);
-        let mut bits = BitSketch::zeros(2 * m);
         for j in 0..m {
             debug_assert!(
                 v0[j].abs() == 1.0 && v1[j].abs() == 1.0,
@@ -196,6 +212,22 @@ impl SketchOperator {
             "row range {rows:?} out of bounds for {} rows",
             x.rows()
         );
+        // ±1 signatures take the transposed bit-panel kernel: same
+        // projections, then popcount pooling instead of an f64 fold —
+        // bit-for-bit identical (I-22, see `crate::kernel::bitpanel`).
+        if crate::kernel::mode() == crate::kernel::KernelMode::Wide && self.signature.is_binary() {
+            let count = rows.len() as u64;
+            crate::kernel::bitpanel::pool_dense_range(
+                &self.freqs.omega,
+                &self.freqs.xi,
+                self.signature.as_ref(),
+                x,
+                rows,
+                pool.sum_mut(),
+            );
+            pool.bump_count(count);
+            return;
+        }
         const BATCH: usize = 64;
         let m = self.num_frequencies();
         let om = &self.freqs.omega;
@@ -209,6 +241,8 @@ impl SketchOperator {
             let b = BATCH.min(rows.end - row);
             // proj[b × M] = X[row..row+b] · Ω  (ikj, Ω rows streamed),
             // with the dither ξ pre-added to each row's projections.
+            // Branchless over zero coordinates — see `project` — so the
+            // dispatched wide axpy runs unconditionally.
             for i in 0..b {
                 proj[i * m..(i + 1) * m].copy_from_slice(&self.freqs.xi);
             }
@@ -216,9 +250,7 @@ impl SketchOperator {
                 let xrow = x.row(row + i);
                 let dst = &mut proj[i * m..(i + 1) * m];
                 for (r, &xr) in xrow.iter().enumerate() {
-                    if xr != 0.0 {
-                        crate::linalg::axpy(xr, om.row(r), dst);
-                    }
+                    crate::kernel::axpy(xr, om.row(r), dst);
                 }
             }
             // Apply the signature at both dither offsets (batched — one
@@ -230,8 +262,8 @@ impl SketchOperator {
             for i in 0..b {
                 let args = &proj[i * m..(i + 1) * m];
                 self.signature.eval_pair_batch(args, &mut v0, &mut v1);
-                crate::linalg::axpy(1.0, &v0, &mut acc0);
-                crate::linalg::axpy(1.0, &v1, &mut acc1);
+                crate::kernel::axpy(1.0, &v0, &mut acc0);
+                crate::kernel::axpy(1.0, &v1, &mut acc1);
             }
             let sum = pool.sum_mut();
             for j in 0..m {
@@ -240,6 +272,41 @@ impl SketchOperator {
             }
             pool.bump_count(b as u64);
             row += b;
+        }
+    }
+
+    /// Pool the packed-bit contributions of rows `rows` of `x` into `agg` —
+    /// the acquisition-side analog of
+    /// [`sketch_range_into`](Self::sketch_range_into), used by the streaming
+    /// `PackedBits` fold.
+    ///
+    /// In the wide kernel mode ±1 signatures go through the transposed
+    /// bit-panel ([`crate::kernel::bitpanel::pool_bits_range`]); otherwise
+    /// (and for non-±1 signatures, which
+    /// [`encode_point_bits`](Self::encode_point_bits) rejects) each row is
+    /// encoded and added individually. Identical one-counts and count
+    /// either way (I-22).
+    pub fn pool_bits_range(&self, x: &Mat, rows: Range<usize>, agg: &mut BitAggregator) {
+        assert_eq!(x.cols(), self.dim(), "dataset dimension mismatch");
+        assert_eq!(agg.len(), self.sketch_len());
+        assert!(
+            rows.start <= rows.end && rows.end <= x.rows(),
+            "row range {rows:?} out of bounds for {} rows",
+            x.rows()
+        );
+        if crate::kernel::mode() == crate::kernel::KernelMode::Wide && self.signature.is_binary() {
+            crate::kernel::bitpanel::pool_bits_range(
+                &self.freqs.omega,
+                &self.freqs.xi,
+                self.signature.as_ref(),
+                x,
+                rows,
+                agg,
+            );
+            return;
+        }
+        for r in rows {
+            agg.add(&self.encode_point_bits(x.row(r)));
         }
     }
 

@@ -6,8 +6,10 @@
 //!
 //! * **Bounded-memory ingestion** ([`ChunkedReader`]): datasets stream in
 //!   fixed row blocks from CSV ([`CsvChunkedReader`]), the raw-f64 format
-//!   ([`RawF64ChunkedReader`]) or memory ([`MatChunkedReader`]) — the full
-//!   `N × n` matrix is never materialized.
+//!   ([`RawF64ChunkedReader`], or its windowed positional variant
+//!   [`MappedF64ChunkedReader`] behind `qckm sketch --mmap`) or memory
+//!   ([`MatChunkedReader`]) — the full `N × n` matrix is never
+//!   materialized.
 //! * **Streaming encode** ([`sketch_reader`], [`sketch_file`]): feeds those
 //!   blocks through the existing parallel encode in
 //!   [`PAR_CHUNK_ROWS`]-row chunks, *bit-for-bit identical* to
@@ -48,7 +50,8 @@ pub use qsk::{
 };
 pub(crate) use qsk::Fnv1a;
 pub use reader::{
-    open_dataset, read_all, ChunkedReader, CsvChunkedReader, MatChunkedReader, RawF64ChunkedReader,
+    open_dataset, open_dataset_with, read_all, ChunkedReader, CsvChunkedReader,
+    MappedF64ChunkedReader, MatChunkedReader, RawF64ChunkedReader,
 };
 
 use crate::coordinator::WireFormat;
@@ -125,9 +128,7 @@ pub fn sketch_reader(
             }
             WireFormat::PackedBits => {
                 let mut agg = BitAggregator::new(op.sketch_len());
-                for r in range {
-                    agg.add(&op.encode_point_bits(window.row(r)));
-                }
+                op.pool_bits_range(&window, range, &mut agg);
                 let (sum, count) = agg.to_sum();
                 PooledSketch::from_raw(sum, count)
             }

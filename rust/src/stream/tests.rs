@@ -96,6 +96,106 @@ fn raw_reader_streams_same_values_and_rejects_truncation() {
     assert!(reader.next_block(usize::MAX, &mut out).is_err());
 }
 
+/// The windowed positional reader is interchangeable with the buffered one:
+/// same dim/rows_total, same values at every (odd) block size, even when the
+/// two readers are driven with different block schedules.
+#[test]
+fn mapped_reader_streams_same_values_as_buffered_reader() {
+    let dir = temp_dir("mmap_parity");
+    let path = dir.join("data.bin");
+    let x = random_mat(101, 4, 20);
+    save_f64_bin(&path, &x).unwrap();
+
+    let mut mapped = MappedF64ChunkedReader::open(&path).unwrap();
+    let mut buffered = RawF64ChunkedReader::open(&path).unwrap();
+    assert_eq!(mapped.dim(), buffered.dim());
+    assert_eq!(mapped.rows_total(), buffered.rows_total());
+
+    let (mut from_mapped, mut from_buffered) = (Vec::new(), Vec::new());
+    loop {
+        // Coprime block sizes: block boundaries never coincide.
+        let a = mapped.next_block(7, &mut from_mapped).unwrap();
+        while from_buffered.len() < from_mapped.len() {
+            assert_ne!(buffered.next_block(13, &mut from_buffered).unwrap(), 0);
+        }
+        if a == 0 {
+            break;
+        }
+    }
+    assert_eq!(from_mapped, x.as_slice());
+    assert_eq!(from_buffered, x.as_slice());
+}
+
+/// Failure parity: both raw-f64 readers report the identical error for a
+/// truncated header, an implausible column count, and a payload truncated
+/// mid-row — the readers must be interchangeable in failure too.
+#[test]
+fn mapped_reader_fails_exactly_like_buffered_reader() {
+    let dir = temp_dir("mmap_errors");
+    let x = random_mat(31, 3, 21);
+    let good = dir.join("good.bin");
+    save_f64_bin(&good, &x).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+
+    // Truncated header (10 of 16 bytes).
+    let p = dir.join("short_header.bin");
+    std::fs::write(&p, &bytes[..10]).unwrap();
+    let a = format!("{:#}", MappedF64ChunkedReader::open(&p).unwrap_err());
+    let b = format!("{:#}", RawF64ChunkedReader::open(&p).unwrap_err());
+    assert_eq!(a, b, "header-truncation errors must match");
+    assert!(a.contains("truncated header"), "{a}");
+
+    // Implausible column count (cols = 0).
+    let mut bad = bytes.clone();
+    bad[8..16].copy_from_slice(&0u64.to_le_bytes());
+    let p = dir.join("zero_cols.bin");
+    std::fs::write(&p, &bad).unwrap();
+    let a = format!("{:#}", MappedF64ChunkedReader::open(&p).unwrap_err());
+    let b = format!("{:#}", RawF64ChunkedReader::open(&p).unwrap_err());
+    assert_eq!(a, b, "implausible-cols errors must match");
+    assert!(a.contains("implausible column count 0"), "{a}");
+
+    // Payload truncated mid-row: same row-range context from both.
+    let p = dir.join("trunc.bin");
+    std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+    let mut mapped = MappedF64ChunkedReader::open(&p).unwrap();
+    let mut buffered = RawF64ChunkedReader::open(&p).unwrap();
+    let mut out = Vec::new();
+    let a = format!("{:#}", mapped.next_block(usize::MAX, &mut out).unwrap_err());
+    out.clear();
+    let b = format!("{:#}", buffered.next_block(usize::MAX, &mut out).unwrap_err());
+    assert_eq!(a, b, "truncation errors must match");
+    assert!(a.contains("truncated in rows"), "{a}");
+}
+
+/// `open_dataset_with(.., mmap = true)` routes raw files to the windowed
+/// reader and refuses CSV; the streamed sketch through it is bit-for-bit
+/// the in-memory sketch (so `qckm sketch --mmap` changes nothing but I/O).
+#[test]
+fn open_dataset_with_mmap_dispatch_and_sketch_parity() {
+    let dir = temp_dir("mmap_dispatch");
+    let x = random_mat(777, 5, 22);
+    let bin = dir.join("data.bin");
+    save_f64_bin(&bin, &x).unwrap();
+    let csv = dir.join("data.csv");
+    save_csv(&csv, &x).unwrap();
+
+    let err = format!("{:#}", open_dataset_with(&csv, true).unwrap_err());
+    assert!(err.contains("--mmap requires the raw f64 dataset format"), "{err}");
+
+    let op = quantized_op(5, 24, 23);
+    let par = Parallelism::fixed(2);
+    let want = op.sketch_dataset_par(&x, &par);
+    for mmap in [false, true] {
+        let mut reader = open_dataset_with(&bin, mmap).unwrap();
+        let mut pool = PooledSketch::new(op.sketch_len());
+        let rows =
+            sketch_reader(&op, reader.as_mut(), WireFormat::DenseF64, &mut pool, &par).unwrap();
+        assert_eq!(rows, 777);
+        assert_eq!(pool.mean(), want, "mmap = {mmap}");
+    }
+}
+
 #[test]
 fn mat_reader_and_read_all_round_trip() {
     let x = random_mat(97, 5, 3);

@@ -356,6 +356,150 @@ fn golden_fig2a_two_cluster_decode() {
     }
 }
 
+// ---------------------------------------------------------- kernels (I-22)
+
+/// Serializes the kernel-mode-flipping tests in this binary and restores the
+/// environment-resolved default mode when dropped. (A mid-test flip from a
+/// concurrent test would be output-invisible — that is exactly I-22 — but
+/// serializing keeps each comparison honest about which mode it measured.)
+struct KernelModeLock(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+impl Drop for KernelModeLock {
+    fn drop(&mut self) {
+        qckm::kernel::set_mode(qckm::kernel::default_mode());
+    }
+}
+
+fn lock_kernel_mode() -> KernelModeLock {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    KernelModeLock(LOCK.lock().unwrap_or_else(|p| p.into_inner()))
+}
+
+/// Sketch `x` through `op` at the given thread count under a forced kernel
+/// mode; the caller compares results across modes bitwise.
+fn sketch_with_mode(
+    op: &SketchOperator,
+    x: &Mat,
+    threads: usize,
+    mode: qckm::kernel::KernelMode,
+) -> Vec<f64> {
+    qckm::kernel::set_mode(mode);
+    let mut pool = qckm::sketch::PooledSketch::new(op.sketch_len());
+    op.sketch_into_par(x, &mut pool, &Parallelism::fixed(threads));
+    let mut out: Vec<f64> = pool.sum().to_vec();
+    out.push(pool.count() as f64);
+    out
+}
+
+fn mixed_zero_data(rows: usize, dim: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    // Exact zeros mixed in: the coordinates the legacy fold used to skip.
+    Mat::from_fn(rows, dim, |_, _| {
+        if rng.next_u64() % 4 == 0 {
+            0.0
+        } else {
+            rng.gaussian()
+        }
+    })
+}
+
+/// I-22: flipping `QCKM_KERNEL` (here via `set_mode`) never changes any
+/// output bit — for the ±1 quantizer (bit-panel + SIMD path), at row counts
+/// straddling the 64-row panel and 4096-row chunk boundaries, at several
+/// thread counts.
+#[test]
+fn i22_kernel_dispatch_is_bitwise_invisible_for_quantizer() {
+    use qckm::kernel::KernelMode;
+    let _lock = lock_kernel_mode();
+    let op = quantized_op(5, 33, 21);
+    for rows in [1usize, 63, 64, 65, 777, PAR_CHUNK_ROWS + 130] {
+        let x = mixed_zero_data(rows, 5, rows as u64);
+        for threads in [1usize, 2, 7] {
+            let scalar = sketch_with_mode(&op, &x, threads, KernelMode::Scalar);
+            let wide = sketch_with_mode(&op, &x, threads, KernelMode::Wide);
+            let same = scalar
+                .iter()
+                .zip(&wide)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "rows = {rows}, threads = {threads}");
+        }
+    }
+}
+
+/// I-22 for the other canonical 1-bit spec, `qckm:bits=1` (canonicalized to
+/// the universal quantizer by the method registry), and for the cosine
+/// signature, which takes only the SIMD `dot`/`axpy` side of the dispatch.
+#[test]
+fn i22_kernel_dispatch_is_bitwise_invisible_for_bits1_and_cosine() {
+    use qckm::kernel::KernelMode;
+    use qckm::method::MethodSpec;
+    let _lock = lock_kernel_mode();
+    let bits1 = qckm::stream::draw_operator(
+        &MethodSpec::parse("qckm:bits=1").unwrap(),
+        FrequencyLaw::AdaptedRadius,
+        40,
+        4,
+        1.0,
+        31,
+    );
+    let cosine = cosine_op(4, 40, 31);
+    for op in [&bits1, &cosine] {
+        for rows in [65usize, 130] {
+            let x = mixed_zero_data(rows, 4, 1000 + rows as u64);
+            let scalar = sketch_with_mode(op, &x, 2, KernelMode::Scalar);
+            let wide = sketch_with_mode(op, &x, 2, KernelMode::Wide);
+            let same = scalar
+                .iter()
+                .zip(&wide)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(
+                same,
+                "sig = {}, rows = {rows}",
+                op.signature().name()
+            );
+        }
+    }
+}
+
+/// I-22 through the streaming layer: the `PackedBits` fold (bit-aggregator
+/// chunks merged into a pool) produces identical one-counts in both kernel
+/// modes, and both agree with the dense wire.
+#[test]
+fn i22_packed_bits_streaming_is_kernel_mode_invariant() {
+    use qckm::kernel::KernelMode;
+    let _lock = lock_kernel_mode();
+    let op = quantized_op(6, 24, 77);
+    let x = mixed_zero_data(2111, 6, 78);
+    let par = Parallelism::fixed(3);
+    let run = |wire, mode| {
+        qckm::kernel::set_mode(mode);
+        let mut pool = qckm::sketch::PooledSketch::new(op.sketch_len());
+        let rows = qckm::stream::sketch_reader(
+            &op,
+            &mut qckm::stream::MatChunkedReader::new(&x),
+            wire,
+            &mut pool,
+            &par,
+        )
+        .unwrap();
+        assert_eq!(rows, 2111);
+        pool.sum().to_vec()
+    };
+    let reference = run(WireFormat::PackedBits, KernelMode::Scalar);
+    for (wire, mode) in [
+        (WireFormat::PackedBits, KernelMode::Wide),
+        (WireFormat::DenseF64, KernelMode::Scalar),
+        (WireFormat::DenseF64, KernelMode::Wide),
+    ] {
+        let got = run(wire, mode);
+        let same = got
+            .iter()
+            .zip(&reference)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "wire = {wire:?}, mode = {mode:?}");
+    }
+}
+
 // --------------------------------------------------------------- experiments
 
 #[test]

@@ -75,6 +75,47 @@ fn prop_bit_packing_round_trips_and_pools_exactly() {
     });
 }
 
+/// I-22 at property scale: the wide-mode bit-panel pooling (both the dense
+/// `sketch_into` fold and the `pool_bits_range` aggregator path) equals the
+/// forced-scalar legacy fold bitwise, on random quantized operators, row
+/// counts straddling the 64-row panel, and data salted with exact zeros
+/// (the coordinates the legacy projection used to branch over).
+#[test]
+fn prop_bit_panel_pooling_matches_scalar_fold_bitwise() {
+    use qckm::kernel::{self, KernelMode};
+    property("bit panel == scalar fold (bitwise)", 30, |g| {
+        let op = random_operator(g, true);
+        let rows = g.usize_in(1, 200);
+        let x = Mat::from_fn(rows, op.dim(), |_, _| {
+            if g.bool() {
+                0.0
+            } else {
+                g.gaussian()
+            }
+        });
+
+        kernel::set_mode(KernelMode::Scalar);
+        let mut want = PooledSketch::new(op.sketch_len());
+        op.sketch_into(&x, &mut want);
+        let mut want_agg = BitAggregator::new(op.sketch_len());
+        op.pool_bits_range(&x, 0..rows, &mut want_agg);
+
+        kernel::set_mode(KernelMode::Wide);
+        let mut got = PooledSketch::new(op.sketch_len());
+        op.sketch_into(&x, &mut got);
+        let mut got_agg = BitAggregator::new(op.sketch_len());
+        op.pool_bits_range(&x, 0..rows, &mut got_agg);
+        kernel::set_mode(kernel::default_mode());
+
+        assert_eq!(got.count(), want.count());
+        for (u, v) in got.sum().iter().zip(want.sum()) {
+            assert_eq!(u.to_bits(), v.to_bits(), "rows {rows}");
+        }
+        assert_eq!(got_agg.count(), want_agg.count());
+        assert_eq!(got_agg.to_sum(), want_agg.to_sum(), "rows {rows}");
+    });
+}
+
 #[test]
 fn prop_pipeline_invariant_to_workers_batch_queue() {
     property("pipeline routing/batching invariance", 15, |g| {
